@@ -1,0 +1,15 @@
+//! Bench: regenerate paper Figure 4 (layer-wise laziness distribution of
+//! MHSA vs FFN over a 20-step DDIM run; paper observation: no layer is
+//! 100% lazy, so layer REMOVAL is not applicable).
+
+fn main() {
+    let argv = vec![
+        "fig4".to_string(),
+        "--steps".into(), "20".into(),
+        "--lazy".into(), "50".into(),
+    ];
+    if let Err(e) = lazydit::cli::dispatch(&argv) {
+        eprintln!("fig4 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate paper Figure 5 (upper: maximum applicable laziness
+//! per individual module; lower: fixed-one-sweep-other lazy strategy).
+//! LAZYDIT_BENCH_FULL=1 widens the ratio grid.
+
+fn main() {
+    let full = std::env::var("LAZYDIT_BENCH_FULL").is_ok();
+    let ratios = if full { "10,20,30,40,50" } else { "30" };
+    for part in ["upper", "lower"] {
+        let argv = vec![
+            "fig5".to_string(),
+            "--part".into(), part.into(),
+            "--ratios".into(), ratios.into(),
+            "--n-eval".into(), "32".into(),
+            "--n-real".into(), "160".into(),
+            "--train-steps".into(), "80".into(),
+        ];
+        if let Err(e) = lazydit::cli::dispatch(&argv) {
+            eprintln!("fig5 {part} bench failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

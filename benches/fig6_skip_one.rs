@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Figure 6 / Appendix A.4 (with jointly-trained
+//! gates, skip only MHSA or only FFN at inference).
+
+fn main() {
+    let argv = vec![
+        "fig6".to_string(),
+        "--steps".into(), "20".into(),
+        "--lazy".into(), "50".into(),
+        "--n-eval".into(), "32".into(),
+        "--n-real".into(), "160".into(),
+    ];
+    if let Err(e) = lazydit::cli::dispatch(&argv) {
+        eprintln!("fig6 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,15 @@
+//! Bench: engine hot-path micro benchmarks (per-step breakdown, skip-all
+//! vs no-skip bounds) — the §Perf measurement harness for L3.
+
+fn main() {
+    let argv = vec![
+        "profile".to_string(),
+        "--steps".into(), "10".into(),
+        "--count".into(), "4".into(),
+        "--iters".into(), "5".into(),
+    ];
+    if let Err(e) = lazydit::cli::dispatch(&argv) {
+        eprintln!("micro_hotpath bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Table 1 (quality vs DDIM across steps / lazy
+//! ratios) on the DiT-XL/2-256 analog. `cargo bench --bench table1_quality`.
+//!
+//! Env: LAZYDIT_BENCH_FULL=1 for the full row set (default: quick subset);
+//!      LAZYDIT_BENCH_CONFIG to change the model config.
+
+fn main() {
+    let full = std::env::var("LAZYDIT_BENCH_FULL").is_ok();
+    let config = std::env::var("LAZYDIT_BENCH_CONFIG")
+        .unwrap_or_else(|_| "xl-256a".into());
+    let mut argv = vec![
+        "table1".to_string(),
+        "--config".into(), config,
+        "--n-eval".into(), "48".into(),
+        "--n-real".into(), "128".into(),
+    ];
+    if !full {
+        argv.push("--quick".into());
+    }
+    if let Err(e) = lazydit::cli::dispatch(&argv) {
+        eprintln!("table1 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

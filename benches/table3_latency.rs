@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Table 3 (single-stream latency — the mobile
+//! analog; see DESIGN.md §4 substitutions). One request in flight, CFG
+//! lanes only, latency per image reported alongside TMACs and IS.
+
+fn main() {
+    let full = std::env::var("LAZYDIT_BENCH_FULL").is_ok();
+    let mut argv = vec![
+        "table3".to_string(),
+        "--n-eval".into(), "8".into(),
+        "--n-real".into(), "128".into(),
+    ];
+    if !full {
+        argv.push("--quick".into());
+    }
+    if let Err(e) = lazydit::cli::dispatch(&argv) {
+        eprintln!("table3 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Table 6 (batched latency, A5000 analog —
+//! 8 images per batch = 16 CFG lanes through the continuous batcher).
+
+fn main() {
+    let full = std::env::var("LAZYDIT_BENCH_FULL").is_ok();
+    let mut argv = vec![
+        "table6".to_string(),
+        "--n-eval".into(), "8".into(),
+        "--n-real".into(), "128".into(),
+    ];
+    if !full {
+        argv.push("--quick".into());
+    }
+    if let Err(e) = lazydit::cli::dispatch(&argv) {
+        eprintln!("table6 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Table 7 (LazyDiT's input-dynamic gates vs the
+//! input-independent Learn2Cache-analog static schedule at equal compute).
+
+fn main() {
+    let full = std::env::var("LAZYDIT_BENCH_FULL").is_ok();
+    let mut argv = vec![
+        "table7".to_string(),
+        "--n-eval".into(), "48".into(),
+        "--n-real".into(), "128".into(),
+    ];
+    if !full {
+        argv.push("--quick".into());
+    }
+    if let Err(e) = lazydit::cli::dispatch(&argv) {
+        eprintln!("table7 bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,104 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the `nano` artifacts, pretrains a tiny DiT for a few steps,
+//! trains lazy gates, then generates a handful of images both ways
+//! (DDIM vs lazy) and prints the lazy-ratio accounting.
+//!
+//! Run (after `make artifacts`):
+//!     cargo run --release --example quickstart
+
+use lazydit::config::{LazyScope, ServeConfig, SkipPolicy, TrainConfig};
+use lazydit::coordinator::engine::{generate_batch, Engine, EngineOptions};
+use lazydit::model::checkpoint::Checkpoint;
+use lazydit::model::runner::ModelRunner;
+use lazydit::runtime::engine_rt::Runtime;
+use lazydit::runtime::manifest::Manifest;
+use lazydit::train::lazytrain::{lazy_train, LazyTrainOptions};
+use lazydit::train::pretrain::pretrain;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    lazydit::util::logging::init();
+    let artifacts = PathBuf::from("artifacts");
+    let manifest = Manifest::load(&artifacts)?;
+    let cfg = manifest.config("nano")?.clone();
+    let rt = Rc::new(Runtime::cpu()?);
+    let ckpt = PathBuf::from("runs/quickstart");
+
+    // 1. pretrain the base DiT on SynthBlobs-10 (AOT pretrain_step graph)
+    println!("== pretraining (tiny, ~seconds) ==");
+    let tc = TrainConfig {
+        config_name: "nano".into(),
+        steps: 120,
+        lr: 3e-3,
+        ..Default::default()
+    };
+    let rep = pretrain(&rt, &cfg, &tc, &ckpt)?;
+    println!("loss {:.4} → {:.4}", rep.first_loss, rep.tail_loss);
+    let theta = Checkpoint::load(&lazydit::model::checkpoint::theta_path(&ckpt, "nano"))?
+        .vec("theta")?
+        .clone();
+
+    // 2. lazy learning (paper Sec. 3.3): gates trained toward 50% laziness
+    println!("== lazy learning ==");
+    let ltc = TrainConfig {
+        config_name: "nano".into(),
+        steps: 120,
+        lr: 1e-2,
+        ..Default::default()
+    };
+    let opts = LazyTrainOptions {
+        serve_steps: 10,
+        tag: "quickstart".into(),
+        ..Default::default()
+    };
+    let lrep = lazy_train(&rt, &cfg, &ltc, &opts, &theta, &ckpt)?;
+    println!(
+        "train-time skip frac: attn {:.2} ffn {:.2}",
+        lrep.final_frac_attn, lrep.final_frac_ffn
+    );
+    let gamma = Checkpoint::load(&lazydit::model::checkpoint::gates_path(
+        &ckpt, "nano", "quickstart"))?
+        .vec("gamma")?
+        .clone();
+
+    // 3. generate: DDIM baseline vs lazy engine
+    let serve = ServeConfig {
+        config_name: "nano".into(),
+        max_batch: 8,
+        policy: SkipPolicy::Mean,
+        scope: LazyScope::Both,
+        ..Default::default()
+    };
+    let labels = vec![0, 1, 2, 3];
+
+    println!("== DDIM baseline (10 steps) ==");
+    let runner = ModelRunner::with_disabled_gates(rt.clone(), cfg.clone(), &theta)?;
+    let mut ddim = Engine::from_parts(runner, serve.clone(), EngineOptions {
+        disable_gates: true,
+        ..Default::default()
+    });
+    let t0 = std::time::Instant::now();
+    let res = generate_batch(&mut ddim, &labels, 10, 7, 1.5)?;
+    println!("{} images in {:.2}s, lazy ratio {:.0}%", res.len(),
+             t0.elapsed().as_secs_f64(),
+             100.0 * ddim.layer_stats.overall_ratio());
+
+    println!("== LazyDiT (10 steps, learned gates) ==");
+    let runner = ModelRunner::new(rt, cfg, &theta, &gamma)?;
+    let mut lazy = Engine::from_parts(runner, serve, EngineOptions::default());
+    let t0 = std::time::Instant::now();
+    let res = generate_batch(&mut lazy, &labels, 10, 7, 1.5)?;
+    println!("{} images in {:.2}s, lazy ratio {:.1}%", res.len(),
+             t0.elapsed().as_secs_f64(),
+             100.0 * lazy.layer_stats.overall_ratio());
+    println!("{}", lazy.layer_stats.render_fig4());
+
+    // 4. dump a PNG grid
+    let images = lazydit::bench::quality::stack_images(&res)?;
+    let out = PathBuf::from("runs/quickstart/samples.png");
+    lazydit::io::png::write_grid(&out, &images, 2, 16)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

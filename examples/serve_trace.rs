@@ -1,0 +1,101 @@
+//! Serving-workload example: replay a Poisson-arrival request trace through
+//! the continuous-batching engine (open-loop), reporting throughput,
+//! latency percentiles, and shed count — the workload the paper's serving
+//! story targets (Tables 3/6 context).
+//!
+//! Run (after `make artifacts`):
+//!     cargo run --release --example serve_trace
+
+use lazydit::config::{ServeConfig, SkipPolicy, TrainConfig};
+use lazydit::coordinator::engine::{Engine, EngineOptions};
+use lazydit::coordinator::request::Request;
+use lazydit::data::workload::WorkloadSpec;
+use lazydit::metrics::stats::{mean, quantile};
+use lazydit::model::checkpoint::Checkpoint;
+use lazydit::model::runner::ModelRunner;
+use lazydit::runtime::engine_rt::Runtime;
+use lazydit::runtime::manifest::Manifest;
+use lazydit::train::pretrain::pretrain;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    lazydit::util::logging::init();
+    let artifacts = PathBuf::from("artifacts");
+    let manifest = Manifest::load(&artifacts)?;
+    let cfg = manifest.config("nano")?.clone();
+    let rt = Rc::new(Runtime::cpu()?);
+    let ckpt = PathBuf::from("runs/serve_trace");
+
+    // a quick base model (serving mechanics demo, not a quality run)
+    let theta = match Checkpoint::load(
+        &lazydit::model::checkpoint::theta_path(&ckpt, "nano")) {
+        Ok(ck) => ck.vec("theta")?.clone(),
+        Err(_) => {
+            let tc = TrainConfig { config_name: "nano".into(), steps: 80,
+                                   lr: 3e-3, ..Default::default() };
+            pretrain(&rt, &cfg, &tc, &ckpt)?;
+            Checkpoint::load(&lazydit::model::checkpoint::theta_path(&ckpt, "nano"))?
+                .vec("theta")?.clone()
+        }
+    };
+
+    let runner = ModelRunner::with_disabled_gates(rt, cfg, &theta)?;
+    let mut engine = Engine::from_parts(
+        runner,
+        ServeConfig { config_name: "nano".into(), max_batch: 8,
+                      policy: SkipPolicy::Never, queue_cap: 32,
+                      ..Default::default() },
+        EngineOptions { disable_gates: true, ..Default::default() },
+    );
+
+    // open-loop trace: 48 requests, Poisson arrivals, mixed step counts
+    let spec = WorkloadSpec {
+        requests: 48,
+        rate: 12.0, // req/s
+        steps_choices: vec![6, 10, 14],
+        num_classes: 10,
+        seed: 42,
+    };
+    let trace = spec.generate();
+    println!("replaying {} requests (Poisson {} req/s, steps in {:?})",
+             trace.events.len(), spec.rate, spec.steps_choices);
+
+    let t0 = Instant::now();
+    let mut pending = trace.events.as_slice();
+    let mut done = Vec::new();
+    let mut shed = 0usize;
+    while !pending.is_empty() || engine.active_count() > 0 {
+        let now = t0.elapsed().as_secs_f64();
+        // admit arrivals whose time has come, subject to the queue bound
+        while let Some(ev) = pending.first() {
+            if ev.at > now {
+                break;
+            }
+            if engine.active_count() >= engine.serve.queue_cap {
+                shed += 1; // admission control: reject at capacity
+            } else {
+                let mut req = Request::new(0, ev.class_label, ev.steps, ev.seed);
+                req.cfg_scale = 1.5;
+                engine.submit(req);
+            }
+            pending = &pending[1..];
+        }
+        if engine.active_count() == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            continue;
+        }
+        done.extend(engine.step_round()?);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let lat: Vec<f64> = done.iter().map(|r| r.latency.as_secs_f64()).collect();
+    println!("completed {} ({} shed) in {wall:.2}s → {:.2} img/s", done.len(),
+             shed, done.len() as f64 / wall);
+    println!("latency: mean {:.3}s  p50 {:.3}s  p95 {:.3}s  p99 {:.3}s",
+             mean(&lat), quantile(&lat, 0.5), quantile(&lat, 0.95),
+             quantile(&lat, 0.99));
+    println!("engine rounds ran one denoise step each; requests at different \
+              timesteps shared batches (continuous batching).");
+    Ok(())
+}

@@ -1,0 +1,192 @@
+"""AOT exporter: lower every graph to HLO **text** + write the manifest.
+
+HLO text (NOT `.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the rust
+`xla` 0.1.6 crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts --configs nano,xl-256a \
+        --buckets 1,2,4,8,16 --train-batch 32 --goldens
+
+Outputs under --out:
+    <config>/<graph>.hlo.txt        one file per executable
+    goldens/<config>/<graph>.in<i>.npy / .out<i>.npy   numeric goldens
+    manifest.json                   shapes, offsets, file index
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, diffusion, graphs, model
+from .configs import CONFIGS, DEFAULT_BUCKETS, DIFFUSION
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the default ELIDES big constants as
+    # `constant({...})`, silently zeroing baked weights (feature net) and
+    # schedule tables (ᾱ in the train graphs) after the text round-trip.
+    return comp.as_hlo_text(True)
+
+
+def _golden_inputs(gd: graphs.GraphDef, cfg_name: str):
+    """Deterministic, graph-specific inputs for golden dumps."""
+    seed = int.from_bytes(
+        hashlib.sha256(f"{cfg_name}/{gd.name}".encode()).digest()[:4], "little")
+    key = jax.random.PRNGKey(seed)
+    args = []
+    for name, shape, dt in gd.inputs:
+        key, sub = jax.random.split(key)
+        if dt == "int32":
+            hi = 10 if name == "y" else 999
+            args.append(jax.random.randint(sub, shape, 0, hi, jnp.int32))
+        elif dt == "uint32":
+            args.append(jnp.array([seed & 0xFFFF, 42], jnp.uint32))
+        elif name in ("lr",):
+            args.append(jnp.float32(1e-3))
+        elif name in ("rho_a", "rho_f"):
+            args.append(jnp.float32(1e-3))
+        elif name == "step":
+            args.append(jnp.float32(1.0))
+        elif name == "t" and len(shape) == 1 and dt == "float32":
+            args.append(jnp.linspace(0.0, 999.0, shape[0], dtype=jnp.float32))
+        elif name in ("theta", "gamma"):
+            # well-conditioned weights: keep the golden computation stable
+            # so the rust-vs-python tolerance can stay tight
+            args.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+        elif name == "m":
+            args.append(jnp.zeros(shape, jnp.float32))
+        elif name == "v":
+            # second-moment state must be non-negative
+            args.append(1e-4 * jnp.abs(jax.random.normal(sub, shape,
+                                                         jnp.float32)))
+        else:
+            scale = 0.1 if len(shape) >= 2 else 0.5
+            args.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return args
+
+
+def export_graph(gd: graphs.GraphDef, out_dir: str, cfg_name: str,
+                 goldens: bool):
+    lowered = jax.jit(gd.fn).lower(*gd.example_args())
+    text = to_hlo_text(lowered)
+    fname = f"{cfg_name}/{gd.name}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+    outputs_meta = None
+    if goldens:
+        args = _golden_inputs(gd, cfg_name)
+        outs = jax.jit(gd.fn)(*args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        gdir = os.path.join(out_dir, "goldens", cfg_name)
+        os.makedirs(gdir, exist_ok=True)
+        for i, a in enumerate(args):
+            np.save(os.path.join(gdir, f"{gd.name}.in{i}.npy"), np.asarray(a))
+        outputs_meta = []
+        for i, o in enumerate(outs):
+            arr = np.asarray(o)
+            np.save(os.path.join(gdir, f"{gd.name}.out{i}.npy"), arr)
+            outputs_meta.append({"shape": list(arr.shape),
+                                 "dtype": str(arr.dtype)})
+    else:
+        outputs_meta = []
+        outs = jax.eval_shape(gd.fn, *gd.example_args())
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        for o in outs:
+            outputs_meta.append({"shape": list(o.shape),
+                                 "dtype": str(o.dtype)})
+
+    return {
+        "file": fname,
+        "inputs": [{"name": n, "shape": list(s), "dtype": d}
+                   for n, s, d in gd.inputs],
+        "outputs": outputs_meta,
+    }
+
+
+def export_config(cfg_name: str, out_dir: str, buckets, train_batch: int,
+                  goldens: bool, train_goldens: bool):
+    cfg = CONFIGS[cfg_name]
+    entry = {
+        "paper_analog": cfg.paper_analog,
+        "model": {
+            "img_size": cfg.img_size, "channels": cfg.channels,
+            "patch": cfg.patch, "dim": cfg.dim, "depth": cfg.depth,
+            "heads": cfg.heads, "num_classes": cfg.num_classes,
+            "mlp_ratio": cfg.mlp_ratio, "freq_dim": cfg.freq_dim,
+            "tokens": cfg.tokens, "patch_dim": cfg.patch_dim,
+        },
+        "diffusion": {
+            "timesteps": DIFFUSION.timesteps,
+            "beta_start": DIFFUSION.beta_start,
+            "beta_end": DIFFUSION.beta_end,
+        },
+        "params": configs.spec_offsets(configs.param_spec(cfg)),
+        "gates": configs.spec_offsets(configs.gate_spec(cfg)),
+        "buckets": list(buckets),
+        "train_batch": train_batch,
+        "graphs": {},
+    }
+    for b in buckets:
+        for gd in graphs.serving_graphs(cfg, b):
+            print(f"  lowering {cfg_name}/{gd.name}")
+            entry["graphs"][gd.name] = export_graph(gd, out_dir, cfg_name,
+                                                    goldens)
+    for gd in graphs.train_graphs(cfg, train_batch):
+        print(f"  lowering {cfg_name}/{gd.name}")
+        entry["graphs"][gd.name] = export_graph(
+            gd, out_dir, cfg_name, goldens and train_goldens)
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="nano,xl-256a")
+    ap.add_argument("--buckets", default=",".join(map(str, DEFAULT_BUCKETS)))
+    ap.add_argument("--train-batch", type=int, default=32)
+    ap.add_argument("--goldens", action="store_true", default=True)
+    ap.add_argument("--no-goldens", dest="goldens", action="store_false")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    buckets = [int(b) for b in args.buckets.split(",")]
+    manifest = {"version": 1, "feature_dim": 64, "configs": {}}
+
+    # schedule golden: the Rust sampler must reproduce ᾱ exactly
+    np.save(os.path.join(out_dir, "alphas_bar.npy"),
+            np.asarray(diffusion.alphas_bar(DIFFUSION)))
+
+    for cfg_name in args.configs.split(","):
+        print(f"exporting {cfg_name}")
+        # train-step goldens only for nano (they are large); the graph-
+        # building code is identical across configs.
+        manifest["configs"][cfg_name] = export_config(
+            cfg_name, out_dir, buckets, args.train_batch,
+            goldens=args.goldens, train_goldens=(cfg_name == "nano"))
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['configs'])} config(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Model-configuration registry shared by the AOT exporter and the manifest.
+
+Each config is a scaled-down analog of a paper model (DESIGN.md §4); the
+Rust side reads the same values from artifacts/manifest.json, so this file
+is the single source of truth for shapes.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    paper_analog: str
+    img_size: int          # square images
+    channels: int
+    patch: int
+    dim: int               # hidden D
+    depth: int             # L transformer blocks
+    heads: int
+    num_classes: int = 10  # SynthBlobs-10
+    mlp_ratio: int = 4
+    freq_dim: int = 128    # sinusoidal timestep embedding width
+
+    @property
+    def tokens(self) -> int:
+        side = self.img_size // self.patch
+        return side * side
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch * self.patch * self.channels
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    @property
+    def hidden(self) -> int:
+        return self.dim * self.mlp_ratio
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionConfig:
+    timesteps: int = 1000
+    beta_start: float = 1e-4
+    beta_end: float = 2e-2
+
+
+CONFIGS: Dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        # test-size model: seconds to pretrain, used across the test suites
+        ModelConfig("nano", "(tests)", 8, 3, 2, 32, 2, 2),
+        # paper-model analogs (see DESIGN.md §4 substitution table)
+        ModelConfig("l-256a", "DiT-L/2 256", 8, 3, 2, 64, 4, 4),
+        ModelConfig("xl-256a", "DiT-XL/2 256", 8, 3, 2, 96, 6, 6),
+        ModelConfig("xl-512a", "DiT-XL/2 512", 16, 3, 2, 96, 6, 6),
+        ModelConfig("l3b-a", "Large-DiT-3B", 8, 3, 2, 144, 8, 8),
+        ModelConfig("l7b-a", "Large-DiT-7B", 8, 3, 2, 192, 10, 12),
+    ]
+}
+
+DIFFUSION = DiffusionConfig()
+
+# Batch buckets exported for the serving executables (continuous batcher
+# pads to the next bucket; CFG doubles rows, hence 16).
+DEFAULT_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8, 16)
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list of all *base* (frozen) parameters.
+
+    The flat parameter vector θ concatenates these in order; the manifest
+    publishes (name, shape, offset) so Rust can slice per-module weights
+    out of one contiguous buffer.
+    """
+    D, F = cfg.dim, cfg.freq_dim
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed.patch.w", (cfg.patch_dim, D)),
+        ("embed.patch.b", (D,)),
+        ("embed.t.w1", (F, D)),
+        ("embed.t.b1", (D,)),
+        ("embed.t.w2", (D, D)),
+        ("embed.t.b2", (D,)),
+        # +1 class: the CFG null label
+        ("embed.y.table", (cfg.num_classes + 1, D)),
+    ]
+    for l in range(cfg.depth):
+        for mod in ("attn", "ffn"):
+            spec += [
+                (f"block{l}.{mod}.w_shift", (D, D)),
+                (f"block{l}.{mod}.b_shift", (D,)),
+                (f"block{l}.{mod}.w_scale", (D, D)),
+                (f"block{l}.{mod}.b_scale", (D,)),
+                (f"block{l}.{mod}.w_alpha", (D, D)),
+                (f"block{l}.{mod}.b_alpha", (D,)),
+            ]
+        spec += [
+            (f"block{l}.attn.w_qkv", (D, 3 * D)),
+            (f"block{l}.attn.b_qkv", (3 * D,)),
+            (f"block{l}.attn.w_o", (D, D)),
+            (f"block{l}.attn.b_o", (D,)),
+            (f"block{l}.ffn.w1", (D, cfg.hidden)),
+            (f"block{l}.ffn.b1", (cfg.hidden,)),
+            (f"block{l}.ffn.w2", (cfg.hidden, D)),
+            (f"block{l}.ffn.b2", (D,)),
+        ]
+    spec += [
+        ("final.w_shift", (D, D)),
+        ("final.b_shift", (D,)),
+        ("final.w_scale", (D, D)),
+        ("final.b_scale", (D,)),
+        ("final.w_out", (D, cfg.patch_dim)),
+        ("final.b_out", (cfg.patch_dim,)),
+    ]
+    return spec
+
+
+def gate_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list of lazy-gate parameters γ (trainable)."""
+    spec: List[Tuple[str, Tuple[int, ...]]] = []
+    for l in range(cfg.depth):
+        for mod in ("attn", "ffn"):
+            spec += [
+                (f"gate{l}.{mod}.w", (cfg.dim,)),
+                (f"gate{l}.{mod}.b", ()),
+            ]
+    return spec
+
+
+def spec_size(spec) -> int:
+    tot = 0
+    for _, shape in spec:
+        n = 1
+        for d in shape:
+            n *= d
+        tot += n
+    return tot
+
+
+def spec_offsets(spec):
+    """(name, shape, offset, size) rows for the manifest."""
+    rows, off = [], 0
+    for name, shape in spec:
+        n = 1
+        for d in shape:
+            n *= d
+        rows.append({"name": name, "shape": list(shape), "offset": off, "size": n})
+        off += n
+    return rows

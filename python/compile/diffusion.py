@@ -1,0 +1,152 @@
+"""L2: diffusion process, losses, and the two AOT training step functions.
+
+`pretrain_step` — full AdamW step on the frozen-to-be base model θ.
+`train_step`    — the paper's LAZY LEARNING step: θ frozen, gates γ trained
+                  with diffusion loss + lazy loss (paper Eq. 5), caches
+                  produced by a gate-free forward at the *previous*
+                  (noisier) timestep, exactly mirroring inference where
+                  Y_{l,t-1} comes from the preceding sampling step.
+
+Both are pure jax functions over flat parameter vectors so Rust drives the
+whole training loop through PJRT with single-buffer parameter I/O.
+"""
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import configs, model
+from .configs import DiffusionConfig, ModelConfig
+
+
+# ---------------------------------------------------------------- schedule
+
+def betas(dc: DiffusionConfig) -> jnp.ndarray:
+    """Linear beta schedule (DiT/ADM convention)."""
+    return jnp.linspace(dc.beta_start, dc.beta_end, dc.timesteps,
+                        dtype=jnp.float32)
+
+
+def alphas_bar(dc: DiffusionConfig) -> jnp.ndarray:
+    return jnp.cumprod(1.0 - betas(dc))
+
+
+def q_sample(ab: jnp.ndarray, x0: jnp.ndarray, t: jnp.ndarray,
+             noise: jnp.ndarray) -> jnp.ndarray:
+    """Forward process: z_t = sqrt(ᾱ_t)·x0 + sqrt(1-ᾱ_t)·ε.  t: int [B]."""
+    a = ab[t][:, None, None, None]
+    return jnp.sqrt(a) * x0 + jnp.sqrt(1.0 - a) * noise
+
+
+# ---------------------------------------------------------------- losses
+
+def diffusion_loss(eps_pred: jnp.ndarray, noise: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(jnp.square(eps_pred - noise))
+
+
+def lazy_loss(svals: jnp.ndarray, rho_attn: jnp.ndarray,
+              rho_ffn: jnp.ndarray) -> jnp.ndarray:
+    """Paper Eq. (5): ρ·(1/B)·Σ_l Σ_b (1 − s). svals: [2L, B], rows
+    alternating (attn, ffn) per layer — minimising pushes s ↑ (lazier)."""
+    s_attn = svals[0::2]
+    s_ffn = svals[1::2]
+    la = jnp.sum(jnp.mean(1.0 - s_attn, axis=1))
+    lf = jnp.sum(jnp.mean(1.0 - s_ffn, axis=1))
+    return rho_attn * la + rho_ffn * lf
+
+
+# ---------------------------------------------------------------- AdamW
+
+def adamw_update(p, g, m, v, step, lr, beta1=0.9, beta2=0.999, eps=1e-8,
+                 weight_decay=0.0):
+    """One AdamW step over flat vectors. step is 1-based (f32 scalar)."""
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * jnp.square(g)
+    mhat = m / (1.0 - beta1 ** step)
+    vhat = v / (1.0 - beta2 ** step)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+    return p, m, v
+
+
+# ---------------------------------------------------------------- steps
+
+def make_pretrain_step(cfg: ModelConfig, dc: DiffusionConfig):
+    """Returns f(θ, m, v, step, x0, y, t, noise, lr) → (θ', m', v', loss).
+
+    y already contains null labels where the host applied CFG dropout.
+    t: int32 [B]; noise: ε ~ N(0,1) sampled by the host.
+    """
+    ab = alphas_bar(dc)
+    gamma0 = model.init_gates(cfg)  # unused gates (blend-free fwd)
+
+    def loss_fn(theta, x0, y, t, noise):
+        z_t = q_sample(ab, x0, t, noise)
+        eps, _, _ = model.forward(theta, gamma0, cfg, z_t,
+                                  t.astype(jnp.float32), y, caches=None,
+                                  use_pallas=False)
+        return diffusion_loss(eps, noise)
+
+    def step_fn(theta, m, v, step, x0, y, t, noise, lr):
+        loss, g = jax.value_and_grad(loss_fn)(theta, x0, y, t, noise)
+        theta, m, v = adamw_update(theta, g, m, v, step, lr)
+        return theta, m, v, loss
+
+    return step_fn
+
+
+def make_train_step(cfg: ModelConfig, dc: DiffusionConfig):
+    """The lazy-learning step (paper Sec. 3.3 'Training Forward'/'Backward
+    Loss').
+
+    Signature: f(θ, γ, m, v, step, x0, y, t, t_prev, noise, lr, ρa, ρf)
+             → (γ', m', v', dloss, lazyloss, s̄_attn, s̄_ffn, frac_attn,
+                frac_ffn)
+
+    frac_* are the train-time skip fractions mean(s > 0.5) — the signal the
+    Rust ρ-controller steers toward a target lazy ratio (paper "Penalty
+    Regulation" done adaptively instead of by manual sweep).
+
+    θ is FROZEN (no gradient); caches come from a gate-free forward at
+    t_prev > t (the noisier preceding sampling step), then the gated
+    forward at t blends module outputs with those caches and both losses
+    backprop into γ only.
+    """
+    ab = alphas_bar(dc)
+
+    def loss_fn(gamma, theta, x0, y, t, t_prev, noise):
+        z_prev = q_sample(ab, x0, t_prev, noise)
+        _, caches, _ = model.forward(theta, model_init_gates_const(cfg), cfg,
+                                     z_prev, t_prev.astype(jnp.float32), y,
+                                     caches=None, use_pallas=False)
+        caches = [jax.lax.stop_gradient(cc) for cc in caches]
+        z_t = q_sample(ab, x0, t, noise)
+        eps, _, svals = model.forward(theta, gamma, cfg, z_t,
+                                      t.astype(jnp.float32), y,
+                                      caches=caches, use_pallas=False)
+        return eps, svals
+
+    def step_fn(theta, gamma, m, v, step, x0, y, t, t_prev, noise, lr,
+                rho_attn, rho_ffn):
+        def objective(gamma_):
+            eps, svals = loss_fn(gamma_, theta, x0, y, t, t_prev, noise)
+            dl = diffusion_loss(eps, noise)
+            ll = lazy_loss(svals, rho_attn, rho_ffn)
+            s_attn = jnp.mean(svals[0::2])
+            s_ffn = jnp.mean(svals[1::2])
+            frac_attn = jnp.mean((svals[0::2] > 0.5).astype(jnp.float32))
+            frac_ffn = jnp.mean((svals[1::2] > 0.5).astype(jnp.float32))
+            return dl + ll, (dl, ll, s_attn, s_ffn, frac_attn, frac_ffn)
+
+        (_, (dl, ll, sa, sf, fa, ff)), g = jax.value_and_grad(
+            objective, has_aux=True)(gamma)
+        gamma, m, v = adamw_update(gamma, g, m, v, step, lr)
+        return gamma, m, v, dl, ll, sa, sf, fa, ff
+
+    return step_fn
+
+
+def model_init_gates_const(cfg: ModelConfig) -> jnp.ndarray:
+    """Constant gate vector for the cache-producing forward (gates unused
+    there because caches=None ⇒ no blending; gate values are discarded)."""
+    return model.init_gates(cfg)

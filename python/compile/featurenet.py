@@ -1,0 +1,52 @@
+"""Fixed random conv feature extractor for the FID/sFID/IS analogs.
+
+The paper evaluates with InceptionV3 features; at toy scale we use a fixed
+random-weight conv net (a standard proxy: random features preserve the
+*ordering* of Fréchet distances well). Weights are generated from a fixed
+seed and BAKED INTO THE GRAPH as constants, so the metric is identical
+across runs, machines, and the python/rust boundary.
+
+Outputs:
+  feat  [B, 64] — deep features (FID / IS analog space)
+  sfeat [B, 64] — spatially-aware earlier-layer features (sFID analog)
+"""
+
+import jax
+import jax.numpy as jnp
+
+FEATURE_SEED = 1234
+FEATURE_DIM = 64
+
+
+def _conv(x, w, stride):
+    """NCHW conv, SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def make_feature_fn(img_size: int, channels: int = 3):
+    """Build feature_fn(img [B,C,H,W]) -> (feat [B,64], sfeat [B,64])."""
+    key = jax.random.PRNGKey(FEATURE_SEED)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    c1, c2 = 16, 32
+    w1 = jax.random.normal(k1, (c1, channels, 3, 3)) * (1.0 / 3.0)
+    w2 = jax.random.normal(k2, (c2, c1, 3, 3)) * (1.0 / (3.0 * jnp.sqrt(c1 / 8)))
+
+    s1 = img_size // 2          # after conv1 stride 2
+    s2 = max(s1 // 2, 1)        # after conv2 stride 2
+    p_sfeat = jax.random.normal(k3, (c1 * s1 * s1, FEATURE_DIM)) / jnp.sqrt(
+        c1 * s1 * s1)
+    p_feat = jax.random.normal(k4, (c2 * s2 * s2, FEATURE_DIM)) / jnp.sqrt(
+        c2 * s2 * s2)
+    del k5
+
+    def feature_fn(img):
+        h1 = jnp.maximum(_conv(img, w1, 2), 0.0)          # [B,c1,s1,s1]
+        h2 = jnp.maximum(_conv(h1, w2, 2), 0.0)           # [B,c2,s2,s2]
+        B = img.shape[0]
+        sfeat = h1.reshape(B, -1) @ p_sfeat
+        feat = h2.reshape(B, -1) @ p_feat
+        return feat, sfeat
+
+    return feature_fn

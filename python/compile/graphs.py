@@ -1,0 +1,175 @@
+"""Graph definitions exported by aot.py — one jax function per executable.
+
+Serving graphs call the L1 Pallas kernels so the shipped HLO contains the
+fused-kernel lowering; training graphs use the ref path (autodiff).
+All take/return plain arrays; parameter tensors arrive as explicit inputs
+sliced by Rust from the flat θ buffer (manifest offsets).
+"""
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import configs, diffusion, featurenet, model
+from .configs import ModelConfig
+from .kernels.apply_out import apply_out as k_apply_fn
+from .kernels.attention import attention as k_attention_fn
+from .kernels.feedforward import feedforward as k_feedforward_fn
+from .kernels.modgate import modgate as k_modgate_fn
+
+
+class GraphDef:
+    """A lowerable graph: fn + example (shape, dtype) input specs."""
+
+    def __init__(self, name: str, fn: Callable, inputs: List[Tuple[str, tuple, str]]):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs  # (arg_name, shape, dtype-str)
+
+    def example_args(self):
+        return [jax.ShapeDtypeStruct(shape, jnp.dtype(dt))
+                for _, shape, dt in self.inputs]
+
+
+def _f32(name, shape):
+    return (name, tuple(shape), "float32")
+
+
+def serving_graphs(cfg: ModelConfig, bucket: int) -> List[GraphDef]:
+    """The per-module executables for batch size `bucket`."""
+    B, D, N = bucket, cfg.dim, cfg.tokens
+    C, S = cfg.channels, cfg.img_size
+    H = cfg.heads
+    Dh = cfg.hidden
+    PD = cfg.patch_dim
+
+    def embed_fn(z, t, y, w_patch, b_patch, tw1, tb1, tw2, tb2, y_table):
+        params = {
+            "embed.patch.w": w_patch, "embed.patch.b": b_patch,
+            "embed.t.w1": tw1, "embed.t.b1": tb1,
+            "embed.t.w2": tw2, "embed.t.b2": tb2,
+            "embed.y.table": y_table,
+        }
+        return model.embed(params, cfg, z, t, y)
+
+    def modgate_fn(x, c, w_sh, b_sh, w_sc, b_sc, w_g, b_g):
+        return k_modgate_fn(x, c, w_sh, b_sh, w_sc, b_sc, w_g,
+                                 b_g.reshape(()))
+
+    def attn_fn(z, w_qkv, b_qkv, w_o, b_o):
+        return (k_attention_fn(z, w_qkv, b_qkv, w_o, b_o, H),)
+
+    def ffn_fn(z, w1, b1, w2, b2):
+        return (k_feedforward_fn(z, w1, b1, w2, b2),)
+
+    def apply_fn(x, c, w_al, b_al, f):
+        return (k_apply_fn(x, c, w_al, b_al, f),)
+
+    def final_fn(x, c, w_sh, b_sh, w_sc, b_sc, w_out, b_out):
+        params = {
+            "final.w_shift": w_sh, "final.b_shift": b_sh,
+            "final.w_scale": w_sc, "final.b_scale": b_sc,
+            "final.w_out": w_out, "final.b_out": b_out,
+        }
+        return (model.final_layer(params, cfg, x, c),)
+
+    feature_raw = featurenet.make_feature_fn(cfg.img_size, cfg.channels)
+
+    def feature_fn(img):
+        return feature_raw(img)
+
+    return [
+        GraphDef(f"embed_b{B}", embed_fn, [
+            _f32("z", (B, C, S, S)), _f32("t", (B,)),
+            ("y", (B,), "int32"),
+            _f32("w_patch", (PD, D)), _f32("b_patch", (D,)),
+            _f32("tw1", (cfg.freq_dim, D)), _f32("tb1", (D,)),
+            _f32("tw2", (D, D)), _f32("tb2", (D,)),
+            _f32("y_table", (cfg.num_classes + 1, D)),
+        ]),
+        GraphDef(f"modgate_b{B}", modgate_fn, [
+            _f32("x", (B, N, D)), _f32("c", (B, D)),
+            _f32("w_sh", (D, D)), _f32("b_sh", (D,)),
+            _f32("w_sc", (D, D)), _f32("b_sc", (D,)),
+            _f32("w_g", (D,)), _f32("b_g", (1,)),
+        ]),
+        GraphDef(f"attn_b{B}", attn_fn, [
+            _f32("z", (B, N, D)),
+            _f32("w_qkv", (D, 3 * D)), _f32("b_qkv", (3 * D,)),
+            _f32("w_o", (D, D)), _f32("b_o", (D,)),
+        ]),
+        GraphDef(f"ffn_b{B}", ffn_fn, [
+            _f32("z", (B, N, D)),
+            _f32("w1", (D, Dh)), _f32("b1", (Dh,)),
+            _f32("w2", (Dh, D)), _f32("b2", (D,)),
+        ]),
+        GraphDef(f"apply_b{B}", apply_fn, [
+            _f32("x", (B, N, D)), _f32("c", (B, D)),
+            _f32("w_al", (D, D)), _f32("b_al", (D,)),
+            _f32("f", (B, N, D)),
+        ]),
+        GraphDef(f"final_b{B}", final_fn, [
+            _f32("x", (B, N, D)), _f32("c", (B, D)),
+            _f32("w_sh", (D, D)), _f32("b_sh", (D,)),
+            _f32("w_sc", (D, D)), _f32("b_sc", (D,)),
+            _f32("w_out", (D, PD)), _f32("b_out", (PD,)),
+        ]),
+        GraphDef(f"feature_b{B}", feature_fn, [
+            _f32("img", (B, C, S, S)),
+        ]),
+    ]
+
+
+def train_graphs(cfg: ModelConfig, train_batch: int) -> List[GraphDef]:
+    """init / pretrain_step / train_step at the fixed training batch."""
+    B = train_batch
+    C, S = cfg.channels, cfg.img_size
+    P = configs.spec_size(configs.param_spec(cfg))
+    G = configs.spec_size(configs.gate_spec(cfg))
+    dc = configs.DIFFUSION
+
+    def init_fn(key):
+        return (model.init_params(key, cfg),)
+
+    pre = diffusion.make_pretrain_step(cfg, dc)
+
+    def pretrain_fn(theta, m, v, step, x0, y, t, noise, lr):
+        return pre(theta, m, v, step, x0, y, t, noise, lr)
+
+    lazy = diffusion.make_train_step(cfg, dc)
+
+    def train_fn(theta, gamma, m, v, step, x0, y, t, t_prev, noise, lr,
+                 rho_a, rho_f):
+        return lazy(theta, gamma, m, v, step, x0, y, t, t_prev, noise, lr,
+                    rho_a, rho_f)
+
+    # A gate-free full forward used for parity/golden checks from Rust:
+    # one whole denoise-model evaluation in a single graph.
+    def forward_fn(theta, z, t, y):
+        eps, _, _ = model.forward(theta, model.init_gates(cfg), cfg, z, t, y,
+                                  caches=None, use_pallas=False)
+        return (eps,)
+
+    batch = [
+        _f32("x0", (B, C, S, S)), ("y", (B,), "int32"), ("t", (B,), "int32"),
+    ]
+    return [
+        GraphDef("init", init_fn, [("key", (2,), "uint32")]),
+        GraphDef("pretrain_step", pretrain_fn, [
+            _f32("theta", (P,)), _f32("m", (P,)), _f32("v", (P,)),
+            _f32("step", ()), *batch, _f32("noise", (B, C, S, S)),
+            _f32("lr", ()),
+        ]),
+        GraphDef("train_step", train_fn, [
+            _f32("theta", (P,)), _f32("gamma", (G,)),
+            _f32("m", (G,)), _f32("v", (G,)), _f32("step", ()),
+            *batch, ("t_prev", (B,), "int32"),
+            _f32("noise", (B, C, S, S)), _f32("lr", ()),
+            _f32("rho_a", ()), _f32("rho_f", ()),
+        ]),
+        GraphDef("forward", forward_fn, [
+            _f32("theta", (P,)), _f32("z", (B, C, S, S)), _f32("t", (B,)),
+            ("y", (B,), "int32"),
+        ]),
+    ]

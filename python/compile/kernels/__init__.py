@@ -1,0 +1,15 @@
+"""L1 Pallas kernels for LazyDiT (all interpret=True; see DESIGN.md §3).
+
+Public surface:
+  modgate.modgate        fused LN + adaLN modulate + lazy gate
+  attention.attention    multi-head self-attention
+  feedforward.feedforward  GELU MLP
+  apply_out.apply_out    fused adaLN-Zero output gate + residual
+  ref                    pure-jnp oracle for all of the above
+"""
+
+from . import ref  # noqa: F401
+from .modgate import modgate  # noqa: F401
+from .attention import attention  # noqa: F401
+from .feedforward import feedforward  # noqa: F401
+from .apply_out import apply_out  # noqa: F401

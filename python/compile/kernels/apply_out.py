@@ -1,0 +1,43 @@
+"""Fused adaLN-Zero output-gate + residual Pallas kernel (L1).
+
+Computes  x + alpha(c) ∘ f  in one VMEM pass: the alpha projection is a
+D×D matvec on the conditioning vector, then the residual add and the
+per-channel scale are fused element-wise over the [N, D] tile. This is the
+second fusion the paper's mobile framework performs around each module
+(DESIGN.md §3); crucially it is also the *only* compute that runs for a
+module on a skip step (the cached f is re-applied with the *current*
+step's alpha, as prescribed in paper Sec. 3.3: "the input scale, input
+shift, output scale, and residual connections remain unchanged").
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _apply_kernel(x_ref, c_ref, wa_ref, ba_ref, f_ref, o_ref):
+    """One batch element: x,f [N,D], c [D] -> o = x + (c·Wa + ba) ∘ f."""
+    alpha = c_ref[...] @ wa_ref[...] + ba_ref[...]
+    o_ref[...] = x_ref[...] + alpha[None, :] * f_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def apply_out(x, c, w_alpha, b_alpha, f):
+    """Pallas version of ref.apply_out; identical signature/semantics."""
+    B, N, D = x.shape
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((None, N, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, D), lambda b: (b, 0)),
+            pl.BlockSpec((D, D), lambda b: (0, 0)),
+            pl.BlockSpec((D,), lambda b: (0,)),
+            pl.BlockSpec((None, N, D), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, N, D), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N, D), x.dtype),
+        interpret=True,
+    )(x, c, w_alpha, b_alpha, f)

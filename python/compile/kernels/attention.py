@@ -1,0 +1,99 @@
+"""Multi-head self-attention Pallas kernel (L1).
+
+TPU mapping of the paper's MHSA hot path (the paper's mobile/OpenCL fusion
+is re-thought for the MXU, per DESIGN.md §3):
+
+  * grid = (B, H): one program per (batch element, head) — the analogue of
+    the paper's per-threadblock tiling, expressed as a BlockSpec HBM→VMEM
+    schedule instead of shared-memory staging.
+  * Q/K/V are produced inside the program from the head's [D, 3·dh] weight
+    slice, so the [N, D] input tile is read from HBM exactly once per head.
+  * QKᵀ and AV are [N, dh] × [dh, N] / [N, N] × [N, dh] MXU matmuls; with
+    N ≤ 256, dh ≤ 32 everything (≈ N·D + 3·D·dh + N² floats ≤ ~0.6 MB)
+    stays VMEM-resident; softmax is a single fused VPU pass — no streaming
+    needed at these shapes.
+  * The output projection is a separate kernel (`_proj_kernel`) because it
+    reduces across heads.
+
+interpret=True lowers this to plain HLO so the CPU PJRT client can run it.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_head_kernel(z_ref, wqkv_ref, bqkv_ref, o_ref):
+    """One (batch, head): z [N,D], wqkv [D,3dh], bqkv [3dh] -> o [N,dh]."""
+    z = z_ref[...]
+    w = wqkv_ref[...]
+    b = bqkv_ref[...]
+    dh = w.shape[1] // 3
+    q = z @ w[:, 0 * dh:1 * dh] + b[0 * dh:1 * dh][None, :]
+    k = z @ w[:, 1 * dh:2 * dh] + b[1 * dh:2 * dh][None, :]
+    v = z @ w[:, 2 * dh:3 * dh] + b[2 * dh:3 * dh][None, :]
+    logits = (q @ k.T) * (1.0 / jnp.sqrt(jnp.float32(dh))).astype(z.dtype)
+    # Numerically-stable softmax, fused in-register on TPU.
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    attn = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = attn @ v
+
+
+def _proj_kernel(h_ref, wo_ref, bo_ref, o_ref):
+    """One batch element: h [N,D] (concat heads), wo [D,D] -> o [N,D]."""
+    o_ref[...] = h_ref[...] @ wo_ref[...] + bo_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("num_heads",))
+def attention(z, w_qkv, b_qkv, w_o, b_o, num_heads: int):
+    """Pallas version of ref.attention; identical signature/semantics.
+
+    w_qkv is stored [D, 3D] with layout [Wq | Wk | Wv]; each head h owns
+    columns h·dh:(h+1)·dh inside each of the three D-wide groups. We
+    re-pack to [H, D, 3·dh] so one BlockSpec slice feeds each program.
+    """
+    B, N, D = z.shape
+    dh = D // num_heads
+    # [D, 3, H, dh] -> [H, D, 3*dh] per-head packed weights.
+    wq, wk, wv = jnp.split(w_qkv, 3, axis=1)
+    bq, bk, bv = jnp.split(b_qkv, 3, axis=0)
+
+    def pack_w(w):  # [D, D] -> [H, D, dh]
+        return w.reshape(D, num_heads, dh).transpose(1, 0, 2)
+
+    def pack_b(b):  # [D] -> [H, dh]
+        return b.reshape(num_heads, dh)
+
+    w_heads = jnp.concatenate([pack_w(wq), pack_w(wk), pack_w(wv)], axis=-1)
+    b_heads = jnp.concatenate([pack_b(bq), pack_b(bk), pack_b(bv)], axis=-1)
+
+    heads = pl.pallas_call(
+        _attn_head_kernel,
+        grid=(B, num_heads),
+        in_specs=[
+            pl.BlockSpec((None, N, D), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((None, D, 3 * dh), lambda b, h: (h, 0, 0)),
+            pl.BlockSpec((None, 3 * dh), lambda b, h: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, N, dh), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, num_heads, N, dh), z.dtype),
+        interpret=True,
+    )(z, w_heads, b_heads)
+
+    h_cat = heads.transpose(0, 2, 1, 3).reshape(B, N, D)
+    out = pl.pallas_call(
+        _proj_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((None, N, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((D, D), lambda b: (0, 0)),
+            pl.BlockSpec((D,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, N, D), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N, D), z.dtype),
+        interpret=True,
+    )(h_cat, w_o, b_o)
+    return out

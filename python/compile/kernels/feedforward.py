@@ -1,0 +1,50 @@
+"""Pointwise feedforward (GELU MLP) Pallas kernel (L1).
+
+Grid = (B,): one program per batch element keeps the [N, D] tile and both
+weight tiles in VMEM and feeds the MXU two back-to-back matmuls with the
+GELU fused between them on the VPU — the TPU rendition of the paper's
+fused mobile MLP (DESIGN.md §3). Working set N·D + D·4D + 4D·D + N·4D
+floats ≤ ~1.3 MB for the largest config (`l7b-a`, D=192, N=16), far under
+VMEM capacity, so no K-dim tiling is required.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def _gelu_tanh(x):
+    """tanh-approx GELU (matches jax.nn.gelu(approximate=True))."""
+    return 0.5 * x * (1.0 + jnp.tanh(_SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)))
+
+
+def _ffn_kernel(z_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One batch element: z [N,D] -> o [N,D] via GELU MLP with hidden 4D."""
+    z = z_ref[...]
+    h = _gelu_tanh(z @ w1_ref[...] + b1_ref[...][None, :])
+    o_ref[...] = h @ w2_ref[...] + b2_ref[...][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def feedforward(z, w1, b1, w2, b2):
+    """Pallas version of ref.feedforward; identical signature/semantics."""
+    B, N, D = z.shape
+    Dh = w1.shape[1]
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((None, N, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((D, Dh), lambda b: (0, 0)),
+            pl.BlockSpec((Dh,), lambda b: (0,)),
+            pl.BlockSpec((Dh, D), lambda b: (0, 0)),
+            pl.BlockSpec((D,), lambda b: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, N, D), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N, D), z.dtype),
+        interpret=True,
+    )(z, w1, b1, w2, b2)

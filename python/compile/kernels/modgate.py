@@ -1,0 +1,71 @@
+"""Fused LN + adaLN-modulate + lazy-gate Pallas kernel (L1).
+
+This is the paper's lazy-learning layer fused with the modulation that
+precedes each MHSA / Feedforward module.  On a real TPU the fusion keeps
+the [N, D] tile resident in VMEM for a single pass (LayerNorm statistics,
+modulation, and the D→1 gate matvec), replacing four separate HBM
+round-trips (LN read/write, modulate read/write) with one read + one write.
+Here it is lowered with interpret=True so the same HLO runs on CPU PJRT.
+
+Grid: one program per batch element.  Per-program working set
+(N·D + 2·D·D + O(D) floats) stays ≤ ~0.5 MB for every config in
+DESIGN.md §4, well inside a TPU core's ~16 MB VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _modgate_kernel(x_ref, c_ref, wsh_ref, bsh_ref, wsc_ref, bsc_ref,
+                    wg_ref, bg_ref, z_ref, s_ref):
+    """One batch element: x_ref [N,D], c_ref [D] -> z_ref [N,D], s_ref [1]."""
+    x = x_ref[...]
+    c = c_ref[...]
+    # LayerNorm over D (fp32 statistics).
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + ref.LN_EPS)
+    # adaLN shift/scale from the conditioning vector (two D×D matvecs).
+    shift = c @ wsh_ref[...] + bsh_ref[...]
+    scale = c @ wsc_ref[...] + bsc_ref[...]
+    z = xn * (1.0 + scale)[None, :] + shift[None, :]
+    z_ref[...] = z
+    # Lazy gate: sigmoid(mean_N(z · w_g) + b_g)  (paper Sec 3.3, D_out = 1).
+    logits = z @ wg_ref[...]  # [N]
+    s_ref[...] = jax.nn.sigmoid(jnp.mean(logits)[None] + bg_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def modgate(x, c, w_shift, b_shift, w_scale, b_scale, w_gate, b_gate):
+    """Pallas-fused version of ref.modgate; identical signature/semantics."""
+    B, N, D = x.shape
+    b_gate1 = jnp.reshape(b_gate, (1,))
+    z, s = pl.pallas_call(
+        _modgate_kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((None, N, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, D), lambda b: (b, 0)),
+            pl.BlockSpec((D, D), lambda b: (0, 0)),
+            pl.BlockSpec((D,), lambda b: (0,)),
+            pl.BlockSpec((D, D), lambda b: (0, 0)),
+            pl.BlockSpec((D,), lambda b: (0,)),
+            pl.BlockSpec((D,), lambda b: (0,)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, N, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, N, D), x.dtype),
+            jax.ShapeDtypeStruct((B,), x.dtype),
+        ],
+        interpret=True,
+    )(x, c, w_shift, b_shift, w_scale, b_scale, w_gate, b_gate1)
+    return z, s

@@ -1,0 +1,92 @@
+"""Pure-jnp reference oracle for every Pallas kernel in this package.
+
+These functions define the *semantics* each kernel must reproduce; pytest
+(`python/tests/test_kernels.py`) sweeps shapes/dtypes with hypothesis and
+asserts allclose between the Pallas kernels (interpret=True) and these.
+
+Shape conventions (match DESIGN.md §2):
+  x, z, f : [B, N, D]   token hidden states
+  c       : [B, D]      conditioning vector SiLU(t_emb + y_emb)
+  s       : [B]         lazy-gate similarity in (0, 1)
+"""
+
+import jax
+import jax.numpy as jnp
+
+LN_EPS = 1e-6
+
+
+def layer_norm(x: jnp.ndarray, eps: float = LN_EPS) -> jnp.ndarray:
+    """LayerNorm over the last axis, no learnable affine (DiT adaLN style)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def modulate(x_ln: jnp.ndarray, shift: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """adaLN modulation: broadcast per-batch shift/scale over tokens.
+
+    x_ln: [B,N,D]; shift, scale: [B,D].
+    """
+    return x_ln * (1.0 + scale[:, None, :]) + shift[:, None, :]
+
+
+def modgate(x, c, w_shift, b_shift, w_scale, b_scale, w_gate, b_gate):
+    """Fused LN + adaLN-modulate + lazy gate (paper Sec. 3.3, training forward).
+
+    Args:
+      x: [B,N,D] block input.
+      c: [B,D] conditioning vector.
+      w_shift, w_scale: [D,D]; b_shift, b_scale: [D]  (adaLN projections).
+      w_gate: [D]; b_gate: [] — the lazy-learning linear layer (D_out = 1).
+    Returns:
+      z: [B,N,D] modulated input Z_{l,t};
+      s: [B] gate value  sigmoid(mean_N(Z · w_g) + b_g).
+    """
+    shift = c @ w_shift + b_shift
+    scale = c @ w_scale + b_scale
+    z = modulate(layer_norm(x), shift, scale)
+    logits = jnp.einsum("bnd,d->bn", z, w_gate)
+    s = jax.nn.sigmoid(jnp.mean(logits, axis=-1) + b_gate)
+    return z, s
+
+
+def attention(z, w_qkv, b_qkv, w_o, b_o, num_heads: int):
+    """Multi-head self-attention over modulated input z: [B,N,D]."""
+    B, N, D = z.shape
+    dh = D // num_heads
+    qkv = z @ w_qkv + b_qkv  # [B,N,3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def split_heads(a):  # [B,N,D] -> [B,H,N,dh]
+        return a.reshape(B, N, num_heads, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split_heads(q), split_heads(k), split_heads(v)
+    logits = jnp.einsum("bhnd,bhmd->bhnm", q, k) / jnp.sqrt(dh).astype(z.dtype)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhnm,bhmd->bhnd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(B, N, D)
+    return out @ w_o + b_o
+
+
+def feedforward(z, w1, b1, w2, b2):
+    """Pointwise MLP with tanh-approx GELU: [B,N,D] -> [B,N,D]."""
+    h = jax.nn.gelu(z @ w1 + b1, approximate=True)
+    return h @ w2 + b2
+
+
+def apply_out(x, c, w_alpha, b_alpha, f):
+    """adaLN-Zero output gate + residual:  x + alpha(c) ∘ f.
+
+    w_alpha: [D,D], b_alpha: [D]. alpha is zero at init (adaLN-Zero),
+    achieved by zero-initialising w_alpha/b_alpha in the model init.
+    """
+    alpha = c @ w_alpha + b_alpha  # [B,D]
+    return x + alpha[:, None, :] * f
+
+
+def lazy_blend(s, f, cache):
+    """Training-time blend (paper's training forward):
+    diag(1-s)·F(Z) + diag(s)·Y_prev.  s: [B]; f, cache: [B,N,D]."""
+    w = s[:, None, None]
+    return (1.0 - w) * f + w * cache

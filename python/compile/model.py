@@ -1,0 +1,226 @@
+"""L2: the DiT model (adaLN-Zero diffusion transformer) with lazy gates.
+
+Two parallel implementations of the block math:
+  * `use_pallas=True`  — calls the L1 Pallas kernels; used for the serving
+    per-module exports so the kernels lower into the shipped HLO.
+  * `use_pallas=False` — calls kernels.ref (pure jnp); used for the training
+    graphs (autodiff through pallas_call interpret mode is not supported for
+    all primitives) and as the oracle. Equality of the two paths is enforced
+    by python/tests/test_model.py.
+
+Parameters travel as ONE flat f32 vector θ (base) plus one flat vector γ
+(gates); `unflatten` slices them into a dict following configs.param_spec.
+This keeps the Rust interface to a single contiguous buffer + offset table.
+"""
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.modgate import modgate as k_modgate
+from .kernels.attention import attention as k_attention
+from .kernels.feedforward import feedforward as k_feedforward
+from .kernels.apply_out import apply_out as k_apply
+
+
+# ---------------------------------------------------------------- flat θ
+
+def unflatten(theta: jnp.ndarray, spec) -> Dict[str, jnp.ndarray]:
+    """Slice the flat parameter vector into named tensors (static slices)."""
+    out, off = {}, 0
+    for name, shape in spec:
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = jax.lax.slice(theta, (off,), (off + n,)).reshape(shape)
+        off += n
+    return out
+
+
+def flatten_dict(params: Dict[str, jnp.ndarray], spec) -> jnp.ndarray:
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in spec])
+
+
+# ---------------------------------------------------------------- init
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> jnp.ndarray:
+    """DiT initialisation, returned as the flat θ vector.
+
+    Follows the DiT paper: trunc-normal-ish (plain normal here) linear
+    init scaled by fan-in; adaLN-Zero — all alpha (output-gate) projections
+    and the final linear are ZERO so every block starts as identity.
+    """
+    spec = configs.param_spec(cfg)
+    params: Dict[str, jnp.ndarray] = {}
+    keys = jax.random.split(key, len(spec))
+    for (name, shape), k in zip(spec, keys):
+        if name.endswith(".b") or ".b_" in name or name.endswith(("b1", "b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif "w_alpha" in name or name == "final.w_out":
+            params[name] = jnp.zeros(shape, jnp.float32)  # adaLN-Zero
+        elif name == "embed.y.table":
+            params[name] = 0.02 * jax.random.normal(k, shape)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            params[name] = std * jax.random.normal(k, shape)
+    return flatten_dict(params, spec)
+
+
+def init_gates(cfg: ModelConfig, bias: float = -2.0) -> jnp.ndarray:
+    """γ init: w=0, b=bias ⇒ s = sigmoid(bias) ≈ 0.12 — start non-lazy."""
+    spec = configs.gate_spec(cfg)
+    parts = []
+    for name, shape in spec:
+        if name.endswith(".b"):
+            parts.append(jnp.full((1,), bias, jnp.float32))
+        else:
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------- embeds
+
+def patchify(z: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """[B,C,H,W] -> [B,N,p*p*C] in row-major patch order."""
+    B = z.shape[0]
+    p, s = cfg.patch, cfg.img_size // cfg.patch
+    z = z.reshape(B, cfg.channels, s, p, s, p)
+    z = z.transpose(0, 2, 4, 1, 3, 5)  # B, sy, sx, C, py, px
+    return z.reshape(B, s * s, cfg.patch_dim)
+
+
+def unpatchify(tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """[B,N,p*p*C] -> [B,C,H,W] (inverse of patchify)."""
+    B = tokens.shape[0]
+    p, s = cfg.patch, cfg.img_size // cfg.patch
+    z = tokens.reshape(B, s, s, cfg.channels, p, p)
+    z = z.transpose(0, 3, 1, 4, 2, 5)
+    return z.reshape(B, cfg.channels, cfg.img_size, cfg.img_size)
+
+
+def pos_embedding(cfg: ModelConfig) -> jnp.ndarray:
+    """Fixed 2D sin-cos positional embedding [N, D] (DiT convention)."""
+    s = cfg.img_size // cfg.patch
+    D = cfg.dim
+    d_half = D // 2
+
+    def axis_emb(pos):  # pos: [s] -> [s, d_half]
+        omega = jnp.arange(d_half // 2, dtype=jnp.float32) / max(d_half // 2, 1)
+        omega = 1.0 / (10000.0 ** omega)
+        out = pos[:, None] * omega[None, :]
+        return jnp.concatenate([jnp.sin(out), jnp.cos(out)], axis=1)
+
+    grid = jnp.arange(s, dtype=jnp.float32)
+    ey = axis_emb(grid)  # [s, d_half]
+    ex = axis_emb(grid)
+    full = jnp.concatenate(
+        [
+            jnp.repeat(ey[:, None, :], s, axis=1),   # varies along rows
+            jnp.repeat(ex[None, :, :], s, axis=0),   # varies along cols
+        ],
+        axis=-1,
+    )  # [s, s, D]
+    return full.reshape(s * s, D)
+
+
+def timestep_embedding(t: jnp.ndarray, freq_dim: int) -> jnp.ndarray:
+    """Sinusoidal embedding of (float) timesteps t: [B] -> [B, freq_dim]."""
+    half = freq_dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t[:, None].astype(jnp.float32) * freqs[None, :]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def embed(params: Dict[str, jnp.ndarray], cfg: ModelConfig,
+          z: jnp.ndarray, t: jnp.ndarray, y: jnp.ndarray
+          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Patchify + pos-emb + conditioning vector c = SiLU(t_emb + y_emb).
+
+    z: [B,C,H,W]; t: [B] float timesteps; y: [B] int labels (num_classes
+    is the CFG null label). Returns (x [B,N,D], c [B,D]).
+    """
+    x = patchify(z, cfg) @ params["embed.patch.w"] + params["embed.patch.b"]
+    x = x + pos_embedding(cfg)[None]
+    te = timestep_embedding(t, cfg.freq_dim)
+    te = jax.nn.silu(te @ params["embed.t.w1"] + params["embed.t.b1"])
+    te = te @ params["embed.t.w2"] + params["embed.t.b2"]
+    ye = params["embed.y.table"][y]
+    c = jax.nn.silu(te + ye)
+    return x, c
+
+
+def final_layer(params: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Final adaLN + linear + unpatchify -> eps [B,C,H,W]."""
+    shift = c @ params["final.w_shift"] + params["final.b_shift"]
+    scale = c @ params["final.w_scale"] + params["final.b_scale"]
+    zf = ref.modulate(ref.layer_norm(x), shift, scale)
+    out = zf @ params["final.w_out"] + params["final.b_out"]
+    return unpatchify(out, cfg)
+
+
+# ---------------------------------------------------------------- blocks
+
+def _block_params(params, l: int, mod: str):
+    p = lambda suffix: params[f"block{l}.{mod}.{suffix}"]
+    return p
+
+
+def block_module(params: Dict[str, jnp.ndarray], gates: Dict[str, jnp.ndarray],
+                 cfg: ModelConfig, l: int, mod: str,
+                 x: jnp.ndarray, c: jnp.ndarray,
+                 cache: Optional[jnp.ndarray], use_pallas: bool
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One lazy module (MHSA or FFN) of block l, training-style blending.
+
+    Returns (x_out, f_blend, s):
+      f_blend — the value to cache for step t (paper caches Y_{l,t});
+      s       — the gate value [B].
+    If cache is None the gate is still evaluated but no blending happens
+    (first step of a trajectory, or cache-free forward).
+    """
+    p = _block_params(params, l, mod)
+    mg = k_modgate if use_pallas else ref.modgate
+    at = (lambda z: (k_attention if use_pallas else ref.attention)(
+        z, p("w_qkv"), p("b_qkv"), p("w_o"), p("b_o"), cfg.heads))
+    ff = (lambda z: (k_feedforward if use_pallas else ref.feedforward)(
+        z, p("w1"), p("b1"), p("w2"), p("b2")))
+    ap = k_apply if use_pallas else ref.apply_out
+
+    z, s = mg(x, c, p("w_shift"), p("b_shift"), p("w_scale"), p("b_scale"),
+              gates[f"gate{l}.{mod}.w"], gates[f"gate{l}.{mod}.b"])
+    f = at(z) if mod == "attn" else ff(z)
+    f_blend = f if cache is None else ref.lazy_blend(s, f, cache)
+    x_out = ap(x, c, p("w_alpha"), p("b_alpha"), f_blend)
+    return x_out, f_blend, s
+
+
+def forward(theta: jnp.ndarray, gamma: jnp.ndarray, cfg: ModelConfig,
+            z: jnp.ndarray, t: jnp.ndarray, y: jnp.ndarray,
+            caches: Optional[List[jnp.ndarray]] = None,
+            use_pallas: bool = False,
+            ) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray]:
+    """Full DiT forward with training-style lazy blending.
+
+    caches: list of 2L tensors [B,N,D] ordered (l0.attn, l0.ffn, l1.attn, …)
+    or None. Returns (eps [B,C,H,W], new_caches (same order), s [2L, B]).
+    """
+    params = unflatten(theta, configs.param_spec(cfg))
+    gates = unflatten(gamma, configs.gate_spec(cfg))
+    x, c = embed(params, cfg, z, t, y)
+    new_caches, svals = [], []
+    for l in range(cfg.depth):
+        for mi, mod in enumerate(("attn", "ffn")):
+            cache = caches[2 * l + mi] if caches is not None else None
+            x, f, s = block_module(params, gates, cfg, l, mod, x, c, cache,
+                                   use_pallas)
+            new_caches.append(f)
+            svals.append(s)
+    eps = final_layer(params, cfg, x, c)
+    return eps, new_caches, jnp.stack(svals)

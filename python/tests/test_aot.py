@@ -1,0 +1,118 @@
+"""AOT exporter tests: graphs lower to parseable HLO text, manifest
+structure is consistent with configs.py, goldens replay exactly."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, graphs
+from compile.configs import CONFIGS
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CONFIGS["nano"]
+
+
+class TestLowering:
+    def test_serving_graphs_lower_to_hlo_text(self):
+        for gd in graphs.serving_graphs(CFG, 1):
+            lowered = jax.jit(gd.fn).lower(*gd.example_args())
+            text = aot.to_hlo_text(lowered)
+            assert text.startswith("HloModule"), gd.name
+            assert "ENTRY" in text, gd.name
+
+    def test_graph_input_specs_match_fn(self):
+        """Every GraphDef's example args must be accepted by its fn."""
+        for gd in graphs.serving_graphs(CFG, 2):
+            out = jax.eval_shape(gd.fn, *gd.example_args())
+            assert out is not None, gd.name
+
+    def test_train_graphs_have_expected_io(self):
+        gds = {g.name: g for g in graphs.train_graphs(CFG, 4)}
+        assert set(gds) == {"init", "pretrain_step", "train_step", "forward"}
+        P = configs.spec_size(configs.param_spec(CFG))
+        assert gds["pretrain_step"].inputs[0][1] == (P,)
+        # train_step: theta, gamma, m, v, step, x0, y, t, t_prev, noise,
+        # lr, rho_a, rho_f
+        assert len(gds["train_step"].inputs) == 13
+
+
+class TestManifestConsistency:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts", "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_offsets_match_configs(self, manifest):
+        for name, entry in manifest["configs"].items():
+            cfg = CONFIGS[name]
+            expect = configs.spec_offsets(configs.param_spec(cfg))
+            assert entry["params"] == expect, name
+            expect_g = configs.spec_offsets(configs.gate_spec(cfg))
+            assert entry["gates"] == expect_g, name
+
+    def test_graph_files_exist(self, manifest):
+        root = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts")
+        for name, entry in manifest["configs"].items():
+            for gname, g in entry["graphs"].items():
+                path = os.path.join(root, g["file"])
+                assert os.path.exists(path), f"{name}/{gname}"
+
+    def test_goldens_replay(self, manifest):
+        """Re-evaluating a graph fn on its dumped golden inputs must
+        reproduce the dumped outputs bit-for-bit (same jit, same machine)."""
+        root = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts")
+        name = "nano"
+        if name not in manifest["configs"]:
+            pytest.skip("nano not exported")
+        entry = manifest["configs"][name]
+        bucket = entry["buckets"][0]
+        gds = {g.name: g for g in graphs.serving_graphs(CFG, bucket)}
+        for gname in [f"modgate_b{bucket}", f"attn_b{bucket}",
+                      f"ffn_b{bucket}"]:
+            gd = gds[gname]
+            gdir = os.path.join(root, "goldens", name)
+            ins = []
+            for i in range(len(gd.inputs)):
+                p = os.path.join(gdir, f"{gname}.in{i}.npy")
+                if not os.path.exists(p):
+                    pytest.skip("goldens not dumped")
+                ins.append(jnp.asarray(np.load(p)))
+            outs = jax.jit(gd.fn)(*ins)
+            if not isinstance(outs, (tuple, list)):
+                outs = (outs,)
+            for i, o in enumerate(outs):
+                want = np.load(os.path.join(gdir, f"{gname}.out{i}.npy"))
+                np.testing.assert_allclose(np.asarray(o), want, rtol=1e-5,
+                                           atol=1e-6)
+
+
+class TestFeatureNet:
+    def test_deterministic_and_shaped(self):
+        from compile.featurenet import make_feature_fn
+        fn = make_feature_fn(8)
+        k = jax.random.PRNGKey(0)
+        img = jax.random.normal(k, (3, 3, 8, 8))
+        f1, s1 = fn(img)
+        f2, s2 = fn(img)
+        assert f1.shape == (3, 64) and s1.shape == (3, 64)
+        np.testing.assert_array_equal(f1, f2)
+
+    def test_discriminates(self):
+        from compile.featurenet import make_feature_fn
+        fn = make_feature_fn(8)
+        a = jnp.ones((1, 3, 8, 8))
+        b = -jnp.ones((1, 3, 8, 8))
+        fa, _ = fn(a)
+        fb, _ = fn(b)
+        assert float(jnp.abs(fa - fb).max()) > 1e-3

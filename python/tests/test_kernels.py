@@ -1,0 +1,227 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (B, N, D, H) and dtypes; assert_allclose is the
+core correctness signal for the compile path (DESIGN.md §8).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, scale=1.0, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+shapes = st.tuples(
+    st.integers(1, 5),                       # B
+    st.sampled_from([1, 4, 16, 64]),         # N
+    st.sampled_from([8, 32, 96]),            # D
+)
+
+
+@st.composite
+def attn_shapes(draw):
+    b = draw(st.integers(1, 4))
+    n = draw(st.sampled_from([1, 4, 16, 64]))
+    d = draw(st.sampled_from([8, 32, 96]))
+    h = draw(st.sampled_from([h for h in (1, 2, 4, 8) if d % h == 0]))
+    return b, n, d, h
+
+
+class TestModGate:
+    @settings(**SETTINGS)
+    @given(shapes, st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        B, N, D = shape
+        ks = keys(seed, 8)
+        args = (
+            rand(ks[0], (B, N, D)),
+            rand(ks[1], (B, D)),
+            rand(ks[2], (D, D), 0.05),
+            rand(ks[3], (D,), 0.05),
+            rand(ks[4], (D, D), 0.05),
+            rand(ks[5], (D,), 0.05),
+            rand(ks[6], (D,), 0.2),
+            jnp.float32(float(jax.random.normal(ks[7], ()))),
+        )
+        z1, s1 = ref.modgate(*args)
+        z2, s2 = K.modgate(*args)
+        np.testing.assert_allclose(z1, z2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+
+    def test_gate_range(self):
+        """Gate output must be a valid probability."""
+        ks = keys(0, 8)
+        B, N, D = 4, 16, 32
+        _, s = K.modgate(
+            rand(ks[0], (B, N, D)), rand(ks[1], (B, D)),
+            rand(ks[2], (D, D)), rand(ks[3], (D,)),
+            rand(ks[4], (D, D)), rand(ks[5], (D,)),
+            rand(ks[6], (D,)), jnp.float32(0.0))
+        # sigmoid may saturate to the fp32 endpoints for unscaled weights
+        assert np.all(np.asarray(s) >= 0.0) and np.all(np.asarray(s) <= 1.0)
+
+    def test_zero_gate_weight_gives_half(self):
+        """w_g = 0, b_g = 0 ⇒ s = sigmoid(0) = 0.5 exactly."""
+        ks = keys(1, 6)
+        B, N, D = 2, 8, 16
+        _, s = K.modgate(
+            rand(ks[0], (B, N, D)), rand(ks[1], (B, D)),
+            rand(ks[2], (D, D)), rand(ks[3], (D,)),
+            rand(ks[4], (D, D)), rand(ks[5], (D,)),
+            jnp.zeros((D,)), jnp.float32(0.0))
+        np.testing.assert_allclose(s, 0.5, atol=1e-6)
+
+    def test_modulation_identity(self):
+        """Zero shift/scale projections ⇒ z == LayerNorm(x)."""
+        ks = keys(2, 3)
+        B, N, D = 2, 8, 16
+        x = rand(ks[0], (B, N, D))
+        z, _ = K.modgate(
+            x, rand(ks[1], (B, D)),
+            jnp.zeros((D, D)), jnp.zeros((D,)),
+            jnp.zeros((D, D)), jnp.zeros((D,)),
+            rand(ks[2], (D,)), jnp.float32(0.0))
+        np.testing.assert_allclose(z, ref.layer_norm(x), rtol=1e-5, atol=1e-5)
+
+
+class TestAttention:
+    @settings(**SETTINGS)
+    @given(attn_shapes(), st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        B, N, D, H = shape
+        ks = keys(seed, 5)
+        z = rand(ks[0], (B, N, D))
+        wqkv = rand(ks[1], (D, 3 * D), 0.1)
+        bqkv = rand(ks[2], (3 * D,), 0.1)
+        wo = rand(ks[3], (D, D), 0.1)
+        bo = rand(ks[4], (D,), 0.1)
+        a1 = ref.attention(z, wqkv, bqkv, wo, bo, H)
+        a2 = K.attention(z, wqkv, bqkv, wo, bo, H)
+        np.testing.assert_allclose(a1, a2, rtol=2e-4, atol=2e-4)
+
+    def test_permutation_equivariance(self):
+        """Self-attention (no pos-emb inside) must be token-permutation
+        equivariant — a structural invariant of the kernel."""
+        ks = keys(3, 5)
+        B, N, D, H = 1, 16, 32, 4
+        z = rand(ks[0], (B, N, D))
+        wqkv = rand(ks[1], (D, 3 * D), 0.1)
+        bqkv = rand(ks[2], (3 * D,), 0.1)
+        wo = rand(ks[3], (D, D), 0.1)
+        bo = rand(ks[4], (D,), 0.1)
+        perm = jax.random.permutation(ks[0], N)
+        a = K.attention(z, wqkv, bqkv, wo, bo, H)
+        a_p = K.attention(z[:, perm], wqkv, bqkv, wo, bo, H)
+        np.testing.assert_allclose(a[:, perm], a_p, rtol=1e-4, atol=1e-4)
+
+    def test_uniform_tokens_uniform_output(self):
+        """Identical tokens ⇒ identical outputs per token."""
+        ks = keys(4, 5)
+        B, N, D, H = 1, 8, 16, 2
+        one = rand(ks[0], (B, 1, D))
+        z = jnp.tile(one, (1, N, 1))
+        a = K.attention(z, rand(ks[1], (D, 3 * D), 0.1), rand(ks[2], (3 * D,), 0.1),
+                        rand(ks[3], (D, D), 0.1), rand(ks[4], (D,), 0.1), H)
+        np.testing.assert_allclose(a, jnp.tile(a[:, :1], (1, N, 1)), rtol=1e-4, atol=1e-5)
+
+
+class TestFeedforward:
+    @settings(**SETTINGS)
+    @given(shapes, st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        B, N, D = shape
+        ks = keys(seed, 5)
+        z = rand(ks[0], (B, N, D))
+        w1 = rand(ks[1], (D, 4 * D), 0.1)
+        b1 = rand(ks[2], (4 * D,), 0.1)
+        w2 = rand(ks[3], (4 * D, D), 0.1)
+        b2 = rand(ks[4], (D,), 0.1)
+        f1 = ref.feedforward(z, w1, b1, w2, b2)
+        f2 = K.feedforward(z, w1, b1, w2, b2)
+        np.testing.assert_allclose(f1, f2, rtol=2e-4, atol=2e-4)
+
+    def test_pointwise(self):
+        """FFN is pointwise: permuting tokens permutes outputs."""
+        ks = keys(5, 5)
+        B, N, D = 1, 16, 32
+        z = rand(ks[0], (B, N, D))
+        w1, b1 = rand(ks[1], (D, 4 * D), 0.1), rand(ks[2], (4 * D,), 0.1)
+        w2, b2 = rand(ks[3], (4 * D, D), 0.1), rand(ks[4], (D,), 0.1)
+        perm = jax.random.permutation(ks[0], N)
+        f = K.feedforward(z, w1, b1, w2, b2)
+        f_p = K.feedforward(z[:, perm], w1, b1, w2, b2)
+        np.testing.assert_allclose(f[:, perm], f_p, rtol=1e-4, atol=1e-5)
+
+
+class TestApplyOut:
+    @settings(**SETTINGS)
+    @given(shapes, st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, seed):
+        B, N, D = shape
+        ks = keys(seed, 5)
+        x = rand(ks[0], (B, N, D))
+        c = rand(ks[1], (B, D))
+        wa = rand(ks[2], (D, D), 0.1)
+        ba = rand(ks[3], (D,), 0.1)
+        f = rand(ks[4], (B, N, D))
+        o1 = ref.apply_out(x, c, wa, ba, f)
+        o2 = K.apply_out(x, c, wa, ba, f)
+        np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-4)
+
+    def test_adaln_zero_identity(self):
+        """Zero alpha projection (adaLN-Zero init) ⇒ output == input."""
+        ks = keys(6, 3)
+        B, N, D = 2, 8, 16
+        x = rand(ks[0], (B, N, D))
+        o = K.apply_out(x, rand(ks[1], (B, D)), jnp.zeros((D, D)),
+                        jnp.zeros((D,)), rand(ks[2], (B, N, D)))
+        np.testing.assert_allclose(o, x, atol=1e-7)
+
+
+class TestLazyBlend:
+    def test_endpoints(self):
+        """s=0 ⇒ fresh output; s=1 ⇒ cache (paper training forward)."""
+        ks = keys(7, 2)
+        f = rand(ks[0], (2, 8, 16))
+        cache = rand(ks[1], (2, 8, 16))
+        np.testing.assert_allclose(ref.lazy_blend(jnp.zeros(2), f, cache), f)
+        np.testing.assert_allclose(ref.lazy_blend(jnp.ones(2), f, cache), cache)
+
+    def test_convexity(self):
+        """Blend lies between the two endpoints element-wise in norm."""
+        ks = keys(8, 2)
+        f = rand(ks[0], (2, 8, 16))
+        cache = rand(ks[1], (2, 8, 16))
+        mid = ref.lazy_blend(jnp.full(2, 0.5), f, cache)
+        np.testing.assert_allclose(mid, 0.5 * f + 0.5 * cache, rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 5e-2)])
+def test_kernels_dtype_support(dtype, tol):
+    """Kernels run and roughly agree with ref in bf16 too (TPU-native dtype)."""
+    ks = keys(9, 8)
+    B, N, D, H = 2, 16, 32, 4
+    z = rand(ks[0], (B, N, D), dtype=dtype)
+    wqkv = rand(ks[1], (D, 3 * D), 0.1, dtype)
+    bqkv = rand(ks[2], (3 * D,), 0.1, dtype)
+    wo = rand(ks[3], (D, D), 0.1, dtype)
+    bo = rand(ks[4], (D,), 0.1, dtype)
+    a1 = ref.attention(z, wqkv, bqkv, wo, bo, H)
+    a2 = K.attention(z, wqkv, bqkv, wo, bo, H)
+    np.testing.assert_allclose(np.asarray(a1, np.float32), np.asarray(a2, np.float32),
+                               rtol=tol, atol=tol)

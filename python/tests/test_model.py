@@ -1,0 +1,134 @@
+"""L2 model tests: shapes, adaLN-Zero identity init, pallas/ref parity,
+patchify/unpatchify inverses, flat-θ round trip, lazy blending semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+from compile.configs import CONFIGS
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CONFIGS["nano"]
+
+
+@pytest.fixture(scope="module")
+def theta():
+    return model.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def gamma():
+    return model.init_gates(CFG)
+
+
+def batch(b=4, seed=1):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    z = jax.random.normal(k1, (b, CFG.channels, CFG.img_size, CFG.img_size))
+    t = jnp.linspace(0.0, 999.0, b)
+    y = jax.random.randint(k2, (b,), 0, CFG.num_classes + 1)
+    return z, t, y
+
+
+class TestShapes:
+    def test_theta_matches_spec(self, theta):
+        assert theta.shape == (configs.spec_size(configs.param_spec(CFG)),)
+
+    def test_gamma_matches_spec(self, gamma):
+        assert gamma.shape == (configs.spec_size(configs.gate_spec(CFG)),)
+
+    def test_forward_shapes(self, theta, gamma):
+        z, t, y = batch()
+        eps, caches, s = model.forward(theta, gamma, CFG, z, t, y)
+        assert eps.shape == z.shape
+        assert len(caches) == 2 * CFG.depth
+        assert caches[0].shape == (4, CFG.tokens, CFG.dim)
+        assert s.shape == (2 * CFG.depth, 4)
+
+
+class TestInit:
+    def test_adaln_zero_identity(self, theta, gamma):
+        """adaLN-Zero: at init the model output is exactly zero."""
+        z, t, y = batch()
+        eps, _, _ = model.forward(theta, gamma, CFG, z, t, y)
+        assert float(jnp.abs(eps).max()) == 0.0
+
+    def test_gate_init_low(self, theta, gamma):
+        """Gates start non-lazy: s = sigmoid(-2) ≈ 0.119."""
+        z, t, y = batch()
+        _, _, s = model.forward(theta, gamma, CFG, z, t, y)
+        np.testing.assert_allclose(np.asarray(s), 0.1192029, atol=1e-5)
+
+
+class TestPatchify:
+    def test_roundtrip(self):
+        k = jax.random.PRNGKey(3)
+        z = jax.random.normal(k, (2, CFG.channels, CFG.img_size, CFG.img_size))
+        tokens = model.patchify(z, CFG)
+        assert tokens.shape == (2, CFG.tokens, CFG.patch_dim)
+        back = model.unpatchify(tokens, CFG)
+        np.testing.assert_allclose(back, z, atol=1e-7)
+
+    def test_pos_embedding_distinct(self):
+        pe = model.pos_embedding(CFG)
+        assert pe.shape == (CFG.tokens, CFG.dim)
+        # distinct positions get distinct embeddings
+        diffs = jnp.abs(pe[None] - pe[:, None]).sum(-1)
+        off_diag = diffs + jnp.eye(CFG.tokens) * 1e9
+        assert float(off_diag.min()) > 1e-3
+
+
+class TestParity:
+    def test_pallas_equals_ref_forward(self, theta, gamma):
+        z, t, y = batch(b=3, seed=7)
+        # perturb theta so blocks are non-trivial (alpha non-zero)
+        theta2 = theta + 0.01 * jax.random.normal(jax.random.PRNGKey(9),
+                                                  theta.shape)
+        e1, c1, s1 = model.forward(theta2, gamma, CFG, z, t, y,
+                                   use_pallas=False)
+        e2, c2, s2 = model.forward(theta2, gamma, CFG, z, t, y,
+                                   use_pallas=True)
+        np.testing.assert_allclose(e1, e2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+        for a, b in zip(c1, c2):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+class TestFlat:
+    def test_unflatten_flatten_roundtrip(self, theta):
+        spec = configs.param_spec(CFG)
+        params = model.unflatten(theta, spec)
+        back = model.flatten_dict(params, spec)
+        np.testing.assert_array_equal(theta, back)
+
+    def test_offsets_contiguous(self):
+        rows = configs.spec_offsets(configs.param_spec(CFG))
+        off = 0
+        for r in rows:
+            assert r["offset"] == off
+            off += r["size"]
+
+
+class TestLazyBlend:
+    def test_cache_passthrough_when_lazy(self, theta):
+        """With gates forced fully lazy (huge bias) and caches given, the
+        blended module output equals the cache."""
+        spec = configs.gate_spec(CFG)
+        parts = []
+        for name, shape in spec:
+            if name.endswith(".b"):
+                parts.append(jnp.full((1,), 100.0))  # sigmoid -> 1
+            else:
+                parts.append(jnp.zeros(shape).reshape(-1))
+        gamma_lazy = jnp.concatenate(parts)
+        z, t, y = batch(b=2, seed=11)
+        caches = [jnp.ones((2, CFG.tokens, CFG.dim)) * (i + 1)
+                  for i in range(2 * CFG.depth)]
+        _, new_caches, s = model.forward(theta, gamma_lazy, CFG, z, t, y,
+                                         caches=caches)
+        assert float(s.min()) > 0.999
+        for nc, c in zip(new_caches, caches):
+            np.testing.assert_allclose(nc, c, atol=1e-5)

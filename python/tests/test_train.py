@@ -1,0 +1,140 @@
+"""Training-graph tests: pretrain loss decreases, lazy loss pushes gates
+toward laziness, θ stays frozen under the lazy step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, diffusion, model
+from compile.configs import CONFIGS, DIFFUSION
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CONFIGS["nano"]
+B = 8
+
+
+def data(seed):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    x0 = jnp.tanh(jax.random.normal(ks[0], (B, CFG.channels, CFG.img_size,
+                                            CFG.img_size)))
+    y = jax.random.randint(ks[1], (B,), 0, CFG.num_classes + 1)
+    t = jax.random.randint(ks[2], (B,), 0, DIFFUSION.timesteps)
+    noise = jax.random.normal(ks[3], (B, CFG.channels, CFG.img_size,
+                                      CFG.img_size))
+    return x0, y, t, noise
+
+
+class TestSchedule:
+    def test_alphas_bar_monotone(self):
+        ab = diffusion.alphas_bar(DIFFUSION)
+        a = np.asarray(ab)
+        assert a.shape == (1000,)
+        assert np.all(np.diff(a) < 0)
+        assert a[0] > 0.999 and a[-1] > 0.0
+
+    def test_q_sample_interpolates(self):
+        ab = diffusion.alphas_bar(DIFFUSION)
+        x0 = jnp.ones((1, 1, 2, 2))
+        noise = jnp.zeros((1, 1, 2, 2))
+        z = diffusion.q_sample(ab, x0, jnp.array([0]), noise)
+        np.testing.assert_allclose(z, np.sqrt(ab[0]) * np.ones((1, 1, 2, 2)),
+                                   rtol=1e-6)
+
+
+class TestPretrain:
+    @pytest.mark.slow
+    def test_loss_decreases(self):
+        step_fn = jax.jit(diffusion.make_pretrain_step(CFG, DIFFUSION))
+        theta = model.init_params(jax.random.PRNGKey(0), CFG)
+        P = theta.shape[0]
+        m = jnp.zeros(P)
+        v = jnp.zeros(P)
+        losses = []
+        for i in range(30):
+            x0, y, t, noise = data(i)
+            theta, m, v, loss = step_fn(theta, m, v, jnp.float32(i + 1), x0,
+                                        y, t, noise, jnp.float32(3e-3))
+            losses.append(float(loss))
+        first = np.mean(losses[:5])
+        last = np.mean(losses[-5:])
+        assert last < first, f"loss did not decrease: {first} -> {last}"
+
+
+class TestLazyLearning:
+    @pytest.fixture(scope="class")
+    def theta(self):
+        return model.init_params(jax.random.PRNGKey(0), CFG)
+
+    def test_theta_frozen(self, theta):
+        """The lazy step must not touch θ (it is not even an output)."""
+        step_fn = jax.jit(diffusion.make_train_step(CFG, DIFFUSION))
+        gamma = model.init_gates(CFG)
+        G = gamma.shape[0]
+        x0, y, t, noise = data(0)
+        t_prev = jnp.minimum(t + 50, DIFFUSION.timesteps - 1)
+        out = step_fn(theta, gamma, jnp.zeros(G), jnp.zeros(G),
+                      jnp.float32(1.0), x0, y, t, t_prev, noise,
+                      jnp.float32(1e-2), jnp.float32(1e-3), jnp.float32(1e-3))
+        assert len(out) == 9  # gamma,m,v,dl,ll,sa,sf,fa,ff
+
+    @pytest.mark.slow
+    def test_rho_pushes_laziness(self, theta):
+        """Larger ρ ⇒ mean gate value rises over training steps."""
+        step_fn = jax.jit(diffusion.make_train_step(CFG, DIFFUSION))
+
+        def run(rho, steps=25):
+            gamma = model.init_gates(CFG)
+            G = gamma.shape[0]
+            m = jnp.zeros(G)
+            v = jnp.zeros(G)
+            sa = sf = 0.0
+            for i in range(steps):
+                x0, y, t, noise = data(100 + i)
+                t_prev = jnp.minimum(t + 50, DIFFUSION.timesteps - 1)
+                gamma, m, v, dl, ll, sa, sf, fa, ff = step_fn(
+                    theta, gamma, m, v, jnp.float32(i + 1), x0, y, t, t_prev,
+                    noise, jnp.float32(5e-2), jnp.float32(rho),
+                    jnp.float32(rho))
+            return float(sa), float(sf)
+
+        sa_hi, sf_hi = run(1e-1)
+        sa_lo, sf_lo = run(0.0)
+        assert sa_hi > sa_lo + 0.05, f"attn laziness: {sa_lo} -> {sa_hi}"
+        assert sf_hi > sf_lo + 0.05, f"ffn laziness: {sf_lo} -> {sf_hi}"
+        # without penalty the diffusion loss dominates; gates should go
+        # toward MORE computation (s below the 0.119 init) or stay put
+        assert sa_lo <= 0.2
+
+
+class TestLazyLoss:
+    def test_formula(self):
+        svals = jnp.array([[0.2, 0.4], [0.6, 0.8]])  # [attn; ffn], B=2
+        ll = diffusion.lazy_loss(svals, jnp.float32(2.0), jnp.float32(1.0))
+        # attn rows: mean(1-s)=0.7 -> *2.0 = 1.4 ; ffn: mean=0.3 -> *1 = 0.3
+        np.testing.assert_allclose(float(ll), 1.7, rtol=1e-6)
+
+    def test_zero_when_fully_lazy(self):
+        svals = jnp.ones((4, 3))
+        ll = diffusion.lazy_loss(svals, jnp.float32(1.0), jnp.float32(1.0))
+        assert float(ll) == 0.0
+
+
+class TestAdamW:
+    def test_moves_toward_gradient(self):
+        p = jnp.array([1.0, -1.0])
+        g = jnp.array([1.0, -1.0])
+        p2, m, v = diffusion.adamw_update(p, g, jnp.zeros(2), jnp.zeros(2),
+                                          jnp.float32(1.0), 0.1)
+        assert float(p2[0]) < 1.0 and float(p2[1]) > -1.0
+        assert m.shape == (2,) and v.shape == (2,)
+
+    def test_bias_correction_first_step(self):
+        # at step 1 with zero state the update magnitude ≈ lr
+        p = jnp.zeros(1)
+        g = jnp.array([0.5])
+        p2, _, _ = diffusion.adamw_update(p, g, jnp.zeros(1), jnp.zeros(1),
+                                          jnp.float32(1.0), 0.1)
+        np.testing.assert_allclose(float(-p2[0]), 0.1, rtol=1e-3)

@@ -1,0 +1,34 @@
+//! DeepCache-flavoured heuristic baseline: cache every module on every
+//! k-th step uniformly (input- and layer-independent). The weakest
+//! baseline; included as the ablation floor for Table 7 discussion.
+
+/// Build a uniform schedule: skip all modules on steps where
+/// `step % period != 0` (step 0 always computes).
+pub fn uniform_schedule(steps: usize, slots: usize, period: usize) -> Vec<Vec<bool>> {
+    (0..steps)
+        .map(|s| {
+            let skip = s != 0 && s % period.max(1) != 0;
+            vec![skip; slots]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::learn2cache::schedule_ratio;
+
+    #[test]
+    fn period_two_skips_half() {
+        let s = uniform_schedule(10, 4, 2);
+        assert!(!s[0][0]);
+        assert!(s[1][0] && !s[2][0] && s[3][0]);
+        assert!((schedule_ratio(&s) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn period_one_never_skips() {
+        let s = uniform_schedule(10, 4, 1);
+        assert_eq!(schedule_ratio(&s), 0.0);
+    }
+}

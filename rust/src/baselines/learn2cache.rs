@@ -1,0 +1,134 @@
+//! Learn2Cache-analog baseline (Ma et al. 2024, "Learning-to-Cache").
+//!
+//! The defining property vs LazyDiT: ONE static, input-independent cache
+//! schedule per sampling-step count — a binary mask over (step, layer,
+//! module) — versus our per-input dynamic gates. We learn the mask the
+//! honest cheap way the router relaxation converges to: profile the cosine
+//! similarity of consecutive-step module outputs on training inputs and
+//! cache the most-similar (step, slot) pairs up to the compute budget.
+//! (The paper notes L2C needs a full ImageNet epoch; the profiling pass
+//! here is the toy-scale equivalent, see DESIGN.md §4.)
+
+/// Accumulated similarity profile: mean cosine of module output at
+/// (step_idx, slot) vs the previous step's output. Indexed [step][2L].
+#[derive(Debug, Clone)]
+pub struct SimProfile {
+    pub sums: Vec<Vec<f64>>,
+    pub counts: Vec<Vec<u64>>,
+}
+
+impl SimProfile {
+    pub fn new(steps: usize, slots: usize) -> SimProfile {
+        SimProfile {
+            sums: vec![vec![0.0; slots]; steps],
+            counts: vec![vec![0; slots]; steps],
+        }
+    }
+
+    pub fn record(&mut self, step_idx: usize, slot: usize, cos: f64) {
+        if step_idx < self.sums.len() && slot < self.sums[0].len() {
+            self.sums[step_idx][slot] += cos;
+            self.counts[step_idx][slot] += 1;
+        }
+    }
+
+    pub fn mean(&self, step_idx: usize, slot: usize) -> f64 {
+        let c = self.counts[step_idx][slot];
+        if c == 0 {
+            0.0
+        } else {
+            self.sums[step_idx][slot] / c as f64
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.sums.len()
+    }
+
+    pub fn slots(&self) -> usize {
+        self.sums.first().map(|s| s.len()).unwrap_or(0)
+    }
+}
+
+/// Build the static schedule: skip the `target_ratio` fraction of
+/// (step, slot) pairs with the highest profiled similarity. Step 0 is
+/// never skipped (no cache exists yet).
+pub fn build_schedule(profile: &SimProfile, target_ratio: f64) -> Vec<Vec<bool>> {
+    let steps = profile.steps();
+    let slots = profile.slots();
+    let mut sched = vec![vec![false; slots]; steps];
+    if steps <= 1 {
+        return sched;
+    }
+    // candidates exclude step 0
+    let mut cands: Vec<(f64, usize, usize)> = Vec::new();
+    for s in 1..steps {
+        for k in 0..slots {
+            cands.push((profile.mean(s, k), s, k));
+        }
+    }
+    cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let budget = ((steps * slots) as f64 * target_ratio).round() as usize;
+    for &(_, s, k) in cands.iter().take(budget.min(cands.len())) {
+        sched[s][k] = true;
+    }
+    sched
+}
+
+/// Achieved skip fraction of a schedule.
+pub fn schedule_ratio(sched: &[Vec<bool>]) -> f64 {
+    let total: usize = sched.iter().map(|r| r.len()).sum();
+    let skips: usize = sched
+        .iter()
+        .map(|r| r.iter().filter(|&&b| b).count())
+        .sum();
+    skips as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> SimProfile {
+        // 4 steps × 2 slots; similarity grows with step, slot 1 > slot 0
+        let mut p = SimProfile::new(4, 2);
+        for s in 0..4 {
+            for k in 0..2 {
+                p.record(s, k, 0.2 * s as f64 + 0.1 * k as f64);
+                p.record(s, k, 0.2 * s as f64 + 0.1 * k as f64);
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn mean_accumulates() {
+        let p = profile();
+        assert!((p.mean(3, 1) - 0.7).abs() < 1e-12);
+        assert_eq!(p.mean(0, 0), 0.0);
+    }
+
+    #[test]
+    fn schedule_hits_budget_and_prefers_similar() {
+        let p = profile();
+        let sched = build_schedule(&p, 0.5);
+        // budget = 4 of 8; step 0 excluded
+        assert!((schedule_ratio(&sched) - 0.5).abs() < 1e-9);
+        assert!(!sched[0][0] && !sched[0][1], "step 0 never skipped");
+        // the most similar pairs (steps 3 and 2) get picked first
+        assert!(sched[3][1] && sched[3][0]);
+    }
+
+    #[test]
+    fn zero_ratio_schedule_empty() {
+        let sched = build_schedule(&profile(), 0.0);
+        assert_eq!(schedule_ratio(&sched), 0.0);
+    }
+
+    #[test]
+    fn full_ratio_caps_at_non_first_steps() {
+        let sched = build_schedule(&profile(), 1.0);
+        // 6 of 8 possible (step 0 excluded)
+        assert!((schedule_ratio(&sched) - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Baselines the paper compares against:
+//! * DDIM step-reduction — the same engine with gates disabled and fewer
+//!   sampling steps (every "DDIM, # of Step s" row);
+//! * [`learn2cache`] — an input-INDEPENDENT static cache schedule learned
+//!   offline from profiled inter-step similarities (Ma et al. 2024 analog,
+//!   Table 7);
+//! * [`deepcache`] — a heuristic uniform skip-every-other-step schedule
+//!   (DeepCache-flavoured ablation).
+
+pub mod learn2cache;
+pub mod deepcache;
+
+pub use learn2cache::{build_schedule, SimProfile};

@@ -1,0 +1,83 @@
+//! Micro/e2e timing harness: warmup + measured iterations with
+//! mean/p50/p95/min reporting — the criterion stand-in for `cargo bench`.
+
+use crate::metrics::stats::{mean, quantile};
+use std::time::Instant;
+
+/// Iteration plan.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchSpec {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchSpec {
+    fn default() -> Self {
+        BenchSpec { warmup: 2, iters: 10 }
+    }
+}
+
+/// One benchmark's timing summary (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} mean {:>9.4}s  p50 {:>9.4}s  p95 {:>9.4}s  min {:>9.4}s  ({} iters)",
+            self.name, self.mean_s, self.p50_s, self.p95_s, self.min_s, self.iters
+        )
+    }
+}
+
+/// Time a closure `spec.iters` times after `spec.warmup` warmups.
+pub fn bench<F: FnMut()>(name: &str, spec: BenchSpec, mut f: F) -> BenchResult {
+    for _ in 0..spec.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(spec.iters);
+    for _ in 0..spec.iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: spec.iters,
+        mean_s: mean(&samples),
+        p50_s: quantile(&samples, 0.5),
+        p95_s: quantile(&samples, 0.95),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("spin", BenchSpec { warmup: 1, iters: 5 }, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s + 1e-12);
+        assert!(r.p50_s <= r.p95_s + 1e-12);
+    }
+
+    #[test]
+    fn summary_contains_name() {
+        let r = bench("xyz", BenchSpec { warmup: 0, iters: 1 }, || {});
+        assert!(r.summary().contains("xyz"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Benchmark substrate (criterion is not in the offline vendor set):
+//! timing harness + the shared quality-evaluation pipeline used by the
+//! paper-table regenerators.
+
+pub mod harness;
+pub mod quality;
+
+pub use harness::{bench, BenchResult, BenchSpec};
+pub use quality::{FeatureExtractor, MetricContext, QualityRow};

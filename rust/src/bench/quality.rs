@@ -1,0 +1,157 @@
+//! Shared quality-evaluation pipeline: real-reference features, the
+//! centroid classifier for the IS analog, and the FID/sFID/IS/P/R row
+//! computation every paper-table harness uses.
+
+use crate::coordinator::request::RequestResult;
+use crate::data::synth::SynthBlobs;
+use crate::metrics::fid::frechet_distance;
+use crate::metrics::inception::{inception_score, CentroidClassifier};
+use crate::metrics::prec_recall::precision_recall;
+use crate::runtime::engine_rt::{Executable, Runtime};
+use crate::runtime::manifest::ManifestConfig;
+use crate::runtime::value::HostValue;
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use anyhow::{Context, Result};
+use std::rc::Rc;
+
+/// Batched driver over the exported `feature_b{B}` graphs.
+pub struct FeatureExtractor {
+    exes: Vec<(usize, Rc<Executable>)>, // (bucket, exe), descending bucket
+    img_shape: Vec<usize>,
+    pub dim: usize,
+}
+
+impl FeatureExtractor {
+    pub fn new(rt: &Rc<Runtime>, cfg: &ManifestConfig, dim: usize)
+               -> Result<FeatureExtractor> {
+        let mut buckets = cfg.buckets.clone();
+        buckets.sort_unstable();
+        buckets.reverse();
+        let mut exes = Vec::new();
+        for b in buckets {
+            exes.push((b, rt.load(cfg, &format!("feature_b{b}"))?));
+        }
+        Ok(FeatureExtractor {
+            exes,
+            img_shape: vec![cfg.model.channels, cfg.model.img_size,
+                            cfg.model.img_size],
+            dim,
+        })
+    }
+
+    /// Extract (feat, sfeat) rows for images [B, C, S, S].
+    pub fn extract(&self, images: &Tensor) -> Result<(Vec<f32>, Vec<f32>)> {
+        let n = images.dim0();
+        let row = images.row_len();
+        let mut feats = Vec::with_capacity(n * self.dim);
+        let mut sfeats = Vec::with_capacity(n * self.dim);
+        let mut i = 0;
+        while i < n {
+            let remaining = n - i;
+            // largest bucket ≤ remaining, else smallest (pad last chunk)
+            let (b, exe) = self
+                .exes
+                .iter()
+                .find(|(b, _)| *b <= remaining)
+                .or_else(|| self.exes.last().map(|x| x))
+                .context("no feature buckets")?;
+            let take = remaining.min(*b);
+            let mut chunk =
+                Tensor::zeros(&[*b, self.img_shape[0], self.img_shape[1],
+                                self.img_shape[2]]);
+            for k in 0..take {
+                chunk.row_mut(k).copy_from_slice(
+                    &images.data()[(i + k) * row..(i + k + 1) * row]);
+            }
+            let mut out = exe.call(&[HostValue::F32(chunk)])?;
+            let sf = out.pop().context("sfeat")?.as_f32()?;
+            let f = out.pop().context("feat")?.as_f32()?;
+            for k in 0..take {
+                feats.extend_from_slice(f.row(k));
+                sfeats.extend_from_slice(sf.row(k));
+            }
+            i += take;
+        }
+        Ok((feats, sfeats))
+    }
+}
+
+/// Reference statistics over real SynthBlobs samples + the IS classifier.
+pub struct MetricContext {
+    pub real_feats: Vec<f32>,
+    pub real_sfeats: Vec<f32>,
+    pub n_real: usize,
+    pub clf: CentroidClassifier,
+    pub clf_accuracy: f64,
+    pub dim: usize,
+    pub threads: usize,
+}
+
+impl MetricContext {
+    /// Build from `n_real` freshly sampled real images.
+    pub fn build(extractor: &FeatureExtractor, img_size: usize, n_real: usize,
+                 seed: u64, threads: usize) -> Result<MetricContext> {
+        let ds = SynthBlobs::new(img_size);
+        let mut rng = Rng::new(seed ^ 0x4EA1);
+        let (imgs, labels) = ds.sample_batch(&mut rng, n_real);
+        let (feats, sfeats) = extractor.extract(&imgs)?;
+        let clf = CentroidClassifier::fit(&feats, &labels, extractor.dim,
+                                          ds.num_classes, 0.05);
+        let clf_accuracy = clf.accuracy(&feats, &labels, extractor.dim);
+        Ok(MetricContext {
+            real_feats: feats,
+            real_sfeats: sfeats,
+            n_real,
+            clf,
+            clf_accuracy,
+            dim: extractor.dim,
+            threads,
+        })
+    }
+
+    /// Full quality row for a generated image set.
+    pub fn evaluate(&self, extractor: &FeatureExtractor, images: &Tensor)
+                    -> Result<QualityRow> {
+        let n = images.dim0();
+        let (feats, sfeats) = extractor.extract(images)?;
+        let fid = frechet_distance(&self.real_feats, self.n_real, &feats, n,
+                                   self.dim);
+        let sfid = frechet_distance(&self.real_sfeats, self.n_real, &sfeats, n,
+                                    self.dim);
+        let is = inception_score(&self.clf, &feats, n, self.dim);
+        let (prec, rec) = precision_recall(&self.real_feats, self.n_real,
+                                           &feats, n, self.dim, 3,
+                                           self.threads);
+        Ok(QualityRow { fid, sfid, is, precision: prec, recall: rec })
+    }
+}
+
+/// One metrics row (the paper's five quality columns).
+#[derive(Debug, Clone)]
+pub struct QualityRow {
+    pub fid: f64,
+    pub sfid: f64,
+    pub is: f64,
+    pub precision: f64,
+    pub recall: f64,
+}
+
+/// Stack result images [B, C, S, S] from engine results.
+pub fn stack_images(results: &[RequestResult]) -> Result<Tensor> {
+    let n = results.len();
+    anyhow::ensure!(n > 0, "no results");
+    let shape = results[0].image.shape().to_vec();
+    let mut full = vec![n];
+    full.extend_from_slice(&shape);
+    let mut out = Tensor::zeros(&full);
+    for (i, r) in results.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(r.image.data());
+    }
+    Ok(out)
+}
+
+/// Round-robin labels for an eval trial.
+pub fn eval_labels(n: usize, num_classes: usize) -> Vec<usize> {
+    (0..n).map(|i| i % num_classes).collect()
+}

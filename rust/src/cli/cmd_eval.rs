@@ -1,0 +1,71 @@
+//! `lazydit eval` — full quality + compute row for one configuration.
+
+use crate::bench::quality::{eval_labels, stack_images};
+use crate::cli::common::{merge_specs, serve_config, EvalContext};
+use crate::config::LazyScope;
+use crate::coordinator::engine::{generate_batch, EngineOptions};
+use crate::util::argparse::{Args, OptSpec};
+use anyhow::Result;
+
+pub fn specs() -> Vec<OptSpec> {
+    merge_specs(&[
+        OptSpec { name: "steps", help: "DDIM sampling steps", default: Some("20"), is_flag: false },
+        OptSpec { name: "lazy", help: "lazy ratio % (0 = DDIM)", default: Some("0"), is_flag: false },
+        OptSpec { name: "n-eval", help: "images per trial", default: Some("128"), is_flag: false },
+        OptSpec { name: "n-real", help: "real reference samples", default: Some("256"), is_flag: false },
+        OptSpec { name: "seed", help: "rng seed", default: Some("0"), is_flag: false },
+        OptSpec { name: "policy", help: "skip policy", default: Some("mean"), is_flag: false },
+        OptSpec { name: "scope", help: "both|attn|ffn|none", default: Some("both"), is_flag: false },
+        OptSpec { name: "max-batch", help: "max lanes", default: Some("8"), is_flag: false },
+        OptSpec { name: "cfg-scale", help: "guidance", default: Some("1.5"), is_flag: false },
+        OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "queue-cap", help: "queue bound", default: Some("256"), is_flag: false },
+        OptSpec { name: "train-steps", help: "gate train steps if needed", default: Some("200"), is_flag: false },
+        OptSpec { name: "train-lr", help: "gate train lr", default: Some("5e-3"), is_flag: false },
+        OptSpec { name: "pretrain-steps", help: "base steps if needed", default: Some("1500"), is_flag: false },
+        OptSpec { name: "pretrain-lr", help: "base lr if needed", default: Some("2e-3"), is_flag: false },
+    ])
+}
+
+pub fn run(a: Args) -> Result<()> {
+    let n_real = a.get_usize("n-real", 256)?;
+    let ctx = EvalContext::open(&a, n_real)?;
+    let steps = a.get_usize("steps", 20)?;
+    let lazy_pct = a.get_usize("lazy", 0)?;
+    let n_eval = a.get_usize("n-eval", 128)?;
+    let serve = serve_config(&a, &ctx.cfg.model.name)?;
+    let cfg_scale = serve.cfg_scale;
+
+    let mut engine = if lazy_pct == 0 {
+        ctx.engine(serve, EngineOptions { disable_gates: true, ..Default::default() }, None)?
+    } else {
+        let gamma = ctx.ensure_gates(&a, steps, lazy_pct, LazyScope::Both)?;
+        ctx.engine(serve, EngineOptions::default(), Some(&gamma))?
+    };
+
+    let labels = eval_labels(n_eval, ctx.cfg.model.num_classes);
+    let t0 = std::time::Instant::now();
+    let results = generate_batch(&mut engine, &labels, steps,
+                                 a.get_u64("seed", 0)?, cfg_scale)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let images = stack_images(&results)?;
+    let q = ctx.metrics.evaluate(&ctx.extractor, &images)?;
+    let lazy: f64 = results.iter().map(|r| r.lazy_ratio).sum::<f64>()
+        / results.len() as f64;
+    let macs = crate::tmacs::run_macs(&ctx.cfg.model, steps, lazy, true,
+                                      lazy_pct > 0);
+
+    println!(
+        "\nconfig {} steps {steps} lazy {:.1}% ({} images, {wall:.1}s, \
+         {:.2} img/s)",
+        ctx.cfg.model.name, 100.0 * lazy, n_eval, n_eval as f64 / wall
+    );
+    println!(
+        "  FID-a {:.3}  sFID-a {:.3}  IS-a {:.3}  Prec {:.3}  Rec {:.3}  \
+         GMACs/img {:.3}",
+        q.fid, q.sfid, q.is, q.precision, q.recall,
+        crate::tmacs::as_gmacs(macs)
+    );
+    println!("{}", engine.layer_stats.render_fig4());
+    Ok(())
+}

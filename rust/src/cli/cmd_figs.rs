@@ -1,0 +1,243 @@
+//! Paper-figure regenerators (Figures 4, 5, 6).
+
+use crate::bench::quality::{eval_labels, stack_images};
+use crate::cli::common::{gate_tag, merge_specs, serve_config, EvalContext};
+use crate::config::{LazyScope, TrainConfig};
+use crate::coordinator::engine::{generate_batch, EngineOptions};
+use crate::io::table::TableWriter;
+use crate::model::checkpoint::{gates_path, Checkpoint};
+use crate::train::lazytrain::{lazy_train, LazyTrainOptions};
+use crate::util::argparse::{Args, OptSpec};
+use anyhow::Result;
+
+pub fn specs() -> Vec<OptSpec> {
+    merge_specs(&[
+        OptSpec { name: "steps", help: "sampling steps", default: Some("20"), is_flag: false },
+        OptSpec { name: "lazy", help: "lazy ratio % for fig4/fig6", default: Some("50"), is_flag: false },
+        OptSpec { name: "n-eval", help: "images per point", default: Some("64"), is_flag: false },
+        OptSpec { name: "n-real", help: "real reference samples", default: Some("256"), is_flag: false },
+        OptSpec { name: "seed", help: "rng seed", default: Some("0"), is_flag: false },
+        OptSpec { name: "part", help: "fig5: upper|lower", default: Some("upper"), is_flag: false },
+        OptSpec { name: "ratios", help: "fig5 ratio grid %", default: Some("10,20,30,40,50"), is_flag: false },
+        OptSpec { name: "fixed-ratio", help: "fig5 lower: fixed module ratio %", default: Some("30"), is_flag: false },
+        OptSpec { name: "max-batch", help: "max lanes", default: Some("16"), is_flag: false },
+        OptSpec { name: "cfg-scale", help: "guidance", default: Some("1.5"), is_flag: false },
+        OptSpec { name: "policy", help: "skip policy", default: Some("mean"), is_flag: false },
+        OptSpec { name: "scope", help: "serving lazy scope", default: Some("both"), is_flag: false },
+        OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "queue-cap", help: "queue bound", default: Some("256"), is_flag: false },
+        OptSpec { name: "train-steps", help: "gate train steps", default: Some("200"), is_flag: false },
+        OptSpec { name: "train-lr", help: "gate train lr", default: Some("5e-3"), is_flag: false },
+        OptSpec { name: "pretrain-steps", help: "base steps if needed", default: Some("1500"), is_flag: false },
+        OptSpec { name: "pretrain-lr", help: "base lr if needed", default: Some("2e-3"), is_flag: false },
+        OptSpec { name: "csv", help: "also write CSV", default: None, is_flag: false },
+    ])
+}
+
+/// Figure 4: per-layer laziness distribution over a 20-step run.
+pub fn run_fig4(a: Args) -> Result<()> {
+    let ctx = EvalContext::open(&a, 64)?;
+    let steps = a.get_usize("steps", 20)?;
+    let lazy_pct = a.get_usize("lazy", 50)?;
+    let gamma = ctx.ensure_gates(&a, steps, lazy_pct, LazyScope::Both)?;
+    let serve = serve_config(&a, &ctx.cfg.model.name)?;
+    let mut engine = ctx.engine(serve, EngineOptions::default(), Some(&gamma))?;
+
+    // paper: 8 images over 20 steps on DiT-XL
+    let labels = eval_labels(8, ctx.cfg.model.num_classes);
+    let cfg_scale = engine.serve.cfg_scale;
+    let _ = generate_batch(&mut engine, &labels, steps, a.get_u64("seed", 0)?,
+                           cfg_scale)?;
+    println!("{}", engine.layer_stats.render_fig4());
+    println!("overall lazy ratio: {:.1}% (attn {:.1}%, ffn {:.1}%)",
+             100.0 * engine.layer_stats.overall_ratio(),
+             100.0 * engine.layer_stats.attn_overall(),
+             100.0 * engine.layer_stats.ffn_overall());
+    // no-layer-fully-bypassed check (paper's Fig. 4 observation)
+    let depth = engine.layer_stats.depth();
+    let fully = (0..depth).any(|l| {
+        engine.layer_stats.attn_ratio(l) >= 1.0
+            || engine.layer_stats.ffn_ratio(l) >= 1.0
+    });
+    println!("any layer 100% lazy (would justify layer removal): {fully}");
+
+    if let Some(csv) = a.get("csv") {
+        let mut t = TableWriter::new("fig4", &["layer", "attn_lazy", "ffn_lazy"]);
+        for l in 0..depth {
+            t.row(vec![
+                l.to_string(),
+                format!("{:.4}", engine.layer_stats.attn_ratio(l)),
+                format!("{:.4}", engine.layer_stats.ffn_ratio(l)),
+            ]);
+        }
+        t.write_csv(std::path::Path::new(&csv))?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+/// Figure 5: penalty/laziness ablations.
+/// upper — individual laziness: train attn-only / ffn-only gates across the
+/// ratio grid and measure quality (max applicable laziness per module).
+/// lower — lazy strategy: fix one module's target, sweep the other.
+pub fn run_fig5(a: Args) -> Result<()> {
+    let n_real = a.get_usize("n-real", 256)?;
+    let ctx = EvalContext::open(&a, n_real)?;
+    let steps = a.get_usize("steps", 20)?;
+    let ratios = a.get_usize_list("ratios", &[10, 20, 30, 40, 50])?;
+    let part = a.get_str("part", "upper");
+    let n_eval = a.get_usize("n-eval", 64)?;
+    let seed = a.get_u64("seed", 0)?;
+
+    let mut t = TableWriter::new(
+        &format!("Figure 5 ({part}) — {} @ {steps} steps", ctx.cfg.model.name),
+        &["setting", "target", "achieved attn", "achieved ffn", "FID-a ↓",
+          "IS-a ↑"],
+    );
+
+    let settings: Vec<(String, LazyScope, Option<usize>, usize)> = match part.as_str() {
+        "upper" => {
+            let mut v = Vec::new();
+            for &r in &ratios {
+                v.push((format!("MHSA-only {r}%"), LazyScope::AttnOnly, None, r));
+                v.push((format!("FFN-only {r}%"), LazyScope::FfnOnly, None, r));
+            }
+            v
+        }
+        "lower" => {
+            let fixed = a.get_usize("fixed-ratio", 30)?;
+            let mut v = Vec::new();
+            for &r in &ratios {
+                v.push((format!("attn={fixed}% ffn={r}%"), LazyScope::Both,
+                        Some(fixed), r));
+            }
+            for &r in &ratios {
+                v.push((format!("ffn={fixed}% attn={r}%"), LazyScope::Both,
+                        Some(fixed + 1000), r)); // 1000+ marks "fixed is ffn"
+            }
+            v
+        }
+        other => anyhow::bail!("unknown --part '{other}'"),
+    };
+
+    for (label, scope, fixed, ratio) in settings {
+        let (ta, tf, tag) = match (part.as_str(), fixed) {
+            ("upper", _) => {
+                let r = Some(ratio as f64 / 100.0);
+                match scope {
+                    LazyScope::AttnOnly => (r, None, gate_tag(steps, ratio, scope)),
+                    LazyScope::FfnOnly => (None, r, gate_tag(steps, ratio, scope)),
+                    _ => unreachable!(),
+                }
+            }
+            (_, Some(f)) if f >= 1000 => (
+                Some(ratio as f64 / 100.0),
+                Some((f - 1000) as f64 / 100.0),
+                format!("s{steps}-a{ratio}-f{}", f - 1000),
+            ),
+            (_, Some(f)) => (
+                Some(f as f64 / 100.0),
+                Some(ratio as f64 / 100.0),
+                format!("s{steps}-a{f}-f{ratio}"),
+            ),
+            _ => unreachable!(),
+        };
+        let gamma = ensure_gates_custom(&ctx, &a, steps, ta, tf, scope, &tag)?;
+        let serve = serve_config(&a, &ctx.cfg.model.name)?;
+        let mut engine = ctx.engine(serve, EngineOptions::default(), Some(&gamma))?;
+        let labels = eval_labels(n_eval, ctx.cfg.model.num_classes);
+        let cfg_scale = engine.serve.cfg_scale;
+        let results = generate_batch(&mut engine, &labels, steps, seed,
+                                     cfg_scale)?;
+        let images = stack_images(&results)?;
+        let q = ctx.metrics.evaluate(&ctx.extractor, &images)?;
+        t.row(vec![
+            label,
+            format!("{ratio}%"),
+            format!("{:.1}%", 100.0 * engine.layer_stats.attn_overall()),
+            format!("{:.1}%", 100.0 * engine.layer_stats.ffn_overall()),
+            format!("{:.3}", q.fid),
+            format!("{:.3}", q.is),
+        ]);
+    }
+    t.print();
+    if let Some(csv) = a.get("csv") {
+        t.write_csv(std::path::Path::new(&csv))?;
+    }
+    Ok(())
+}
+
+/// Figure 6: with jointly-trained gates, skip only MHSA or only FFN at
+/// inference (serving-scope mask).
+pub fn run_fig6(a: Args) -> Result<()> {
+    let n_real = a.get_usize("n-real", 256)?;
+    let ctx = EvalContext::open(&a, n_real)?;
+    let steps = a.get_usize("steps", 20)?;
+    let lazy_pct = a.get_usize("lazy", 50)?;
+    let n_eval = a.get_usize("n-eval", 64)?;
+    let seed = a.get_u64("seed", 0)?;
+    let gamma = ctx.ensure_gates(&a, steps, lazy_pct, LazyScope::Both)?;
+
+    let mut t = TableWriter::new(
+        &format!("Figure 6 — skip-one-module with joint gates, {} @ {steps} \
+                  steps, target {lazy_pct}%", ctx.cfg.model.name),
+        &["inference scope", "achieved lazy", "FID-a ↓", "IS-a ↑", "Prec ↑",
+          "Rec ↑"],
+    );
+    for (name, scope) in [("both", LazyScope::Both),
+                          ("MHSA only", LazyScope::AttnOnly),
+                          ("FFN only", LazyScope::FfnOnly),
+                          ("none (DDIM path)", LazyScope::None)] {
+        let mut serve = serve_config(&a, &ctx.cfg.model.name)?;
+        serve.scope = scope;
+        let mut engine = ctx.engine(serve, EngineOptions::default(), Some(&gamma))?;
+        let labels = eval_labels(n_eval, ctx.cfg.model.num_classes);
+        let cfg_scale = engine.serve.cfg_scale;
+        let results = generate_batch(&mut engine, &labels, steps, seed,
+                                     cfg_scale)?;
+        let images = stack_images(&results)?;
+        let q = ctx.metrics.evaluate(&ctx.extractor, &images)?;
+        let lazy: f64 = results.iter().map(|r| r.lazy_ratio).sum::<f64>()
+            / results.len() as f64;
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}%", 100.0 * lazy),
+            format!("{:.3}", q.fid),
+            format!("{:.3}", q.is),
+            format!("{:.3}", q.precision),
+            format!("{:.3}", q.recall),
+        ]);
+    }
+    t.print();
+    if let Some(csv) = a.get("csv") {
+        t.write_csv(std::path::Path::new(&csv))?;
+    }
+    Ok(())
+}
+
+/// Train gates with custom per-module targets (fig5 support).
+fn ensure_gates_custom(ctx: &EvalContext, a: &Args, steps: usize,
+                       target_attn: Option<f64>, target_ffn: Option<f64>,
+                       scope: LazyScope, tag: &str) -> Result<Vec<f32>> {
+    let path = gates_path(&ctx.ckpt, &ctx.cfg.model.name, tag);
+    if let Ok(ck) = Checkpoint::load(&path) {
+        return Ok(ck.vec("gamma")?.clone());
+    }
+    let tc = TrainConfig {
+        config_name: ctx.cfg.model.name.clone(),
+        steps: a.get_usize("train-steps", 200)?,
+        lr: a.get_f32("train-lr", 5e-3)?,
+        ..Default::default()
+    };
+    let opts = LazyTrainOptions {
+        serve_steps: steps,
+        target_attn,
+        target_ffn,
+        scope,
+        tag: tag.to_string(),
+        adjust_every: 10,
+    };
+    lazy_train(&ctx.rt, &ctx.cfg, &tc, &opts, &ctx.theta, &ctx.ckpt)?;
+    let ck = Checkpoint::load(&path)?;
+    Ok(ck.vec("gamma")?.clone())
+}

@@ -1,0 +1,77 @@
+//! `lazydit generate` — sample images with DDIM or the lazy engine and
+//! optionally write a PNG grid (regenerates Figures 1/3/7 visuals).
+
+use crate::bench::quality::stack_images;
+use crate::cli::common::{merge_specs, serve_config, EvalContext};
+use crate::config::LazyScope;
+use crate::coordinator::engine::{generate_batch, EngineOptions};
+use crate::util::argparse::{Args, OptSpec};
+use anyhow::Result;
+use std::path::PathBuf;
+
+pub fn specs() -> Vec<OptSpec> {
+    merge_specs(&[
+        OptSpec { name: "steps", help: "DDIM sampling steps", default: Some("20"), is_flag: false },
+        OptSpec { name: "lazy", help: "target lazy ratio % (0 = DDIM baseline)", default: Some("0"), is_flag: false },
+        OptSpec { name: "count", help: "images to generate", default: Some("16"), is_flag: false },
+        OptSpec { name: "seed", help: "rng seed", default: Some("0"), is_flag: false },
+        OptSpec { name: "out", help: "output PNG grid path", default: None, is_flag: false },
+        OptSpec { name: "cfg-scale", help: "guidance scale", default: Some("1.5"), is_flag: false },
+        OptSpec { name: "policy", help: "skip policy", default: Some("mean"), is_flag: false },
+        OptSpec { name: "scope", help: "both|attn|ffn|none", default: Some("both"), is_flag: false },
+        OptSpec { name: "max-batch", help: "max lanes per round", default: Some("8"), is_flag: false },
+        OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "queue-cap", help: "admission queue bound", default: Some("256"), is_flag: false },
+        OptSpec { name: "train-steps", help: "gate training steps if needed", default: Some("200"), is_flag: false },
+        OptSpec { name: "train-lr", help: "gate training lr", default: Some("5e-3"), is_flag: false },
+        OptSpec { name: "pretrain-steps", help: "base steps if needed", default: Some("1500"), is_flag: false },
+        OptSpec { name: "pretrain-lr", help: "base lr if needed", default: Some("2e-3"), is_flag: false },
+    ])
+}
+
+pub fn run(a: Args) -> Result<()> {
+    let ctx = EvalContext::open(&a, 64)?;
+    let steps = a.get_usize("steps", 20)?;
+    let lazy_pct = a.get_usize("lazy", 0)?;
+    let count = a.get_usize("count", 16)?;
+    let seed = a.get_u64("seed", 0)?;
+    let serve = serve_config(&a, &ctx.cfg.model.name)?;
+
+    let mut engine = if lazy_pct == 0 {
+        ctx.engine(serve, EngineOptions { disable_gates: true, ..Default::default() }, None)?
+    } else {
+        let gamma = ctx.ensure_gates(&a, steps, lazy_pct, LazyScope::Both)?;
+        ctx.engine(serve, EngineOptions::default(), Some(&gamma))?
+    };
+
+    let labels: Vec<usize> = (0..count).map(|i| i % ctx.cfg.model.num_classes).collect();
+    let t0 = std::time::Instant::now();
+    let cfg_scale = engine.serve.cfg_scale;
+    let results = generate_batch(&mut engine, &labels, steps, seed,
+                                 cfg_scale)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let lazy: f64 = results.iter().map(|r| r.lazy_ratio).sum::<f64>()
+        / results.len() as f64;
+    println!(
+        "generated {count} images in {wall:.2}s ({:.2} img/s); steps {steps}, \
+         achieved lazy ratio {:.1}%",
+        count as f64 / wall,
+        100.0 * lazy
+    );
+
+    let images = stack_images(&results)?;
+    let q = ctx.metrics.evaluate(&ctx.extractor, &images)?;
+    println!(
+        "quality: FID-a {:.3}  sFID-a {:.3}  IS-a {:.3}  Prec {:.3}  Rec {:.3}",
+        q.fid, q.sfid, q.is, q.precision, q.recall
+    );
+
+    if let Some(out) = a.get("out") {
+        let path = PathBuf::from(out);
+        let cols = (count as f64).sqrt().ceil() as usize;
+        crate::io::png::write_grid(&path, &images, cols.max(1), 16)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! `lazydit info` — show the artifact inventory and parameter counts.
+
+use crate::cli::common::{artifacts_dir, merge_specs};
+use crate::runtime::manifest::Manifest;
+use crate::util::argparse::{Args, OptSpec};
+use anyhow::Result;
+
+pub fn specs() -> Vec<OptSpec> {
+    merge_specs(&[])
+}
+
+pub fn run(a: Args) -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir(&a))?;
+    println!("artifacts: {}", manifest.root.display());
+    println!("feature dim: {}", manifest.feature_dim);
+    for (name, cfg) in &manifest.configs {
+        let m = &cfg.model;
+        println!(
+            "\nconfig {name} (analog of {}):\n  img {s}x{s}x{c} patch {p} → {n} \
+             tokens; D={d} L={l} heads={h}\n  θ: {tp} params  γ: {gp} gate params\
+             \n  buckets {b:?}  train batch {tb}\n  graphs: {gc}",
+            m.paper_analog,
+            s = m.img_size,
+            c = m.channels,
+            p = m.patch,
+            n = m.tokens(),
+            d = m.dim,
+            l = m.depth,
+            h = m.heads,
+            tp = cfg.theta_len(),
+            gp = cfg.gamma_len(),
+            b = cfg.buckets,
+            tb = cfg.train_batch,
+            gc = cfg.graphs.len(),
+        );
+        let macs = crate::tmacs::step_macs(m, true);
+        println!(
+            "  compute: {:.3} GMACs per denoise step (batch 1, gates on)",
+            crate::tmacs::as_gmacs(macs)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,141 @@
+//! `lazydit profile` — engine hot-path micro profile: times each stage of
+//! one denoise step (embed / modgate / module / apply / final / host) to
+//! direct the L3 optimization pass (DESIGN.md §9).
+
+use crate::bench::harness::{bench, BenchSpec};
+use crate::cli::common::{merge_specs, serve_config, EvalContext};
+use crate::config::LazyScope;
+use crate::coordinator::engine::{generate_batch, EngineOptions};
+use crate::util::argparse::{Args, OptSpec};
+use anyhow::Result;
+
+pub fn specs() -> Vec<OptSpec> {
+    merge_specs(&[
+        OptSpec { name: "steps", help: "sampling steps", default: Some("20"), is_flag: false },
+        OptSpec { name: "lazy", help: "lazy ratio % (0 = DDIM)", default: Some("0"), is_flag: false },
+        OptSpec { name: "count", help: "images per iteration", default: Some("4"), is_flag: false },
+        OptSpec { name: "iters", help: "bench iterations", default: Some("5"), is_flag: false },
+        OptSpec { name: "max-batch", help: "max lanes", default: Some("8"), is_flag: false },
+        OptSpec { name: "cfg-scale", help: "guidance", default: Some("1.5"), is_flag: false },
+        OptSpec { name: "policy", help: "skip policy", default: Some("mean"), is_flag: false },
+        OptSpec { name: "scope", help: "lazy scope", default: Some("both"), is_flag: false },
+        OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "queue-cap", help: "queue bound", default: Some("256"), is_flag: false },
+        OptSpec { name: "train-steps", help: "gate train steps if needed", default: Some("200"), is_flag: false },
+        OptSpec { name: "train-lr", help: "gate train lr", default: Some("5e-3"), is_flag: false },
+        OptSpec { name: "pretrain-steps", help: "base steps if needed", default: Some("1500"), is_flag: false },
+        OptSpec { name: "pretrain-lr", help: "base lr if needed", default: Some("2e-3"), is_flag: false },
+    ])
+}
+
+pub fn run(a: Args) -> Result<()> {
+    let ctx = EvalContext::open(&a, 32)?;
+    let steps = a.get_usize("steps", 20)?;
+    let lazy_pct = a.get_usize("lazy", 0)?;
+    let count = a.get_usize("count", 4)?;
+    let iters = a.get_usize("iters", 5)?;
+    let serve = serve_config(&a, &ctx.cfg.model.name)?;
+
+    let gamma = if lazy_pct > 0 {
+        Some(ctx.ensure_gates(&a, steps, lazy_pct, LazyScope::Both)?)
+    } else {
+        None
+    };
+
+    let spec = BenchSpec { warmup: 1, iters };
+    let labels: Vec<usize> = (0..count).map(|i| i % 10).collect();
+
+    // end-to-end per-image latency
+    let mut engine = match &gamma {
+        Some(g) => ctx.engine(serve.clone(), EngineOptions::default(), Some(g))?,
+        None => ctx.engine(serve.clone(),
+                           EngineOptions { disable_gates: true, ..Default::default() },
+                           None)?,
+    };
+    let cfg_scale = engine.serve.cfg_scale;
+    let mut seed = 0u64;
+    let r = bench(
+        &format!("e2e generate {count} img @ {steps} steps (lazy {lazy_pct}%)"),
+        spec,
+        || {
+            seed += 1;
+            generate_batch(&mut engine, &labels, steps, seed, cfg_scale)
+                .expect("generate");
+        },
+    );
+    println!("{}", r.summary());
+    let per_img = r.mean_s / count as f64;
+    let per_step = per_img / steps as f64;
+    println!("  per image: {per_img:.4}s   per denoise step (CFG incl.): \
+              {per_step:.5}s");
+    println!("  engine lazy ratio: {:.1}%",
+             100.0 * engine.layer_stats.overall_ratio());
+
+    // executable-level breakdown via direct runner calls
+    let m = &ctx.cfg.model;
+    let b = ctx.cfg.bucket_for(2).unwrap_or(1);
+    let runner = &mut engine.runner;
+    runner.warmup(b)?;
+    let z = crate::tensor::Tensor::zeros(&[b, m.channels, m.img_size, m.img_size]);
+    let t = vec![500.0f32; b];
+    let y = vec![0i32; b];
+    let live = vec![true; b];
+    let dec = crate::model::runner::DecisionCfg {
+        policy: crate::config::SkipPolicy::Never,
+        scope: crate::config::LazyScope::Both,
+        threshold: 0.5,
+    };
+    let mut caches = crate::model::runner::BatchCaches::empty(
+        m.depth, b, m.tokens(), m.dim);
+    let r2 = bench("one full denoise step (no skips)", spec, || {
+        runner.step(b, &z, &t, &y, &live, &mut caches, dec).expect("step");
+    });
+    println!("{}", r2.summary());
+    let dec_all_skip = crate::model::runner::DecisionCfg {
+        policy: crate::config::SkipPolicy::Any,
+        scope: crate::config::LazyScope::Both,
+        threshold: -1.0, // s > -1 always true ⇒ skip everything possible
+    };
+    let r3 = bench("one full denoise step (all modules skipped)", spec, || {
+        runner
+            .step(b, &z, &t, &y, &live, &mut caches, dec_all_skip)
+            .expect("step");
+    });
+    println!("{}", r3.summary());
+    println!(
+        "  module-body share of a step: {:.1}%  (skip-all speedup {:.2}x)",
+        100.0 * (1.0 - r3.mean_s / r2.mean_s),
+        r2.mean_s / r3.mean_s
+    );
+
+    // §Perf before/after: per-call host→literal weight conversion (the
+    // pre-optimization hot path) vs pre-built weight literals (call_lit).
+    let spec_fast = BenchSpec { warmup: 5, iters: 200 };
+    let exe = ctx.rt.load(&ctx.cfg, &format!("ffn_b{b}"))?;
+    let host_args: Vec<crate::runtime::value::HostValue> = {
+        let w = &runner.weights;
+        let mut v = vec![crate::runtime::value::HostValue::F32(
+            crate::tensor::Tensor::zeros(&[b, m.tokens(), m.dim]))];
+        v.extend(w.ffn[0].iter().cloned());
+        v
+    };
+    let r_before = bench("ffn call (convert weights per call) [BEFORE]",
+                         spec_fast, || {
+        exe.call(&host_args).expect("call");
+    });
+    let lit_args: Vec<xla::Literal> = host_args
+        .iter()
+        .map(|h| h.to_literal().unwrap())
+        .collect();
+    let refs: Vec<&xla::Literal> = lit_args.iter().collect();
+    let r_after = bench("ffn call_lit (weights pre-converted) [AFTER]",
+                        spec_fast, || {
+        exe.call_lit(&refs).expect("call_lit");
+    });
+    println!("{}", r_before.summary());
+    println!("{}", r_after.summary());
+    println!("  per-call conversion overhead removed: {:.1}%  ({:.2}x)",
+             100.0 * (1.0 - r_after.mean_s / r_before.mean_s),
+             r_before.mean_s / r_after.mean_s);
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! `lazydit serve` — the TCP JSON-lines serving front-end.
+
+use crate::cli::common::{merge_specs, serve_config, EvalContext};
+use crate::config::LazyScope;
+use crate::coordinator::engine::EngineOptions;
+use crate::coordinator::server::serve;
+use crate::util::argparse::{Args, OptSpec};
+use anyhow::Result;
+
+pub fn specs() -> Vec<OptSpec> {
+    merge_specs(&[
+        OptSpec { name: "addr", help: "bind address", default: Some("127.0.0.1:8471"), is_flag: false },
+        OptSpec { name: "lazy", help: "lazy ratio % (0 = DDIM)", default: Some("50"), is_flag: false },
+        OptSpec { name: "steps", help: "gate grid (training) steps", default: Some("20"), is_flag: false },
+        OptSpec { name: "max-requests", help: "stop after N (0 = forever)", default: Some("0"), is_flag: false },
+        OptSpec { name: "policy", help: "skip policy", default: Some("mean"), is_flag: false },
+        OptSpec { name: "scope", help: "both|attn|ffn|none", default: Some("both"), is_flag: false },
+        OptSpec { name: "max-batch", help: "max lanes per round", default: Some("8"), is_flag: false },
+        OptSpec { name: "queue-cap", help: "admission bound", default: Some("256"), is_flag: false },
+        OptSpec { name: "cfg-scale", help: "guidance scale", default: Some("1.5"), is_flag: false },
+        OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "train-steps", help: "gate training steps if needed", default: Some("200"), is_flag: false },
+        OptSpec { name: "train-lr", help: "gate training lr", default: Some("5e-3"), is_flag: false },
+        OptSpec { name: "pretrain-steps", help: "base steps if needed", default: Some("1500"), is_flag: false },
+        OptSpec { name: "pretrain-lr", help: "base lr if needed", default: Some("2e-3"), is_flag: false },
+    ])
+}
+
+pub fn run(a: Args) -> Result<()> {
+    let ctx = EvalContext::open(&a, 32)?;
+    let serve_cfg = serve_config(&a, &ctx.cfg.model.name)?;
+    let lazy_pct = a.get_usize("lazy", 50)?;
+    let steps = a.get_usize("steps", 20)?;
+    let engine = if lazy_pct == 0 {
+        ctx.engine(serve_cfg,
+                   EngineOptions { disable_gates: true, ..Default::default() },
+                   None)?
+    } else {
+        let gamma = ctx.ensure_gates(&a, steps, lazy_pct, LazyScope::Both)?;
+        ctx.engine(serve_cfg, EngineOptions::default(), Some(&gamma))?
+    };
+    let addr = a.get_str("addr", "127.0.0.1:8471");
+    let max_requests = a.get_usize("max-requests", 0)?;
+    println!("serving on {addr} — send JSON lines like \
+              {{\"label\":3,\"steps\":20,\"seed\":1}}");
+    serve(engine, &addr, max_requests)
+}

@@ -1,0 +1,449 @@
+//! Paper-table regenerators (Tables 1, 2, 3, 5, 6, 7). Shared harness:
+//! each row = one (method, steps, lazy-ratio) setting evaluated on a
+//! freshly generated image set with the quality metrics + the analytic
+//! TMACs model + measured wall-clock.
+
+use crate::baselines::learn2cache::{build_schedule, schedule_ratio, SimProfile};
+use crate::bench::quality::{eval_labels, stack_images, QualityRow};
+use crate::cli::common::{merge_specs, serve_config, EvalContext};
+use crate::config::LazyScope;
+use crate::coordinator::engine::{generate_batch, EngineOptions};
+use crate::io::table::TableWriter;
+use crate::util::argparse::{Args, OptSpec};
+use anyhow::Result;
+
+pub fn specs() -> Vec<OptSpec> {
+    merge_specs(&[
+        OptSpec { name: "n-eval", help: "images per trial", default: Some("96"), is_flag: false },
+        OptSpec { name: "n-real", help: "real reference samples", default: Some("256"), is_flag: false },
+        OptSpec { name: "seed", help: "rng seed", default: Some("0"), is_flag: false },
+        OptSpec { name: "max-batch", help: "max lanes per round", default: Some("16"), is_flag: false },
+        OptSpec { name: "cfg-scale", help: "guidance", default: Some("1.5"), is_flag: false },
+        OptSpec { name: "policy", help: "skip policy", default: Some("mean"), is_flag: false },
+        OptSpec { name: "scope", help: "lazy scope", default: Some("both"), is_flag: false },
+        OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "queue-cap", help: "queue bound", default: Some("256"), is_flag: false },
+        OptSpec { name: "train-steps", help: "gate train steps if needed", default: Some("200"), is_flag: false },
+        OptSpec { name: "train-lr", help: "gate train lr", default: Some("5e-3"), is_flag: false },
+        OptSpec { name: "pretrain-steps", help: "base steps if needed", default: Some("1500"), is_flag: false },
+        OptSpec { name: "pretrain-lr", help: "base lr if needed", default: Some("2e-3"), is_flag: false },
+        OptSpec { name: "csv", help: "also write CSV to this path", default: None, is_flag: false },
+        OptSpec { name: "quick", help: "reduced row set", default: None, is_flag: true },
+    ])
+}
+
+/// One table row's sampling method.
+#[derive(Debug, Clone, Copy)]
+pub enum Method {
+    Ddim { steps: usize },
+    Ours { steps: usize, ratio_pct: usize },
+    L2c { steps: usize, ratio_pct: usize },
+}
+
+impl Method {
+    fn label(&self) -> String {
+        match self {
+            Method::Ddim { .. } => "DDIM".into(),
+            Method::Ours { .. } => "Ours".into(),
+            Method::L2c { .. } => "Learn2Cache-a".into(),
+        }
+    }
+
+    fn steps(&self) -> usize {
+        match *self {
+            Method::Ddim { steps } => steps,
+            Method::Ours { steps, .. } => steps,
+            Method::L2c { steps, .. } => steps,
+        }
+    }
+
+    fn ratio_label(&self) -> String {
+        match *self {
+            Method::Ddim { .. } => "/".into(),
+            Method::Ours { ratio_pct, .. } | Method::L2c { ratio_pct, .. } => {
+                format!("{ratio_pct}%")
+            }
+        }
+    }
+}
+
+/// A computed row.
+pub struct RowResult {
+    pub method: Method,
+    pub quality: QualityRow,
+    pub achieved_lazy: f64,
+    pub gmacs_per_img: f64,
+    pub wall_s: f64,
+    pub latency_per_img_s: f64,
+}
+
+/// Evaluate one setting end-to-end.
+pub fn run_setting(ctx: &EvalContext, a: &Args, method: Method, n_eval: usize)
+                   -> Result<RowResult> {
+    let serve = serve_config(a, &ctx.cfg.model.name)?;
+    let steps = method.steps();
+    let seed = a.get_u64("seed", 0)?;
+    let cfg_scale = serve.cfg_scale;
+
+    let mut engine = match method {
+        Method::Ddim { .. } => ctx.engine(
+            serve, EngineOptions { disable_gates: true, ..Default::default() },
+            None)?,
+        Method::Ours { ratio_pct, .. } => {
+            let gamma = ctx.ensure_gates(a, steps, ratio_pct, LazyScope::Both)?;
+            // serve-time threshold calibration: batch-aggregated decisions
+            // overshoot the per-sample train-time fraction, so bisect the
+            // gate threshold until the achieved lazy ratio matches the
+            // row's target (coordinator feature; gates stay fixed).
+            let mut serve = serve;
+            serve.threshold = calibrate_threshold(
+                ctx, &serve, &gamma, steps, ratio_pct as f64 / 100.0, seed)?;
+            ctx.engine(serve, EngineOptions::default(), Some(&gamma))?
+        }
+        Method::L2c { ratio_pct, .. } => {
+            // offline profiling pass (input-independent schedule)
+            let mut prof_engine = ctx.engine(
+                serve.clone(),
+                EngineOptions { disable_gates: true, ..Default::default() },
+                None)?;
+            prof_engine.sim_profile = Some(SimProfile::new(
+                steps, 2 * ctx.cfg.model.depth));
+            let labels = eval_labels(8, ctx.cfg.model.num_classes);
+            let _ = generate_batch(&mut prof_engine, &labels, steps,
+                                   seed ^ 0x12C0, cfg_scale)?;
+            let prof = prof_engine.sim_profile.take().unwrap();
+            let sched = build_schedule(&prof, ratio_pct as f64 / 100.0);
+            log::info!("L2C schedule: target {}% achieved {:.1}%", ratio_pct,
+                       100.0 * schedule_ratio(&sched));
+            ctx.engine(serve,
+                       EngineOptions { disable_gates: true,
+                                       static_schedule: Some(sched) },
+                       None)?
+        }
+    };
+
+    let labels = eval_labels(n_eval, ctx.cfg.model.num_classes);
+    let t0 = std::time::Instant::now();
+    let results = generate_batch(&mut engine, &labels, steps, seed, cfg_scale)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let images = stack_images(&results)?;
+    let quality = ctx.metrics.evaluate(&ctx.extractor, &images)?;
+    let achieved: f64 = results.iter().map(|r| r.lazy_ratio).sum::<f64>()
+        / results.len() as f64;
+    let with_gates = matches!(method, Method::Ours { .. });
+    let macs = crate::tmacs::run_macs(&ctx.cfg.model, steps, achieved, true,
+                                      with_gates);
+    Ok(RowResult {
+        method,
+        quality,
+        achieved_lazy: achieved,
+        gmacs_per_img: crate::tmacs::as_gmacs(macs),
+        wall_s: wall,
+        latency_per_img_s: wall / n_eval as f64,
+    })
+}
+
+/// Bisect the gate threshold so the achieved lazy ratio on a small probe
+/// run lands within ±4% of `target`. Returns the calibrated threshold.
+pub fn calibrate_threshold(ctx: &EvalContext, serve: &crate::config::ServeConfig,
+                           gamma: &[f32], steps: usize, target: f64,
+                           seed: u64) -> Result<f32> {
+    let (mut lo, mut hi) = (0.3f32, 0.995f32);
+    let mut best = serve.threshold;
+    for _ in 0..3 {
+        let mid = 0.5 * (lo + hi);
+        let mut s = serve.clone();
+        s.threshold = mid;
+        let mut engine = ctx.engine(s, EngineOptions::default(), Some(gamma))?;
+        let labels = eval_labels(6, ctx.cfg.model.num_classes);
+        let res = generate_batch(&mut engine, &labels, steps, seed ^ 0xCA1,
+                                 serve.cfg_scale)?;
+        let achieved: f64 = res.iter().map(|r| r.lazy_ratio).sum::<f64>()
+            / res.len() as f64;
+        best = mid;
+        if (achieved - target).abs() < 0.04 {
+            break;
+        }
+        if achieved > target {
+            lo = mid; // too lazy → raise the bar
+        } else {
+            hi = mid;
+        }
+    }
+    log::info!("calibrated threshold {best:.3} for target {:.0}%",
+               100.0 * target);
+    Ok(best)
+}
+
+fn quality_table(title: &str, ctx: &EvalContext, a: &Args,
+                 rows: &[Method]) -> Result<TableWriter> {
+    let n_eval = a.get_usize("n-eval", 96)?;
+    let mut t = TableWriter::new(
+        title,
+        &["Method", "# of Step", "Lazy Ratio", "FID-a ↓", "sFID-a ↓",
+          "IS-a ↑", "Prec ↑", "Rec ↑", "GMACs/img"],
+    );
+    for (i, &m) in rows.iter().enumerate() {
+        let r = run_setting(ctx, a, m, n_eval)?;
+        t.row(vec![
+            m.label(),
+            m.steps().to_string(),
+            if matches!(m, Method::Ddim { .. }) {
+                "/".into()
+            } else {
+                format!("{} ({:.0}%)", m.ratio_label(), 100.0 * r.achieved_lazy)
+            },
+            format!("{:.3}", r.quality.fid),
+            format!("{:.3}", r.quality.sfid),
+            format!("{:.3}", r.quality.is),
+            format!("{:.3}", r.quality.precision),
+            format!("{:.3}", r.quality.recall),
+            format!("{:.3}", r.gmacs_per_img),
+        ]);
+        // paper groups DDIM/Ours pairs with separators
+        if i % 2 == 1 && i + 1 < rows.len() {
+            t.hline();
+        }
+        log::info!("{title}: finished row {}/{}", i + 1, rows.len());
+    }
+    Ok(t)
+}
+
+fn finish(t: TableWriter, a: &Args) -> Result<()> {
+    t.print();
+    if let Some(csv) = a.get("csv") {
+        t.write_csv(std::path::Path::new(&csv))?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+/// Paper Table 1 row plan (both DiT-XL analogs use the same plan).
+pub fn table1_rows(quick: bool) -> Vec<Method> {
+    if quick {
+        vec![
+            Method::Ddim { steps: 25 },
+            Method::Ours { steps: 50, ratio_pct: 50 },
+            Method::Ddim { steps: 10 },
+            Method::Ours { steps: 20, ratio_pct: 50 },
+        ]
+    } else {
+        vec![
+            Method::Ddim { steps: 50 },
+            Method::Ddim { steps: 40 },
+            Method::Ours { steps: 50, ratio_pct: 20 },
+            Method::Ddim { steps: 25 },
+            Method::Ours { steps: 50, ratio_pct: 50 },
+            Method::Ddim { steps: 20 },
+            Method::Ours { steps: 40, ratio_pct: 50 },
+            Method::Ddim { steps: 14 },
+            Method::Ours { steps: 20, ratio_pct: 30 },
+            Method::Ddim { steps: 10 },
+            Method::Ours { steps: 20, ratio_pct: 50 },
+            Method::Ddim { steps: 7 },
+            Method::Ours { steps: 10, ratio_pct: 30 },
+        ]
+    }
+}
+
+pub fn run_table1(a: Args) -> Result<()> {
+    let n_real = a.get_usize("n-real", 256)?;
+    let ctx = EvalContext::open(&a, n_real)?;
+    let rows = table1_rows(a.flag("quick"));
+    let t = quality_table(
+        &format!("Table 1 — {} ({}) vs DDIM on SynthBlobs-10 (cfg=1.5)",
+                 ctx.cfg.model.name, ctx.cfg.model.paper_analog),
+        &ctx, &a, &rows)?;
+    finish(t, &a)
+}
+
+pub fn run_table2(a: Args) -> Result<()> {
+    // Large-DiT analogs: default to l3b-a unless --config given.
+    let mut a = a;
+    if !a.provided("config") {
+        a.set("config", "l3b-a");
+    }
+    let n_real = a.get_usize("n-real", 256)?;
+    let ctx = EvalContext::open(&a, n_real)?;
+    let rows = if a.flag("quick") {
+        vec![
+            Method::Ddim { steps: 25 },
+            Method::Ours { steps: 50, ratio_pct: 50 },
+            Method::Ddim { steps: 10 },
+            Method::Ours { steps: 20, ratio_pct: 50 },
+        ]
+    } else {
+        vec![
+            Method::Ddim { steps: 50 },
+            Method::Ddim { steps: 35 },
+            Method::Ours { steps: 50, ratio_pct: 30 },
+            Method::Ddim { steps: 25 },
+            Method::Ours { steps: 50, ratio_pct: 50 },
+            Method::Ddim { steps: 14 },
+            Method::Ours { steps: 20, ratio_pct: 30 },
+            Method::Ddim { steps: 10 },
+            Method::Ours { steps: 20, ratio_pct: 50 },
+        ]
+    };
+    let t = quality_table(
+        &format!("Table 2 — {} ({}) vs DDIM (cfg=1.5)", ctx.cfg.model.name,
+                 ctx.cfg.model.paper_analog),
+        &ctx, &a, &rows)?;
+    finish(t, &a)
+}
+
+pub fn run_table5(a: Args) -> Result<()> {
+    let n_real = a.get_usize("n-real", 256)?;
+    let ctx = EvalContext::open(&a, n_real)?;
+    let rows = if a.flag("quick") {
+        table1_rows(true)
+    } else {
+        vec![
+            Method::Ddim { steps: 50 },
+            Method::Ddim { steps: 40 },
+            Method::Ours { steps: 50, ratio_pct: 20 },
+            Method::Ddim { steps: 35 },
+            Method::Ours { steps: 50, ratio_pct: 30 },
+            Method::Ddim { steps: 30 },
+            Method::Ours { steps: 50, ratio_pct: 40 },
+            Method::Ddim { steps: 25 },
+            Method::Ours { steps: 50, ratio_pct: 50 },
+            Method::Ddim { steps: 18 },
+            Method::Ours { steps: 20, ratio_pct: 10 },
+            Method::Ddim { steps: 16 },
+            Method::Ours { steps: 20, ratio_pct: 20 },
+            Method::Ddim { steps: 14 },
+            Method::Ours { steps: 20, ratio_pct: 30 },
+            Method::Ddim { steps: 10 },
+            Method::Ours { steps: 20, ratio_pct: 50 },
+            Method::Ddim { steps: 8 },
+            Method::Ours { steps: 10, ratio_pct: 20 },
+            Method::Ddim { steps: 7 },
+            Method::Ours { steps: 10, ratio_pct: 30 },
+            Method::Ddim { steps: 5 },
+            Method::Ours { steps: 10, ratio_pct: 50 },
+        ]
+    };
+    let t = quality_table(
+        &format!("Table 5 — full sweep, {} ({})", ctx.cfg.model.name,
+                 ctx.cfg.model.paper_analog),
+        &ctx, &a, &rows)?;
+    finish(t, &a)
+}
+
+/// Latency tables: Table 3 (mobile analog, single-stream) and Table 6
+/// (GPU analog, batched). The latency column is measured end-to-end wall
+/// clock per image on this engine.
+fn latency_table(title: &str, ctx: &EvalContext, a: &Args, rows: &[Method],
+                 n_eval: usize) -> Result<TableWriter> {
+    let mut t = TableWriter::new(
+        title,
+        &["Method", "# of Step", "Lazy Ratio", "GMACs/img", "IS-a ↑",
+          "Latency (s/img)", "Speedup vs DDIM50"],
+    );
+    let mut base_latency = None;
+    for (i, &m) in rows.iter().enumerate() {
+        let r = run_setting(ctx, a, m, n_eval)?;
+        if i == 0 {
+            base_latency = Some(r.latency_per_img_s);
+        }
+        t.row(vec![
+            m.label(),
+            m.steps().to_string(),
+            m.ratio_label(),
+            format!("{:.3}", r.gmacs_per_img),
+            format!("{:.3}", r.quality.is),
+            format!("{:.3}", r.latency_per_img_s),
+            format!("{:.2}x",
+                    base_latency.unwrap() / r.latency_per_img_s.max(1e-12)),
+        ]);
+        log::info!("{title}: finished row {}/{}", i + 1, rows.len());
+    }
+    Ok(t)
+}
+
+fn latency_rows(quick: bool) -> Vec<Method> {
+    if quick {
+        vec![
+            Method::Ddim { steps: 25 },
+            Method::Ours { steps: 50, ratio_pct: 50 },
+        ]
+    } else {
+        vec![
+            Method::Ddim { steps: 50 },
+            Method::Ddim { steps: 40 },
+            Method::Ddim { steps: 25 },
+            Method::Ours { steps: 50, ratio_pct: 50 },
+            Method::Ddim { steps: 20 },
+            Method::Ddim { steps: 16 },
+            Method::Ours { steps: 20, ratio_pct: 20 },
+            Method::Ddim { steps: 8 },
+            Method::Ddim { steps: 7 },
+            Method::Ours { steps: 10, ratio_pct: 30 },
+        ]
+    }
+}
+
+pub fn run_table3(a: Args) -> Result<()> {
+    // mobile analog: single-stream — exactly one CFG request in flight
+    let mut a = a;
+    if !a.provided("max-batch") {
+        a.set("max-batch", "2");
+    }
+    let n_real = a.get_usize("n-real", 128)?;
+    let ctx = EvalContext::open(&a, n_real)?;
+    let n_eval = a.get_usize("n-eval", 24)?;
+    let rows = latency_rows(a.flag("quick"));
+    let t = latency_table(
+        &format!("Table 3 — single-stream latency (mobile analog), {}",
+                 ctx.cfg.model.name),
+        &ctx, &a, &rows, n_eval)?;
+    finish(t, &a)
+}
+
+pub fn run_table6(a: Args) -> Result<()> {
+    // GPU analog: batched serving (8 images = 16 lanes)
+    let mut a = a;
+    if !a.provided("max-batch") {
+        a.set("max-batch", "16");
+    }
+    let n_real = a.get_usize("n-real", 128)?;
+    let ctx = EvalContext::open(&a, n_real)?;
+    let n_eval = a.get_usize("n-eval", 32)?;
+    let rows = latency_rows(a.flag("quick"));
+    let t = latency_table(
+        &format!("Table 6 — batched latency (A5000 analog, 8 img/batch), {}",
+                 ctx.cfg.model.name),
+        &ctx, &a, &rows, n_eval)?;
+    finish(t, &a)
+}
+
+pub fn run_table7(a: Args) -> Result<()> {
+    let n_real = a.get_usize("n-real", 256)?;
+    let ctx = EvalContext::open(&a, n_real)?;
+    let rows = if a.flag("quick") {
+        vec![
+            Method::Ddim { steps: 16 },
+            Method::L2c { steps: 20, ratio_pct: 20 },
+            Method::Ours { steps: 20, ratio_pct: 20 },
+        ]
+    } else {
+        vec![
+            Method::Ddim { steps: 50 },
+            Method::Ddim { steps: 40 },
+            Method::L2c { steps: 50, ratio_pct: 20 },
+            Method::Ours { steps: 50, ratio_pct: 20 },
+            Method::Ddim { steps: 16 },
+            Method::L2c { steps: 20, ratio_pct: 20 },
+            Method::Ours { steps: 20, ratio_pct: 20 },
+            Method::Ddim { steps: 9 },
+            Method::L2c { steps: 10, ratio_pct: 10 },
+            Method::Ours { steps: 10, ratio_pct: 10 },
+        ]
+    };
+    let t = quality_table(
+        &format!("Table 7 — vs input-independent caching (Learn2Cache \
+                  analog), {}", ctx.cfg.model.name),
+        &ctx, &a, &rows)?;
+    finish(t, &a)
+}

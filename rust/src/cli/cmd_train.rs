@@ -1,0 +1,111 @@
+//! `lazydit pretrain` / `lazydit lazy-train` — the two training phases.
+
+use crate::cli::common::{artifacts_dir, ckpt_dir, config_name, load_or_pretrain,
+                         merge_specs};
+use crate::config::{LazyScope, TrainConfig};
+use crate::runtime::engine_rt::Runtime;
+use crate::runtime::manifest::Manifest;
+use crate::train::lazytrain::{lazy_train, LazyTrainOptions};
+use crate::train::pretrain::pretrain;
+use crate::util::argparse::{Args, OptSpec};
+use anyhow::Result;
+use std::rc::Rc;
+
+pub fn pretrain_specs() -> Vec<OptSpec> {
+    merge_specs(&[
+        OptSpec { name: "steps", help: "training steps", default: Some("1500"), is_flag: false },
+        OptSpec { name: "lr", help: "learning rate", default: Some("2e-3"), is_flag: false },
+        OptSpec { name: "seed", help: "rng seed", default: Some("0"), is_flag: false },
+        OptSpec { name: "force", help: "retrain even if checkpoint exists", default: None, is_flag: true },
+    ])
+}
+
+pub fn run_pretrain(a: Args) -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir(&a))?;
+    let cfg = manifest.config(&config_name(&a))?.clone();
+    let ckpt = ckpt_dir(&a);
+    let rt = Rc::new(Runtime::cpu()?);
+    let path = crate::model::checkpoint::theta_path(&ckpt, &cfg.model.name);
+    if path.exists() && !a.flag("force") {
+        println!("checkpoint {} exists (use --force to retrain)", path.display());
+        return Ok(());
+    }
+    let tc = TrainConfig {
+        config_name: cfg.model.name.clone(),
+        steps: a.get_usize("steps", 1500)?,
+        lr: a.get_f32("lr", 2e-3)?,
+        seed: a.get_u64("seed", 0)?,
+        ..Default::default()
+    };
+    let report = pretrain(&rt, &cfg, &tc, &ckpt)?;
+    println!(
+        "pretrained {} for {} steps in {:.1}s: loss {:.4} → {:.4} (tail {:.4})",
+        cfg.model.name, report.steps, report.wall_s, report.first_loss,
+        report.last_loss, report.tail_loss
+    );
+    Ok(())
+}
+
+pub fn lazy_specs() -> Vec<OptSpec> {
+    merge_specs(&[
+        OptSpec { name: "steps", help: "gate training steps (paper: 500)", default: Some("500"), is_flag: false },
+        OptSpec { name: "lr", help: "learning rate (paper: 1e-4; tiny models like higher)", default: Some("5e-3"), is_flag: false },
+        OptSpec { name: "serve-steps", help: "sampling grid the gates serve", default: Some("20"), is_flag: false },
+        OptSpec { name: "target-ratio", help: "target lazy ratio %, adaptive rho", default: Some("50"), is_flag: false },
+        OptSpec { name: "rho", help: "fixed rho (disables the controller)", default: None, is_flag: false },
+        OptSpec { name: "scope", help: "both|attn|ffn", default: Some("both"), is_flag: false },
+        OptSpec { name: "tag", help: "checkpoint tag override", default: None, is_flag: false },
+        OptSpec { name: "seed", help: "rng seed", default: Some("0"), is_flag: false },
+        OptSpec { name: "pretrain-steps", help: "steps if base must be trained", default: Some("1500"), is_flag: false },
+        OptSpec { name: "pretrain-lr", help: "lr if base must be trained", default: Some("2e-3"), is_flag: false },
+    ])
+}
+
+pub fn run_lazy(a: Args) -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir(&a))?;
+    let cfg = manifest.config(&config_name(&a))?.clone();
+    let ckpt = ckpt_dir(&a);
+    let rt = Rc::new(Runtime::cpu()?);
+    let theta = load_or_pretrain(&rt, &cfg, &ckpt, &a)?;
+
+    let scope = LazyScope::parse(&a.get_str("scope", "both"))?;
+    let serve_steps = a.get_usize("serve-steps", 20)?;
+    let ratio_pct = a.get_usize("target-ratio", 50)?;
+    let fixed_rho = a.get("rho").map(|s| s.parse::<f32>()).transpose()?;
+    let tag = a
+        .get("tag")
+        .unwrap_or_else(|| crate::cli::common::gate_tag(serve_steps, ratio_pct, scope));
+
+    let tc = TrainConfig {
+        config_name: cfg.model.name.clone(),
+        steps: a.get_usize("steps", 500)?,
+        lr: a.get_f32("lr", 5e-3)?,
+        seed: a.get_u64("seed", 0)?,
+        rho_attn: fixed_rho.unwrap_or(1e-3),
+        rho_ffn: fixed_rho.unwrap_or(1e-3),
+        ..Default::default()
+    };
+    let target = if fixed_rho.is_some() {
+        None
+    } else {
+        Some(ratio_pct as f64 / 100.0)
+    };
+    let opts = LazyTrainOptions {
+        serve_steps,
+        target_attn: target,
+        target_ffn: target,
+        scope,
+        tag: tag.clone(),
+        adjust_every: 10,
+    };
+    let report = lazy_train(&rt, &cfg, &tc, &opts, &theta, &ckpt)?;
+    println!(
+        "lazy-trained {tag} in {:.1}s: dloss {:.4}, train-time skip frac \
+         attn {:.2} ffn {:.2}, mean s attn/ffn {:.3}/{:.3}, final rho \
+         {:.2e}/{:.2e}",
+        report.wall_s, report.final_dloss, report.final_frac_attn,
+        report.final_frac_ffn, report.mean_s_attn, report.mean_s_ffn,
+        report.final_rho_attn, report.final_rho_ffn
+    );
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Shared CLI plumbing: engine/context construction, gate-checkpoint
+//! naming, and ensure-trained helpers used by the table regenerators.
+
+use crate::bench::quality::{FeatureExtractor, MetricContext};
+use crate::config::{LazyScope, ServeConfig, SkipPolicy, TrainConfig};
+use crate::coordinator::engine::{Engine, EngineOptions};
+use crate::model::checkpoint::{gates_path, theta_path, Checkpoint};
+use crate::runtime::engine_rt::Runtime;
+use crate::runtime::manifest::{Manifest, ManifestConfig};
+use crate::train::lazytrain::{lazy_train, LazyTrainOptions};
+use crate::train::pretrain::pretrain;
+use crate::util::argparse::{Args, OptSpec};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+pub const COMMON: &[OptSpec] = &[
+    OptSpec { name: "artifacts", help: "artifacts dir", default: Some("artifacts"), is_flag: false },
+    OptSpec { name: "ckpt", help: "checkpoint dir", default: Some("runs"), is_flag: false },
+    OptSpec { name: "config", help: "model config", default: Some("xl-256a"), is_flag: false },
+];
+
+pub fn artifacts_dir(a: &Args) -> PathBuf {
+    PathBuf::from(a.get_str("artifacts", "artifacts"))
+}
+
+pub fn ckpt_dir(a: &Args) -> PathBuf {
+    PathBuf::from(a.get_str("ckpt", "runs"))
+}
+
+pub fn config_name(a: &Args) -> String {
+    a.get_str("config", "xl-256a")
+}
+
+/// Gate-checkpoint tag for a (serve_steps, target-ratio) combination.
+pub fn gate_tag(steps: usize, ratio_pct: usize, scope: LazyScope) -> String {
+    let sc = match scope {
+        LazyScope::Both => "",
+        LazyScope::AttnOnly => "-attn",
+        LazyScope::FfnOnly => "-ffn",
+        LazyScope::None => "-none",
+    };
+    format!("s{steps}-r{ratio_pct}{sc}")
+}
+
+/// Loaded shared context for eval/table commands.
+pub struct EvalContext {
+    pub rt: Rc<Runtime>,
+    pub cfg: ManifestConfig,
+    pub theta: Vec<f32>,
+    pub extractor: FeatureExtractor,
+    pub metrics: MetricContext,
+    pub artifacts: PathBuf,
+    pub ckpt: PathBuf,
+}
+
+impl EvalContext {
+    pub fn open(a: &Args, n_real: usize) -> Result<EvalContext> {
+        let artifacts = artifacts_dir(a);
+        let ckpt = ckpt_dir(a);
+        let name = config_name(a);
+        let manifest = Manifest::load(&artifacts)?;
+        let cfg = manifest.config(&name)?.clone();
+        let rt = Rc::new(Runtime::cpu()?);
+        let theta = load_or_pretrain(&rt, &cfg, &ckpt, a)?;
+        let extractor = FeatureExtractor::new(&rt, &cfg, manifest.feature_dim)?;
+        let metrics = MetricContext::build(&extractor, cfg.model.img_size,
+                                           n_real, 0xEEA1, threads())?;
+        log::info!("metric context ready: {} real samples, IS-classifier \
+                    accuracy {:.3}", n_real, metrics.clf_accuracy);
+        Ok(EvalContext { rt, cfg, theta, extractor, metrics, artifacts, ckpt })
+    }
+
+    /// Build an engine sharing this context's θ.
+    pub fn engine(&self, serve: ServeConfig, options: EngineOptions,
+                  gamma: Option<&[f32]>) -> Result<Engine> {
+        let runner = match gamma {
+            Some(g) => crate::model::runner::ModelRunner::new(
+                self.rt.clone(), self.cfg.clone(), &self.theta, g)?,
+            None => crate::model::runner::ModelRunner::with_disabled_gates(
+                self.rt.clone(), self.cfg.clone(), &self.theta)?,
+        };
+        Ok(Engine::from_parts(runner, serve, options))
+    }
+
+    /// Load gates for (steps, ratio), training them if absent.
+    pub fn ensure_gates(&self, a: &Args, steps: usize, ratio_pct: usize,
+                        scope: LazyScope) -> Result<Vec<f32>> {
+        let tag = gate_tag(steps, ratio_pct, scope);
+        let path = gates_path(&self.ckpt, &self.cfg.model.name, &tag);
+        if let Ok(ck) = Checkpoint::load(&path) {
+            return Ok(ck.vec("gamma")?.clone());
+        }
+        log::info!("gate checkpoint {tag} missing — training");
+        let tc = TrainConfig {
+            config_name: self.cfg.model.name.clone(),
+            steps: a.get_usize("train-steps", 200)?,
+            lr: a.get_f32("train-lr", 5e-3)?,
+            ..Default::default()
+        };
+        let opts = LazyTrainOptions {
+            serve_steps: steps,
+            target_attn: Some(ratio_pct as f64 / 100.0),
+            target_ffn: Some(ratio_pct as f64 / 100.0),
+            scope,
+            tag: tag.clone(),
+            adjust_every: 10,
+        };
+        let report = lazy_train(&self.rt, &self.cfg, &tc, &opts, &self.theta,
+                                &self.ckpt)?;
+        log::info!("trained {tag}: frac a/f {:.2}/{:.2} ({:.1}s)",
+                   report.final_frac_attn, report.final_frac_ffn,
+                   report.wall_s);
+        let ck = Checkpoint::load(&path)?;
+        Ok(ck.vec("gamma")?.clone())
+    }
+}
+
+/// Load θ, pretraining on the fly if the checkpoint is missing.
+pub fn load_or_pretrain(rt: &Rc<Runtime>, cfg: &ManifestConfig, ckpt: &Path,
+                        a: &Args) -> Result<Vec<f32>> {
+    let path = theta_path(ckpt, &cfg.model.name);
+    if let Ok(ck) = Checkpoint::load(&path) {
+        return Ok(ck.vec("theta")?.clone());
+    }
+    log::info!("base checkpoint missing — pretraining {}", cfg.model.name);
+    let tc = TrainConfig {
+        config_name: cfg.model.name.clone(),
+        steps: a.get_usize("pretrain-steps", 1500)?,
+        lr: a.get_f32("pretrain-lr", 2e-3)?,
+        ..Default::default()
+    };
+    let report = pretrain(rt, cfg, &tc, ckpt)?;
+    log::info!("pretrained: loss {:.4} → {:.4} ({:.1}s)", report.first_loss,
+               report.tail_loss, report.wall_s);
+    let ck = Checkpoint::load(&path).context("checkpoint after pretrain")?;
+    Ok(ck.vec("theta")?.clone())
+}
+
+/// Default serve config with CLI overrides applied.
+pub fn serve_config(a: &Args, name: &str) -> Result<ServeConfig> {
+    Ok(ServeConfig {
+        config_name: name.to_string(),
+        max_batch: a.get_usize("max-batch", 8)?,
+        queue_cap: a.get_usize("queue-cap", 256)?,
+        cfg_scale: a.get_f32("cfg-scale", 1.5)?,
+        policy: SkipPolicy::parse(&a.get_str("policy", "mean"))?,
+        scope: LazyScope::parse(&a.get_str("scope", "both"))?,
+        threads: threads(),
+        threshold: a.get_f32("threshold", 0.5)?,
+    })
+}
+
+pub fn threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Merge common + command-specific specs (static tables in each command).
+pub fn merge_specs(extra: &[OptSpec]) -> Vec<OptSpec> {
+    COMMON.iter().cloned().chain(extra.iter().cloned()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags() {
+        assert_eq!(gate_tag(50, 20, LazyScope::Both), "s50-r20");
+        assert_eq!(gate_tag(20, 30, LazyScope::AttnOnly), "s20-r30-attn");
+    }
+}

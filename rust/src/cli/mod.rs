@@ -1,0 +1,78 @@
+//! Command-line interface: one subcommand per workflow, including a
+//! regenerator for every paper table and figure (DESIGN.md §6).
+
+pub mod common;
+pub mod cmd_info;
+pub mod cmd_train;
+pub mod cmd_generate;
+pub mod cmd_serve;
+pub mod cmd_eval;
+pub mod cmd_tables;
+pub mod cmd_figs;
+pub mod cmd_profile;
+
+use crate::util::argparse::Args;
+use anyhow::{bail, Result};
+
+/// Dispatch argv to a subcommand. argv excludes the program name.
+pub fn dispatch(argv: &[String]) -> Result<()> {
+    crate::util::logging::init();
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "info" => cmd_info::run(parse(rest, &cmd_info::specs())?),
+        "pretrain" => cmd_train::run_pretrain(parse(rest, &cmd_train::pretrain_specs())?),
+        "lazy-train" => cmd_train::run_lazy(parse(rest, &cmd_train::lazy_specs())?),
+        "generate" => cmd_generate::run(parse(rest, &cmd_generate::specs())?),
+        "serve" => cmd_serve::run(parse(rest, &cmd_serve::specs())?),
+        "eval" => cmd_eval::run(parse(rest, &cmd_eval::specs())?),
+        "table1" => cmd_tables::run_table1(parse(rest, &cmd_tables::specs())?),
+        "table2" => cmd_tables::run_table2(parse(rest, &cmd_tables::specs())?),
+        "table5" => cmd_tables::run_table5(parse(rest, &cmd_tables::specs())?),
+        "table3" => cmd_tables::run_table3(parse(rest, &cmd_tables::specs())?),
+        "table6" => cmd_tables::run_table6(parse(rest, &cmd_tables::specs())?),
+        "table7" => cmd_tables::run_table7(parse(rest, &cmd_tables::specs())?),
+        "fig4" => cmd_figs::run_fig4(parse(rest, &cmd_figs::specs())?),
+        "fig5" => cmd_figs::run_fig5(parse(rest, &cmd_figs::specs())?),
+        "fig6" => cmd_figs::run_fig6(parse(rest, &cmd_figs::specs())?),
+        "profile" => cmd_profile::run(parse(rest, &cmd_profile::specs())?),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' — try `lazydit help`"),
+    }
+}
+
+fn parse(rest: &[String], specs: &[crate::util::argparse::OptSpec]) -> Result<Args> {
+    Args::parse(rest, specs)
+}
+
+fn print_help() {
+    println!(
+        "lazydit — LazyDiT serving framework (AAAI 2025 reproduction)\n\
+         \n\
+         workflow commands:\n\
+         \x20 info          show manifest / artifact inventory\n\
+         \x20 pretrain      train the base DiT on SynthBlobs-10 (AOT step)\n\
+         \x20 lazy-train    train the lazy gates (paper Sec. 3.3)\n\
+         \x20 generate      sample images; optional PNG grid output\n\
+         \x20 serve         TCP JSON-lines serving with continuous batching\n\
+         \x20 eval          quality metrics for one sampling configuration\n\
+         \n\
+         paper experiment regenerators:\n\
+         \x20 table1|table2|table5   quality vs DDIM across steps/lazy ratios\n\
+         \x20 table3|table6          latency profiles (mobile-B1 / gpu-B8)\n\
+         \x20 table7                 vs the Learn2Cache-analog baseline\n\
+         \x20 fig4                   layer-wise laziness distribution\n\
+         \x20 fig5                   penalty/laziness ablations\n\
+         \x20 fig6                   skip-one-module-only ablation\n\
+         \x20 profile                engine hot-path micro profile\n\
+         \n\
+         run `lazydit <cmd> --help` semantics: all options have defaults;\n\
+         common ones: --artifacts <dir> --ckpt <dir> --config <name>."
+    );
+}

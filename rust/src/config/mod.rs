@@ -1,0 +1,274 @@
+//! Configuration types. `ModelConfig`/`DiffusionConfig` are parsed from
+//! `artifacts/manifest.json` (single source of truth = python/compile/
+//! configs.py); serve/train/bench configs are CLI- or JSON-loadable.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Architecture hyper-parameters of one exported model config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub paper_analog: String,
+    pub img_size: usize,
+    pub channels: usize,
+    pub patch: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub num_classes: usize,
+    pub mlp_ratio: usize,
+    pub freq_dim: usize,
+}
+
+impl ModelConfig {
+    pub fn tokens(&self) -> usize {
+        let side = self.img_size / self.patch;
+        side * side
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.patch * self.patch * self.channels
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.dim * self.mlp_ratio
+    }
+
+    pub fn img_elems(&self) -> usize {
+        self.channels * self.img_size * self.img_size
+    }
+
+    /// The CFG null-label id.
+    pub fn null_label(&self) -> usize {
+        self.num_classes
+    }
+
+    pub fn from_json(name: &str, j: &Json) -> Result<ModelConfig> {
+        let m = j.req("model")?;
+        let g = |k: &str| -> Result<usize> {
+            m.req(k)?
+                .as_usize()
+                .with_context(|| format!("model.{k} not a number"))
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            paper_analog: j
+                .get("paper_analog")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            img_size: g("img_size")?,
+            channels: g("channels")?,
+            patch: g("patch")?,
+            dim: g("dim")?,
+            depth: g("depth")?,
+            heads: g("heads")?,
+            num_classes: g("num_classes")?,
+            mlp_ratio: g("mlp_ratio")?,
+            freq_dim: g("freq_dim")?,
+        })
+    }
+}
+
+/// Diffusion-process constants (must match python/compile/diffusion.py).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffusionConfig {
+    pub timesteps: usize,
+    pub beta_start: f32,
+    pub beta_end: f32,
+}
+
+impl DiffusionConfig {
+    pub fn from_json(j: &Json) -> Result<DiffusionConfig> {
+        let d = j.req("diffusion")?;
+        Ok(DiffusionConfig {
+            timesteps: d.req("timesteps")?.as_usize().context("timesteps")?,
+            beta_start: d.req("beta_start")?.as_f64().context("beta_start")? as f32,
+            beta_end: d.req("beta_end")?.as_f64().context("beta_end")? as f32,
+        })
+    }
+}
+
+/// How the coordinator aggregates per-row gate decisions when a batch
+/// shares one module invocation (DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SkipPolicy {
+    /// Skip iff the mean gate value over live rows exceeds 0.5.
+    Mean,
+    /// Skip iff a strict majority of live rows wants to skip.
+    Majority,
+    /// Skip iff every live row wants to skip (conservative).
+    All,
+    /// Skip iff any live row wants to skip (aggressive).
+    Any,
+    /// Never skip — the DDIM baseline path.
+    Never,
+    /// Training-faithful: always run the module, blend with cache by s.
+    Blend,
+}
+
+impl SkipPolicy {
+    pub fn parse(s: &str) -> Result<SkipPolicy> {
+        Ok(match s {
+            "mean" => SkipPolicy::Mean,
+            "majority" => SkipPolicy::Majority,
+            "all" => SkipPolicy::All,
+            "any" => SkipPolicy::Any,
+            "never" => SkipPolicy::Never,
+            "blend" => SkipPolicy::Blend,
+            _ => bail!("unknown skip policy '{s}' (mean|majority|all|any|never|blend)"),
+        })
+    }
+}
+
+/// Which modules laziness applies to (paper Fig. 6 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LazyScope {
+    Both,
+    AttnOnly,
+    FfnOnly,
+    None,
+}
+
+impl LazyScope {
+    pub fn parse(s: &str) -> Result<LazyScope> {
+        Ok(match s {
+            "both" => LazyScope::Both,
+            "attn" => LazyScope::AttnOnly,
+            "ffn" => LazyScope::FfnOnly,
+            "none" => LazyScope::None,
+            _ => bail!("unknown lazy scope '{s}' (both|attn|ffn|none)"),
+        })
+    }
+
+    pub fn covers_attn(&self) -> bool {
+        matches!(self, LazyScope::Both | LazyScope::AttnOnly)
+    }
+
+    pub fn covers_ffn(&self) -> bool {
+        matches!(self, LazyScope::Both | LazyScope::FfnOnly)
+    }
+}
+
+/// Serving-engine configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub config_name: String,
+    pub max_batch: usize,
+    pub queue_cap: usize,
+    pub cfg_scale: f32,
+    pub policy: SkipPolicy,
+    pub scope: LazyScope,
+    pub threads: usize,
+    /// Gate threshold (paper uses 0.5).
+    pub threshold: f32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            config_name: "xl-256a".into(),
+            max_batch: 8,
+            queue_cap: 256,
+            cfg_scale: 1.5,
+            policy: SkipPolicy::Mean,
+            scope: LazyScope::Both,
+            threads: 1,
+            threshold: 0.5,
+        }
+    }
+}
+
+/// Training-driver configuration (pretrain and lazy-learning phases).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub config_name: String,
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// CFG label-dropout probability during pretraining.
+    pub label_dropout: f32,
+    /// Lazy-learning penalties ρ_attn / ρ_ffn (paper Eq. 5).
+    pub rho_attn: f32,
+    pub rho_ffn: f32,
+    /// Gap between t and t_prev for cache construction, as a fraction of
+    /// T/steps for the sampling grid the gates will serve.
+    pub cache_stride: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            config_name: "xl-256a".into(),
+            steps: 500,
+            batch: 32,
+            lr: 1e-4,
+            seed: 0,
+            label_dropout: 0.1,
+            rho_attn: 1e-3,
+            rho_ffn: 1e-3,
+            cache_stride: 20,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(
+            r#"{
+            "paper_analog": "DiT-XL/2 256",
+            "model": {"img_size": 8, "channels": 3, "patch": 2, "dim": 96,
+                      "depth": 6, "heads": 6, "num_classes": 10,
+                      "mlp_ratio": 4, "freq_dim": 128, "tokens": 16,
+                      "patch_dim": 12},
+            "diffusion": {"timesteps": 1000, "beta_start": 1e-4,
+                          "beta_end": 0.02}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_model_config() {
+        let j = sample_json();
+        let c = ModelConfig::from_json("xl-256a", &j).unwrap();
+        assert_eq!(c.dim, 96);
+        assert_eq!(c.tokens(), 16);
+        assert_eq!(c.patch_dim(), 12);
+        assert_eq!(c.hidden(), 384);
+        assert_eq!(c.null_label(), 10);
+    }
+
+    #[test]
+    fn parses_diffusion_config() {
+        let j = sample_json();
+        let d = DiffusionConfig::from_json(&j).unwrap();
+        assert_eq!(d.timesteps, 1000);
+        assert!((d.beta_end - 0.02).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let j = Json::parse(r#"{"model": {"img_size": 8}}"#).unwrap();
+        assert!(ModelConfig::from_json("x", &j).is_err());
+    }
+
+    #[test]
+    fn policy_parse() {
+        assert_eq!(SkipPolicy::parse("mean").unwrap(), SkipPolicy::Mean);
+        assert_eq!(SkipPolicy::parse("blend").unwrap(), SkipPolicy::Blend);
+        assert!(SkipPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn scope_covers() {
+        assert!(LazyScope::Both.covers_attn() && LazyScope::Both.covers_ffn());
+        assert!(LazyScope::AttnOnly.covers_attn() && !LazyScope::AttnOnly.covers_ffn());
+        assert!(!LazyScope::None.covers_attn());
+    }
+}

@@ -1,0 +1,197 @@
+//! Continuous batcher: selects which in-flight requests join the next
+//! model invocation and how their lanes map onto a padded bucket.
+//!
+//! Requests at *different* timesteps batch together (t is a per-row model
+//! input) — diffusion's analogue of vLLM-style continuous batching. CFG
+//! lanes of one request are kept adjacent (cond at slot i, uncond at i+1).
+
+/// One lane in the assembled batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneSlot {
+    /// Index into the engine's active-request vector.
+    pub req_idx: usize,
+    /// 0 = cond, 1 = uncond.
+    pub lane: usize,
+}
+
+/// The plan for one engine round.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    /// Bucket size used (>= lanes.len()).
+    pub bucket: usize,
+    /// Lane assignments; padded tail rows have no entry.
+    pub lanes: Vec<LaneSlot>,
+}
+
+impl BatchPlan {
+    pub fn live_mask(&self) -> Vec<bool> {
+        let mut m = vec![false; self.bucket];
+        for (i, _) in self.lanes.iter().enumerate() {
+            m[i] = true;
+        }
+        m
+    }
+}
+
+/// Select requests FIFO (by position) so that their total lanes fit the
+/// largest bucket ≤ `max_lanes`, then pick the smallest exported bucket
+/// that holds them. `lane_counts[i]` is lanes-per-request (1 or 2).
+///
+/// `start` rotates the FIFO origin so long queues make progress fairly
+/// (round-robin across rounds).
+pub fn plan_round(lane_counts: &[usize], start: usize, max_lanes: usize,
+                  buckets: &[usize]) -> Option<BatchPlan> {
+    let n = lane_counts.len();
+    if n == 0 {
+        return None;
+    }
+    let cap = buckets
+        .iter()
+        .copied()
+        .filter(|&b| b <= max_lanes.max(*buckets.first().unwrap_or(&1)))
+        .max()
+        .unwrap_or(0);
+    if cap == 0 {
+        return None;
+    }
+    let mut lanes = Vec::new();
+    let mut used = 0usize;
+    for k in 0..n {
+        let i = (start + k) % n;
+        let lc = lane_counts[i];
+        if used + lc > cap {
+            // keep scanning: a later 1-lane request may still fit
+            continue;
+        }
+        for lane in 0..lc {
+            lanes.push(LaneSlot { req_idx: i, lane });
+        }
+        used += lc;
+        if used == cap {
+            break;
+        }
+    }
+    if lanes.is_empty() {
+        return None;
+    }
+    // smallest bucket that fits
+    let bucket = buckets
+        .iter()
+        .copied()
+        .filter(|&b| b >= lanes.len())
+        .min()?;
+    Some(BatchPlan { bucket, lanes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    const BUCKETS: &[usize] = &[1, 2, 4, 8, 16];
+
+    #[test]
+    fn empty_queue_no_plan() {
+        assert!(plan_round(&[], 0, 8, BUCKETS).is_none());
+    }
+
+    #[test]
+    fn single_cfg_request_uses_bucket_2() {
+        let p = plan_round(&[2], 0, 8, BUCKETS).unwrap();
+        assert_eq!(p.bucket, 2);
+        assert_eq!(p.lanes.len(), 2);
+        assert_eq!(p.lanes[0], LaneSlot { req_idx: 0, lane: 0 });
+        assert_eq!(p.lanes[1], LaneSlot { req_idx: 0, lane: 1 });
+    }
+
+    #[test]
+    fn fills_up_to_max_lanes() {
+        // 5 CFG requests (10 lanes), max 8 → 4 requests fit
+        let p = plan_round(&[2, 2, 2, 2, 2], 0, 8, BUCKETS).unwrap();
+        assert_eq!(p.bucket, 8);
+        assert_eq!(p.lanes.len(), 8);
+    }
+
+    #[test]
+    fn rotation_gives_fairness() {
+        let p = plan_round(&[2, 2, 2], 1, 4, BUCKETS).unwrap();
+        // starts from request 1
+        assert_eq!(p.lanes[0].req_idx, 1);
+        assert_eq!(p.lanes[2].req_idx, 2);
+    }
+
+    #[test]
+    fn mixed_lane_counts_pack() {
+        // [2, 1, 2, 1], cap 4: packs 2+1 then the 1-lane at the end
+        let p = plan_round(&[2, 1, 2, 1], 0, 4, BUCKETS).unwrap();
+        assert_eq!(p.lanes.len(), 4);
+        let reqs: Vec<usize> = p.lanes.iter().map(|l| l.req_idx).collect();
+        assert_eq!(reqs, vec![0, 0, 1, 3]);
+    }
+
+    #[test]
+    fn live_mask_matches_lanes() {
+        let p = plan_round(&[2, 1], 0, 4, BUCKETS).unwrap();
+        let m = p.live_mask();
+        assert_eq!(m.len(), p.bucket);
+        assert_eq!(m.iter().filter(|&&x| x).count(), 3);
+    }
+
+    #[test]
+    fn prop_invariants() {
+        propcheck(300, |g| {
+            let n = g.usize_in(0, 12);
+            let lane_counts: Vec<usize> =
+                (0..n).map(|_| g.usize_in(1, 2)).collect();
+            let start = if n == 0 { 0 } else { g.usize_in(0, n - 1) };
+            let max_lanes = g.usize_in(1, 16);
+            if let Some(p) = plan_round(&lane_counts, start, max_lanes, BUCKETS) {
+                // bucket exported and fits
+                assert!(BUCKETS.contains(&p.bucket));
+                assert!(p.lanes.len() <= p.bucket);
+                // never exceeds the cap bucket
+                let cap = BUCKETS.iter().copied().filter(|&b| b <= max_lanes.max(1)).max().unwrap_or(1);
+                assert!(p.lanes.len() <= cap.max(1));
+                // CFG lanes adjacent and complete
+                let mut i = 0;
+                while i < p.lanes.len() {
+                    let slot = p.lanes[i];
+                    if lane_counts[slot.req_idx] == 2 {
+                        assert_eq!(slot.lane, 0);
+                        assert_eq!(p.lanes[i + 1].req_idx, slot.req_idx);
+                        assert_eq!(p.lanes[i + 1].lane, 1);
+                        i += 2;
+                    } else {
+                        assert_eq!(slot.lane, 0);
+                        i += 1;
+                    }
+                }
+                // no request appears twice
+                let mut seen = std::collections::BTreeSet::new();
+                for l in &p.lanes {
+                    if l.lane == 0 {
+                        assert!(seen.insert(l.req_idx), "request selected twice");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_eventual_progress() {
+        // every request is eventually selected under rotation
+        propcheck(100, |g| {
+            let n = g.usize_in(1, 10);
+            let lane_counts: Vec<usize> = (0..n).map(|_| g.usize_in(1, 2)).collect();
+            let mut served = vec![false; n];
+            for round in 0..4 * n {
+                if let Some(p) = plan_round(&lane_counts, round % n, 2, BUCKETS) {
+                    for l in &p.lanes {
+                        served[l.req_idx] = true;
+                    }
+                }
+            }
+            assert!(served.iter().all(|&s| s), "starvation: {served:?}");
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! The serving coordinator — the paper's system contribution realised as a
+//! diffusion-serving engine (DESIGN.md §7):
+//!
+//! * [`request`] — request types and per-request trajectory state;
+//! * [`batcher`] — continuous batching with bucket padding (requests at
+//!   *different* timesteps share one model invocation — t is per-row);
+//! * [`engine`] — the denoise scheduler: gather caches → run the lazy
+//!   block runner → CFG-combine → DDIM-update → scatter caches;
+//! * [`stats`] — lazy-ratio Γ accounting, per-layer laziness (Fig. 4);
+//! * [`server`] — TCP JSON-lines front-end with admission control.
+
+pub mod request;
+pub mod batcher;
+pub mod engine;
+pub mod stats;
+pub mod server;
+
+pub use engine::{Engine, EngineOptions};
+pub use request::{Request, RequestResult};
+pub use stats::LayerStats;

@@ -1,0 +1,171 @@
+//! Request types and per-request trajectory state.
+
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use std::time::Instant;
+
+/// A generation request as admitted by the router.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub class_label: usize,
+    pub steps: usize,
+    pub seed: u64,
+    /// CFG guidance scale; 1.0 disables the uncond lane.
+    pub cfg_scale: f32,
+}
+
+impl Request {
+    pub fn new(id: u64, class_label: usize, steps: usize, seed: u64) -> Request {
+        Request { id, class_label, steps, seed, cfg_scale: 1.5 }
+    }
+
+    /// Number of batch lanes this request occupies (CFG doubles).
+    pub fn lanes(&self) -> usize {
+        if self.cfg_scale > 1.0 {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+/// Per-lane cache store: one [N*D] vector per (layer, module).
+#[derive(Debug, Clone)]
+pub struct LaneCaches {
+    pub values: Vec<Vec<f32>>, // [2L][N*D]
+    pub valid: Vec<bool>,      // [2L]
+}
+
+impl LaneCaches {
+    pub fn empty(depth: usize, nd: usize) -> LaneCaches {
+        LaneCaches {
+            values: vec![vec![0.0; nd]; 2 * depth],
+            valid: vec![false; 2 * depth],
+        }
+    }
+}
+
+/// In-flight trajectory state owned by the engine.
+#[derive(Debug)]
+pub struct ActiveRequest {
+    pub req: Request,
+    /// Current latent z_t, flat [C*H*W].
+    pub z: Vec<f32>,
+    /// DDIM timestep subset (descending) and cursor.
+    pub timesteps: Vec<usize>,
+    pub cursor: usize,
+    /// Per-lane caches: [0]=cond, [1]=uncond (if CFG).
+    pub caches: Vec<LaneCaches>,
+    /// Per-(layer,module) skip counts for this request.
+    pub skip_counts: Vec<u32>,
+    pub modules_seen: Vec<u32>,
+    pub started: Instant,
+    pub steps_done: usize,
+}
+
+impl ActiveRequest {
+    pub fn new(req: Request, timesteps: Vec<usize>, depth: usize, nd: usize,
+               img_elems: usize) -> ActiveRequest {
+        let mut rng = Rng::new(req.seed ^ 0xD1FF_051F);
+        let mut z = vec![0.0f32; img_elems];
+        rng.fill_normal(&mut z);
+        let lanes = req.lanes();
+        ActiveRequest {
+            req,
+            z,
+            timesteps,
+            cursor: 0,
+            caches: (0..lanes).map(|_| LaneCaches::empty(depth, nd)).collect(),
+            skip_counts: vec![0; 2 * depth],
+            modules_seen: vec![0; 2 * depth],
+            started: Instant::now(),
+            steps_done: 0,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.cursor >= self.timesteps.len()
+    }
+
+    /// Current timestep, or None when finished.
+    pub fn current_t(&self) -> Option<usize> {
+        self.timesteps.get(self.cursor).copied()
+    }
+
+    /// Next (lower) timestep, or -1 at the boundary.
+    pub fn next_t(&self) -> isize {
+        self.timesteps
+            .get(self.cursor + 1)
+            .map(|&t| t as isize)
+            .unwrap_or(-1)
+    }
+
+    /// The paper's per-request lazy ratio Γ.
+    pub fn lazy_ratio(&self) -> f64 {
+        let seen: u32 = self.modules_seen.iter().sum();
+        let skipped: u32 = self.skip_counts.iter().sum();
+        skipped as f64 / seen.max(1) as f64
+    }
+}
+
+/// Completed request: final image + accounting.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    pub id: u64,
+    pub class_label: usize,
+    pub steps: usize,
+    /// Final sample [C, H, W] flattened.
+    pub image: Tensor,
+    pub lazy_ratio: f64,
+    pub attn_lazy_ratio: f64,
+    pub ffn_lazy_ratio: f64,
+    pub latency: std::time::Duration,
+    /// Per-(layer,module) skip fractions, [2L].
+    pub per_module_skip: Vec<f64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_follow_cfg() {
+        let mut r = Request::new(1, 0, 10, 0);
+        assert_eq!(r.lanes(), 2);
+        r.cfg_scale = 1.0;
+        assert_eq!(r.lanes(), 1);
+    }
+
+    #[test]
+    fn trajectory_state() {
+        let req = Request::new(1, 3, 4, 7);
+        let ar = ActiveRequest::new(req, vec![999, 749, 499, 249], 2, 16 * 32, 192);
+        assert!(!ar.done());
+        assert_eq!(ar.current_t(), Some(999));
+        assert_eq!(ar.next_t(), 749);
+        assert_eq!(ar.caches.len(), 2);
+        assert_eq!(ar.caches[0].values.len(), 4);
+        assert_eq!(ar.z.len(), 192);
+        // z is standard-normal-ish, not all zeros
+        assert!(ar.z.iter().any(|&v| v.abs() > 0.1));
+    }
+
+    #[test]
+    fn noise_deterministic_by_seed() {
+        let a = ActiveRequest::new(Request::new(1, 0, 2, 42), vec![999, 499], 1, 4, 12);
+        let b = ActiveRequest::new(Request::new(2, 5, 2, 42), vec![999, 499], 1, 4, 12);
+        assert_eq!(a.z, b.z, "same seed, same init noise");
+        let c = ActiveRequest::new(Request::new(3, 0, 2, 43), vec![999, 499], 1, 4, 12);
+        assert_ne!(a.z, c.z);
+    }
+
+    #[test]
+    fn boundary_next_t() {
+        let mut ar = ActiveRequest::new(Request::new(1, 0, 1, 0), vec![999], 1, 4, 12);
+        assert_eq!(ar.next_t(), -1);
+        ar.cursor = 1;
+        assert!(ar.done());
+        assert_eq!(ar.current_t(), None);
+    }
+}

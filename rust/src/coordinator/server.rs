@@ -1,0 +1,192 @@
+//! TCP JSON-lines serving front-end with admission control.
+//!
+//! Protocol (one JSON object per line):
+//!   request : {"label": 3, "steps": 20, "seed": 1, "cfg_scale": 1.5}
+//!   response: {"id": 7, "latency_ms": 123.4, "lazy_ratio": 0.31,
+//!              "attn_lazy": 0.35, "ffn_lazy": 0.27, "steps": 20}
+//!   shed    : {"error": "queue full"}
+//!
+//! The engine is single-threaded (PJRT types are not Sync); acceptor
+//! threads feed a bounded queue — backpressure is the queue bound, and
+//! over-bound requests are shed immediately (admission control).
+
+use crate::coordinator::engine::Engine;
+use crate::coordinator::request::{Request, RequestResult};
+use crate::util::json::Json;
+use crate::util::threadpool::BoundedQueue;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+
+/// A queued request with its response channel.
+pub struct Pending {
+    pub req: Request,
+    pub respond: mpsc::Sender<RequestResult>,
+}
+
+/// Parse one request line into a Request (id assigned later).
+pub fn parse_request_line(line: &str) -> Result<Request> {
+    let j = Json::parse(line).context("request json")?;
+    let label = j.req("label")?.as_usize().context("label")?;
+    let steps = j.get("steps").and_then(|v| v.as_usize()).unwrap_or(20);
+    let seed = j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    let cfg_scale = j
+        .get("cfg_scale")
+        .and_then(|v| v.as_f64())
+        .unwrap_or(1.5) as f32;
+    let mut r = Request::new(0, label, steps, seed);
+    r.cfg_scale = cfg_scale;
+    Ok(r)
+}
+
+/// Format a response line.
+pub fn format_response(res: &RequestResult) -> String {
+    Json::obj(vec![
+        ("id", Json::num(res.id as f64)),
+        ("steps", Json::num(res.steps as f64)),
+        ("label", Json::num(res.class_label as f64)),
+        ("latency_ms", Json::num(res.latency.as_secs_f64() * 1e3)),
+        ("lazy_ratio", Json::num(res.lazy_ratio)),
+        ("attn_lazy", Json::num(res.attn_lazy_ratio)),
+        ("ffn_lazy", Json::num(res.ffn_lazy_ratio)),
+    ])
+    .to_string()
+}
+
+fn handle_conn(stream: TcpStream, queue: BoundedQueue<Pending>) {
+    let peer = stream.peer_addr().ok();
+    let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request_line(&line) {
+            Ok(req) => {
+                let (tx, rx) = mpsc::channel();
+                match queue.try_push(Pending { req, respond: tx }) {
+                    Ok(()) => match rx.recv() {
+                        Ok(res) => format_response(&res),
+                        Err(_) => r#"{"error":"engine stopped"}"#.to_string(),
+                    },
+                    Err(_) => r#"{"error":"queue full"}"#.to_string(),
+                }
+            }
+            Err(e) => format!(r#"{{"error":"{e}"}}"#),
+        };
+        if writer.write_all(reply.as_bytes()).is_err()
+            || writer.write_all(b"\n").is_err()
+        {
+            break;
+        }
+        let _ = writer.flush();
+    }
+    log::debug!("connection from {peer:?} closed");
+}
+
+/// Run the serving loop: accept on `addr`, drive the engine until
+/// `max_requests` have completed (0 = forever).
+pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> {
+    let queue: BoundedQueue<Pending> = BoundedQueue::new(engine.serve.queue_cap);
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true)?;
+    log::info!("serving on {addr} (config {})", engine.serve.config_name);
+
+    let q2 = queue.clone();
+    let acceptor = std::thread::Builder::new()
+        .name("lazydit-acceptor".into())
+        .spawn(move || loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let q3 = q2.clone();
+                    std::thread::spawn(move || handle_conn(stream, q3));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => {
+                    log::warn!("accept error: {e}");
+                    break;
+                }
+            }
+        })?;
+
+    let mut responders: std::collections::BTreeMap<u64, mpsc::Sender<RequestResult>> =
+        Default::default();
+    let mut served = 0usize;
+    loop {
+        // admit everything currently queued (bounded by queue cap)
+        for p in queue.drain_up_to(engine.serve.queue_cap) {
+            let id = engine.submit(p.req);
+            responders.insert(id, p.respond);
+        }
+        if engine.active_count() == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            continue;
+        }
+        for res in engine.step_round()? {
+            if let Some(tx) = responders.remove(&res.id) {
+                let _ = tx.send(res);
+            }
+            served += 1;
+        }
+        if max_requests > 0 && served >= max_requests {
+            break;
+        }
+    }
+    queue.close();
+    drop(acceptor); // detached; process exit reaps it
+    log::info!("served {served} requests; lazy ratio {:.3}",
+               engine.layer_stats.overall_ratio());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use std::time::Duration;
+
+    #[test]
+    fn parses_request_lines() {
+        let r = parse_request_line(r#"{"label": 3, "steps": 10, "seed": 7}"#).unwrap();
+        assert_eq!(r.class_label, 3);
+        assert_eq!(r.steps, 10);
+        assert_eq!(r.seed, 7);
+        assert!((r.cfg_scale - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let r = parse_request_line(r#"{"label": 0}"#).unwrap();
+        assert_eq!(r.steps, 20);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse_request_line("not json").is_err());
+        assert!(parse_request_line(r#"{"steps": 10}"#).is_err());
+    }
+
+    #[test]
+    fn formats_responses() {
+        let res = RequestResult {
+            id: 7,
+            class_label: 3,
+            steps: 20,
+            image: Tensor::zeros(&[1]),
+            lazy_ratio: 0.5,
+            attn_lazy_ratio: 0.6,
+            ffn_lazy_ratio: 0.4,
+            latency: Duration::from_millis(120),
+            per_module_skip: vec![],
+        };
+        let s = format_response(&res);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.req("id").unwrap().as_usize().unwrap(), 7);
+        assert!((j.req("lazy_ratio").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+    }
+}

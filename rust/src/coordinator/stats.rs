@@ -1,0 +1,161 @@
+//! Engine-level laziness accounting: aggregate Γ and the per-layer skip
+//! distribution that regenerates Figure 4.
+
+/// Per-(layer,module) skip statistics across all served requests.
+#[derive(Debug, Clone, Default)]
+pub struct LayerStats {
+    /// [2L]: skips per module slot (2l = attn, 2l+1 = ffn).
+    pub skips: Vec<u64>,
+    /// [2L]: invocations per module slot.
+    pub total: Vec<u64>,
+    /// Sum of gate values per slot (for mean-s reporting).
+    pub s_sum: Vec<f64>,
+}
+
+impl LayerStats {
+    pub fn new(depth: usize) -> LayerStats {
+        LayerStats {
+            skips: vec![0; 2 * depth],
+            total: vec![0; 2 * depth],
+            s_sum: vec![0.0; 2 * depth],
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.skips.len() / 2
+    }
+
+    pub fn record(&mut self, slot: usize, skipped: bool, mean_s: f64) {
+        self.total[slot] += 1;
+        self.s_sum[slot] += mean_s;
+        if skipped {
+            self.skips[slot] += 1;
+        }
+    }
+
+    /// Lazy ratio of the attn module at layer l.
+    pub fn attn_ratio(&self, l: usize) -> f64 {
+        ratio(self.skips[2 * l], self.total[2 * l])
+    }
+
+    /// Lazy ratio of the ffn module at layer l.
+    pub fn ffn_ratio(&self, l: usize) -> f64 {
+        ratio(self.skips[2 * l + 1], self.total[2 * l + 1])
+    }
+
+    pub fn overall_ratio(&self) -> f64 {
+        ratio(self.skips.iter().sum(), self.total.iter().sum())
+    }
+
+    pub fn attn_overall(&self) -> f64 {
+        let s: u64 = (0..self.depth()).map(|l| self.skips[2 * l]).sum();
+        let t: u64 = (0..self.depth()).map(|l| self.total[2 * l]).sum();
+        ratio(s, t)
+    }
+
+    pub fn ffn_overall(&self) -> f64 {
+        let s: u64 = (0..self.depth()).map(|l| self.skips[2 * l + 1]).sum();
+        let t: u64 = (0..self.depth()).map(|l| self.total[2 * l + 1]).sum();
+        ratio(s, t)
+    }
+
+    /// ASCII bar chart of per-layer laziness (Fig. 4 regeneration).
+    pub fn render_fig4(&self) -> String {
+        let mut out = String::from(
+            "\nlayer-wise laziness (paper Fig. 4): ratio of skipped invocations\n",
+        );
+        for l in 0..self.depth() {
+            let a = self.attn_ratio(l);
+            let f = self.ffn_ratio(l);
+            out.push_str(&format!(
+                "  layer {l:>2}  MHSA {:>5.1}% |{:<20}|  FFN {:>5.1}% |{:<20}|\n",
+                100.0 * a,
+                "#".repeat((a * 20.0).round() as usize),
+                100.0 * f,
+                "#".repeat((f * 20.0).round() as usize),
+            ));
+        }
+        out
+    }
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    num as f64 / den.max(1) as f64
+}
+
+/// Serving-level latency/throughput aggregation.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub completed: usize,
+    pub shed: usize,
+    pub latencies_s: Vec<f64>,
+    pub wall_s: f64,
+    pub module_invocations: u64,
+    pub module_skips: u64,
+}
+
+impl ServeStats {
+    pub fn throughput(&self) -> f64 {
+        self.completed as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        crate::metrics::stats::mean(&self.latencies_s)
+    }
+
+    pub fn p99_latency(&self) -> f64 {
+        crate::metrics::stats::quantile(&self.latencies_s, 0.99)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios() {
+        let mut st = LayerStats::new(2);
+        // layer 0 attn: 1 skip of 2; layer 1 ffn: 2 skips of 2
+        st.record(0, true, 0.9);
+        st.record(0, false, 0.3);
+        st.record(3, true, 0.8);
+        st.record(3, true, 0.9);
+        assert!((st.attn_ratio(0) - 0.5).abs() < 1e-9);
+        assert_eq!(st.ffn_ratio(1), 1.0);
+        assert_eq!(st.attn_ratio(1), 0.0);
+        assert!((st.overall_ratio() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_module_aggregates() {
+        let mut st = LayerStats::new(1);
+        st.record(0, true, 0.9);
+        st.record(1, false, 0.1);
+        assert_eq!(st.attn_overall(), 1.0);
+        assert_eq!(st.ffn_overall(), 0.0);
+    }
+
+    #[test]
+    fn fig4_renders() {
+        let mut st = LayerStats::new(3);
+        st.record(0, true, 0.9);
+        st.record(1, false, 0.2);
+        let s = st.render_fig4();
+        assert!(s.contains("layer  0"));
+        assert!(s.contains("MHSA"));
+    }
+
+    #[test]
+    fn serve_stats_math() {
+        let st = ServeStats {
+            completed: 10,
+            shed: 0,
+            latencies_s: vec![1.0, 2.0, 3.0],
+            wall_s: 5.0,
+            module_invocations: 100,
+            module_skips: 30,
+        };
+        assert!((st.throughput() - 2.0).abs() < 1e-9);
+        assert!((st.mean_latency() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,8 @@
+//! Data substrates: the SynthBlobs-10 dataset (ImageNet stand-in, see
+//! DESIGN.md §4) and serving workload/trace generation.
+
+pub mod synth;
+pub mod workload;
+
+pub use synth::SynthBlobs;
+pub use workload::{Trace, TraceEvent, WorkloadSpec};

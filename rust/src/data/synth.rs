@@ -1,0 +1,179 @@
+//! SynthBlobs-10: a procedural, class-conditional image distribution used
+//! as the ImageNet substitute (DESIGN.md §4 substitution table).
+//!
+//! Each of the 10 classes is a deterministic template of two colored
+//! Gaussian blobs (class-specific positions, colors, widths) over a
+//! class-tinted background. Samples jitter blob positions, colors and
+//! background and add pixel noise — multi-modal, learnable in minutes,
+//! and discriminative enough for the FID/IS analogs to rank methods.
+//!
+//! Values are in [-1, 1], layout NCHW, C = 3.
+
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+
+/// Dataset generator for one image size.
+#[derive(Debug, Clone)]
+pub struct SynthBlobs {
+    pub img_size: usize,
+    pub num_classes: usize,
+}
+
+/// Deterministic per-class template.
+#[derive(Debug, Clone)]
+pub struct ClassTemplate {
+    pub centers: [(f32, f32); 2],
+    pub colors: [[f32; 3]; 2],
+    pub sigma: f32,
+    pub background: [f32; 3],
+}
+
+impl SynthBlobs {
+    pub fn new(img_size: usize) -> SynthBlobs {
+        SynthBlobs { img_size, num_classes: 10 }
+    }
+
+    /// The fixed template of class `k` (independent of sampling RNG).
+    pub fn template(&self, k: usize) -> ClassTemplate {
+        assert!(k < self.num_classes);
+        // derive all constants from a per-class PRNG stream so templates
+        // are reproducible everywhere (python never needs them)
+        let mut rng = Rng::new(0x5EED_0000 + k as u64);
+        let angle = 2.0 * std::f32::consts::PI * (k as f32) / self.num_classes as f32;
+        let r = 0.28;
+        let c1 = (0.5 + r * angle.cos(), 0.5 + r * angle.sin());
+        let c2 = (0.5 - r * angle.cos(), 0.5 - r * angle.sin());
+        let mut color = || {
+            [
+                rng.uniform_in(-0.9, 0.9),
+                rng.uniform_in(-0.9, 0.9),
+                rng.uniform_in(-0.9, 0.9),
+            ]
+        };
+        let colors = [color(), color()];
+        let background = [
+            rng.uniform_in(-0.25, 0.25),
+            rng.uniform_in(-0.25, 0.25),
+            rng.uniform_in(-0.25, 0.25),
+        ];
+        let sigma = 0.10 + 0.05 * ((k % 3) as f32);
+        ClassTemplate { centers: [c1, c2], colors, sigma, background }
+    }
+
+    /// Render one sample of class `k` into `out` ([3, S, S] slice).
+    pub fn render_into(&self, k: usize, rng: &mut Rng, out: &mut [f32]) {
+        let s = self.img_size;
+        debug_assert_eq!(out.len(), 3 * s * s);
+        let t = self.template(k);
+        // per-sample jitter
+        let jitter = 0.06;
+        let centers: Vec<(f32, f32)> = t
+            .centers
+            .iter()
+            .map(|&(cx, cy)| {
+                (
+                    cx + rng.uniform_in(-jitter, jitter),
+                    cy + rng.uniform_in(-jitter, jitter),
+                )
+            })
+            .collect();
+        let cscale = rng.uniform_in(0.85, 1.15);
+        let bg_jit = rng.uniform_in(-0.08, 0.08);
+        let sigma = t.sigma * rng.uniform_in(0.9, 1.1);
+        let inv2s2 = 1.0 / (2.0 * sigma * sigma);
+        let noise_amp = 0.05;
+
+        for c in 0..3 {
+            for y in 0..s {
+                for x in 0..s {
+                    let fx = (x as f32 + 0.5) / s as f32;
+                    let fy = (y as f32 + 0.5) / s as f32;
+                    let mut v = t.background[c] + bg_jit;
+                    for (bi, &(cx, cy)) in centers.iter().enumerate() {
+                        let d2 = (fx - cx) * (fx - cx) + (fy - cy) * (fy - cy);
+                        v += cscale * t.colors[bi][c] * (-d2 * inv2s2).exp();
+                    }
+                    v += noise_amp * rng.normal();
+                    out[c * s * s + y * s + x] = v.clamp(-1.0, 1.0);
+                }
+            }
+        }
+    }
+
+    /// Sample a batch: images [B, 3, S, S] and labels [B].
+    pub fn sample_batch(&self, rng: &mut Rng, batch: usize) -> (Tensor, Vec<usize>) {
+        let s = self.img_size;
+        let mut imgs = Tensor::zeros(&[batch, 3, s, s]);
+        let mut labels = Vec::with_capacity(batch);
+        let row = 3 * s * s;
+        for b in 0..batch {
+            let k = rng.below(self.num_classes);
+            labels.push(k);
+            self.render_into(k, rng, &mut imgs.data_mut()[b * row..(b + 1) * row]);
+        }
+        (imgs, labels)
+    }
+
+    /// Sample a batch with the given labels.
+    pub fn sample_batch_labeled(&self, rng: &mut Rng, labels: &[usize]) -> Tensor {
+        let s = self.img_size;
+        let mut imgs = Tensor::zeros(&[labels.len(), 3, s, s]);
+        let row = 3 * s * s;
+        for (b, &k) in labels.iter().enumerate() {
+            self.render_into(k, rng, &mut imgs.data_mut()[b * row..(b + 1) * row]);
+        }
+        imgs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values_in_range() {
+        let ds = SynthBlobs::new(8);
+        let mut rng = Rng::new(1);
+        let (imgs, labels) = ds.sample_batch(&mut rng, 16);
+        assert_eq!(imgs.shape(), &[16, 3, 8, 8]);
+        assert_eq!(labels.len(), 16);
+        for &v in imgs.data() {
+            assert!((-1.0..=1.0).contains(&v));
+        }
+        assert!(labels.iter().all(|&k| k < 10));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = SynthBlobs::new(8);
+        let (a, la) = ds.sample_batch(&mut Rng::new(7), 4);
+        let (b, lb) = ds.sample_batch(&mut Rng::new(7), 4);
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // mean intra-class distance should be well below inter-class
+        let ds = SynthBlobs::new(8);
+        let mut rng = Rng::new(3);
+        let a1 = ds.sample_batch_labeled(&mut rng, &[0; 8]);
+        let a2 = ds.sample_batch_labeled(&mut rng, &[0; 8]);
+        let b = ds.sample_batch_labeled(&mut rng, &[5; 8]);
+        let intra = a1.sub(&a2).l2_norm();
+        let inter = a1.sub(&b).l2_norm();
+        assert!(
+            inter > 1.5 * intra,
+            "inter {inter} should dominate intra {intra}"
+        );
+    }
+
+    #[test]
+    fn templates_fixed() {
+        let ds = SynthBlobs::new(16);
+        let t1 = ds.template(3);
+        let t2 = ds.template(3);
+        assert_eq!(t1.centers, t2.centers);
+        assert_eq!(t1.colors, t2.colors);
+    }
+}

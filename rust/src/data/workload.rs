@@ -1,0 +1,108 @@
+//! Serving workload generation: Poisson-arrival request traces with
+//! configurable step counts, class mixes and lazy settings — the input to
+//! the latency/throughput benches (Tables 3/6) and the serve example.
+
+use crate::util::prng::Rng;
+
+/// One request in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Arrival offset from trace start, seconds.
+    pub at: f64,
+    pub class_label: usize,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+/// A generated trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+/// Trace-generation parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub requests: usize,
+    /// Mean arrival rate (req/s). 0 ⇒ all arrive at t=0 (closed-loop batch).
+    pub rate: f64,
+    pub steps_choices: Vec<usize>,
+    pub num_classes: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            requests: 32,
+            rate: 0.0,
+            steps_choices: vec![20],
+            num_classes: 10,
+            seed: 0,
+        }
+    }
+}
+
+impl WorkloadSpec {
+    pub fn generate(&self) -> Trace {
+        let mut rng = Rng::new(self.seed ^ 0x77C0_11AD);
+        let mut t = 0.0f64;
+        let mut events = Vec::with_capacity(self.requests);
+        for i in 0..self.requests {
+            if self.rate > 0.0 {
+                t += rng.exponential(self.rate);
+            }
+            let steps = self.steps_choices[rng.below(self.steps_choices.len())];
+            events.push(TraceEvent {
+                at: t,
+                class_label: rng.below(self.num_classes),
+                steps,
+                seed: self.seed.wrapping_mul(0x9E37).wrapping_add(i as u64),
+            });
+        }
+        Trace { events }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_loop_all_at_zero() {
+        let spec = WorkloadSpec { requests: 10, rate: 0.0, ..Default::default() };
+        let tr = spec.generate();
+        assert_eq!(tr.events.len(), 10);
+        assert!(tr.events.iter().all(|e| e.at == 0.0));
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let spec = WorkloadSpec { requests: 100, rate: 50.0, ..Default::default() };
+        let tr = spec.generate();
+        for w in tr.events.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+        // mean inter-arrival ≈ 1/rate
+        let total = tr.events.last().unwrap().at;
+        let mean = total / 99.0;
+        assert!((mean - 0.02).abs() < 0.01, "mean inter-arrival {mean}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = WorkloadSpec { requests: 20, rate: 10.0, seed: 5, ..Default::default() };
+        assert_eq!(spec.generate().events, spec.generate().events);
+    }
+
+    #[test]
+    fn respects_step_choices() {
+        let spec = WorkloadSpec {
+            requests: 50,
+            steps_choices: vec![10, 20],
+            ..Default::default()
+        };
+        let tr = spec.generate();
+        assert!(tr.events.iter().all(|e| e.steps == 10 || e.steps == 20));
+    }
+}

@@ -1,0 +1,7 @@
+//! Output writers: PNG encoder (sample grids, Figures 1/3/7), CSV dumps,
+//! and aligned markdown table printing for the paper-table harnesses.
+
+pub mod png;
+pub mod table;
+
+pub use table::TableWriter;

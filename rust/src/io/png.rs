@@ -1,0 +1,172 @@
+//! Minimal PNG encoder substrate (no image crates offline): 8-bit RGB,
+//! stored-deflate zlib blocks, hand-rolled CRC32 and Adler-32.
+//! Enough to dump the sample grids of Figures 1/3/7.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// CRC32 (IEEE, reflected) — PNG chunk checksums.
+fn crc32(data: &[u8]) -> u32 {
+    // small table-less implementation; fine for our file sizes
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn adler32(data: &[u8]) -> u32 {
+    let mut a = 1u32;
+    let mut b = 0u32;
+    for &byte in data {
+        a = (a + byte as u32) % 65521;
+        b = (b + a) % 65521;
+    }
+    (b << 16) | a
+}
+
+fn chunk(out: &mut Vec<u8>, kind: &[u8; 4], body: &[u8]) {
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(kind);
+    out.extend_from_slice(body);
+    let mut crc_input = Vec::with_capacity(4 + body.len());
+    crc_input.extend_from_slice(kind);
+    crc_input.extend_from_slice(body);
+    out.extend_from_slice(&crc32(&crc_input).to_be_bytes());
+}
+
+/// zlib container with stored (uncompressed) deflate blocks.
+fn zlib_stored(raw: &[u8]) -> Vec<u8> {
+    let mut out = vec![0x78, 0x01]; // CMF/FLG (no compression preset)
+    for (i, block) in raw.chunks(65535).enumerate() {
+        let last = (i + 1) * 65535 >= raw.len();
+        out.push(if last { 1 } else { 0 });
+        out.extend_from_slice(&(block.len() as u16).to_le_bytes());
+        out.extend_from_slice(&(!(block.len() as u16)).to_le_bytes());
+        out.extend_from_slice(block);
+    }
+    out.extend_from_slice(&adler32(raw).to_be_bytes());
+    out
+}
+
+/// Encode an RGB8 image (row-major, 3 bytes/pixel) to PNG bytes.
+pub fn encode_rgb(width: usize, height: usize, pixels: &[u8]) -> Result<Vec<u8>> {
+    if pixels.len() != width * height * 3 {
+        bail!("pixel buffer size mismatch");
+    }
+    let mut out = Vec::new();
+    out.extend_from_slice(b"\x89PNG\r\n\x1a\n");
+    let mut ihdr = Vec::new();
+    ihdr.extend_from_slice(&(width as u32).to_be_bytes());
+    ihdr.extend_from_slice(&(height as u32).to_be_bytes());
+    ihdr.extend_from_slice(&[8, 2, 0, 0, 0]); // 8-bit, RGB, deflate, none, none
+    chunk(&mut out, b"IHDR", &ihdr);
+    // raw scanlines with filter byte 0
+    let mut raw = Vec::with_capacity(height * (1 + width * 3));
+    for y in 0..height {
+        raw.push(0);
+        raw.extend_from_slice(&pixels[y * width * 3..(y + 1) * width * 3]);
+    }
+    chunk(&mut out, b"IDAT", &zlib_stored(&raw));
+    chunk(&mut out, b"IEND", &[]);
+    Ok(out)
+}
+
+/// Convert one [3, S, S] image in [-1, 1] to RGB8 row-major.
+pub fn tensor_image_to_rgb(img: &[f32], s: usize) -> Vec<u8> {
+    let mut px = vec![0u8; s * s * 3];
+    for y in 0..s {
+        for x in 0..s {
+            for c in 0..3 {
+                let v = img[c * s * s + y * s + x];
+                px[(y * s + x) * 3 + c] = (((v + 1.0) * 0.5).clamp(0.0, 1.0) * 255.0) as u8;
+            }
+        }
+    }
+    px
+}
+
+/// Write a grid of [B, 3, S, S] images (cols × rows, zero-padded) with
+/// `scale`-pixel upsampling (nearest) so 8×8 toys are visible.
+pub fn write_grid(path: &Path, imgs: &Tensor, cols: usize, scale: usize) -> Result<()> {
+    let shape = imgs.shape();
+    if shape.len() != 4 || shape[1] != 3 {
+        bail!("expected [B,3,S,S], got {:?}", shape);
+    }
+    let (b, s) = (shape[0], shape[2]);
+    let rows = b.div_ceil(cols);
+    let cell = s * scale;
+    let (w, h) = (cols * cell, rows * cell);
+    let mut px = vec![0u8; w * h * 3];
+    for i in 0..b {
+        let rgb = tensor_image_to_rgb(imgs.row(i), s);
+        let (gy, gx) = (i / cols, i % cols);
+        for y in 0..cell {
+            for x in 0..cell {
+                let src = ((y / scale) * s + (x / scale)) * 3;
+                let dst = ((gy * cell + y) * w + gx * cell + x) * 3;
+                px[dst..dst + 3].copy_from_slice(&rgb[src..src + 3]);
+            }
+        }
+    }
+    let bytes = encode_rgb(w, h, &px)?;
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC32("123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn adler32_known_vector() {
+        // Adler32("Wikipedia") = 0x11E60398
+        assert_eq!(adler32(b"Wikipedia"), 0x11E6_0398);
+    }
+
+    #[test]
+    fn encodes_valid_signature_and_chunks() {
+        let px = vec![255u8; 4 * 4 * 3];
+        let png = encode_rgb(4, 4, &px).unwrap();
+        assert_eq!(&png[..8], b"\x89PNG\r\n\x1a\n");
+        assert_eq!(&png[12..16], b"IHDR");
+        assert_eq!(&png[png.len() - 8..png.len() - 4], b"IEND");
+    }
+
+    #[test]
+    fn rejects_bad_buffer() {
+        assert!(encode_rgb(4, 4, &[0u8; 5]).is_err());
+    }
+
+    #[test]
+    fn tensor_to_rgb_range() {
+        let img = vec![-1.0f32, 1.0, 0.0, 0.5, -1.0, 1.0, 0.0, 0.5, -1.0, 1.0, 0.0, 0.5];
+        let rgb = tensor_image_to_rgb(&img, 2);
+        assert_eq!(rgb.len(), 12);
+        assert_eq!(rgb[0], 0); // -1 -> 0
+        // channel layout interleaved per pixel
+        assert!(rgb.iter().all(|&v| v <= 255));
+    }
+
+    #[test]
+    fn grid_writes_file() {
+        let dir = std::env::temp_dir().join("lazydit_png_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("grid.png");
+        let imgs = Tensor::from_vec(&[2, 3, 2, 2], vec![0.5; 24]).unwrap();
+        write_grid(&p, &imgs, 2, 4).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..4], b"\x89PNG");
+    }
+}

@@ -1,0 +1,147 @@
+//! Aligned table printer + CSV writer for the paper-table harnesses.
+
+use anyhow::Result;
+use std::path::Path;
+
+/// Collects rows and renders a monospace table (and CSV).
+#[derive(Debug, Clone)]
+pub struct TableWriter {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableWriter {
+    pub fn new(title: &str, headers: &[&str]) -> TableWriter {
+        TableWriter {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Insert a horizontal separator (rendered as a dashed line).
+    pub fn hline(&mut self) {
+        self.rows.push(vec!["---".to_string(); self.headers.len()]);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            if r.iter().all(|c| c == "---") {
+                out.push_str(&sep);
+            } else {
+                out.push_str(&fmt_row(r));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        let mut s = String::new();
+        s.push_str(&self.headers.join(","));
+        s.push('\n');
+        for r in &self.rows {
+            if r.iter().all(|c| c == "---") {
+                continue;
+            }
+            let esc: Vec<String> = r
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            s.push_str(&esc.join(","));
+            s.push('\n');
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+}
+
+/// f64 formatting helpers for table cells.
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn f4(v: f64) -> String {
+    format!("{v:.4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TableWriter::new("T", &["method", "fid"]);
+        t.row(vec!["DDIM".into(), "2.34".into()]);
+        t.row(vec!["Ours".into(), "2.37".into()]);
+        let s = t.render();
+        assert!(s.contains("method"));
+        assert!(s.contains("DDIM"));
+        // all data lines equal width
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("lazydit_table_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        let mut t = TableWriter::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "x,y".into()]);
+        t.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "a,b\n1,\"x,y\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_column_count_panics() {
+        let mut t = TableWriter::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

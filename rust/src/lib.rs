@@ -1,0 +1,45 @@
+//! # LazyDiT — lazy learning for the acceleration of diffusion transformers
+//!
+//! Rust + JAX + Pallas reproduction of Shen et al., AAAI 2025 (see
+//! `DESIGN.md`). This crate is the L3 layer: the serving coordinator,
+//! sampler, training drivers, metrics, benchmarks, and every substrate
+//! they need. Model compute runs through AOT-compiled XLA executables
+//! (`artifacts/*.hlo.txt`) loaded via the PJRT C API — Python is never on
+//! the request path.
+//!
+//! Module map (DESIGN.md §5):
+//! * [`util`] — substrates: JSON, PRNG, npy, argparse, thread pool,
+//!   property-testing mini-framework, logging.
+//! * [`config`] — model/serve/train configuration.
+//! * [`tensor`] — host tensors and the small host-side math.
+//! * [`runtime`] — PJRT client, manifest, executable registry.
+//! * [`model`] — parameter store, checkpoints, the lazy block runner.
+//! * [`sampler`] — diffusion schedules, DDIM, classifier-free guidance.
+//! * [`coordinator`] — the paper's system contribution: router, continuous
+//!   batcher, denoise scheduler, cache manager, skip policies, server.
+//! * [`train`] — pretraining + lazy-learning drivers (AOT train steps).
+//! * [`data`] — SynthBlobs-10 dataset and workload generators.
+//! * [`metrics`] — FID/sFID/IS/precision-recall analogs + linalg.
+//! * [`baselines`] — DDIM step-reduction, Learn2Cache-analog, DeepCache-analog.
+//! * [`tmacs`] — analytic compute-cost model (TMACs columns).
+//! * [`io`] — PNG/CSV/markdown writers.
+//! * [`bench`] — benchmark harness (criterion is unavailable offline).
+
+pub mod util;
+pub mod config;
+pub mod tensor;
+pub mod runtime;
+pub mod model;
+pub mod sampler;
+pub mod coordinator;
+pub mod train;
+pub mod data;
+pub mod metrics;
+pub mod baselines;
+pub mod tmacs;
+pub mod io;
+pub mod bench;
+pub mod cli;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,9 @@
+//! `lazydit` — leader entrypoint + CLI (DESIGN.md §5).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = lazydit::cli::dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

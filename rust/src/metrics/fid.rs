@@ -1,0 +1,89 @@
+//! Fréchet distance between two feature sets — the FID/sFID analog
+//! (Heusel et al. 2017 formula over our fixed random feature net):
+//!
+//!   FD = ‖μ₁−μ₂‖² + tr(Σ₁ + Σ₂ − 2·(Σ₁Σ₂)^{1/2})
+//!
+//! The cross term uses the symmetric form (Σ₁^{1/2} Σ₂ Σ₁^{1/2})^{1/2}
+//! so every square root is of a PSD matrix.
+
+use crate::metrics::linalg::{mean_cov, sqrtm_psd, Mat};
+
+/// Fréchet distance between row-major feature sets a: [na, d], b: [nb, d].
+pub fn frechet_distance(a: &[f32], na: usize, b: &[f32], nb: usize, d: usize) -> f64 {
+    let (mu1, s1) = mean_cov(a, na, d);
+    let (mu2, s2) = mean_cov(b, nb, d);
+    frechet_from_moments(&mu1, &s1, &mu2, &s2)
+}
+
+/// Fréchet distance from precomputed moments.
+pub fn frechet_from_moments(mu1: &[f64], s1: &Mat, mu2: &[f64], s2: &Mat) -> f64 {
+    let d = mu1.len();
+    assert_eq!(mu2.len(), d);
+    let mean_term: f64 = (0..d).map(|i| (mu1[i] - mu2[i]).powi(2)).sum();
+    // tr((Σ1 Σ2)^{1/2}) via the PSD-symmetric equivalent
+    let r1 = sqrtm_psd(s1);
+    let inner = r1.matmul(s2).matmul(&r1).symmetrize();
+    let cross = sqrtm_psd(&inner);
+    let cov_term = s1.trace() + s2.trace() - 2.0 * cross.trace();
+    (mean_term + cov_term).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn gauss_rows(rng: &mut Rng, n: usize, d: usize, mean: f32, sd: f32) -> Vec<f32> {
+        (0..n * d).map(|_| mean + sd * rng.normal()).collect()
+    }
+
+    #[test]
+    fn identical_sets_near_zero() {
+        let mut rng = Rng::new(1);
+        let a = gauss_rows(&mut rng, 500, 8, 0.0, 1.0);
+        let fd = frechet_distance(&a, 500, &a, 500, 8);
+        assert!(fd < 1e-9, "fd {fd}");
+    }
+
+    #[test]
+    fn same_distribution_small() {
+        let mut rng = Rng::new(2);
+        let a = gauss_rows(&mut rng, 2000, 4, 0.0, 1.0);
+        let b = gauss_rows(&mut rng, 2000, 4, 0.0, 1.0);
+        let fd = frechet_distance(&a, 2000, &b, 2000, 4);
+        assert!(fd < 0.05, "fd {fd}");
+    }
+
+    #[test]
+    fn mean_shift_detected() {
+        // two isotropic gaussians d=4 shifted by 2 per dim: FD ≈ 4*2² = 16
+        let mut rng = Rng::new(3);
+        let a = gauss_rows(&mut rng, 4000, 4, 0.0, 1.0);
+        let b = gauss_rows(&mut rng, 4000, 4, 2.0, 1.0);
+        let fd = frechet_distance(&a, 4000, &b, 4000, 4);
+        assert!((fd - 16.0).abs() < 1.0, "fd {fd}");
+    }
+
+    #[test]
+    fn variance_shift_detected() {
+        // N(0,1) vs N(0,4) per dim, d=2: FD = 2*(1+4-2*2) = 2
+        let mut rng = Rng::new(4);
+        let a = gauss_rows(&mut rng, 4000, 2, 0.0, 1.0);
+        let b = gauss_rows(&mut rng, 4000, 2, 0.0, 2.0);
+        let fd = frechet_distance(&a, 4000, &b, 4000, 2);
+        assert!((fd - 2.0).abs() < 0.4, "fd {fd}");
+    }
+
+    #[test]
+    fn monotone_in_shift() {
+        let mut rng = Rng::new(5);
+        let a = gauss_rows(&mut rng, 2000, 4, 0.0, 1.0);
+        let mut last = -1.0;
+        for shift in [0.0f32, 0.5, 1.0, 2.0] {
+            let b = gauss_rows(&mut rng, 2000, 4, shift, 1.0);
+            let fd = frechet_distance(&a, 2000, &b, 2000, 4);
+            assert!(fd > last, "fd {fd} at shift {shift} not > {last}");
+            last = fd;
+        }
+    }
+}

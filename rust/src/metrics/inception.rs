@@ -1,0 +1,182 @@
+//! Inception-Score analog (Salimans et al. 2016 functional form):
+//!
+//!   IS = exp( E_x KL( p(y|x) ‖ p(y) ) )
+//!
+//! The paper scores with an ImageNet InceptionV3; our substitute classifier
+//! is a nearest-centroid softmax in the fixed feature space: class
+//! centroids are estimated from real SynthBlobs samples, and
+//! p(y|x) = softmax(−τ·‖f(x) − μ_y‖²). This keeps the same quality ×
+//! diversity semantics: confident, class-diverse samples score high.
+
+/// A centroid-softmax classifier over feature space.
+#[derive(Debug, Clone)]
+pub struct CentroidClassifier {
+    pub centroids: Vec<Vec<f32>>, // [K][d]
+    pub tau: f32,
+}
+
+impl CentroidClassifier {
+    /// Fit centroids from labeled real features ([n, d] rows).
+    pub fn fit(feats: &[f32], labels: &[usize], d: usize, num_classes: usize,
+               tau: f32) -> CentroidClassifier {
+        let n = labels.len();
+        assert_eq!(feats.len(), n * d);
+        let mut centroids = vec![vec![0.0f32; d]; num_classes];
+        let mut counts = vec![0usize; num_classes];
+        for (i, &k) in labels.iter().enumerate() {
+            counts[k] += 1;
+            for j in 0..d {
+                centroids[k][j] += feats[i * d + j];
+            }
+        }
+        for k in 0..num_classes {
+            if counts[k] > 0 {
+                for j in 0..d {
+                    centroids[k][j] /= counts[k] as f32;
+                }
+            }
+        }
+        CentroidClassifier { centroids, tau }
+    }
+
+    /// p(y|x) for one feature row.
+    pub fn predict(&self, feat: &[f32]) -> Vec<f64> {
+        let k = self.centroids.len();
+        let mut logits = vec![0.0f64; k];
+        for (c, cen) in self.centroids.iter().enumerate() {
+            let d2: f32 = feat
+                .iter()
+                .zip(cen)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            logits[c] = -(self.tau * d2) as f64;
+        }
+        softmax(&logits)
+    }
+
+    /// Top-1 classification accuracy on labeled features (sanity metric).
+    pub fn accuracy(&self, feats: &[f32], labels: &[usize], d: usize) -> f64 {
+        let mut hits = 0usize;
+        for (i, &k) in labels.iter().enumerate() {
+            let p = self.predict(&feats[i * d..(i + 1) * d]);
+            let arg = p
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if arg == k {
+                hits += 1;
+            }
+        }
+        hits as f64 / labels.len().max(1) as f64
+    }
+}
+
+fn softmax(logits: &[f64]) -> Vec<f64> {
+    let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+/// IS over generated features ([n, d] rows) with the given classifier.
+pub fn inception_score(clf: &CentroidClassifier, feats: &[f32], n: usize,
+                       d: usize) -> f64 {
+    assert!(n > 0);
+    let k = clf.centroids.len();
+    let mut marginal = vec![0.0f64; k];
+    let mut conds = Vec::with_capacity(n);
+    for i in 0..n {
+        let p = clf.predict(&feats[i * d..(i + 1) * d]);
+        for (m, pi) in marginal.iter_mut().zip(&p) {
+            *m += pi;
+        }
+        conds.push(p);
+    }
+    for m in marginal.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut kl_sum = 0.0;
+    for p in &conds {
+        for (pi, mi) in p.iter().zip(&marginal) {
+            if *pi > 1e-12 && *mi > 1e-12 {
+                kl_sum += pi * (pi / mi).ln();
+            }
+        }
+    }
+    (kl_sum / n as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    /// Synthetic feature world: K well-separated centroids.
+    fn world(k: usize, d: usize) -> CentroidClassifier {
+        let mut cents = vec![vec![0.0f32; d]; k];
+        for (i, c) in cents.iter_mut().enumerate() {
+            c[i % d] = 5.0 * (1.0 + (i / d) as f32);
+        }
+        CentroidClassifier { centroids: cents, tau: 1.0 }
+    }
+
+    #[test]
+    fn perfect_diverse_samples_score_k() {
+        // one noiseless sample exactly at each centroid: IS -> K
+        let k = 5;
+        let d = 8;
+        let clf = world(k, d);
+        let feats: Vec<f32> = clf.centroids.iter().flatten().cloned().collect();
+        let is = inception_score(&clf, &feats, k, d);
+        assert!((is - k as f64).abs() < 0.2, "IS {is}");
+    }
+
+    #[test]
+    fn mode_collapse_scores_one() {
+        // all samples at one centroid: marginal == conditional ⇒ IS = 1
+        let k = 5;
+        let d = 8;
+        let clf = world(k, d);
+        let one = &clf.centroids[2];
+        let n = 50;
+        let feats: Vec<f32> = (0..n).flat_map(|_| one.clone()).collect();
+        let is = inception_score(&clf, &feats, n, d);
+        assert!((is - 1.0).abs() < 1e-6, "IS {is}");
+    }
+
+    #[test]
+    fn garbage_scores_low() {
+        // far-away noise: conditionals ≈ uniform ⇒ IS ≈ 1
+        let k = 5;
+        let d = 8;
+        let clf = world(k, d);
+        let mut rng = Rng::new(7);
+        let n = 100;
+        let feats: Vec<f32> = (0..n * d).map(|_| 100.0 + 0.01 * rng.normal()).collect();
+        let is = inception_score(&clf, &feats, n, d);
+        assert!(is < 1.5, "IS {is}");
+    }
+
+    #[test]
+    fn fit_recovers_centroids_and_classifies() {
+        let mut rng = Rng::new(9);
+        let k = 3;
+        let d = 4;
+        let true_c = world(k, d);
+        let n = 300;
+        let mut feats = Vec::with_capacity(n * d);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let y = i % k;
+            labels.push(y);
+            for j in 0..d {
+                feats.push(true_c.centroids[y][j] + 0.3 * rng.normal());
+            }
+        }
+        let clf = CentroidClassifier::fit(&feats, &labels, d, k, 1.0);
+        let acc = clf.accuracy(&feats, &labels, d);
+        assert!(acc > 0.95, "acc {acc}");
+    }
+}

@@ -1,0 +1,274 @@
+//! Small dense linear algebra substrate: symmetric Jacobi eigensolver and
+//! PSD matrix square root — all the FID computation needs at feature
+//! dimension 64.
+
+/// Row-major square matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Mat {
+        Mat { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n);
+        for i in 0..n {
+            m.a[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let n = rows.len();
+        let mut m = Mat::zeros(n);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), n);
+            m.a[i * n..(i + 1) * n].copy_from_slice(r);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let aik = self.a[i * n + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.a[i * n + j] += aik * other.a[k * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out.a[j * n + i] = self.a[i * n + j];
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self.a[i * self.n + i]).sum()
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n, other.n);
+        Mat {
+            n: self.n,
+            a: self.a.iter().zip(&other.a).map(|(x, y)| x + y).collect(),
+        }
+    }
+
+    pub fn scale(&self, k: f64) -> Mat {
+        Mat { n: self.n, a: self.a.iter().map(|x| x * k).collect() }
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        self.a
+            .iter()
+            .zip(&other.a)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Symmetrize: 0.5(A + Aᵀ) — guards numerical asymmetry.
+    pub fn symmetrize(&self) -> Mat {
+        self.add(&self.transpose()).scale(0.5)
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues, eigenvectors as columns of V) with A = V Λ Vᵀ.
+pub fn sym_eigen(m: &Mat) -> (Vec<f64>, Mat) {
+    let n = m.n;
+    let mut a = m.symmetrize();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        // off-diagonal Frobenius norm
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a.get(i, j) * a.get(i, j);
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a.get(p, p);
+                let aqq = a.get(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of A
+                for k in 0..n {
+                    let akp = a.get(k, p);
+                    let akq = a.get(k, q);
+                    a.set(k, p, c * akp - s * akq);
+                    a.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..n {
+                    let apk = a.get(p, k);
+                    let aqk = a.get(q, k);
+                    a.set(p, k, c * apk - s * aqk);
+                    a.set(q, k, s * apk + c * aqk);
+                }
+                // accumulate V
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let eig = (0..n).map(|i| a.get(i, i)).collect();
+    (eig, v)
+}
+
+/// PSD matrix square root via eigendecomposition; negative eigenvalues
+/// (numerical noise) are clamped to zero.
+pub fn sqrtm_psd(m: &Mat) -> Mat {
+    let n = m.n;
+    let (eig, v) = sym_eigen(m);
+    let mut s = Mat::zeros(n);
+    for i in 0..n {
+        s.set(i, i, eig[i].max(0.0).sqrt());
+    }
+    v.matmul(&s).matmul(&v.transpose())
+}
+
+/// Sample mean and covariance of row-major feature rows [n, d].
+pub fn mean_cov(rows: &[f32], n: usize, d: usize) -> (Vec<f64>, Mat) {
+    assert_eq!(rows.len(), n * d);
+    assert!(n >= 2, "need at least 2 samples for covariance");
+    let mut mean = vec![0.0f64; d];
+    for i in 0..n {
+        for j in 0..d {
+            mean[j] += rows[i * d + j] as f64;
+        }
+    }
+    for v in mean.iter_mut() {
+        *v /= n as f64;
+    }
+    let mut cov = Mat::zeros(d);
+    for i in 0..n {
+        for j in 0..d {
+            let xj = rows[i * d + j] as f64 - mean[j];
+            for k in j..d {
+                let xk = rows[i * d + k] as f64 - mean[k];
+                cov.a[j * d + k] += xj * xk;
+            }
+        }
+    }
+    let denom = (n - 1) as f64;
+    for j in 0..d {
+        for k in j..d {
+            let v = cov.a[j * d + k] / denom;
+            cov.a[j * d + k] = v;
+            cov.a[k * d + j] = v;
+        }
+    }
+    (mean, cov)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn eigen_of_diagonal() {
+        let m = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 1.0]]);
+        let (mut eig, _) = sym_eigen(&m);
+        eig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((eig[0] - 1.0).abs() < 1e-10);
+        assert!((eig[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eigen_reconstructs() {
+        // random symmetric 8x8: V Λ Vᵀ == A
+        let mut rng = Rng::new(2);
+        let n = 8;
+        let mut m = Mat::zeros(n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal() as f64;
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        let (eig, v) = sym_eigen(&m);
+        let mut lam = Mat::zeros(n);
+        for i in 0..n {
+            lam.set(i, i, eig[i]);
+        }
+        let rec = v.matmul(&lam).matmul(&v.transpose());
+        assert!(rec.max_abs_diff(&m) < 1e-8, "diff {}", rec.max_abs_diff(&m));
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        // random PSD: B = XᵀX; sqrtm(B)² == B
+        let mut rng = Rng::new(3);
+        let n = 6;
+        let mut x = Mat::zeros(n);
+        for i in 0..n * n {
+            x.a[i] = rng.normal() as f64;
+        }
+        let b = x.transpose().matmul(&x);
+        let s = sqrtm_psd(&b);
+        let s2 = s.matmul(&s);
+        assert!(s2.max_abs_diff(&b) < 1e-7, "diff {}", s2.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn sqrtm_identity() {
+        let i4 = Mat::eye(4);
+        assert!(sqrtm_psd(&i4).max_abs_diff(&i4) < 1e-12);
+    }
+
+    #[test]
+    fn mean_cov_hand_check() {
+        // two points (0,0) and (2,2): mean (1,1), cov [[2,2],[2,2]]
+        let rows = [0.0f32, 0.0, 2.0, 2.0];
+        let (mean, cov) = mean_cov(&rows, 2, 2);
+        assert_eq!(mean, vec![1.0, 1.0]);
+        for v in &cov.a {
+            assert!((v - 2.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Evaluation metrics: Fréchet-distance (FID/sFID analog), Inception-Score
+//! analog, and Kynkäänniemi precision/recall — over the fixed random
+//! feature net exported as `feature_b{B}.hlo.txt` (DESIGN.md §4).
+
+pub mod linalg;
+pub mod fid;
+pub mod inception;
+pub mod prec_recall;
+pub mod stats;
+
+pub use fid::frechet_distance;
+pub use inception::inception_score;
+pub use prec_recall::precision_recall;

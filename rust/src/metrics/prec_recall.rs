@@ -1,0 +1,117 @@
+//! Improved Precision & Recall for generative models (Kynkäänniemi et al.
+//! 2019) — the same k-NN manifold estimator the paper reports, computed in
+//! our fixed feature space.
+//!
+//! precision = fraction of generated samples inside the real manifold;
+//! recall    = fraction of real samples inside the generated manifold;
+//! manifold(X) = ∪_i Ball(x_i, dist_to_kth_neighbour(x_i, X)).
+
+use crate::util::threadpool::parallel_map;
+
+fn dist2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Squared distance from each row of xs to its k-th nearest neighbour
+/// within xs (excluding itself).
+fn knn_radii2(xs: &[f32], n: usize, d: usize, k: usize, threads: usize) -> Vec<f32> {
+    assert!(k >= 1 && n > k, "need n > k");
+    let idx: Vec<usize> = (0..n).collect();
+    parallel_map(idx, threads, |i| {
+        let xi = &xs[i * d..(i + 1) * d];
+        // partial selection of k smallest distances
+        let mut best = vec![f32::INFINITY; k];
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let dj = dist2(xi, &xs[j * d..(j + 1) * d]);
+            // insert into the sorted top-k buffer
+            if dj < best[k - 1] {
+                let mut p = k - 1;
+                while p > 0 && best[p - 1] > dj {
+                    best[p] = best[p - 1];
+                    p -= 1;
+                }
+                best[p] = dj;
+            }
+        }
+        best[k - 1]
+    })
+}
+
+/// Fraction of query rows that fall inside the manifold of `support`.
+fn coverage(query: &[f32], nq: usize, support: &[f32], ns: usize, d: usize,
+            radii2: &[f32], threads: usize) -> f64 {
+    let idx: Vec<usize> = (0..nq).collect();
+    let hits: Vec<u32> = parallel_map(idx, threads, |i| {
+        let q = &query[i * d..(i + 1) * d];
+        for j in 0..ns {
+            if dist2(q, &support[j * d..(j + 1) * d]) <= radii2[j] {
+                return 1u32;
+            }
+        }
+        0u32
+    });
+    hits.iter().sum::<u32>() as f64 / nq.max(1) as f64
+}
+
+/// (precision, recall) with neighbourhood size k (paper uses k=3).
+pub fn precision_recall(real: &[f32], n_real: usize, fake: &[f32],
+                        n_fake: usize, d: usize, k: usize,
+                        threads: usize) -> (f64, f64) {
+    let r_real = knn_radii2(real, n_real, d, k, threads);
+    let r_fake = knn_radii2(fake, n_fake, d, k, threads);
+    let precision = coverage(fake, n_fake, real, n_real, d, &r_real, threads);
+    let recall = coverage(real, n_real, fake, n_fake, d, &r_fake, threads);
+    (precision, recall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn gauss(rng: &mut Rng, n: usize, d: usize, mean: f32) -> Vec<f32> {
+        (0..n * d).map(|_| mean + rng.normal()).collect()
+    }
+
+    #[test]
+    fn same_distribution_high_both() {
+        let mut rng = Rng::new(1);
+        let real = gauss(&mut rng, 300, 4, 0.0);
+        let fake = gauss(&mut rng, 300, 4, 0.0);
+        let (p, r) = precision_recall(&real, 300, &fake, 300, 4, 3, 4);
+        assert!(p > 0.85, "precision {p}");
+        assert!(r > 0.85, "recall {r}");
+    }
+
+    #[test]
+    fn distant_fake_zero_precision() {
+        let mut rng = Rng::new(2);
+        let real = gauss(&mut rng, 200, 4, 0.0);
+        let fake = gauss(&mut rng, 200, 4, 50.0);
+        let (p, r) = precision_recall(&real, 200, &fake, 200, 4, 3, 4);
+        assert!(p < 0.02, "precision {p}");
+        assert!(r < 0.02, "recall {r}");
+    }
+
+    #[test]
+    fn mode_collapse_high_precision_low_recall() {
+        // fake concentrated on a tiny region of the real manifold
+        let mut rng = Rng::new(3);
+        let real = gauss(&mut rng, 400, 4, 0.0);
+        let fake: Vec<f32> = (0..400 * 4).map(|_| 0.02 * rng.normal()).collect();
+        let (p, r) = precision_recall(&real, 400, &fake, 400, 4, 3, 4);
+        assert!(p > 0.9, "precision {p}");
+        assert!(r < 0.5, "recall {r}");
+    }
+
+    #[test]
+    fn knn_radius_hand_check() {
+        // 3 colinear points at 0, 1, 10: k=1 radii² = 1, 1, 81
+        let xs = [0.0f32, 1.0, 10.0];
+        let r = knn_radii2(&xs, 3, 1, 1, 1);
+        assert_eq!(r, vec![1.0, 1.0, 81.0]);
+    }
+}

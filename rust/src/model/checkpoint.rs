@@ -1,0 +1,183 @@
+//! `.ldck` checkpoint format: named f32 vectors in one binary file.
+//!
+//! Layout (little-endian):
+//!   magic   b"LDCK"
+//!   version u32 (=1)
+//!   count   u32
+//!   entry*  { name_len u16, name utf-8, ndim u16, dims u32*, data f32* }
+//!
+//! Used for θ (base model), γ (gates), and optimizer state (m, v, step).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"LDCK";
+
+/// An in-memory checkpoint: ordered name → (shape, data).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    pub entries: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Checkpoint {
+        Checkpoint::default()
+    }
+
+    pub fn insert(&mut self, name: &str, shape: &[usize], data: Vec<f32>) {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.entries.insert(name.to_string(), (shape.to_vec(), data));
+    }
+
+    pub fn insert_scalar(&mut self, name: &str, v: f32) {
+        self.insert(name, &[], vec![v]);
+    }
+
+    pub fn vec(&self, name: &str) -> Result<&Vec<f32>> {
+        Ok(&self
+            .entries
+            .get(name)
+            .with_context(|| format!("checkpoint missing '{name}'"))?
+            .1)
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<f32> {
+        let v = self.vec(name)?;
+        if v.len() != 1 {
+            bail!("'{name}' is not a scalar");
+        }
+        Ok(v[0])
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&1u32.to_le_bytes())?;
+        w.write_all(&(self.entries.len() as u32).to_le_bytes())?;
+        for (name, (shape, data)) in &self.entries {
+            let nb = name.as_bytes();
+            if nb.len() > u16::MAX as usize {
+                bail!("name too long");
+            }
+            w.write_all(&(nb.len() as u16).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&(shape.len() as u16).to_le_bytes())?;
+            for &d in shape {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening checkpoint {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{} is not an .ldck checkpoint", path.display());
+        }
+        let version = read_u32(&mut r)?;
+        if version != 1 {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut out = Checkpoint::new();
+        for _ in 0..count {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut nb = vec![0u8; name_len];
+            r.read_exact(&mut nb)?;
+            let name = String::from_utf8(nb).context("checkpoint name utf8")?;
+            let ndim = read_u16(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            r.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            out.entries.insert(name, (shape, data));
+        }
+        Ok(out)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+/// Standard checkpoint paths under the run directory.
+pub fn theta_path(dir: &Path, config: &str) -> std::path::PathBuf {
+    dir.join(format!("{config}.theta.ldck"))
+}
+
+pub fn gates_path(dir: &Path, config: &str, tag: &str) -> std::path::PathBuf {
+    dir.join(format!("{config}.gates.{tag}.ldck"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lazydit_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut c = Checkpoint::new();
+        c.insert("theta", &[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        c.insert_scalar("step", 42.0);
+        let p = tmp("rt.ldck");
+        c.save(&p).unwrap();
+        let d = Checkpoint::load(&p).unwrap();
+        assert_eq!(c, d);
+        assert_eq!(d.scalar("step").unwrap(), 42.0);
+        assert_eq!(d.vec("theta").unwrap().len(), 6);
+    }
+
+    #[test]
+    fn missing_entry_errors() {
+        let c = Checkpoint::new();
+        assert!(c.vec("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let p = tmp("garbage.ldck");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        let c = Checkpoint::new();
+        let p = tmp("empty.ldck");
+        c.save(&p).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap(), c);
+    }
+}

@@ -1,0 +1,10 @@
+//! Model-side L3: flat parameter store + weight slicing, checkpoint I/O,
+//! and the lazy block runner (the per-step module loop that realises the
+//! paper's skip-or-run decisions as *elided executable invocations*).
+
+pub mod params;
+pub mod checkpoint;
+pub mod runner;
+
+pub use params::{GateWeights, WeightSet};
+pub use runner::{ModelRunner, StepOutcome, StepStats};

@@ -1,0 +1,227 @@
+//! Weight slicing: the flat θ / γ vectors (single contiguous buffers, the
+//! training interface) sliced into the per-graph argument tensors of the
+//! serving executables, following the manifest offset table.
+
+use crate::runtime::manifest::{ManifestConfig, ParamMeta};
+use crate::runtime::value::HostValue;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+fn slice_param(flat: &[f32], p: &ParamMeta) -> Tensor {
+    let data = flat[p.offset..p.offset + p.size].to_vec();
+    let shape = if p.shape.is_empty() { vec![1] } else { p.shape.clone() };
+    Tensor::from_vec(&shape, data).expect("manifest shape consistent")
+}
+
+/// All base-parameter argument tensors, pre-sliced once at load time so the
+/// hot path never re-slices θ.
+#[derive(Debug, Clone)]
+pub struct WeightSet {
+    /// embed graph args in order (w_patch..y_table).
+    pub embed: Vec<HostValue>,
+    /// per block, per module (attn=0, ffn=1): modgate w_sh,b_sh,w_sc,b_sc.
+    pub modulate: Vec<[Vec<HostValue>; 2]>,
+    /// per block: attn graph args (w_qkv,b_qkv,w_o,b_o).
+    pub attn: Vec<Vec<HostValue>>,
+    /// per block: ffn graph args (w1,b1,w2,b2).
+    pub ffn: Vec<Vec<HostValue>>,
+    /// per block, per module: apply args (w_al, b_al).
+    pub apply: Vec<[Vec<HostValue>; 2]>,
+    /// final graph args (w_sh,b_sh,w_sc,b_sc,w_out,b_out).
+    pub final_: Vec<HostValue>,
+}
+
+impl WeightSet {
+    pub fn from_flat(cfg: &ManifestConfig, theta: &[f32]) -> Result<WeightSet> {
+        if theta.len() != cfg.theta_len() {
+            bail!(
+                "theta length {} != manifest {} — checkpoint/config mismatch",
+                theta.len(),
+                cfg.theta_len()
+            );
+        }
+        let g = |name: &str| -> Result<HostValue> {
+            Ok(HostValue::F32(slice_param(theta, cfg.param(name)?)))
+        };
+        let embed = vec![
+            g("embed.patch.w")?, g("embed.patch.b")?,
+            g("embed.t.w1")?, g("embed.t.b1")?,
+            g("embed.t.w2")?, g("embed.t.b2")?,
+            g("embed.y.table")?,
+        ];
+        let mut modulate = Vec::new();
+        let mut attn = Vec::new();
+        let mut ffn = Vec::new();
+        let mut apply = Vec::new();
+        for l in 0..cfg.model.depth {
+            let m = |mod_: &str, suf: &str| g(&format!("block{l}.{mod_}.{suf}"));
+            modulate.push([
+                vec![m("attn", "w_shift")?, m("attn", "b_shift")?,
+                     m("attn", "w_scale")?, m("attn", "b_scale")?],
+                vec![m("ffn", "w_shift")?, m("ffn", "b_shift")?,
+                     m("ffn", "w_scale")?, m("ffn", "b_scale")?],
+            ]);
+            attn.push(vec![
+                m("attn", "w_qkv")?, m("attn", "b_qkv")?,
+                m("attn", "w_o")?, m("attn", "b_o")?,
+            ]);
+            ffn.push(vec![
+                m("ffn", "w1")?, m("ffn", "b1")?,
+                m("ffn", "w2")?, m("ffn", "b2")?,
+            ]);
+            apply.push([
+                vec![m("attn", "w_alpha")?, m("attn", "b_alpha")?],
+                vec![m("ffn", "w_alpha")?, m("ffn", "b_alpha")?],
+            ]);
+        }
+        let final_ = vec![
+            g("final.w_shift")?, g("final.b_shift")?,
+            g("final.w_scale")?, g("final.b_scale")?,
+            g("final.w_out")?, g("final.b_out")?,
+        ];
+        Ok(WeightSet { embed, modulate, attn, ffn, apply, final_ })
+    }
+}
+
+/// Lazy-gate weights per (layer, module), sliced from flat γ.
+#[derive(Debug, Clone)]
+pub struct GateWeights {
+    /// [depth][module: attn=0, ffn=1] -> (w [D], b [1]).
+    pub gates: Vec<[(HostValue, HostValue); 2]>,
+}
+
+impl GateWeights {
+    pub fn from_flat(cfg: &ManifestConfig, gamma: &[f32]) -> Result<GateWeights> {
+        if gamma.len() != cfg.gamma_len() {
+            bail!(
+                "gamma length {} != manifest {} — gate checkpoint mismatch",
+                gamma.len(),
+                cfg.gamma_len()
+            );
+        }
+        let mut gates = Vec::new();
+        for l in 0..cfg.model.depth {
+            let mut pair = Vec::new();
+            for mod_ in ["attn", "ffn"] {
+                let w = slice_param(gamma, cfg.gate(&format!("gate{l}.{mod_}.w"))?);
+                let b = slice_param(gamma, cfg.gate(&format!("gate{l}.{mod_}.b"))?);
+                pair.push((HostValue::F32(w), HostValue::F32(b)));
+            }
+            let b = pair.pop().unwrap();
+            let a = pair.pop().unwrap();
+            gates.push([a, b]);
+        }
+        Ok(GateWeights { gates })
+    }
+
+    /// The "never lazy" gate set: w=0, b=-10 ⇒ s ≈ 4.5e-5 (always run).
+    /// Used for the DDIM baseline so the identical code path executes.
+    pub fn disabled(cfg: &ManifestConfig) -> GateWeights {
+        let mut gamma = vec![0.0f32; cfg.gamma_len()];
+        for gmeta in &cfg.gates {
+            if gmeta.name.ends_with(".b") {
+                gamma[gmeta.offset] = -10.0;
+            }
+        }
+        GateWeights::from_flat(cfg, &gamma).expect("consistent")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    fn manifest_cfg() -> ManifestConfig {
+        // mirror of the nano manifest, hand-rolled (offsets like python's)
+        let j = Json::parse(
+            r#"{"configs": {"nano": {
+            "paper_analog": "t",
+            "model": {"img_size": 8, "channels": 3, "patch": 2, "dim": 4,
+                      "depth": 1, "heads": 2, "num_classes": 2,
+                      "mlp_ratio": 2, "freq_dim": 4},
+            "diffusion": {"timesteps": 10, "beta_start": 1e-4, "beta_end": 0.02},
+            "params": [
+              {"name": "embed.patch.w", "shape": [12, 4], "offset": 0, "size": 48},
+              {"name": "embed.patch.b", "shape": [4], "offset": 48, "size": 4},
+              {"name": "embed.t.w1", "shape": [4, 4], "offset": 52, "size": 16},
+              {"name": "embed.t.b1", "shape": [4], "offset": 68, "size": 4},
+              {"name": "embed.t.w2", "shape": [4, 4], "offset": 72, "size": 16},
+              {"name": "embed.t.b2", "shape": [4], "offset": 88, "size": 4},
+              {"name": "embed.y.table", "shape": [3, 4], "offset": 92, "size": 12},
+              {"name": "block0.attn.w_shift", "shape": [4, 4], "offset": 104, "size": 16},
+              {"name": "block0.attn.b_shift", "shape": [4], "offset": 120, "size": 4},
+              {"name": "block0.attn.w_scale", "shape": [4, 4], "offset": 124, "size": 16},
+              {"name": "block0.attn.b_scale", "shape": [4], "offset": 140, "size": 4},
+              {"name": "block0.attn.w_alpha", "shape": [4, 4], "offset": 144, "size": 16},
+              {"name": "block0.attn.b_alpha", "shape": [4], "offset": 160, "size": 4},
+              {"name": "block0.ffn.w_shift", "shape": [4, 4], "offset": 164, "size": 16},
+              {"name": "block0.ffn.b_shift", "shape": [4], "offset": 180, "size": 4},
+              {"name": "block0.ffn.w_scale", "shape": [4, 4], "offset": 184, "size": 16},
+              {"name": "block0.ffn.b_scale", "shape": [4], "offset": 200, "size": 4},
+              {"name": "block0.ffn.w_alpha", "shape": [4, 4], "offset": 204, "size": 16},
+              {"name": "block0.ffn.b_alpha", "shape": [4], "offset": 220, "size": 4},
+              {"name": "block0.attn.w_qkv", "shape": [4, 12], "offset": 224, "size": 48},
+              {"name": "block0.attn.b_qkv", "shape": [12], "offset": 272, "size": 12},
+              {"name": "block0.attn.w_o", "shape": [4, 4], "offset": 284, "size": 16},
+              {"name": "block0.attn.b_o", "shape": [4], "offset": 300, "size": 4},
+              {"name": "block0.ffn.w1", "shape": [4, 8], "offset": 304, "size": 32},
+              {"name": "block0.ffn.b1", "shape": [8], "offset": 336, "size": 8},
+              {"name": "block0.ffn.w2", "shape": [8, 4], "offset": 344, "size": 32},
+              {"name": "block0.ffn.b2", "shape": [4], "offset": 376, "size": 4},
+              {"name": "final.w_shift", "shape": [4, 4], "offset": 380, "size": 16},
+              {"name": "final.b_shift", "shape": [4], "offset": 396, "size": 4},
+              {"name": "final.w_scale", "shape": [4, 4], "offset": 400, "size": 16},
+              {"name": "final.b_scale", "shape": [4], "offset": 416, "size": 4},
+              {"name": "final.w_out", "shape": [4, 12], "offset": 420, "size": 48},
+              {"name": "final.b_out", "shape": [12], "offset": 468, "size": 12}
+            ],
+            "gates": [
+              {"name": "gate0.attn.w", "shape": [4], "offset": 0, "size": 4},
+              {"name": "gate0.attn.b", "shape": [], "offset": 4, "size": 1},
+              {"name": "gate0.ffn.w", "shape": [4], "offset": 5, "size": 4},
+              {"name": "gate0.ffn.b", "shape": [], "offset": 9, "size": 1}
+            ],
+            "buckets": [1], "train_batch": 2, "graphs": {}
+        }}, "feature_dim": 64}"#,
+        )
+        .unwrap();
+        let m = crate::runtime::manifest::Manifest::from_json(Path::new("/tmp"), &j).unwrap();
+        m.config("nano").unwrap().clone()
+    }
+
+    #[test]
+    fn slices_all_weights() {
+        let cfg = manifest_cfg();
+        let theta: Vec<f32> = (0..cfg.theta_len()).map(|i| i as f32).collect();
+        let w = WeightSet::from_flat(&cfg, &theta).unwrap();
+        assert_eq!(w.embed.len(), 7);
+        assert_eq!(w.modulate.len(), 1);
+        assert_eq!(w.attn[0].len(), 4);
+        // offsets respected: patch.b starts at 48
+        assert_eq!(w.embed[1].as_f32_ref().unwrap().data()[0], 48.0);
+        // w_qkv at offset 224
+        assert_eq!(w.attn[0][0].as_f32_ref().unwrap().data()[0], 224.0);
+    }
+
+    #[test]
+    fn rejects_wrong_length() {
+        let cfg = manifest_cfg();
+        assert!(WeightSet::from_flat(&cfg, &[0.0; 3]).is_err());
+        assert!(GateWeights::from_flat(&cfg, &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn gate_slicing_and_disabled() {
+        let cfg = manifest_cfg();
+        let gamma: Vec<f32> = (0..cfg.gamma_len()).map(|i| i as f32 * 0.1).collect();
+        let g = GateWeights::from_flat(&cfg, &gamma).unwrap();
+        assert_eq!(g.gates.len(), 1);
+        // scalar bias arrives as shape [1]
+        assert_eq!(g.gates[0][0].1.as_f32_ref().unwrap().shape(), &[1]);
+        let d = GateWeights::disabled(&cfg);
+        assert_eq!(d.gates[0][0].1.as_f32_ref().unwrap().data()[0], -10.0);
+        assert_eq!(d.gates[0][0].0.as_f32_ref().unwrap().data(), &[0.0; 4]);
+    }
+}

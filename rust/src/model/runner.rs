@@ -1,0 +1,439 @@
+//! The lazy block runner — the serving hot path.
+//!
+//! One denoise step = embed → (per block: modgate → decide → [module|cache]
+//! → apply) ×2 → final. The decision is made HERE, on the host, *before*
+//! the module executable is invoked: a skip elides the whole MHSA/FFN
+//! executable call, which is how the paper's laziness becomes wall-clock
+//! time (DESIGN.md §2 "per-module executables").
+
+use crate::config::{LazyScope, SkipPolicy};
+use crate::model::params::{GateWeights, WeightSet};
+use crate::runtime::engine_rt::{Executable, Runtime};
+use crate::runtime::manifest::ManifestConfig;
+use crate::runtime::value::HostValue;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use std::rc::Rc;
+
+/// Per-module batch cache: the previous step's module outputs Y_{l,t-1}.
+#[derive(Debug, Clone)]
+pub struct BatchCaches {
+    /// [2L] tensors of [B, N, D]; index 2l+m (m: attn=0, ffn=1).
+    pub values: Vec<Tensor>,
+    /// Row validity: values[k].row(i) meaningful iff valid[k][i].
+    pub valid: Vec<Vec<bool>>,
+}
+
+impl BatchCaches {
+    pub fn empty(depth: usize, b: usize, n: usize, d: usize) -> BatchCaches {
+        BatchCaches {
+            values: (0..2 * depth).map(|_| Tensor::zeros(&[b, n, d])).collect(),
+            valid: vec![vec![false; b]; 2 * depth],
+        }
+    }
+}
+
+/// Outcome of one denoise step over a batch.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    /// Guided-model noise prediction [B, C, H, W] (pre-CFG combination).
+    pub eps: Tensor,
+    /// Gate values s per module per row: [2L][B].
+    pub s_vals: Vec<Vec<f32>>,
+    /// Whether each module invocation was skipped: [2L].
+    pub skipped: Vec<bool>,
+}
+
+/// Aggregated laziness accounting (the paper's Γ, per scope).
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub modules_total: usize,
+    pub modules_skipped: usize,
+    pub attn_total: usize,
+    pub attn_skipped: usize,
+    pub ffn_total: usize,
+    pub ffn_skipped: usize,
+}
+
+impl StepStats {
+    pub fn lazy_ratio(&self) -> f64 {
+        self.modules_skipped as f64 / self.modules_total.max(1) as f64
+    }
+
+    pub fn absorb(&mut self, outcome: &StepOutcome) {
+        for (k, &sk) in outcome.skipped.iter().enumerate() {
+            self.modules_total += 1;
+            let is_attn = k % 2 == 0;
+            if is_attn {
+                self.attn_total += 1;
+            } else {
+                self.ffn_total += 1;
+            }
+            if sk {
+                self.modules_skipped += 1;
+                if is_attn {
+                    self.attn_skipped += 1;
+                } else {
+                    self.ffn_skipped += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Decision controls for one step.
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionCfg {
+    pub policy: SkipPolicy,
+    pub scope: LazyScope,
+    pub threshold: f32,
+}
+
+/// Compiled executables for one bucket size.
+struct BucketExes {
+    bucket: usize,
+    embed: Rc<Executable>,
+    modgate: Rc<Executable>,
+    attn: Rc<Executable>,
+    ffn: Rc<Executable>,
+    apply: Rc<Executable>,
+    final_: Rc<Executable>,
+}
+
+/// Weight tensors pre-converted to XLA literals ONCE at load — the §Perf
+/// optimization that removes per-call host→literal conversion of every
+/// weight matrix from the hot path (EXPERIMENTS.md §Perf).
+struct LitWeights {
+    embed: Vec<xla::Literal>,
+    /// [depth][module] -> modgate args (w_sh, b_sh, w_sc, b_sc).
+    modulate: Vec<[Vec<xla::Literal>; 2]>,
+    attn: Vec<Vec<xla::Literal>>,
+    ffn: Vec<Vec<xla::Literal>>,
+    /// [depth][module] -> (w_al, b_al).
+    apply: Vec<[Vec<xla::Literal>; 2]>,
+    final_: Vec<xla::Literal>,
+    /// [depth][module] -> (w_g, b_g).
+    gates: Vec<[(xla::Literal, xla::Literal); 2]>,
+}
+
+fn lits(vals: &[HostValue]) -> Result<Vec<xla::Literal>> {
+    vals.iter().map(|v| v.to_literal()).collect()
+}
+
+impl LitWeights {
+    fn build(w: &WeightSet, g: &GateWeights) -> Result<LitWeights> {
+        let pair2 = |arr: &[Vec<HostValue>; 2]| -> Result<[Vec<xla::Literal>; 2]> {
+            Ok([lits(&arr[0])?, lits(&arr[1])?])
+        };
+        Ok(LitWeights {
+            embed: lits(&w.embed)?,
+            modulate: w.modulate.iter().map(pair2).collect::<Result<_>>()?,
+            attn: w.attn.iter().map(|v| lits(v)).collect::<Result<_>>()?,
+            ffn: w.ffn.iter().map(|v| lits(v)).collect::<Result<_>>()?,
+            apply: w.apply.iter().map(pair2).collect::<Result<_>>()?,
+            final_: lits(&w.final_)?,
+            gates: g
+                .gates
+                .iter()
+                .map(|pair| {
+                    Ok([
+                        (pair[0].0.to_literal()?, pair[0].1.to_literal()?),
+                        (pair[1].0.to_literal()?, pair[1].1.to_literal()?),
+                    ])
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// The model runner: weights + gate weights + per-bucket executables.
+pub struct ModelRunner {
+    rt: Rc<Runtime>,
+    pub cfg: ManifestConfig,
+    pub weights: WeightSet,
+    pub gates: GateWeights,
+    lit: LitWeights,
+    buckets: Vec<BucketExes>,
+}
+
+impl ModelRunner {
+    pub fn new(rt: Rc<Runtime>, cfg: ManifestConfig, theta: &[f32],
+               gamma: &[f32]) -> Result<ModelRunner> {
+        let weights = WeightSet::from_flat(&cfg, theta)?;
+        let gates = GateWeights::from_flat(&cfg, gamma)?;
+        let lit = LitWeights::build(&weights, &gates)?;
+        Ok(ModelRunner { rt, cfg, weights, gates, lit, buckets: Vec::new() })
+    }
+
+    /// Same runner with laziness disabled (DDIM baseline path).
+    pub fn with_disabled_gates(rt: Rc<Runtime>, cfg: ManifestConfig,
+                               theta: &[f32]) -> Result<ModelRunner> {
+        let weights = WeightSet::from_flat(&cfg, theta)?;
+        let gates = GateWeights::disabled(&cfg);
+        let lit = LitWeights::build(&weights, &gates)?;
+        Ok(ModelRunner { rt, cfg, weights, gates, lit, buckets: Vec::new() })
+    }
+
+    /// Replace gate weights (penalty sweeps re-use compiled executables).
+    pub fn set_gates(&mut self, gamma: &[f32]) -> Result<()> {
+        self.gates = GateWeights::from_flat(&self.cfg, gamma)?;
+        self.lit = LitWeights::build(&self.weights, &self.gates)?;
+        Ok(())
+    }
+
+    fn bucket_exes(&mut self, b: usize) -> Result<usize> {
+        if let Some(i) = self.buckets.iter().position(|be| be.bucket == b) {
+            return Ok(i);
+        }
+        if !self.cfg.buckets.contains(&b) {
+            bail!("bucket {b} not exported (have {:?})", self.cfg.buckets);
+        }
+        let load = |name: String| self.rt.load(&self.cfg, &name);
+        let be = BucketExes {
+            bucket: b,
+            embed: load(format!("embed_b{b}"))?,
+            modgate: load(format!("modgate_b{b}"))?,
+            attn: load(format!("attn_b{b}"))?,
+            ffn: load(format!("ffn_b{b}"))?,
+            apply: load(format!("apply_b{b}"))?,
+            final_: load(format!("final_b{b}"))?,
+        };
+        self.buckets.push(be);
+        Ok(self.buckets.len() - 1)
+    }
+
+    /// Pre-compile all executables of a bucket (startup, not hot path).
+    pub fn warmup(&mut self, bucket: usize) -> Result<()> {
+        self.bucket_exes(bucket)?;
+        Ok(())
+    }
+
+    /// One denoise step over a padded batch.
+    ///
+    /// * `z`: [B, C, H, W] latents (B == bucket size, padded rows zeros)
+    /// * `t`: [B] float timesteps, `y`: [B] labels (null for uncond rows)
+    /// * `live`: [B] — padding rows are false and excluded from decisions
+    /// * `caches`: previous-step module outputs, updated in place
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(&mut self, bucket: usize, z: &Tensor, t: &[f32], y: &[i32],
+                live: &[bool], caches: &mut BatchCaches,
+                dec: DecisionCfg) -> Result<StepOutcome> {
+        self.step_with_forced(bucket, z, t, y, live, caches, dec, None)
+    }
+
+    /// `step` with an optional forced skip mask per module slot [2L] — the
+    /// input-independent (Learn2Cache-analog) baseline path. A forced skip
+    /// is still subject to cache availability.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_with_forced(&mut self, bucket: usize, z: &Tensor, t: &[f32],
+                            y: &[i32], live: &[bool],
+                            caches: &mut BatchCaches, dec: DecisionCfg,
+                            forced: Option<&[bool]>) -> Result<StepOutcome> {
+        let bi = self.bucket_exes(bucket)?;
+        let depth = self.cfg.model.depth;
+        let b = bucket;
+        debug_assert_eq!(z.shape()[0], b);
+        debug_assert_eq!(t.len(), b);
+
+        // dynamic inputs: converted once per step (weights are pre-built
+        // literals — see LitWeights)
+        let t_lit = HostValue::F32(Tensor::from_vec(&[b], t.to_vec())?)
+            .to_literal()?;
+        let y_lit = HostValue::I32 { shape: vec![b], data: y.to_vec() }
+            .to_literal()?;
+        let z_lit = HostValue::F32(z.clone()).to_literal()?;
+
+        // ---- embed
+        let mut embed_args: Vec<&xla::Literal> = vec![&z_lit, &t_lit, &y_lit];
+        embed_args.extend(self.lit.embed.iter());
+        let mut out = self.buckets[bi].embed.call_lit(&embed_args)?;
+        let c = out.pop().unwrap().as_f32()?;
+        let mut x = out.pop().unwrap().as_f32()?;
+        let c_lit = HostValue::F32(c).to_literal()?;
+
+        let mut s_vals: Vec<Vec<f32>> = Vec::with_capacity(2 * depth);
+        let mut skipped: Vec<bool> = Vec::with_capacity(2 * depth);
+
+        for l in 0..depth {
+            for mi in 0..2usize {
+                let k = 2 * l + mi;
+                let x_lit = HostValue::F32(x.clone()).to_literal()?;
+                // ---- fused LN + modulate + gate
+                let mut mg_args: Vec<&xla::Literal> = vec![&x_lit, &c_lit];
+                mg_args.extend(self.lit.modulate[l][mi].iter());
+                let (gw, gb) = &self.lit.gates[l][mi];
+                mg_args.push(gw);
+                mg_args.push(gb);
+                let mut mg_out = self.buckets[bi].modgate.call_lit(&mg_args)?;
+                let s = mg_out.pop().unwrap().as_f32()?;
+                let zmod = mg_out.pop().unwrap().as_f32()?;
+                let s_rows: Vec<f32> = s.data().to_vec();
+
+                // ---- decision
+                let in_scope = if mi == 0 {
+                    dec.scope.covers_attn()
+                } else {
+                    dec.scope.covers_ffn()
+                };
+                let cache_ok = live
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &lv)| lv)
+                    .all(|(i, _)| caches.valid[k][i]);
+                let want_skip = match forced {
+                    Some(mask) => mask[k] && cache_ok,
+                    None => in_scope
+                        && cache_ok
+                        && decide(dec.policy, dec.threshold, &s_rows, live),
+                };
+
+                let f = if want_skip && dec.policy != SkipPolicy::Blend {
+                    // ---- SKIP: reuse Y_{l,t-1}; the module executable is
+                    // never invoked — this is the latency win.
+                    caches.values[k].clone()
+                } else {
+                    // ---- RUN the module
+                    let zmod_lit = HostValue::F32(zmod).to_literal()?;
+                    let mut m_args: Vec<&xla::Literal> = vec![&zmod_lit];
+                    let (exe, warr) = if mi == 0 {
+                        (&self.buckets[bi].attn, &self.lit.attn[l])
+                    } else {
+                        (&self.buckets[bi].ffn, &self.lit.ffn[l])
+                    };
+                    m_args.extend(warr.iter());
+                    let mut m_out = exe.call_lit(&m_args)?;
+                    let mut f = m_out.pop().unwrap().as_f32()?;
+                    if dec.policy == SkipPolicy::Blend && in_scope {
+                        // training-faithful blending with the cache
+                        blend_rows(&mut f, &caches.values[k], &caches.valid[k],
+                                   &s_rows);
+                    }
+                    // update cache with the fresh (possibly blended) output
+                    caches.values[k] = f.clone();
+                    for (i, &lv) in live.iter().enumerate() {
+                        if lv {
+                            caches.valid[k][i] = true;
+                        }
+                    }
+                    f
+                };
+                skipped.push(want_skip && dec.policy != SkipPolicy::Blend);
+                s_vals.push(s_rows);
+
+                // ---- apply: x + alpha(c) ∘ f  (always runs; paper keeps
+                // scale/shift/residual on skip steps)
+                let f_lit = HostValue::F32(f).to_literal()?;
+                let mut ap_args: Vec<&xla::Literal> = vec![&x_lit, &c_lit];
+                ap_args.extend(self.lit.apply[l][mi].iter());
+                ap_args.push(&f_lit);
+                let mut ap_out = self.buckets[bi].apply.call_lit(&ap_args)?;
+                x = ap_out.pop().unwrap().as_f32()?;
+            }
+        }
+
+        // ---- final
+        let x_lit = HostValue::F32(x).to_literal()?;
+        let mut fin_args: Vec<&xla::Literal> = vec![&x_lit, &c_lit];
+        fin_args.extend(self.lit.final_.iter());
+        let mut fin_out = self.buckets[bi].final_.call_lit(&fin_args)?;
+        let eps = fin_out.pop().unwrap().as_f32()?;
+
+        Ok(StepOutcome { eps, s_vals, skipped })
+    }
+}
+
+/// Aggregate per-row gate values into one skip decision (DESIGN.md §7).
+pub fn decide(policy: SkipPolicy, threshold: f32, s: &[f32], live: &[bool]) -> bool {
+    let rows: Vec<f32> = s
+        .iter()
+        .zip(live)
+        .filter(|(_, &lv)| lv)
+        .map(|(&v, _)| v)
+        .collect();
+    if rows.is_empty() {
+        return false;
+    }
+    match policy {
+        SkipPolicy::Never => false,
+        SkipPolicy::Blend => false, // handled in runner (always runs)
+        SkipPolicy::Mean => {
+            rows.iter().sum::<f32>() / rows.len() as f32 > threshold
+        }
+        SkipPolicy::Majority => {
+            let n = rows.iter().filter(|&&v| v > threshold).count();
+            2 * n > rows.len()
+        }
+        SkipPolicy::All => rows.iter().all(|&v| v > threshold),
+        SkipPolicy::Any => rows.iter().any(|&v| v > threshold),
+    }
+}
+
+/// Row-wise training blend: f_i ← (1−s_i)·f_i + s_i·cache_i (valid rows).
+fn blend_rows(f: &mut Tensor, cache: &Tensor, valid: &[bool], s: &[f32]) {
+    let r = f.row_len();
+    for i in 0..f.dim0() {
+        if !valid[i] {
+            continue;
+        }
+        let w = s[i];
+        let crow = cache.row(i);
+        let frow = &mut f.row_mut(i)[..r];
+        for (fv, cv) in frow.iter_mut().zip(crow) {
+            *fv = (1.0 - w) * *fv + w * cv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decide_truth_table() {
+        let live = vec![true, true, true];
+        let s = vec![0.9, 0.9, 0.1];
+        assert!(decide(SkipPolicy::Mean, 0.5, &s, &live)); // mean .63
+        assert!(decide(SkipPolicy::Majority, 0.5, &s, &live)); // 2/3
+        assert!(!decide(SkipPolicy::All, 0.5, &s, &live));
+        assert!(decide(SkipPolicy::Any, 0.5, &s, &live));
+        assert!(!decide(SkipPolicy::Never, 0.5, &s, &live));
+    }
+
+    #[test]
+    fn decide_ignores_dead_rows() {
+        let live = vec![true, false, false];
+        let s = vec![0.1, 0.99, 0.99];
+        assert!(!decide(SkipPolicy::Mean, 0.5, &s, &live));
+        assert!(!decide(SkipPolicy::Any, 0.5, &s, &live));
+    }
+
+    #[test]
+    fn decide_empty_live_never_skips() {
+        assert!(!decide(SkipPolicy::Any, 0.5, &[0.9], &[false]));
+    }
+
+    #[test]
+    fn blend_rows_math() {
+        let mut f = Tensor::from_vec(&[2, 2], vec![1., 1., 2., 2.]).unwrap();
+        let cache = Tensor::from_vec(&[2, 2], vec![3., 3., 4., 4.]).unwrap();
+        blend_rows(&mut f, &cache, &[true, false], &[0.5, 0.5]);
+        assert_eq!(f.row(0), &[2., 2.]); // blended
+        assert_eq!(f.row(1), &[2., 2.]); // invalid cache: untouched
+    }
+
+    #[test]
+    fn stats_accounting() {
+        let outcome = StepOutcome {
+            eps: Tensor::zeros(&[1]),
+            s_vals: vec![vec![0.9], vec![0.1], vec![0.9], vec![0.2]],
+            skipped: vec![true, false, true, false],
+        };
+        let mut st = StepStats::default();
+        st.absorb(&outcome);
+        assert_eq!(st.modules_total, 4);
+        assert_eq!(st.modules_skipped, 2);
+        assert_eq!(st.attn_skipped, 2);
+        assert_eq!(st.ffn_skipped, 0);
+        assert!((st.lazy_ratio() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,203 @@
+//! The executable registry: compile-on-first-use of `*.hlo.txt` graphs,
+//! shape-checked execution, and buffer-resident weights for the hot path.
+
+use crate::runtime::manifest::{GraphMeta, ManifestConfig};
+use crate::runtime::value::HostValue;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, XlaComputation};
+
+/// A compiled executable plus its manifest metadata.
+pub struct Executable {
+    pub meta: GraphMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host values; returns decomposed host outputs.
+    /// Every graph is lowered with `return_tuple=True`, so the single
+    /// result buffer is a tuple literal we decompose.
+    pub fn call(&self, args: &[HostValue]) -> Result<Vec<HostValue>> {
+        self.check_args(args)?;
+        let literals: Vec<Literal> = args
+            .iter()
+            .map(|a| a.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<Literal>(&literals)?;
+        self.collect_outputs(result)
+    }
+
+    /// Execute with pre-converted literals — the hot path. Weight literals
+    /// are built ONCE at model load (see model::params::WeightSet::lit),
+    /// so per-step conversion cost is only the small dynamic tensors.
+    pub fn call_lit(&self, args: &[&Literal]) -> Result<Vec<HostValue>> {
+        let result = self.exe.execute::<&Literal>(args)?;
+        self.collect_outputs(result)
+    }
+
+    /// Execute with a mix of device-resident buffers (weights) and host
+    /// values — the optimized hot path (weights uploaded once at load,
+    /// never re-converted per call).
+    pub fn call_b(&self, args: &[ArgRef<'_>]) -> Result<Vec<HostValue>> {
+        let client = self.exe.client();
+        // owned temporaries for host args; refs mix them with weights
+        let mut temps: Vec<Option<PjRtBuffer>> = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                ArgRef::Host(h) => {
+                    let dims: Vec<usize> = h.shape().to_vec();
+                    let buf = match h {
+                        HostValue::F32(t) => {
+                            client.buffer_from_host_buffer(t.data(), &dims, None)?
+                        }
+                        HostValue::I32 { data, .. } => {
+                            client.buffer_from_host_buffer(data, &dims, None)?
+                        }
+                        HostValue::U32 { data, .. } => {
+                            client.buffer_from_host_buffer(data, &dims, None)?
+                        }
+                    };
+                    temps.push(Some(buf));
+                }
+                ArgRef::Device(_) => temps.push(None),
+            }
+        }
+        let refs: Vec<&PjRtBuffer> = args
+            .iter()
+            .zip(&temps)
+            .map(|(a, t)| match a {
+                ArgRef::Host(_) => t.as_ref().unwrap(),
+                ArgRef::Device(b) => *b,
+            })
+            .collect();
+        let result = self.exe.execute_b::<&PjRtBuffer>(&refs)?;
+        self.collect_outputs(result)
+    }
+
+    fn collect_outputs(
+        &self,
+        mut result: Vec<Vec<PjRtBuffer>>,
+    ) -> Result<Vec<HostValue>> {
+        if result.is_empty() || result[0].is_empty() {
+            bail!("executable '{}' returned no outputs", self.meta.name);
+        }
+        let replica = result.remove(0);
+        // xla_extension 0.5.1 PJRT CPU returns ONE tuple buffer for
+        // return_tuple=True graphs; decompose via literal.
+        if replica.len() == 1 && self.meta.outputs.len() > 1 {
+            let lit = replica[0].to_literal_sync()?;
+            let mut lit = lit;
+            let parts = lit.decompose_tuple()?;
+            return parts.iter().map(HostValue::from_literal).collect();
+        }
+        let mut out = Vec::with_capacity(replica.len());
+        for buf in &replica {
+            let mut lit = buf.to_literal_sync()?;
+            // single-output tuple roots still need unwrapping
+            match lit.decompose_tuple() {
+                Ok(parts) if !parts.is_empty() => {
+                    for p in &parts {
+                        out.push(HostValue::from_literal(p)?);
+                    }
+                }
+                _ => out.push(HostValue::from_literal(&lit)?),
+            }
+        }
+        Ok(out)
+    }
+
+    fn check_args(&self, args: &[HostValue]) -> Result<()> {
+        if args.len() != self.meta.inputs.len() {
+            bail!(
+                "graph '{}' expects {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                args.len()
+            );
+        }
+        for (a, m) in args.iter().zip(&self.meta.inputs) {
+            if a.shape() != m.shape.as_slice() {
+                bail!(
+                    "graph '{}' input '{}': shape {:?} != manifest {:?}",
+                    self.meta.name,
+                    m.name,
+                    a.shape(),
+                    m.shape
+                );
+            }
+            if a.dtype() != m.dtype {
+                bail!(
+                    "graph '{}' input '{}': dtype {} != manifest {}",
+                    self.meta.name,
+                    m.name,
+                    a.dtype(),
+                    m.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Host-or-device argument for `call_b`.
+pub enum ArgRef<'a> {
+    Host(&'a HostValue),
+    Device(&'a PjRtBuffer),
+}
+
+/// The per-process PJRT runtime: one CPU client + compiled-graph cache.
+pub struct Runtime {
+    client: PjRtClient,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile a graph (cached per config + name — graph names like
+    /// `apply_b1` repeat across configs with different shapes).
+    pub fn load(&self, cfg: &ManifestConfig, name: &str) -> Result<Rc<Executable>> {
+        let key = format!("{}/{name}", cfg.model.name);
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let meta = cfg.graph(name)?.clone();
+        let proto = HloModuleProto::from_text_file(&meta.file).with_context(|| {
+            format!("loading HLO text {} — run `make artifacts`?", meta.file.display())
+        })?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling graph '{name}'"))?;
+        let exec = Rc::new(Executable { meta, exe });
+        self.cache.borrow_mut().insert(key, exec.clone());
+        Ok(exec)
+    }
+
+    /// Upload a host tensor to a device-resident buffer (weights path).
+    pub fn upload(&self, t: &Tensor) -> Result<PjRtBuffer> {
+        Ok(self
+            .client
+            .buffer_from_host_buffer(t.data(), t.shape(), None)?)
+    }
+
+    /// Number of graphs compiled so far (startup metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

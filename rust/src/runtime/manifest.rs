@@ -1,0 +1,249 @@
+//! `artifacts/manifest.json` parsing — the shape/offset contract emitted by
+//! `python/compile/aot.py` (single source of truth: python/compile/configs.py).
+
+use crate::config::{DiffusionConfig, ModelConfig};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor inside the flat θ or γ vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// One executable input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One exported graph.
+#[derive(Debug, Clone)]
+pub struct GraphMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<ArgMeta>,
+    pub outputs: Vec<ArgMeta>,
+}
+
+/// Everything exported for one model config.
+#[derive(Debug, Clone)]
+pub struct ManifestConfig {
+    pub model: ModelConfig,
+    pub diffusion: DiffusionConfig,
+    pub params: Vec<ParamMeta>,
+    pub gates: Vec<ParamMeta>,
+    pub buckets: Vec<usize>,
+    pub train_batch: usize,
+    pub graphs: BTreeMap<String, GraphMeta>,
+}
+
+impl ManifestConfig {
+    /// Total flat θ length.
+    pub fn theta_len(&self) -> usize {
+        self.params.last().map(|p| p.offset + p.size).unwrap_or(0)
+    }
+
+    /// Total flat γ length.
+    pub fn gamma_len(&self) -> usize {
+        self.gates.last().map(|p| p.offset + p.size).unwrap_or(0)
+    }
+
+    pub fn param(&self, name: &str) -> Result<&ParamMeta> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("param '{name}' not in manifest"))
+    }
+
+    pub fn gate(&self, name: &str) -> Result<&ParamMeta> {
+        self.gates
+            .iter()
+            .find(|p| p.name == name)
+            .with_context(|| format!("gate '{name}' not in manifest"))
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphMeta> {
+        self.graphs
+            .get(name)
+            .with_context(|| format!("graph '{name}' not in manifest"))
+    }
+
+    /// Smallest exported bucket that fits `n` rows.
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().copied().find(|&b| b >= n)
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub feature_dim: usize,
+    pub configs: BTreeMap<String, ManifestConfig>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(artifacts_dir, &j)
+    }
+
+    pub fn from_json(root: &Path, j: &Json) -> Result<Manifest> {
+        let mut configs = BTreeMap::new();
+        let cj = j.req("configs")?.as_obj().context("configs not object")?;
+        for (name, cfg_j) in cj {
+            configs.insert(name.clone(), parse_config(root, name, cfg_j)?);
+        }
+        Ok(Manifest {
+            root: root.to_path_buf(),
+            feature_dim: j.req("feature_dim")?.as_usize().context("feature_dim")?,
+            configs,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ManifestConfig> {
+        self.configs
+            .get(name)
+            .with_context(|| format!(
+                "config '{name}' not exported (have: {:?}); re-run `make artifacts` \
+                 with CONFIGS={name}",
+                self.configs.keys().collect::<Vec<_>>()
+            ))
+    }
+}
+
+fn parse_params(j: &Json) -> Result<Vec<ParamMeta>> {
+    j.as_arr()
+        .context("params not array")?
+        .iter()
+        .map(|p| {
+            Ok(ParamMeta {
+                name: p.req("name")?.as_str().context("name")?.to_string(),
+                shape: p.req("shape")?.as_shape().context("shape")?,
+                offset: p.req("offset")?.as_usize().context("offset")?,
+                size: p.req("size")?.as_usize().context("size")?,
+            })
+        })
+        .collect()
+}
+
+fn parse_args(j: &Json) -> Result<Vec<ArgMeta>> {
+    j.as_arr()
+        .context("args not array")?
+        .iter()
+        .map(|a| {
+            Ok(ArgMeta {
+                name: a
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                shape: a.req("shape")?.as_shape().context("shape")?,
+                dtype: a.req("dtype")?.as_str().context("dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+fn parse_config(root: &Path, name: &str, j: &Json) -> Result<ManifestConfig> {
+    let model = ModelConfig::from_json(name, j)?;
+    let diffusion = DiffusionConfig::from_json(j)?;
+    let params = parse_params(j.req("params")?)?;
+    let gates = parse_params(j.req("gates")?)?;
+    let buckets = j
+        .req("buckets")?
+        .as_shape()
+        .context("buckets")?;
+    let train_batch = j.req("train_batch")?.as_usize().context("train_batch")?;
+    let mut graphs = BTreeMap::new();
+    for (gname, gj) in j.req("graphs")?.as_obj().context("graphs")? {
+        graphs.insert(
+            gname.clone(),
+            GraphMeta {
+                name: gname.clone(),
+                file: root.join(gj.req("file")?.as_str().context("file")?),
+                inputs: parse_args(gj.req("inputs")?)?,
+                outputs: parse_args(gj.req("outputs")?)?,
+            },
+        );
+    }
+    Ok(ManifestConfig {
+        model,
+        diffusion,
+        params,
+        gates,
+        buckets,
+        train_batch,
+        graphs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+          "version": 1, "feature_dim": 64,
+          "configs": {"nano": {
+            "paper_analog": "(tests)",
+            "model": {"img_size": 8, "channels": 3, "patch": 2, "dim": 32,
+                      "depth": 2, "heads": 2, "num_classes": 10,
+                      "mlp_ratio": 4, "freq_dim": 128},
+            "diffusion": {"timesteps": 1000, "beta_start": 1e-4, "beta_end": 0.02},
+            "params": [
+               {"name": "embed.patch.w", "shape": [12, 32], "offset": 0, "size": 384},
+               {"name": "embed.patch.b", "shape": [32], "offset": 384, "size": 32}],
+            "gates": [{"name": "gate0.attn.w", "shape": [32], "offset": 0, "size": 32}],
+            "buckets": [1, 2, 4],
+            "train_batch": 8,
+            "graphs": {"attn_b1": {"file": "nano/attn_b1.hlo.txt",
+              "inputs": [{"name": "z", "shape": [1, 16, 32], "dtype": "float32"}],
+              "outputs": [{"shape": [1, 16, 32], "dtype": "float32"}]}}
+          }}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(Path::new("/tmp/a"), &sample()).unwrap();
+        let c = m.config("nano").unwrap();
+        assert_eq!(c.model.dim, 32);
+        assert_eq!(c.theta_len(), 416);
+        assert_eq!(c.gamma_len(), 32);
+        assert_eq!(c.buckets, vec![1, 2, 4]);
+        let g = c.graph("attn_b1").unwrap();
+        assert_eq!(g.inputs[0].shape, vec![1, 16, 32]);
+        assert!(g.file.ends_with("nano/attn_b1.hlo.txt"));
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::from_json(Path::new("/tmp/a"), &sample()).unwrap();
+        let c = m.config("nano").unwrap();
+        assert_eq!(c.bucket_for(1), Some(1));
+        assert_eq!(c.bucket_for(3), Some(4));
+        assert_eq!(c.bucket_for(4), Some(4));
+        assert_eq!(c.bucket_for(5), None);
+    }
+
+    #[test]
+    fn unknown_config_errors_helpfully() {
+        let m = Manifest::from_json(Path::new("/tmp/a"), &sample()).unwrap();
+        let err = m.config("xl-256a").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads `artifacts/<config>/*.hlo.txt`, compiles them on the
+//! CPU PJRT client, and executes them from the L3 hot path.
+//!
+//! Interchange is HLO **text** — jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+
+pub mod manifest;
+pub mod value;
+pub mod engine_rt;
+
+pub use engine_rt::{Executable, Runtime};
+pub use manifest::{ArgMeta, GraphMeta, Manifest, ManifestConfig, ParamMeta};
+pub use value::HostValue;

@@ -1,0 +1,84 @@
+//! Host-side values crossing the PJRT boundary.
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+use xla::Literal;
+
+/// A typed host array destined for (or received from) an executable.
+#[derive(Debug, Clone)]
+pub enum HostValue {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl HostValue {
+    pub fn scalar_f32(v: f32) -> HostValue {
+        HostValue::F32(Tensor::scalar(v))
+    }
+
+    pub fn i32_vec(data: Vec<i32>) -> HostValue {
+        let shape = vec![data.len()];
+        HostValue::I32 { shape, data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => t.shape(),
+            HostValue::I32 { shape, .. } => shape,
+            HostValue::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostValue::F32(_) => "float32",
+            HostValue::I32 { .. } => "int32",
+            HostValue::U32 { .. } => "uint32",
+        }
+    }
+
+    /// Convert to an XLA literal (shape-preserving).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostValue::F32(t) => Literal::vec1(t.data()).reshape(&dims)?,
+            HostValue::I32 { data, .. } => Literal::vec1(data).reshape(&dims)?,
+            HostValue::U32 { data, .. } => Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Convert an XLA literal back to a host value.
+    pub fn from_literal(lit: &Literal) -> Result<HostValue> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        use xla::ElementType::*;
+        match shape.ty() {
+            F32 => Ok(HostValue::F32(Tensor::from_vec(&dims, lit.to_vec::<f32>()?)?)),
+            S32 => Ok(HostValue::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            U32 => Ok(HostValue::U32 { shape: dims, data: lit.to_vec::<u32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    pub fn as_f32(self) -> Result<Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            other => bail!("expected f32 value, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_f32_ref(&self) -> Result<&Tensor> {
+        match self {
+            HostValue::F32(t) => Ok(t),
+            other => bail!("expected f32 value, got {}", other.dtype()),
+        }
+    }
+}
+
+impl From<Tensor> for HostValue {
+    fn from(t: Tensor) -> HostValue {
+        HostValue::F32(t)
+    }
+}

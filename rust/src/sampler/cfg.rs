@@ -1,0 +1,69 @@
+//! Classifier-free guidance (Ho & Salimans 2022) combination, as in the
+//! paper's Sec. 3.1:  ε̂ = w·ε(c) − (w−1)·ε(∅).
+//!
+//! The coordinator runs cond/uncond as adjacent batch rows; `combine`
+//! folds row pairs back into one guided prediction per request.
+
+use crate::tensor::Tensor;
+
+/// Combine a [2B, ...] eps tensor (rows ordered cond_0..cond_{B-1},
+/// uncond_0..uncond_{B-1}) into guided [B, ...] predictions.
+pub fn combine_stacked(eps: &Tensor, scale: f32) -> Tensor {
+    let b2 = eps.dim0();
+    assert!(b2 % 2 == 0, "CFG tensor must have even batch");
+    let b = b2 / 2;
+    let mut shape = eps.shape().to_vec();
+    shape[0] = b;
+    let mut out = Tensor::zeros(&shape);
+    let r = eps.row_len();
+    for i in 0..b {
+        let cond = eps.row(i);
+        let unc = eps.row(b + i);
+        let dst = out.row_mut(i);
+        for k in 0..r {
+            dst[k] = scale * cond[k] - (scale - 1.0) * unc[k];
+        }
+    }
+    out
+}
+
+/// Combine a pair of per-request tensors.
+pub fn combine_pair(cond: &Tensor, uncond: &Tensor, scale: f32) -> Tensor {
+    let mut out = Tensor::zeros(cond.shape());
+    out.axpby_from(scale, cond, -(scale - 1.0), uncond);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_one_is_conditional() {
+        let cond = Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let unc = Tensor::from_vec(&[2], vec![-3.0, 7.0]).unwrap();
+        let out = combine_pair(&cond, &unc, 1.0);
+        assert_eq!(out, cond);
+    }
+
+    #[test]
+    fn linearity() {
+        let cond = Tensor::from_vec(&[2], vec![1.0, 0.0]).unwrap();
+        let unc = Tensor::from_vec(&[2], vec![0.0, 1.0]).unwrap();
+        let out = combine_pair(&cond, &unc, 1.5);
+        assert_eq!(out.data(), &[1.5, -0.5]);
+    }
+
+    #[test]
+    fn stacked_matches_pairwise() {
+        let eps = Tensor::from_vec(&[4, 2], vec![
+            1., 2., 3., 4.,      // cond rows
+            10., 20., 30., 40.,  // uncond rows
+        ]).unwrap();
+        let out = combine_stacked(&eps, 1.5);
+        assert_eq!(out.shape(), &[2, 2]);
+        // row0: 1.5*[1,2] - 0.5*[10,20] = [-3.5, -7]
+        assert_eq!(out.row(0), &[-3.5, -7.0]);
+        assert_eq!(out.row(1), &[-10.5, -14.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Diffusion sampling owned by L3: β/ᾱ schedules, timestep subset
+//! selection, the DDIM update rule, and classifier-free guidance.
+//!
+//! The schedule must match `python/compile/diffusion.py` bit-for-bit in
+//! spirit (float32 linear betas, cumulative product); the integration test
+//! `golden_numerics` compares against `artifacts/alphas_bar.npy`.
+
+pub mod schedule;
+pub mod ddim;
+pub mod cfg;
+
+pub use ddim::DdimSampler;
+pub use schedule::Schedule;

@@ -1,0 +1,94 @@
+//! Linear-β diffusion schedule and the DDIM timestep subset.
+
+/// Precomputed schedule tables for T training timesteps.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub timesteps: usize,
+    pub betas: Vec<f32>,
+    pub alphas_bar: Vec<f32>,
+}
+
+impl Schedule {
+    /// Linear betas in f32, matching `jnp.linspace(beta_start, beta_end, T)`
+    /// followed by `cumprod(1 - betas)`.
+    pub fn linear(timesteps: usize, beta_start: f32, beta_end: f32) -> Schedule {
+        assert!(timesteps >= 2);
+        let mut betas = Vec::with_capacity(timesteps);
+        let step = (beta_end - beta_start) / (timesteps - 1) as f32;
+        for i in 0..timesteps {
+            betas.push(beta_start + step * i as f32);
+        }
+        let mut alphas_bar = Vec::with_capacity(timesteps);
+        let mut prod = 1.0f32;
+        for &b in &betas {
+            prod *= 1.0 - b;
+            alphas_bar.push(prod);
+        }
+        Schedule { timesteps, betas, alphas_bar }
+    }
+
+    /// ᾱ at integer timestep t; ᾱ_{-1} ≡ 1 (the clean-data boundary).
+    pub fn alpha_bar(&self, t: isize) -> f32 {
+        if t < 0 {
+            1.0
+        } else {
+            self.alphas_bar[(t as usize).min(self.timesteps - 1)]
+        }
+    }
+
+    /// The DDIM sub-sequence of timesteps for `steps` sampling steps,
+    /// descending (t_K .. t_1), matching the DiT/DDIM "uniform spacing"
+    /// convention: t_i = round(i * T / steps) - 1 walked downward.
+    pub fn ddim_timesteps(&self, steps: usize) -> Vec<usize> {
+        assert!(steps >= 1 && steps <= self.timesteps);
+        let mut ts: Vec<usize> = (1..=steps)
+            .map(|i| (i * self.timesteps) / steps - 1)
+            .collect();
+        ts.dedup();
+        ts.reverse(); // descending: start at the noisiest step
+        ts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_closed_form() {
+        let s = Schedule::linear(1000, 1e-4, 2e-2);
+        assert_eq!(s.betas.len(), 1000);
+        assert!((s.betas[0] - 1e-4).abs() < 1e-9);
+        assert!((s.betas[999] - 2e-2).abs() < 1e-7);
+        // ᾱ decreasing in (0, 1]
+        for w in s.alphas_bar.windows(2) {
+            assert!(w[1] < w[0]);
+            assert!(w[1] > 0.0 && w[0] <= 1.0);
+        }
+        // hand-check ᾱ_1 = (1-β0)(1-β1)
+        let expect = (1.0 - s.betas[0]) * (1.0 - s.betas[1]);
+        assert!((s.alphas_bar[1] - expect).abs() < 1e-7);
+    }
+
+    #[test]
+    fn boundary_alpha_bar() {
+        let s = Schedule::linear(100, 1e-4, 2e-2);
+        assert_eq!(s.alpha_bar(-1), 1.0);
+        assert_eq!(s.alpha_bar(0), s.alphas_bar[0]);
+        assert_eq!(s.alpha_bar(1_000_000), s.alphas_bar[99]);
+    }
+
+    #[test]
+    fn ddim_subset_properties() {
+        let s = Schedule::linear(1000, 1e-4, 2e-2);
+        for steps in [1, 5, 10, 25, 50, 1000] {
+            let ts = s.ddim_timesteps(steps);
+            assert_eq!(ts.len(), steps, "steps {steps}");
+            assert_eq!(ts[0], 999, "must start at T-1");
+            for w in ts.windows(2) {
+                assert!(w[1] < w[0], "descending");
+            }
+        }
+        assert_eq!(s.ddim_timesteps(4), vec![999, 749, 499, 249]);
+    }
+}

@@ -1,0 +1,266 @@
+//! Host tensor substrate: contiguous row-major f32 arrays with the small
+//! set of ops the L3 hot path needs (residuals, blends, gathers for the
+//! continuous batcher, CFG combination). Heavy math lives in the AOT
+//! executables; these ops are deliberately simple and allocation-aware.
+
+use anyhow::{bail, Result};
+
+/// A contiguous row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {n} elems, got {}", shape, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Leading-dimension size (batch).
+    pub fn dim0(&self) -> usize {
+        *self.shape.first().unwrap_or(&1)
+    }
+
+    /// Elements per leading-dim row.
+    pub fn row_len(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.data.len() / self.shape[0].max(1)
+        }
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let r = self.row_len();
+        &self.data[i * r..(i + 1) * r]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let r = self.row_len();
+        &mut self.data[i * r..(i + 1) * r]
+    }
+
+    /// Copy row `src` of `other` into row `dst` of self.
+    pub fn copy_row_from(&mut self, dst: usize, other: &Tensor, src: usize) {
+        debug_assert_eq!(self.row_len(), other.row_len());
+        let r = self.row_len();
+        self.data[dst * r..(dst + 1) * r]
+            .copy_from_slice(&other.data[src * r..(src + 1) * r]);
+    }
+
+    /// Gather rows into a new tensor with leading dim = idx.len(),
+    /// padding with zeros for indices == usize::MAX (bucket padding).
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        let r = self.row_len();
+        let mut out = Tensor::zeros(&new_shape0(&self.shape, idx.len()));
+        for (k, &i) in idx.iter().enumerate() {
+            if i != usize::MAX {
+                out.data[k * r..(k + 1) * r]
+                    .copy_from_slice(&self.data[i * r..(i + 1) * r]);
+            }
+        }
+        out
+    }
+
+    /// Reshape view (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?} mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    // ---------------- element-wise ----------------
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, k: f32) {
+        for a in self.data.iter_mut() {
+            *a *= k;
+        }
+    }
+
+    /// self = a*x + b*y (shapes equal) — DDIM update helper.
+    pub fn axpby_from(&mut self, a: f32, x: &Tensor, b: f32, y: &Tensor) {
+        debug_assert_eq!(x.shape, y.shape);
+        debug_assert_eq!(self.shape, x.shape);
+        for i in 0..self.data.len() {
+            self.data[i] = a * x.data[i] + b * y.data[i];
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        debug_assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    // ---------------- reductions ----------------
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f32>() / self.data.len() as f32
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// Cosine similarity with another tensor (the paper's f(·,·), Eq. 3).
+    pub fn cosine(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.shape, other.shape);
+        let dot: f32 = self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum();
+        let na = self.l2_norm();
+        let nb = other.l2_norm();
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            dot / (na * nb)
+        }
+    }
+
+    /// Mean squared error vs other.
+    pub fn mse(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.shape, other.shape);
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n as f32
+    }
+}
+
+fn new_shape0(shape: &[usize], d0: usize) -> Vec<usize> {
+    let mut s = shape.to_vec();
+    if s.is_empty() {
+        s.push(d0);
+    } else {
+        s[0] = d0;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn rows_and_gather() {
+        let t = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.row(1), &[3., 4.]);
+        let g = t.gather_rows(&[2, 0, usize::MAX]);
+        assert_eq!(g.shape(), &[3, 2]);
+        assert_eq!(g.row(0), &[5., 6.]);
+        assert_eq!(g.row(1), &[1., 2.]);
+        assert_eq!(g.row(2), &[0., 0.]); // padding
+    }
+
+    #[test]
+    fn axpby() {
+        let x = Tensor::from_vec(&[2], vec![1., 2.]).unwrap();
+        let y = Tensor::from_vec(&[2], vec![10., 20.]).unwrap();
+        let mut out = Tensor::zeros(&[2]);
+        out.axpby_from(2.0, &x, 0.5, &y);
+        assert_eq!(out.data(), &[7., 14.]);
+    }
+
+    #[test]
+    fn cosine_properties() {
+        propcheck(100, |g| {
+            let n = g.usize_in(2, 64);
+            let v = g.vec_normal(n);
+            let t = Tensor::from_vec(&[n], v.clone()).unwrap();
+            // self-similarity == 1
+            let c = t.cosine(&t);
+            assert!((c - 1.0).abs() < 1e-5, "self cosine {c}");
+            // scale invariance
+            let mut t2 = t.clone();
+            t2.scale(3.5);
+            assert!((t.cosine(&t2) - 1.0).abs() < 1e-4);
+            // antipodal == -1
+            let mut t3 = t.clone();
+            t3.scale(-1.0);
+            assert!((t.cosine(&t3) + 1.0).abs() < 1e-4);
+        });
+    }
+
+    #[test]
+    fn mse_zero_iff_equal() {
+        let a = Tensor::from_vec(&[4], vec![1., 2., 3., 4.]).unwrap();
+        assert_eq!(a.mse(&a), 0.0);
+        let b = Tensor::from_vec(&[4], vec![1., 2., 3., 5.]).unwrap();
+        assert!(a.mse(&b) > 0.0);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert!(t.clone().reshape(&[3, 2]).is_ok());
+        assert!(t.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+    }
+}

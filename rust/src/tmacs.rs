@@ -1,0 +1,140 @@
+//! Analytic compute-cost model — regenerates the paper's TMACs columns
+//! (Tables 3/6/7). Counts multiply-accumulates per module per denoising
+//! step from the architecture, including the lazy-gate overhead the paper
+//! notes as its limitation.
+
+use crate::config::ModelConfig;
+
+/// MACs for one MHSA module invocation at batch 1.
+pub fn attn_macs(cfg: &ModelConfig) -> u64 {
+    let (n, d) = (cfg.tokens() as u64, cfg.dim as u64);
+    // qkv projection + output projection + QK^T + AV
+    n * d * 3 * d + n * d * d + 2 * n * n * d
+}
+
+/// MACs for one Feedforward module invocation at batch 1.
+pub fn ffn_macs(cfg: &ModelConfig) -> u64 {
+    let (n, d, h) = (cfg.tokens() as u64, cfg.dim as u64, cfg.hidden() as u64);
+    n * d * h + n * h * d
+}
+
+/// MACs for the modulation (adaLN shift/scale projections) of one module.
+pub fn modulate_macs(cfg: &ModelConfig) -> u64 {
+    let d = cfg.dim as u64;
+    // two D×D matvecs on the conditioning vector + alpha projection
+    3 * d * d
+}
+
+/// Extra MACs of the lazy-gate linear layer (paper's added layers).
+pub fn gate_macs(cfg: &ModelConfig) -> u64 {
+    (cfg.tokens() * cfg.dim) as u64
+}
+
+/// MACs for embed + final layers per step at batch 1.
+pub fn peripheral_macs(cfg: &ModelConfig) -> u64 {
+    let (n, d) = (cfg.tokens() as u64, cfg.dim as u64);
+    let pd = cfg.patch_dim() as u64;
+    let f = cfg.freq_dim as u64;
+    let patch = n * pd * d;
+    let temb = f * d + d * d;
+    let fin = 2 * d * d + n * d * pd;
+    patch + temb + fin
+}
+
+/// MACs of one full (no-skip) denoise step at batch 1, gates included
+/// when `with_gates`.
+pub fn step_macs(cfg: &ModelConfig, with_gates: bool) -> u64 {
+    let l = cfg.depth as u64;
+    let per_block =
+        attn_macs(cfg) + ffn_macs(cfg) + 2 * modulate_macs(cfg)
+        + if with_gates { 2 * gate_macs(cfg) } else { 0 };
+    peripheral_macs(cfg) + l * per_block
+}
+
+/// Total MACs of a full sampling run (per generated image, CFG doubling
+/// included) with a fraction `lazy_ratio` of module invocations skipped.
+///
+/// Skipped modules still pay modulation+gate+apply (the paper keeps
+/// scale/shift/residual); only the MHSA/FFN body is elided.
+pub fn run_macs(cfg: &ModelConfig, steps: usize, lazy_ratio: f64,
+                cfg_guidance: bool, with_gates: bool) -> u64 {
+    let l = cfg.depth as u64;
+    let body = (attn_macs(cfg) + ffn_macs(cfg)) as f64;
+    let keep = body * (1.0 - lazy_ratio);
+    let overhead = 2.0 * modulate_macs(cfg) as f64
+        + if with_gates { 2.0 * gate_macs(cfg) as f64 } else { 0.0 };
+    let per_step = peripheral_macs(cfg) as f64 + l as f64 * (keep + overhead);
+    let mult = if cfg_guidance { 2.0 } else { 1.0 };
+    (per_step * steps as f64 * mult) as u64
+}
+
+/// Pretty TMACs (1e12 MACs) for table printing.
+pub fn as_tmacs(macs: u64) -> f64 {
+    macs as f64 / 1e12
+}
+
+/// Giga-MACs for toy-scale tables (our models are small; the *ratios*
+/// are what reproduce the paper's columns).
+pub fn as_gmacs(macs: u64) -> f64 {
+    macs as f64 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(), paper_analog: "".into(),
+            img_size: 8, channels: 3, patch: 2, dim: 96, depth: 6, heads: 6,
+            num_classes: 10, mlp_ratio: 4, freq_dim: 128,
+        }
+    }
+
+    #[test]
+    fn hand_counted_attn() {
+        let c = cfg();
+        // N=16, D=96: qkv 16*96*288=442368; proj 16*96*96=147456;
+        // qk^t + av: 2*16*16*96=49152
+        assert_eq!(attn_macs(&c), 442_368 + 147_456 + 49_152);
+    }
+
+    #[test]
+    fn hand_counted_ffn() {
+        let c = cfg();
+        // N=16, D=96, H=384: 2*16*96*384
+        assert_eq!(ffn_macs(&c), 2 * 16 * 96 * 384);
+    }
+
+    #[test]
+    fn lazy_ratio_scales_body_only() {
+        let c = cfg();
+        let full = run_macs(&c, 50, 0.0, true, true);
+        let half = run_macs(&c, 50, 0.5, true, true);
+        let none = run_macs(&c, 50, 1.0, true, true);
+        assert!(half < full && none < half);
+        // body at ratio 1.0 fully gone; difference full-none == body
+        let body = (attn_macs(&c) + ffn_macs(&c)) * c.depth as u64 * 50 * 2;
+        assert_eq!(full - none, body);
+        // 50% ratio removes exactly half the body
+        assert_eq!(full - half, body / 2);
+    }
+
+    #[test]
+    fn gate_overhead_is_small() {
+        let c = cfg();
+        let with = run_macs(&c, 50, 0.0, true, true);
+        let without = run_macs(&c, 50, 0.0, true, false);
+        let overhead = (with - without) as f64 / without as f64;
+        assert!(overhead < 0.01, "gate overhead {overhead} must be <1%");
+    }
+
+    #[test]
+    fn cfg_doubles() {
+        let c = cfg();
+        assert_eq!(
+            run_macs(&c, 10, 0.0, true, true),
+            2 * run_macs(&c, 10, 0.0, false, true)
+        );
+    }
+}

@@ -1,0 +1,239 @@
+//! Lazy-learning driver (paper Sec. 3.3 + "Penalty Regulation").
+//!
+//! θ stays frozen; the gate vector γ is trained for ~500 steps with the
+//! combined diffusion + lazy loss. Caches for the training forward come
+//! from a gate-free forward at the *preceding sampling-grid timestep*
+//! (t_prev > t on the DDIM grid the gates will serve), matching inference.
+//!
+//! ρ regulation: the paper sweeps ρ ∈ [1e-7, 1e-2] by hand; we expose both
+//! a fixed-ρ mode (Fig. 5 sweeps) and an adaptive controller that
+//! multiplicatively adjusts ρ every `adjust_every` steps to steer the
+//! train-time skip fraction toward `target_ratio` (Tables 1/2/5).
+
+use crate::config::{LazyScope, TrainConfig};
+use crate::data::synth::SynthBlobs;
+use crate::model::checkpoint::{gates_path, Checkpoint};
+use crate::runtime::engine_rt::Runtime;
+use crate::runtime::manifest::ManifestConfig;
+use crate::runtime::value::HostValue;
+use crate::sampler::schedule::Schedule;
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+/// Options specific to the lazy-learning phase.
+#[derive(Debug, Clone)]
+pub struct LazyTrainOptions {
+    /// Sampling grid (number of DDIM steps) the gates will serve.
+    pub serve_steps: usize,
+    /// Adaptive targets for the per-module skip fraction; None = fixed ρ
+    /// for that module. Separate targets support the paper's Fig. 5
+    /// "Lazy Strategy" ablation (fix one module, sweep the other).
+    pub target_attn: Option<f64>,
+    pub target_ffn: Option<f64>,
+    /// Which modules get laziness (Fig. 5 "Individual Laziness").
+    pub scope: LazyScope,
+    /// Checkpoint tag, e.g. "s20-r50".
+    pub tag: String,
+    pub adjust_every: usize,
+}
+
+impl Default for LazyTrainOptions {
+    fn default() -> Self {
+        LazyTrainOptions {
+            serve_steps: 20,
+            target_attn: Some(0.5),
+            target_ffn: Some(0.5),
+            scope: LazyScope::Both,
+            tag: "default".into(),
+            adjust_every: 10,
+        }
+    }
+}
+
+/// Summary of a lazy-learning run.
+#[derive(Debug, Clone)]
+pub struct LazyTrainReport {
+    pub steps: usize,
+    pub final_rho_attn: f32,
+    pub final_rho_ffn: f32,
+    pub final_frac_attn: f32,
+    pub final_frac_ffn: f32,
+    pub final_dloss: f32,
+    pub mean_s_attn: f32,
+    pub mean_s_ffn: f32,
+    pub wall_s: f64,
+}
+
+/// γ init: w = 0, b = bias (sigmoid(bias) starting gate value).
+pub fn init_gamma(cfg: &ManifestConfig, bias: f32) -> Vec<f32> {
+    let mut gamma = vec![0.0f32; cfg.gamma_len()];
+    for g in &cfg.gates {
+        if g.name.ends_with(".b") {
+            gamma[g.offset] = bias;
+        }
+    }
+    gamma
+}
+
+/// Train gates; saves γ to `<ckpt>/<config>.gates.<tag>.ldck`.
+#[allow(clippy::too_many_arguments)]
+pub fn lazy_train(rt: &Rc<Runtime>, cfg: &ManifestConfig, tc: &TrainConfig,
+                  opts: &LazyTrainOptions, theta: &[f32], ckpt_dir: &Path)
+                  -> Result<LazyTrainReport> {
+    let start = std::time::Instant::now();
+    let m = &cfg.model;
+    let b = cfg.train_batch;
+    let ds = SynthBlobs::new(m.img_size);
+    let mut rng = Rng::new(tc.seed ^ 0x1A2_7781);
+
+    let mut gamma = init_gamma(cfg, -2.0);
+    let glen = gamma.len();
+    let mut mvec = vec![0.0f32; glen];
+    let mut vvec = vec![0.0f32; glen];
+
+    let step_exe = rt.load(cfg, "train_step")?;
+    let schedule = Schedule::linear(cfg.diffusion.timesteps,
+                                    cfg.diffusion.beta_start,
+                                    cfg.diffusion.beta_end);
+    // the serving DDIM grid, descending; consecutive grid entries define
+    // (t_prev, t) pairs exactly as inference will see them
+    let grid = schedule.ddim_timesteps(opts.serve_steps);
+    let img = m.img_elems();
+
+    let (mut rho_a, mut rho_f) = match opts.scope {
+        LazyScope::Both => (tc.rho_attn, tc.rho_ffn),
+        LazyScope::AttnOnly => (tc.rho_attn, 0.0),
+        LazyScope::FfnOnly => (0.0, tc.rho_ffn),
+        LazyScope::None => (0.0, 0.0),
+    };
+
+    let (mut dl, mut sa, mut sf, mut fa, mut ff) =
+        (0f32, 0f32, 0f32, 0f32, 0f32);
+    let theta_t = Tensor::from_vec(&[theta.len()], theta.to_vec())?;
+
+    for step in 0..tc.steps {
+        let (x0, mut labels) = ds.sample_batch(&mut rng, b);
+        for l in labels.iter_mut() {
+            if rng.uniform() < tc.label_dropout {
+                *l = m.null_label();
+            }
+        }
+        let y: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+        // sample a position ≥1 in the serving grid: t = grid[i] with the
+        // noisier predecessor t_prev = grid[i-1]
+        let mut t = Vec::with_capacity(b);
+        let mut t_prev = Vec::with_capacity(b);
+        for _ in 0..b {
+            let i = 1 + rng.below(grid.len().saturating_sub(1).max(1));
+            let i = i.min(grid.len() - 1);
+            t.push(grid[i] as i32);
+            t_prev.push(grid[i - 1] as i32);
+        }
+        let mut noise = vec![0.0f32; b * img];
+        rng.fill_normal(&mut noise);
+
+        let args = vec![
+            HostValue::F32(theta_t.clone()),
+            HostValue::F32(Tensor::from_vec(&[glen], gamma)?),
+            HostValue::F32(Tensor::from_vec(&[glen], mvec)?),
+            HostValue::F32(Tensor::from_vec(&[glen], vvec)?),
+            HostValue::scalar_f32((step + 1) as f32),
+            HostValue::F32(x0),
+            HostValue::I32 { shape: vec![b], data: y },
+            HostValue::I32 { shape: vec![b], data: t },
+            HostValue::I32 { shape: vec![b], data: t_prev },
+            HostValue::F32(Tensor::from_vec(
+                &[b, m.channels, m.img_size, m.img_size], noise)?),
+            HostValue::scalar_f32(tc.lr),
+            HostValue::scalar_f32(rho_a),
+            HostValue::scalar_f32(rho_f),
+        ];
+        let mut out = step_exe.call(&args)?;
+        ff = out.pop().context("frac_ffn")?.as_f32()?.data()[0];
+        fa = out.pop().context("frac_attn")?.as_f32()?.data()[0];
+        sf = out.pop().context("s_ffn")?.as_f32()?.data()[0];
+        sa = out.pop().context("s_attn")?.as_f32()?.data()[0];
+        let _lazyloss = out.pop().context("lazyloss")?;
+        dl = out.pop().context("dloss")?.as_f32()?.data()[0];
+        vvec = out.pop().context("v")?.as_f32()?.into_vec();
+        mvec = out.pop().context("m")?.as_f32()?.into_vec();
+        gamma = out.pop().context("gamma")?.as_f32()?.into_vec();
+
+        // ---- adaptive ρ controller (Penalty Regulation)
+        if step % opts.adjust_every == opts.adjust_every - 1 {
+            if let Some(target) = opts.target_attn {
+                if opts.scope.covers_attn() {
+                    rho_a = steer(rho_a, fa, target as f32);
+                }
+            }
+            if let Some(target) = opts.target_ffn {
+                if opts.scope.covers_ffn() {
+                    rho_f = steer(rho_f, ff, target as f32);
+                }
+            }
+        }
+        if step % 100 == 0 {
+            log::info!(
+                "lazy[{}/{}] step {step}/{}: dloss {dl:.4} frac a/f \
+                 {fa:.2}/{ff:.2} rho a/f {rho_a:.2e}/{rho_f:.2e}",
+                m.name, opts.tag, tc.steps);
+        }
+    }
+
+    let mut ck = Checkpoint::new();
+    ck.insert("gamma", &[glen], gamma);
+    ck.insert_scalar("serve_steps", opts.serve_steps as f32);
+    ck.insert_scalar("frac_attn", fa);
+    ck.insert_scalar("frac_ffn", ff);
+    ck.save(&gates_path(ckpt_dir, &m.name, &opts.tag))?;
+
+    Ok(LazyTrainReport {
+        steps: tc.steps,
+        final_rho_attn: rho_a,
+        final_rho_ffn: rho_f,
+        final_frac_attn: fa,
+        final_frac_ffn: ff,
+        final_dloss: dl,
+        mean_s_attn: sa,
+        mean_s_ffn: sf,
+        wall_s: start.elapsed().as_secs_f64(),
+    })
+}
+
+/// Multiplicative ρ steering: raise the laziness penalty while under
+/// target, lower it while over; clamped to the paper's sweep range
+/// [1e-7, 1e-2] (extended ceiling 1e-1 for tiny models).
+fn steer(rho: f32, frac: f32, target: f32) -> f32 {
+    let factor = if frac < target - 0.02 {
+        1.5
+    } else if frac > target + 0.02 {
+        1.0 / 1.5
+    } else {
+        1.0
+    };
+    (rho * factor).clamp(1e-7, 1e-1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steer_direction() {
+        // under target → increase penalty (push s up)
+        assert!(steer(1e-3, 0.1, 0.5) > 1e-3);
+        // over target → decrease
+        assert!(steer(1e-3, 0.9, 0.5) < 1e-3);
+        // within band → keep
+        assert_eq!(steer(1e-3, 0.5, 0.5), 1e-3);
+    }
+
+    #[test]
+    fn steer_clamped() {
+        assert!(steer(1e-1, 0.0, 1.0) <= 1e-1);
+        assert!(steer(1e-7, 1.0, 0.0) >= 1e-7);
+    }
+}

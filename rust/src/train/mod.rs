@@ -1,0 +1,15 @@
+//! Training drivers — both phases run ENTIRELY from Rust by executing the
+//! AOT-lowered `init` / `pretrain_step` / `train_step` graphs, so the
+//! binary remains self-contained after `make artifacts`:
+//!
+//! * [`pretrain`] — trains the base DiT on SynthBlobs-10 (the paper uses
+//!   officially released ImageNet checkpoints; we have none — DESIGN.md §4).
+//! * [`lazytrain`] — the paper's 500-step lazy learning: θ frozen, gates γ
+//!   trained with diffusion + lazy loss, with an adaptive ρ controller
+//!   steering toward a target lazy ratio ("Penalty Regulation").
+
+pub mod pretrain;
+pub mod lazytrain;
+
+pub use lazytrain::{lazy_train, LazyTrainReport};
+pub use pretrain::{pretrain, PretrainReport};

@@ -1,0 +1,104 @@
+//! Base-model pretraining driver (AOT `init` + `pretrain_step` graphs).
+
+use crate::config::TrainConfig;
+use crate::data::synth::SynthBlobs;
+use crate::model::checkpoint::{theta_path, Checkpoint};
+use crate::runtime::engine_rt::Runtime;
+use crate::runtime::manifest::ManifestConfig;
+use crate::runtime::value::HostValue;
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::rc::Rc;
+
+/// Summary of a pretraining run.
+#[derive(Debug, Clone)]
+pub struct PretrainReport {
+    pub steps: usize,
+    pub first_loss: f32,
+    pub last_loss: f32,
+    /// Mean loss over the last 10% of steps.
+    pub tail_loss: f32,
+    pub losses: Vec<f32>,
+    pub wall_s: f64,
+}
+
+/// Train the base DiT from scratch; saves θ to `<ckpt>/<config>.theta.ldck`.
+pub fn pretrain(rt: &Rc<Runtime>, cfg: &ManifestConfig, tc: &TrainConfig,
+                ckpt_dir: &Path) -> Result<PretrainReport> {
+    let start = std::time::Instant::now();
+    let m = &cfg.model;
+    let b = cfg.train_batch;
+    let ds = SynthBlobs::new(m.img_size);
+    let mut rng = Rng::new(tc.seed ^ 0x7123_4567);
+
+    // ---- init θ via the exported initializer
+    let init = rt.load(cfg, "init")?;
+    let key = HostValue::U32 { shape: vec![2], data: vec![tc.seed as u32, 0x5EED] };
+    let mut out = init.call(&[key])?;
+    let theta = out.pop().context("init output")?.as_f32()?;
+    let p = theta.len();
+    let mut theta = theta.into_vec();
+    let mut mvec = vec![0.0f32; p];
+    let mut vvec = vec![0.0f32; p];
+
+    let step_exe = rt.load(cfg, "pretrain_step")?;
+    let timesteps = cfg.diffusion.timesteps;
+    let img = m.img_elems();
+
+    let mut losses = Vec::with_capacity(tc.steps);
+    for step in 0..tc.steps {
+        // batch with CFG label dropout
+        let (x0, mut labels) = ds.sample_batch(&mut rng, b);
+        for l in labels.iter_mut() {
+            if rng.uniform() < tc.label_dropout {
+                *l = m.null_label();
+            }
+        }
+        let y: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+        let t: Vec<i32> = (0..b).map(|_| rng.below(timesteps) as i32).collect();
+        let mut noise = vec![0.0f32; b * img];
+        rng.fill_normal(&mut noise);
+
+        let args = vec![
+            HostValue::F32(Tensor::from_vec(&[p], theta)?),
+            HostValue::F32(Tensor::from_vec(&[p], mvec)?),
+            HostValue::F32(Tensor::from_vec(&[p], vvec)?),
+            HostValue::scalar_f32((step + 1) as f32),
+            HostValue::F32(x0),
+            HostValue::I32 { shape: vec![b], data: y },
+            HostValue::I32 { shape: vec![b], data: t },
+            HostValue::F32(Tensor::from_vec(
+                &[b, m.channels, m.img_size, m.img_size], noise)?),
+            HostValue::scalar_f32(tc.lr),
+        ];
+        let mut out = step_exe.call(&args)?;
+        let loss = out.pop().context("loss")?.as_f32()?.data()[0];
+        vvec = out.pop().context("v")?.as_f32()?.into_vec();
+        mvec = out.pop().context("m")?.as_f32()?.into_vec();
+        theta = out.pop().context("theta")?.as_f32()?.into_vec();
+        losses.push(loss);
+        if step % 100 == 0 {
+            log::info!("pretrain[{}] step {step}/{} loss {loss:.4}",
+                       m.name, tc.steps);
+        }
+    }
+
+    // ---- save
+    let mut ck = Checkpoint::new();
+    ck.insert("theta", &[p], theta);
+    ck.insert_scalar("steps", tc.steps as f32);
+    ck.save(&theta_path(ckpt_dir, &m.name))?;
+
+    let tail_n = (losses.len() / 10).max(1);
+    let tail = &losses[losses.len() - tail_n..];
+    Ok(PretrainReport {
+        steps: tc.steps,
+        first_loss: *losses.first().unwrap_or(&0.0),
+        last_loss: *losses.last().unwrap_or(&0.0),
+        tail_loss: tail.iter().sum::<f32>() / tail_n as f32,
+        losses,
+        wall_s: start.elapsed().as_secs_f64(),
+    })
+}

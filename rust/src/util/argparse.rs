@@ -1,0 +1,248 @@
+//! CLI argument-parsing substrate (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, typed
+//! getters with defaults, required options, and auto-generated usage text.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for usage text + validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse raw argv (without program/subcommand names) against specs.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args> {
+        let known_flags: Vec<&str> = specs
+            .iter()
+            .filter(|s| s.is_flag)
+            .map(|s| s.name)
+            .collect();
+        let known_opts: Vec<&str> = specs
+            .iter()
+            .filter(|s| !s.is_flag)
+            .map(|s| s.name)
+            .collect();
+        let mut out = Args {
+            specs: specs.to_vec(),
+            ..Default::default()
+        };
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if known_flags.contains(&key.as_str()) {
+                    if inline_val.is_some() {
+                        bail!("flag --{key} does not take a value");
+                    }
+                    out.flags.push(key);
+                } else if known_opts.contains(&key.as_str()) {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            if i >= argv.len() {
+                                bail!("--{key} requires a value");
+                            }
+                            argv[i].clone()
+                        }
+                    };
+                    out.opts.insert(key, val);
+                } else {
+                    bail!("unknown option --{key}");
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Programmatic override (used by table commands to force profile
+    /// defaults like --max-batch for the mobile/GPU analogs).
+    pub fn set(&mut self, name: &str, value: &str) {
+        self.opts.insert(name.to_string(), value.to_string());
+    }
+
+    /// True if the user explicitly provided this option (not a default).
+    pub fn provided(&self, name: &str) -> bool {
+        self.opts.contains_key(name)
+    }
+
+    fn raw(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str()).or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name)
+                .and_then(|s| s.default)
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<String> {
+        self.raw(name).map(|s| s.to_string())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.raw(name).unwrap_or(default).to_string()
+    }
+
+    pub fn require(&self, name: &str) -> Result<String> {
+        match self.raw(name) {
+            Some(v) => Ok(v.to_string()),
+            None => bail!("missing required option --{name}"),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.raw(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.raw(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.raw(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f32(&self, name: &str, default: f32) -> Result<f32> {
+        match self.raw(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    /// Comma-separated list of usize, e.g. `--steps 50,25,10`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.raw(name) {
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<usize>().map_err(Into::into))
+                .collect(),
+            None => Ok(default.to_vec()),
+        }
+    }
+
+    /// Comma-separated list of f64.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.raw(name) {
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<f64>().map_err(Into::into))
+                .collect(),
+            None => Ok(default.to_vec()),
+        }
+    }
+}
+
+/// Render aligned usage text for a spec table.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{about}\n\nusage: lazydit {cmd} [options]\n\noptions:\n");
+    for spec in specs {
+        let val = if spec.is_flag { "" } else { " <v>" };
+        let dft = spec
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{:<14} {}{}\n", spec.name, val, spec.help, dft));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "config", help: "model", default: Some("nano"), is_flag: false },
+            OptSpec { name: "steps", help: "steps", default: None, is_flag: false },
+            OptSpec { name: "verbose", help: "more", default: None, is_flag: true },
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_flag() {
+        let a = Args::parse(&sv(&["--config", "xl-256a", "--verbose"]), &specs()).unwrap();
+        assert_eq!(a.get_str("config", ""), "xl-256a");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&sv(&["--steps=25"]), &specs()).unwrap();
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 25);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        assert_eq!(a.get_str("config", "x"), "nano");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(&sv(&["--bogus", "1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(Args::parse(&sv(&["--steps"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = Args::parse(&sv(&["out.png", "--config", "nano"]), &specs()).unwrap();
+        assert_eq!(a.positional, vec!["out.png"]);
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(&sv(&["--steps", "50,25,10"]), &specs()).unwrap();
+        assert_eq!(a.get_usize_list("steps", &[]).unwrap(), vec![50, 25, 10]);
+    }
+
+    #[test]
+    fn require_errors_without_value() {
+        let a = Args::parse(&sv(&[]), &specs()).unwrap();
+        assert!(a.require("steps").is_err());
+        assert!(a.require("config").is_ok()); // has default
+    }
+}

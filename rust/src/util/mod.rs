@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch (the offline vendor set has no
+//! serde_json / rand / clap / tokio / criterion / proptest — see DESIGN.md §5).
+
+pub mod json;
+pub mod prng;
+pub mod npy;
+pub mod argparse;
+pub mod threadpool;
+pub mod propcheck;
+pub mod logging;

@@ -1,0 +1,231 @@
+//! NumPy `.npy` reader/writer substrate — the interop format for golden
+//! files dumped by `python/compile/aot.py` (DESIGN.md §8).
+//!
+//! Supports v1.0 headers with dtypes `<f4`, `<i4`, `<u4`, `<f8` in C order,
+//! which covers everything the exporter produces.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// An array loaded from / destined for a .npy file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl NpyArray {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View as f32, converting if needed.
+    pub fn to_f32(&self) -> Vec<f32> {
+        match &self.data {
+            NpyData::F32(v) => v.clone(),
+            NpyData::F64(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            NpyData::U32(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            NpyData::I32(v) => Ok(v),
+            _ => bail!("npy: expected i32 data"),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match &self.data {
+            NpyData::U32(v) => Ok(v),
+            _ => bail!("npy: expected u32 data"),
+        }
+    }
+}
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+pub fn read(path: &Path) -> Result<NpyArray> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != MAGIC {
+        bail!("not a .npy file");
+    }
+    let major = bytes[6];
+    let (header_len, header_start) = match major {
+        1 => (
+            u16::from_le_bytes([bytes[8], bytes[9]]) as usize,
+            10usize,
+        ),
+        2 | 3 => (
+            u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+            12usize,
+        ),
+        v => bail!("unsupported npy version {v}"),
+    };
+    let header = std::str::from_utf8(&bytes[header_start..header_start + header_len])?;
+    let descr = dict_value(header, "descr").context("descr")?;
+    let fortran = dict_value(header, "fortran_order").context("fortran")?;
+    if fortran.trim() != "False" {
+        bail!("fortran order not supported");
+    }
+    let shape_str = dict_value(header, "shape").context("shape")?;
+    let shape: Vec<usize> = shape_str
+        .trim()
+        .trim_start_matches('(')
+        .trim_end_matches(')')
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().parse::<usize>().context("shape int"))
+        .collect::<Result<_>>()?;
+    let n: usize = shape.iter().product();
+    let body = &bytes[header_start + header_len..];
+    let descr = descr.trim().trim_matches('\'').trim_matches('"');
+    let data = match descr {
+        "<f4" => {
+            ensure_len(body, n, 4)?;
+            NpyData::F32(body.chunks_exact(4).take(n)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+        }
+        "<f8" => {
+            ensure_len(body, n, 8)?;
+            NpyData::F64(body.chunks_exact(8).take(n)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+        }
+        "<i4" => {
+            ensure_len(body, n, 4)?;
+            NpyData::I32(body.chunks_exact(4).take(n)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+        }
+        "<u4" => {
+            ensure_len(body, n, 4)?;
+            NpyData::U32(body.chunks_exact(4).take(n)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+        }
+        other => bail!("unsupported dtype {other}"),
+    };
+    Ok(NpyArray { shape, data })
+}
+
+fn ensure_len(body: &[u8], n: usize, w: usize) -> Result<()> {
+    if body.len() < n * w {
+        bail!("npy body too short: {} < {}", body.len(), n * w);
+    }
+    Ok(())
+}
+
+/// Tiny extractor for the python-dict-literal header: finds `'key': value`.
+fn dict_value<'a>(header: &'a str, key: &str) -> Result<&'a str> {
+    let pat = format!("'{key}':");
+    let at = header.find(&pat).with_context(|| format!("key {key}"))?;
+    let rest = &header[at + pat.len()..];
+    // value ends at the next top-level comma or closing brace
+    let mut depth = 0usize;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '(' | '[' => depth += 1,
+            ')' | ']' => depth = depth.saturating_sub(1),
+            ',' | '}' if depth == 0 => return Ok(rest[..i].trim()),
+            _ => {}
+        }
+    }
+    Ok(rest.trim())
+}
+
+pub fn write(path: &Path, shape: &[usize], data: &[f32]) -> Result<()> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("shape/data mismatch: {n} vs {}", data.len());
+    }
+    let shape_str = match shape.len() {
+        0 => "()".to_string(),
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_str}, }}"
+    );
+    // pad to 64-byte alignment of magic+len+header+\n
+    let unpadded = MAGIC.len() + 4 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&[1, 0])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read every byte of a stream (helper for tests).
+pub fn read_all(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    r.read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let dir = std::env::temp_dir().join("lazydit_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.npy");
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        write(&p, &[2, 3, 4], &data).unwrap();
+        let arr = read(&p).unwrap();
+        assert_eq!(arr.shape, vec![2, 3, 4]);
+        assert_eq!(arr.to_f32(), data);
+    }
+
+    #[test]
+    fn roundtrip_scalar() {
+        let dir = std::env::temp_dir().join("lazydit_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.npy");
+        write(&p, &[], &[42.0]).unwrap();
+        let arr = read(&p).unwrap();
+        assert_eq!(arr.shape, Vec::<usize>::new());
+        assert_eq!(arr.to_f32(), vec![42.0]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse(b"not numpy at all").is_err());
+    }
+
+    #[test]
+    fn header_dict_parser() {
+        let h = "{'descr': '<f4', 'fortran_order': False, 'shape': (2, 3), }";
+        assert_eq!(dict_value(h, "descr").unwrap(), "'<f4'");
+        assert_eq!(dict_value(h, "shape").unwrap(), "(2, 3)");
+        assert_eq!(dict_value(h, "fortran_order").unwrap(), "False");
+    }
+}

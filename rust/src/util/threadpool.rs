@@ -1,0 +1,279 @@
+//! Thread-pool + bounded-channel substrate (tokio is not in the offline
+//! vendor set). The serving coordinator is thread-based: PJRT `execute`
+//! calls are blocking, so an async runtime would only add overhead.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A bounded MPMC channel with blocking send/recv — the backpressure
+/// primitive used by admission control (DESIGN.md §7).
+pub struct BoundedQueue<T> {
+    inner: Arc<QueueInner<T>>,
+}
+
+struct QueueInner<T> {
+    q: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        BoundedQueue { inner: self.inner.clone() }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        BoundedQueue {
+            inner: Arc::new(QueueInner {
+                q: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                cap,
+            }),
+        }
+    }
+
+    /// Blocking push; returns Err(item) if the queue is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < self.inner.cap {
+                st.items.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking push; Err(item) if full or closed (admission shedding).
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.q.lock().unwrap();
+        if st.closed || st.items.len() >= self.inner.cap {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; None once closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Drain up to `max` items without blocking (batcher pickup).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let n = st.items.len().min(max);
+        let out: Vec<T> = st.items.drain(..n).collect();
+        if !out.is_empty() {
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        let mut st = self.inner.q.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+/// Fixed worker pool executing boxed jobs.
+pub struct ThreadPool {
+    queue: BoundedQueue<Job>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl ThreadPool {
+    pub fn new(threads: usize, queue_cap: usize) -> Self {
+        let queue: BoundedQueue<Job> = BoundedQueue::new(queue_cap.max(1));
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let q = queue.clone();
+                std::thread::Builder::new()
+                    .name(format!("lazydit-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = q.pop() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { queue, workers }
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        // if closed, the job is dropped — shutdown path
+        let _ = self.queue.push(Box::new(f));
+    }
+
+    /// Close the queue and join all workers (drains pending jobs first).
+    pub fn shutdown(self) {
+        self.queue.close();
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Scatter a workload over a transient pool and gather results in order.
+/// Used by the metrics (k-NN) and data generators for CPU parallelism.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    if threads <= 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Mutex<VecDeque<(usize, T)>> =
+        Mutex::new(items.into_iter().enumerate().collect());
+    let results_mx = Mutex::new(&mut results);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n) {
+            scope.spawn(|| loop {
+                let next = work.lock().unwrap().pop_front();
+                match next {
+                    Some((i, item)) => {
+                        let r = f(item);
+                        (*results_mx.lock().unwrap())[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn queue_fifo() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn try_push_sheds_when_full() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert!(q.try_push(3).is_err());
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+        assert!(q.push(8).is_err());
+    }
+
+    #[test]
+    fn drain_up_to_takes_at_most() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        let got = q.drain_up_to(3);
+        assert_eq!(got, vec![0, 1, 2]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let pool = ThreadPool::new(4, 64);
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let v: Vec<usize> = (0..64).collect();
+        let out = parallel_map(v, 8, |x| x * 2);
+        assert_eq!(out, (0..64).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn blocking_producer_consumer() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(2);
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            let mut sum = 0;
+            for _ in 0..50 {
+                sum += q2.pop().unwrap();
+            }
+            sum
+        });
+        for i in 0..50 {
+            q.push(i).unwrap(); // blocks when full — exercises backpressure
+        }
+        assert_eq!(h.join().unwrap(), (0..50).sum::<usize>());
+    }
+}

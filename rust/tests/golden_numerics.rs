@@ -1,0 +1,109 @@
+//! Cross-layer golden numerics: every exported graph executed from Rust on
+//! the python-dumped inputs must reproduce the python outputs (DESIGN.md §8).
+//! This is THE correctness contract of the AOT bridge.
+
+use lazydit::runtime::engine_rt::Runtime;
+use lazydit::runtime::manifest::Manifest;
+use lazydit::runtime::value::HostValue;
+use lazydit::sampler::schedule::Schedule;
+use lazydit::tensor::Tensor;
+use lazydit::util::npy::{self, NpyData};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping golden tests: artifacts/ not built");
+        None
+    }
+}
+
+fn load_input(path: &Path) -> HostValue {
+    let arr = npy::read(path).expect("golden input");
+    match arr.data {
+        NpyData::F32(v) => {
+            HostValue::F32(Tensor::from_vec(&arr.shape, v).unwrap())
+        }
+        NpyData::I32(v) => HostValue::I32 { shape: arr.shape, data: v },
+        NpyData::U32(v) => HostValue::U32 { shape: arr.shape, data: v },
+        NpyData::F64(v) => HostValue::F32(
+            Tensor::from_vec(&arr.shape, v.iter().map(|&x| x as f32).collect())
+                .unwrap(),
+        ),
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn schedule_matches_python() {
+    let Some(root) = artifacts() else { return };
+    let golden = npy::read(&root.join("alphas_bar.npy")).unwrap().to_f32();
+    let s = Schedule::linear(golden.len(), 1e-4, 2e-2);
+    let diff = max_abs_diff(&s.alphas_bar, &golden);
+    assert!(diff < 1e-6, "alphas_bar mismatch: {diff}");
+}
+
+#[test]
+fn all_goldened_graphs_match() {
+    let Some(root) = artifacts() else { return };
+    let manifest = Manifest::load(&root).unwrap();
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let mut checked = 0;
+    for (cfg_name, cfg) in &manifest.configs {
+        let gdir = root.join("goldens").join(cfg_name);
+        if !gdir.exists() {
+            continue;
+        }
+        for (gname, gmeta) in &cfg.graphs {
+            let in0 = gdir.join(format!("{gname}.in0.npy"));
+            if !in0.exists() {
+                continue; // no goldens dumped for this graph
+            }
+            let exe = rt.load(cfg, gname).unwrap();
+            let args: Vec<HostValue> = (0..gmeta.inputs.len())
+                .map(|i| load_input(&gdir.join(format!("{gname}.in{i}.npy"))))
+                .collect();
+            let outs = exe
+                .call(&args)
+                .unwrap_or_else(|e| panic!("executing {cfg_name}/{gname}: {e:#}"));
+            assert_eq!(outs.len(), gmeta.outputs.len(),
+                       "{cfg_name}/{gname}: output arity");
+            for (i, out) in outs.iter().enumerate() {
+                let want =
+                    npy::read(&gdir.join(format!("{gname}.out{i}.npy"))).unwrap();
+                let got = match out {
+                    HostValue::F32(t) => t.data().to_vec(),
+                    HostValue::I32 { data, .. } => {
+                        data.iter().map(|&v| v as f32).collect()
+                    }
+                    HostValue::U32 { data, .. } => {
+                        data.iter().map(|&v| v as f32).collect()
+                    }
+                };
+                let wantv = want.to_f32();
+                assert_eq!(got.len(), wantv.len(),
+                           "{cfg_name}/{gname} out{i}: length");
+                let diff = max_abs_diff(&got, &wantv);
+                // fp32 reassociation differs between jaxlib's XLA and
+                // xla_extension 0.5.1; gradient graphs (sign-like AdamW
+                // updates) amplify it, so they get a looser bound.
+                let scale = wantv.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+                let tol = if gname.contains("step") { 2e-3 } else { 1e-4 };
+                assert!(diff <= tol * scale.max(1.0),
+                        "{cfg_name}/{gname} out{i}: max diff {diff} (scale {scale})");
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked >= 5, "too few goldened graphs found ({checked})");
+    eprintln!("golden-checked {checked} graphs");
+}

@@ -1,0 +1,185 @@
+//! End-to-end integration on the `nano` config: pretrain a few steps (loss
+//! must drop), train gates (laziness must rise), then serve batched
+//! requests through the full coordinator and check the accounting.
+
+use lazydit::config::{LazyScope, ServeConfig, SkipPolicy, TrainConfig};
+use lazydit::coordinator::engine::{generate_batch, Engine, EngineOptions};
+use lazydit::coordinator::request::Request;
+use lazydit::model::checkpoint::Checkpoint;
+use lazydit::model::runner::ModelRunner;
+use lazydit::runtime::engine_rt::Runtime;
+use lazydit::runtime::manifest::Manifest;
+use lazydit::train::lazytrain::{lazy_train, LazyTrainOptions};
+use lazydit::train::pretrain::pretrain;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+fn setup() -> Option<(Rc<Runtime>, lazydit::runtime::manifest::ManifestConfig, PathBuf)> {
+    let root = PathBuf::from("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping e2e: artifacts/ not built");
+        return None;
+    }
+    let manifest = Manifest::load(&root).unwrap();
+    let Ok(cfg) = manifest.config("nano") else {
+        eprintln!("skipping e2e: nano not exported");
+        return None;
+    };
+    let rt = Rc::new(Runtime::cpu().unwrap());
+    let dir = std::env::temp_dir().join("lazydit_e2e_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    Some((rt, cfg.clone(), dir))
+}
+
+fn serve_cfg(policy: SkipPolicy) -> ServeConfig {
+    ServeConfig {
+        config_name: "nano".into(),
+        max_batch: 4,
+        policy,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn full_stack_pretrain_lazytrain_serve() {
+    let Some((rt, cfg, dir)) = setup() else { return };
+
+    // ---- phase 1: pretrain (loss must decrease)
+    let tc = TrainConfig {
+        config_name: "nano".into(),
+        steps: 40,
+        lr: 3e-3,
+        ..Default::default()
+    };
+    let report = pretrain(&rt, &cfg, &tc, &dir).unwrap();
+    assert!(
+        report.tail_loss < report.first_loss,
+        "pretrain loss must decrease: {} -> {}",
+        report.first_loss,
+        report.tail_loss
+    );
+    let theta = Checkpoint::load(&lazydit::model::checkpoint::theta_path(&dir, "nano"))
+        .unwrap()
+        .vec("theta")
+        .unwrap()
+        .clone();
+
+    // ---- phase 2: lazy learning (laziness must rise under the controller)
+    let ltc = TrainConfig {
+        config_name: "nano".into(),
+        steps: 60,
+        lr: 2e-2,
+        ..Default::default()
+    };
+    let opts = LazyTrainOptions {
+        serve_steps: 8,
+        target_attn: Some(0.5),
+        target_ffn: Some(0.5),
+        scope: LazyScope::Both,
+        tag: "e2e".into(),
+        adjust_every: 5,
+    };
+    let lrep = lazy_train(&rt, &cfg, &ltc, &opts, &theta, &dir).unwrap();
+    assert!(
+        lrep.mean_s_attn > 0.12 || lrep.mean_s_ffn > 0.12,
+        "gates should move toward laziness: s = {}/{}",
+        lrep.mean_s_attn,
+        lrep.mean_s_ffn
+    );
+    let gamma = Checkpoint::load(&lazydit::model::checkpoint::gates_path(
+        &dir, "nano", "e2e"))
+        .unwrap()
+        .vec("gamma")
+        .unwrap()
+        .clone();
+
+    // ---- phase 3: serve through the coordinator (DDIM baseline)
+    let runner = ModelRunner::with_disabled_gates(rt.clone(), cfg.clone(),
+                                                  &theta).unwrap();
+    let mut engine = Engine::from_parts(runner, serve_cfg(SkipPolicy::Never),
+                                        EngineOptions::default());
+    let results = generate_batch(&mut engine, &[0, 1, 2], 6, 7, 1.5).unwrap();
+    assert_eq!(results.len(), 3);
+    for r in &results {
+        assert_eq!(r.image.shape(), &[3, 8, 8]);
+        assert_eq!(r.lazy_ratio, 0.0, "DDIM path must not skip");
+        assert!(r.image.data().iter().all(|v| v.is_finite()));
+    }
+    // distinct labels (and seeds) ⇒ distinct images
+    assert!(results[0].image.sub(&results[1].image).max_abs() > 1e-6);
+
+    // ---- phase 4: serve with trained gates, aggressive policy
+    let runner = ModelRunner::new(rt.clone(), cfg.clone(), &theta, &gamma).unwrap();
+    let mut engine = Engine::from_parts(runner, serve_cfg(SkipPolicy::Any),
+                                        EngineOptions::default());
+    let results = generate_batch(&mut engine, &[0, 1, 2, 3], 8, 9, 1.5).unwrap();
+    assert_eq!(results.len(), 4);
+    let stats = &engine.layer_stats;
+    assert_eq!(
+        stats.overall_ratio() > 0.0,
+        results.iter().any(|r| r.lazy_ratio > 0.0),
+        "engine and per-request accounting must agree on whether skips happened"
+    );
+    // per-module accounting sums to overall
+    for r in &results {
+        let per_mod_mean: f64 =
+            r.per_module_skip.iter().sum::<f64>() / r.per_module_skip.len() as f64;
+        assert!((per_mod_mean - r.lazy_ratio).abs() < 1e-9);
+    }
+
+    // ---- phase 5: static-schedule path (Learn2Cache baseline plumbing)
+    let slots = 2 * cfg.model.depth;
+    let mut sched = vec![vec![false; slots]; 6];
+    for row in sched.iter_mut().skip(1) {
+        for s in row.iter_mut() {
+            *s = true;
+        }
+    }
+    let runner = ModelRunner::with_disabled_gates(rt.clone(), cfg.clone(),
+                                                  &theta).unwrap();
+    let mut engine = Engine::from_parts(
+        runner,
+        serve_cfg(SkipPolicy::Never),
+        EngineOptions { disable_gates: true, static_schedule: Some(sched) },
+    );
+    let results = generate_batch(&mut engine, &[4], 6, 11, 1.5).unwrap();
+    // 5 of 6 steps skip everything: lazy ratio = 5/6
+    let expect = 5.0 / 6.0;
+    assert!(
+        (results[0].lazy_ratio - expect).abs() < 1e-9,
+        "static schedule lazy ratio {} != {expect}",
+        results[0].lazy_ratio
+    );
+}
+
+#[test]
+fn continuous_batching_mixed_steps() {
+    let Some((rt, cfg, dir)) = setup() else { return };
+    // a throwaway θ is fine here — this exercises scheduling, not quality
+    let tc = TrainConfig { config_name: "nano".into(), steps: 2, lr: 1e-3,
+                           ..Default::default() };
+    let _ = pretrain(&rt, &cfg, &tc, &dir).unwrap();
+    let theta = Checkpoint::load(&lazydit::model::checkpoint::theta_path(&dir, "nano"))
+        .unwrap().vec("theta").unwrap().clone();
+    let runner = ModelRunner::with_disabled_gates(rt, cfg, &theta).unwrap();
+    let mut engine = Engine::from_parts(runner, serve_cfg(SkipPolicy::Never),
+                                        EngineOptions::default());
+    // requests with DIFFERENT step counts in one engine (continuous batching)
+    for (i, steps) in [4usize, 6, 8].iter().enumerate() {
+        let mut req = Request::new(0, i, *steps, i as u64);
+        req.cfg_scale = 1.5;
+        engine.submit(req);
+    }
+    let mut done = Vec::new();
+    let mut rounds = 0;
+    while engine.active_count() > 0 {
+        done.extend(engine.step_round().unwrap());
+        rounds += 1;
+        assert!(rounds < 100, "scheduler must terminate");
+    }
+    assert_eq!(done.len(), 3);
+    // shorter requests must finish no later than longer ones
+    done.sort_by_key(|r| r.steps);
+    assert_eq!(done[0].steps, 4);
+    assert_eq!(done[2].steps, 8);
+}

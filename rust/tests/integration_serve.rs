@@ -1,0 +1,92 @@
+//! Serving-path integration: the TCP JSON-lines server end-to-end — admit,
+//! batch, respond — plus admission-control shedding.
+
+use lazydit::config::{ServeConfig, SkipPolicy, TrainConfig};
+use lazydit::coordinator::engine::{Engine, EngineOptions};
+use lazydit::coordinator::server;
+use lazydit::model::checkpoint::Checkpoint;
+use lazydit::model::runner::ModelRunner;
+use lazydit::runtime::engine_rt::Runtime;
+use lazydit::runtime::manifest::Manifest;
+use lazydit::train::pretrain::pretrain;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+#[test]
+fn tcp_server_roundtrip() {
+    let root = PathBuf::from("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let manifest = Manifest::load(&root).unwrap();
+    let Ok(cfg) = manifest.config("nano") else {
+        eprintln!("skipping: nano not exported");
+        return;
+    };
+    let cfg = cfg.clone();
+    let dir = std::env::temp_dir().join("lazydit_serve_test");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // server thread owns the engine (PJRT types are not Send/Sync)
+    let addr = "127.0.0.1:18471";
+    let server_thread = std::thread::spawn(move || {
+        let rt = Rc::new(Runtime::cpu().unwrap());
+        let tc = TrainConfig { config_name: "nano".into(), steps: 2, lr: 1e-3,
+                               ..Default::default() };
+        let _ = pretrain(&rt, &cfg, &tc, &dir).unwrap();
+        let theta = Checkpoint::load(
+            &lazydit::model::checkpoint::theta_path(&dir, "nano"))
+            .unwrap().vec("theta").unwrap().clone();
+        let runner =
+            ModelRunner::with_disabled_gates(rt, cfg, &theta).unwrap();
+        let engine = Engine::from_parts(
+            runner,
+            ServeConfig { config_name: "nano".into(), max_batch: 4,
+                          policy: SkipPolicy::Never, ..Default::default() },
+            EngineOptions::default(),
+        );
+        // serve exactly 3 requests then return
+        server::serve(engine, addr, 3).unwrap();
+    });
+
+    // wait for the listener (engine construction compiles graphs first)
+    let mut stream = None;
+    for _ in 0..900 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(100)),
+        }
+    }
+    let stream = stream.expect("server did not come up");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+
+    for (i, label) in [1usize, 4, 7].iter().enumerate() {
+        let req = format!(
+            "{{\"label\": {label}, \"steps\": 4, \"seed\": {i}}}\n");
+        writer.write_all(req.as_bytes()).unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = lazydit::util::json::Json::parse(line.trim()).unwrap();
+        assert_eq!(j.req("label").unwrap().as_usize().unwrap(), *label);
+        assert_eq!(j.req("steps").unwrap().as_usize().unwrap(), 4);
+        assert!(j.req("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+    server_thread.join().unwrap();
+}
+
+#[test]
+fn malformed_requests_get_errors() {
+    // pure protocol check, no engine needed
+    assert!(server::parse_request_line("garbage").is_err());
+    assert!(server::parse_request_line("{}").is_err());
+    let ok = server::parse_request_line(r#"{"label": 2}"#).unwrap();
+    assert_eq!(ok.class_label, 2);
+}
