@@ -1,0 +1,153 @@
+//! Bench: replica-pool scaling on the synthetic workload.
+//!
+//! Sweeps the pool 1→N replicas (closed-loop flood of the same request
+//! set), reporting requests/sec and latency p50/p99 per point, then
+//! compares routing policies at the widest pool. Also verifies the
+//! determinism contract: result images are byte-identical to the
+//! single-replica reference for every (seed, label, steps).
+//!
+//!     cargo bench --bench pool_scaling
+//! (or `cargo run --release --bench pool_scaling` on toolchains where
+//! bench profiles are unavailable)
+
+use lazydit::config::RoutePolicy;
+use lazydit::coordinator::pool::replica::ReplicaHandle;
+use lazydit::coordinator::pool::sim::{sim_image, SimEngine, SimSpec};
+use lazydit::coordinator::pool::Router;
+use lazydit::coordinator::request::Request;
+use lazydit::metrics::stats::quantile;
+use std::sync::mpsc;
+use std::time::Instant;
+
+const REQUESTS: usize = 64;
+const STEPS: usize = 10;
+const WORK: u64 = 20_000;
+const LAZY_PCT: u32 = 50;
+
+fn spec() -> SimSpec {
+    SimSpec { lazy_pct: LAZY_PCT, work_per_module: WORK, ..SimSpec::default() }
+}
+
+fn workload() -> Vec<Request> {
+    (0..REQUESTS)
+        .map(|i| Request::new(0, i % 10, STEPS, 7_000 + i as u64))
+        .collect()
+}
+
+fn fnv64(data: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in data {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+struct RunResult {
+    wall_s: f64,
+    latencies: Vec<f64>,
+    checksums: Vec<u64>,
+    shed: u64,
+}
+
+fn run_pool(replicas: usize, route: RoutePolicy) -> RunResult {
+    let handles: Vec<ReplicaHandle> = (0..replicas)
+        .map(|i| ReplicaHandle::spawn(i, 4096, SimEngine::factory(spec())).unwrap())
+        .collect();
+    let router = Router::new(handles, route, 4096);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(REQUESTS);
+    for req in workload() {
+        let (tx, rx) = mpsc::channel();
+        assert!(router.dispatch(req, tx), "closed-loop run must not shed");
+        rxs.push(rx);
+    }
+    let mut latencies = Vec::with_capacity(REQUESTS);
+    let mut checksums = Vec::with_capacity(REQUESTS);
+    for rx in rxs {
+        let res = rx.recv().expect("response");
+        latencies.push(res.latency.as_secs_f64());
+        checksums.push(fnv64(res.image.data()));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let report = router.shutdown();
+    checksums.sort_unstable();
+    RunResult { wall_s, latencies, checksums, shed: report.shed }
+}
+
+fn row(label: &str, r: &RunResult) -> String {
+    format!(
+        "  {:<16} {:>9.1} req/s   p50 {:>8.2}ms   p99 {:>8.2}ms   ({} shed)",
+        label,
+        REQUESTS as f64 / r.wall_s,
+        1e3 * quantile(&r.latencies, 0.5),
+        1e3 * quantile(&r.latencies, 0.99),
+        r.shed,
+    )
+}
+
+fn main() {
+    lazydit::util::logging::init();
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let mut sweep: Vec<usize> =
+        [1usize, 2, 4, 8].into_iter().filter(|&n| n <= cores.max(2)).collect();
+    if sweep.is_empty() {
+        sweep.push(1);
+    }
+
+    // reference checksums straight from the deterministic image function
+    let elems = spec().img_elems;
+    let mut reference: Vec<u64> = workload()
+        .iter()
+        .map(|req| fnv64(sim_image(req, elems).data()))
+        .collect();
+    reference.sort_unstable();
+
+    println!(
+        "pool_scaling: {REQUESTS} requests × {STEPS} steps, Γ target \
+         {LAZY_PCT}%, work/module {WORK} ({cores} cores)\n"
+    );
+    println!("replica sweep (route jsq):");
+    let mut base_rps = 0.0f64;
+    let mut widest_rps = 0.0f64;
+    let mut deterministic = true;
+    for &n in &sweep {
+        let r = run_pool(n, RoutePolicy::Jsq);
+        println!("{}", row(&format!("{n} replica(s)"), &r));
+        deterministic &= r.checksums == reference;
+        let rps = REQUESTS as f64 / r.wall_s;
+        if n == 1 {
+            base_rps = rps;
+        }
+        widest_rps = rps;
+    }
+
+    let widest = *sweep.last().unwrap();
+    println!("\nrouting policies at {widest} replica(s):");
+    for route in [RoutePolicy::RoundRobin, RoutePolicy::Jsq, RoutePolicy::Lazy] {
+        let r = run_pool(widest, route);
+        println!("{}", row(route.name(), &r));
+        deterministic &= r.checksums == reference;
+    }
+
+    println!();
+    if deterministic {
+        println!("determinism: OK — image bytes identical across every pool \
+                  shape and routing policy");
+    } else {
+        println!("determinism: FAILED — outputs diverged across runs");
+    }
+    if widest > 1 {
+        let speedup = widest_rps / base_rps.max(1e-9);
+        println!("scaling: {widest} replicas at {speedup:.2}× the 1-replica \
+                  throughput{}",
+                 if speedup > 1.2 { " — OK" } else { " — WEAK (loaded machine?)" });
+    }
+    if !deterministic {
+        std::process::exit(1);
+    }
+}

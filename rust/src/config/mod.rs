@@ -120,6 +120,19 @@ impl SkipPolicy {
             _ => bail!("unknown skip policy '{s}' (mean|majority|all|any|never|blend)"),
         })
     }
+
+    /// Stable lowercase label (inverse of `parse`); used for the pool
+    /// A/B report so a variant rename can't silently change the wire.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SkipPolicy::Mean => "mean",
+            SkipPolicy::Majority => "majority",
+            SkipPolicy::All => "all",
+            SkipPolicy::Any => "any",
+            SkipPolicy::Never => "never",
+            SkipPolicy::Blend => "blend",
+        }
+    }
 }
 
 /// Which modules laziness applies to (paper Fig. 6 ablation).
@@ -148,6 +161,39 @@ impl LazyScope {
 
     pub fn covers_ffn(&self) -> bool {
         matches!(self, LazyScope::Both | LazyScope::FfnOnly)
+    }
+}
+
+/// How the replica-pool router picks a replica for a new request
+/// (coordinator::pool::router).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Rotate across replicas regardless of load.
+    RoundRobin,
+    /// Join-shortest-queue: fewest admitted-but-unfinished requests.
+    Jsq,
+    /// Lazy-aware: fewest queued remaining denoise steps, discounted by
+    /// the replica's observed lazy ratio Γ (a lazier replica clears its
+    /// backlog faster, so its effective backlog is smaller).
+    Lazy,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Result<RoutePolicy> {
+        Ok(match s {
+            "rr" | "round-robin" => RoutePolicy::RoundRobin,
+            "jsq" => RoutePolicy::Jsq,
+            "lazy" => RoutePolicy::Lazy,
+            _ => bail!("unknown route policy '{s}' (rr|jsq|lazy)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::Jsq => "jsq",
+            RoutePolicy::Lazy => "lazy",
+        }
     }
 }
 
@@ -263,6 +309,33 @@ mod tests {
         assert_eq!(SkipPolicy::parse("mean").unwrap(), SkipPolicy::Mean);
         assert_eq!(SkipPolicy::parse("blend").unwrap(), SkipPolicy::Blend);
         assert!(SkipPolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn policy_name_roundtrips_through_parse() {
+        for p in [
+            SkipPolicy::Mean,
+            SkipPolicy::Majority,
+            SkipPolicy::All,
+            SkipPolicy::Any,
+            SkipPolicy::Never,
+            SkipPolicy::Blend,
+        ] {
+            assert_eq!(SkipPolicy::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn route_parse() {
+        assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!(
+            RoutePolicy::parse("round-robin").unwrap(),
+            RoutePolicy::RoundRobin
+        );
+        assert_eq!(RoutePolicy::parse("jsq").unwrap(), RoutePolicy::Jsq);
+        assert_eq!(RoutePolicy::parse("lazy").unwrap(), RoutePolicy::Lazy);
+        assert!(RoutePolicy::parse("hash").is_err());
+        assert_eq!(RoutePolicy::Lazy.name(), "lazy");
     }
 
     #[test]

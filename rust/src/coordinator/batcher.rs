@@ -138,6 +138,105 @@ mod tests {
     }
 
     #[test]
+    fn long_queue_rotation_is_fair() {
+        // 32 CFG requests, cap 8 → 4 requests per round; over 8 rotated
+        // rounds every request must be scheduled exactly once — FIFO
+        // rotation may not favor the head of the queue
+        let lane_counts = vec![2usize; 32];
+        let mut picks = vec![0usize; 32];
+        for round in 0..8 {
+            // the engine advances its cursor by 1 per round; requests per
+            // round is 4, so emulate the same stride scaled by selections
+            let start = (round * 4) % 32;
+            let p = plan_round(&lane_counts, start, 8, BUCKETS).unwrap();
+            assert_eq!(p.lanes.len(), 8);
+            for l in &p.lanes {
+                if l.lane == 0 {
+                    picks[l.req_idx] += 1;
+                }
+            }
+        }
+        assert_eq!(picks.iter().sum::<usize>(), 32);
+        let (mn, mx) = (picks.iter().min().unwrap(), picks.iter().max().unwrap());
+        assert_eq!((mn, mx), (&1, &1), "unfair rotation: {picks:?}");
+    }
+
+    #[test]
+    fn unit_stride_rotation_never_starves() {
+        // the engine's actual stride is +1 per round; under that stride a
+        // long queue must still cycle through everyone within n rounds
+        // of slack even though consecutive rounds overlap heavily
+        let lane_counts = vec![2usize; 24];
+        let mut picks = vec![0usize; 24];
+        for round in 0..24 {
+            let p = plan_round(&lane_counts, round % 24, 4, BUCKETS).unwrap();
+            for l in &p.lanes {
+                if l.lane == 0 {
+                    picks[l.req_idx] += 1;
+                }
+            }
+        }
+        assert!(picks.iter().all(|&c| c >= 1), "starved: {picks:?}");
+    }
+
+    #[test]
+    fn cfg_lanes_adjacent_in_long_mixed_queue() {
+        // worst-case interleaving of 1- and 2-lane requests: cond/uncond
+        // of one request must always land at rows (i, i+1)
+        let lane_counts: Vec<usize> =
+            (0..40).map(|i| if i % 3 == 0 { 1 } else { 2 }).collect();
+        for start in 0..lane_counts.len() {
+            let Some(p) = plan_round(&lane_counts, start, 16, BUCKETS) else {
+                panic!("no plan from start {start}");
+            };
+            let mut i = 0;
+            while i < p.lanes.len() {
+                let slot = p.lanes[i];
+                assert_eq!(slot.lane, 0, "row {i} must open a request");
+                if lane_counts[slot.req_idx] == 2 {
+                    assert_eq!(
+                        p.lanes[i + 1],
+                        LaneSlot { req_idx: slot.req_idx, lane: 1 },
+                        "uncond lane not adjacent at rows {i},{}", i + 1
+                    );
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn live_mask_pads_every_exported_bucket() {
+        // for each exported bucket size, force its selection with the
+        // smallest lane count that exceeds the next-smaller bucket, then
+        // check the mask: live rows first, padded tail all-false
+        for (bi, &bucket) in BUCKETS.iter().enumerate() {
+            let prev = if bi == 0 { 0 } else { BUCKETS[bi - 1] };
+            let lanes = prev + 1;
+            let lane_counts = vec![1usize; lanes];
+            let p = plan_round(&lane_counts, 0, bucket, BUCKETS).unwrap();
+            assert_eq!(p.bucket, bucket, "lanes {lanes} must pick bucket {bucket}");
+            assert_eq!(p.lanes.len(), lanes);
+            let m = p.live_mask();
+            assert_eq!(m.len(), bucket);
+            assert_eq!(m.iter().filter(|&&x| x).count(), lanes);
+            for (i, &lv) in m.iter().enumerate() {
+                assert_eq!(lv, i < lanes,
+                           "bucket {bucket}: padding must be the all-false tail");
+            }
+        }
+        // exact-fit case: no padding at all
+        for &bucket in BUCKETS {
+            let lane_counts = vec![1usize; bucket];
+            let p = plan_round(&lane_counts, 0, bucket, BUCKETS).unwrap();
+            assert_eq!(p.bucket, bucket);
+            assert!(p.live_mask().iter().all(|&x| x));
+        }
+    }
+
+    #[test]
     fn prop_invariants() {
         propcheck(300, |g| {
             let n = g.usize_in(0, 12);

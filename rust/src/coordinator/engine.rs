@@ -126,6 +126,16 @@ impl Engine {
             req.id = self.next_id();
         }
         let id = req.id;
+        // the protocol edge bounds steps (server::MAX_STEPS), but
+        // programmatic callers can pass anything — clamp to this
+        // engine's schedule instead of panicking a worker thread
+        let max_steps = self.sampler.schedule.timesteps;
+        let clamped = req.steps.clamp(1, max_steps);
+        if clamped != req.steps {
+            log::warn!("request {id}: steps {} clamped to {clamped} \
+                        (schedule has {max_steps})", req.steps);
+            req.steps = clamped;
+        }
         let m = &self.runner.cfg.model;
         let nd = m.tokens() * m.dim;
         let ts = self.sampler.schedule.ddim_timesteps(req.steps);
@@ -136,6 +146,15 @@ impl Engine {
 
     pub fn active_count(&self) -> usize {
         self.active.len()
+    }
+
+    /// Remaining denoise steps across the active set — the replica pool's
+    /// backlog unit for lazy-aware routing.
+    pub fn pending_steps(&self) -> usize {
+        self.active
+            .iter()
+            .map(|a| a.timesteps.len().saturating_sub(a.cursor))
+            .sum()
     }
 
     /// Run one scheduling round (one denoise step for the selected batch).
@@ -372,6 +391,38 @@ impl Engine {
             }
         }
         out
+    }
+}
+
+/// The real engine drives a pool replica through the same surface the
+/// synthetic engine implements (coordinator::pool).
+impl crate::coordinator::pool::PoolEngine for Engine {
+    fn submit(&mut self, req: Request) -> u64 {
+        Engine::submit(self, req)
+    }
+
+    fn active_count(&self) -> usize {
+        Engine::active_count(self)
+    }
+
+    fn pending_steps(&self) -> usize {
+        Engine::pending_steps(self)
+    }
+
+    fn step_round(&mut self) -> Result<Vec<RequestResult>> {
+        Engine::step_round(self)
+    }
+
+    fn layer_stats(&self) -> &LayerStats {
+        &self.layer_stats
+    }
+
+    fn serve_stats(&self) -> &crate::coordinator::stats::ServeStats {
+        &self.serve_stats
+    }
+
+    fn policy_name(&self) -> String {
+        self.serve.policy.name().to_string()
     }
 }
 

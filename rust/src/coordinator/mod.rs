@@ -7,14 +7,19 @@
 //! * [`engine`] — the denoise scheduler: gather caches → run the lazy
 //!   block runner → CFG-combine → DDIM-update → scatter caches;
 //! * [`stats`] — lazy-ratio Γ accounting, per-layer laziness (Fig. 4);
-//! * [`server`] — TCP JSON-lines front-end with admission control.
+//! * [`pool`] — replica pool: N worker threads each owning an engine,
+//!   with lazy-aware routing and pool-wide stats aggregation;
+//! * [`server`] — TCP JSON-lines front-end with admission control,
+//!   feeding either one engine or the replica pool's router.
 
 pub mod request;
 pub mod batcher;
 pub mod engine;
+pub mod pool;
 pub mod stats;
 pub mod server;
 
 pub use engine::{Engine, EngineOptions};
+pub use pool::{PoolEngine, PoolReport, Router};
 pub use request::{Request, RequestResult};
 pub use stats::LayerStats;

@@ -1,0 +1,67 @@
+//! Replica pool: the multi-engine serving runtime (DESIGN.md §7 extended).
+//!
+//! The single-threaded [`crate::coordinator::engine::Engine`] caps
+//! throughput at one denoise loop. This subsystem lifts that: N worker
+//! threads each own a private engine (PJRT types are `!Send`/`!Sync`, so
+//! every replica *constructs* its engine on its own thread from a `Send`
+//! factory) and a router places requests across them.
+//!
+//! * [`replica`] — the worker thread: bounded input queue, continuous
+//!   admission, per-replica load gauges, drain-on-close;
+//! * [`router`] — admission control + dispatch policies (round-robin,
+//!   join-shortest-queue, lazy-aware cost);
+//! * [`agg`] — pool-wide aggregation of per-replica `LayerStats` /
+//!   `ServeStats` into one report;
+//! * [`sim`] — a deterministic synthetic engine: exercises the whole pool
+//!   (and the scaling bench) without artifacts or the XLA runtime.
+//!
+//! Replicas may run different skip policies side-by-side (per-replica
+//! override in `lazydit serve --replica-policy`), turning the server into
+//! an online A/B harness for the baselines.
+
+pub mod agg;
+pub mod replica;
+pub mod router;
+pub mod sim;
+
+pub use agg::PoolReport;
+pub use replica::{PoolJob, ReplicaGauges, ReplicaHandle, ReplicaReport};
+pub use router::Router;
+pub use sim::{SimEngine, SimSpec};
+
+use crate::coordinator::request::{Request, RequestResult};
+use crate::coordinator::stats::{LayerStats, ServeStats};
+use anyhow::Result;
+
+/// The engine surface a replica worker drives. Implemented by the real
+/// [`crate::coordinator::engine::Engine`] and by [`sim::SimEngine`].
+/// Implementations are thread-local to their replica — the trait
+/// deliberately has no `Send` bound.
+pub trait PoolEngine {
+    /// Admit a request into the active set; returns the assigned id.
+    fn submit(&mut self, req: Request) -> u64;
+
+    /// Requests admitted and not yet finished.
+    fn active_count(&self) -> usize;
+
+    /// Total remaining denoise steps across the active set (the router's
+    /// backlog unit).
+    fn pending_steps(&self) -> usize;
+
+    /// Run one scheduling round; returns finished requests.
+    fn step_round(&mut self) -> Result<Vec<RequestResult>>;
+
+    /// Per-(layer,module) laziness accounting so far.
+    fn layer_stats(&self) -> &LayerStats;
+
+    /// Serving-level accounting so far.
+    fn serve_stats(&self) -> &ServeStats;
+
+    /// Human-readable skip-policy label (pool A/B reporting).
+    fn policy_name(&self) -> String;
+}
+
+/// Constructs a replica's engine *on the replica thread*. The factory is
+/// `Send`; the engine it builds does not have to be.
+pub type EngineFactory =
+    Box<dyn FnOnce() -> Result<Box<dyn PoolEngine>> + Send + 'static>;

@@ -1,0 +1,450 @@
+//! One replica: a worker thread owning its engine, fed through a bounded
+//! queue, observable through lock-free gauges.
+//!
+//! Lifecycle: `spawn` → jobs via `try_send` → `close` (queue refuses new
+//! work, worker finishes queued + in-flight trajectories) → `join_report`
+//! (final per-replica stats). Engine construction happens on the worker
+//! thread because PJRT types are `!Send`/`!Sync`.
+
+use crate::coordinator::pool::{EngineFactory, PoolEngine};
+use crate::coordinator::request::{Request, RequestResult};
+use crate::coordinator::stats::{LayerStats, ServeStats};
+use crate::util::threadpool::BoundedQueue;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A routed request plus its response channel.
+pub struct PoolJob {
+    pub req: Request,
+    pub respond: mpsc::Sender<RequestResult>,
+}
+
+/// Live per-replica load/laziness gauges. The router reads these on every
+/// dispatch; the worker updates them as rounds complete. All counters are
+/// relaxed atomics — approximate-but-cheap is exactly what routing needs.
+#[derive(Debug, Default)]
+pub struct ReplicaGauges {
+    /// Requests admitted (dispatched) and not yet completed.
+    pub queued: AtomicUsize,
+    /// Remaining denoise steps across queued + in-flight requests.
+    /// Incremented by the router at dispatch, decremented by the worker
+    /// as rounds consume steps.
+    pub pending_steps: AtomicUsize,
+    /// Requests completed by this replica.
+    pub completed: AtomicU64,
+    /// Requests this replica accepted but dropped without completing
+    /// (engine failure, panic, refused queue backlog). The router's
+    /// admission ledger needs these or dead replicas would pin
+    /// "outstanding" work forever.
+    pub forfeited: AtomicU64,
+    /// Module invocations observed (engine layer-stats total).
+    pub modules_seen: AtomicU64,
+    /// Module invocations skipped (engine layer-stats skips).
+    pub modules_skipped: AtomicU64,
+}
+
+impl ReplicaGauges {
+    /// Observed lazy ratio Γ (0 until the first round completes).
+    pub fn lazy_ratio(&self) -> f64 {
+        let seen = self.modules_seen.load(Ordering::Relaxed);
+        if seen == 0 {
+            return 0.0;
+        }
+        self.modules_skipped.load(Ordering::Relaxed) as f64 / seen as f64
+    }
+
+    /// Snapshot used by the router's selection policies.
+    pub fn snapshot(&self) -> GaugeSnapshot {
+        GaugeSnapshot {
+            queued: self.queued.load(Ordering::Relaxed),
+            pending_steps: self.pending_steps.load(Ordering::Relaxed),
+            lazy_ratio: self.lazy_ratio(),
+        }
+    }
+}
+
+/// Point-in-time view of one replica's load.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GaugeSnapshot {
+    pub queued: usize,
+    pub pending_steps: usize,
+    pub lazy_ratio: f64,
+}
+
+/// Final accounting exported by a replica at shutdown.
+#[derive(Debug, Clone)]
+pub struct ReplicaReport {
+    pub id: usize,
+    /// Skip-policy label the replica ran (A/B reporting).
+    pub policy: String,
+    pub layer: LayerStats,
+    pub serve: ServeStats,
+    /// Set if the engine failed to construct or a round errored.
+    pub error: Option<String>,
+}
+
+impl ReplicaReport {
+    /// An empty report carrying only a failure message (construction
+    /// failure, panic, or a worker that died without reporting).
+    pub fn failed(id: usize, msg: impl Into<String>) -> ReplicaReport {
+        ReplicaReport {
+            id,
+            policy: String::new(),
+            layer: LayerStats::default(),
+            serve: ServeStats::default(),
+            error: Some(msg.into()),
+        }
+    }
+}
+
+/// Handle held by the router: input queue + gauges + join state.
+pub struct ReplicaHandle {
+    pub id: usize,
+    pub gauges: Arc<ReplicaGauges>,
+    queue: BoundedQueue<PoolJob>,
+    join: Mutex<Option<JoinHandle<()>>>,
+    report: Arc<Mutex<Option<ReplicaReport>>>,
+}
+
+impl ReplicaHandle {
+    /// Spawn the worker thread. `queue_cap` bounds this replica's input
+    /// queue (admission shedding happens at the router on top of this).
+    pub fn spawn(id: usize, queue_cap: usize, factory: EngineFactory)
+                 -> Result<ReplicaHandle> {
+        let queue: BoundedQueue<PoolJob> = BoundedQueue::new(queue_cap.max(1));
+        let gauges = Arc::new(ReplicaGauges::default());
+        let report: Arc<Mutex<Option<ReplicaReport>>> =
+            Arc::new(Mutex::new(None));
+        let (q2, g2, r2) = (queue.clone(), gauges.clone(), report.clone());
+        let join = std::thread::Builder::new()
+            .name(format!("lazydit-replica-{id}"))
+            .spawn(move || {
+                // a panicking engine (e.g. an assert deep in the sampler)
+                // must not wedge the pool: post a failure report and close
+                // the queue so waiting clients error out instead of
+                // hanging. `responders` lives outside the unwind so the
+                // handler knows exactly how many admitted requests died
+                // with the engine — keeping the admission ledger exact
+                // even when the panic races an in-flight dispatch.
+                let mut responders: BTreeMap<u64, mpsc::Sender<RequestResult>> =
+                    BTreeMap::new();
+                let result = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| {
+                        run_replica(id, factory, &q2, &g2, &r2,
+                                    &mut responders)
+                    }));
+                if result.is_err() {
+                    log::warn!("replica {id}: worker panicked");
+                    refuse_remaining(&q2, &g2);
+                    // requests admitted into the unwound engine can never
+                    // complete — forfeit exactly those (an in-flight
+                    // dispatch's optimistic increment is left for its own
+                    // rollback, so nothing is double-resolved)
+                    let lost = responders.len();
+                    g2.forfeited.fetch_add(lost as u64, Ordering::Relaxed);
+                    dec(&g2.queued, lost);
+                    g2.pending_steps.store(0, Ordering::Relaxed);
+                    let mut slot =
+                        r2.lock().unwrap_or_else(|p| p.into_inner());
+                    if slot.is_none() {
+                        *slot = Some(ReplicaReport::failed(
+                            id, "worker panicked"));
+                    }
+                }
+            })
+            .with_context(|| format!("spawning replica {id}"))?;
+        Ok(ReplicaHandle {
+            id,
+            gauges,
+            queue,
+            join: Mutex::new(Some(join)),
+            report,
+        })
+    }
+
+    /// Hand a job to this replica; `Err(job)` if its queue is full or
+    /// closed (the router then tries the next candidate or sheds).
+    pub fn try_send(&self, job: PoolJob) -> std::result::Result<(), PoolJob> {
+        self.queue.try_push(job)
+    }
+
+    /// Stop accepting work. The worker finishes queued + in-flight
+    /// trajectories, then exits (drain semantics).
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
+    /// True once the worker has exported its final report — normal drain
+    /// or failure. Used by the serve loop's liveness check.
+    pub fn finished(&self) -> bool {
+        self.report
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .is_some()
+    }
+
+    /// Close, wait for the worker, and return its final report.
+    pub fn join_report(&self) -> ReplicaReport {
+        self.close();
+        if let Some(h) = self.join.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        self.report
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .take()
+            .unwrap_or_else(|| {
+                ReplicaReport::failed(self.id, "replica exited without a report")
+            })
+    }
+}
+
+/// The worker loop: admit continuously, step the engine, keep gauges
+/// fresh, drain on close. `responders` (admitted-but-unfinished response
+/// channels) is owned by the caller so the panic handler can account for
+/// requests lost in an unwind.
+fn run_replica(id: usize, factory: EngineFactory,
+               queue: &BoundedQueue<PoolJob>, gauges: &ReplicaGauges,
+               report: &Mutex<Option<ReplicaReport>>,
+               responders: &mut BTreeMap<u64, mpsc::Sender<RequestResult>>) {
+    let mut engine: Box<dyn PoolEngine> = match factory() {
+        Ok(e) => e,
+        Err(e) => {
+            let msg = format!("engine construction failed: {e:#}");
+            log::warn!("replica {id}: {msg}");
+            refuse_remaining(queue, gauges);
+            *report.lock().unwrap() = Some(ReplicaReport::failed(id, msg));
+            return;
+        }
+    };
+    log::debug!("replica {id} up (policy {})", engine.policy_name());
+
+    // The router optimistically added the *wire* step count to the
+    // pending_steps gauge; the engine may admit fewer (its submit clamps
+    // to the schedule). Reconcile at admission so the gauge tracks what
+    // will actually be consumed — otherwise the residue accumulates and
+    // biases jsq/lazy routing against this replica forever.
+    fn admit(engine: &mut Box<dyn PoolEngine>,
+             responders: &mut BTreeMap<u64, mpsc::Sender<RequestResult>>,
+             gauges: &ReplicaGauges, job: PoolJob) {
+        let wire_steps = job.req.steps;
+        let before = engine.pending_steps();
+        let rid = engine.submit(job.req);
+        let actual = engine.pending_steps().saturating_sub(before);
+        if actual < wire_steps {
+            dec(&gauges.pending_steps, wire_steps - actual);
+        }
+        responders.insert(rid, job.respond);
+    }
+    let mut error: Option<String> = None;
+
+    loop {
+        if engine.active_count() == 0 {
+            // idle: block for the next job; None = closed AND drained
+            match queue.pop() {
+                Some(job) => admit(&mut engine, responders, gauges, job),
+                None => break,
+            }
+        }
+        // continuous batching: absorb whatever arrived meanwhile
+        while let Some(job) = queue.try_pop() {
+            admit(&mut engine, responders, gauges, job);
+        }
+        let before = engine.pending_steps();
+        match engine.step_round() {
+            Ok(finished) => {
+                for res in finished {
+                    gauges.completed.fetch_add(1, Ordering::Relaxed);
+                    dec(&gauges.queued, 1);
+                    if let Some(tx) = responders.remove(&res.id) {
+                        let _ = tx.send(res);
+                    }
+                }
+                let consumed = before.saturating_sub(engine.pending_steps());
+                dec(&gauges.pending_steps, consumed);
+                let ls = engine.layer_stats();
+                gauges
+                    .modules_seen
+                    .store(ls.total.iter().sum(), Ordering::Relaxed);
+                gauges
+                    .modules_skipped
+                    .store(ls.skips.iter().sum(), Ordering::Relaxed);
+            }
+            Err(e) => {
+                error = Some(format!("step_round failed: {e:#}"));
+                log::warn!("replica {id}: {}", error.as_deref().unwrap());
+                break;
+            }
+        }
+    }
+
+    if error.is_some() {
+        // forfeit whatever is left so pool-wide gauges stay sane; dropped
+        // responders surface as "engine stopped" on the client side
+        dec(&gauges.pending_steps, engine.pending_steps());
+        dec(&gauges.queued, engine.active_count());
+        gauges
+            .forfeited
+            .fetch_add(engine.active_count() as u64, Ordering::Relaxed);
+        refuse_remaining(queue, gauges);
+    }
+    *report.lock().unwrap() = Some(ReplicaReport {
+        id,
+        policy: engine.policy_name(),
+        layer: engine.layer_stats().clone(),
+        serve: engine.serve_stats().clone(),
+        error,
+    });
+    log::debug!("replica {id} drained");
+}
+
+/// Saturating atomic decrement — gauge bookkeeping must never wrap even
+/// when a matching increment was skipped or wiped (tests, error paths,
+/// the panic handler's absolute `store(0)` racing a dispatch rollback).
+pub(crate) fn dec(a: &AtomicUsize, n: usize) {
+    let _ = a.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+        Some(v.saturating_sub(n))
+    });
+}
+
+/// Drop queued jobs (their responders close → clients see a structured
+/// "engine stopped") and roll their load out of the gauges, marking each
+/// as forfeited for the router's admission ledger.
+fn refuse_remaining(queue: &BoundedQueue<PoolJob>, gauges: &ReplicaGauges) {
+    queue.close();
+    while let Some(job) = queue.try_pop() {
+        dec(&gauges.queued, 1);
+        dec(&gauges.pending_steps, job.req.steps);
+        gauges.forfeited.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pool::sim::{SimEngine, SimSpec};
+
+    fn job(seed: u64, steps: usize)
+           -> (PoolJob, mpsc::Receiver<RequestResult>) {
+        let (tx, rx) = mpsc::channel();
+        (PoolJob { req: Request::new(0, 3, steps, seed), respond: tx }, rx)
+    }
+
+    #[test]
+    fn replica_serves_and_reports() {
+        let h = ReplicaHandle::spawn(0, 16, SimEngine::factory(SimSpec::fast()))
+            .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..5 {
+            let (j, rx) = job(i, 4);
+            h.gauges.queued.fetch_add(1, Ordering::Relaxed);
+            h.gauges.pending_steps.fetch_add(4, Ordering::Relaxed);
+            h.try_send(j).map_err(|_| "send").unwrap();
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let res = rx.recv().unwrap();
+            assert_eq!(res.steps, 4);
+        }
+        let rep = h.join_report();
+        assert!(rep.error.is_none(), "{:?}", rep.error);
+        assert_eq!(rep.serve.completed, 5);
+        assert_eq!(h.gauges.completed.load(Ordering::Relaxed), 5);
+        assert_eq!(h.gauges.queued.load(Ordering::Relaxed), 0);
+        assert_eq!(h.gauges.pending_steps.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn close_drains_in_flight() {
+        let h = ReplicaHandle::spawn(1, 16, SimEngine::factory(SimSpec::fast()))
+            .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..8 {
+            let (j, rx) = job(100 + i, 6);
+            h.gauges.queued.fetch_add(1, Ordering::Relaxed);
+            h.gauges.pending_steps.fetch_add(6, Ordering::Relaxed);
+            h.try_send(j).map_err(|_| "send").unwrap();
+            rxs.push(rx);
+        }
+        // close immediately: every queued job must still complete
+        let rep = h.join_report();
+        for rx in rxs {
+            assert!(rx.recv().is_ok(), "drain must finish in-flight work");
+        }
+        assert_eq!(rep.serve.completed, 8);
+    }
+
+    #[test]
+    fn factory_failure_yields_error_report() {
+        let factory: EngineFactory =
+            Box::new(|| anyhow::bail!("no artifacts here"));
+        let h = ReplicaHandle::spawn(2, 4, factory).unwrap();
+        let (j, rx) = job(1, 4);
+        let _ = h.try_send(j);
+        let rep = h.join_report();
+        assert!(rep.error.is_some());
+        // responder dropped → receiver errors out rather than hanging
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn worker_panic_reports_and_releases_clients() {
+        struct PanicEngine {
+            layer: LayerStats,
+            serve: ServeStats,
+            active: usize,
+        }
+        impl PoolEngine for PanicEngine {
+            fn submit(&mut self, req: Request) -> u64 {
+                self.active += 1;
+                req.id.max(1)
+            }
+            fn active_count(&self) -> usize {
+                self.active
+            }
+            fn pending_steps(&self) -> usize {
+                self.active
+            }
+            fn step_round(&mut self) -> Result<Vec<RequestResult>> {
+                panic!("injected panic")
+            }
+            fn layer_stats(&self) -> &LayerStats {
+                &self.layer
+            }
+            fn serve_stats(&self) -> &ServeStats {
+                &self.serve
+            }
+            fn policy_name(&self) -> String {
+                "panic".into()
+            }
+        }
+        let factory: EngineFactory = Box::new(|| {
+            Ok(Box::new(PanicEngine {
+                layer: LayerStats::new(1),
+                serve: ServeStats::default(),
+                active: 0,
+            }) as Box<dyn PoolEngine>)
+        });
+        let h = ReplicaHandle::spawn(9, 4, factory).unwrap();
+        let (j, rx) = job(1, 4);
+        h.try_send(j).map_err(|_| "send").unwrap();
+        let rep = h.join_report();
+        assert_eq!(rep.error.as_deref(), Some("worker panicked"));
+        assert!(rx.recv().is_err(), "client must not hang on a panicked worker");
+    }
+
+    #[test]
+    fn gauges_track_lazy_ratio() {
+        let g = ReplicaGauges::default();
+        assert_eq!(g.lazy_ratio(), 0.0);
+        g.modules_seen.store(100, Ordering::Relaxed);
+        g.modules_skipped.store(25, Ordering::Relaxed);
+        assert!((g.lazy_ratio() - 0.25).abs() < 1e-12);
+        let s = g.snapshot();
+        assert_eq!(s.queued, 0);
+        assert!((s.lazy_ratio - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,253 @@
+//! Admission control + dispatch across the replica pool.
+//!
+//! Three policies (config::RoutePolicy):
+//! * `rr`   — rotate, ignoring load;
+//! * `jsq`  — join-shortest-queue on admitted-but-unfinished requests;
+//! * `lazy` — cost-based: a replica's backlog is its queued remaining
+//!   denoise steps discounted by its observed lazy ratio Γ — a replica
+//!   skipping Γ of its module invocations clears a step in ≈(1−Γ) of the
+//!   full-step time, so its *effective* backlog is `steps · (1 − Γ)`.
+//!
+//! Admission control is pool-wide: when the total of per-replica queues
+//! reaches `queue_cap`, new requests are shed immediately (the client
+//! gets a structured `queue full` line, never silence).
+
+use crate::config::RoutePolicy;
+use crate::coordinator::pool::agg::PoolReport;
+use crate::coordinator::pool::replica::{GaugeSnapshot, PoolJob, ReplicaHandle};
+use crate::coordinator::request::{Request, RequestResult};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// The pool front-door. All methods take `&self`; the router is shared
+/// across acceptor threads behind an `Arc`.
+pub struct Router {
+    replicas: Vec<ReplicaHandle>,
+    route: RoutePolicy,
+    queue_cap: usize,
+    rr: AtomicUsize,
+    shed: AtomicU64,
+    /// Admission ledger: dispatch attempts (tickets). Outstanding work is
+    /// `dispatched − shed − Σ(completed + forfeited)`; because the ticket
+    /// is taken *before* the bound check, N concurrent dispatches get N
+    /// distinct ticket numbers and the cap cannot be overrun by a
+    /// check-then-act race across connection threads.
+    dispatched: AtomicU64,
+    /// Wire-protocol id allocator: replica engines each number from 1,
+    /// so the router assigns pool-unique ids before dispatch.
+    next_id: AtomicU64,
+}
+
+impl Router {
+    pub fn new(replicas: Vec<ReplicaHandle>, route: RoutePolicy,
+               queue_cap: usize) -> Router {
+        assert!(!replicas.is_empty(), "router needs at least one replica");
+        Router {
+            replicas,
+            route,
+            queue_cap: queue_cap.max(1),
+            rr: AtomicUsize::new(0),
+            shed: AtomicU64::new(0),
+            dispatched: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn route(&self) -> RoutePolicy {
+        self.route
+    }
+
+    /// Admitted-but-unfinished requests across the pool.
+    pub fn total_queued(&self) -> usize {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.queued.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Requests completed across the pool.
+    pub fn total_completed(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.completed.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Requests shed by admission control.
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Live pool-wide lazy ratio Γ from the gauges.
+    pub fn overall_lazy(&self) -> f64 {
+        let (mut seen, mut skipped) = (0u64, 0u64);
+        for r in &self.replicas {
+            seen += r.gauges.modules_seen.load(Ordering::Relaxed);
+            skipped += r.gauges.modules_skipped.load(Ordering::Relaxed);
+        }
+        if seen == 0 {
+            0.0
+        } else {
+            skipped as f64 / seen as f64
+        }
+    }
+
+    /// True when every replica worker has exited (drained or failed) —
+    /// the serve loop uses this to stop instead of waiting forever.
+    pub fn all_replicas_finished(&self) -> bool {
+        self.replicas.iter().all(|r| r.finished())
+    }
+
+    /// Resolved (no longer outstanding) ledger entries: sheds plus every
+    /// request a replica completed or forfeited. Monotone, so a stale
+    /// read can only over-estimate outstanding work — which sheds
+    /// conservatively, never overruns the cap.
+    fn resolved(&self) -> u64 {
+        let done: u64 = self
+            .replicas
+            .iter()
+            .map(|r| {
+                r.gauges.completed.load(Ordering::Relaxed)
+                    + r.gauges.forfeited.load(Ordering::Relaxed)
+            })
+            .sum();
+        done + self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Route one request. Returns `false` if it was shed (admission bound
+    /// hit, or every replica refused). Requests arriving with `id == 0`
+    /// get a pool-unique id (replica engines each number from 1, so
+    /// engine-assigned ids would collide across replicas on the wire).
+    pub fn dispatch(&self, mut req: Request,
+                    respond: mpsc::Sender<RequestResult>) -> bool {
+        // take a ticket first, then check the bound: the shed below
+        // returns the ticket via the shed counter inside resolved()
+        let resolved = self.resolved();
+        let ticket = self.dispatched.fetch_add(1, Ordering::Relaxed) + 1;
+        if ticket.saturating_sub(resolved) > self.queue_cap as u64 {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        if req.id == 0 {
+            req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        let snaps: Vec<GaugeSnapshot> =
+            self.replicas.iter().map(|r| r.gauges.snapshot()).collect();
+        let rr = self.rr.fetch_add(1, Ordering::Relaxed);
+        let order = candidate_order(self.route, &snaps, rr);
+        let steps = req.steps;
+        let mut job = PoolJob { req, respond };
+        for idx in order {
+            let h = &self.replicas[idx];
+            // optimistic accounting: visible to concurrent dispatches
+            // before the worker even sees the job
+            h.gauges.queued.fetch_add(1, Ordering::Relaxed);
+            h.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
+            match h.try_send(job) {
+                Ok(()) => return true,
+                Err(j) => {
+                    // saturating rollback: a panicked worker may have
+                    // store(0)'d these gauges between our add and here,
+                    // and a raw fetch_sub would wrap to usize::MAX
+                    crate::coordinator::pool::replica::dec(&h.gauges.queued, 1);
+                    crate::coordinator::pool::replica::dec(
+                        &h.gauges.pending_steps, steps);
+                    job = j;
+                }
+            }
+        }
+        self.shed.fetch_add(1, Ordering::Relaxed);
+        false
+    }
+
+    /// Drain and stop every replica, returning the aggregated report.
+    /// In-flight and queued trajectories finish first (drain semantics).
+    pub fn shutdown(&self) -> PoolReport {
+        for r in &self.replicas {
+            r.close();
+        }
+        let reports = self.replicas.iter().map(|r| r.join_report()).collect();
+        PoolReport { replicas: reports, shed: self.shed_count() }
+    }
+}
+
+/// Effective-backlog cost of one replica under the lazy-aware policy.
+pub fn lazy_cost(snap: &GaugeSnapshot) -> f64 {
+    // clamp Γ: a replica that skipped everything so far still pays the
+    // apply/embed/final overhead, so never discount below 5%
+    snap.pending_steps as f64 * (1.0 - snap.lazy_ratio.clamp(0.0, 0.95))
+}
+
+/// Best-first replica order for one dispatch. Pure so policies are unit
+/// testable without threads.
+pub fn candidate_order(route: RoutePolicy, snaps: &[GaugeSnapshot],
+                       rr: usize) -> Vec<usize> {
+    let n = snaps.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    match route {
+        RoutePolicy::RoundRobin => {
+            idx.rotate_left(rr % n.max(1));
+        }
+        RoutePolicy::Jsq => {
+            idx.sort_by_key(|&i| (snaps[i].queued, i));
+        }
+        RoutePolicy::Lazy => {
+            idx.sort_by(|&a, &b| {
+                lazy_cost(&snaps[a])
+                    .partial_cmp(&lazy_cost(&snaps[b]))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| snaps[a].queued.cmp(&snaps[b].queued))
+                    .then_with(|| a.cmp(&b))
+            });
+        }
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(queued: usize, steps: usize, lazy: f64) -> GaugeSnapshot {
+        GaugeSnapshot { queued, pending_steps: steps, lazy_ratio: lazy }
+    }
+
+    #[test]
+    fn rr_rotates() {
+        let s = vec![snap(0, 0, 0.0); 3];
+        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 0), vec![0, 1, 2]);
+        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 1), vec![1, 2, 0]);
+        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 4), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn jsq_picks_shortest() {
+        let s = vec![snap(4, 80, 0.0), snap(1, 20, 0.0), snap(2, 40, 0.0)];
+        assert_eq!(candidate_order(RoutePolicy::Jsq, &s, 0)[0], 1);
+        // tie → lowest index
+        let t = vec![snap(2, 0, 0.0), snap(2, 0, 0.0), snap(1, 0, 0.0)];
+        assert_eq!(candidate_order(RoutePolicy::Jsq, &s, 7)[0], 1);
+        assert_eq!(candidate_order(RoutePolicy::Jsq, &t, 0), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn lazy_discounts_backlog_by_gamma() {
+        // replica 0: 100 steps at Γ=0.6 → cost 40
+        // replica 1:  60 steps at Γ=0.0 → cost 60
+        let s = vec![snap(5, 100, 0.6), snap(3, 60, 0.0)];
+        assert_eq!(candidate_order(RoutePolicy::Lazy, &s, 0)[0], 0);
+        // without laziness the same backlogs invert the choice
+        let s = vec![snap(5, 100, 0.0), snap(3, 60, 0.0)];
+        assert_eq!(candidate_order(RoutePolicy::Lazy, &s, 0)[0], 1);
+    }
+
+    #[test]
+    fn lazy_cost_clamps_gamma() {
+        let c = lazy_cost(&snap(1, 100, 1.0));
+        assert!((c - 5.0).abs() < 1e-9, "Γ clamped to 0.95 → cost 5, got {c}");
+    }
+}

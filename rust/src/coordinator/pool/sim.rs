@@ -1,0 +1,326 @@
+//! Deterministic synthetic engine: the pool's test/bench substrate.
+//!
+//! `SimEngine` mimics the real engine's serving contract — per-request
+//! multi-step trajectories, per-module skip accounting, `LayerStats` /
+//! `ServeStats` bookkeeping — without artifacts or the XLA runtime.
+//! Executed modules burn a calibrated amount of CPU, so pool scaling and
+//! lazy-aware routing are *measurable*; skipped modules cost nothing,
+//! so a replica's lazy ratio shows up in wall-clock exactly as in the
+//! real system.
+//!
+//! Determinism contract (pinned by `tests/integration_pool.rs`): the
+//! output image is a pure function of `(seed, label, steps)` — identical
+//! bytes regardless of replica count, routing policy, or co-batched
+//! requests. Skip decisions are a pure function of `(step, module slot)`.
+
+use crate::coordinator::pool::{EngineFactory, PoolEngine};
+use crate::coordinator::request::{Request, RequestResult};
+use crate::coordinator::stats::{LayerStats, ServeStats};
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Synthetic-engine parameters.
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    /// Transformer depth analog (2·depth module slots).
+    pub depth: usize,
+    /// Output image elements.
+    pub img_elems: usize,
+    /// Target lazy ratio in percent (0 = never skip).
+    pub lazy_pct: u32,
+    /// Spin iterations per *executed* module (per request, per step).
+    pub work_per_module: u64,
+    /// Policy label reported for pool A/B views.
+    pub policy: String,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        SimSpec {
+            depth: 4,
+            img_elems: 48,
+            lazy_pct: 50,
+            work_per_module: 4_000,
+            policy: "sim".to_string(),
+        }
+    }
+}
+
+impl SimSpec {
+    /// Cheap variant for unit tests.
+    pub fn fast() -> SimSpec {
+        SimSpec { work_per_module: 50, ..Default::default() }
+    }
+}
+
+/// One in-flight synthetic trajectory.
+struct SimActive {
+    req: Request,
+    cursor: usize,
+    skip_counts: Vec<u32>,
+    modules_seen: Vec<u32>,
+    started: Instant,
+}
+
+/// The synthetic engine. Single-threaded like the real one; a pool
+/// replica owns exactly one.
+pub struct SimEngine {
+    pub spec: SimSpec,
+    pub layer_stats: LayerStats,
+    pub serve_stats: ServeStats,
+    active: Vec<SimActive>,
+    next_id: u64,
+}
+
+impl SimEngine {
+    pub fn new(spec: SimSpec) -> SimEngine {
+        let depth = spec.depth;
+        SimEngine {
+            spec,
+            layer_stats: LayerStats::new(depth),
+            serve_stats: ServeStats::default(),
+            active: Vec::new(),
+            next_id: 1,
+        }
+    }
+
+    /// A `Send` factory for `ReplicaHandle::spawn`.
+    pub fn factory(spec: SimSpec) -> EngineFactory {
+        Box::new(move || Ok(Box::new(SimEngine::new(spec)) as Box<dyn PoolEngine>))
+    }
+
+    /// Deterministic skip decision for (step, module slot). Step 0 never
+    /// skips (no cache yet), mirroring the real engine's cache gate.
+    fn wants_skip(&self, step: usize, k: usize) -> bool {
+        step > 0 && mix(step as u64, k as u64) % 100 < self.spec.lazy_pct as u64
+    }
+}
+
+/// The synthetic output image: a pure function of (seed, label, steps).
+pub fn sim_image(req: &Request, img_elems: usize) -> Tensor {
+    let stream = req
+        .seed
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (req.class_label as u64).rotate_left(17)
+        ^ (req.steps as u64).rotate_left(41);
+    let mut rng = Rng::new(stream);
+    let mut v = vec![0.0f32; img_elems];
+    rng.fill_normal(&mut v);
+    Tensor::from_vec(&[img_elems], v).expect("sim image shape")
+}
+
+/// SplitMix64-style stateless mixer for skip decisions.
+fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(b.rotate_left(31))
+        .wrapping_add(0xD1FF_051F);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Burn a deterministic amount of CPU (an executed module's cost).
+fn spin(iters: u64) -> u64 {
+    let mut acc = 0x9E37u64;
+    for i in 0..iters {
+        acc = acc.rotate_left(5).wrapping_add(i ^ 0xA5A5_A5A5);
+    }
+    std::hint::black_box(acc)
+}
+
+impl PoolEngine for SimEngine {
+    fn submit(&mut self, mut req: Request) -> u64 {
+        if req.id == 0 {
+            req.id = self.next_id;
+            self.next_id += 1;
+        } else {
+            self.next_id = self.next_id.max(req.id + 1);
+        }
+        let id = req.id;
+        let slots = 2 * self.spec.depth;
+        self.active.push(SimActive {
+            req,
+            cursor: 0,
+            skip_counts: vec![0; slots],
+            modules_seen: vec![0; slots],
+            started: Instant::now(),
+        });
+        id
+    }
+
+    fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    fn pending_steps(&self) -> usize {
+        self.active
+            .iter()
+            .map(|a| a.req.steps.saturating_sub(a.cursor))
+            .sum()
+    }
+
+    fn step_round(&mut self) -> Result<Vec<RequestResult>> {
+        let t0 = Instant::now();
+        let depth = self.spec.depth;
+        let gamma = self.spec.lazy_pct as f64 / 100.0;
+        for ai in 0..self.active.len() {
+            let step = self.active[ai].cursor;
+            for k in 0..2 * depth {
+                let skip = self.wants_skip(step, k);
+                self.active[ai].modules_seen[k] += 1;
+                self.layer_stats.record(k, skip, gamma);
+                self.serve_stats.module_invocations += 1;
+                if skip {
+                    self.active[ai].skip_counts[k] += 1;
+                    self.serve_stats.module_skips += 1;
+                } else {
+                    spin(self.spec.work_per_module);
+                }
+            }
+            self.active[ai].cursor += 1;
+        }
+        // retire finished trajectories
+        let img_elems = self.spec.img_elems;
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].cursor >= self.active[i].req.steps {
+                let a = self.active.remove(i);
+                let latency = a.started.elapsed();
+                let seen: u32 = a.modules_seen.iter().sum();
+                let skipped: u32 = a.skip_counts.iter().sum();
+                let attn_seen: u32 =
+                    (0..depth).map(|l| a.modules_seen[2 * l]).sum();
+                let attn_skip: u32 =
+                    (0..depth).map(|l| a.skip_counts[2 * l]).sum();
+                let ffn_seen: u32 =
+                    (0..depth).map(|l| a.modules_seen[2 * l + 1]).sum();
+                let ffn_skip: u32 =
+                    (0..depth).map(|l| a.skip_counts[2 * l + 1]).sum();
+                self.serve_stats.completed += 1;
+                self.serve_stats.latencies_s.push(latency.as_secs_f64());
+                out.push(RequestResult {
+                    id: a.req.id,
+                    class_label: a.req.class_label,
+                    steps: a.req.steps,
+                    image: sim_image(&a.req, img_elems),
+                    lazy_ratio: skipped as f64 / seen.max(1) as f64,
+                    attn_lazy_ratio: attn_skip as f64 / attn_seen.max(1) as f64,
+                    ffn_lazy_ratio: ffn_skip as f64 / ffn_seen.max(1) as f64,
+                    latency,
+                    per_module_skip: (0..2 * depth)
+                        .map(|k| a.skip_counts[k] as f64
+                             / a.modules_seen[k].max(1) as f64)
+                        .collect(),
+                });
+            } else {
+                i += 1;
+            }
+        }
+        self.serve_stats.wall_s += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    fn layer_stats(&self) -> &LayerStats {
+        &self.layer_stats
+    }
+
+    fn serve_stats(&self) -> &ServeStats {
+        &self.serve_stats
+    }
+
+    fn policy_name(&self) -> String {
+        self.spec.policy.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_all(e: &mut SimEngine) -> Vec<RequestResult> {
+        let mut out = Vec::new();
+        while e.active_count() > 0 {
+            out.extend(e.step_round().unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn images_are_pure_functions_of_request() {
+        let a = sim_image(&Request::new(1, 3, 10, 42), 32);
+        let b = sim_image(&Request::new(99, 3, 10, 42), 32);
+        assert_eq!(a.data(), b.data(), "id must not affect the image");
+        let c = sim_image(&Request::new(1, 4, 10, 42), 32);
+        assert_ne!(a.data(), c.data(), "label must affect the image");
+        let d = sim_image(&Request::new(1, 3, 10, 43), 32);
+        assert_ne!(a.data(), d.data(), "seed must affect the image");
+    }
+
+    #[test]
+    fn trajectories_complete_with_expected_accounting() {
+        let mut e = SimEngine::new(SimSpec::fast());
+        e.submit(Request::new(0, 1, 6, 7));
+        e.submit(Request::new(0, 2, 3, 8));
+        assert_eq!(e.pending_steps(), 9);
+        let res = run_all(&mut e);
+        assert_eq!(res.len(), 2);
+        assert_eq!(e.serve_stats.completed, 2);
+        assert_eq!(e.pending_steps(), 0);
+        // 9 request-steps × 8 module slots
+        assert_eq!(e.serve_stats.module_invocations, 72);
+        let total: u64 = e.layer_stats.total.iter().sum();
+        assert_eq!(total, 72);
+    }
+
+    #[test]
+    fn lazy_ratio_tracks_target() {
+        let mut e = SimEngine::new(SimSpec {
+            lazy_pct: 50,
+            work_per_module: 0,
+            ..SimSpec::default()
+        });
+        for s in 0..8 {
+            e.submit(Request::new(0, s % 4, 40, s as u64));
+        }
+        run_all(&mut e);
+        let gamma = e.layer_stats.overall_ratio();
+        assert!((gamma - 0.5).abs() < 0.12,
+                "Γ {gamma} should approximate 50% target");
+        // zero-lazy engine never skips
+        let mut never = SimEngine::new(SimSpec {
+            lazy_pct: 0,
+            work_per_module: 0,
+            ..SimSpec::default()
+        });
+        never.submit(Request::new(0, 1, 10, 3));
+        run_all(&mut never);
+        assert_eq!(never.layer_stats.overall_ratio(), 0.0);
+    }
+
+    #[test]
+    fn skip_decisions_are_step_slot_deterministic() {
+        let e = SimEngine::new(SimSpec::default());
+        for step in 0..20 {
+            for k in 0..8 {
+                assert_eq!(e.wants_skip(step, k), e.wants_skip(step, k));
+            }
+            assert!(!e.wants_skip(0, step % 8), "step 0 never skips");
+        }
+    }
+
+    #[test]
+    fn ids_assigned_and_preserved() {
+        let mut e = SimEngine::new(SimSpec::fast());
+        let a = e.submit(Request::new(0, 0, 1, 0));
+        let b = e.submit(Request::new(0, 0, 1, 1));
+        assert!(b > a);
+        let c = e.submit(Request::new(77, 0, 1, 2));
+        assert_eq!(c, 77);
+        let d = e.submit(Request::new(0, 0, 1, 3));
+        assert_eq!(d, 78);
+    }
+}

@@ -1,23 +1,31 @@
 //! TCP JSON-lines serving front-end with admission control.
 //!
-//! Protocol (one JSON object per line):
+//! Protocol (one JSON object per line; see docs/SERVING.md):
 //!   request : {"label": 3, "steps": 20, "seed": 1, "cfg_scale": 1.5}
 //!   response: {"id": 7, "latency_ms": 123.4, "lazy_ratio": 0.31,
 //!              "attn_lazy": 0.35, "ffn_lazy": 0.27, "steps": 20}
 //!   shed    : {"error": "queue full"}
 //!
-//! The engine is single-threaded (PJRT types are not Sync); acceptor
-//! threads feed a bounded queue — backpressure is the queue bound, and
-//! over-bound requests are shed immediately (admission control).
+//! `steps` must be a positive integer and `seed` a non-negative integer
+//! below 2^53; malformed fields get a structured `{"error": ...}` line.
+//!
+//! Two back-ends share this front-end:
+//! * [`serve`] — the legacy single-engine loop (one denoise loop total);
+//! * [`serve_pool`] — the replica pool: acceptor threads feed the
+//!   [`Router`], which places each request on one of N replica engines
+//!   (round-robin / join-shortest-queue / lazy-aware). Shutdown drains:
+//!   replicas finish in-flight trajectories before exit.
 
 use crate::coordinator::engine::Engine;
+use crate::coordinator::pool::{PoolReport, Router};
 use crate::coordinator::request::{Request, RequestResult};
 use crate::util::json::Json;
 use crate::util::threadpool::BoundedQueue;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 
 /// A queued request with its response channel.
 pub struct Pending {
@@ -25,16 +33,52 @@ pub struct Pending {
     pub respond: mpsc::Sender<RequestResult>,
 }
 
+/// Most denoise steps a request may ask for: the diffusion grid length
+/// (`DiffusionConfig::timesteps` is 1000 for every exported config).
+/// Enforced at the protocol edge because `Schedule::ddim_timesteps`
+/// asserts it — an unchecked value would panic a replica worker.
+pub const MAX_STEPS: usize = 1000;
+
 /// Parse one request line into a Request (id assigned later).
+///
+/// Strictness (wire-protocol contract): every integer field is parsed
+/// as a strict integer — fields used to be silently truncated through
+/// `as u64`/`as usize` casts, mangling large, negative, and fractional
+/// values. `steps` must be in `1..=MAX_STEPS`.
 pub fn parse_request_line(line: &str) -> Result<Request> {
     let j = Json::parse(line).context("request json")?;
-    let label = j.req("label")?.as_usize().context("label")?;
-    let steps = j.get("steps").and_then(|v| v.as_usize()).unwrap_or(20);
-    let seed = j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
-    let cfg_scale = j
-        .get("cfg_scale")
-        .and_then(|v| v.as_f64())
-        .unwrap_or(1.5) as f32;
+    let label = j
+        .req("label")?
+        .as_u64()
+        .context("label must be a non-negative integer")?;
+    // labels cross the PJRT boundary as i32 — reject anything that the
+    // downstream cast would wrap instead of serving the wrong class
+    if label > i32::MAX as u64 {
+        bail!("label must be below 2^31");
+    }
+    let label = label as usize;
+    let steps = match j.get("steps") {
+        None => 20,
+        Some(v) => v
+            .as_u64()
+            .context("steps must be a positive integer")? as usize,
+    };
+    if steps == 0 {
+        bail!("steps must be >= 1");
+    }
+    if steps > MAX_STEPS {
+        bail!("steps must be <= {MAX_STEPS}");
+    }
+    let seed = match j.get("seed") {
+        None => 0,
+        Some(v) => v
+            .as_u64()
+            .context("seed must be a non-negative integer below 2^53")?,
+    };
+    let cfg_scale = match j.get("cfg_scale") {
+        None => 1.5,
+        Some(v) => v.as_f64().context("cfg_scale must be a number")? as f32,
+    };
     let mut r = Request::new(0, label, steps, seed);
     r.cfg_scale = cfg_scale;
     Ok(r)
@@ -54,7 +98,19 @@ pub fn format_response(res: &RequestResult) -> String {
     .to_string()
 }
 
-fn handle_conn(stream: TcpStream, queue: BoundedQueue<Pending>) {
+/// Structured error line (escaping-safe: built through the serializer,
+/// never by string interpolation).
+pub fn error_line(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+/// Shared per-connection read loop. `submit` hands an admitted request
+/// plus its response channel to a back-end; `false` means shed (the
+/// client gets a structured `queue full` line).
+fn serve_lines<F>(stream: TcpStream, submit: F)
+where
+    F: Fn(Request, mpsc::Sender<RequestResult>) -> bool,
+{
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(stream.try_clone().expect("clone stream"));
     let mut writer = stream;
@@ -66,15 +122,16 @@ fn handle_conn(stream: TcpStream, queue: BoundedQueue<Pending>) {
         let reply = match parse_request_line(&line) {
             Ok(req) => {
                 let (tx, rx) = mpsc::channel();
-                match queue.try_push(Pending { req, respond: tx }) {
-                    Ok(()) => match rx.recv() {
+                if submit(req, tx) {
+                    match rx.recv() {
                         Ok(res) => format_response(&res),
-                        Err(_) => r#"{"error":"engine stopped"}"#.to_string(),
-                    },
-                    Err(_) => r#"{"error":"queue full"}"#.to_string(),
+                        Err(_) => error_line("engine stopped"),
+                    }
+                } else {
+                    error_line("queue full")
                 }
             }
-            Err(e) => format!(r#"{{"error":"{e}"}}"#),
+            Err(e) => error_line(&format!("{e:#}")),
         };
         if writer.write_all(reply.as_bytes()).is_err()
             || writer.write_all(b"\n").is_err()
@@ -86,8 +143,8 @@ fn handle_conn(stream: TcpStream, queue: BoundedQueue<Pending>) {
     log::debug!("connection from {peer:?} closed");
 }
 
-/// Run the serving loop: accept on `addr`, drive the engine until
-/// `max_requests` have completed (0 = forever).
+/// Run the legacy single-engine serving loop: accept on `addr`, drive the
+/// engine until `max_requests` have completed (0 = forever).
 pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> {
     let queue: BoundedQueue<Pending> = BoundedQueue::new(engine.serve.queue_cap);
     let listener = TcpListener::bind(addr)
@@ -102,7 +159,11 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> 
             match listener.accept() {
                 Ok((stream, _)) => {
                     let q3 = q2.clone();
-                    std::thread::spawn(move || handle_conn(stream, q3));
+                    std::thread::spawn(move || {
+                        serve_lines(stream, move |req, tx| {
+                            q3.try_push(Pending { req, respond: tx }).is_ok()
+                        })
+                    });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(std::time::Duration::from_millis(5));
@@ -144,6 +205,80 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> 
     Ok(())
 }
 
+/// Run the replica-pool serving loop: accept on `addr`, feed the router,
+/// stop once `max_requests` have completed (0 = forever), then drain the
+/// pool and return the aggregated report. `max_requests` is a lower
+/// bound, not an exact count: requests admitted before the stop is
+/// observed still drain to completion (the pool never abandons admitted
+/// work), so the report may show more than `max_requests` served. Also
+/// stops — instead of hanging — if the acceptor dies or every replica
+/// has exited (e.g. all engine constructions failed); the per-replica
+/// errors are in the returned report.
+pub fn serve_pool(router: Router, addr: &str,
+                  max_requests: usize) -> Result<PoolReport> {
+    let router = Arc::new(router);
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding {addr}"))?;
+    listener.set_nonblocking(true)?;
+    log::info!("serving on {addr} — {} replicas, route {}",
+               router.replica_count(), router.route().name());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let (r2, s2) = (router.clone(), stop.clone());
+    let acceptor = std::thread::Builder::new()
+        .name("lazydit-pool-acceptor".into())
+        .spawn(move || loop {
+            if s2.load(Ordering::Relaxed) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let r3 = r2.clone();
+                    std::thread::spawn(move || {
+                        serve_lines(stream, move |req, tx| r3.dispatch(req, tx))
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => {
+                    // a dead acceptor makes the server permanently deaf —
+                    // propagate via the stop flag instead of hanging
+                    log::warn!("accept error, stopping pool: {e}");
+                    s2.store(true, Ordering::Relaxed);
+                    break;
+                }
+            }
+        })?;
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break; // acceptor hit a fatal error
+        }
+        if max_requests > 0
+            && router.total_completed() >= max_requests as u64
+        {
+            break;
+        }
+        if router.all_replicas_finished() {
+            log::warn!("every replica has exited — stopping pool");
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    stop.store(true, Ordering::Relaxed);
+    drop(acceptor); // detached; exits on its next poll tick
+
+    let report = router.shutdown();
+    log::info!(
+        "pool served {} requests ({} shed); lazy ratio {:.3}",
+        report.completed(),
+        report.shed,
+        report.overall_lazy()
+    );
+    Ok(report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,12 +298,76 @@ mod tests {
     fn defaults_apply() {
         let r = parse_request_line(r#"{"label": 0}"#).unwrap();
         assert_eq!(r.steps, 20);
+        assert_eq!(r.seed, 0);
     }
 
     #[test]
     fn rejects_bad_lines() {
         assert!(parse_request_line("not json").is_err());
         assert!(parse_request_line(r#"{"steps": 10}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_steps() {
+        let e = parse_request_line(r#"{"label": 1, "steps": 0}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("steps must be >= 1"), "{e:#}");
+    }
+
+    #[test]
+    fn rejects_out_of_grid_steps() {
+        // values past the diffusion grid would panic the replica worker
+        // in Schedule::ddim_timesteps — the protocol edge must stop them
+        assert!(parse_request_line(r#"{"label": 1, "steps": 1000}"#).is_ok());
+        let e =
+            parse_request_line(r#"{"label": 1, "steps": 1001}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("steps must be <= 1000"), "{e:#}");
+        assert!(parse_request_line(r#"{"label": 1, "steps": 100000}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_mangled_label_and_cfg_scale() {
+        // label used to saturate/truncate through `as usize`
+        assert!(parse_request_line(r#"{"label": -1}"#).is_err());
+        assert!(parse_request_line(r#"{"label": 3.9}"#).is_err());
+        // 2^32 would wrap to class 0 through the downstream i32 cast
+        assert!(parse_request_line(r#"{"label": 4294967296}"#).is_err());
+        // cfg_scale of the wrong type used to silently become 1.5
+        assert!(parse_request_line(r#"{"label": 1, "cfg_scale": "x"}"#).is_err());
+        let r = parse_request_line(r#"{"label": 1, "cfg_scale": 1.0}"#).unwrap();
+        assert!((r.cfg_scale - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn seeds_parse_as_strict_integers() {
+        // large integers survive exactly up to 2^53 - 1
+        let r = parse_request_line(
+            r#"{"label": 1, "seed": 9007199254740991}"#).unwrap();
+        assert_eq!(r.seed, 9_007_199_254_740_991);
+        // negative, fractional, and oversized seeds are rejected, not
+        // silently mangled through `as u64` — including 2^53 and 2^53+1,
+        // which collide as f64
+        for bad in [
+            r#"{"label": 1, "seed": -3}"#,
+            r#"{"label": 1, "seed": 1.5}"#,
+            r#"{"label": 1, "seed": 9007199254740992}"#,
+            r#"{"label": 1, "seed": 9007199254740993}"#,
+            r#"{"label": 1, "seed": 1e300}"#,
+        ] {
+            let e = parse_request_line(bad).unwrap_err();
+            assert!(format!("{e:#}").contains("seed"), "{bad}: {e:#}");
+        }
+        // steps has the same strictness
+        assert!(parse_request_line(r#"{"label": 1, "steps": 2.5}"#).is_err());
+    }
+
+    #[test]
+    fn error_lines_are_valid_json() {
+        let s = error_line("bad \"quoted\" thing\nwith newline");
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(
+            j.req("error").unwrap().as_str().unwrap(),
+            "bad \"quoted\" thing\nwith newline"
+        );
     }
 
     #[test]

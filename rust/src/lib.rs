@@ -15,8 +15,10 @@
 //! * [`runtime`] — PJRT client, manifest, executable registry.
 //! * [`model`] — parameter store, checkpoints, the lazy block runner.
 //! * [`sampler`] — diffusion schedules, DDIM, classifier-free guidance.
-//! * [`coordinator`] — the paper's system contribution: router, continuous
-//!   batcher, denoise scheduler, cache manager, skip policies, server.
+//! * [`coordinator`] — the paper's system contribution: continuous
+//!   batcher, denoise scheduler (per-request caches live in the engine's
+//!   request state), replica pool with lazy-aware routing, skip
+//!   policies, server.
 //! * [`train`] — pretraining + lazy-learning drivers (AOT train steps).
 //! * [`data`] — SynthBlobs-10 dataset and workload generators.
 //! * [`metrics`] — FID/sFID/IS/precision-recall analogs + linalg.

@@ -58,6 +58,19 @@ impl Json {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Strict integer accessor: `Some` only for non-negative whole numbers
+    /// strictly below 2^53. Values are stored as f64, so 2^53 itself is
+    /// ambiguous (2^53 + 1 rounds to it) and larger magnitudes are not
+    /// exactly representable — all such values are rejected rather than
+    /// silently mangled (the wire protocol uses this for seeds).
+    pub fn as_u64(&self) -> Option<u64> {
+        let n = self.as_f64()?;
+        if n.fract() != 0.0 || n < 0.0 || n >= 9_007_199_254_740_992.0 {
+            return None;
+        }
+        Some(n as u64)
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -433,6 +446,25 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let re = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, re);
+    }
+
+    #[test]
+    fn strict_u64_accessor() {
+        assert_eq!(Json::parse("7").unwrap().as_u64(), Some(7));
+        assert_eq!(Json::parse("0").unwrap().as_u64(), Some(0));
+        // largest unambiguous integer (2^53 - 1)
+        assert_eq!(
+            Json::parse("9007199254740991").unwrap().as_u64(),
+            Some(9_007_199_254_740_991)
+        );
+        // 2^53 is rejected: 2^53 + 1 rounds to the same f64, so accepting
+        // it would silently alias two different wire values
+        assert_eq!(Json::parse("9007199254740992").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("9007199254740993").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("-3").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1e300").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("\"7\"").unwrap().as_u64(), None);
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Replica-pool integration: routing, drain, shedding, determinism, and
+//! the aggregation invariant (pool-wide stats == sum of per-replica
+//! stats). Runs entirely on the synthetic engine — no artifacts needed.
+
+use lazydit::config::RoutePolicy;
+use lazydit::coordinator::pool::replica::ReplicaHandle;
+use lazydit::coordinator::pool::sim::{sim_image, SimEngine, SimSpec};
+use lazydit::coordinator::pool::Router;
+use lazydit::coordinator::request::{Request, RequestResult};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+fn build_router(specs: Vec<SimSpec>, route: RoutePolicy,
+                queue_cap: usize) -> Router {
+    let handles: Vec<ReplicaHandle> = specs
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            ReplicaHandle::spawn(i, queue_cap, SimEngine::factory(s)).unwrap()
+        })
+        .collect();
+    Router::new(handles, route, queue_cap)
+}
+
+/// Dispatch a fixed workload closed-loop and gather every result.
+fn run_workload(router: &Router, n: usize, steps: usize)
+                -> (Vec<RequestResult>, usize) {
+    let mut rxs = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..n {
+        let (tx, rx) = mpsc::channel();
+        let req = Request::new(0, i % 10, steps, 1000 + i as u64);
+        if router.dispatch(req, tx) {
+            rxs.push(rx);
+        } else {
+            shed += 1;
+        }
+    }
+    let mut out = Vec::new();
+    for rx in rxs {
+        out.push(rx.recv().expect("response"));
+    }
+    (out, shed)
+}
+
+#[test]
+fn pool_aggregate_matches_sum_of_replicas() {
+    // deliberately heterogeneous replicas (different Γ targets): the
+    // pool-wide view must be the ratio of summed counters, not an
+    // average of per-replica ratios
+    let specs = vec![
+        SimSpec { lazy_pct: 0, policy: "never".into(), ..SimSpec::fast() },
+        SimSpec { lazy_pct: 50, policy: "mean".into(), ..SimSpec::fast() },
+        SimSpec { lazy_pct: 80, policy: "aggressive".into(), ..SimSpec::fast() },
+    ];
+    let router = build_router(specs, RoutePolicy::RoundRobin, 1024);
+    let (results, shed) = run_workload(&router, 30, 8);
+    assert_eq!(results.len(), 30);
+    assert_eq!(shed, 0);
+    // wire ids are pool-unique even though each replica engine numbers
+    // its own requests from 1
+    let ids: std::collections::BTreeSet<u64> =
+        results.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), 30, "response ids must not collide across replicas");
+
+    let report = router.shutdown();
+    assert_eq!(report.replicas.len(), 3);
+    assert_eq!(report.failed(), 0);
+
+    // ---- the aggregation invariant, counter by counter
+    let merged = report.merged_layer();
+    let serve = report.merged_serve();
+    let mut sum_skips = 0u64;
+    let mut sum_total = 0u64;
+    let mut sum_completed = 0usize;
+    let mut sum_inv = 0u64;
+    let mut sum_skip_inv = 0u64;
+    for r in &report.replicas {
+        sum_skips += r.layer.skips.iter().sum::<u64>();
+        sum_total += r.layer.total.iter().sum::<u64>();
+        sum_completed += r.serve.completed;
+        sum_inv += r.serve.module_invocations;
+        sum_skip_inv += r.serve.module_skips;
+    }
+    assert_eq!(merged.skips.iter().sum::<u64>(), sum_skips);
+    assert_eq!(merged.total.iter().sum::<u64>(), sum_total);
+    assert_eq!(serve.completed, sum_completed);
+    assert_eq!(serve.module_invocations, sum_inv);
+    assert_eq!(serve.module_skips, sum_skip_inv);
+    assert_eq!(sum_completed, 30);
+    // Γ: ratio of sums
+    let gamma = report.overall_lazy();
+    assert!((gamma - sum_skips as f64 / sum_total as f64).abs() < 1e-12);
+    // per-layer laziness sums slot-wise too
+    for k in 0..merged.skips.len() {
+        let s: u64 = report.replicas.iter().map(|r| r.layer.skips[k]).sum();
+        assert_eq!(merged.skips[k], s, "slot {k}");
+    }
+    // shed count propagates into the merged serve stats
+    assert_eq!(serve.shed, report.shed as usize);
+    // every request ran its full trajectory: 30 requests × 8 steps ×
+    // (2·depth) module slots
+    let depth = SimSpec::fast().depth;
+    assert_eq!(sum_total, (30 * 8 * 2 * depth) as u64);
+}
+
+#[test]
+fn outputs_deterministic_across_replica_counts_and_routes() {
+    // reference: what each (seed, label, steps) must produce
+    let elems = SimSpec::fast().img_elems;
+    let reference: BTreeMap<u64, Vec<f32>> = (0..24u64)
+        .map(|i| {
+            let req = Request::new(0, (i % 10) as usize, 6, 1000 + i);
+            (1000 + i, sim_image(&req, elems).data().to_vec())
+        })
+        .collect();
+
+    for (replicas, route) in [
+        (1, RoutePolicy::RoundRobin),
+        (3, RoutePolicy::Jsq),
+        (4, RoutePolicy::Lazy),
+    ] {
+        let specs = vec![SimSpec::fast(); replicas];
+        let router = build_router(specs, route, 1024);
+        let (results, shed) = run_workload(&router, 24, 6);
+        assert_eq!(shed, 0);
+        assert_eq!(results.len(), 24);
+        // every result's image must be byte-identical to the reference
+        // for its seed, and all 24 seeds must be covered exactly once —
+        // regardless of pool shape or routing policy
+        let mut seen = std::collections::BTreeSet::new();
+        for r in &results {
+            let seed = seed_of(r, &reference);
+            assert!(seen.insert(seed),
+                    "duplicate image for seed {seed} (replicas={replicas}, \
+                     route={})", route.name());
+        }
+        assert_eq!(seen.len(), 24);
+        router.shutdown();
+    }
+}
+
+/// Recover the workload seed whose reference image matches this result.
+fn seed_of(r: &RequestResult, reference: &BTreeMap<u64, Vec<f32>>) -> u64 {
+    for (seed, img) in reference {
+        if img.as_slice() == r.image.data() {
+            return *seed;
+        }
+    }
+    panic!("result image matches no reference — determinism broken");
+}
+
+#[test]
+fn admission_bound_sheds_and_counts() {
+    // 1 replica, slow modules, pool-wide bound of 4 outstanding
+    let specs = vec![SimSpec {
+        work_per_module: 200_000,
+        lazy_pct: 0,
+        ..SimSpec::default()
+    }];
+    let router = build_router(specs, RoutePolicy::Jsq, 4);
+    let mut rxs = Vec::new();
+    let mut refused = 0usize;
+    for i in 0..32 {
+        let (tx, rx) = mpsc::channel();
+        if router.dispatch(Request::new(0, 1, 4, i), tx) {
+            rxs.push(rx);
+        } else {
+            refused += 1;
+        }
+    }
+    assert!(refused > 0, "with bound 4 and 32 instant arrivals, some shed");
+    assert_eq!(router.shed_count(), refused as u64);
+    for rx in rxs {
+        rx.recv().expect("admitted requests must complete");
+    }
+    let report = router.shutdown();
+    assert_eq!(report.shed, refused as u64);
+    assert_eq!(report.completed() + refused, 32);
+}
+
+#[test]
+fn shutdown_drains_in_flight_trajectories() {
+    let specs = vec![SimSpec::fast(); 2];
+    let router = build_router(specs, RoutePolicy::RoundRobin, 64);
+    let mut rxs = Vec::new();
+    for i in 0..12 {
+        let (tx, rx) = mpsc::channel();
+        assert!(router.dispatch(Request::new(0, 2, 10, 500 + i), tx));
+        rxs.push(rx);
+    }
+    // immediate shutdown: drain semantics must finish all 12
+    let report = router.shutdown();
+    assert_eq!(report.completed(), 12);
+    for rx in rxs {
+        assert!(rx.recv().is_ok(), "in-flight request lost at shutdown");
+    }
+}
+
+#[test]
+fn jsq_balances_across_replicas() {
+    let specs = vec![SimSpec::fast(); 4];
+    let router = build_router(specs, RoutePolicy::Jsq, 1024);
+    let (results, _) = run_workload(&router, 40, 6);
+    assert_eq!(results.len(), 40);
+    let report = router.shutdown();
+    // JSQ's tie-break walks the pool before reusing a replica, so with
+    // 40 instant arrivals nobody can be starved outright
+    for r in &report.replicas {
+        assert!(r.serve.completed >= 1,
+                "replica {} served nothing", r.id);
+    }
+    assert_eq!(report.completed(), 40);
+}
+
+#[test]
+fn per_replica_policy_labels_surface_in_report() {
+    let specs = vec![
+        SimSpec { policy: "mean".into(), lazy_pct: 90, ..SimSpec::fast() },
+        SimSpec { policy: "never".into(), lazy_pct: 0, ..SimSpec::fast() },
+    ];
+    let router = build_router(specs, RoutePolicy::RoundRobin, 64);
+    let (results, _) = run_workload(&router, 8, 4);
+    assert_eq!(results.len(), 8);
+    let report = router.shutdown();
+    let labels: Vec<&str> =
+        report.replicas.iter().map(|r| r.policy.as_str()).collect();
+    assert_eq!(labels, vec!["mean", "never"]);
+    // the never replica must report Γ = 0 — the A/B contrast is real
+    assert_eq!(report.replicas[1].layer.overall_ratio(), 0.0);
+    assert!(report.replicas[0].layer.overall_ratio() > 0.0);
+    let rendered = report.render();
+    assert!(rendered.contains("mean") && rendered.contains("never"));
+}

@@ -1,0 +1,337 @@
+//! API-compatible stub of the `xla_extension` 0.5.x Rust bindings.
+//!
+//! Everything host-side is fully functional: `Literal` construction,
+//! reshape, typed readback, and `PjRtBuffer` as a host-resident literal
+//! holder. The two operations that need the native XLA runtime —
+//! `PjRtClient::compile` and executable dispatch — return
+//! `Error::Unavailable` with a pointer at the swap instructions below.
+//!
+//! To serve real models, replace the `xla` path dependency in the root
+//! `Cargo.toml` with the actual bindings (github.com/LaurentMazare/xla-rs
+//! or the xla_extension build documented in DESIGN.md §2); the L3 crate
+//! compiles unmodified against either because it only uses this surface.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type; `Unavailable` marks operations needing native XLA.
+#[derive(Debug)]
+pub enum Error {
+    Unavailable(String),
+    Shape(String),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(m) => write!(f, "xla stub: {m}"),
+            Error::Shape(m) => write!(f, "xla shape error: {m}"),
+            Error::Io(e) => write!(f, "xla io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(op: &str) -> Result<T> {
+    Err(Error::Unavailable(format!(
+        "{op} requires the native XLA runtime — swap rust/vendor/xla for \
+         the real xla_extension bindings (see rust/vendor/xla/src/lib.rs)"
+    )))
+}
+
+/// Element types mirrored from xla_extension (subset + placeholders).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Typed host storage behind a `Literal`.
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match self {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+            Data::U32(_) => ElementType::U32,
+        }
+    }
+}
+
+/// Host scalar types storable in a `Literal`.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+
+    fn unwrap(data: &Data) -> Option<Vec<f32>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+
+    fn unwrap(data: &Data) -> Option<Vec<i32>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn wrap(data: Vec<u32>) -> Data {
+        Data::U32(data)
+    }
+
+    fn unwrap(data: &Data) -> Option<Vec<u32>> {
+        match data {
+            Data::U32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// Dims + element type of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host-resident typed array (fully functional in the stub).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Same storage, new dims; element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements to {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { ty: self.data.ty(), dims: self.dims.clone() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Typed readback; errors on a type mismatch.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| {
+            Error::Shape(format!("literal holds {:?}", self.data.ty()))
+        })
+    }
+
+    /// Stub literals are always arrays, never tuples.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::Shape("literal is not a tuple".to_string()))
+    }
+}
+
+/// Parsed HLO module (stub: retains the text for diagnostics).
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an `.hlo.txt` dump. File errors are real; parsing is deferred
+    /// to the native runtime, which the stub does not have.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(Error::Io)?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation wrapping an HLO module.
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: () }
+    }
+}
+
+/// PJRT client handle (stub: host-only, cannot compile).
+#[derive(Clone)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-host".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    /// Host upload — in the stub, a buffer is just a host literal.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let dims64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(PjRtBuffer { literal: Literal::vec1(data).reshape(&dims64)? })
+    }
+}
+
+/// Device buffer (stub: host-resident literal).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Compiled executable handle. Never constructible in the stub (compile
+/// errors first), but the dispatch surface must exist to typecheck.
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> PjRtClient {
+        PjRtClient { _priv: () }
+    }
+
+    pub fn execute<L: Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let l = l.reshape(&[2, 2]).unwrap();
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert!(l.reshape(&[3, 1]).is_ok());
+    }
+
+    #[test]
+    fn buffers_hold_literals() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "stub-host");
+        let b = c
+            .buffer_from_host_buffer(&[7u32, 8], &[2], None)
+            .unwrap();
+        assert_eq!(b.to_literal_sync().unwrap().to_vec::<u32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn compile_is_unavailable() {
+        let c = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: String::new() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = c.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("native XLA runtime"));
+    }
+}

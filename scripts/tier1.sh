@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build + test (+ advisory rustfmt check).
+#
+# Usage: scripts/tier1.sh
+#   FMT_STRICT=1 scripts/tier1.sh   # make the fmt check fatal
+#
+# The fmt check is advisory by default because the seed codebase
+# predates rustfmt adoption; flip FMT_STRICT=1 once the tree is
+# formatted.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier1: cargo build --release"
+cargo build --release
+
+echo "== tier1: cargo test -q"
+cargo test -q
+
+echo "== tier1: cargo fmt --check (advisory unless FMT_STRICT=1)"
+if cargo fmt --version >/dev/null 2>&1; then
+    if ! cargo fmt --all -- --check; then
+        if [ "${FMT_STRICT:-0}" = "1" ]; then
+            echo "tier1: rustfmt check FAILED (strict mode)"
+            exit 1
+        fi
+        echo "tier1: rustfmt check failed (advisory — set FMT_STRICT=1 to enforce)"
+    fi
+else
+    echo "tier1: rustfmt unavailable, skipping"
+fi
+
+echo "== tier1: OK"
