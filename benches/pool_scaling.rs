@@ -2,9 +2,12 @@
 //!
 //! Sweeps the pool 1→N replicas (closed-loop flood of the same request
 //! set), reporting requests/sec and latency p50/p99 per point, then
-//! compares routing policies at the widest pool. Also verifies the
-//! determinism contract: result images are byte-identical to the
-//! single-replica reference for every (seed, label, steps).
+//! compares routing policies at the widest pool, then runs the skewed-Γ
+//! scenario: replicas whose lazy ratios diverge, where admission-time
+//! jsq placement strands work on the slow (never-skipping) replica and
+//! work stealing pulls it back. Also verifies the determinism contract:
+//! result images are byte-identical to the single-replica reference for
+//! every (seed, label, steps).
 //!
 //!     cargo bench --bench pool_scaling
 //! (or `cargo run --release --bench pool_scaling` on toolchains where
@@ -13,7 +16,8 @@
 use lazydit::config::RoutePolicy;
 use lazydit::coordinator::pool::replica::ReplicaHandle;
 use lazydit::coordinator::pool::sim::{sim_image, SimEngine, SimSpec};
-use lazydit::coordinator::pool::Router;
+use lazydit::coordinator::pool::steal::Rebalancer;
+use lazydit::coordinator::pool::{PoolReport, Router};
 use lazydit::coordinator::request::Request;
 use lazydit::metrics::stats::quantile;
 use std::sync::mpsc;
@@ -23,6 +27,9 @@ const REQUESTS: usize = 64;
 const STEPS: usize = 10;
 const WORK: u64 = 20_000;
 const LAZY_PCT: u32 = 50;
+/// In-engine admission bound while stealing (jobs beyond it stay
+/// queued, i.e. migratable).
+const STEAL_WINDOW: usize = 2;
 
 fn spec() -> SimSpec {
     SimSpec { lazy_pct: LAZY_PCT, work_per_module: WORK, ..SimSpec::default() }
@@ -47,45 +54,98 @@ fn fnv64(data: &[f32]) -> u64 {
 
 struct RunResult {
     wall_s: f64,
+    /// Client-observed completion latency (dispatch → response), which
+    /// includes queue wait — the quantity stealing actually improves.
     latencies: Vec<f64>,
     checksums: Vec<u64>,
     shed: u64,
+    report: PoolReport,
 }
 
-fn run_pool(replicas: usize, route: RoutePolicy) -> RunResult {
-    let handles: Vec<ReplicaHandle> = (0..replicas)
-        .map(|i| ReplicaHandle::spawn(i, 4096, SimEngine::factory(spec())).unwrap())
+fn run_pool_with(specs: Vec<SimSpec>, route: RoutePolicy,
+                 steal: bool) -> RunResult {
+    let rebalancer = steal.then(|| Rebalancer::new(STEAL_WINDOW));
+    let handles: Vec<ReplicaHandle> = specs
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            ReplicaHandle::spawn_with(i, 4096, SimEngine::factory(s),
+                                      rebalancer.clone())
+            .unwrap()
+        })
         .collect();
-    let router = Router::new(handles, route, 4096);
+    let router = Router::with_rebalancer(handles, route, 4096, rebalancer);
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(REQUESTS);
+    // one collector thread per request so completion timestamps are
+    // observed the moment each response lands, not in dispatch order
+    let mut joins = Vec::with_capacity(REQUESTS);
     for req in workload() {
         let (tx, rx) = mpsc::channel();
         assert!(router.dispatch(req, tx), "closed-loop run must not shed");
-        rxs.push(rx);
+        joins.push(std::thread::spawn(move || {
+            let res = rx.recv().expect("response");
+            (t0.elapsed().as_secs_f64(), fnv64(res.image.data()))
+        }));
     }
     let mut latencies = Vec::with_capacity(REQUESTS);
     let mut checksums = Vec::with_capacity(REQUESTS);
-    for rx in rxs {
-        let res = rx.recv().expect("response");
-        latencies.push(res.latency.as_secs_f64());
-        checksums.push(fnv64(res.image.data()));
+    for j in joins {
+        let (lat, sum) = j.join().expect("collector");
+        latencies.push(lat);
+        checksums.push(sum);
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let report = router.shutdown();
     checksums.sort_unstable();
-    RunResult { wall_s, latencies, checksums, shed: report.shed }
+    RunResult { wall_s, latencies, checksums, shed: report.shed, report }
+}
+
+fn run_pool(replicas: usize, route: RoutePolicy) -> RunResult {
+    run_pool_with(vec![spec(); replicas], route, false)
 }
 
 fn row(label: &str, r: &RunResult) -> String {
     format!(
-        "  {:<16} {:>9.1} req/s   p50 {:>8.2}ms   p99 {:>8.2}ms   ({} shed)",
+        "  {:<16} {:>9.1} req/s   p50 {:>8.2}ms   p95 {:>8.2}ms   ({} shed)",
         label,
         REQUESTS as f64 / r.wall_s,
         1e3 * quantile(&r.latencies, 0.5),
-        1e3 * quantile(&r.latencies, 0.99),
+        1e3 * quantile(&r.latencies, 0.95),
         r.shed,
     )
+}
+
+/// The skewed-Γ scenario: half the pool never skips (Γ=0), half skips
+/// aggressively (Γ≈90%). jsq balances *queue lengths* at admission, so
+/// without stealing the slow replica strands ~half the workload; with
+/// stealing the fast replica pulls the slow one's queued jobs as it
+/// goes idle. Returns (p95 without stealing, p95 with stealing).
+fn skewed_gamma_scenario() -> (f64, f64) {
+    let specs = || vec![SimSpec::with_lazy(0, WORK),
+                        SimSpec::with_lazy(90, WORK)];
+    println!("skewed-Γ scenario (2 replicas, Γ = 0% vs 90%, route jsq):");
+    let base = run_pool_with(specs(), RoutePolicy::Jsq, false);
+    println!("{}", row("jsq", &base));
+    let stealing = run_pool_with(specs(), RoutePolicy::Jsq, true);
+    println!("{}", row("jsq + steal", &stealing));
+    for r in &stealing.report.replicas {
+        println!("    replica {} ({:<8}): served {:>3}, stole {:>3}, \
+                  lost {:>3}",
+                 r.id, r.policy, r.serve.completed, r.steals, r.stolen);
+    }
+    let (steals, stolen) = (stealing.report.total_steals(),
+                            stealing.report.total_stolen());
+    assert_eq!(steals, stolen,
+               "migration conservation: every steal has one thief and \
+                one victim");
+    assert_eq!(
+        stealing.report.completed() + base.report.completed(),
+        2 * REQUESTS,
+        "no job lost or duplicated across either run"
+    );
+    let p95_base = quantile(&base.latencies, 0.95);
+    let p95_steal = quantile(&stealing.latencies, 0.95);
+    (p95_base, p95_steal)
 }
 
 fn main() {
@@ -134,10 +194,20 @@ fn main() {
         deterministic &= r.checksums == reference;
     }
 
+    println!("\nwork stealing at {widest} replica(s) (uniform Γ):");
+    for steal in [false, true] {
+        let r = run_pool_with(vec![spec(); widest], RoutePolicy::Jsq, steal);
+        println!("{}", row(if steal { "jsq + steal" } else { "jsq" }, &r));
+        deterministic &= r.checksums == reference;
+    }
+
+    println!();
+    let (p95_base, p95_steal) = skewed_gamma_scenario();
+
     println!();
     if deterministic {
         println!("determinism: OK — image bytes identical across every pool \
-                  shape and routing policy");
+                  shape, routing policy, and steal mode");
     } else {
         println!("determinism: FAILED — outputs diverged across runs");
     }
@@ -147,6 +217,16 @@ fn main() {
                   throughput{}",
                  if speedup > 1.2 { " — OK" } else { " — WEAK (loaded machine?)" });
     }
+    println!(
+        "stealing under skewed Γ: p95 {:.2}ms → {:.2}ms{}",
+        1e3 * p95_base,
+        1e3 * p95_steal,
+        if p95_steal < p95_base {
+            " — OK (strictly lower)"
+        } else {
+            " — WEAK (expected stealing to beat static jsq; loaded machine?)"
+        }
+    );
     if !deterministic {
         std::process::exit(1);
     }

@@ -5,7 +5,9 @@
 //! dispatch and pool-wide admission control. `--replica-policy
 //! i=policy,...` overrides the skip policy of individual replicas, which
 //! turns the server into an online A/B harness (e.g. LazyDiT gates on
-//! replica 0, the never-skip DDIM baseline on replica 1).
+//! replica 0, the never-skip DDIM baseline on replica 1). `--steal on`
+//! arms pool work stealing: idle replicas pull queued jobs from the
+//! sibling with the highest lazy-discounted backlog.
 //!
 //! `--synthetic` serves the deterministic synthetic engine instead of
 //! the real model — no artifacts or XLA runtime needed; useful for
@@ -16,7 +18,7 @@ use crate::config::{LazyScope, RoutePolicy, ServeConfig, SkipPolicy};
 use crate::coordinator::engine::{Engine, EngineOptions};
 use crate::coordinator::pool::replica::ReplicaHandle;
 use crate::coordinator::pool::sim::{SimEngine, SimSpec};
-use crate::coordinator::pool::{EngineFactory, PoolEngine, Router};
+use crate::coordinator::pool::{EngineFactory, PoolEngine, Rebalancer, Router};
 use crate::coordinator::server::serve_pool;
 use crate::util::argparse::{Args, OptSpec};
 use anyhow::{bail, Context, Result};
@@ -36,6 +38,7 @@ pub fn specs() -> Vec<OptSpec> {
         OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
         OptSpec { name: "replicas", help: "replica-pool size", default: Some("1"), is_flag: false },
         OptSpec { name: "route", help: "dispatch policy: rr|jsq|lazy", default: Some("rr"), is_flag: false },
+        OptSpec { name: "steal", help: "pool work stealing: on|off", default: Some("off"), is_flag: false },
         OptSpec { name: "replica-policy", help: "per-replica skip-policy overrides, e.g. 0=mean,1=never", default: None, is_flag: false },
         OptSpec { name: "synthetic", help: "serve the synthetic engine (no artifacts needed)", default: None, is_flag: true },
         OptSpec { name: "sim-work", help: "synthetic spin per executed module", default: Some("4000"), is_flag: false },
@@ -44,6 +47,15 @@ pub fn specs() -> Vec<OptSpec> {
         OptSpec { name: "pretrain-steps", help: "base steps if needed", default: Some("1500"), is_flag: false },
         OptSpec { name: "pretrain-lr", help: "base lr if needed", default: Some("2e-3"), is_flag: false },
     ])
+}
+
+/// Parse the `--steal on|off` switch.
+pub fn parse_steal(v: &str) -> Result<bool> {
+    match v.trim() {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => bail!("--steal must be 'on' or 'off', got '{other}'"),
+    }
 }
 
 /// Parse `--replica-policy 0=mean,2=never` into an index → policy map.
@@ -182,16 +194,31 @@ pub fn run(a: Args) -> Result<()> {
         (engine_factories(&ctx, &serve_cfg, gamma, replicas, &overrides), qc)
     };
 
+    // work stealing: idle replicas pull queued jobs from the sibling
+    // with the highest lazy-discounted backlog. The admission window
+    // (max trajectories inside an engine at once) tracks --max-batch so
+    // the batcher stays full while the queue tail remains migratable.
+    let steal = parse_steal(&a.get_str("steal", "off"))?;
+    let rebalancer = if steal && replicas > 1 {
+        Some(Rebalancer::new(a.get_usize("max-batch", 8)?.max(1)))
+    } else {
+        None
+    };
     let handles: Vec<ReplicaHandle> = factories
         .into_iter()
         .enumerate()
-        .map(|(i, f)| ReplicaHandle::spawn(i, queue_cap, f))
+        .map(|(i, f)| {
+            ReplicaHandle::spawn_with(i, queue_cap, f, rebalancer.clone())
+        })
         .collect::<Result<_>>()?;
-    let router = Router::new(handles, route, queue_cap);
+    let router =
+        Router::with_rebalancer(handles, route, queue_cap, rebalancer);
 
-    println!("serving on {addr} — {replicas} replica(s), route {} — send \
-              JSON lines like {{\"label\":3,\"steps\":20,\"seed\":1}}",
-             route.name());
+    println!("serving on {addr} — {replicas} replica(s), route {}, steal \
+              {} — send JSON lines like \
+              {{\"label\":3,\"steps\":20,\"seed\":1}}",
+             route.name(),
+             if router.stealing() { "on" } else { "off" });
     let report = serve_pool(router, &addr, max_requests)?;
     println!("{}", report.render());
     // a supervisor watching the exit code must not see success when the
@@ -224,6 +251,15 @@ mod tests {
         assert!(parse_replica_policies("x=mean", 3).is_err());
         assert!(parse_replica_policies("0=bogus", 3).is_err());
         assert!(parse_replica_policies("0common", 3).is_err());
+    }
+
+    #[test]
+    fn steal_switch_parses_strictly() {
+        assert!(parse_steal("on").unwrap());
+        assert!(!parse_steal("off").unwrap());
+        assert!(!parse_steal(" off ").unwrap());
+        assert!(parse_steal("yes").is_err());
+        assert!(parse_steal("").is_err());
     }
 
     #[test]

@@ -78,36 +78,54 @@ impl PoolReport {
         self.replicas.iter().filter(|r| r.error.is_some()).count()
     }
 
+    /// Jobs replicas pulled from siblings (work stealing), pool-wide.
+    pub fn total_steals(&self) -> u64 {
+        self.replicas.iter().map(|r| r.steals).sum()
+    }
+
+    /// Jobs pulled *out of* replicas' queues, pool-wide. Conservation:
+    /// every migration increments exactly one replica's `steals` and one
+    /// replica's `stolen`, so the two totals are always equal.
+    pub fn total_stolen(&self) -> u64 {
+        self.replicas.iter().map(|r| r.stolen).sum()
+    }
+
     /// Multi-line human summary: one line per replica (the A/B view),
     /// then the pool-wide roll-up.
     pub fn render(&self) -> String {
         let mut out = String::from(
-            "replica  policy        served   Γ(lazy)   mean lat   p99 lat\n",
+            "replica  policy        served   Γ(lazy)   mean lat   p99 lat   \
+             stole  lost\n",
         );
         for r in &self.replicas {
             let line = match &r.error {
                 Some(e) => format!("  {:>2}     {:<12}  FAILED: {e}\n", r.id,
                                    r.policy),
                 None => format!(
-                    "  {:>2}     {:<12}  {:>6}   {:>6.1}%   {:>7.3}s  {:>7.3}s\n",
+                    "  {:>2}     {:<12}  {:>6}   {:>6.1}%   {:>7.3}s  \
+                     {:>7.3}s   {:>5}  {:>4}\n",
                     r.id,
                     r.policy,
                     r.serve.completed,
                     100.0 * r.layer.overall_ratio(),
                     r.serve.mean_latency(),
                     r.serve.p99_latency(),
+                    r.steals,
+                    r.stolen,
                 ),
             };
             out.push_str(&line);
         }
         let serve = self.merged_serve();
         out.push_str(&format!(
-            "  pool                   {:>6}   {:>6.1}%   {:>7.3}s  {:>7.3}s   ({} shed)\n",
+            "  pool                   {:>6}   {:>6.1}%   {:>7.3}s  {:>7.3}s   \
+             ({} shed, {} stolen)\n",
             serve.completed,
             100.0 * self.overall_lazy(),
             serve.mean_latency(),
             serve.p99_latency(),
             serve.shed,
+            self.total_steals(),
         ));
         out
     }
@@ -141,6 +159,8 @@ mod tests {
                 module_invocations: 2 * depth as u64 * total,
                 module_skips: 2 * depth as u64 * skips,
             },
+            steals: 0,
+            stolen: 0,
             error: None,
         }
     }
@@ -148,7 +168,7 @@ mod tests {
     #[test]
     fn merged_counters_are_sums() {
         let pr = PoolReport {
-            replicas: vec![report(0, 3, 10, 40), report(1, 3, 30, 40)],
+            replicas: vec![report(0, 3, 10, 40, 4), report(1, 3, 30, 40, 6)],
             shed: 2,
         };
         let l = pr.merged_layer();
@@ -168,7 +188,7 @@ mod tests {
     fn gamma_is_ratio_of_sums_not_average_of_ratios() {
         // replica 0: 9/10 skipped (Γ=0.9), replica 1: 0/90 (Γ=0.0)
         let pr = PoolReport {
-            replicas: vec![report(0, 1, 9, 10), report(1, 1, 0, 90)],
+            replicas: vec![report(0, 1, 9, 10, 1), report(1, 1, 0, 90, 9)],
             shed: 0,
         };
         // ratio of sums: 18/200 per-pool = 0.09; average of averages 0.45
@@ -188,14 +208,34 @@ mod tests {
 
     #[test]
     fn render_mentions_every_replica_and_pool() {
-        let pr = PoolReport {
-            replicas: vec![report(0, 2, 1, 4), report(1, 2, 3, 4)],
-            shed: 1,
-        };
+        let mut a = report(0, 2, 1, 4, 3);
+        a.steals = 3;
+        let mut b = report(1, 2, 3, 4, 5);
+        b.stolen = 3;
+        let pr = PoolReport { replicas: vec![a, b], shed: 1 };
         let s = pr.render();
         assert!(s.contains("pool"));
         assert!(s.contains("mean"));
-        assert!(s.contains("(1 shed)"));
+        assert!(s.contains("(1 shed, 3 stolen)"));
+        assert!(s.contains("stole"), "steal column present: {s}");
         assert_eq!(pr.failed(), 0);
+    }
+
+    #[test]
+    fn steal_totals_are_sums_and_conserved() {
+        // steals/stolen aggregate exactly like every other pool counter:
+        // the pool-wide value is the sum of the per-replica counters,
+        // and migration conservation makes the two totals equal
+        let mut a = report(0, 1, 0, 4, 4);
+        a.steals = 2;
+        a.stolen = 1;
+        let mut b = report(1, 1, 0, 4, 4);
+        b.steals = 1;
+        b.stolen = 2;
+        let pr = PoolReport { replicas: vec![a, b], shed: 0 };
+        assert_eq!(pr.total_steals(), 3);
+        assert_eq!(pr.total_stolen(), 3);
+        assert_eq!(pr.total_steals(), pr.total_stolen(),
+                   "every migration has exactly one thief and one victim");
     }
 }

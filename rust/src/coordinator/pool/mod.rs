@@ -10,6 +10,10 @@
 //!   admission, per-replica load gauges, drain-on-close;
 //! * [`router`] — admission control + dispatch policies (round-robin,
 //!   join-shortest-queue, lazy-aware cost);
+//! * [`steal`] — pool-level work stealing: an idle replica pulls queued
+//!   (not-yet-started) jobs from the sibling with the highest
+//!   lazy-discounted effective backlog, moving the gauge accounting
+//!   with the job so routing stays truthful;
 //! * [`agg`] — pool-wide aggregation of per-replica `LayerStats` /
 //!   `ServeStats` into one report;
 //! * [`sim`] — a deterministic synthetic engine: exercises the whole pool
@@ -23,11 +27,13 @@ pub mod agg;
 pub mod replica;
 pub mod router;
 pub mod sim;
+pub mod steal;
 
 pub use agg::PoolReport;
 pub use replica::{PoolJob, ReplicaGauges, ReplicaHandle, ReplicaReport};
 pub use router::Router;
 pub use sim::{SimEngine, SimSpec};
+pub use steal::{Rebalancer, StealPeer};
 
 use crate::coordinator::request::{Request, RequestResult};
 use crate::coordinator::stats::{LayerStats, ServeStats};

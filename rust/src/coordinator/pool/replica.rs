@@ -6,15 +6,17 @@
 //! (final per-replica stats). Engine construction happens on the worker
 //! thread because PJRT types are `!Send`/`!Sync`.
 
+use crate::coordinator::pool::steal::{Rebalancer, StealPeer};
 use crate::coordinator::pool::{EngineFactory, PoolEngine};
 use crate::coordinator::request::{Request, RequestResult};
 use crate::coordinator::stats::{LayerStats, ServeStats};
-use crate::util::threadpool::BoundedQueue;
+use crate::util::threadpool::{BoundedQueue, Popped};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// A routed request plus its response channel.
 pub struct PoolJob {
@@ -44,6 +46,14 @@ pub struct ReplicaGauges {
     pub modules_seen: AtomicU64,
     /// Module invocations skipped (engine layer-stats skips).
     pub modules_skipped: AtomicU64,
+    /// Jobs this replica pulled from a sibling's queue while idle.
+    pub steals: AtomicU64,
+    /// Jobs a sibling pulled out of this replica's queue.
+    pub stolen: AtomicU64,
+    /// Set once the worker thread has exited (report posted). Read by
+    /// the router so finished/dead replicas drop out of candidate
+    /// generation instead of winning the cost order with snapshot 0.
+    pub finished: AtomicBool,
 }
 
 impl ReplicaGauges {
@@ -62,6 +72,7 @@ impl ReplicaGauges {
             queued: self.queued.load(Ordering::Relaxed),
             pending_steps: self.pending_steps.load(Ordering::Relaxed),
             lazy_ratio: self.lazy_ratio(),
+            finished: self.finished.load(Ordering::Acquire),
         }
     }
 }
@@ -72,6 +83,8 @@ pub struct GaugeSnapshot {
     pub queued: usize,
     pub pending_steps: usize,
     pub lazy_ratio: f64,
+    /// The worker has exited — the replica can never serve again.
+    pub finished: bool,
 }
 
 /// Final accounting exported by a replica at shutdown.
@@ -82,6 +95,10 @@ pub struct ReplicaReport {
     pub policy: String,
     pub layer: LayerStats,
     pub serve: ServeStats,
+    /// Jobs this replica stole from siblings' queues.
+    pub steals: u64,
+    /// Jobs siblings stole out of this replica's queue.
+    pub stolen: u64,
     /// Set if the engine failed to construct or a round errored.
     pub error: Option<String>,
 }
@@ -95,6 +112,8 @@ impl ReplicaReport {
             policy: String::new(),
             layer: LayerStats::default(),
             serve: ServeStats::default(),
+            steals: 0,
+            stolen: 0,
             error: Some(msg.into()),
         }
     }
@@ -114,6 +133,15 @@ impl ReplicaHandle {
     /// queue (admission shedding happens at the router on top of this).
     pub fn spawn(id: usize, queue_cap: usize, factory: EngineFactory)
                  -> Result<ReplicaHandle> {
+        Self::spawn_with(id, queue_cap, factory, None)
+    }
+
+    /// Spawn with an optional pool [`Rebalancer`]: when present, the
+    /// worker bounds in-engine admission to the rebalancer's window
+    /// (excess jobs stay in the queue where siblings can steal them) and
+    /// pulls work from overloaded siblings whenever it goes idle.
+    pub fn spawn_with(id: usize, queue_cap: usize, factory: EngineFactory,
+                      steal: Option<Arc<Rebalancer>>) -> Result<ReplicaHandle> {
         let queue: BoundedQueue<PoolJob> = BoundedQueue::new(queue_cap.max(1));
         let gauges = Arc::new(ReplicaGauges::default());
         let report: Arc<Mutex<Option<ReplicaReport>>> =
@@ -127,33 +155,60 @@ impl ReplicaHandle {
                 // the queue so waiting clients error out instead of
                 // hanging. `responders` lives outside the unwind so the
                 // handler knows exactly how many admitted requests died
-                // with the engine — keeping the admission ledger exact
-                // even when the panic races an in-flight dispatch.
+                // with the engine; `engine_pending` mirrors the engine's
+                // share of the pending_steps gauge so the handler can
+                // subtract exactly that — an absolute `store(0)` here
+                // would race a concurrent dispatch's optimistic
+                // `fetch_add` (or a thief's gauge transfer) and leave a
+                // dead replica with phantom backlog that permanently
+                // skews jsq/lazy ordering.
                 let mut responders: BTreeMap<u64, mpsc::Sender<RequestResult>> =
                     BTreeMap::new();
+                let engine_pending = AtomicUsize::new(0);
+                let admitting = AtomicUsize::new(0);
                 let result = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| {
                         run_replica(id, factory, &q2, &g2, &r2,
-                                    &mut responders)
+                                    &mut responders, steal.as_deref(),
+                                    &engine_pending, &admitting)
                     }));
                 if result.is_err() {
                     log::warn!("replica {id}: worker panicked");
                     refuse_remaining(&q2, &g2);
                     // requests admitted into the unwound engine can never
-                    // complete — forfeit exactly those (an in-flight
-                    // dispatch's optimistic increment is left for its own
-                    // rollback, so nothing is double-resolved)
+                    // complete — forfeit exactly those, and roll exactly
+                    // the engine's known step backlog out of the gauge
+                    // (an in-flight dispatch's optimistic increment is
+                    // left for its own rollback, so nothing is
+                    // double-resolved or wiped)
                     let lost = responders.len();
                     g2.forfeited.fetch_add(lost as u64, Ordering::Relaxed);
                     dec(&g2.queued, lost);
-                    g2.pending_steps.store(0, Ordering::Relaxed);
+                    dec(&g2.pending_steps,
+                        engine_pending.load(Ordering::Relaxed));
+                    // a job that died inside engine.submit left the queue
+                    // but never reached `responders` — without this, each
+                    // such panic would leak one admission-ledger slot
+                    // (phantom queued + wire steps) forever
+                    let adm = admitting.load(Ordering::Relaxed);
+                    if adm > 0 {
+                        g2.forfeited.fetch_add(1, Ordering::Relaxed);
+                        dec(&g2.queued, 1);
+                        dec(&g2.pending_steps, adm - 1);
+                    }
                     let mut slot =
                         r2.lock().unwrap_or_else(|p| p.into_inner());
                     if slot.is_none() {
-                        *slot = Some(ReplicaReport::failed(
-                            id, "worker panicked"));
+                        let mut rep =
+                            ReplicaReport::failed(id, "worker panicked");
+                        rep.steals = g2.steals.load(Ordering::Relaxed);
+                        rep.stolen = g2.stolen.load(Ordering::Relaxed);
+                        *slot = Some(rep);
                     }
                 }
+                // single exit point: the report (normal, error, or panic)
+                // is posted by now, so the replica is observably finished
+                g2.finished.store(true, Ordering::Release);
             })
             .with_context(|| format!("spawning replica {id}"))?;
         Ok(ReplicaHandle {
@@ -163,6 +218,16 @@ impl ReplicaHandle {
             join: Mutex::new(Some(join)),
             report,
         })
+    }
+
+    /// This replica's stealable surface (input queue + gauges), handed
+    /// to the pool [`Rebalancer`] at registration.
+    pub fn steal_peer(&self) -> StealPeer {
+        StealPeer {
+            id: self.id,
+            queue: self.queue.clone(),
+            gauges: self.gauges.clone(),
+        }
     }
 
     /// Hand a job to this replica; `Err(job)` if its queue is full or
@@ -202,14 +267,29 @@ impl ReplicaHandle {
     }
 }
 
-/// The worker loop: admit continuously, step the engine, keep gauges
-/// fresh, drain on close. `responders` (admitted-but-unfinished response
-/// channels) is owned by the caller so the panic handler can account for
-/// requests lost in an unwind.
+/// How long an idle worker sleeps between probes. A stealing worker
+/// polls fast right after going idle (a sibling's backlog is an
+/// immediate opportunity), then backs off to the plain cadence once
+/// `IDLE_BACKOFF_AFTER` consecutive probes found nothing — a genuinely
+/// idle pool must not burn O(replicas²) lock traffic at 1 kHz. Any
+/// admitted job (own queue or steal) resets the backoff.
+const IDLE_WAIT_STEAL: Duration = Duration::from_millis(1);
+const IDLE_WAIT_PLAIN: Duration = Duration::from_millis(50);
+const IDLE_BACKOFF_AFTER: u32 = 64;
+
+/// The worker loop: admit continuously (bounded by the rebalancer's
+/// window when stealing is on), step the engine, keep gauges fresh,
+/// steal from overloaded siblings when idle, drain on close.
+/// `responders` (admitted-but-unfinished response channels) and
+/// `engine_pending` (the engine's share of the pending_steps gauge) are
+/// owned by the caller so the panic handler can account for requests
+/// lost in an unwind by exact, known amounts.
 fn run_replica(id: usize, factory: EngineFactory,
                queue: &BoundedQueue<PoolJob>, gauges: &ReplicaGauges,
                report: &Mutex<Option<ReplicaReport>>,
-               responders: &mut BTreeMap<u64, mpsc::Sender<RequestResult>>) {
+               responders: &mut BTreeMap<u64, mpsc::Sender<RequestResult>>,
+               steal: Option<&Rebalancer>, engine_pending: &AtomicUsize,
+               admitting: &AtomicUsize) {
     let mut engine: Box<dyn PoolEngine> = match factory() {
         Ok(e) => e,
         Err(e) => {
@@ -229,29 +309,74 @@ fn run_replica(id: usize, factory: EngineFactory,
     // biases jsq/lazy routing against this replica forever.
     fn admit(engine: &mut Box<dyn PoolEngine>,
              responders: &mut BTreeMap<u64, mpsc::Sender<RequestResult>>,
-             gauges: &ReplicaGauges, job: PoolJob) {
+             gauges: &ReplicaGauges, engine_pending: &AtomicUsize,
+             admitting: &AtomicUsize, job: PoolJob) {
         let wire_steps = job.req.steps;
+        // mark the job in-admission (steps + 1 so 0 means "none"): if
+        // submit panics, the handler must resolve exactly this job's
+        // ledger entry — it left the queue but never reached responders
+        admitting.store(wire_steps + 1, Ordering::Relaxed);
         let before = engine.pending_steps();
         let rid = engine.submit(job.req);
         let actual = engine.pending_steps().saturating_sub(before);
         if actual < wire_steps {
             dec(&gauges.pending_steps, wire_steps - actual);
         }
+        engine_pending.store(engine.pending_steps(), Ordering::Relaxed);
+        admitting.store(0, Ordering::Relaxed);
         responders.insert(rid, job.respond);
     }
     let mut error: Option<String> = None;
+    // with stealing on, cap how many trajectories sit inside the engine:
+    // everything beyond the window stays in the queue, where it remains
+    // migratable — an engine-admitted trajectory can never move
+    let window = match steal {
+        Some(rb) => rb.admit_window().max(1),
+        None => usize::MAX,
+    };
+    let mut idle_misses = 0u32;
 
     loop {
-        if engine.active_count() == 0 {
-            // idle: block for the next job; None = closed AND drained
-            match queue.pop() {
-                Some(job) => admit(&mut engine, responders, gauges, job),
+        // continuous batching: absorb whatever arrived, up to the window
+        while engine.active_count() < window {
+            match queue.try_pop() {
+                Some(job) => {
+                    idle_misses = 0;
+                    admit(&mut engine, responders, gauges, engine_pending,
+                          admitting, job);
+                }
                 None => break,
             }
         }
-        // continuous batching: absorb whatever arrived meanwhile
-        while let Some(job) = queue.try_pop() {
-            admit(&mut engine, responders, gauges, job);
+        if engine.active_count() == 0 {
+            // idle: prefer pulling a queued job off an overloaded
+            // sibling over waiting for the router to send one here
+            if let Some(rb) = steal {
+                if let Some(job) = rb.steal_for(id) {
+                    idle_misses = 0;
+                    admit(&mut engine, responders, gauges, engine_pending,
+                          admitting, job);
+                    continue;
+                }
+            }
+            idle_misses = idle_misses.saturating_add(1);
+            let wait = if steal.is_some()
+                && idle_misses < IDLE_BACKOFF_AFTER
+            {
+                IDLE_WAIT_STEAL
+            } else {
+                IDLE_WAIT_PLAIN
+            };
+            match queue.pop_timeout(wait) {
+                Popped::Item(job) => {
+                    idle_misses = 0;
+                    admit(&mut engine, responders, gauges, engine_pending,
+                          admitting, job);
+                }
+                Popped::Closed => break,
+                Popped::TimedOut => continue,
+            }
+            continue; // absorb any burst before stepping
         }
         let before = engine.pending_steps();
         match engine.step_round() {
@@ -265,6 +390,8 @@ fn run_replica(id: usize, factory: EngineFactory,
                 }
                 let consumed = before.saturating_sub(engine.pending_steps());
                 dec(&gauges.pending_steps, consumed);
+                engine_pending
+                    .store(engine.pending_steps(), Ordering::Relaxed);
                 let ls = engine.layer_stats();
                 gauges
                     .modules_seen
@@ -291,19 +418,22 @@ fn run_replica(id: usize, factory: EngineFactory,
             .fetch_add(engine.active_count() as u64, Ordering::Relaxed);
         refuse_remaining(queue, gauges);
     }
+    engine_pending.store(0, Ordering::Relaxed);
     *report.lock().unwrap() = Some(ReplicaReport {
         id,
         policy: engine.policy_name(),
         layer: engine.layer_stats().clone(),
         serve: engine.serve_stats().clone(),
+        steals: gauges.steals.load(Ordering::Relaxed),
+        stolen: gauges.stolen.load(Ordering::Relaxed),
         error,
     });
     log::debug!("replica {id} drained");
 }
 
 /// Saturating atomic decrement — gauge bookkeeping must never wrap even
-/// when a matching increment was skipped or wiped (tests, error paths,
-/// the panic handler's absolute `store(0)` racing a dispatch rollback).
+/// when a matching increment was skipped (tests, error paths, a dispatch
+/// rollback racing the panic handler's or a thief's own decrements).
 pub(crate) fn dec(a: &AtomicUsize, n: usize) {
     let _ = a.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
         Some(v.saturating_sub(n))
@@ -434,6 +564,62 @@ mod tests {
         let rep = h.join_report();
         assert_eq!(rep.error.as_deref(), Some("worker panicked"));
         assert!(rx.recv().is_err(), "client must not hang on a panicked worker");
+    }
+
+    #[test]
+    fn submit_panic_resolves_ledger_exactly() {
+        // a job that dies inside engine.submit has left the queue but
+        // never reached `responders` — its admission-ledger entry must
+        // still resolve (forfeit) and its optimistic gauge contribution
+        // must unwind, or the slot would leak from the pool cap forever
+        struct SubmitPanicEngine {
+            layer: LayerStats,
+            serve: ServeStats,
+        }
+        impl PoolEngine for SubmitPanicEngine {
+            fn submit(&mut self, _req: Request) -> u64 {
+                panic!("injected submit panic")
+            }
+            fn active_count(&self) -> usize {
+                0
+            }
+            fn pending_steps(&self) -> usize {
+                0
+            }
+            fn step_round(&mut self) -> Result<Vec<RequestResult>> {
+                Ok(Vec::new())
+            }
+            fn layer_stats(&self) -> &LayerStats {
+                &self.layer
+            }
+            fn serve_stats(&self) -> &ServeStats {
+                &self.serve
+            }
+            fn policy_name(&self) -> String {
+                "submit-panic".into()
+            }
+        }
+        let factory: EngineFactory = Box::new(|| {
+            Ok(Box::new(SubmitPanicEngine {
+                layer: LayerStats::new(1),
+                serve: ServeStats::default(),
+            }) as Box<dyn PoolEngine>)
+        });
+        let h = ReplicaHandle::spawn(7, 4, factory).unwrap();
+        let (j, rx) = job(1, 5);
+        // mirror the router's optimistic accounting at dispatch
+        h.gauges.queued.fetch_add(1, Ordering::Relaxed);
+        h.gauges.pending_steps.fetch_add(5, Ordering::Relaxed);
+        h.try_send(j).map_err(|_| "send").unwrap();
+        let rep = h.join_report();
+        assert_eq!(rep.error.as_deref(), Some("worker panicked"));
+        assert!(rx.recv().is_err(), "client must be released");
+        assert_eq!(h.gauges.queued.load(Ordering::Relaxed), 0,
+                   "no phantom queued entry");
+        assert_eq!(h.gauges.pending_steps.load(Ordering::Relaxed), 0,
+                   "no phantom step backlog");
+        assert_eq!(h.gauges.forfeited.load(Ordering::Relaxed), 1,
+                   "the admission ledger resolves the dead job");
     }
 
     #[test]

@@ -15,9 +15,10 @@
 use crate::config::RoutePolicy;
 use crate::coordinator::pool::agg::PoolReport;
 use crate::coordinator::pool::replica::{GaugeSnapshot, PoolJob, ReplicaHandle};
+use crate::coordinator::pool::steal::Rebalancer;
 use crate::coordinator::request::{Request, RequestResult};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
 /// The pool front-door. All methods take `&self`; the router is shared
 /// across acceptor threads behind an `Arc`.
@@ -36,12 +37,28 @@ pub struct Router {
     /// Wire-protocol id allocator: replica engines each number from 1,
     /// so the router assigns pool-unique ids before dispatch.
     next_id: AtomicU64,
+    /// Present when pool work stealing is on; the router registers the
+    /// replicas' stealable surfaces with it at construction.
+    rebalancer: Option<Arc<Rebalancer>>,
 }
 
 impl Router {
     pub fn new(replicas: Vec<ReplicaHandle>, route: RoutePolicy,
                queue_cap: usize) -> Router {
+        Self::with_rebalancer(replicas, route, queue_cap, None)
+    }
+
+    /// Construct with pool work stealing. The `rebalancer` must be the
+    /// same instance the replicas were spawned with
+    /// ([`ReplicaHandle::spawn_with`]); this registers every replica's
+    /// queue + gauges as the steal peer set, which arms `steal_for`.
+    pub fn with_rebalancer(replicas: Vec<ReplicaHandle>, route: RoutePolicy,
+                           queue_cap: usize,
+                           rebalancer: Option<Arc<Rebalancer>>) -> Router {
         assert!(!replicas.is_empty(), "router needs at least one replica");
+        if let Some(rb) = &rebalancer {
+            rb.register(replicas.iter().map(|r| r.steal_peer()).collect());
+        }
         Router {
             replicas,
             route,
@@ -50,6 +67,7 @@ impl Router {
             shed: AtomicU64::new(0),
             dispatched: AtomicU64::new(0),
             next_id: AtomicU64::new(1),
+            rebalancer,
         }
     }
 
@@ -80,6 +98,16 @@ impl Router {
     /// Requests shed by admission control.
     pub fn shed_count(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Jobs migrated between replicas so far (0 when stealing is off).
+    pub fn total_steals(&self) -> u64 {
+        self.rebalancer.as_ref().map_or(0, |rb| rb.total_steals())
+    }
+
+    /// True when pool work stealing is armed.
+    pub fn stealing(&self) -> bool {
+        self.rebalancer.is_some()
     }
 
     /// Live pool-wide lazy ratio Γ from the gauges.
@@ -150,8 +178,8 @@ impl Router {
             match h.try_send(job) {
                 Ok(()) => return true,
                 Err(j) => {
-                    // saturating rollback: a panicked worker may have
-                    // store(0)'d these gauges between our add and here,
+                    // saturating rollback: a panicked worker's cleanup
+                    // decrements may race ours between the add and here,
                     // and a raw fetch_sub would wrap to usize::MAX
                     crate::coordinator::pool::replica::dec(&h.gauges.queued, 1);
                     crate::coordinator::pool::replica::dec(
@@ -170,7 +198,17 @@ impl Router {
         for r in &self.replicas {
             r.close();
         }
-        let reports = self.replicas.iter().map(|r| r.join_report()).collect();
+        let mut reports: Vec<_> =
+            self.replicas.iter().map(|r| r.join_report()).collect();
+        // steal counters settle only once EVERY worker thread has exited
+        // (gauge transfers run on thief worker threads, so a victim's own
+        // exit can race the final `stolen` increment). All threads are
+        // joined now — re-read the gauges so the reports can never miss
+        // a migration and the steals==stolen conservation stays exact.
+        for (rep, h) in reports.iter_mut().zip(&self.replicas) {
+            rep.steals = h.gauges.steals.load(Ordering::Relaxed);
+            rep.stolen = h.gauges.stolen.load(Ordering::Relaxed);
+        }
         PoolReport { replicas: reports, shed: self.shed_count() }
     }
 }
@@ -183,14 +221,22 @@ pub fn lazy_cost(snap: &GaugeSnapshot) -> f64 {
 }
 
 /// Best-first replica order for one dispatch. Pure so policies are unit
-/// testable without threads.
+/// testable without threads. Finished (drained or dead) replicas are
+/// excluded up front: their snapshot cost of 0 would otherwise rank them
+/// *first* under jsq/lazy, making every dispatch pay a futile `try_send`
+/// against a closed queue before reaching a live replica.
 pub fn candidate_order(route: RoutePolicy, snaps: &[GaugeSnapshot],
                        rr: usize) -> Vec<usize> {
     let n = snaps.len();
-    let mut idx: Vec<usize> = (0..n).collect();
+    let mut idx: Vec<usize> = (0..n).filter(|&i| !snaps[i].finished).collect();
     match route {
         RoutePolicy::RoundRobin => {
-            idx.rotate_left(rr % n.max(1));
+            // rotate over the live set (identical to the old full-pool
+            // rotation when nothing has finished)
+            let k = idx.len();
+            if k > 0 {
+                idx.rotate_left(rr % k);
+            }
         }
         RoutePolicy::Jsq => {
             idx.sort_by_key(|&i| (snaps[i].queued, i));
@@ -213,7 +259,12 @@ mod tests {
     use super::*;
 
     fn snap(queued: usize, steps: usize, lazy: f64) -> GaugeSnapshot {
-        GaugeSnapshot { queued, pending_steps: steps, lazy_ratio: lazy }
+        GaugeSnapshot {
+            queued,
+            pending_steps: steps,
+            lazy_ratio: lazy,
+            finished: false,
+        }
     }
 
     #[test]
@@ -228,10 +279,29 @@ mod tests {
     fn jsq_picks_shortest() {
         let s = vec![snap(4, 80, 0.0), snap(1, 20, 0.0), snap(2, 40, 0.0)];
         assert_eq!(candidate_order(RoutePolicy::Jsq, &s, 0)[0], 1);
-        // tie → lowest index
+        // tie → lowest index (replicas 0 and 1 both queue 2), and the
+        // rr cursor must not perturb jsq ordering
         let t = vec![snap(2, 0, 0.0), snap(2, 0, 0.0), snap(1, 0, 0.0)];
-        assert_eq!(candidate_order(RoutePolicy::Jsq, &s, 7)[0], 1);
+        assert_eq!(candidate_order(RoutePolicy::Jsq, &t, 7), vec![2, 0, 1]);
         assert_eq!(candidate_order(RoutePolicy::Jsq, &t, 0), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn finished_replicas_are_excluded_from_candidates() {
+        let mut s = vec![snap(0, 0, 0.0), snap(3, 60, 0.0), snap(1, 20, 0.0)];
+        s[0].finished = true; // dead replica: snapshot cost 0 would
+                              // otherwise win jsq/lazy outright
+        assert_eq!(candidate_order(RoutePolicy::Jsq, &s, 0), vec![2, 1]);
+        assert_eq!(candidate_order(RoutePolicy::Lazy, &s, 0), vec![2, 1]);
+        // rr rotates over the live set only
+        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 0), vec![1, 2]);
+        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 1), vec![2, 1]);
+        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 2), vec![1, 2]);
+        // a fully-finished pool yields no candidates at all
+        s[1].finished = true;
+        s[2].finished = true;
+        assert!(candidate_order(RoutePolicy::Jsq, &s, 0).is_empty());
+        assert!(candidate_order(RoutePolicy::RoundRobin, &s, 3).is_empty());
     }
 
     #[test]

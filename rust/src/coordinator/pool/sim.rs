@@ -53,6 +53,19 @@ impl SimSpec {
     pub fn fast() -> SimSpec {
         SimSpec { work_per_module: 50, ..Default::default() }
     }
+
+    /// Variant with a pinned lazy target and module cost — the building
+    /// block of skewed-Γ pools (bench/tests): replicas sharing a
+    /// workload but diverging in observed laziness, the regime where
+    /// lazy-discounted work stealing beats admission-time placement.
+    pub fn with_lazy(lazy_pct: u32, work_per_module: u64) -> SimSpec {
+        SimSpec {
+            lazy_pct,
+            work_per_module,
+            policy: format!("sim-g{lazy_pct}"),
+            ..Default::default()
+        }
+    }
 }
 
 /// One in-flight synthetic trajectory.

@@ -1,0 +1,227 @@
+//! Pool-level work stealing: idle replicas pull queued (not-yet-started)
+//! jobs from the sibling with the highest *lazy-discounted* effective
+//! backlog.
+//!
+//! Why lazy-discounted: LazyDiT makes per-trajectory cost dynamic — a
+//! replica's backlog shrinks at a rate set by its observed lazy ratio Γ,
+//! so admission-time placement systematically strands work on replicas
+//! whose laziness collapsed mid-trajectory (prompts that defeat the skip
+//! predictor). The victim choice therefore ranks siblings by
+//! `pending_steps · (1 − Γ)` — the same cost the lazy routing policy
+//! uses — so the thief relieves the replica that will take *longest* to
+//! clear its queue, not merely the one with the most items.
+//!
+//! Gauge-transfer invariant: a stolen job's accounting (`queued` 1,
+//! `pending_steps` wire steps) moves with the job, thief first, then
+//! victim, inside the rebalancer's peer lock. Pool-wide sums (the
+//! router's jsq/lazy inputs and the admission ledger) therefore never
+//! under-count during a migration, and each side's counters are adjusted
+//! by exact, known amounts — never stored absolutely — so concurrent
+//! dispatch rollbacks and the panic handler compose with migration.
+
+use crate::coordinator::pool::replica::{dec, PoolJob, ReplicaGauges};
+use crate::coordinator::pool::router::lazy_cost;
+use crate::util::threadpool::BoundedQueue;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One replica's stealable surface: its input queue (thieves take from
+/// the back; the owner keeps popping the front) and its load gauges.
+pub struct StealPeer {
+    pub id: usize,
+    pub queue: BoundedQueue<PoolJob>,
+    pub gauges: Arc<ReplicaGauges>,
+}
+
+/// Pool-level rebalancer shared by every replica worker. Constructed
+/// before the replicas (workers hold it from birth), populated with the
+/// peer set once all replicas exist; `steal_for` is a no-op until then.
+pub struct Rebalancer {
+    peers: Mutex<Vec<StealPeer>>,
+    /// Max trajectories a worker admits into its engine at once; jobs
+    /// beyond the window wait in the queue, where they remain
+    /// migratable (an engine-admitted trajectory can never move).
+    admit_window: usize,
+    /// Total successful migrations (monotone; for reporting).
+    total_steals: AtomicU64,
+}
+
+impl Rebalancer {
+    pub fn new(admit_window: usize) -> Arc<Rebalancer> {
+        Arc::new(Rebalancer {
+            peers: Mutex::new(Vec::new()),
+            admit_window: admit_window.max(1),
+            total_steals: AtomicU64::new(0),
+        })
+    }
+
+    /// In-engine admission bound for stealing workers.
+    pub fn admit_window(&self) -> usize {
+        self.admit_window
+    }
+
+    /// Successful migrations so far, pool-wide.
+    pub fn total_steals(&self) -> u64 {
+        self.total_steals.load(Ordering::Relaxed)
+    }
+
+    /// Hand the rebalancer the full peer set (router construction).
+    /// Replaces any previous registration.
+    pub fn register(&self, peers: Vec<StealPeer>) {
+        *self.peers.lock().unwrap_or_else(|p| p.into_inner()) = peers;
+    }
+
+    /// Steal one queued job for replica `thief`, from the sibling with
+    /// the highest lazy-discounted effective backlog that actually has a
+    /// queued (not-yet-started) job. Returns `None` when nothing is
+    /// stealable. On success the job's gauge accounting has already
+    /// moved to the thief — the caller admits the job as if the router
+    /// had dispatched it here.
+    pub fn steal_for(&self, thief: usize) -> Option<PoolJob> {
+        let peers = self.peers.lock().unwrap_or_else(|p| p.into_inner());
+        let me = peers.iter().find(|p| p.id == thief)?;
+        // rank victims by effective backlog, costliest first; only
+        // siblings with jobs physically in their queue are candidates
+        let mut victims: Vec<(f64, usize)> = peers
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.id != thief && !p.queue.is_empty())
+            .map(|(i, p)| (lazy_cost(&p.gauges.snapshot()), i))
+            .collect();
+        victims.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.1.cmp(&b.1))
+        });
+        for (_, vi) in victims {
+            let victim = &peers[vi];
+            if let Some(job) = victim.queue.steal_back() {
+                let steps = job.req.steps;
+                // gauge transfer, thief first: pool totals never
+                // under-count mid-migration, and the victim side uses
+                // saturating known-amount decrements so a racing panic
+                // handler or dispatch rollback cannot wrap the gauge
+                me.gauges.queued.fetch_add(1, Ordering::Relaxed);
+                me.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
+                me.gauges.steals.fetch_add(1, Ordering::Relaxed);
+                dec(&victim.gauges.queued, 1);
+                dec(&victim.gauges.pending_steps, steps);
+                victim.gauges.stolen.fetch_add(1, Ordering::Relaxed);
+                self.total_steals.fetch_add(1, Ordering::Relaxed);
+                log::debug!("replica {thief} stole a {steps}-step job \
+                             from replica {}", victim.id);
+                return Some(job);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{Request, RequestResult};
+    use std::sync::mpsc;
+
+    /// A peer with no worker thread behind it — gauges and queue are
+    /// driven by hand so migrations are fully deterministic.
+    fn peer(id: usize) -> StealPeer {
+        StealPeer {
+            id,
+            queue: BoundedQueue::new(64),
+            gauges: Arc::new(ReplicaGauges::default()),
+        }
+    }
+
+    fn enqueue(p: &StealPeer, steps: usize, seed: u64)
+               -> mpsc::Receiver<RequestResult> {
+        let (tx, rx) = mpsc::channel();
+        // mirror the router's optimistic accounting at dispatch
+        p.gauges.queued.fetch_add(1, Ordering::Relaxed);
+        p.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
+        p.queue
+            .try_push(PoolJob {
+                req: Request::new(0, 1, steps, seed),
+                respond: tx,
+            })
+            .map_err(|_| "push")
+            .unwrap();
+        rx
+    }
+
+    #[test]
+    fn steal_transfers_job_and_gauges_exactly_once() {
+        let rb = Rebalancer::new(2);
+        rb.register(vec![peer(0), peer(1)]);
+        let peers = rb.peers.lock().unwrap();
+        let _rx = enqueue(&peers[0], 7, 1);
+        drop(peers);
+
+        let job = rb.steal_for(1).expect("job should migrate");
+        assert_eq!(job.req.steps, 7);
+        let peers = rb.peers.lock().unwrap();
+        // victim fully relieved…
+        assert_eq!(peers[0].gauges.queued.load(Ordering::Relaxed), 0);
+        assert_eq!(peers[0].gauges.pending_steps.load(Ordering::Relaxed), 0);
+        assert_eq!(peers[0].gauges.stolen.load(Ordering::Relaxed), 1);
+        // …thief owns exactly the migrated amounts…
+        assert_eq!(peers[1].gauges.queued.load(Ordering::Relaxed), 1);
+        assert_eq!(peers[1].gauges.pending_steps.load(Ordering::Relaxed), 7);
+        assert_eq!(peers[1].gauges.steals.load(Ordering::Relaxed), 1);
+        // …and the queue is empty: the job exists in exactly one place
+        assert!(peers[0].queue.is_empty());
+        drop(peers);
+        assert_eq!(rb.total_steals(), 1);
+        assert!(rb.steal_for(1).is_none(), "nothing left to steal");
+    }
+
+    #[test]
+    fn victim_choice_follows_lazy_discounted_backlog() {
+        // peer 0: big raw backlog but Γ=0.9 → effective cost small
+        // peer 2: smaller raw backlog at Γ=0 → effective cost largest
+        let rb = Rebalancer::new(2);
+        rb.register(vec![peer(0), peer(1), peer(2)]);
+        let peers = rb.peers.lock().unwrap();
+        let _rx0 = enqueue(&peers[0], 100, 1);
+        peers[0].gauges.modules_seen.store(100, Ordering::Relaxed);
+        peers[0].gauges.modules_skipped.store(90, Ordering::Relaxed);
+        let _rx2 = enqueue(&peers[2], 60, 2);
+        drop(peers);
+
+        // cost(0) = 100·(1−0.9) = 10, cost(2) = 60·(1−0) = 60 → steal
+        // from peer 2 even though peer 0 queues more raw steps
+        let job = rb.steal_for(1).expect("steal");
+        assert_eq!(job.req.steps, 60);
+        let peers = rb.peers.lock().unwrap();
+        assert_eq!(peers[2].gauges.stolen.load(Ordering::Relaxed), 1);
+        assert_eq!(peers[0].gauges.stolen.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn thief_never_steals_from_itself_or_unregistered_pool() {
+        let rb = Rebalancer::new(1);
+        assert!(rb.steal_for(0).is_none(), "no peers registered yet");
+        rb.register(vec![peer(0)]);
+        let peers = rb.peers.lock().unwrap();
+        let _rx = enqueue(&peers[0], 5, 1);
+        drop(peers);
+        assert!(rb.steal_for(0).is_none(), "own queue is not a victim");
+        let peers = rb.peers.lock().unwrap();
+        assert_eq!(peers[0].gauges.queued.load(Ordering::Relaxed), 1,
+                   "gauges untouched when nothing migrates");
+    }
+
+    #[test]
+    fn steals_newest_job_first() {
+        // thieves take the back of the deque — the job the owner would
+        // reach last — so FIFO fairness on the victim is preserved
+        let rb = Rebalancer::new(1);
+        rb.register(vec![peer(0), peer(1)]);
+        let peers = rb.peers.lock().unwrap();
+        let _rx1 = enqueue(&peers[0], 3, 11);
+        let _rx2 = enqueue(&peers[0], 4, 22);
+        drop(peers);
+        let job = rb.steal_for(1).expect("steal");
+        assert_eq!(job.req.seed, 22, "back of the queue migrates first");
+    }
+}

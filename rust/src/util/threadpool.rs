@@ -5,9 +5,26 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Outcome of a bounded wait on [`BoundedQueue::pop_timeout`].
+#[derive(Debug, PartialEq)]
+pub enum Popped<T> {
+    /// An item arrived (or was already queued).
+    Item(T),
+    /// The queue is closed AND drained — no item will ever arrive.
+    Closed,
+    /// The deadline passed with the queue open but empty; callers that
+    /// have other work sources (e.g. work stealing) re-check and retry.
+    TimedOut,
+}
 
 /// A bounded MPMC channel with blocking send/recv — the backpressure
-/// primitive used by admission control (DESIGN.md §7).
+/// primitive used by admission control (DESIGN.md §7). Doubles as a
+/// two-ended stealable queue: the owner consumes FIFO from the front
+/// (`pop`/`try_pop`), thieves take LIFO from the back (`steal_back`),
+/// so stolen work is the most recently enqueued — the jobs least likely
+/// to be picked up by the owner next.
 pub struct BoundedQueue<T> {
     inner: Arc<QueueInner<T>>,
 }
@@ -93,6 +110,53 @@ impl<T> BoundedQueue<T> {
             self.inner.not_full.notify_one();
         }
         item
+    }
+
+    /// Blocking pop with a deadline. Unlike [`pop`](Self::pop), an empty
+    /// open queue eventually returns [`Popped::TimedOut`] so the caller
+    /// can interleave other work sources (the replica worker's steal
+    /// probe) with waiting on its own queue.
+    pub fn pop_timeout(&self, timeout: Duration) -> Popped<T> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.inner.not_full.notify_one();
+                return Popped::Item(item);
+            }
+            if st.closed {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::TimedOut;
+            }
+            let (guard, _) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// Non-blocking steal from the back — the thief side of the deque.
+    /// Deliberately still works on a closed-but-undrained queue: during
+    /// shutdown an idle replica stealing leftover jobs from an overloaded
+    /// sibling *accelerates* the drain, it never violates it (every job
+    /// still completes exactly once, just on the thief).
+    pub fn steal_back(&self) -> Option<T> {
+        let mut st = self.inner.q.lock().unwrap();
+        let item = st.items.pop_back();
+        if item.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
+    /// True once `close` has been called (items may still be queued).
+    pub fn is_closed(&self) -> bool {
+        self.inner.q.lock().unwrap().closed
     }
 
     /// Drain up to `max` items without blocking (batcher pickup).
@@ -237,6 +301,82 @@ mod tests {
         let got = q.drain_up_to(3);
         assert_eq!(got, vec![0, 1, 2]);
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn steal_back_takes_newest_owner_pops_oldest() {
+        let q = BoundedQueue::new(8);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.steal_back(), Some(3), "thief steals from the back");
+        assert_eq!(q.pop(), Some(0), "owner still pops FIFO from the front");
+        assert_eq!(q.steal_back(), Some(2));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.steal_back(), None);
+    }
+
+    #[test]
+    fn steal_back_drains_closed_queue() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.steal_back(), Some(2), "close still drains via steal");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.steal_back(), None);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_timeout_distinguishes_empty_from_closed() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(4);
+        let t = std::time::Duration::from_millis(5);
+        assert_eq!(q.pop_timeout(t), Popped::TimedOut);
+        q.push(9).unwrap();
+        assert_eq!(q.pop_timeout(t), Popped::Item(9));
+        q.close();
+        assert_eq!(q.pop_timeout(t), Popped::Closed);
+    }
+
+    #[test]
+    fn pop_timeout_wakes_on_push() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(4);
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            q2.pop_timeout(std::time::Duration::from_secs(10))
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.push(5).unwrap();
+        assert_eq!(h.join().unwrap(), Popped::Item(5));
+    }
+
+    #[test]
+    fn concurrent_steal_and_pop_conserve_items() {
+        // every item goes to exactly one side — the mutex serializes the
+        // two ends, so nothing is lost or duplicated under contention
+        let q: BoundedQueue<usize> = BoundedQueue::new(1024);
+        for i in 0..600 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let q2 = q.clone();
+        let thief = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = q2.steal_back() {
+                got.push(v);
+            }
+            got
+        });
+        let mut owner_got = Vec::new();
+        while let Some(v) = q.try_pop() {
+            owner_got.push(v);
+        }
+        let mut all = thief.join().unwrap();
+        all.extend(owner_got);
+        all.sort_unstable();
+        assert_eq!(all, (0..600).collect::<Vec<_>>());
     }
 
     #[test]

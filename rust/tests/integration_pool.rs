@@ -5,10 +5,11 @@
 use lazydit::config::RoutePolicy;
 use lazydit::coordinator::pool::replica::ReplicaHandle;
 use lazydit::coordinator::pool::sim::{sim_image, SimEngine, SimSpec};
+use lazydit::coordinator::pool::steal::Rebalancer;
 use lazydit::coordinator::pool::Router;
 use lazydit::coordinator::request::{Request, RequestResult};
 use std::collections::BTreeMap;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
 fn build_router(specs: Vec<SimSpec>, route: RoutePolicy,
                 queue_cap: usize) -> Router {
@@ -20,6 +21,23 @@ fn build_router(specs: Vec<SimSpec>, route: RoutePolicy,
         })
         .collect();
     Router::new(handles, route, queue_cap)
+}
+
+/// Pool with work stealing armed: a shared rebalancer with the given
+/// in-engine admission window (jobs beyond it stay queued/migratable).
+fn build_stealing_router(specs: Vec<SimSpec>, route: RoutePolicy,
+                         queue_cap: usize, window: usize) -> Router {
+    let rb = Rebalancer::new(window);
+    let handles: Vec<ReplicaHandle> = specs
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            ReplicaHandle::spawn_with(i, queue_cap, SimEngine::factory(s),
+                                      Some(rb.clone()))
+            .unwrap()
+        })
+        .collect();
+    Router::with_rebalancer(handles, route, queue_cap, Some(rb))
 }
 
 /// Dispatch a fixed workload closed-loop and gather every result.
@@ -195,6 +213,141 @@ fn shutdown_drains_in_flight_trajectories() {
     for rx in rxs {
         assert!(rx.recv().is_ok(), "in-flight request lost at shutdown");
     }
+}
+
+#[test]
+fn concurrent_dispatch_never_overruns_admission_cap() {
+    // the shed ledger is check-then-act-free: N threads flooding
+    // dispatch must never admit more than queue_cap outstanding
+    // requests. The replica is slow enough that nothing completes
+    // while the flood is in flight, so `admitted <= cap` is exact.
+    let cap = 8usize;
+    let specs = vec![SimSpec {
+        work_per_module: 500_000,
+        lazy_pct: 0,
+        ..SimSpec::default()
+    }];
+    let router = Arc::new(build_router(specs, RoutePolicy::Jsq, cap));
+    let threads = 8usize;
+    let per = 8usize;
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let r = router.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rxs = Vec::new();
+            let mut shed = 0usize;
+            for i in 0..per {
+                let (tx, rx) = mpsc::channel();
+                let req = Request::new(0, 1, 6, (t * per + i) as u64);
+                if r.dispatch(req, tx) {
+                    rxs.push(rx);
+                } else {
+                    shed += 1;
+                }
+            }
+            (rxs, shed)
+        }));
+    }
+    let mut rxs = Vec::new();
+    let mut shed = 0usize;
+    for j in joins {
+        let (r, s) = j.join().unwrap();
+        rxs.extend(r);
+        shed += s;
+    }
+    // completions during the flood legitimately free admission slots
+    // (resolved() grows), so bound by cap + whatever resolved by the
+    // time the flood ended — on an unloaded machine that term is 0
+    let completed_during_flood = router.total_completed() as usize;
+    assert_eq!(rxs.len() + shed, threads * per);
+    assert!(rxs.len() <= cap + completed_during_flood,
+            "admission overrun: {} admitted with cap {cap} (+{} completed \
+             mid-flood)", rxs.len(), completed_during_flood);
+    assert!(shed > 0, "a 64-request flood against cap 8 must shed");
+    assert_eq!(router.shed_count(), shed as u64);
+    for rx in &rxs {
+        rx.recv().expect("admitted requests must complete");
+    }
+    let report = router.shutdown();
+    assert_eq!(report.completed(), rxs.len());
+    assert_eq!(report.shed, shed as u64);
+}
+
+#[test]
+fn stealing_migrates_without_losing_or_duplicating_jobs() {
+    // skewed pool: replica 0 never skips (slow), replica 1 skips ~90%
+    // (fast). With a window of 1 almost everything waits in queues, so
+    // the fast replica drains its own share and then must steal the
+    // slow replica's stranded jobs.
+    let specs = vec![SimSpec::with_lazy(0, 100_000),
+                     SimSpec::with_lazy(90, 100_000)];
+    let router = build_stealing_router(specs, RoutePolicy::Jsq, 1024, 1);
+    let (results, shed) = run_workload(&router, 32, 6);
+    assert_eq!(shed, 0);
+    assert_eq!(results.len(), 32, "every job answered exactly once");
+    let ids: std::collections::BTreeSet<u64> =
+        results.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), 32, "no duplicated responses after migration");
+    // all responses received → every queued-gauge transfer unwound
+    assert_eq!(router.total_queued(), 0,
+               "gauges must drain to zero after migrations");
+    let report = router.shutdown();
+    assert_eq!(report.failed(), 0);
+    assert_eq!(report.completed(), 32);
+    assert!(report.total_steals() > 0,
+            "fast replica must have stolen from the stranded slow one");
+    assert_eq!(report.total_steals(), report.total_stolen(),
+               "each migration has exactly one thief and one victim");
+    // the thief is the lazy replica, the victim the never-skip one
+    assert!(report.replicas[1].steals > 0);
+    assert!(report.replicas[0].stolen > 0);
+    assert!(report.render().contains("stole"),
+            "steal counters surface in the pool report");
+}
+
+#[test]
+fn stealing_preserves_drain_semantics_at_shutdown() {
+    // close the pool immediately after flooding: drain + steal must
+    // still complete every admitted job exactly once (thieves may pull
+    // from closed-but-undrained sibling queues)
+    let specs = vec![SimSpec::with_lazy(0, 50_000),
+                     SimSpec::with_lazy(90, 50_000)];
+    let router = build_stealing_router(specs, RoutePolicy::Jsq, 256, 1);
+    let mut rxs = Vec::new();
+    for i in 0..16 {
+        let (tx, rx) = mpsc::channel();
+        assert!(router.dispatch(Request::new(0, 2, 5, 900 + i), tx));
+        rxs.push(rx);
+    }
+    let report = router.shutdown();
+    assert_eq!(report.completed(), 16);
+    for rx in rxs {
+        assert!(rx.recv().is_ok(), "in-flight request lost at shutdown");
+    }
+    assert_eq!(report.total_steals(), report.total_stolen());
+}
+
+#[test]
+fn stealing_outputs_stay_deterministic() {
+    // migration must not change what any request produces — only where
+    let elems = SimSpec::fast().img_elems;
+    let reference: BTreeMap<u64, Vec<f32>> = (0..24u64)
+        .map(|i| {
+            let req = Request::new(0, (i % 10) as usize, 6, 1000 + i);
+            (1000 + i, sim_image(&req, elems).data().to_vec())
+        })
+        .collect();
+    let specs = vec![SimSpec::fast(); 3];
+    let router = build_stealing_router(specs, RoutePolicy::Lazy, 1024, 2);
+    let (results, shed) = run_workload(&router, 24, 6);
+    assert_eq!(shed, 0);
+    let mut seen = std::collections::BTreeSet::new();
+    for r in &results {
+        let seed = seed_of(r, &reference);
+        assert!(seen.insert(seed), "duplicate image for seed {seed}");
+    }
+    assert_eq!(seen.len(), 24);
+    router.shutdown();
 }
 
 #[test]
