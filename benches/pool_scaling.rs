@@ -1,24 +1,34 @@
 //! Bench: replica-pool scaling on the synthetic workload.
 //!
-//! Sweeps the pool 1→N replicas (closed-loop flood of the same request
-//! set), reporting requests/sec and latency p50/p99 per point, then
-//! compares routing policies at the widest pool, then runs the skewed-Γ
-//! scenario: replicas whose lazy ratios diverge, where admission-time
-//! jsq placement strands work on the slow (never-skipping) replica and
-//! work stealing pulls it back. Also verifies the determinism contract:
-//! result images are byte-identical to the single-replica reference for
-//! every (seed, label, steps).
+//! Closed-loop part: sweeps the pool 1→N replicas (flood of the same
+//! request set), reporting requests/sec and latency p50/p99 per point,
+//! then compares routing policies at the widest pool, then runs the
+//! skewed-Γ scenario: replicas whose lazy ratios diverge, where
+//! admission-time jsq placement strands work on the slow
+//! (never-skipping) replica and work stealing pulls it back. Also
+//! verifies the determinism contract: result images are byte-identical
+//! to the single-replica reference for every (seed, label, steps).
+//!
+//! Open-loop part: Poisson arrivals from `data::workload::WorkloadSpec`
+//! against a heterogeneous SLO-tiered pool (one B1 latency replica +
+//! three B8 throughput replicas), sweeping offered load below/at/above
+//! the measured capacity and charting shed rate and p50/p95 completion
+//! latency **per SLO tier** and per route policy. Unlike the
+//! closed-loop flood, arrival times don't wait for completions, so the
+//! numbers include queueing delay honestly (no coordinated omission —
+//! see docs/BENCHMARKS.md).
 //!
 //!     cargo bench --bench pool_scaling
 //! (or `cargo run --release --bench pool_scaling` on toolchains where
 //! bench profiles are unavailable)
 
-use lazydit::config::RoutePolicy;
-use lazydit::coordinator::pool::replica::ReplicaHandle;
+use lazydit::config::{RoutePolicy, Slo};
+use lazydit::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
 use lazydit::coordinator::pool::sim::{sim_image, SimEngine, SimSpec};
 use lazydit::coordinator::pool::steal::Rebalancer;
 use lazydit::coordinator::pool::{PoolReport, Router};
 use lazydit::coordinator::request::Request;
+use lazydit::data::workload::WorkloadSpec;
 use lazydit::metrics::stats::quantile;
 use std::sync::mpsc;
 use std::time::Instant;
@@ -148,6 +158,192 @@ fn skewed_gamma_scenario() -> (f64, f64) {
     (p95_base, p95_steal)
 }
 
+// ---------------------------------------------------------- open loop
+
+/// Requests per open-loop point (per route × offered-load cell).
+const OPEN_REQUESTS: usize = 96;
+/// Pool-wide admission bound for the open-loop runs: small enough that
+/// overload actually sheds instead of queueing unboundedly.
+const OPEN_QUEUE_CAP: usize = 12;
+
+/// The mixed-tier pool under test: one latency-tuned B1 replica and
+/// three throughput-tuned B8 replicas, all at the same Γ target.
+fn open_loop_tiers() -> Vec<ReplicaTier> {
+    vec![
+        ReplicaTier::new(Slo::Latency, 1),
+        ReplicaTier::new(Slo::Throughput, 8),
+        ReplicaTier::new(Slo::Throughput, 8),
+        ReplicaTier::new(Slo::Throughput, 8),
+    ]
+}
+
+fn build_tiered_router(route: RoutePolicy) -> Router {
+    let handles: Vec<ReplicaHandle> = open_loop_tiers()
+        .into_iter()
+        .enumerate()
+        .map(|(i, tier)| {
+            ReplicaHandle::spawn_tiered(i, OPEN_QUEUE_CAP,
+                                        SimEngine::factory(spec()), None,
+                                        tier)
+            .unwrap()
+        })
+        .collect();
+    Router::new(handles, route, OPEN_QUEUE_CAP)
+}
+
+/// Per-tier outcome of one open-loop run.
+struct TierOutcome {
+    offered: usize,
+    shed: usize,
+    latencies: Vec<f64>,
+}
+
+/// Replay one Poisson trace open-loop at `rate` req/s. Arrivals are
+/// paced by the trace clock — never by completions — so queueing delay
+/// lands in the latency numbers instead of silently throttling the
+/// offered load (the coordinated-omission trap of closed-loop floods).
+fn run_open_loop(route: RoutePolicy, rate: f64) -> [TierOutcome; 3] {
+    let router = build_tiered_router(route);
+    let trace = WorkloadSpec {
+        requests: OPEN_REQUESTS,
+        rate,
+        steps_choices: vec![STEPS],
+        num_classes: 10,
+        seed: 42,
+        slo_mix: vec![(Slo::Latency, 0.3), (Slo::Throughput, 0.5),
+                      (Slo::Besteffort, 0.2)],
+    }
+    .generate();
+    let t0 = Instant::now();
+    let mut offered = [0usize; 3];
+    let mut shed = [0usize; 3];
+    let mut joins = Vec::with_capacity(OPEN_REQUESTS);
+    for ev in &trace.events {
+        // open loop: wait for the scheduled arrival, not for completions.
+        // Sleep the bulk of the gap (a core pinned at 100% would contend
+        // with the very replica threads whose latency we measure) and
+        // spin only the last stretch for sub-ms arrival precision.
+        loop {
+            let remain = ev.at - t0.elapsed().as_secs_f64();
+            if remain <= 0.0 {
+                break;
+            }
+            if remain > 1e-3 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    remain - 5e-4));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        offered[ev.slo.index()] += 1;
+        let mut req = Request::new(0, ev.class_label, ev.steps, ev.seed)
+            .with_slo(ev.slo);
+        if ev.slo == Slo::Latency {
+            // latency clients run guidance-free: a 2-lane CFG request
+            // cannot fit the B1 latency tier (the router would shed it)
+            req.cfg_scale = 1.0;
+        }
+        let (tx, rx) = mpsc::channel();
+        let sent_at = t0.elapsed().as_secs_f64();
+        if router.dispatch(req, tx) {
+            let slo = ev.slo;
+            joins.push(std::thread::spawn(move || {
+                rx.recv().expect("response");
+                (slo, t0.elapsed().as_secs_f64() - sent_at)
+            }));
+        } else {
+            shed[ev.slo.index()] += 1;
+        }
+    }
+    let mut latencies: [Vec<f64>; 3] = Default::default();
+    for j in joins {
+        let (slo, lat) = j.join().expect("collector");
+        latencies[slo.index()].push(lat);
+    }
+    let report = router.shutdown();
+    let total_shed: usize = shed.iter().sum();
+    assert_eq!(report.completed() + total_shed, OPEN_REQUESTS,
+               "open loop: every request completes or sheds, exactly once");
+    assert_eq!(report.shed_by_slo.iter().sum::<u64>(), total_shed as u64,
+               "per-tier shed counters agree with the dispatcher");
+    let mut out: Vec<TierOutcome> = Vec::with_capacity(3);
+    for slo in Slo::ALL {
+        let i = slo.index();
+        out.push(TierOutcome {
+            offered: offered[i],
+            shed: shed[i],
+            latencies: std::mem::take(&mut latencies[i]),
+        });
+    }
+    out.try_into().map_err(|_| "three tiers").unwrap()
+}
+
+/// Estimate the tiered pool's capacity (req/s): serve a small
+/// closed-loop batch through one replica and scale by the pool size.
+fn calibrate_capacity() -> f64 {
+    let probe = 16usize;
+    let h = ReplicaHandle::spawn_tiered(
+        0, probe.max(1), SimEngine::factory(spec()), None,
+        ReplicaTier::new(Slo::Besteffort, 8))
+        .unwrap();
+    let router = Router::new(vec![h], RoutePolicy::Jsq, probe);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..probe {
+        let (tx, rx) = mpsc::channel();
+        assert!(router.dispatch(
+            Request::new(0, i % 10, STEPS, 40_000 + i as u64), tx));
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        rx.recv().expect("probe response");
+    }
+    let per_req = t0.elapsed().as_secs_f64() / probe as f64;
+    router.shutdown();
+    open_loop_tiers().len() as f64 / per_req.max(1e-9)
+}
+
+fn open_loop_sweep() {
+    let cap = calibrate_capacity();
+    println!(
+        "open-loop Poisson sweep (pool lat:b1x1 + thr:b8x3, queue cap \
+         {OPEN_QUEUE_CAP}, {OPEN_REQUESTS} req/point; measured capacity \
+         ≈ {cap:.0} req/s):"
+    );
+    println!(
+        "  {:<6} {:>9}  {:<11} {:>7} {:>7} {:>10} {:>10}",
+        "route", "offered", "tier", "req", "shed%", "p50", "p95"
+    );
+    for route in [RoutePolicy::Jsq, RoutePolicy::Lazy] {
+        for load in [0.5, 1.0, 2.0] {
+            let rate = (cap * load).max(1.0);
+            let tiers = run_open_loop(route, rate);
+            for (slo, t) in Slo::ALL.iter().zip(tiers.iter()) {
+                let shed_pct = if t.offered == 0 {
+                    0.0
+                } else {
+                    100.0 * t.shed as f64 / t.offered as f64
+                };
+                println!(
+                    "  {:<6} {:>7.2}×c  {:<11} {:>7} {:>6.1}% {:>8.2}ms \
+                     {:>8.2}ms",
+                    route.name(),
+                    load,
+                    slo.name(),
+                    t.offered,
+                    shed_pct,
+                    1e3 * quantile(&t.latencies, 0.5),
+                    1e3 * quantile(&t.latencies, 0.95),
+                );
+            }
+        }
+    }
+    println!(
+        "  (open loop: arrivals are paced by the trace, not completions — \
+         p95 includes queue wait; shed% is admission-control drops)"
+    );
+}
+
 fn main() {
     lazydit::util::logging::init();
     let cores = std::thread::available_parallelism()
@@ -203,6 +399,9 @@ fn main() {
 
     println!();
     let (p95_base, p95_steal) = skewed_gamma_scenario();
+
+    println!();
+    open_loop_sweep();
 
     println!();
     if deterministic {

@@ -57,6 +57,7 @@ fn main() -> anyhow::Result<()> {
         steps_choices: vec![6, 10, 14],
         num_classes: 10,
         seed: 42,
+        slo_mix: Vec::new(), // single engine: no tiers to route to
     };
     let trace = spec.generate();
     println!("replaying {} requests (Poisson {} req/s, steps in {:?})",

@@ -9,14 +9,22 @@
 //! arms pool work stealing: idle replicas pull queued jobs from the
 //! sibling with the highest lazy-discounted backlog.
 //!
+//! `--replica-spec "lat:b1x1,thr:b8x3"` provisions a heterogeneous
+//! SLO-tiered pool instead: each comma-separated group is
+//! `tier:bBxN` — tier ∈ {lat, thr, be}, B the replica's max batch
+//! width, N how many replicas of that shape to run. Requests carrying a
+//! wire `"slo"` tag route to their tier (best-effort traffic uses
+//! `--route`); the `STATS` wire verb exposes the live per-replica
+//! gauges. See docs/SERVING.md for the grammar and tuning cookbook.
+//!
 //! `--synthetic` serves the deterministic synthetic engine instead of
 //! the real model — no artifacts or XLA runtime needed; useful for
 //! exercising the pool/router layer and for load drills.
 
 use crate::cli::common::{merge_specs, serve_config, EvalContext};
-use crate::config::{LazyScope, RoutePolicy, ServeConfig, SkipPolicy};
+use crate::config::{LazyScope, RoutePolicy, ServeConfig, SkipPolicy, Slo};
 use crate::coordinator::engine::{Engine, EngineOptions};
-use crate::coordinator::pool::replica::ReplicaHandle;
+use crate::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
 use crate::coordinator::pool::sim::{SimEngine, SimSpec};
 use crate::coordinator::pool::{EngineFactory, PoolEngine, Rebalancer, Router};
 use crate::coordinator::server::serve_pool;
@@ -37,6 +45,7 @@ pub fn specs() -> Vec<OptSpec> {
         OptSpec { name: "cfg-scale", help: "guidance scale", default: Some("1.5"), is_flag: false },
         OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
         OptSpec { name: "replicas", help: "replica-pool size", default: Some("1"), is_flag: false },
+        OptSpec { name: "replica-spec", help: "SLO-tiered pool, e.g. lat:b1x1,thr:b8x3 (overrides --replicas/--max-batch)", default: None, is_flag: false },
         OptSpec { name: "route", help: "dispatch policy: rr|jsq|lazy", default: Some("rr"), is_flag: false },
         OptSpec { name: "steal", help: "pool work stealing: on|off", default: Some("off"), is_flag: false },
         OptSpec { name: "replica-policy", help: "per-replica skip-policy overrides, e.g. 0=mean,1=never", default: None, is_flag: false },
@@ -47,6 +56,68 @@ pub fn specs() -> Vec<OptSpec> {
         OptSpec { name: "pretrain-steps", help: "base steps if needed", default: Some("1500"), is_flag: false },
         OptSpec { name: "pretrain-lr", help: "base lr if needed", default: Some("2e-3"), is_flag: false },
     ])
+}
+
+/// Hard cap on the pool size a `--replica-spec` may request: each
+/// replica is a full worker thread + engine, so a typo like `b8x800`
+/// should fail loudly instead of exhausting the machine.
+const MAX_SPEC_REPLICAS: usize = 256;
+
+/// Parse `--replica-spec "lat:b1x1,thr:b8x3"` into per-replica tiers.
+///
+/// Grammar: comma-separated groups of `tier:bBxN` where `tier` is an
+/// SLO class (`lat`/`latency`, `thr`/`throughput`, `be`/`besteffort`),
+/// `B ≥ 1` is the group's max batch width (its bucket set is the powers
+/// of two below `B` plus `B` itself), and `N ≥ 1` is how many replicas
+/// of that shape to provision. Groups expand in order:
+/// `lat:b1x1,thr:b8x3` is replica 0 latency-tier B1 and replicas 1–3
+/// throughput-tier B8. On the real engine the width must be realizable
+/// by the compiled bucket set — `run` refuses the spec otherwise (see
+/// docs/SERVING.md).
+pub fn parse_replica_spec(spec: &str) -> Result<Vec<ReplicaTier>> {
+    let mut out = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let part = part.trim();
+        let (tier, shape) = part.split_once(':').with_context(|| {
+            format!("bad group '{part}' (want tier:bBxN, e.g. lat:b1x1)")
+        })?;
+        let slo = Slo::parse(tier)
+            .with_context(|| format!("bad tier in '{part}'"))?;
+        let shape = shape.trim();
+        let rest = shape.strip_prefix('b').with_context(|| {
+            format!("bad shape '{shape}' in '{part}' (want bBxN, e.g. b8x3)")
+        })?;
+        let (batch, count) = rest.split_once('x').with_context(|| {
+            format!("bad shape '{shape}' in '{part}' (want bBxN, e.g. b8x3)")
+        })?;
+        let batch: usize = batch.trim().parse().with_context(|| {
+            format!("bad batch width in '{part}'")
+        })?;
+        let count: usize = count.trim().parse().with_context(|| {
+            format!("bad replica count in '{part}'")
+        })?;
+        if batch == 0 {
+            bail!("batch width must be >= 1 in '{part}'");
+        }
+        if count == 0 {
+            bail!("replica count must be >= 1 in '{part}'");
+        }
+        // check `count` on its own first: `out.len() + count` could wrap
+        // in release builds for absurd counts, skipping this very guard
+        if count > MAX_SPEC_REPLICAS
+            || out.len() + count > MAX_SPEC_REPLICAS
+        {
+            bail!("--replica-spec asks for more than {MAX_SPEC_REPLICAS} \
+                   replicas");
+        }
+        for _ in 0..count {
+            out.push(ReplicaTier::new(slo, batch));
+        }
+    }
+    if out.is_empty() {
+        bail!("--replica-spec parsed to zero replicas");
+    }
+    Ok(out)
 }
 
 /// Parse the `--steal on|off` switch.
@@ -107,21 +178,31 @@ fn synthetic_factories(replicas: usize, lazy_pct: usize, work: u64,
 
 /// Real-engine factories. Everything captured is `Send` (plain config +
 /// flat weights); each replica constructs Runtime + ModelRunner + Engine
-/// on its own thread because PJRT types are `!Send`/`!Sync`.
+/// on its own thread because PJRT types are `!Send`/`!Sync`. Each
+/// replica's `ServeConfig` takes its tier's batch width — and, when the
+/// pool was provisioned via `--replica-spec` (`tiered`), its tier's
+/// bucket set — so a heterogeneous spec provisions genuinely different
+/// batchers. The default uniform pool leaves the compiled bucket set
+/// untouched (identical to the pre-tier behavior).
 fn engine_factories(ctx: &EvalContext, serve_cfg: &ServeConfig,
-                    gamma: Option<Vec<f32>>, replicas: usize,
+                    gamma: Option<Vec<f32>>, tiers: &[ReplicaTier],
+                    tiered: bool,
                     overrides: &BTreeMap<usize, SkipPolicy>)
                     -> Vec<EngineFactory> {
     // share one copy of the flat weights across all factories — N
     // replicas must not mean N+1 resident copies of θ
     let theta = std::sync::Arc::new(ctx.theta.clone());
     let gamma = gamma.map(std::sync::Arc::new);
-    (0..replicas)
+    (0..tiers.len())
         .map(|i| {
             let cfg = ctx.cfg.clone();
             let theta = theta.clone();
             let gamma = gamma.clone();
             let mut serve = serve_cfg.clone();
+            serve.max_batch = tiers[i].max_batch;
+            if tiered {
+                serve.bucket_override = Some(tiers[i].buckets.clone());
+            }
             if let Some(p) = overrides.get(&i) {
                 serve.policy = *p;
             }
@@ -146,7 +227,29 @@ fn engine_factories(ctx: &EvalContext, serve_cfg: &ServeConfig,
 }
 
 pub fn run(a: Args) -> Result<()> {
-    let replicas = a.get_usize("replicas", 1)?.max(1);
+    // pool shape: an explicit --replica-spec wins (heterogeneous,
+    // SLO-tiered); otherwise --replicas uniform best-effort replicas at
+    // the pool-wide --max-batch
+    let tiered = a.get("replica-spec").is_some();
+    let tiers: Vec<ReplicaTier> = match a.get("replica-spec") {
+        Some(spec) => {
+            let tiers = parse_replica_spec(&spec)?;
+            if a.provided("replicas")
+                && a.get_usize("replicas", 1)? != tiers.len()
+            {
+                bail!("--replicas {} contradicts --replica-spec '{}' \
+                       ({} replicas) — drop one of the two",
+                      a.get_usize("replicas", 1)?, spec, tiers.len());
+            }
+            tiers
+        }
+        None => {
+            let n = a.get_usize("replicas", 1)?.max(1);
+            let mb = a.get_usize("max-batch", 8)?.max(1);
+            vec![ReplicaTier::new(Slo::Besteffort, mb); n]
+        }
+    };
+    let replicas = tiers.len();
     let route = RoutePolicy::parse(&a.get_str("route", "rr"))?;
     let overrides =
         parse_replica_policies(&a.get_str("replica-policy", ""), replicas)?;
@@ -169,6 +272,31 @@ pub fn run(a: Args) -> Result<()> {
          a.get_usize("queue-cap", 256)?)
     } else {
         let ctx = EvalContext::open(&a, 32)?;
+        if tiered {
+            // a tier's advertised width must be realizable by the
+            // compiled bucket set: the router and thieves admit by
+            // `max_batch`, and if the engine's effective plan cap were
+            // smaller it could only serve an admitted CFG request by
+            // silently stripping guidance — replica-dependent output,
+            // breaking the determinism contract. Refuse the spec
+            // up front instead.
+            for (i, t) in tiers.iter().enumerate() {
+                let usable: Vec<usize> = t
+                    .buckets
+                    .iter()
+                    .copied()
+                    .filter(|b| ctx.cfg.buckets.contains(b))
+                    .collect();
+                let eff = crate::coordinator::batcher::plan_cap(
+                    &usable, t.max_batch);
+                if eff != t.max_batch {
+                    bail!("--replica-spec: replica {i} ({}:b{}) is not \
+                           realizable by the compiled bucket set {:?} \
+                           (effective cap {eff}) — use a compiled width",
+                          t.slo.name(), t.max_batch, ctx.cfg.buckets);
+                }
+            }
+        }
         // pool shape (--replicas/--route) lives in run()'s locals; the
         // per-engine ServeConfig stays pool-agnostic
         let mut serve_cfg = serve_config(&a, &ctx.cfg.model.name)?;
@@ -191,32 +319,46 @@ pub fn run(a: Args) -> Result<()> {
             serve_cfg.policy = SkipPolicy::Never;
         }
         let qc = serve_cfg.queue_cap;
-        (engine_factories(&ctx, &serve_cfg, gamma, replicas, &overrides), qc)
+        (engine_factories(&ctx, &serve_cfg, gamma, &tiers, tiered,
+                          &overrides), qc)
     };
 
     // work stealing: idle replicas pull queued jobs from the sibling
-    // with the highest lazy-discounted backlog. The admission window
-    // (max trajectories inside an engine at once) tracks --max-batch so
-    // the batcher stays full while the queue tail remains migratable.
+    // with the highest lazy-discounted backlog (SLO- and lane-
+    // compatible jobs only). Each replica's in-engine admission window
+    // comes from its own tier (`ReplicaTier::steal_window`, which
+    // tracks the tier's batch width); the rebalancer's constructor
+    // window is only the default for tier-less `spawn_with` callers,
+    // so set it to the widest tier — a future mixed pool errs toward
+    // less steal-thrash rather than a silent window of 1.
     let steal = parse_steal(&a.get_str("steal", "off"))?;
     let rebalancer = if steal && replicas > 1 {
-        Some(Rebalancer::new(a.get_usize("max-batch", 8)?.max(1)))
+        let widest = tiers.iter().map(|t| t.steal_window).max().unwrap_or(8);
+        Some(Rebalancer::new(widest))
     } else {
         None
     };
     let handles: Vec<ReplicaHandle> = factories
         .into_iter()
+        .zip(tiers.iter())
         .enumerate()
-        .map(|(i, f)| {
-            ReplicaHandle::spawn_with(i, queue_cap, f, rebalancer.clone())
+        .map(|(i, (f, tier))| {
+            ReplicaHandle::spawn_tiered(i, queue_cap, f, rebalancer.clone(),
+                                        tier.clone())
         })
         .collect::<Result<_>>()?;
     let router =
         Router::with_rebalancer(handles, route, queue_cap, rebalancer);
 
-    println!("serving on {addr} — {replicas} replica(s), route {}, steal \
-              {} — send JSON lines like \
-              {{\"label\":3,\"steps\":20,\"seed\":1}}",
+    let tier_summary: Vec<String> = tiers
+        .iter()
+        .map(|t| format!("{}:b{}", t.slo.name(), t.max_batch))
+        .collect();
+    println!("serving on {addr} — {replicas} replica(s) [{}], route {}, \
+              steal {} — send JSON lines like {{\"label\":3,\"steps\":20,\
+              \"seed\":1,\"cfg_scale\":1.0,\"slo\":\"latency\"}} \
+              or the STATS verb",
+             tier_summary.join(","),
              route.name(),
              if router.stealing() { "on" } else { "off" });
     let report = serve_pool(router, &addr, max_requests)?;
@@ -251,6 +393,46 @@ mod tests {
         assert!(parse_replica_policies("x=mean", 3).is_err());
         assert!(parse_replica_policies("0=bogus", 3).is_err());
         assert!(parse_replica_policies("0common", 3).is_err());
+    }
+
+    #[test]
+    fn replica_spec_grammar_parses() {
+        let tiers = parse_replica_spec("lat:b1x1,thr:b8x3").unwrap();
+        assert_eq!(tiers.len(), 4);
+        assert_eq!(tiers[0].slo, Slo::Latency);
+        assert_eq!(tiers[0].max_batch, 1);
+        assert_eq!(tiers[0].buckets, vec![1]);
+        for t in &tiers[1..] {
+            assert_eq!(t.slo, Slo::Throughput);
+            assert_eq!(t.max_batch, 8);
+            assert_eq!(t.buckets, vec![1, 2, 4, 8]);
+        }
+        // long spellings, whitespace, and best-effort groups
+        let tiers =
+            parse_replica_spec(" latency:b2x1 , besteffort:b4x2 ").unwrap();
+        assert_eq!(tiers.len(), 3);
+        assert_eq!(tiers[0].slo, Slo::Latency);
+        assert_eq!(tiers[2].slo, Slo::Besteffort);
+    }
+
+    #[test]
+    fn replica_spec_rejects_malformed_groups() {
+        for bad in [
+            "",                  // zero replicas
+            "lat",               // no shape
+            "lat:1x1",           // missing the b prefix
+            "lat:b1",            // missing the count
+            "lat:bx1",           // empty batch width
+            "lat:b0x1",          // zero batch width
+            "lat:b1x0",          // zero count
+            "gold:b1x1",         // unknown tier
+            "lat:b1x1,lat:b8x999", // over the spec cap
+            // a count huge enough to wrap `out.len() + count` must hit
+            // the cap error, not overflow past the guard
+            "lat:b1x1,thr:b8x18446744073709551615",
+        ] {
+            assert!(parse_replica_spec(bad).is_err(), "{bad:?} must fail");
+        }
     }
 
     #[test]

@@ -148,6 +148,7 @@ pub fn serve_config(a: &Args, name: &str) -> Result<ServeConfig> {
         scope: LazyScope::parse(&a.get_str("scope", "both"))?,
         threads: threads(),
         threshold: a.get_f32("threshold", 0.5)?,
+        bucket_override: None,
     })
 }
 

@@ -164,6 +164,81 @@ impl LazyScope {
     }
 }
 
+/// Request service-level-objective class, carried on the wire
+/// (`"slo"` field, optional) and used by the replica-pool router for
+/// tier-aware placement (coordinator::pool::router).
+///
+/// LazyDiT makes per-request cost dynamic — a replica's effective
+/// throughput depends on its observed lazy ratio Γ — so one batch/bucket
+/// configuration cannot serve both a latency budget and bulk throughput
+/// well. The pool therefore provisions replicas per tier and routes each
+/// request to the tier whose configuration matches its objective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Slo {
+    /// Minimize completion latency: prefer small-batch replicas with the
+    /// lowest lazy-discounted backlog `pending_steps · (1 − Γ)`.
+    Latency,
+    /// Maximize throughput: prefer large-bucket replicas that amortize
+    /// each model invocation over many lanes.
+    Throughput,
+    /// No stated objective (the wire default): runs on any replica under
+    /// the pool's configured route policy.
+    #[default]
+    Besteffort,
+}
+
+impl Slo {
+    /// Number of SLO classes (per-tier counter arrays are `[T; COUNT]`).
+    pub const COUNT: usize = 3;
+
+    /// Every class, in `index()` order.
+    pub const ALL: [Slo; Slo::COUNT] =
+        [Slo::Latency, Slo::Throughput, Slo::Besteffort];
+
+    /// Parse a wire/CLI spelling (`latency`/`lat`, `throughput`/`thr`,
+    /// `besteffort`/`be`).
+    pub fn parse(s: &str) -> Result<Slo> {
+        Ok(match s.trim() {
+            "latency" | "lat" => Slo::Latency,
+            "throughput" | "thr" => Slo::Throughput,
+            "besteffort" | "be" => Slo::Besteffort,
+            _ => bail!(
+                "unknown SLO class '{s}' (latency|throughput|besteffort)"
+            ),
+        })
+    }
+
+    /// Canonical wire spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Slo::Latency => "latency",
+            Slo::Throughput => "throughput",
+            Slo::Besteffort => "besteffort",
+        }
+    }
+
+    /// Stable index for per-tier counter arrays (`ALL[index()] == self`).
+    pub fn index(&self) -> usize {
+        match self {
+            Slo::Latency => 0,
+            Slo::Throughput => 1,
+            Slo::Besteffort => 2,
+        }
+    }
+
+    /// Can a replica provisioned for tier `self` honor a request of
+    /// class `req`? Best-effort replicas serve everything and
+    /// best-effort requests run anywhere; otherwise the classes must
+    /// match — a B1 latency replica must not strand its headroom on a
+    /// bulk job, and a deep-batch throughput replica cannot honor a
+    /// latency budget. Enforced both at dispatch (candidate generation)
+    /// and at steal time (a thief never pulls a job its own tier cannot
+    /// honor).
+    pub fn serves(&self, req: Slo) -> bool {
+        *self == Slo::Besteffort || req == Slo::Besteffort || *self == req
+    }
+}
+
 /// How the replica-pool router picks a replica for a new request
 /// (coordinator::pool::router).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -209,6 +284,12 @@ pub struct ServeConfig {
     pub threads: usize,
     /// Gate threshold (paper uses 0.5).
     pub threshold: f32,
+    /// Per-replica bucket-set restriction (SLO-tiered pools): the
+    /// engine plans rounds only against compiled buckets that are also
+    /// in this set. `None` (the default) uses the full compiled set.
+    /// A restriction can only narrow — every bucket size is backed by
+    /// an AOT-compiled executable, so unknown sizes are ignored.
+    pub bucket_override: Option<Vec<usize>>,
 }
 
 impl Default for ServeConfig {
@@ -222,6 +303,7 @@ impl Default for ServeConfig {
             scope: LazyScope::Both,
             threads: 1,
             threshold: 0.5,
+            bucket_override: None,
         }
     }
 }
@@ -336,6 +418,39 @@ mod tests {
         assert_eq!(RoutePolicy::parse("lazy").unwrap(), RoutePolicy::Lazy);
         assert!(RoutePolicy::parse("hash").is_err());
         assert_eq!(RoutePolicy::Lazy.name(), "lazy");
+    }
+
+    #[test]
+    fn slo_parse_roundtrip_and_index() {
+        for slo in Slo::ALL {
+            assert_eq!(Slo::parse(slo.name()).unwrap(), slo);
+            assert_eq!(Slo::ALL[slo.index()], slo);
+        }
+        assert_eq!(Slo::parse("lat").unwrap(), Slo::Latency);
+        assert_eq!(Slo::parse("thr").unwrap(), Slo::Throughput);
+        assert_eq!(Slo::parse("be").unwrap(), Slo::Besteffort);
+        assert_eq!(Slo::parse(" latency ").unwrap(), Slo::Latency);
+        assert!(Slo::parse("gold").is_err());
+        assert!(Slo::parse("").is_err());
+        assert_eq!(Slo::default(), Slo::Besteffort, "wire default");
+    }
+
+    #[test]
+    fn slo_compatibility_matrix() {
+        // best-effort replicas serve everything; best-effort requests run
+        // anywhere; latency and throughput never cross
+        for req in Slo::ALL {
+            assert!(Slo::Besteffort.serves(req));
+        }
+        for tier in Slo::ALL {
+            assert!(tier.serves(Slo::Besteffort));
+        }
+        assert!(Slo::Latency.serves(Slo::Latency));
+        assert!(Slo::Throughput.serves(Slo::Throughput));
+        assert!(!Slo::Latency.serves(Slo::Throughput),
+                "a B1 latency replica must not take bulk jobs");
+        assert!(!Slo::Throughput.serves(Slo::Latency),
+                "a deep-batch replica cannot honor a latency budget");
     }
 
     #[test]

@@ -33,6 +33,21 @@ impl BatchPlan {
     }
 }
 
+/// The widest plannable bucket under `max_lanes` — the lane cap
+/// [`plan_round`] packs against (0 when no bucket qualifies). Shared
+/// with `Engine::submit`'s anti-wedge lane guard, which must agree with
+/// this rule exactly: a request admitted past a guard computed from a
+/// *diverged* copy of this expression could never be planned, wedging
+/// its worker in a no-progress spin.
+pub fn plan_cap(buckets: &[usize], max_lanes: usize) -> usize {
+    buckets
+        .iter()
+        .copied()
+        .filter(|&b| b <= max_lanes.max(*buckets.first().unwrap_or(&1)))
+        .max()
+        .unwrap_or(0)
+}
+
 /// Select requests FIFO (by position) so that their total lanes fit the
 /// largest bucket ≤ `max_lanes`, then pick the smallest exported bucket
 /// that holds them. `lane_counts[i]` is lanes-per-request (1 or 2).
@@ -45,12 +60,7 @@ pub fn plan_round(lane_counts: &[usize], start: usize, max_lanes: usize,
     if n == 0 {
         return None;
     }
-    let cap = buckets
-        .iter()
-        .copied()
-        .filter(|&b| b <= max_lanes.max(*buckets.first().unwrap_or(&1)))
-        .max()
-        .unwrap_or(0);
+    let cap = plan_cap(buckets, max_lanes);
     if cap == 0 {
         return None;
     }
@@ -93,6 +103,18 @@ mod tests {
     #[test]
     fn empty_queue_no_plan() {
         assert!(plan_round(&[], 0, 8, BUCKETS).is_none());
+    }
+
+    #[test]
+    fn plan_cap_is_widest_plannable_bucket() {
+        assert_eq!(plan_cap(BUCKETS, 8), 8);
+        assert_eq!(plan_cap(BUCKETS, 16), 16);
+        assert_eq!(plan_cap(BUCKETS, 5), 4);
+        // max_lanes below the smallest bucket still yields that bucket
+        // (the first-bucket fudge plan_round relies on)
+        assert_eq!(plan_cap(BUCKETS, 0), 1);
+        assert_eq!(plan_cap(&[2, 4], 1), 2);
+        assert_eq!(plan_cap(&[], 8), 0, "no buckets, no cap");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! applies CFG + DDIM on the host, and retires finished requests.
 
 use crate::config::ServeConfig;
-use crate::coordinator::batcher::{plan_round, BatchPlan};
+use crate::coordinator::batcher::{plan_cap, plan_round, BatchPlan};
 use crate::coordinator::request::{ActiveRequest, Request, RequestResult};
 use crate::coordinator::stats::{LayerStats, ServeStats};
 use crate::model::checkpoint::Checkpoint;
@@ -44,6 +44,27 @@ pub struct Engine {
     active: Vec<ActiveRequest>,
     rr_cursor: usize,
     next_id: u64,
+    /// Bucket set rounds are planned against, resolved once at
+    /// construction: the tier's `ServeConfig::bucket_override`
+    /// intersected with the compiled set (each bucket size is backed by
+    /// an AOT-compiled executable, so a restriction can only narrow),
+    /// or the full compiled set when there is no override or the
+    /// intersection is empty.
+    round_buckets: Vec<usize>,
+}
+
+/// Resolve the effective bucket set for `round_buckets` (see the field
+/// docs); pure so both constructors share it.
+fn effective_buckets(compiled: &[usize],
+                     serve: &crate::config::ServeConfig) -> Vec<usize> {
+    if let Some(ov) = &serve.bucket_override {
+        let restricted: Vec<usize> =
+            compiled.iter().copied().filter(|b| ov.contains(b)).collect();
+        if !restricted.is_empty() {
+            return restricted;
+        }
+    }
+    compiled.to_vec()
 }
 
 impl Engine {
@@ -79,6 +100,7 @@ impl Engine {
                                         cfg.diffusion.beta_start,
                                         cfg.diffusion.beta_end);
         let depth = cfg.model.depth;
+        let round_buckets = effective_buckets(&cfg.buckets, &serve);
         Ok(Engine {
             runner,
             sampler: DdimSampler::new(schedule),
@@ -90,6 +112,7 @@ impl Engine {
             active: Vec::new(),
             rr_cursor: 0,
             next_id: 1,
+            round_buckets,
         })
     }
 
@@ -100,6 +123,7 @@ impl Engine {
                                         runner.cfg.diffusion.beta_start,
                                         runner.cfg.diffusion.beta_end);
         let depth = runner.cfg.model.depth;
+        let round_buckets = effective_buckets(&runner.cfg.buckets, &serve);
         Engine {
             runner,
             sampler: DdimSampler::new(schedule),
@@ -111,6 +135,7 @@ impl Engine {
             active: Vec::new(),
             rr_cursor: 0,
             next_id: 1,
+            round_buckets,
         }
     }
 
@@ -135,6 +160,21 @@ impl Engine {
             log::warn!("request {id}: steps {} clamped to {clamped} \
                         (schedule has {max_steps})", req.steps);
             req.steps = clamped;
+        }
+        // same guard for lanes: the pool router filters replicas that
+        // cannot fit a request, but programmatic callers can submit a
+        // 2-lane CFG request into an engine whose plannable cap is 1 —
+        // plan_round could then never include it and step_round would
+        // make no progress forever. Degrade to the cond-only lane
+        // instead of wedging the engine. `plan_cap` is the same rule
+        // plan_round packs against, so guard and planner cannot diverge.
+        let lane_cap =
+            plan_cap(&self.round_buckets, self.serve.max_batch).max(1);
+        if req.lanes() > lane_cap {
+            log::warn!("request {id}: {} lanes exceed this engine's \
+                        plannable cap {lane_cap} — dropping the uncond \
+                        lane (cfg_scale forced to 1.0)", req.lanes());
+            req.cfg_scale = 1.0;
         }
         let m = &self.runner.cfg.model;
         let nd = m.tokens() * m.dim;
@@ -164,7 +204,7 @@ impl Engine {
             self.active.iter().map(|a| a.req.lanes()).collect();
         let Some(plan) = plan_round(&lane_counts, self.rr_cursor,
                                      self.serve.max_batch,
-                                     &self.runner.cfg.buckets) else {
+                                     &self.round_buckets) else {
             return Ok(Vec::new());
         };
         self.rr_cursor = self.rr_cursor.wrapping_add(1);
@@ -372,6 +412,7 @@ impl Engine {
                     id: ar.req.id,
                     class_label: ar.req.class_label,
                     steps: ar.req.steps,
+                    slo: ar.req.slo,
                     image: Tensor::from_vec(&shape, ar.z).expect("shape"),
                     lazy_ratio: ar
                         .skip_counts
@@ -459,4 +500,29 @@ pub fn generate_batch(engine: &mut Engine, labels: &[usize], steps: usize,
         bail!("lost requests: {} of {}", res.len(), labels.len());
     }
     Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+
+    #[test]
+    fn bucket_override_restricts_but_never_extends_or_empties() {
+        let compiled = [1usize, 2, 4, 8, 16];
+        let mut serve = ServeConfig::default();
+        // no override: full compiled set
+        assert_eq!(effective_buckets(&compiled, &serve), compiled.to_vec());
+        // a tier restriction keeps only compiled members
+        serve.bucket_override = Some(vec![1, 2, 4]);
+        assert_eq!(effective_buckets(&compiled, &serve), vec![1, 2, 4]);
+        // unknown sizes are ignored (each bucket is an AOT executable)
+        serve.bucket_override = Some(vec![2, 3, 5, 8]);
+        assert_eq!(effective_buckets(&compiled, &serve), vec![2, 8]);
+        // an empty intersection falls back to the full compiled set
+        serve.bucket_override = Some(vec![3, 5, 7]);
+        assert_eq!(effective_buckets(&compiled, &serve), compiled.to_vec());
+        serve.bucket_override = Some(Vec::new());
+        assert_eq!(effective_buckets(&compiled, &serve), compiled.to_vec());
+    }
 }

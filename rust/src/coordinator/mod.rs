@@ -8,9 +8,14 @@
 //!   block runner → CFG-combine → DDIM-update → scatter caches;
 //! * [`stats`] — lazy-ratio Γ accounting, per-layer laziness (Fig. 4);
 //! * [`pool`] — replica pool: N worker threads each owning an engine,
-//!   with lazy-aware routing and pool-wide stats aggregation;
-//! * [`server`] — TCP JSON-lines front-end with admission control,
-//!   feeding either one engine or the replica pool's router.
+//!   with lazy-aware + SLO-tiered routing, work stealing, and pool-wide
+//!   stats aggregation;
+//! * [`server`] — TCP JSON-lines front-end with admission control and
+//!   the `STATS` gauges verb, feeding either one engine or the replica
+//!   pool's router.
+//!
+//! The architecture (sampler → model → coordinator → pool → wire) and
+//! the request lifecycle are mapped end-to-end in docs/ARCHITECTURE.md.
 
 pub mod request;
 pub mod batcher;

@@ -5,6 +5,7 @@
 //! is exactly the sum of the per-replica counters (Γ is the ratio of the
 //! summed numerators/denominators, never an average of averages).
 
+use crate::config::Slo;
 use crate::coordinator::pool::replica::ReplicaReport;
 use crate::coordinator::stats::{LayerStats, ServeStats};
 
@@ -38,9 +39,12 @@ pub fn merge_serve_stats(a: &mut ServeStats, b: &ServeStats) {
 /// Final pool-wide accounting returned by `Router::shutdown`.
 #[derive(Debug, Clone)]
 pub struct PoolReport {
+    /// Per-replica final reports, in pool-index order.
     pub replicas: Vec<ReplicaReport>,
     /// Requests shed by router admission control.
     pub shed: u64,
+    /// Sheds per SLO class (`Slo::index()` order; sums to `shed`).
+    pub shed_by_slo: [u64; Slo::COUNT],
 }
 
 impl PoolReport {
@@ -90,21 +94,36 @@ impl PoolReport {
         self.replicas.iter().map(|r| r.stolen).sum()
     }
 
-    /// Multi-line human summary: one line per replica (the A/B view),
-    /// then the pool-wide roll-up.
+    /// Completions per SLO class (`Slo::index()` order): the sum of the
+    /// per-replica counters, like every other pool-wide figure.
+    pub fn completed_by_slo(&self) -> [u64; Slo::COUNT] {
+        let mut out = [0u64; Slo::COUNT];
+        for r in &self.replicas {
+            for (o, c) in out.iter_mut().zip(r.completed_by_slo.iter()) {
+                *o += c;
+            }
+        }
+        out
+    }
+
+    /// Multi-line human summary: one line per replica (the A/B + tier
+    /// view), the pool-wide roll-up, and a per-SLO-tier breakdown.
     pub fn render(&self) -> String {
         let mut out = String::from(
-            "replica  policy        served   Γ(lazy)   mean lat   p99 lat   \
-             stole  lost\n",
+            "replica  tier        b   policy        served   Γ(lazy)   \
+             mean lat   p99 lat   stole  lost\n",
         );
         for r in &self.replicas {
             let line = match &r.error {
-                Some(e) => format!("  {:>2}     {:<12}  FAILED: {e}\n", r.id,
-                                   r.policy),
+                Some(e) => format!(
+                    "  {:>2}     {:<10} {:>2}   {:<12}  FAILED: {e}\n",
+                    r.id, r.tier.slo.name(), r.tier.max_batch, r.policy),
                 None => format!(
-                    "  {:>2}     {:<12}  {:>6}   {:>6.1}%   {:>7.3}s  \
-                     {:>7.3}s   {:>5}  {:>4}\n",
+                    "  {:>2}     {:<10} {:>2}   {:<12}  {:>6}   {:>6.1}%   \
+                     {:>7.3}s  {:>7.3}s   {:>5}  {:>4}\n",
                     r.id,
+                    r.tier.slo.name(),
+                    r.tier.max_batch,
                     r.policy,
                     r.serve.completed,
                     100.0 * r.layer.overall_ratio(),
@@ -127,6 +146,17 @@ impl PoolReport {
             serve.shed,
             self.total_steals(),
         ));
+        let done = self.completed_by_slo();
+        out.push_str("  tiers (completed/shed):");
+        for slo in Slo::ALL {
+            out.push_str(&format!(
+                "  {} {}/{}",
+                slo.name(),
+                done[slo.index()],
+                self.shed_by_slo[slo.index()],
+            ));
+        }
+        out.push('\n');
         out
     }
 }
@@ -150,6 +180,7 @@ mod tests {
         ReplicaReport {
             id,
             policy: "mean".to_string(),
+            tier: crate::coordinator::pool::replica::ReplicaTier::default(),
             layer: layer(depth, skips, total),
             serve: ServeStats {
                 completed,
@@ -159,6 +190,7 @@ mod tests {
                 module_invocations: 2 * depth as u64 * total,
                 module_skips: 2 * depth as u64 * skips,
             },
+            completed_by_slo: [0, 0, completed as u64],
             steals: 0,
             stolen: 0,
             error: None,
@@ -170,6 +202,7 @@ mod tests {
         let pr = PoolReport {
             replicas: vec![report(0, 3, 10, 40, 4), report(1, 3, 30, 40, 6)],
             shed: 2,
+            shed_by_slo: [0, 0, 2],
         };
         let l = pr.merged_layer();
         assert_eq!(l.skips[0], 40);
@@ -190,6 +223,7 @@ mod tests {
         let pr = PoolReport {
             replicas: vec![report(0, 1, 9, 10, 1), report(1, 1, 0, 90, 9)],
             shed: 0,
+            shed_by_slo: [0; Slo::COUNT],
         };
         // ratio of sums: 18/200 per-pool = 0.09; average of averages 0.45
         assert!((pr.overall_lazy() - 0.09).abs() < 1e-12);
@@ -212,13 +246,39 @@ mod tests {
         a.steals = 3;
         let mut b = report(1, 2, 3, 4, 5);
         b.stolen = 3;
-        let pr = PoolReport { replicas: vec![a, b], shed: 1 };
+        let pr = PoolReport { replicas: vec![a, b], shed: 1,
+                              shed_by_slo: [0, 0, 1] };
         let s = pr.render();
         assert!(s.contains("pool"));
         assert!(s.contains("mean"));
         assert!(s.contains("(1 shed, 3 stolen)"));
         assert!(s.contains("stole"), "steal column present: {s}");
         assert_eq!(pr.failed(), 0);
+    }
+
+    #[test]
+    fn per_tier_counters_sum_and_render() {
+        use crate::coordinator::pool::replica::ReplicaTier;
+        let mut a = report(0, 1, 0, 4, 5);
+        a.tier = ReplicaTier::new(Slo::Latency, 1);
+        a.completed_by_slo = [4, 0, 1];
+        let mut b = report(1, 1, 0, 4, 7);
+        b.tier = ReplicaTier::new(Slo::Throughput, 8);
+        b.completed_by_slo = [0, 6, 1];
+        let pr = PoolReport {
+            replicas: vec![a, b],
+            shed: 3,
+            shed_by_slo: [1, 2, 0],
+        };
+        assert_eq!(pr.completed_by_slo(), [4, 6, 2]);
+        assert_eq!(pr.shed_by_slo.iter().sum::<u64>(), pr.shed);
+        let s = pr.render();
+        assert!(s.contains("latency"), "tier column present: {s}");
+        assert!(s.contains("throughput"), "{s}");
+        assert!(s.contains("tiers (completed/shed)"), "{s}");
+        assert!(s.contains("latency 4/1"), "{s}");
+        assert!(s.contains("throughput 6/2"), "{s}");
+        assert!(s.contains("besteffort 2/0"), "{s}");
     }
 
     #[test]
@@ -232,7 +292,8 @@ mod tests {
         let mut b = report(1, 1, 0, 4, 4);
         b.steals = 1;
         b.stolen = 2;
-        let pr = PoolReport { replicas: vec![a, b], shed: 0 };
+        let pr = PoolReport { replicas: vec![a, b], shed: 0,
+                              shed_by_slo: [0; Slo::COUNT] };
         assert_eq!(pr.total_steals(), 3);
         assert_eq!(pr.total_stolen(), 3);
         assert_eq!(pr.total_steals(), pr.total_stolen(),

@@ -21,7 +21,24 @@
 //!
 //! Replicas may run different skip policies side-by-side (per-replica
 //! override in `lazydit serve --replica-policy`), turning the server into
-//! an online A/B harness for the baselines.
+//! an online A/B harness for the baselines. They may also be provisioned
+//! heterogeneously ([`replica::ReplicaTier`], `--replica-spec`): each
+//! replica carries its own SLO class and batcher shape, and the router
+//! places each request on the tier that matches its `"slo"` tag — the
+//! serving analogue of allocating LazyDiT's compute budget where it pays.
+//!
+//! Cross-module invariants (each module's docs state its own):
+//! * **gauge conservation** — every `queued`/`pending_steps` increment
+//!   has exactly one matching decrement across dispatch rollback, steal
+//!   migration, completion, and dead-replica cleanup, so pool-wide sums
+//!   stay truthful while the system runs;
+//! * **thief-first locking order** — a migration updates the thief's
+//!   gauges before the victim's, inside the rebalancer's peer lock, so
+//!   concurrent readers never under-count the pool total;
+//! * **admission-window bound** — a stealing worker keeps at most its
+//!   tier's window of trajectories inside the engine; the queue tail
+//!   stays migratable and SLO-compatible thieves can always help.
+#![deny(missing_docs)]
 
 pub mod agg;
 pub mod replica;
@@ -30,8 +47,9 @@ pub mod sim;
 pub mod steal;
 
 pub use agg::PoolReport;
-pub use replica::{PoolJob, ReplicaGauges, ReplicaHandle, ReplicaReport};
-pub use router::Router;
+pub use replica::{PoolJob, ReplicaGauges, ReplicaHandle, ReplicaReport,
+                  ReplicaTier};
+pub use router::{DispatchOutcome, Router};
 pub use sim::{SimEngine, SimSpec};
 pub use steal::{Rebalancer, StealPeer};
 

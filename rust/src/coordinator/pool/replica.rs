@@ -6,6 +6,7 @@
 //! (final per-replica stats). Engine construction happens on the worker
 //! thread because PJRT types are `!Send`/`!Sync`.
 
+use crate::config::Slo;
 use crate::coordinator::pool::steal::{Rebalancer, StealPeer};
 use crate::coordinator::pool::{EngineFactory, PoolEngine};
 use crate::coordinator::request::{Request, RequestResult};
@@ -20,8 +21,99 @@ use std::time::Duration;
 
 /// A routed request plus its response channel.
 pub struct PoolJob {
+    /// The admitted request (pool-unique id already assigned).
     pub req: Request,
+    /// Where the finished [`RequestResult`] goes.
     pub respond: mpsc::Sender<RequestResult>,
+}
+
+/// Per-replica provisioning: the SLO class a replica is tuned for and
+/// its batcher shape. Replicas used to share one pool-wide
+/// configuration; a heterogeneous pool provisions e.g. one B1
+/// latency-tier replica next to N B8 throughput-tier replicas and lets
+/// the router place each request on the tier that matches its budget
+/// (`lazydit serve --replica-spec "lat:b1x1,thr:b8x3"`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaTier {
+    /// SLO class this replica is provisioned to honor (see
+    /// [`Slo::serves`] for the compatibility matrix).
+    pub slo: Slo,
+    /// Max lanes per engine round — the per-replica
+    /// `ServeConfig::max_batch`. Also bounds in-engine admission when
+    /// stealing is off (excess jobs wait in the input queue).
+    pub max_batch: usize,
+    /// Padded bucket sizes this replica plans rounds against (powers of
+    /// two up to `max_batch` for tiered replicas; empty ⇒ the engine's
+    /// compiled default set).
+    pub buckets: Vec<usize>,
+    /// In-engine admission bound while stealing is armed: everything
+    /// beyond it stays in the queue, where it remains migratable.
+    pub steal_window: usize,
+}
+
+impl Default for ReplicaTier {
+    /// The legacy pool-wide behavior: best-effort class, `max_batch` 8.
+    fn default() -> Self {
+        ReplicaTier::new(Slo::Besteffort, 8)
+    }
+}
+
+impl ReplicaTier {
+    /// A tier provisioned for `slo` with the given batch width. The
+    /// bucket set is the powers of two below `max_batch` plus
+    /// `max_batch` itself (a non-power width must be a compiled bucket
+    /// to be realizable on the real engine — `cmd_serve` validates
+    /// this); the steal window tracks `max_batch` so the batcher stays
+    /// full while the queue tail stays migratable.
+    pub fn new(slo: Slo, max_batch: usize) -> ReplicaTier {
+        let max_batch = max_batch.max(1);
+        let mut buckets = Vec::new();
+        let mut b = 1usize;
+        while b < max_batch {
+            buckets.push(b);
+            b *= 2;
+        }
+        buckets.push(max_batch);
+        ReplicaTier { slo, max_batch, buckets, steal_window: max_batch }
+    }
+
+    /// Can this replica honor a request of class `slo`? Enforced at
+    /// dispatch (candidate generation) and steal time.
+    pub fn can_serve(&self, slo: Slo) -> bool {
+        self.slo.serves(slo)
+    }
+
+    /// The full admission predicate: SLO compatibility AND lane fit
+    /// (delegates to [`tier_admits`]). Used by the router's servability
+    /// classification and the steal eligibility check; the candidate
+    /// filter uses [`GaugeSnapshot::admits`], which shares the same
+    /// implementation — one source of truth, three call sites.
+    pub fn admits(&self, slo: Slo, lanes: usize) -> bool {
+        tier_admits(self.slo, self.max_batch, slo, lanes)
+    }
+
+    /// In-engine admission bound for this replica's worker: the steal
+    /// window while stealing is armed (beyond it, jobs stay stealable),
+    /// otherwise `max_batch`.
+    pub fn engine_window(&self, stealing: bool) -> usize {
+        if stealing {
+            self.steal_window.max(1)
+        } else {
+            self.max_batch.max(1)
+        }
+    }
+}
+
+/// The one admission predicate shared by dispatch candidate filtering,
+/// the router's shed-reason classification, and steal eligibility: a
+/// replica of tier class `tier_slo` with batch width `max_batch` can
+/// run a request of class `slo` occupying `lanes` lanes. A request
+/// wider than the batch could never be planned — admitting it would
+/// wedge the worker in a no-progress spin — and SLO classes only mix
+/// through best-effort ([`Slo::serves`]).
+pub fn tier_admits(tier_slo: Slo, max_batch: usize, slo: Slo,
+                   lanes: usize) -> bool {
+    tier_slo.serves(slo) && max_batch >= lanes.max(1)
 }
 
 /// Live per-replica load/laziness gauges. The router reads these on every
@@ -37,6 +129,10 @@ pub struct ReplicaGauges {
     pub pending_steps: AtomicUsize,
     /// Requests completed by this replica.
     pub completed: AtomicU64,
+    /// Requests completed per SLO class (`Slo::index()` order) — the
+    /// per-tier live gauge behind the `STATS` wire verb and the
+    /// tier-breakdown line of the pool report.
+    pub completed_by_slo: [AtomicU64; Slo::COUNT],
     /// Requests this replica accepted but dropped without completing
     /// (engine failure, panic, refused queue backlog). The router's
     /// admission ledger needs these or dead replicas would pin
@@ -66,35 +162,75 @@ impl ReplicaGauges {
         self.modules_skipped.load(Ordering::Relaxed) as f64 / seen as f64
     }
 
-    /// Snapshot used by the router's selection policies.
-    pub fn snapshot(&self) -> GaugeSnapshot {
+    /// Snapshot used by the router's selection policies. The tier is
+    /// static per-replica state the gauges don't own, so the caller
+    /// supplies it — there is no "default" tier to fabricate (callers:
+    /// [`ReplicaHandle::snapshot`] and the rebalancer's victim ranking,
+    /// both of which hold the real provisioning).
+    pub fn snapshot(&self, tier: &ReplicaTier) -> GaugeSnapshot {
         GaugeSnapshot {
             queued: self.queued.load(Ordering::Relaxed),
             pending_steps: self.pending_steps.load(Ordering::Relaxed),
             lazy_ratio: self.lazy_ratio(),
             finished: self.finished.load(Ordering::Acquire),
+            slo: tier.slo,
+            max_batch: tier.max_batch,
         }
+    }
+
+    /// Per-SLO completed counters (`Slo::index()` order).
+    pub fn completed_by_slo(&self) -> [u64; Slo::COUNT] {
+        let mut out = [0u64; Slo::COUNT];
+        for (o, c) in out.iter_mut().zip(self.completed_by_slo.iter()) {
+            *o = c.load(Ordering::Relaxed);
+        }
+        out
     }
 }
 
-/// Point-in-time view of one replica's load.
+/// Point-in-time view of one replica's load (plus its static tier
+/// provisioning, so SLO-aware candidate ordering is a pure function of
+/// the snapshot vector).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GaugeSnapshot {
+    /// Requests admitted (dispatched) and not yet completed.
     pub queued: usize,
+    /// Remaining denoise steps across queued + in-flight requests.
     pub pending_steps: usize,
+    /// Observed lazy ratio Γ.
     pub lazy_ratio: f64,
     /// The worker has exited — the replica can never serve again.
     pub finished: bool,
+    /// The replica's provisioned SLO class ([`ReplicaTier::slo`]).
+    pub slo: Slo,
+    /// The replica's batch width ([`ReplicaTier::max_batch`]) —
+    /// throughput requests prefer wider replicas.
+    pub max_batch: usize,
+}
+
+impl GaugeSnapshot {
+    /// The shared admission predicate ([`tier_admits`]) over this
+    /// snapshot's tier fields — used by the router's candidate filter.
+    pub fn admits(&self, slo: Slo, lanes: usize) -> bool {
+        tier_admits(self.slo, self.max_batch, slo, lanes)
+    }
 }
 
 /// Final accounting exported by a replica at shutdown.
 #[derive(Debug, Clone)]
 pub struct ReplicaReport {
+    /// Replica id (stable pool index).
     pub id: usize,
     /// Skip-policy label the replica ran (A/B reporting).
     pub policy: String,
+    /// Tier the replica was provisioned for.
+    pub tier: ReplicaTier,
+    /// Per-(layer,module) laziness counters.
     pub layer: LayerStats,
+    /// Serving-level counters (completions, latencies, wall time).
     pub serve: ServeStats,
+    /// Requests completed per SLO class (`Slo::index()` order).
+    pub completed_by_slo: [u64; Slo::COUNT],
     /// Jobs this replica stole from siblings' queues.
     pub steals: u64,
     /// Jobs siblings stole out of this replica's queue.
@@ -110,8 +246,10 @@ impl ReplicaReport {
         ReplicaReport {
             id,
             policy: String::new(),
+            tier: ReplicaTier::default(),
             layer: LayerStats::default(),
             serve: ServeStats::default(),
+            completed_by_slo: [0; Slo::COUNT],
             steals: 0,
             stolen: 0,
             error: Some(msg.into()),
@@ -121,8 +259,12 @@ impl ReplicaReport {
 
 /// Handle held by the router: input queue + gauges + join state.
 pub struct ReplicaHandle {
+    /// Replica id (stable pool index).
     pub id: usize,
+    /// Live load gauges, shared with the worker (and thieves).
     pub gauges: Arc<ReplicaGauges>,
+    /// The replica's provisioning (SLO class + batcher shape).
+    pub tier: ReplicaTier,
     queue: BoundedQueue<PoolJob>,
     join: Mutex<Option<JoinHandle<()>>>,
     report: Arc<Mutex<Option<ReplicaReport>>>,
@@ -139,14 +281,34 @@ impl ReplicaHandle {
     /// Spawn with an optional pool [`Rebalancer`]: when present, the
     /// worker bounds in-engine admission to the rebalancer's window
     /// (excess jobs stay in the queue where siblings can steal them) and
-    /// pulls work from overloaded siblings whenever it goes idle.
+    /// pulls work from overloaded siblings whenever it goes idle. The
+    /// replica gets the default best-effort tier; heterogeneous pools
+    /// use [`spawn_tiered`](Self::spawn_tiered).
     pub fn spawn_with(id: usize, queue_cap: usize, factory: EngineFactory,
                       steal: Option<Arc<Rebalancer>>) -> Result<ReplicaHandle> {
+        let tier = match &steal {
+            Some(rb) => ReplicaTier {
+                steal_window: rb.admit_window(),
+                ..ReplicaTier::default()
+            },
+            None => ReplicaTier::default(),
+        };
+        Self::spawn_tiered(id, queue_cap, factory, steal, tier)
+    }
+
+    /// Spawn a replica provisioned for a specific [`ReplicaTier`]: the
+    /// worker bounds in-engine admission to the tier's window
+    /// ([`ReplicaTier::engine_window`]), the router routes by the tier's
+    /// SLO class, and thieves respect its compatibility constraint.
+    pub fn spawn_tiered(id: usize, queue_cap: usize, factory: EngineFactory,
+                        steal: Option<Arc<Rebalancer>>, tier: ReplicaTier)
+                        -> Result<ReplicaHandle> {
         let queue: BoundedQueue<PoolJob> = BoundedQueue::new(queue_cap.max(1));
         let gauges = Arc::new(ReplicaGauges::default());
         let report: Arc<Mutex<Option<ReplicaReport>>> =
             Arc::new(Mutex::new(None));
         let (q2, g2, r2) = (queue.clone(), gauges.clone(), report.clone());
+        let t2 = tier.clone();
         let join = std::thread::Builder::new()
             .name(format!("lazydit-replica-{id}"))
             .spawn(move || {
@@ -170,7 +332,7 @@ impl ReplicaHandle {
                     std::panic::AssertUnwindSafe(|| {
                         run_replica(id, factory, &q2, &g2, &r2,
                                     &mut responders, steal.as_deref(),
-                                    &engine_pending, &admitting)
+                                    &engine_pending, &admitting, &t2)
                     }));
                 if result.is_err() {
                     log::warn!("replica {id}: worker panicked");
@@ -201,8 +363,10 @@ impl ReplicaHandle {
                     if slot.is_none() {
                         let mut rep =
                             ReplicaReport::failed(id, "worker panicked");
+                        rep.tier = t2.clone();
                         rep.steals = g2.steals.load(Ordering::Relaxed);
                         rep.stolen = g2.stolen.load(Ordering::Relaxed);
+                        rep.completed_by_slo = g2.completed_by_slo();
                         *slot = Some(rep);
                     }
                 }
@@ -214,19 +378,27 @@ impl ReplicaHandle {
         Ok(ReplicaHandle {
             id,
             gauges,
+            tier,
             queue,
             join: Mutex::new(Some(join)),
             report,
         })
     }
 
-    /// This replica's stealable surface (input queue + gauges), handed
-    /// to the pool [`Rebalancer`] at registration.
+    /// Snapshot for the router's selection policies, carrying this
+    /// handle's tier provisioning (SLO class, batch width).
+    pub fn snapshot(&self) -> GaugeSnapshot {
+        self.gauges.snapshot(&self.tier)
+    }
+
+    /// This replica's stealable surface (input queue + gauges + tier),
+    /// handed to the pool [`Rebalancer`] at registration.
     pub fn steal_peer(&self) -> StealPeer {
         StealPeer {
             id: self.id,
             queue: self.queue.clone(),
             gauges: self.gauges.clone(),
+            tier: self.tier.clone(),
         }
     }
 
@@ -289,14 +461,16 @@ fn run_replica(id: usize, factory: EngineFactory,
                report: &Mutex<Option<ReplicaReport>>,
                responders: &mut BTreeMap<u64, mpsc::Sender<RequestResult>>,
                steal: Option<&Rebalancer>, engine_pending: &AtomicUsize,
-               admitting: &AtomicUsize) {
+               admitting: &AtomicUsize, tier: &ReplicaTier) {
     let mut engine: Box<dyn PoolEngine> = match factory() {
         Ok(e) => e,
         Err(e) => {
             let msg = format!("engine construction failed: {e:#}");
             log::warn!("replica {id}: {msg}");
             refuse_remaining(queue, gauges);
-            *report.lock().unwrap() = Some(ReplicaReport::failed(id, msg));
+            let mut rep = ReplicaReport::failed(id, msg);
+            rep.tier = tier.clone();
+            *report.lock().unwrap() = Some(rep);
             return;
         }
     };
@@ -327,13 +501,11 @@ fn run_replica(id: usize, factory: EngineFactory,
         responders.insert(rid, job.respond);
     }
     let mut error: Option<String> = None;
-    // with stealing on, cap how many trajectories sit inside the engine:
-    // everything beyond the window stays in the queue, where it remains
-    // migratable — an engine-admitted trajectory can never move
-    let window = match steal {
-        Some(rb) => rb.admit_window().max(1),
-        None => usize::MAX,
-    };
+    // cap how many trajectories sit inside the engine: the tier's steal
+    // window while stealing is on (everything beyond it stays in the
+    // queue, where it remains migratable — an engine-admitted trajectory
+    // can never move), the tier's batch width otherwise
+    let window = tier.engine_window(steal.is_some());
     let mut idle_misses = 0u32;
 
     loop {
@@ -383,6 +555,8 @@ fn run_replica(id: usize, factory: EngineFactory,
             Ok(finished) => {
                 for res in finished {
                     gauges.completed.fetch_add(1, Ordering::Relaxed);
+                    gauges.completed_by_slo[res.slo.index()]
+                        .fetch_add(1, Ordering::Relaxed);
                     dec(&gauges.queued, 1);
                     if let Some(tx) = responders.remove(&res.id) {
                         let _ = tx.send(res);
@@ -422,8 +596,10 @@ fn run_replica(id: usize, factory: EngineFactory,
     *report.lock().unwrap() = Some(ReplicaReport {
         id,
         policy: engine.policy_name(),
+        tier: tier.clone(),
         layer: engine.layer_stats().clone(),
         serve: engine.serve_stats().clone(),
+        completed_by_slo: gauges.completed_by_slo(),
         steals: gauges.steals.load(Ordering::Relaxed),
         stolen: gauges.stolen.load(Ordering::Relaxed),
         error,
@@ -623,14 +799,72 @@ mod tests {
     }
 
     #[test]
+    fn tier_windows_and_bucket_sets() {
+        let t = ReplicaTier::new(Slo::Latency, 1);
+        assert_eq!(t.buckets, vec![1]);
+        assert_eq!(t.engine_window(false), 1);
+        assert_eq!(t.engine_window(true), 1);
+        let t = ReplicaTier::new(Slo::Throughput, 8);
+        assert_eq!(t.buckets, vec![1, 2, 4, 8]);
+        assert_eq!(t.engine_window(false), 8);
+        // non-power-of-two widths keep the exact cap as the top bucket
+        let t = ReplicaTier::new(Slo::Besteffort, 6);
+        assert_eq!(t.buckets, vec![1, 2, 4, 6]);
+        assert_eq!(ReplicaTier::new(Slo::Latency, 0).max_batch, 1, "clamped");
+        assert!(ReplicaTier::new(Slo::Latency, 1).can_serve(Slo::Besteffort));
+        assert!(!ReplicaTier::new(Slo::Latency, 1).can_serve(Slo::Throughput));
+    }
+
+    #[test]
+    fn tiered_replica_reports_tier_and_per_slo_completions() {
+        let tier = ReplicaTier::new(Slo::Latency, 1);
+        let h = ReplicaHandle::spawn_tiered(
+            4, 16, SimEngine::factory(SimSpec::fast()), None, tier.clone())
+            .unwrap();
+        let mut rxs = Vec::new();
+        for (i, slo) in [Slo::Latency, Slo::Latency, Slo::Besteffort]
+            .iter()
+            .enumerate()
+        {
+            let (tx, rx) = mpsc::channel();
+            let req = Request::new(0, 1, 3, i as u64).with_slo(*slo);
+            h.gauges.queued.fetch_add(1, Ordering::Relaxed);
+            h.gauges.pending_steps.fetch_add(3, Ordering::Relaxed);
+            h.try_send(PoolJob { req, respond: tx })
+                .map_err(|_| "send")
+                .unwrap();
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // the handle's snapshot carries the tier provisioning
+        let s = h.snapshot();
+        assert_eq!(s.slo, Slo::Latency);
+        assert_eq!(s.max_batch, 1);
+        let rep = h.join_report();
+        assert!(rep.error.is_none(), "{:?}", rep.error);
+        assert_eq!(rep.tier, tier);
+        assert_eq!(rep.completed_by_slo[Slo::Latency.index()], 2);
+        assert_eq!(rep.completed_by_slo[Slo::Besteffort.index()], 1);
+        assert_eq!(rep.completed_by_slo[Slo::Throughput.index()], 0);
+        assert_eq!(rep.completed_by_slo.iter().sum::<u64>(),
+                   rep.serve.completed as u64,
+                   "per-SLO counters partition the total");
+    }
+
+    #[test]
     fn gauges_track_lazy_ratio() {
         let g = ReplicaGauges::default();
         assert_eq!(g.lazy_ratio(), 0.0);
         g.modules_seen.store(100, Ordering::Relaxed);
         g.modules_skipped.store(25, Ordering::Relaxed);
         assert!((g.lazy_ratio() - 0.25).abs() < 1e-12);
-        let s = g.snapshot();
+        let tier = ReplicaTier::new(Slo::Latency, 2);
+        let s = g.snapshot(&tier);
         assert_eq!(s.queued, 0);
         assert!((s.lazy_ratio - 0.25).abs() < 1e-12);
+        assert_eq!(s.slo, Slo::Latency);
+        assert_eq!(s.max_batch, 2);
     }
 }

@@ -1,6 +1,7 @@
 //! Admission control + dispatch across the replica pool.
 //!
-//! Three policies (config::RoutePolicy):
+//! Three policies (config::RoutePolicy) order the candidates for
+//! best-effort traffic:
 //! * `rr`   — rotate, ignoring load;
 //! * `jsq`  — join-shortest-queue on admitted-but-unfinished requests;
 //! * `lazy` — cost-based: a replica's backlog is its queued remaining
@@ -8,17 +9,53 @@
 //!   skipping Γ of its module invocations clears a step in ≈(1−Γ) of the
 //!   full-step time, so its *effective* backlog is `steps · (1 − Γ)`.
 //!
+//! SLO-tagged requests route by tier instead: candidates are restricted
+//! to compatible replicas ([`crate::config::Slo::serves`]), with
+//! matching-tier replicas ahead of best-effort spill. Latency requests
+//! order by lazy-discounted backlog (narrowest batch first on ties);
+//! throughput requests prefer the widest batch. A request whose SLO no
+//! live replica can honor sheds immediately — by design, a latency
+//! budget is never silently parked on a deep-batch replica.
+//!
 //! Admission control is pool-wide: when the total of per-replica queues
 //! reaches `queue_cap`, new requests are shed immediately (the client
-//! gets a structured `queue full` line, never silence).
+//! gets a structured `queue full` line, never silence). Sheds are also
+//! counted per SLO class for the `STATS` wire verb and the final report.
+//!
+//! Invariants (pinned by unit + integration tests):
+//! * **Gauge conservation** — pool-wide `queued`/`pending_steps` totals
+//!   are preserved by dispatch rollback, steal migration, and dead-
+//!   replica cleanup; completed + forfeited + shed resolves every
+//!   admission ticket exactly once.
+//! * **Admission-ledger bound** — tickets are taken *before* the bound
+//!   check, so concurrent dispatches can never overrun `queue_cap`.
+//! * **Candidate soundness** — finished replicas and SLO-incompatible
+//!   tiers never appear in a dispatch order.
 
-use crate::config::RoutePolicy;
+use crate::config::{RoutePolicy, Slo};
 use crate::coordinator::pool::agg::PoolReport;
 use crate::coordinator::pool::replica::{GaugeSnapshot, PoolJob, ReplicaHandle};
 use crate::coordinator::pool::steal::Rebalancer;
 use crate::coordinator::request::{Request, RequestResult};
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
+
+/// Why one dispatch attempt succeeded or shed — the wire front-end
+/// maps the two shed reasons to distinct error lines so clients can
+/// tell transient overload from a permanent pool-shape mismatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchOutcome {
+    /// Admitted to a replica; the response channel will deliver.
+    Admitted,
+    /// Transient: the pool-wide admission bound (or every compatible
+    /// replica's queue) is full. Backing off and retrying can succeed.
+    ShedCapacity,
+    /// Permanent for this pool shape: no live replica is compatible
+    /// with the request's SLO class and lane count. Retrying the same
+    /// request is futile until the pool is re-provisioned.
+    ShedUnservable,
+}
 
 /// The pool front-door. All methods take `&self`; the router is shared
 /// across acceptor threads behind an `Arc`.
@@ -28,6 +65,9 @@ pub struct Router {
     queue_cap: usize,
     rr: AtomicUsize,
     shed: AtomicU64,
+    /// Sheds per SLO class (`Slo::index()` order) — surfaced by the
+    /// `STATS` verb and the final report's tier breakdown.
+    shed_by_slo: [AtomicU64; Slo::COUNT],
     /// Admission ledger: dispatch attempts (tickets). Outstanding work is
     /// `dispatched − shed − Σ(completed + forfeited)`; because the ticket
     /// is taken *before* the bound check, N concurrent dispatches get N
@@ -43,6 +83,8 @@ pub struct Router {
 }
 
 impl Router {
+    /// Construct without work stealing (see
+    /// [`with_rebalancer`](Self::with_rebalancer)).
     pub fn new(replicas: Vec<ReplicaHandle>, route: RoutePolicy,
                queue_cap: usize) -> Router {
         Self::with_rebalancer(replicas, route, queue_cap, None)
@@ -65,16 +107,19 @@ impl Router {
             queue_cap: queue_cap.max(1),
             rr: AtomicUsize::new(0),
             shed: AtomicU64::new(0),
+            shed_by_slo: Default::default(),
             dispatched: AtomicU64::new(0),
             next_id: AtomicU64::new(1),
             rebalancer,
         }
     }
 
+    /// Number of replicas in the pool (live or finished).
     pub fn replica_count(&self) -> usize {
         self.replicas.len()
     }
 
+    /// The configured dispatch policy for best-effort traffic.
     pub fn route(&self) -> RoutePolicy {
         self.route
     }
@@ -98,6 +143,15 @@ impl Router {
     /// Requests shed by admission control.
     pub fn shed_count(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Sheds per SLO class (`Slo::index()` order).
+    pub fn shed_by_slo(&self) -> [u64; Slo::COUNT] {
+        let mut out = [0u64; Slo::COUNT];
+        for (o, c) in out.iter_mut().zip(self.shed_by_slo.iter()) {
+            *o = c.load(Ordering::Relaxed);
+        }
+        out
     }
 
     /// Jobs migrated between replicas so far (0 when stealing is off).
@@ -146,27 +200,58 @@ impl Router {
         done + self.shed.load(Ordering::Relaxed)
     }
 
-    /// Route one request. Returns `false` if it was shed (admission bound
-    /// hit, or every replica refused). Requests arriving with `id == 0`
-    /// get a pool-unique id (replica engines each number from 1, so
-    /// engine-assigned ids would collide across replicas on the wire).
-    pub fn dispatch(&self, mut req: Request,
+    /// Route one request. Returns `false` if it was shed — see
+    /// [`dispatch_outcome`](Self::dispatch_outcome) for the
+    /// reason-bearing variant the wire front-end uses.
+    pub fn dispatch(&self, req: Request,
                     respond: mpsc::Sender<RequestResult>) -> bool {
-        // take a ticket first, then check the bound: the shed below
-        // returns the ticket via the shed counter inside resolved()
+        self.dispatch_outcome(req, respond) == DispatchOutcome::Admitted
+    }
+
+    /// Route one request, reporting *why* when it sheds: a capacity shed
+    /// is transient (back off and retry), an unservable shed is
+    /// permanent for this pool shape (no live replica matches the
+    /// request's SLO class and lane count) and retrying is futile —
+    /// the wire front-end surfaces the two differently. Requests
+    /// arriving with `id == 0` get a pool-unique id (replica engines
+    /// each number from 1, so engine-assigned ids would collide across
+    /// replicas on the wire).
+    pub fn dispatch_outcome(&self, mut req: Request,
+                            respond: mpsc::Sender<RequestResult>)
+                            -> DispatchOutcome {
+        let slo = req.slo;
+        let lanes = req.lanes().max(1);
+        // take a ticket first, then check the bound: the sheds below
+        // return the ticket via the shed counter inside resolved()
         let resolved = self.resolved();
         let ticket = self.dispatched.fetch_add(1, Ordering::Relaxed) + 1;
         if ticket.saturating_sub(resolved) > self.queue_cap as u64 {
-            self.shed.fetch_add(1, Ordering::Relaxed);
-            return false;
+            // classify the shed even at the bound: an unservable
+            // request must report as unservable, or the reason would
+            // flip-flop with load and well-behaved clients would retry
+            // a condition that can never clear. The probe (one atomic
+            // per replica, no allocation) runs only on shed paths —
+            // admitted requests never pay it.
+            self.count_shed(slo);
+            return if self.any_compatible(slo, lanes) {
+                DispatchOutcome::ShedCapacity
+            } else {
+                DispatchOutcome::ShedUnservable
+            };
         }
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         }
         let snaps: Vec<GaugeSnapshot> =
-            self.replicas.iter().map(|r| r.gauges.snapshot()).collect();
+            self.replicas.iter().map(|r| r.snapshot()).collect();
         let rr = self.rr.fetch_add(1, Ordering::Relaxed);
-        let order = candidate_order(self.route, &snaps, rr);
+        let order = candidate_order(self.route, slo, lanes, &snaps, rr);
+        if order.is_empty() {
+            // nothing live is compatible — permanent for this pool
+            // shape, never "queue full"
+            self.count_shed(slo);
+            return DispatchOutcome::ShedUnservable;
+        }
         let steps = req.steps;
         let mut job = PoolJob { req, respond };
         for idx in order {
@@ -176,7 +261,7 @@ impl Router {
             h.gauges.queued.fetch_add(1, Ordering::Relaxed);
             h.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
             match h.try_send(job) {
-                Ok(()) => return true,
+                Ok(()) => return DispatchOutcome::Admitted,
                 Err(j) => {
                     // saturating rollback: a panicked worker's cleanup
                     // decrements may race ours between the add and here,
@@ -188,8 +273,85 @@ impl Router {
                 }
             }
         }
+        self.count_shed(slo);
+        DispatchOutcome::ShedCapacity
+    }
+
+    /// Resolve a shed ticket, total + per-SLO-class.
+    fn count_shed(&self, slo: Slo) {
         self.shed.fetch_add(1, Ordering::Relaxed);
-        false
+        self.shed_by_slo[slo.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Is any live replica's tier compatible with `(slo, lanes)`? The
+    /// shed-path classifier behind unservable-vs-capacity reporting
+    /// (shares [`crate::coordinator::pool::replica::tier_admits`] with
+    /// the candidate filter and steal eligibility).
+    fn any_compatible(&self, slo: Slo, lanes: usize) -> bool {
+        self.replicas.iter().any(|r| {
+            !r.gauges.finished.load(Ordering::Acquire)
+                && r.tier.admits(slo, lanes)
+        })
+    }
+
+    /// One-line JSON snapshot of the live pool gauges — the payload of
+    /// the `STATS` wire verb (see docs/SERVING.md). Per replica: tier,
+    /// batch width, queued, pending steps, observed Γ, completions
+    /// (total and per SLO class), steal counters, liveness. Pool-wide:
+    /// route, stealing, totals, and sheds per SLO class.
+    pub fn stats_json(&self) -> String {
+        let replicas: Vec<Json> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                let s = r.snapshot();
+                let by = r.gauges.completed_by_slo();
+                let by_slo = Json::obj(
+                    Slo::ALL
+                        .iter()
+                        .map(|c| (c.name(), Json::num(by[c.index()] as f64)))
+                        .collect(),
+                );
+                Json::obj(vec![
+                    ("id", Json::num(r.id as f64)),
+                    ("tier", Json::str(r.tier.slo.name())),
+                    ("max_batch", Json::num(r.tier.max_batch as f64)),
+                    ("queued", Json::num(s.queued as f64)),
+                    ("pending_steps", Json::num(s.pending_steps as f64)),
+                    ("lazy_ratio", Json::num(s.lazy_ratio)),
+                    ("completed",
+                     Json::num(r.gauges.completed.load(Ordering::Relaxed)
+                               as f64)),
+                    ("completed_by_slo", by_slo),
+                    ("steals",
+                     Json::num(r.gauges.steals.load(Ordering::Relaxed)
+                               as f64)),
+                    ("stolen",
+                     Json::num(r.gauges.stolen.load(Ordering::Relaxed)
+                               as f64)),
+                    ("finished", Json::Bool(s.finished)),
+                ])
+            })
+            .collect();
+        let sheds = self.shed_by_slo();
+        let shed_by_slo = Json::obj(
+            Slo::ALL
+                .iter()
+                .map(|c| (c.name(), Json::num(sheds[c.index()] as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("replicas", Json::arr(replicas)),
+            ("route", Json::str(self.route.name())),
+            ("stealing", Json::Bool(self.stealing())),
+            ("queued", Json::num(self.total_queued() as f64)),
+            ("completed", Json::num(self.total_completed() as f64)),
+            ("shed", Json::num(self.shed_count() as f64)),
+            ("shed_by_slo", shed_by_slo),
+            ("steals", Json::num(self.total_steals() as f64)),
+            ("lazy_ratio", Json::num(self.overall_lazy())),
+        ])
+        .to_string()
     }
 
     /// Drain and stop every replica, returning the aggregated report.
@@ -209,7 +371,11 @@ impl Router {
             rep.steals = h.gauges.steals.load(Ordering::Relaxed);
             rep.stolen = h.gauges.stolen.load(Ordering::Relaxed);
         }
-        PoolReport { replicas: reports, shed: self.shed_count() }
+        PoolReport {
+            replicas: reports,
+            shed: self.shed_count(),
+            shed_by_slo: self.shed_by_slo(),
+        }
     }
 }
 
@@ -224,11 +390,46 @@ pub fn lazy_cost(snap: &GaugeSnapshot) -> f64 {
 /// testable without threads. Finished (drained or dead) replicas are
 /// excluded up front: their snapshot cost of 0 would otherwise rank them
 /// *first* under jsq/lazy, making every dispatch pay a futile `try_send`
-/// against a closed queue before reaching a live replica.
-pub fn candidate_order(route: RoutePolicy, snaps: &[GaugeSnapshot],
-                       rr: usize) -> Vec<usize> {
+/// against a closed queue before reaching a live replica. So are
+/// replicas whose tier cannot honor the request's SLO class.
+///
+/// A replica also has to physically *fit* the request: `lanes` is the
+/// request's lane count (2 under CFG), and a replica whose batch width
+/// is narrower can never plan a round containing it — admitting it
+/// anyway would wedge the worker in a no-progress spin (the request can
+/// never be scheduled), so such replicas are filtered here and the
+/// request sheds with a structured error instead. In particular a
+/// `lat:b1` tier only serves `cfg_scale: 1.0` (single-lane) requests.
+///
+/// Best-effort requests use the configured route policy over every
+/// eligible replica. SLO-tagged requests use tier preference instead:
+/// matching-tier replicas first, then best-effort spill, each group
+/// internally ordered by the SLO's own cost model (lazy-discounted
+/// backlog for latency, batch width for throughput). An empty return
+/// means no live replica can honor the request — the dispatcher sheds.
+pub fn candidate_order(route: RoutePolicy, slo: Slo, lanes: usize,
+                       snaps: &[GaugeSnapshot], rr: usize) -> Vec<usize> {
     let n = snaps.len();
-    let mut idx: Vec<usize> = (0..n).filter(|&i| !snaps[i].finished).collect();
+    let live: Vec<usize> = (0..n)
+        .filter(|&i| !snaps[i].finished && snaps[i].admits(slo, lanes))
+        .collect();
+    if slo == Slo::Besteffort {
+        let mut idx = live;
+        order_group_by_route(route, snaps, rr, &mut idx);
+        return idx;
+    }
+    let (mut pref, mut spill): (Vec<usize>, Vec<usize>) =
+        live.into_iter().partition(|&i| snaps[i].slo == slo);
+    order_group_by_slo(slo, snaps, &mut pref);
+    order_group_by_slo(slo, snaps, &mut spill);
+    pref.extend(spill);
+    pref
+}
+
+/// Order one candidate group under the configured route policy
+/// (best-effort traffic).
+fn order_group_by_route(route: RoutePolicy, snaps: &[GaugeSnapshot],
+                        rr: usize, idx: &mut Vec<usize>) {
     match route {
         RoutePolicy::RoundRobin => {
             // rotate over the live set (identical to the old full-pool
@@ -251,7 +452,39 @@ pub fn candidate_order(route: RoutePolicy, snaps: &[GaugeSnapshot],
             });
         }
     }
-    idx
+}
+
+/// Order one candidate group by an SLO class's own cost model,
+/// independent of the pool's route policy:
+/// * latency — lowest lazy-discounted backlog first (the replica that
+///   will start the request soonest), narrowest batch on ties (less
+///   co-batched interference), then fewest queued, then index;
+/// * throughput — widest batch first (most lanes per invocation), then
+///   lowest lazy-discounted backlog, then index.
+fn order_group_by_slo(slo: Slo, snaps: &[GaugeSnapshot],
+                      idx: &mut Vec<usize>) {
+    match slo {
+        Slo::Latency => idx.sort_by(|&a, &b| {
+            lazy_cost(&snaps[a])
+                .partial_cmp(&lazy_cost(&snaps[b]))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| snaps[a].max_batch.cmp(&snaps[b].max_batch))
+                .then_with(|| snaps[a].queued.cmp(&snaps[b].queued))
+                .then_with(|| a.cmp(&b))
+        }),
+        Slo::Throughput => idx.sort_by(|&a, &b| {
+            snaps[b]
+                .max_batch
+                .cmp(&snaps[a].max_batch)
+                .then_with(|| {
+                    lazy_cost(&snaps[a])
+                        .partial_cmp(&lazy_cost(&snaps[b]))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .then_with(|| a.cmp(&b))
+        }),
+        Slo::Besteffort => {}
+    }
 }
 
 #[cfg(test)]
@@ -264,26 +497,41 @@ mod tests {
             pending_steps: steps,
             lazy_ratio: lazy,
             finished: false,
+            slo: Slo::Besteffort,
+            max_batch: 8,
         }
+    }
+
+    fn tiered(mut s: GaugeSnapshot, slo: Slo, max_batch: usize)
+              -> GaugeSnapshot {
+        s.slo = slo;
+        s.max_batch = max_batch;
+        s
+    }
+
+    /// Shorthand: single-lane best-effort request under the given route.
+    fn order_be(route: RoutePolicy, snaps: &[GaugeSnapshot], rr: usize)
+                -> Vec<usize> {
+        candidate_order(route, Slo::Besteffort, 1, snaps, rr)
     }
 
     #[test]
     fn rr_rotates() {
         let s = vec![snap(0, 0, 0.0); 3];
-        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 0), vec![0, 1, 2]);
-        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 1), vec![1, 2, 0]);
-        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 4), vec![1, 2, 0]);
+        assert_eq!(order_be(RoutePolicy::RoundRobin, &s, 0), vec![0, 1, 2]);
+        assert_eq!(order_be(RoutePolicy::RoundRobin, &s, 1), vec![1, 2, 0]);
+        assert_eq!(order_be(RoutePolicy::RoundRobin, &s, 4), vec![1, 2, 0]);
     }
 
     #[test]
     fn jsq_picks_shortest() {
         let s = vec![snap(4, 80, 0.0), snap(1, 20, 0.0), snap(2, 40, 0.0)];
-        assert_eq!(candidate_order(RoutePolicy::Jsq, &s, 0)[0], 1);
+        assert_eq!(order_be(RoutePolicy::Jsq, &s, 0)[0], 1);
         // tie → lowest index (replicas 0 and 1 both queue 2), and the
         // rr cursor must not perturb jsq ordering
         let t = vec![snap(2, 0, 0.0), snap(2, 0, 0.0), snap(1, 0, 0.0)];
-        assert_eq!(candidate_order(RoutePolicy::Jsq, &t, 7), vec![2, 0, 1]);
-        assert_eq!(candidate_order(RoutePolicy::Jsq, &t, 0), vec![2, 0, 1]);
+        assert_eq!(order_be(RoutePolicy::Jsq, &t, 7), vec![2, 0, 1]);
+        assert_eq!(order_be(RoutePolicy::Jsq, &t, 0), vec![2, 0, 1]);
     }
 
     #[test]
@@ -291,17 +539,17 @@ mod tests {
         let mut s = vec![snap(0, 0, 0.0), snap(3, 60, 0.0), snap(1, 20, 0.0)];
         s[0].finished = true; // dead replica: snapshot cost 0 would
                               // otherwise win jsq/lazy outright
-        assert_eq!(candidate_order(RoutePolicy::Jsq, &s, 0), vec![2, 1]);
-        assert_eq!(candidate_order(RoutePolicy::Lazy, &s, 0), vec![2, 1]);
+        assert_eq!(order_be(RoutePolicy::Jsq, &s, 0), vec![2, 1]);
+        assert_eq!(order_be(RoutePolicy::Lazy, &s, 0), vec![2, 1]);
         // rr rotates over the live set only
-        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 0), vec![1, 2]);
-        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 1), vec![2, 1]);
-        assert_eq!(candidate_order(RoutePolicy::RoundRobin, &s, 2), vec![1, 2]);
+        assert_eq!(order_be(RoutePolicy::RoundRobin, &s, 0), vec![1, 2]);
+        assert_eq!(order_be(RoutePolicy::RoundRobin, &s, 1), vec![2, 1]);
+        assert_eq!(order_be(RoutePolicy::RoundRobin, &s, 2), vec![1, 2]);
         // a fully-finished pool yields no candidates at all
         s[1].finished = true;
         s[2].finished = true;
-        assert!(candidate_order(RoutePolicy::Jsq, &s, 0).is_empty());
-        assert!(candidate_order(RoutePolicy::RoundRobin, &s, 3).is_empty());
+        assert!(order_be(RoutePolicy::Jsq, &s, 0).is_empty());
+        assert!(order_be(RoutePolicy::RoundRobin, &s, 3).is_empty());
     }
 
     #[test]
@@ -309,10 +557,122 @@ mod tests {
         // replica 0: 100 steps at Γ=0.6 → cost 40
         // replica 1:  60 steps at Γ=0.0 → cost 60
         let s = vec![snap(5, 100, 0.6), snap(3, 60, 0.0)];
-        assert_eq!(candidate_order(RoutePolicy::Lazy, &s, 0)[0], 0);
+        assert_eq!(order_be(RoutePolicy::Lazy, &s, 0)[0], 0);
         // without laziness the same backlogs invert the choice
         let s = vec![snap(5, 100, 0.0), snap(3, 60, 0.0)];
-        assert_eq!(candidate_order(RoutePolicy::Lazy, &s, 0)[0], 1);
+        assert_eq!(order_be(RoutePolicy::Lazy, &s, 0)[0], 1);
+    }
+
+    #[test]
+    fn slo_requests_prefer_matching_tier_then_spill() {
+        // pool: 0 = latency B1, 1 = throughput B8, 2 = best-effort B4
+        let s = vec![
+            tiered(snap(0, 0, 0.0), Slo::Latency, 1),
+            tiered(snap(0, 0, 0.0), Slo::Throughput, 8),
+            tiered(snap(0, 0, 0.0), Slo::Besteffort, 4),
+        ];
+        // latency request: its own tier first, best-effort spill second,
+        // the throughput replica excluded outright — regardless of route
+        for route in [RoutePolicy::RoundRobin, RoutePolicy::Jsq,
+                      RoutePolicy::Lazy] {
+            assert_eq!(candidate_order(route, Slo::Latency, 1, &s, 3),
+                       vec![0, 2], "route {}", route.name());
+            assert_eq!(candidate_order(route, Slo::Throughput, 1, &s, 3),
+                       vec![1, 2], "route {}", route.name());
+        }
+        // best-effort requests see every live replica
+        assert_eq!(order_be(RoutePolicy::Jsq, &s, 0).len(), 3);
+    }
+
+    #[test]
+    fn slo_spill_keeps_tier_preference_under_load() {
+        // the latency replica is BUSIER than the best-effort spill
+        // target, but tier preference is a hard ordering: spill is the
+        // fallback, not a cost competitor (keeping latency traffic off
+        // shared replicas while its tier can still absorb it)
+        let s = vec![
+            tiered(snap(3, 60, 0.0), Slo::Latency, 1),
+            tiered(snap(0, 0, 0.0), Slo::Besteffort, 4),
+        ];
+        assert_eq!(candidate_order(RoutePolicy::Jsq, Slo::Latency, 1, &s, 0),
+                   vec![0, 1]);
+    }
+
+    #[test]
+    fn latency_tier_orders_by_lazy_discounted_backlog() {
+        // two latency replicas: 0 has more raw steps but Γ=0.8 → cost
+        // 20; 1 has fewer steps at Γ=0 → cost 40. The lazier one wins.
+        let s = vec![
+            tiered(snap(4, 100, 0.8), Slo::Latency, 1),
+            tiered(snap(2, 40, 0.0), Slo::Latency, 1),
+        ];
+        assert_eq!(candidate_order(RoutePolicy::Jsq, Slo::Latency, 1, &s, 0),
+                   vec![0, 1]);
+    }
+
+    #[test]
+    fn throughput_tier_prefers_widest_batch() {
+        let s = vec![
+            tiered(snap(0, 0, 0.0), Slo::Throughput, 4),
+            tiered(snap(0, 0, 0.0), Slo::Throughput, 16),
+            tiered(snap(0, 0, 0.0), Slo::Throughput, 8),
+        ];
+        assert_eq!(
+            candidate_order(RoutePolicy::Jsq, Slo::Throughput, 1, &s, 0),
+            vec![1, 2, 0]
+        );
+        // equal widths fall back to lazy-discounted backlog
+        let s = vec![
+            tiered(snap(2, 80, 0.0), Slo::Throughput, 8),
+            tiered(snap(2, 80, 0.9), Slo::Throughput, 8),
+        ];
+        assert_eq!(
+            candidate_order(RoutePolicy::Jsq, Slo::Throughput, 1, &s, 0),
+            vec![1, 0]
+        );
+    }
+
+    #[test]
+    fn requests_wider_than_a_replicas_batch_are_filtered() {
+        // a CFG request occupies 2 lanes; a B1 replica can never plan a
+        // round containing it — admitting it anyway would wedge the
+        // worker in a no-progress spin, so it must not be a candidate
+        let s = vec![
+            tiered(snap(0, 0, 0.0), Slo::Latency, 1),
+            tiered(snap(0, 0, 0.0), Slo::Besteffort, 4),
+        ];
+        // single-lane latency request: B1 tier first, spill second
+        assert_eq!(candidate_order(RoutePolicy::Jsq, Slo::Latency, 1, &s, 0),
+                   vec![0, 1]);
+        // 2-lane latency request: only the B4 spill replica fits
+        assert_eq!(candidate_order(RoutePolicy::Jsq, Slo::Latency, 2, &s, 0),
+                   vec![1]);
+        // 2-lane latency request against a B1-only pool: shed, not hang
+        let only_b1 = vec![tiered(snap(0, 0, 0.0), Slo::Latency, 1)];
+        assert!(candidate_order(RoutePolicy::Jsq, Slo::Latency, 2,
+                                &only_b1, 0).is_empty());
+        // best-effort traffic obeys the same fit rule
+        assert_eq!(order_be(RoutePolicy::Jsq, &s, 0), vec![0, 1]);
+        assert_eq!(candidate_order(RoutePolicy::Jsq, Slo::Besteffort, 2,
+                                   &s, 0),
+                   vec![1]);
+    }
+
+    #[test]
+    fn incompatible_pool_yields_no_candidates() {
+        // a latency request against a throughput-only pool sheds rather
+        // than silently parking on a deep-batch replica
+        let s = vec![
+            tiered(snap(0, 0, 0.0), Slo::Throughput, 8),
+            tiered(snap(0, 0, 0.0), Slo::Throughput, 8),
+        ];
+        assert!(candidate_order(RoutePolicy::Jsq, Slo::Latency, 1, &s, 0)
+            .is_empty());
+        // ...and dead matching-tier replicas don't resurrect routing
+        let mut s = vec![tiered(snap(0, 0, 0.0), Slo::Latency, 1)];
+        s[0].finished = true;
+        assert!(candidate_order(RoutePolicy::Jsq, Slo::Latency, 1, &s, 0)
+            .is_empty());
     }
 
     #[test]

@@ -80,14 +80,18 @@ struct SimActive {
 /// The synthetic engine. Single-threaded like the real one; a pool
 /// replica owns exactly one.
 pub struct SimEngine {
+    /// The parameters this engine was built with.
     pub spec: SimSpec,
+    /// Per-(layer,module) laziness accounting.
     pub layer_stats: LayerStats,
+    /// Serving-level accounting.
     pub serve_stats: ServeStats,
     active: Vec<SimActive>,
     next_id: u64,
 }
 
 impl SimEngine {
+    /// Build an engine with the given parameters.
     pub fn new(spec: SimSpec) -> SimEngine {
         let depth = spec.depth;
         SimEngine {
@@ -219,6 +223,7 @@ impl PoolEngine for SimEngine {
                     id: a.req.id,
                     class_label: a.req.class_label,
                     steps: a.req.steps,
+                    slo: a.req.slo,
                     image: sim_image(&a.req, img_elems),
                     lazy_ratio: skipped as f64 / seen.max(1) as f64,
                     attn_lazy_ratio: attn_skip as f64 / attn_seen.max(1) as f64,

@@ -19,18 +19,26 @@
 //! by exact, known amounts — never stored absolutely — so concurrent
 //! dispatch rollbacks and the panic handler compose with migration.
 
-use crate::coordinator::pool::replica::{dec, PoolJob, ReplicaGauges};
+use crate::coordinator::pool::replica::{dec, PoolJob, ReplicaGauges,
+                                        ReplicaTier};
 use crate::coordinator::pool::router::lazy_cost;
 use crate::util::threadpool::BoundedQueue;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// One replica's stealable surface: its input queue (thieves take from
-/// the back; the owner keeps popping the front) and its load gauges.
+/// the back; the owner keeps popping the front), its load gauges, and
+/// its tier (the SLO-compatibility constraint on what it may steal).
 pub struct StealPeer {
+    /// Replica id (stable pool index).
     pub id: usize,
+    /// The replica's input queue; thieves take from the back.
     pub queue: BoundedQueue<PoolJob>,
+    /// The replica's live gauges (migration moves accounting here).
     pub gauges: Arc<ReplicaGauges>,
+    /// The replica's provisioning: a thief only pulls jobs whose SLO
+    /// class its own tier can honor ([`ReplicaTier::can_serve`]).
+    pub tier: ReplicaTier,
 }
 
 /// Pool-level rebalancer shared by every replica worker. Constructed
@@ -47,6 +55,9 @@ pub struct Rebalancer {
 }
 
 impl Rebalancer {
+    /// Construct with the pool-default in-engine admission window
+    /// (tiered replicas override it per replica via
+    /// [`ReplicaTier::steal_window`]).
     pub fn new(admit_window: usize) -> Arc<Rebalancer> {
         Arc::new(Rebalancer {
             peers: Mutex::new(Vec::new()),
@@ -73,10 +84,13 @@ impl Rebalancer {
 
     /// Steal one queued job for replica `thief`, from the sibling with
     /// the highest lazy-discounted effective backlog that actually has a
-    /// queued (not-yet-started) job. Returns `None` when nothing is
-    /// stealable. On success the job's gauge accounting has already
-    /// moved to the thief — the caller admits the job as if the router
-    /// had dispatched it here.
+    /// queued (not-yet-started) job the thief's tier can honor — a B1
+    /// latency replica never pulls a throughput job off a B8 sibling
+    /// (and vice versa), nor any job whose lane count exceeds its batch
+    /// width; ineligible jobs are skipped in place, not reordered.
+    /// Returns `None` when nothing is stealable. On success the job's
+    /// gauge accounting has already moved to the thief — the caller
+    /// admits the job as if the router had dispatched it here.
     pub fn steal_for(&self, thief: usize) -> Option<PoolJob> {
         let peers = self.peers.lock().unwrap_or_else(|p| p.into_inner());
         let me = peers.iter().find(|p| p.id == thief)?;
@@ -86,7 +100,7 @@ impl Rebalancer {
             .iter()
             .enumerate()
             .filter(|(_, p)| p.id != thief && !p.queue.is_empty())
-            .map(|(i, p)| (lazy_cost(&p.gauges.snapshot()), i))
+            .map(|(i, p)| (lazy_cost(&p.gauges.snapshot(&p.tier)), i))
             .collect();
         victims.sort_by(|a, b| {
             b.0.partial_cmp(&a.0)
@@ -95,7 +109,14 @@ impl Rebalancer {
         });
         for (_, vi) in victims {
             let victim = &peers[vi];
-            if let Some(job) = victim.queue.steal_back() {
+            // eligibility is the router's candidate predicate
+            // (`tier_admits`): the thief's tier must honor the job's
+            // SLO class AND physically fit its lane count — a B1
+            // replica admitting a 2-lane CFG job could never plan a
+            // round containing it
+            if let Some(job) = victim.queue.steal_back_matching(|j| {
+                me.tier.admits(j.req.slo, j.req.lanes())
+            }) {
                 let steps = job.req.steps;
                 // gauge transfer, thief first: pool totals never
                 // under-count mid-migration, and the victim side uses
@@ -120,30 +141,42 @@ impl Rebalancer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Slo;
     use crate::coordinator::request::{Request, RequestResult};
     use std::sync::mpsc;
 
     /// A peer with no worker thread behind it — gauges and queue are
     /// driven by hand so migrations are fully deterministic.
     fn peer(id: usize) -> StealPeer {
+        peer_tiered(id, ReplicaTier::default())
+    }
+
+    fn peer_tiered(id: usize, tier: ReplicaTier) -> StealPeer {
         StealPeer {
             id,
             queue: BoundedQueue::new(64),
             gauges: Arc::new(ReplicaGauges::default()),
+            tier,
         }
     }
 
     fn enqueue(p: &StealPeer, steps: usize, seed: u64)
                -> mpsc::Receiver<RequestResult> {
+        enqueue_slo(p, steps, seed, Slo::Besteffort)
+    }
+
+    fn enqueue_slo(p: &StealPeer, steps: usize, seed: u64, slo: Slo)
+                   -> mpsc::Receiver<RequestResult> {
         let (tx, rx) = mpsc::channel();
-        // mirror the router's optimistic accounting at dispatch
+        // mirror the router's optimistic accounting at dispatch;
+        // single-lane (no CFG) so B1 thieves are lane-eligible and the
+        // tests exercise the SLO constraint in isolation
+        let mut req = Request::new(0, 1, steps, seed).with_slo(slo);
+        req.cfg_scale = 1.0;
         p.gauges.queued.fetch_add(1, Ordering::Relaxed);
         p.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
         p.queue
-            .try_push(PoolJob {
-                req: Request::new(0, 1, steps, seed),
-                respond: tx,
-            })
+            .try_push(PoolJob { req, respond: tx })
             .map_err(|_| "push")
             .unwrap();
         rx
@@ -209,6 +242,107 @@ mod tests {
         let peers = rb.peers.lock().unwrap();
         assert_eq!(peers[0].gauges.queued.load(Ordering::Relaxed), 1,
                    "gauges untouched when nothing migrates");
+    }
+
+    #[test]
+    fn latency_thief_never_steals_a_throughput_job() {
+        // victim: B8 throughput replica holding one throughput job;
+        // thief: B1 latency replica — its tier cannot honor the job's
+        // SLO, so the steal must not happen (the satellite's "a B1
+        // latency replica never steals a B8-only throughput job")
+        let rb = Rebalancer::new(1);
+        rb.register(vec![
+            peer_tiered(0, ReplicaTier::new(Slo::Throughput, 8)),
+            peer_tiered(1, ReplicaTier::new(Slo::Latency, 1)),
+        ]);
+        let peers = rb.peers.lock().unwrap();
+        let _rx = enqueue_slo(&peers[0], 9, 1, Slo::Throughput);
+        drop(peers);
+        assert!(rb.steal_for(1).is_none(),
+                "latency tier must not migrate a throughput job");
+        let peers = rb.peers.lock().unwrap();
+        assert_eq!(peers[0].gauges.queued.load(Ordering::Relaxed), 1,
+                   "job and gauges stay with the victim");
+        assert_eq!(peers[0].gauges.stolen.load(Ordering::Relaxed), 0);
+        drop(peers);
+        assert_eq!(rb.total_steals(), 0);
+        // the throughput sibling CAN take it
+        rb.register(vec![
+            peer_tiered(0, ReplicaTier::new(Slo::Throughput, 8)),
+            peer_tiered(1, ReplicaTier::new(Slo::Throughput, 8)),
+        ]);
+        let peers = rb.peers.lock().unwrap();
+        let _rx = enqueue_slo(&peers[0], 9, 1, Slo::Throughput);
+        drop(peers);
+        assert!(rb.steal_for(1).is_some());
+    }
+
+    #[test]
+    fn constrained_thief_skips_over_ineligible_tail() {
+        // victim queue (front→back): [besteffort, throughput] — the
+        // newest job is off-limits to a latency thief, but the older
+        // best-effort one is fair game and must migrate without
+        // disturbing the throughput job
+        let rb = Rebalancer::new(1);
+        rb.register(vec![
+            peer_tiered(0, ReplicaTier::new(Slo::Throughput, 8)),
+            peer_tiered(1, ReplicaTier::new(Slo::Latency, 1)),
+        ]);
+        let peers = rb.peers.lock().unwrap();
+        let _rx1 = enqueue_slo(&peers[0], 3, 10, Slo::Besteffort);
+        let _rx2 = enqueue_slo(&peers[0], 4, 20, Slo::Throughput);
+        drop(peers);
+        let job = rb.steal_for(1).expect("best-effort job migrates");
+        assert_eq!(job.req.seed, 10, "the eligible (older) job was taken");
+        let peers = rb.peers.lock().unwrap();
+        assert_eq!(peers[0].queue.len(), 1, "throughput job left in place");
+        assert_eq!(peers[0].gauges.pending_steps.load(Ordering::Relaxed), 4);
+        assert_eq!(peers[1].gauges.pending_steps.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn narrow_thief_never_steals_a_job_wider_than_its_batch() {
+        // a 2-lane CFG best-effort job is SLO-compatible with a latency
+        // thief, but a B1 replica could never plan a round containing
+        // it — the lane-fit check must block the migration
+        let rb = Rebalancer::new(1);
+        rb.register(vec![
+            peer_tiered(0, ReplicaTier::new(Slo::Throughput, 8)),
+            peer_tiered(1, ReplicaTier::new(Slo::Latency, 1)),
+        ]);
+        let peers = rb.peers.lock().unwrap();
+        let (tx, _rx) = mpsc::channel();
+        let req = Request::new(0, 1, 5, 77); // cfg_scale 1.5 → 2 lanes
+        assert_eq!(req.lanes(), 2);
+        peers[0].gauges.queued.fetch_add(1, Ordering::Relaxed);
+        peers[0].gauges.pending_steps.fetch_add(5, Ordering::Relaxed);
+        peers[0]
+            .queue
+            .try_push(PoolJob { req, respond: tx })
+            .map_err(|_| "push")
+            .unwrap();
+        drop(peers);
+        assert!(rb.steal_for(1).is_none(),
+                "B1 thief must not take a 2-lane job");
+        // a wide sibling can take it
+        rb.register(vec![
+            peer_tiered(0, ReplicaTier::new(Slo::Throughput, 8)),
+            peer_tiered(1, ReplicaTier::new(Slo::Besteffort, 8)),
+        ]);
+        let peers = rb.peers.lock().unwrap();
+        let (tx, _rx2) = mpsc::channel();
+        peers[0].gauges.queued.fetch_add(1, Ordering::Relaxed);
+        peers[0].gauges.pending_steps.fetch_add(5, Ordering::Relaxed);
+        peers[0]
+            .queue
+            .try_push(PoolJob {
+                req: Request::new(0, 1, 5, 78),
+                respond: tx,
+            })
+            .map_err(|_| "push")
+            .unwrap();
+        drop(peers);
+        assert!(rb.steal_for(1).is_some());
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Request types and per-request trajectory state.
 
+use crate::config::Slo;
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
 use std::time::Instant;
@@ -13,11 +14,28 @@ pub struct Request {
     pub seed: u64,
     /// CFG guidance scale; 1.0 disables the uncond lane.
     pub cfg_scale: f32,
+    /// Service-level objective class (wire `"slo"` field; defaults to
+    /// best-effort for legacy request lines). The pool router uses it
+    /// for tier-aware placement.
+    pub slo: Slo,
 }
 
 impl Request {
     pub fn new(id: u64, class_label: usize, steps: usize, seed: u64) -> Request {
-        Request { id, class_label, steps, seed, cfg_scale: 1.5 }
+        Request {
+            id,
+            class_label,
+            steps,
+            seed,
+            cfg_scale: 1.5,
+            slo: Slo::Besteffort,
+        }
+    }
+
+    /// Builder-style SLO tag (tests/benches).
+    pub fn with_slo(mut self, slo: Slo) -> Request {
+        self.slo = slo;
+        self
     }
 
     /// Number of batch lanes this request occupies (CFG doubles).
@@ -115,6 +133,9 @@ pub struct RequestResult {
     pub id: u64,
     pub class_label: usize,
     pub steps: usize,
+    /// SLO class the request carried (echoed on the wire; per-tier
+    /// completion accounting in the pool).
+    pub slo: Slo,
     /// Final sample [C, H, W] flattened.
     pub image: Tensor,
     pub lazy_ratio: f64,
@@ -128,6 +149,14 @@ pub struct RequestResult {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn requests_default_to_besteffort_slo() {
+        let r = Request::new(1, 0, 10, 0);
+        assert_eq!(r.slo, Slo::Besteffort);
+        let r = r.with_slo(Slo::Latency);
+        assert_eq!(r.slo, Slo::Latency);
+    }
 
     #[test]
     fn lanes_follow_cfg() {

@@ -1,21 +1,30 @@
 //! TCP JSON-lines serving front-end with admission control.
 //!
 //! Protocol (one JSON object per line; see docs/SERVING.md):
-//!   request : {"label": 3, "steps": 20, "seed": 1, "cfg_scale": 1.5}
+//!   request : {"label": 3, "steps": 20, "seed": 1, "cfg_scale": 1.5,
+//!              "slo": "latency"}
 //!   response: {"id": 7, "latency_ms": 123.4, "lazy_ratio": 0.31,
-//!              "attn_lazy": 0.35, "ffn_lazy": 0.27, "steps": 20}
+//!              "attn_lazy": 0.35, "ffn_lazy": 0.27, "steps": 20,
+//!              "slo": "latency"}
 //!   shed    : {"error": "queue full"}
+//!   stats   : the bare verb line `STATS` returns one JSON object with
+//!             the live pool gauges (replica-pool back-end only)
 //!
 //! `steps` must be a positive integer and `seed` a non-negative integer
 //! below 2^53; malformed fields get a structured `{"error": ...}` line.
+//! `slo` is optional ("latency"|"throughput"|"besteffort"); legacy lines
+//! without it default to best-effort, so pre-SLO clients keep working
+//! unchanged.
 //!
 //! Two back-ends share this front-end:
 //! * [`serve`] — the legacy single-engine loop (one denoise loop total);
 //! * [`serve_pool`] — the replica pool: acceptor threads feed the
 //!   [`Router`], which places each request on one of N replica engines
-//!   (round-robin / join-shortest-queue / lazy-aware). Shutdown drains:
+//!   (round-robin / join-shortest-queue / lazy-aware for best-effort
+//!   traffic, tier-preference for SLO-tagged requests). Shutdown drains:
 //!   replicas finish in-flight trajectories before exit.
 
+use crate::config::Slo;
 use crate::coordinator::engine::Engine;
 use crate::coordinator::pool::{PoolReport, Router};
 use crate::coordinator::request::{Request, RequestResult};
@@ -79,8 +88,15 @@ pub fn parse_request_line(line: &str) -> Result<Request> {
         None => 1.5,
         Some(v) => v.as_f64().context("cfg_scale must be a number")? as f32,
     };
+    // optional, backward-compatible: legacy lines have no "slo" field
+    let slo = match j.get("slo") {
+        None => Slo::Besteffort,
+        Some(v) => Slo::parse(v.as_str().context(
+            "slo must be a string: latency|throughput|besteffort")?)?,
+    };
     let mut r = Request::new(0, label, steps, seed);
     r.cfg_scale = cfg_scale;
+    r.slo = slo;
     Ok(r)
 }
 
@@ -94,6 +110,7 @@ pub fn format_response(res: &RequestResult) -> String {
         ("lazy_ratio", Json::num(res.lazy_ratio)),
         ("attn_lazy", Json::num(res.attn_lazy_ratio)),
         ("ffn_lazy", Json::num(res.ffn_lazy_ratio)),
+        ("slo", Json::str(res.slo.name())),
     ])
     .to_string()
 }
@@ -104,34 +121,49 @@ pub fn error_line(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).to_string()
 }
 
+/// Shed reason for a request no replica in the pool can ever serve
+/// (SLO class / lane-count mismatch) — distinct from `queue full` so
+/// clients don't retry a condition that cannot clear.
+pub const UNSERVABLE_MSG: &str =
+    "unservable: no live replica matches this request's SLO class and \
+     lane count";
+
 /// Shared per-connection read loop. `submit` hands an admitted request
-/// plus its response channel to a back-end; `false` means shed (the
-/// client gets a structured `queue full` line).
-fn serve_lines<F>(stream: TcpStream, submit: F)
+/// plus its response channel to a back-end; `Err(msg)` means shed, with
+/// `msg` telling the client why (`queue full` for transient overload,
+/// [`UNSERVABLE_MSG`] for a permanent pool-shape mismatch). `stats`
+/// answers the `STATS` verb — a bare non-JSON line, so it can never
+/// collide with a request object — with one JSON line of live gauges.
+fn serve_lines<F, S>(stream: TcpStream, submit: F, stats: S)
 where
-    F: Fn(Request, mpsc::Sender<RequestResult>) -> bool,
+    F: Fn(Request, mpsc::Sender<RequestResult>) -> Result<(), &'static str>,
+    S: Fn() -> String,
 {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(stream.try_clone().expect("clone stream"));
     let mut writer = stream;
     for line in reader.lines() {
         let Ok(line) = line else { break };
-        if line.trim().is_empty() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
             continue;
         }
-        let reply = match parse_request_line(&line) {
-            Ok(req) => {
-                let (tx, rx) = mpsc::channel();
-                if submit(req, tx) {
-                    match rx.recv() {
-                        Ok(res) => format_response(&res),
-                        Err(_) => error_line("engine stopped"),
+        let reply = if trimmed == "STATS" {
+            stats()
+        } else {
+            match parse_request_line(trimmed) {
+                Ok(req) => {
+                    let (tx, rx) = mpsc::channel();
+                    match submit(req, tx) {
+                        Ok(()) => match rx.recv() {
+                            Ok(res) => format_response(&res),
+                            Err(_) => error_line("engine stopped"),
+                        },
+                        Err(msg) => error_line(msg),
                     }
-                } else {
-                    error_line("queue full")
                 }
+                Err(e) => error_line(&format!("{e:#}")),
             }
-            Err(e) => error_line(&format!("{e:#}")),
         };
         if writer.write_all(reply.as_bytes()).is_err()
             || writer.write_all(b"\n").is_err()
@@ -160,9 +192,18 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> 
                 Ok((stream, _)) => {
                     let q3 = q2.clone();
                     std::thread::spawn(move || {
-                        serve_lines(stream, move |req, tx| {
-                            q3.try_push(Pending { req, respond: tx }).is_ok()
-                        })
+                        serve_lines(
+                            stream,
+                            move |req, tx| {
+                                q3.try_push(Pending { req, respond: tx })
+                                    .map_err(|_| "queue full")
+                            },
+                            // live gauges need the pool router; this
+                            // legacy single-engine loop (library use —
+                            // the CLI always runs the pool) has none
+                            || error_line(
+                                "STATS needs the replica-pool back-end"),
+                        )
                     });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -234,8 +275,24 @@ pub fn serve_pool(router: Router, addr: &str,
             match listener.accept() {
                 Ok((stream, _)) => {
                     let r3 = r2.clone();
+                    let r4 = r2.clone();
                     std::thread::spawn(move || {
-                        serve_lines(stream, move |req, tx| r3.dispatch(req, tx))
+                        serve_lines(
+                            stream,
+                            move |req, tx| {
+                                use crate::coordinator::pool::DispatchOutcome;
+                                match r3.dispatch_outcome(req, tx) {
+                                    DispatchOutcome::Admitted => Ok(()),
+                                    DispatchOutcome::ShedCapacity => {
+                                        Err("queue full")
+                                    }
+                                    DispatchOutcome::ShedUnservable => {
+                                        Err(UNSERVABLE_MSG)
+                                    }
+                                }
+                            },
+                            move || r4.stats_json(),
+                        )
                     });
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -376,6 +433,7 @@ mod tests {
             id: 7,
             class_label: 3,
             steps: 20,
+            slo: Slo::Latency,
             image: Tensor::zeros(&[1]),
             lazy_ratio: 0.5,
             attn_lazy_ratio: 0.6,
@@ -387,5 +445,34 @@ mod tests {
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.req("id").unwrap().as_usize().unwrap(), 7);
         assert!((j.req("lazy_ratio").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
+        // the SLO class is echoed so clients can verify tier handling
+        assert_eq!(j.req("slo").unwrap().as_str().unwrap(), "latency");
+    }
+
+    #[test]
+    fn slo_round_trips_and_legacy_lines_default() {
+        // legacy line (no slo field): best-effort, exactly as before
+        let r = parse_request_line(r#"{"label": 1, "steps": 4}"#).unwrap();
+        assert_eq!(r.slo, Slo::Besteffort);
+        // full spellings and short aliases round-trip through the parser
+        for (wire, want) in [
+            ("latency", Slo::Latency),
+            ("lat", Slo::Latency),
+            ("throughput", Slo::Throughput),
+            ("thr", Slo::Throughput),
+            ("besteffort", Slo::Besteffort),
+            ("be", Slo::Besteffort),
+        ] {
+            let line = format!(r#"{{"label": 1, "slo": "{wire}"}}"#);
+            assert_eq!(parse_request_line(&line).unwrap().slo, want,
+                       "{wire}");
+        }
+        // wrong type and unknown class get structured errors, never a
+        // silent best-effort downgrade
+        let e = parse_request_line(r#"{"label": 1, "slo": 3}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("slo"), "{e:#}");
+        let e =
+            parse_request_line(r#"{"label": 1, "slo": "gold"}"#).unwrap_err();
+        assert!(format!("{e:#}").contains("unknown SLO"), "{e:#}");
     }
 }

@@ -2,6 +2,7 @@
 //! configurable step counts, class mixes and lazy settings — the input to
 //! the latency/throughput benches (Tables 3/6) and the serve example.
 
+use crate::config::Slo;
 use crate::util::prng::Rng;
 
 /// One request in a trace.
@@ -12,6 +13,9 @@ pub struct TraceEvent {
     pub class_label: usize,
     pub steps: usize,
     pub seed: u64,
+    /// SLO class drawn from [`WorkloadSpec::slo_mix`] (best-effort when
+    /// the mix is empty).
+    pub slo: Slo,
 }
 
 /// A generated trace.
@@ -29,6 +33,10 @@ pub struct WorkloadSpec {
     pub steps_choices: Vec<usize>,
     pub num_classes: usize,
     pub seed: u64,
+    /// SLO-class mix as (class, weight) pairs; weights need not sum
+    /// to 1. Empty ⇒ every request is best-effort (and the RNG stream
+    /// is identical to pre-SLO traces, keeping old seeds reproducible).
+    pub slo_mix: Vec<(Slo, f64)>,
 }
 
 impl Default for WorkloadSpec {
@@ -39,8 +47,37 @@ impl Default for WorkloadSpec {
             steps_choices: vec![20],
             num_classes: 10,
             seed: 0,
+            slo_mix: Vec::new(),
         }
     }
+}
+
+/// Weighted draw from an SLO mix (negative weights count as zero; an
+/// all-zero mix degrades to best-effort). Zero-weight entries are
+/// skipped outright: with the draw landing exactly on 0.0, a `x -= 0`
+/// no-op followed by `x <= 0` would otherwise select a class the spec
+/// explicitly weighted to zero.
+fn draw_slo(rng: &mut Rng, mix: &[(Slo, f64)]) -> Slo {
+    let total: f64 = mix.iter().map(|(_, w)| w.max(0.0)).sum();
+    if total <= 0.0 {
+        return Slo::Besteffort;
+    }
+    let mut x = rng.uniform() as f64 * total;
+    for (slo, w) in mix {
+        if *w <= 0.0 {
+            continue;
+        }
+        x -= w;
+        if x <= 0.0 {
+            return *slo;
+        }
+    }
+    // float residue: fall back to the last positively weighted class
+    mix.iter()
+        .rev()
+        .find(|(_, w)| *w > 0.0)
+        .map(|(s, _)| *s)
+        .unwrap_or(Slo::Besteffort)
 }
 
 impl WorkloadSpec {
@@ -53,11 +90,17 @@ impl WorkloadSpec {
                 t += rng.exponential(self.rate);
             }
             let steps = self.steps_choices[rng.below(self.steps_choices.len())];
+            let slo = if self.slo_mix.is_empty() {
+                Slo::Besteffort
+            } else {
+                draw_slo(&mut rng, &self.slo_mix)
+            };
             events.push(TraceEvent {
                 at: t,
                 class_label: rng.below(self.num_classes),
                 steps,
                 seed: self.seed.wrapping_mul(0x9E37).wrapping_add(i as u64),
+                slo,
             });
         }
         Trace { events }
@@ -93,6 +136,59 @@ mod tests {
     fn deterministic() {
         let spec = WorkloadSpec { requests: 20, rate: 10.0, seed: 5, ..Default::default() };
         assert_eq!(spec.generate().events, spec.generate().events);
+    }
+
+    #[test]
+    fn empty_mix_is_besteffort_and_stream_compatible() {
+        let legacy = WorkloadSpec { requests: 16, rate: 5.0, seed: 9,
+                                    ..Default::default() };
+        let tr = legacy.generate();
+        assert!(tr.events.iter().all(|e| e.slo == Slo::Besteffort));
+        // the per-event (at, label, steps, seed) tuple stream must not
+        // change just because the SLO field exists
+        assert_eq!(legacy.generate().events, tr.events);
+    }
+
+    #[test]
+    fn slo_mix_draws_every_class_deterministically() {
+        let spec = WorkloadSpec {
+            requests: 300,
+            slo_mix: vec![(Slo::Latency, 0.3), (Slo::Throughput, 0.5),
+                          (Slo::Besteffort, 0.2)],
+            seed: 11,
+            ..Default::default()
+        };
+        let tr = spec.generate();
+        let count = |s: Slo| tr.events.iter().filter(|e| e.slo == s).count();
+        for slo in Slo::ALL {
+            assert!(count(slo) > 0, "{} never drawn", slo.name());
+        }
+        // weights steer the mix (rough bounds, deterministic seed)
+        assert!(count(Slo::Throughput) > count(Slo::Besteffort));
+        assert_eq!(spec.generate().events, tr.events, "deterministic");
+    }
+
+    #[test]
+    fn zero_weight_classes_are_never_drawn() {
+        let spec = WorkloadSpec {
+            requests: 500,
+            slo_mix: vec![(Slo::Latency, 0.0), (Slo::Throughput, 1.0)],
+            seed: 3,
+            ..Default::default()
+        };
+        assert!(spec.generate().events.iter()
+            .all(|e| e.slo == Slo::Throughput));
+    }
+
+    #[test]
+    fn degenerate_mixes_fall_back_to_besteffort() {
+        let spec = WorkloadSpec {
+            requests: 8,
+            slo_mix: vec![(Slo::Latency, 0.0), (Slo::Throughput, -1.0)],
+            ..Default::default()
+        };
+        assert!(spec.generate().events.iter()
+            .all(|e| e.slo == Slo::Besteffort));
     }
 
     #[test]

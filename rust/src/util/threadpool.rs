@@ -146,8 +146,24 @@ impl<T> BoundedQueue<T> {
     /// sibling *accelerates* the drain, it never violates it (every job
     /// still completes exactly once, just on the thief).
     pub fn steal_back(&self) -> Option<T> {
+        self.steal_back_matching(|_| true)
+    }
+
+    /// Like [`steal_back`](Self::steal_back), but only takes a job the
+    /// thief is allowed to run: scanning from the back (newest first),
+    /// removes and returns the first item for which `eligible` is true.
+    /// Items the predicate rejects stay exactly where they were, so the
+    /// owner's FIFO order is preserved. Used by SLO-constrained work
+    /// stealing — a thief must skip over jobs whose SLO class its own
+    /// tier cannot honor rather than pop-and-re-push them (which would
+    /// reorder the victim's queue and race its owner).
+    pub fn steal_back_matching<F>(&self, mut eligible: F) -> Option<T>
+    where
+        F: FnMut(&T) -> bool,
+    {
         let mut st = self.inner.q.lock().unwrap();
-        let item = st.items.pop_back();
+        let idx = st.items.iter().rposition(|it| eligible(it))?;
+        let item = st.items.remove(idx);
         if item.is_some() {
             self.inner.not_full.notify_one();
         }
@@ -314,6 +330,25 @@ mod tests {
         assert_eq!(q.steal_back(), Some(2));
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.steal_back(), None);
+    }
+
+    #[test]
+    fn steal_back_matching_skips_ineligible_newest() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        // newest is 4, but only even items are eligible → 4 goes
+        assert_eq!(q.steal_back_matching(|&v: &i32| v % 2 == 0), Some(4));
+        // newest eligible is now 2 (3 is skipped over, left in place)
+        assert_eq!(q.steal_back_matching(|&v: &i32| v % 2 == 0), Some(2));
+        // nothing eligible → None, queue untouched
+        assert_eq!(q.steal_back_matching(|&v: &i32| v > 100), None);
+        assert_eq!(q.len(), 3);
+        // owner FIFO order preserved across mid-queue removals
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(3));
     }
 
     #[test]

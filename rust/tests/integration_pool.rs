@@ -1,9 +1,10 @@
-//! Replica-pool integration: routing, drain, shedding, determinism, and
-//! the aggregation invariant (pool-wide stats == sum of per-replica
-//! stats). Runs entirely on the synthetic engine — no artifacts needed.
+//! Replica-pool integration: routing, drain, shedding, determinism,
+//! SLO tiering, the `STATS` wire verb, and the aggregation invariant
+//! (pool-wide stats == sum of per-replica stats). Runs entirely on the
+//! synthetic engine — no artifacts needed.
 
-use lazydit::config::RoutePolicy;
-use lazydit::coordinator::pool::replica::ReplicaHandle;
+use lazydit::config::{RoutePolicy, Slo};
+use lazydit::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
 use lazydit::coordinator::pool::sim::{sim_image, SimEngine, SimSpec};
 use lazydit::coordinator::pool::steal::Rebalancer;
 use lazydit::coordinator::pool::Router;
@@ -348,6 +349,275 @@ fn stealing_outputs_stay_deterministic() {
     }
     assert_eq!(seen.len(), 24);
     router.shutdown();
+}
+
+/// A mixed-tier pool: replica 0 latency-tier B1, replicas 1..n
+/// throughput-tier B8, optionally with stealing armed.
+fn build_tiered_router(thr_replicas: usize, route: RoutePolicy,
+                       queue_cap: usize, steal: bool) -> Router {
+    let rb = steal.then(|| Rebalancer::new(1));
+    let mut tiers = vec![ReplicaTier::new(Slo::Latency, 1)];
+    tiers.extend((0..thr_replicas)
+        .map(|_| ReplicaTier::new(Slo::Throughput, 8)));
+    let handles: Vec<ReplicaHandle> = tiers
+        .into_iter()
+        .enumerate()
+        .map(|(i, tier)| {
+            ReplicaHandle::spawn_tiered(i, queue_cap,
+                                        SimEngine::factory(SimSpec::fast()),
+                                        rb.clone(), tier)
+            .unwrap()
+        })
+        .collect();
+    Router::with_rebalancer(handles, route, queue_cap, rb)
+}
+
+#[test]
+fn slo_traffic_lands_on_its_tier_and_sheds_honestly() {
+    let router = build_tiered_router(2, RoutePolicy::Jsq, 1024, false);
+    let mut rxs = Vec::new();
+    for i in 0..30u64 {
+        let slo = match i % 3 {
+            0 => Slo::Latency,
+            1 => Slo::Throughput,
+            _ => Slo::Besteffort,
+        };
+        let (tx, rx) = mpsc::channel();
+        let mut req = Request::new(0, (i % 10) as usize, 4, 3000 + i)
+            .with_slo(slo);
+        // single-lane: a B1 latency replica cannot fit a 2-lane CFG
+        // request (the router would shed it — see candidate_order)
+        req.cfg_scale = 1.0;
+        assert!(router.dispatch(req, tx), "cap 1024 must not shed");
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let report = router.shutdown();
+    assert_eq!(report.completed(), 30);
+    assert_eq!(report.failed(), 0);
+    // tier isolation: the B1 latency replica never ran a throughput
+    // job, and no throughput replica ever ran a latency job
+    assert_eq!(report.replicas[0].completed_by_slo[Slo::Throughput.index()],
+               0, "latency replica must not serve bulk traffic");
+    for r in &report.replicas[1..] {
+        assert_eq!(r.completed_by_slo[Slo::Latency.index()], 0,
+                   "throughput replica {} must not serve latency traffic",
+                   r.id);
+    }
+    // all 10 latency jobs ran on replica 0 (no best-effort spill target
+    // exists in this pool)
+    assert_eq!(report.replicas[0].completed_by_slo[Slo::Latency.index()],
+               10);
+    // per-tier completions sum to the totals
+    assert_eq!(report.completed_by_slo().iter().sum::<u64>(), 30);
+    assert_eq!(report.shed_by_slo, [0, 0, 0]);
+    // the render surfaces the tier breakdown
+    let rendered = report.render();
+    assert!(rendered.contains("tiers (completed/shed)"), "{rendered}");
+}
+
+#[test]
+fn slo_tier_isolation_survives_stealing() {
+    // stealing on, tiny admit window: the idle throughput replicas will
+    // try to steal the latency replica's backlog — the tier constraint
+    // must stop latency jobs from migrating onto B8 replicas and
+    // vice versa, while best-effort jobs migrate freely
+    let router = build_tiered_router(2, RoutePolicy::Jsq, 1024, true);
+    let mut rxs = Vec::new();
+    for i in 0..48u64 {
+        let slo = match i % 3 {
+            0 => Slo::Latency,
+            1 => Slo::Throughput,
+            _ => Slo::Besteffort,
+        };
+        let (tx, rx) = mpsc::channel();
+        let mut req = Request::new(0, (i % 10) as usize, 5, 7000 + i)
+            .with_slo(slo);
+        req.cfg_scale = 1.0; // single-lane: fits the B1 latency tier
+        assert!(router.dispatch(req, tx));
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+    let report = router.shutdown();
+    assert_eq!(report.completed(), 48);
+    assert_eq!(report.total_steals(), report.total_stolen());
+    assert_eq!(report.replicas[0].completed_by_slo[Slo::Throughput.index()],
+               0, "steal constraint: B1 latency replica took a bulk job");
+    for r in &report.replicas[1..] {
+        assert_eq!(r.completed_by_slo[Slo::Latency.index()], 0,
+                   "steal constraint: B8 replica {} took a latency job",
+                   r.id);
+    }
+}
+
+#[test]
+fn latency_requests_shed_when_no_compatible_tier_is_live() {
+    // throughput-only pool: a latency request must shed immediately
+    // (and be counted against the latency tier), never silently run on
+    // a deep-batch replica
+    let handles: Vec<ReplicaHandle> = (0..2)
+        .map(|i| {
+            ReplicaHandle::spawn_tiered(i, 64,
+                                        SimEngine::factory(SimSpec::fast()),
+                                        None,
+                                        ReplicaTier::new(Slo::Throughput, 8))
+            .unwrap()
+        })
+        .collect();
+    let router = Router::new(handles, RoutePolicy::Jsq, 64);
+    let (tx, rx) = mpsc::channel();
+    let mut req = Request::new(0, 1, 4, 1).with_slo(Slo::Latency);
+    req.cfg_scale = 1.0;
+    // the shed is reported as *unservable* (permanent for this pool
+    // shape), not as transient "queue full"
+    assert_eq!(router.dispatch_outcome(req, tx),
+               lazydit::coordinator::pool::DispatchOutcome::ShedUnservable,
+               "no compatible tier → unservable shed");
+    assert!(rx.recv().is_err());
+    assert_eq!(router.shed_by_slo(), [1, 0, 0]);
+    // best-effort traffic still flows
+    let (tx, rx) = mpsc::channel();
+    assert!(router.dispatch(Request::new(0, 1, 4, 2), tx));
+    rx.recv().expect("best-effort response");
+    let report = router.shutdown();
+    assert_eq!(report.shed, 1);
+    assert_eq!(report.shed_by_slo, [1, 0, 0]);
+    assert_eq!(report.completed(), 1);
+}
+
+#[test]
+fn unservable_reason_is_stable_under_capacity_pressure() {
+    use lazydit::coordinator::pool::DispatchOutcome;
+    // throughput-only pool saturated to its admission bound: a latency
+    // request must still shed as *unservable* (permanent), never as
+    // "queue full" (transient) — the reason must not flip-flop with
+    // instantaneous load
+    let handles: Vec<ReplicaHandle> = (0..1)
+        .map(|i| {
+            ReplicaHandle::spawn_tiered(
+                i, 4,
+                SimEngine::factory(SimSpec {
+                    work_per_module: 500_000,
+                    lazy_pct: 0,
+                    ..SimSpec::default()
+                }),
+                None,
+                ReplicaTier::new(Slo::Throughput, 8))
+            .unwrap()
+        })
+        .collect();
+    let router = Router::new(handles, RoutePolicy::Jsq, 4);
+    let mut rxs = Vec::new();
+    for i in 0..4u64 {
+        let (tx, rx) = mpsc::channel();
+        assert_eq!(router.dispatch_outcome(Request::new(0, 1, 6, i), tx),
+                   DispatchOutcome::Admitted);
+        rxs.push(rx);
+    }
+    // at the bound: a compatible best-effort request sheds as capacity…
+    let (tx, rx_cap) = mpsc::channel();
+    assert_eq!(router.dispatch_outcome(Request::new(0, 1, 6, 90), tx),
+               DispatchOutcome::ShedCapacity);
+    assert!(rx_cap.recv().is_err());
+    // …but an incompatible latency request is still unservable
+    let (tx, rx_uns) = mpsc::channel();
+    let mut req = Request::new(0, 1, 6, 91).with_slo(Slo::Latency);
+    req.cfg_scale = 1.0;
+    assert_eq!(router.dispatch_outcome(req, tx),
+               DispatchOutcome::ShedUnservable);
+    assert!(rx_uns.recv().is_err());
+    assert_eq!(router.shed_by_slo(), [1, 0, 1]);
+    for rx in rxs {
+        rx.recv().expect("admitted requests must complete");
+    }
+    router.shutdown();
+}
+
+#[test]
+fn stats_verb_reports_live_gauges_over_the_wire() {
+    use lazydit::coordinator::server::serve_pool;
+    use lazydit::util::json::Json;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let router = build_tiered_router(1, RoutePolicy::Jsq, 64, false);
+    let addr = "127.0.0.1:18492";
+    let server = std::thread::spawn(move || {
+        serve_pool(router, addr, 2).expect("serve_pool")
+    });
+    let mut stream = None;
+    for _ in 0..200 {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => {
+                std::thread::sleep(std::time::Duration::from_millis(10))
+            }
+        }
+    }
+    let stream = stream.expect("server did not come up");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut line = String::new();
+
+    // STATS before any request: a fresh pool, gauges at zero
+    writer.write_all(b"STATS\n").unwrap();
+    writer.flush().unwrap();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).expect("STATS returns valid JSON");
+    let reps = j.req("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(reps.len(), 2);
+    assert_eq!(reps[0].req("tier").unwrap().as_str().unwrap(), "latency");
+    assert_eq!(reps[0].req("max_batch").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(reps[1].req("tier").unwrap().as_str().unwrap(),
+               "throughput");
+    assert_eq!(j.req("completed").unwrap().as_u64().unwrap(), 0);
+    assert!(j.req("shed_by_slo").unwrap().get("latency").is_some());
+
+    // one tagged request round-trips with its SLO echoed
+    writer
+        .write_all(b"{\"label\": 2, \"steps\": 3, \"seed\": 5, \
+                     \"cfg_scale\": 1.0, \"slo\": \"latency\"}\n")
+        .unwrap();
+    writer.flush().unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.req("slo").unwrap().as_str().unwrap(), "latency");
+    assert_eq!(j.req("steps").unwrap().as_usize().unwrap(), 3);
+
+    // STATS now shows the completion attributed to the latency tier
+    writer.write_all(b"STATS\n").unwrap();
+    writer.flush().unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.req("completed").unwrap().as_u64().unwrap(), 1);
+    let reps = j.req("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(
+        reps[0]
+            .req("completed_by_slo").unwrap()
+            .req("latency").unwrap()
+            .as_u64().unwrap(),
+        1
+    );
+
+    // second request releases the serve loop (max_requests = 2)
+    writer
+        .write_all(b"{\"label\": 1, \"steps\": 3, \"seed\": 6}\n")
+        .unwrap();
+    writer.flush().unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"id\""), "second response: {line}");
+    let report = server.join().expect("server thread");
+    assert_eq!(report.completed(), 2);
 }
 
 #[test]

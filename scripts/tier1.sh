@@ -1,12 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build + test + rustfmt check.
+# Tier-1 verification: build + test + rustfmt check + doc gate + docs
+# link check.
 #
 # Usage: scripts/tier1.sh
 #   FMT_STRICT=0 scripts/tier1.sh   # demote the fmt check to advisory
+#   DOC_STRICT=0 scripts/tier1.sh   # demote the doc gate to advisory
 #
 # The fmt check is strict by default (ROADMAP "format the tree" item);
 # set FMT_STRICT=0 to demote it to advisory while iterating locally.
 # Environments without the rustfmt component skip the check entirely.
+# The doc gate mirrors the same pattern: `cargo doc --no-deps` with
+# warnings-as-errors where rustdoc exists, skipped cleanly otherwise
+# (the `pool` module additionally carries #![deny(missing_docs)], which
+# the plain build already enforces).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -28,6 +34,48 @@ if cargo fmt --version >/dev/null 2>&1; then
     fi
 else
     echo "tier1: rustfmt unavailable, skipping"
+fi
+
+echo "== tier1: cargo doc --no-deps (strict unless DOC_STRICT=0)"
+if rustdoc --version >/dev/null 2>&1; then
+    if ! RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet; then
+        if [ "${DOC_STRICT:-1}" = "1" ]; then
+            echo "tier1: doc gate FAILED (strict mode — fix rustdoc warnings or set DOC_STRICT=0)"
+            exit 1
+        fi
+        echo "tier1: doc gate failed (advisory — DOC_STRICT=0)"
+    fi
+else
+    echo "tier1: rustdoc unavailable, skipping"
+fi
+
+echo "== tier1: docs link check (relative links in *.md)"
+link_fail=0
+for f in README.md docs/*.md; do
+    [ -f "$f" ] || continue
+    dir=$(dirname "$f")
+    # markdown inline link targets: [text](target). Fenced code blocks
+    # are stripped first (transcripts may contain `](` sequences), and
+    # the while-read loop is quoting-safe for targets with spaces or
+    # an optional "title" suffix. Process substitution (not a pipe)
+    # keeps link_fail in this shell.
+    while IFS= read -r link; do
+        case "$link" in
+            http://*|https://*|mailto:*|\#*) continue ;;
+        esac
+        target="${link%%#*}"       # drop the fragment
+        target="${target%% \"*}"   # drop an optional "title"
+        [ -z "$target" ] && continue
+        if [ ! -e "$dir/$target" ] && [ ! -e "$target" ]; then
+            echo "tier1: broken link in $f -> $link"
+            link_fail=1
+        fi
+    done < <(awk '/^```/{fence=!fence; next} !fence' "$f" \
+             | grep -oE '\]\([^)]+\)' | sed 's/^](//; s/)$//')
+done
+if [ "$link_fail" = 1 ]; then
+    echo "tier1: docs link check FAILED"
+    exit 1
 fi
 
 echo "== tier1: OK"
