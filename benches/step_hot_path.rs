@@ -1,0 +1,216 @@
+//! Bench: per-step latency of the denoise hot path vs lazy ratio Γ,
+//! plus micro-measurements of the two zero-copy mechanisms this repo's
+//! skip path rides on (the memoized cache literal and the buffer
+//! arena). Writes `BENCH_step.json` so the repo carries a perf
+//! trajectory across PRs (docs/PERF.md explains how to read it).
+//!
+//! The Γ sweep runs the deterministic `SimEngine` (no artifacts / XLA
+//! runtime needed): executed modules burn calibrated CPU, skipped ones
+//! cost nothing, so per-step wall-clock must decrease monotonically
+//! with Γ — asserted, not just reported.
+//!
+//!     cargo bench --bench step_hot_path
+//!     BENCH_SMOKE=1 cargo bench --bench step_hot_path   # tiny CI gate
+//!
+//! (or `cargo run --release --bench step_hot_path` on toolchains where
+//! bench profiles are unavailable)
+
+use lazydit::coordinator::pool::sim::{SimEngine, SimSpec};
+use lazydit::coordinator::pool::PoolEngine;
+use lazydit::coordinator::request::Request;
+use lazydit::metrics::stats::{mean, quantile};
+use lazydit::model::runner::BatchCaches;
+use lazydit::runtime::value::HostValue;
+use lazydit::tensor::pool::TensorPool;
+use lazydit::tensor::Tensor;
+use lazydit::util::json::Json;
+use std::hint::black_box;
+use std::time::Instant;
+
+struct BenchCfg {
+    requests: usize,
+    steps: usize,
+    work: u64,
+    micro_iters: usize,
+}
+
+struct GammaSeries {
+    target_pct: u32,
+    observed: f64,
+    per_step_ms: Vec<f64>,
+    cold_denied: u64,
+    modules_run: u64,
+}
+
+/// One Γ point: flood the synthetic engine and time every round after
+/// the first (round 0 is the cold-cache step — the steady state is what
+/// the skip ratio accelerates).
+fn run_gamma(lazy_pct: u32, cfg: &BenchCfg) -> GammaSeries {
+    let mut e = SimEngine::new(SimSpec {
+        lazy_pct,
+        work_per_module: cfg.work,
+        policy: format!("bench-g{lazy_pct}"),
+        ..SimSpec::default()
+    });
+    for i in 0..cfg.requests {
+        e.submit(Request::new(0, i % 10, cfg.steps, 42 + i as u64));
+    }
+    let mut per_step_ms = Vec::with_capacity(cfg.steps);
+    let mut round = 0usize;
+    while e.active_count() > 0 {
+        let t0 = Instant::now();
+        e.step_round().expect("sim step");
+        let dt_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if round > 0 {
+            per_step_ms.push(dt_ms);
+        }
+        round += 1;
+    }
+    GammaSeries {
+        target_pct: lazy_pct,
+        observed: e.layer_stats.overall_ratio(),
+        per_step_ms,
+        cold_denied: e.layer_stats.cold_denied_total(),
+        modules_run: e.serve_stats.module_invocations
+            - e.serve_stats.module_skips,
+    }
+}
+
+/// Micro: the skip path's cache read, before vs after the literal memo.
+/// BEFORE is the pre-optimization shape (clone the `[B, N, D]` cache
+/// tensor, convert it to a literal); AFTER is the memoized read.
+fn literal_cache_micro(iters: usize) -> (f64, f64) {
+    let (b, n, d) = (8usize, 16usize, 64usize);
+    let mut caches = BatchCaches::empty(1, b, n, d);
+    let f = Tensor::from_vec(&[b, n, d], vec![0.5; b * n * d]).unwrap();
+    let lit = HostValue::f32_literal(&f).unwrap();
+    caches.store_fresh(0, f, lit);
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let t = caches.value(0).clone();
+        black_box(HostValue::F32(t).to_literal().unwrap());
+    }
+    let before_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        black_box(caches.literal(0).unwrap());
+    }
+    let after_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    (before_us, after_us)
+}
+
+/// Micro: a `[B, N, D]` buffer from the arena vs a fresh allocation.
+fn arena_micro(iters: usize) -> (f64, f64) {
+    let shape = [8usize, 16, 64];
+    let pool = TensorPool::new();
+    pool.release(pool.acquire(&shape)); // warm the size class
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        black_box(&Tensor::zeros(&shape));
+    }
+    let fresh_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let t = pool.acquire(&shape);
+        pool.release(black_box(t));
+    }
+    let pooled_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    assert_eq!(pool.stats().allocated, 1, "steady state must not allocate");
+    (fresh_us, pooled_us)
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let cfg = if smoke {
+        BenchCfg { requests: 2, steps: 6, work: 25_000, micro_iters: 50 }
+    } else {
+        BenchCfg { requests: 4, steps: 40, work: 50_000, micro_iters: 2_000 }
+    };
+    println!("step_hot_path: per-step latency vs Γ (SimEngine, \
+              {} requests × {} steps, work/module {}{})",
+             cfg.requests, cfg.steps, cfg.work,
+             if smoke { ", SMOKE" } else { "" });
+
+    let mut series = Vec::new();
+    for pct in [0u32, 50, 90] {
+        let s = run_gamma(pct, &cfg);
+        let (p50, p95) = (quantile(&s.per_step_ms, 0.5),
+                          quantile(&s.per_step_ms, 0.95));
+        println!("  Γ target {:>2}%  observed {:>5.1}%   per-step mean \
+                  {:>8.3}ms  p50 {:>8.3}ms  p95 {:>8.3}ms   \
+                  ({} modules run, {} cold-denied)",
+                 pct, 100.0 * s.observed, mean(&s.per_step_ms), p50, p95,
+                 s.modules_run, s.cold_denied);
+        series.push(s);
+    }
+
+    // the acceptance property: laziness must translate into wall-clock —
+    // strictly fewer modules executed AND strictly lower per-step latency
+    // as Γ grows. The modules-run ordering is deterministic and always
+    // strict; the wall-clock ordering is strict on the full run but
+    // advisory in smoke mode, where ~5 sub-millisecond samples per
+    // series would let one OS preemption flake the whole CI gate.
+    for w in series.windows(2) {
+        assert!(w[0].observed < w[1].observed,
+                "observed Γ must grow with the target");
+        assert!(w[0].modules_run > w[1].modules_run,
+                "modules executed must fall as Γ grows");
+        let (lo, hi) = (mean(&w[1].per_step_ms), mean(&w[0].per_step_ms));
+        if hi <= lo {
+            let msg = format!(
+                "per-step latency not monotone: {hi:.4}ms at Γ={} vs \
+                 {lo:.4}ms at Γ={}",
+                w[0].target_pct, w[1].target_pct);
+            if smoke {
+                eprintln!("  WARN (smoke, advisory): {msg}");
+            } else {
+                panic!("{msg}");
+            }
+        }
+    }
+
+    let (lit_before, lit_after) = literal_cache_micro(cfg.micro_iters);
+    println!("  literal cache: clone+convert {lit_before:.2}µs → memo \
+              {lit_after:.3}µs per skip read  ({:.0}x)",
+             lit_before / lit_after.max(1e-9));
+    let (fresh, pooled) = arena_micro(cfg.micro_iters);
+    println!("  arena: fresh alloc {fresh:.2}µs → pooled {pooled:.2}µs \
+              per [8,16,64] buffer");
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("step_hot_path")),
+        ("smoke", Json::Bool(smoke)),
+        ("requests", Json::num(cfg.requests as f64)),
+        ("steps", Json::num(cfg.steps as f64)),
+        ("work_per_module", Json::num(cfg.work as f64)),
+        ("series", Json::arr(series.iter().map(|s| {
+            Json::obj(vec![
+                ("gamma_target", Json::num(s.target_pct as f64 / 100.0)),
+                ("gamma_observed", Json::num(s.observed)),
+                ("per_step_ms", Json::obj(vec![
+                    ("mean", Json::num(mean(&s.per_step_ms))),
+                    ("p50", Json::num(quantile(&s.per_step_ms, 0.5))),
+                    ("p95", Json::num(quantile(&s.per_step_ms, 0.95))),
+                ])),
+                ("steps_timed", Json::num(s.per_step_ms.len() as f64)),
+                ("modules_run", Json::num(s.modules_run as f64)),
+                ("cold_denied", Json::num(s.cold_denied as f64)),
+            ])
+        }))),
+        ("literal_cache_us", Json::obj(vec![
+            ("clone_convert", Json::num(lit_before)),
+            ("memo", Json::num(lit_after)),
+        ])),
+        ("arena_us", Json::obj(vec![
+            ("fresh_alloc", Json::num(fresh)),
+            ("pooled", Json::num(pooled)),
+        ])),
+    ]);
+    std::fs::write("BENCH_step.json", format!("{json}\n"))
+        .expect("write BENCH_step.json");
+    println!("  wrote BENCH_step.json");
+}

@@ -93,6 +93,59 @@ pub fn plan_round(lane_counts: &[usize], start: usize, max_lanes: usize,
     Some(BatchPlan { bucket, lanes })
 }
 
+/// Reorder a plan's lanes so requests already resident in the engine's
+/// persistent batch keep their rows. `plan_round`'s rotating FIFO origin
+/// shifts the *order* of an otherwise-unchanged selection every round;
+/// without this pass that order churn would evict and reload every row
+/// each step, defeating the zero-copy steady state.
+///
+/// `resident` is the current row occupancy (`(request id, lane)` per
+/// row); `id_of` maps a plan `req_idx` to its request id. The selected
+/// request *set* is unchanged — only the order: requests present in
+/// `resident` come first, in resident-row order, then new joiners in
+/// plan order. CFG lane adjacency is preserved (lanes are rebuilt per
+/// request), so `apply_outcome`'s row walk still holds.
+pub fn stabilize_plan(plan: &mut BatchPlan,
+                      resident: &[Option<(u64, usize)>],
+                      id_of: impl Fn(usize) -> u64) {
+    // resident request ids in row order (first occurrence)
+    let mut prev_ids: Vec<u64> = Vec::new();
+    for occ in resident.iter().flatten() {
+        if !prev_ids.contains(&occ.0) {
+            prev_ids.push(occ.0);
+        }
+    }
+    // the plan's selection as (req_idx, lane count), in plan order
+    let mut selected: Vec<(usize, usize)> = Vec::new();
+    for slot in &plan.lanes {
+        if slot.lane == 0 {
+            selected.push((slot.req_idx, 1));
+        } else {
+            selected
+                .last_mut()
+                .expect("plan lanes open with lane 0")
+                .1 += 1;
+        }
+    }
+    // stable order: resident ∩ selected first (resident order), then
+    // the new joiners in plan order
+    let mut ordered: Vec<(usize, usize)> = Vec::with_capacity(selected.len());
+    for &pid in &prev_ids {
+        if let Some(pos) =
+            selected.iter().position(|&(ri, _)| id_of(ri) == pid)
+        {
+            ordered.push(selected.remove(pos));
+        }
+    }
+    ordered.extend(selected);
+    plan.lanes.clear();
+    for (ri, lanes) in ordered {
+        for lane in 0..lanes {
+            plan.lanes.push(LaneSlot { req_idx: ri, lane });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,6 +309,89 @@ mod tests {
             assert_eq!(p.bucket, bucket);
             assert!(p.live_mask().iter().all(|&x| x));
         }
+    }
+
+    #[test]
+    fn stabilize_neutralizes_rotation_churn() {
+        // 3 single-lane requests with ids 10/11/12, all resident in
+        // rows 0..3; whatever order rotation hands us, the stabilized
+        // plan must reproduce the resident row order exactly
+        let ids = [10u64, 11, 12];
+        let resident: Vec<Option<(u64, usize)>> =
+            vec![Some((10, 0)), Some((11, 0)), Some((12, 0)), None];
+        for start in 0..3 {
+            let mut p = plan_round(&[1, 1, 1], start, 4, BUCKETS).unwrap();
+            stabilize_plan(&mut p, &resident, |ri| ids[ri]);
+            let got: Vec<u64> =
+                p.lanes.iter().map(|l| ids[l.req_idx]).collect();
+            assert_eq!(got, vec![10, 11, 12], "start {start}");
+        }
+    }
+
+    #[test]
+    fn stabilize_keeps_cfg_lanes_adjacent_and_appends_joiners() {
+        // resident: CFG request 20 at rows 0-1; selection adds request
+        // 21 (CFG) — 20 keeps its rows, 21 joins after
+        let ids = [21u64, 20];
+        let resident: Vec<Option<(u64, usize)>> =
+            vec![Some((20, 0)), Some((20, 1)), None, None];
+        let mut p = plan_round(&[2, 2], 0, 4, BUCKETS).unwrap();
+        // rotation put request index 0 (id 21) first
+        assert_eq!(p.lanes[0].req_idx, 0);
+        stabilize_plan(&mut p, &resident, |ri| ids[ri]);
+        assert_eq!(p.lanes.len(), 4);
+        assert_eq!((ids[p.lanes[0].req_idx], p.lanes[0].lane), (20, 0));
+        assert_eq!((ids[p.lanes[1].req_idx], p.lanes[1].lane), (20, 1));
+        assert_eq!((ids[p.lanes[2].req_idx], p.lanes[2].lane), (21, 0));
+        assert_eq!((ids[p.lanes[3].req_idx], p.lanes[3].lane), (21, 1));
+    }
+
+    #[test]
+    fn stabilize_preserves_selection_set() {
+        // the pass may only reorder — never add, drop, or split lanes
+        propcheck(200, |g| {
+            let n = g.usize_in(1, 10);
+            let lane_counts: Vec<usize> =
+                (0..n).map(|_| g.usize_in(1, 2)).collect();
+            let ids: Vec<u64> = (0..n).map(|i| 100 + i as u64).collect();
+            let start = g.usize_in(0, n - 1);
+            let Some(mut p) = plan_round(&lane_counts, start, 8, BUCKETS)
+            else {
+                return;
+            };
+            let before = p.clone();
+            // random resident occupancy over a random subset
+            let rb = g.usize_in(1, 8);
+            let mut resident: Vec<Option<(u64, usize)>> = vec![None; rb];
+            for row in 0..rb {
+                if g.bool() {
+                    let ri = g.usize_in(0, n - 1);
+                    resident[row] = Some((ids[ri], 0));
+                }
+            }
+            stabilize_plan(&mut p, &resident, |ri| ids[ri]);
+            assert_eq!(p.lanes.len(), before.lanes.len());
+            assert_eq!(p.bucket, before.bucket);
+            let mut a: Vec<usize> =
+                before.lanes.iter().map(|l| l.req_idx).collect();
+            let mut b: Vec<usize> = p.lanes.iter().map(|l| l.req_idx).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "selection set changed");
+            // adjacency invariant survives
+            let mut i = 0;
+            while i < p.lanes.len() {
+                let slot = p.lanes[i];
+                assert_eq!(slot.lane, 0);
+                if lane_counts[slot.req_idx] == 2 {
+                    assert_eq!(p.lanes[i + 1],
+                               LaneSlot { req_idx: slot.req_idx, lane: 1 });
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        });
     }
 
     #[test]

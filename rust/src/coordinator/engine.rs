@@ -3,8 +3,10 @@
 //! applies CFG + DDIM on the host, and retires finished requests.
 
 use crate::config::ServeConfig;
-use crate::coordinator::batcher::{plan_cap, plan_round, BatchPlan};
-use crate::coordinator::request::{ActiveRequest, Request, RequestResult};
+use crate::coordinator::batcher::{plan_cap, plan_round, stabilize_plan,
+                                  BatchPlan};
+use crate::coordinator::request::{ActiveRequest, LaneCaches, Request,
+                                  RequestResult};
 use crate::coordinator::stats::{LayerStats, ServeStats};
 use crate::model::checkpoint::Checkpoint;
 use crate::model::runner::{BatchCaches, DecisionCfg, ModelRunner, StepOutcome};
@@ -13,6 +15,7 @@ use crate::runtime::manifest::Manifest;
 use crate::sampler::cfg::combine_pair;
 use crate::sampler::ddim::DdimSampler;
 use crate::sampler::schedule::Schedule;
+use crate::tensor::pool::TensorPool;
 use crate::tensor::Tensor;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -51,6 +54,204 @@ pub struct Engine {
     /// or the full compiled set when there is no override or the
     /// intersection is empty.
     round_buckets: Vec<usize>,
+    /// Persistent cross-round batch state: input tensors and module
+    /// caches stay batch-resident between rounds, so unchanged slot
+    /// membership costs zero cache copies per step (see [`sync_batch`]).
+    batch: Option<BatchState>,
+    /// This engine's buffer arena (shared with the runner's, so batch
+    /// caches and step transients recycle into each other).
+    pool: Rc<TensorPool>,
+}
+
+/// The engine's persistent batch: padded model inputs plus the
+/// dual-representation caches, living across rounds. `rows[i]` names the
+/// `(request id, lane)` occupying batch row `i` (None = padding); the
+/// truth for a resident lane's caches is HERE, and its per-request
+/// [`LaneCaches`] store is stale until the row is evicted or flushed.
+struct BatchState {
+    /// Padded batch width (an exported bucket size).
+    bucket: usize,
+    /// Row occupancy, `(request id, lane)` per row.
+    rows: Vec<Option<(u64, usize)>>,
+    /// Module output caches, batch-major, with memoized literals.
+    caches: BatchCaches,
+    /// Latent input rows `[B, C, H, W]` (refreshed every round — DDIM
+    /// advances z on the host).
+    z: Tensor,
+    /// Per-row timesteps (refreshed every round).
+    t: Vec<f32>,
+    /// Per-row labels (cond label / null for uncond + padding).
+    y: Vec<i32>,
+}
+
+impl BatchState {
+    /// Clear every row a finished request occupied (no scatter-back:
+    /// the trajectory is complete, its caches die with it).
+    fn clear_request(&mut self, id: u64, null_y: i32) {
+        for row in 0..self.bucket {
+            if matches!(self.rows[row], Some((rid, _)) if rid == id) {
+                self.rows[row] = None;
+                self.caches.clear_row(row);
+                self.z.row_mut(row).fill(0.0);
+                self.t[row] = 0.0;
+                self.y[row] = null_y;
+            }
+        }
+    }
+}
+
+/// Copy one batch row's caches back into a lane store (row eviction /
+/// flush). Only valid slots are copied; validity bits only ever rise,
+/// matching the scatter semantics of the pre-resident engine.
+fn scatter_row(caches: &BatchCaches, row: usize, lc: &mut LaneCaches) {
+    for k in 0..caches.slots() {
+        if caches.valid[k][row] {
+            lc.valid[k] = true;
+            lc.values[k].copy_from_slice(caches.value(k).row(row));
+        }
+    }
+}
+
+/// Reconcile the persistent batch with this round's (stabilized) plan.
+///
+/// Steady state — identical membership in identical rows — is a no-op:
+/// zero cache copies, zero allocations, literal memos intact. Otherwise:
+/// * bucket change: new state from the arena; rows present in both the
+///   old and new occupancy migrate tensor-to-tensor via
+///   `gather_rows_into` (one pass per slot, padding rows zeroed), rows
+///   leaving scatter back to their lane stores;
+/// * same bucket: two row-level passes — evict every mismatched row
+///   (scatter to its lane store, so a later load of the same request
+///   reads fresh data), then load incoming rows from their lane stores.
+///
+/// Returns `(rows_retained, rows_migrated)` for `ServeStats`.
+#[allow(clippy::too_many_arguments)]
+fn sync_batch(state: &mut Option<BatchState>, plan: &BatchPlan,
+              active: &mut [ActiveRequest], pool: &Rc<TensorPool>,
+              depth: usize, n: usize, d: usize, ztail: &[usize],
+              null_y: i32) -> (u64, u64) {
+    let b = plan.bucket;
+    // desired occupancy, by row
+    let mut desired: Vec<Option<(u64, usize)>> = vec![None; b];
+    for (row, slot) in plan.lanes.iter().enumerate() {
+        desired[row] = Some((active[slot.req_idx].req.id, slot.lane));
+    }
+
+    let mut carried = 0u64;
+    let rebucket = !matches!(state, Some(s) if s.bucket == b);
+    if rebucket {
+        let mut zshape = vec![b];
+        zshape.extend_from_slice(ztail);
+        let mut fresh = BatchState {
+            bucket: b,
+            rows: vec![None; b],
+            caches: BatchCaches::with_pool(pool.clone(), depth, b, n, d),
+            z: pool.acquire(&zshape),
+            t: vec![0.0; b],
+            y: vec![null_y; b],
+        };
+        if let Some(old) = state.take() {
+            // carryover map: new row -> old row holding the same lane
+            let idx: Vec<usize> = desired
+                .iter()
+                .map(|&want| {
+                    want.and_then(|key| {
+                        old.rows.iter().position(|&o| o == Some(key))
+                    })
+                    .unwrap_or(usize::MAX)
+                })
+                .collect();
+            fresh.caches.gather_from(&old.caches, &idx);
+            for (r, &i) in idx.iter().enumerate() {
+                if i != usize::MAX {
+                    fresh.rows[r] = desired[r];
+                    carried += 1;
+                }
+            }
+            // rows leaving the batch entirely: back to their lane store
+            for (orow, occ) in old.rows.iter().enumerate() {
+                if let Some((id, lane)) = *occ {
+                    if !idx.contains(&orow) {
+                        if let Some(ar) =
+                            active.iter_mut().find(|a| a.req.id == id)
+                        {
+                            scatter_row(&old.caches, orow,
+                                        &mut ar.caches[lane]);
+                        }
+                    }
+                }
+            }
+            old.caches.release_into_pool();
+            pool.release(old.z);
+        }
+        *state = Some(fresh);
+    }
+
+    let state = state.as_mut().expect("just ensured");
+    let (mut retained, mut migrated) = (0u64, 0u64);
+    // pass 1: evict every mismatched occupied row BEFORE any load, so a
+    // request moving between rows never reads its own stale lane store
+    for row in 0..b {
+        let want = desired[row];
+        if state.rows[row] == want {
+            if want.is_some() {
+                retained += 1;
+            }
+            continue;
+        }
+        if let Some((id, lane)) = state.rows[row] {
+            if let Some(ar) = active.iter_mut().find(|a| a.req.id == id) {
+                scatter_row(&state.caches, row, &mut ar.caches[lane]);
+            }
+            state.caches.clear_row(row);
+            state.rows[row] = None;
+            migrated += 1;
+            if want.is_none() {
+                state.z.row_mut(row).fill(0.0);
+                state.t[row] = 0.0;
+                state.y[row] = null_y;
+            }
+        }
+    }
+    // pass 2: load incoming rows from their (now fresh) lane stores
+    for row in 0..b {
+        if state.rows[row].is_none() {
+            if let Some((id, lane)) = desired[row] {
+                let ar = active
+                    .iter()
+                    .find(|a| a.req.id == id)
+                    .expect("planned request is active");
+                let lc = &ar.caches[lane];
+                for k in 0..state.caches.slots() {
+                    state.caches.valid[k][row] = lc.valid[k];
+                    if lc.valid[k] {
+                        state.caches.write_row(k, row, &lc.values[k]);
+                    }
+                }
+                state.rows[row] = Some((id, lane));
+                migrated += 1;
+            }
+        }
+    }
+    // gather-carried rows matched in pass 1 but did pay a row copy
+    (retained - carried, migrated + carried)
+}
+
+/// Scatter every resident row back to its lane store and drop the
+/// persistent batch (profiling rounds diff the lane stores, so they
+/// need them current; also releases the buffers to the arena).
+fn flush_batch(state: &mut Option<BatchState>, active: &mut [ActiveRequest],
+               pool: &Rc<TensorPool>) {
+    let Some(st) = state.take() else { return };
+    for row in 0..st.bucket {
+        if let Some((id, lane)) = st.rows[row] {
+            if let Some(ar) = active.iter_mut().find(|a| a.req.id == id) {
+                scatter_row(&st.caches, row, &mut ar.caches[lane]);
+            }
+        }
+    }
+    st.caches.release_into_pool();
+    pool.release(st.z);
 }
 
 /// Resolve the effective bucket set for `round_buckets` (see the field
@@ -101,6 +302,7 @@ impl Engine {
                                         cfg.diffusion.beta_end);
         let depth = cfg.model.depth;
         let round_buckets = effective_buckets(&cfg.buckets, &serve);
+        let pool = runner.pool().clone();
         Ok(Engine {
             runner,
             sampler: DdimSampler::new(schedule),
@@ -113,6 +315,8 @@ impl Engine {
             rr_cursor: 0,
             next_id: 1,
             round_buckets,
+            batch: None,
+            pool,
         })
     }
 
@@ -124,6 +328,7 @@ impl Engine {
                                         runner.cfg.diffusion.beta_end);
         let depth = runner.cfg.model.depth;
         let round_buckets = effective_buckets(&runner.cfg.buckets, &serve);
+        let pool = runner.pool().clone();
         Engine {
             runner,
             sampler: DdimSampler::new(schedule),
@@ -136,6 +341,8 @@ impl Engine {
             rr_cursor: 0,
             next_id: 1,
             round_buckets,
+            batch: None,
+            pool,
         }
     }
 
@@ -202,11 +409,19 @@ impl Engine {
     pub fn step_round(&mut self) -> Result<Vec<RequestResult>> {
         let lane_counts: Vec<usize> =
             self.active.iter().map(|a| a.req.lanes()).collect();
-        let Some(plan) = plan_round(&lane_counts, self.rr_cursor,
-                                     self.serve.max_batch,
-                                     &self.round_buckets) else {
+        let Some(mut plan) = plan_round(&lane_counts, self.rr_cursor,
+                                         self.serve.max_batch,
+                                         &self.round_buckets) else {
             return Ok(Vec::new());
         };
+        // pin already-resident lanes to their rows so rotation churn in
+        // plan order doesn't defeat the persistent batch (steady state
+        // must be a row-for-row match)
+        if let Some(state) = &self.batch {
+            let active = &self.active;
+            stabilize_plan(&mut plan, &state.rows,
+                           |idx| active[idx].req.id);
+        }
         self.rr_cursor = self.rr_cursor.wrapping_add(1);
         let outcome = self.run_plan(&plan)?;
         self.apply_outcome(&plan, outcome)?;
@@ -225,18 +440,94 @@ impl Engine {
         Ok(out)
     }
 
-    /// Assemble the batch tensors for a plan and run one model step.
+    /// Run one model step for a plan against the *persistent* batch:
+    /// the repack ([`sync_batch`]) touches caches only for joins/leaves
+    /// (steady state: zero copies), then the runner steps the resident
+    /// tensors in place. Profiling rounds fall back to the scratch path
+    /// (they diff the per-lane stores, which residency leaves stale).
     fn run_plan(&mut self, plan: &BatchPlan) -> Result<StepOutcome> {
-        let m = self.runner.cfg.model.clone();
-        let b = plan.bucket;
-        let depth = m.depth;
-        let (n, d) = (m.tokens(), m.dim);
-        let img = m.img_elems();
+        if self.sim_profile.is_some() {
+            self.flush_batch_state();
+            return self.run_plan_scratch(plan);
+        }
+        // copy out the scalar dims up front — cloning the whole
+        // ModelConfig (heap Strings included) per step would put an
+        // allocation right back on the path this exists to clear
+        let (depth, n, d, img, null_y, ztail) = {
+            let m = &self.runner.cfg.model;
+            (m.depth, m.tokens(), m.dim, m.img_elems(),
+             m.null_label() as i32, [m.channels, m.img_size, m.img_size])
+        };
+        let (retained, migrated) =
+            sync_batch(&mut self.batch, plan, &mut self.active, &self.pool,
+                       depth, n, d, &ztail, null_y);
+        self.serve_stats.rows_retained += retained;
+        self.serve_stats.rows_migrated += migrated;
 
-        let mut z = Tensor::zeros(&[b, m.channels, m.img_size, m.img_size]);
+        // refresh the dynamic inputs (DDIM advances z on the host and
+        // the cursor advances t every step; caches need no refresh)
+        {
+            let state = self.batch.as_mut().expect("synced");
+            for (row, slot) in plan.lanes.iter().enumerate() {
+                let ar = &self.active[slot.req_idx];
+                let ct = ar
+                    .current_t()
+                    .context("scheduled a finished request")?;
+                state.z.row_mut(row).copy_from_slice(&ar.z[..img]);
+                state.t[row] = ct as f32;
+                state.y[row] = if slot.lane == 0 {
+                    ar.req.class_label as i32
+                } else {
+                    null_y
+                };
+            }
+        }
+
+        let forced = self.forced_row(plan);
+        let live = plan.live_mask();
+        let dec = DecisionCfg {
+            policy: self.serve.policy,
+            scope: self.serve.scope,
+            threshold: self.serve.threshold,
+        };
+        let state = self.batch.as_mut().expect("synced");
+        self.runner.step_with_forced(plan.bucket, &state.z, &state.t,
+                                     &state.y, &live, &mut state.caches,
+                                     dec, forced.as_deref())
+    }
+
+    /// The Learn2Cache-analog static schedule's [2L] mask row for this
+    /// round, when a schedule is configured: the first lane's cursor
+    /// drives the row index, and only that row is cloned — never the
+    /// whole schedule. Shared by the resident and scratch step paths so
+    /// their row selection can never diverge.
+    fn forced_row(&self, plan: &BatchPlan) -> Option<Vec<bool>> {
+        self.options.static_schedule.as_ref().map(|sched| {
+            let step_idx = plan
+                .lanes
+                .first()
+                .map(|s| self.active[s.req_idx].cursor)
+                .unwrap_or(0);
+            sched[step_idx % sched.len()].clone()
+        })
+    }
+
+    /// Scratch-batch path (similarity profiling): rebuild the batch from
+    /// the per-lane stores every round, exactly the pre-resident engine,
+    /// with buffers drawn from the arena instead of fresh allocations.
+    fn run_plan_scratch(&mut self, plan: &BatchPlan) -> Result<StepOutcome> {
+        let b = plan.bucket;
+        let (depth, n, d, img, null_y, channels, img_size) = {
+            let m = &self.runner.cfg.model;
+            (m.depth, m.tokens(), m.dim, m.img_elems(),
+             m.null_label() as i32, m.channels, m.img_size)
+        };
+
+        let mut z = self.pool.acquire(&[b, channels, img_size, img_size]);
         let mut t = vec![0.0f32; b];
-        let mut y = vec![m.null_label() as i32; b];
-        let mut caches = BatchCaches::empty(depth, b, n, d);
+        let mut y = vec![null_y; b];
+        let mut caches =
+            BatchCaches::with_pool(self.pool.clone(), depth, b, n, d);
 
         for (row, slot) in plan.lanes.iter().enumerate() {
             let ar = &self.active[slot.req_idx];
@@ -248,32 +539,30 @@ impl Engine {
             y[row] = if slot.lane == 0 {
                 ar.req.class_label as i32
             } else {
-                m.null_label() as i32
+                null_y
             };
             let lc = &ar.caches[slot.lane];
             for k in 0..2 * depth {
                 caches.valid[k][row] = lc.valid[k];
                 if lc.valid[k] {
-                    caches.values[k].row_mut(row).copy_from_slice(&lc.values[k]);
+                    caches.write_row(k, row, &lc.values[k]);
                 }
             }
         }
 
+        let forced = self.forced_row(plan);
         let live = plan.live_mask();
         let dec = DecisionCfg {
             policy: self.serve.policy,
             scope: self.serve.scope,
             threshold: self.serve.threshold,
         };
+        let outcome = self.runner.step_with_forced(
+            plan.bucket, &z, &t, &y, &live, &mut caches, dec,
+            forced.as_deref())?;
 
-        let outcome = if let Some(sched) = self.options.static_schedule.clone() {
-            self.run_static(plan, &z, &t, &y, &live, &mut caches, dec, &sched)?
-        } else {
-            self.runner.step(plan.bucket, &z, &t, &y, &live, &mut caches, dec)?
-        };
-
-        // optional similarity profiling (Learn2Cache-analog offline pass):
-        // cosine between each lane's previous module output (still in the
+        // similarity profiling (Learn2Cache-analog offline pass): cosine
+        // between each lane's previous module output (still in the
         // per-lane store) and the fresh one (now in the batch caches).
         if self.sim_profile.is_some() {
             let mut records: Vec<(usize, usize, f64)> = Vec::new();
@@ -284,7 +573,7 @@ impl Engine {
                         && !outcome.skipped[k]
                     {
                         let cos = slice_cosine(&ar.caches[slot.lane].values[k],
-                                               caches.values[k].row(row));
+                                               caches.value(k).row(row));
                         records.push((ar.cursor, k, cos));
                     }
                 }
@@ -298,36 +587,17 @@ impl Engine {
         // scatter caches back to the owning lanes
         for (row, slot) in plan.lanes.iter().enumerate() {
             let ar = &mut self.active[slot.req_idx];
-            let lc = &mut ar.caches[slot.lane];
-            for k in 0..2 * depth {
-                if caches.valid[k][row] {
-                    lc.valid[k] = true;
-                    lc.values[k].copy_from_slice(caches.values[k].row(row));
-                }
-            }
+            scatter_row(&caches, row, &mut ar.caches[slot.lane]);
         }
+        caches.release_into_pool();
+        self.pool.release(z);
         Ok(outcome)
     }
 
-    /// Learn2Cache-analog path: decisions come from a static per-step
-    /// schedule instead of the gates (baselines::learn2cache).
-    #[allow(clippy::too_many_arguments)]
-    fn run_static(&mut self, plan: &BatchPlan, z: &Tensor, t: &[f32],
-                  y: &[i32], live: &[bool], caches: &mut BatchCaches,
-                  dec: DecisionCfg, sched: &[Vec<bool>]) -> Result<StepOutcome> {
-        // step index of the first live request drives the schedule row
-        let step_idx = plan
-            .lanes
-            .first()
-            .map(|s| self.active[s.req_idx].cursor)
-            .unwrap_or(0);
-        let row = &sched[step_idx % sched.len()];
-        // static schedules are expressed via scope+policy override:
-        // emulate by temporarily forcing decisions through a gate-free
-        // runner call with Never policy, then substituting the schedule.
-        let outcome = self.runner.step_with_forced(
-            plan.bucket, z, t, y, live, caches, dec, Some(row))?;
-        Ok(outcome)
+    /// Scatter every resident row back to its lane store and release the
+    /// persistent batch into the arena (profiling prologue).
+    fn flush_batch_state(&mut self) {
+        flush_batch(&mut self.batch, &mut self.active, &self.pool);
     }
 
     /// Fold a step outcome into per-request state: CFG combine, DDIM
@@ -335,16 +605,24 @@ impl Engine {
     fn apply_outcome(&mut self, plan: &BatchPlan, outcome: StepOutcome)
                      -> Result<()> {
         let depth = self.runner.cfg.model.depth;
-        // engine-level per-layer stats
+        // engine-level per-layer stats (one live mask for all 2L slots —
+        // rebuilding it per slot would put 2L allocations back per step)
+        let live = plan.live_mask();
         for k in 0..2 * depth {
             let mean_s = outcome.s_vals[k]
                 .iter()
-                .zip(plan.live_mask().iter())
+                .zip(live.iter())
                 .filter(|(_, &lv)| lv)
                 .map(|(&s, _)| s as f64)
                 .sum::<f64>()
                 / plan.lanes.len().max(1) as f64;
             self.layer_stats.record(k, outcome.skipped[k], mean_s);
+            if outcome.skip_denied_cold.get(k).copied().unwrap_or(false) {
+                // the gates wanted this skip; a cold (freshly-joined)
+                // row forced the whole batch to run — observable lost
+                // laziness (STATS `cold_denied`)
+                self.layer_stats.record_cold_denied(k);
+            }
             self.serve_stats.module_invocations += 1;
             if outcome.skipped[k] {
                 self.serve_stats.module_skips += 1;
@@ -431,6 +709,14 @@ impl Engine {
                 i += 1;
             }
         }
+        // a finished trajectory's resident rows die with it — no
+        // scatter-back, just vacate the rows for the next joiner
+        if let Some(state) = &mut self.batch {
+            let null_y = self.runner.cfg.model.null_label() as i32;
+            for r in &out {
+                state.clear_request(r.id, null_y);
+            }
+        }
         out
     }
 }
@@ -464,6 +750,10 @@ impl crate::coordinator::pool::PoolEngine for Engine {
 
     fn policy_name(&self) -> String {
         self.serve.policy.name().to_string()
+    }
+
+    fn arena_stats(&self) -> Option<crate::tensor::pool::PoolStats> {
+        Some(self.pool.stats())
     }
 }
 
@@ -506,6 +796,231 @@ pub fn generate_batch(engine: &mut Engine, labels: &[usize], steps: usize,
 mod tests {
     use super::*;
     use crate::config::ServeConfig;
+    use crate::coordinator::batcher::LaneSlot;
+    use crate::runtime::value::HostValue;
+    use crate::util::propcheck::propcheck;
+
+    /// Test double for the runner's run path: install a fresh "module
+    /// output" whose live rows carry occupant-derived values (so any
+    /// row misplacement shows up as a value mismatch) and whose padding
+    /// rows carry a per-round garbage sentinel (so padding leakage
+    /// shows up too), then mark live rows valid — exactly the cache
+    /// mutations `step_with_forced` performs on a run.
+    fn sim_run(caches: &mut BatchCaches, k: usize, bucket: usize, nd: usize,
+               plan: &BatchPlan, active: &[ActiveRequest], round: usize) {
+        let mut data = vec![-7.0 - round as f32; bucket * nd];
+        for (row, slot) in plan.lanes.iter().enumerate() {
+            let id = active[slot.req_idx].req.id;
+            let v = (id * 1000 + slot.lane as u64 * 100 + k as u64) as f32
+                + round as f32 * 0.125;
+            data[row * nd..(row + 1) * nd].fill(v);
+        }
+        let f = Tensor::from_vec(&[bucket, 1, nd], data).unwrap();
+        let lit = HostValue::f32_literal(&f).unwrap();
+        caches.store_fresh(k, f, lit);
+        for row in 0..plan.lanes.len() {
+            caches.valid[k][row] = true;
+        }
+    }
+
+    fn mk_active(nreq: usize, steps: usize, depth: usize, nd: usize)
+                 -> Vec<ActiveRequest> {
+        (0..nreq)
+            .map(|i| {
+                let mut req = Request::new(1 + i as u64, i, steps, i as u64);
+                req.cfg_scale = if i % 2 == 0 { 1.0 } else { 1.5 };
+                ActiveRequest::new(req, vec![999; steps], depth, nd, 4)
+            })
+            .collect()
+    }
+
+    fn cache_ok(valid: &[bool], live: &[bool]) -> bool {
+        live.iter()
+            .enumerate()
+            .filter(|(_, &lv)| lv)
+            .all(|(i, _)| valid[i])
+    }
+
+    #[test]
+    fn steady_state_rounds_are_zero_copy() {
+        // the acceptance hook: identical membership round after round ⇒
+        // all rows retained, nothing migrated, no arena allocations, no
+        // host→literal conversions (store_fresh memoizes the run path's
+        // literal; skips hit the memo)
+        let (depth, nd, slots) = (2usize, 4usize, 4usize);
+        let mut active = mk_active(2, 100, depth, nd);
+        let pool = Rc::new(TensorPool::new());
+        let mut state: Option<BatchState> = None;
+        let plan = BatchPlan {
+            bucket: 2,
+            lanes: vec![LaneSlot { req_idx: 0, lane: 0 },
+                        LaneSlot { req_idx: 1, lane: 0 }],
+        };
+        // warmup round: both rows join (cold), every module "runs"
+        sync_batch(&mut state, &plan, &mut active, &pool, depth, 1, nd,
+                   &[1, 2, 2], -1);
+        for k in 0..slots {
+            sim_run(&mut state.as_mut().unwrap().caches, k, 2, nd, &plan,
+                    &active, 0);
+        }
+        let warm_allocs = pool.stats().allocated;
+        let st = state.as_mut().unwrap();
+        assert_eq!(st.caches.conversions(), 0,
+                   "run path memoizes, never converts");
+        // steady state: same plan, every module "skips" (reads the memo)
+        for round in 1..6 {
+            let mut p = plan.clone();
+            stabilize_plan(&mut p, &state.as_ref().unwrap().rows,
+                           |idx| active[idx].req.id);
+            let (retained, migrated) =
+                sync_batch(&mut state, &p, &mut active, &pool, depth, 1, nd,
+                           &[1, 2, 2], -1);
+            assert_eq!((retained, migrated), (2, 0), "round {round}");
+            let st = state.as_mut().unwrap();
+            for k in 0..slots {
+                st.caches.literal(k).unwrap(); // the skip path's read
+            }
+        }
+        let st = state.as_mut().unwrap();
+        assert_eq!(st.caches.conversions(), 0,
+                   "steady-state skips must perform zero conversions");
+        assert_eq!(st.caches.literal_hits(), 5 * slots as u64);
+        assert_eq!(pool.stats().allocated, warm_allocs,
+                   "steady-state rounds must not allocate");
+    }
+
+    #[test]
+    fn resident_repack_matches_scratch_rebuild() {
+        // the bit-identity property behind unchanged eps/skipped: under
+        // random batch-membership churn (joins, leaves, row shifts,
+        // bucket changes), the pooled resident caches hold exactly what
+        // a from-scratch per-round rebuild (pooling off) would hold —
+        // same validity, same bytes — for every live row, every round;
+        // and the flushed lane stores agree at the end
+        propcheck(40, |g| {
+            let depth = g.usize_in(1, 3);
+            let slots = 2 * depth;
+            let nd = g.usize_in(1, 4);
+            let nreq = g.usize_in(2, 5);
+            let mut res_active = mk_active(nreq, 50, depth, nd);
+            let mut ref_active = mk_active(nreq, 50, depth, nd);
+            let pool = Rc::new(TensorPool::new());
+            let mut state: Option<BatchState> = None;
+            let rounds = g.usize_in(3, 8);
+            for round in 0..rounds {
+                // random membership: rotate + truncate the request set
+                let mut sel: Vec<usize> = (0..nreq).collect();
+                sel.rotate_left(g.usize_in(0, nreq - 1));
+                sel.truncate(g.usize_in(1, nreq));
+                let mut lanes = Vec::new();
+                for &ri in &sel {
+                    for lane in 0..res_active[ri].req.lanes() {
+                        lanes.push(LaneSlot { req_idx: ri, lane });
+                    }
+                }
+                let bucket = *[1usize, 2, 4, 8, 16]
+                    .iter()
+                    .find(|&&b| b >= lanes.len())
+                    .unwrap();
+                let mut plan = BatchPlan { bucket, lanes };
+                if let Some(st) = &state {
+                    let ids: Vec<u64> =
+                        res_active.iter().map(|a| a.req.id).collect();
+                    stabilize_plan(&mut plan, &st.rows, |idx| ids[idx]);
+                }
+                // resident path (pooling on)
+                sync_batch(&mut state, &plan, &mut res_active, &pool, depth,
+                           1, nd, &[1, 2, 2], -1);
+                // reference path (pooling off): fresh scratch from the
+                // reference lane stores, like the pre-resident engine
+                let mut scratch = BatchCaches::empty(depth, bucket, 1, nd);
+                for (row, slot) in plan.lanes.iter().enumerate() {
+                    let lc = &ref_active[slot.req_idx].caches[slot.lane];
+                    for k in 0..slots {
+                        scratch.valid[k][row] = lc.valid[k];
+                        if lc.valid[k] {
+                            scratch.write_row(k, row, &lc.values[k]);
+                        }
+                    }
+                }
+                let live = plan.live_mask();
+                let st = state.as_mut().unwrap();
+                for k in 0..slots {
+                    let ok_res = cache_ok(&st.caches.valid[k], &live);
+                    let ok_ref = cache_ok(&scratch.valid[k], &live);
+                    assert_eq!(ok_res, ok_ref,
+                               "cache_ok diverged (round {round} slot {k})");
+                    // skip only when the cache gate allows it, like the
+                    // runner; otherwise run and write fresh output
+                    if !ok_res || g.bool() {
+                        sim_run(&mut st.caches, k, bucket, nd, &plan,
+                                &res_active, round);
+                        sim_run(&mut scratch, k, bucket, nd, &plan,
+                                &ref_active, round);
+                    }
+                }
+                // live rows must be bit-identical between the two paths
+                for (row, _) in plan.lanes.iter().enumerate() {
+                    for k in 0..slots {
+                        assert_eq!(st.caches.valid[k][row],
+                                   scratch.valid[k][row],
+                                   "validity diverged r{round} k{k} row{row}");
+                        if st.caches.valid[k][row] {
+                            assert_eq!(st.caches.value(k).row(row),
+                                       scratch.value(k).row(row),
+                                       "bytes diverged r{round} k{k} row{row}");
+                        }
+                    }
+                }
+                // reference engine scatters back every round
+                for (row, slot) in plan.lanes.iter().enumerate() {
+                    scatter_row(&scratch, row,
+                                &mut ref_active[slot.req_idx].caches
+                                    [slot.lane]);
+                }
+            }
+            // endgame: flushed resident lane stores == reference stores
+            flush_batch(&mut state, &mut res_active, &pool);
+            for (a, b) in res_active.iter().zip(&ref_active) {
+                for lane in 0..a.caches.len() {
+                    assert_eq!(a.caches[lane].valid, b.caches[lane].valid,
+                               "flushed validity diverged (req {})", a.req.id);
+                    for k in 0..slots {
+                        if a.caches[lane].valid[k] {
+                            assert_eq!(a.caches[lane].values[k],
+                                       b.caches[lane].values[k],
+                                       "flushed bytes diverged (req {})",
+                                       a.req.id);
+                        }
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn retired_requests_vacate_their_rows() {
+        let (depth, nd) = (1usize, 2usize);
+        let mut active = mk_active(2, 10, depth, nd);
+        let pool = Rc::new(TensorPool::new());
+        let mut state: Option<BatchState> = None;
+        let plan = BatchPlan {
+            bucket: 2,
+            lanes: vec![LaneSlot { req_idx: 0, lane: 0 },
+                        LaneSlot { req_idx: 1, lane: 0 }],
+        };
+        sync_batch(&mut state, &plan, &mut active, &pool, depth, 1, nd,
+                   &[1, 1, 2], -1);
+        let st = state.as_mut().unwrap();
+        st.caches.valid[0][0] = true;
+        st.caches.valid[0][1] = true;
+        st.clear_request(active[0].req.id, -1);
+        assert_eq!(st.rows[0], None, "retired row vacated");
+        assert!(!st.caches.valid[0][0]);
+        assert_eq!(st.rows[1], Some((active[1].req.id, 0)),
+                   "other occupant untouched");
+        assert!(st.caches.valid[0][1]);
+    }
 
     #[test]
     fn bucket_override_restricts_but_never_extends_or_empties() {

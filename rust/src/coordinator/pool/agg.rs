@@ -17,10 +17,16 @@ pub fn merge_layer_stats(a: &mut LayerStats, b: &LayerStats) {
         a.total.resize(b.total.len(), 0);
         a.s_sum.resize(b.s_sum.len(), 0.0);
     }
+    if b.cold_denied.len() > a.cold_denied.len() {
+        a.cold_denied.resize(b.cold_denied.len(), 0);
+    }
     for k in 0..b.skips.len() {
         a.skips[k] += b.skips[k];
         a.total[k] += b.total[k];
         a.s_sum[k] += b.s_sum[k];
+    }
+    for k in 0..b.cold_denied.len() {
+        a.cold_denied[k] += b.cold_denied[k];
     }
 }
 
@@ -34,6 +40,8 @@ pub fn merge_serve_stats(a: &mut ServeStats, b: &ServeStats) {
     a.wall_s = a.wall_s.max(b.wall_s);
     a.module_invocations += b.module_invocations;
     a.module_skips += b.module_skips;
+    a.rows_retained += b.rows_retained;
+    a.rows_migrated += b.rows_migrated;
 }
 
 /// Final pool-wide accounting returned by `Router::shutdown`.
@@ -94,6 +102,15 @@ impl PoolReport {
         self.replicas.iter().map(|r| r.stolen).sum()
     }
 
+    /// Module invocations pool-wide whose skip was denied by a cold
+    /// (freshly-joined) row — batch-coupling lost laziness.
+    pub fn total_cold_denied(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.layer.cold_denied_total())
+            .sum()
+    }
+
     /// Completions per SLO class (`Slo::index()` order): the sum of the
     /// per-replica counters, like every other pool-wide figure.
     pub fn completed_by_slo(&self) -> [u64; Slo::COUNT] {
@@ -138,13 +155,14 @@ impl PoolReport {
         let serve = self.merged_serve();
         out.push_str(&format!(
             "  pool                   {:>6}   {:>6.1}%   {:>7.3}s  {:>7.3}s   \
-             ({} shed, {} stolen)\n",
+             ({} shed, {} stolen, {} cold-denied)\n",
             serve.completed,
             100.0 * self.overall_lazy(),
             serve.mean_latency(),
             serve.p99_latency(),
             serve.shed,
             self.total_steals(),
+            self.total_cold_denied(),
         ));
         let done = self.completed_by_slo();
         out.push_str("  tiers (completed/shed):");
@@ -189,10 +207,12 @@ mod tests {
                 wall_s: 1.0 + id as f64,
                 module_invocations: 2 * depth as u64 * total,
                 module_skips: 2 * depth as u64 * skips,
+                ..Default::default()
             },
             completed_by_slo: [0, 0, completed as u64],
             steals: 0,
             stolen: 0,
+            arena: None,
             error: None,
         }
     }
@@ -251,9 +271,24 @@ mod tests {
         let s = pr.render();
         assert!(s.contains("pool"));
         assert!(s.contains("mean"));
-        assert!(s.contains("(1 shed, 3 stolen)"));
+        assert!(s.contains("(1 shed, 3 stolen, 0 cold-denied)"));
         assert!(s.contains("stole"), "steal column present: {s}");
         assert_eq!(pr.failed(), 0);
+    }
+
+    #[test]
+    fn cold_denied_aggregates_as_a_sum() {
+        let mut a = report(0, 1, 0, 4, 1);
+        a.layer.record_cold_denied(0);
+        a.layer.record_cold_denied(1);
+        let mut b = report(1, 1, 0, 4, 1);
+        b.layer.record_cold_denied(1);
+        let pr = PoolReport { replicas: vec![a, b], shed: 0,
+                              shed_by_slo: [0; Slo::COUNT] };
+        assert_eq!(pr.total_cold_denied(), 3);
+        let merged = pr.merged_layer();
+        assert_eq!(merged.cold_denied, vec![1, 2]);
+        assert!(pr.render().contains("3 cold-denied"), "{}", pr.render());
     }
 
     #[test]

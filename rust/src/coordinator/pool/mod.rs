@@ -83,6 +83,15 @@ pub trait PoolEngine {
 
     /// Human-readable skip-policy label (pool A/B reporting).
     fn policy_name(&self) -> String;
+
+    /// This engine's buffer-arena counters, when it owns one (the real
+    /// engine's per-replica [`crate::tensor::pool::TensorPool`]; the
+    /// synthetic engine has no tensors and returns `None`). Surfaced in
+    /// the final [`ReplicaReport`] so a serving run can verify the
+    /// steady state stopped allocating.
+    fn arena_stats(&self) -> Option<crate::tensor::pool::PoolStats> {
+        None
+    }
 }
 
 /// Constructs a replica's engine *on the replica thread*. The factory is

@@ -142,6 +142,10 @@ pub struct ReplicaGauges {
     pub modules_seen: AtomicU64,
     /// Module invocations skipped (engine layer-stats skips).
     pub modules_skipped: AtomicU64,
+    /// Module invocations whose skip was denied by a cold (freshly-
+    /// joined, cache-invalid) row — laziness lost to all-or-nothing
+    /// batch coupling, surfaced live through the `STATS` wire verb.
+    pub cold_denied: AtomicU64,
     /// Jobs this replica pulled from a sibling's queue while idle.
     pub steals: AtomicU64,
     /// Jobs a sibling pulled out of this replica's queue.
@@ -235,6 +239,10 @@ pub struct ReplicaReport {
     pub steals: u64,
     /// Jobs siblings stole out of this replica's queue.
     pub stolen: u64,
+    /// Final buffer-arena counters, when the engine owns one (real
+    /// engines do; the synthetic engine reports `None`). A healthy
+    /// steady state shows `reused` ≫ `allocated` — see docs/PERF.md.
+    pub arena: Option<crate::tensor::pool::PoolStats>,
     /// Set if the engine failed to construct or a round errored.
     pub error: Option<String>,
 }
@@ -252,6 +260,7 @@ impl ReplicaReport {
             completed_by_slo: [0; Slo::COUNT],
             steals: 0,
             stolen: 0,
+            arena: None,
             error: Some(msg.into()),
         }
     }
@@ -573,6 +582,9 @@ fn run_replica(id: usize, factory: EngineFactory,
                 gauges
                     .modules_skipped
                     .store(ls.skips.iter().sum(), Ordering::Relaxed);
+                gauges
+                    .cold_denied
+                    .store(ls.cold_denied_total(), Ordering::Relaxed);
             }
             Err(e) => {
                 error = Some(format!("step_round failed: {e:#}"));
@@ -602,6 +614,7 @@ fn run_replica(id: usize, factory: EngineFactory,
         completed_by_slo: gauges.completed_by_slo(),
         steals: gauges.steals.load(Ordering::Relaxed),
         stolen: gauges.stolen.load(Ordering::Relaxed),
+        arena: engine.arena_stats(),
         error,
     });
     log::debug!("replica {id} drained");

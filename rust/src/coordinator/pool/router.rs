@@ -164,6 +164,16 @@ impl Router {
         self.rebalancer.is_some()
     }
 
+    /// Module invocations pool-wide whose skip was denied by a cold
+    /// (freshly-joined) row — the live view of laziness lost to
+    /// all-or-nothing batch skip coupling.
+    pub fn total_cold_denied(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.cold_denied.load(Ordering::Relaxed))
+            .sum()
+    }
+
     /// Live pool-wide lazy ratio Γ from the gauges.
     pub fn overall_lazy(&self) -> f64 {
         let (mut seen, mut skipped) = (0u64, 0u64);
@@ -319,6 +329,9 @@ impl Router {
                     ("queued", Json::num(s.queued as f64)),
                     ("pending_steps", Json::num(s.pending_steps as f64)),
                     ("lazy_ratio", Json::num(s.lazy_ratio)),
+                    ("cold_denied",
+                     Json::num(r.gauges.cold_denied.load(Ordering::Relaxed)
+                               as f64)),
                     ("completed",
                      Json::num(r.gauges.completed.load(Ordering::Relaxed)
                                as f64)),
@@ -350,6 +363,7 @@ impl Router {
             ("shed_by_slo", shed_by_slo),
             ("steals", Json::num(self.total_steals() as f64)),
             ("lazy_ratio", Json::num(self.overall_lazy())),
+            ("cold_denied", Json::num(self.total_cold_denied() as f64)),
         ])
         .to_string()
     }

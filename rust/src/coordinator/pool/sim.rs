@@ -108,10 +108,17 @@ impl SimEngine {
         Box::new(move || Ok(Box::new(SimEngine::new(spec)) as Box<dyn PoolEngine>))
     }
 
+    /// Would the gates skip (step, module slot)? Pure lazy-target draw,
+    /// before the cache gate.
+    fn would_skip(&self, step: usize, k: usize) -> bool {
+        mix(step as u64, k as u64) % 100 < self.spec.lazy_pct as u64
+    }
+
     /// Deterministic skip decision for (step, module slot). Step 0 never
-    /// skips (no cache yet), mirroring the real engine's cache gate.
+    /// skips (no cache yet), mirroring the real engine's cache gate; a
+    /// step-0 would-skip counts as a cold-row denial in `LayerStats`.
     fn wants_skip(&self, step: usize, k: usize) -> bool {
-        step > 0 && mix(step as u64, k as u64) % 100 < self.spec.lazy_pct as u64
+        step > 0 && self.would_skip(step, k)
     }
 }
 
@@ -194,6 +201,12 @@ impl PoolEngine for SimEngine {
                     self.active[ai].skip_counts[k] += 1;
                     self.serve_stats.module_skips += 1;
                 } else {
+                    if step == 0 && self.would_skip(step, k) {
+                        // the gates wanted to skip; the cold cache said
+                        // run — the same lost laziness the real engine
+                        // reports for freshly-joined rows
+                        self.layer_stats.record_cold_denied(k);
+                    }
                     spin(self.spec.work_per_module);
                 }
             }

@@ -10,6 +10,11 @@ pub struct LayerStats {
     pub total: Vec<u64>,
     /// Sum of gate values per slot (for mean-s reporting).
     pub s_sum: Vec<f64>,
+    /// [2L]: invocations whose skip was *denied by a cold row* — the
+    /// gates wanted to reuse the cache but a freshly-joined (cache-
+    /// invalid) row forced the whole batch to run. The observable cost
+    /// of all-or-nothing batch skip coupling (surfaced via `STATS`).
+    pub cold_denied: Vec<u64>,
 }
 
 impl LayerStats {
@@ -18,6 +23,7 @@ impl LayerStats {
             skips: vec![0; 2 * depth],
             total: vec![0; 2 * depth],
             s_sum: vec![0.0; 2 * depth],
+            cold_denied: vec![0; 2 * depth],
         }
     }
 
@@ -31,6 +37,16 @@ impl LayerStats {
         if skipped {
             self.skips[slot] += 1;
         }
+    }
+
+    /// Count one cold-row skip denial on `slot` (see `cold_denied`).
+    pub fn record_cold_denied(&mut self, slot: usize) {
+        self.cold_denied[slot] += 1;
+    }
+
+    /// Total cold-row denials across all slots (the `STATS` gauge).
+    pub fn cold_denied_total(&self) -> u64 {
+        self.cold_denied.iter().sum()
     }
 
     /// Lazy ratio of the attn module at layer l.
@@ -92,6 +108,12 @@ pub struct ServeStats {
     pub wall_s: f64,
     pub module_invocations: u64,
     pub module_skips: u64,
+    /// Batch rows carried across consecutive rounds without any cache
+    /// copy (the engine's persistent-slot repack; steady state is all
+    /// retained).
+    pub rows_retained: u64,
+    /// Batch rows migrated (evicted/loaded) on membership change.
+    pub rows_migrated: u64,
 }
 
 impl ServeStats {
@@ -154,8 +176,20 @@ mod tests {
             wall_s: 5.0,
             module_invocations: 100,
             module_skips: 30,
+            ..Default::default()
         };
         assert!((st.throughput() - 2.0).abs() < 1e-9);
         assert!((st.mean_latency() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cold_denied_counters() {
+        let mut st = LayerStats::new(2);
+        assert_eq!(st.cold_denied_total(), 0);
+        st.record_cold_denied(1);
+        st.record_cold_denied(1);
+        st.record_cold_denied(3);
+        assert_eq!(st.cold_denied, vec![0, 2, 0, 1]);
+        assert_eq!(st.cold_denied_total(), 3);
     }
 }

@@ -11,24 +11,148 @@ use crate::model::params::{GateWeights, WeightSet};
 use crate::runtime::engine_rt::{Executable, Runtime};
 use crate::runtime::manifest::ManifestConfig;
 use crate::runtime::value::HostValue;
+use crate::tensor::pool::TensorPool;
 use crate::tensor::Tensor;
 use anyhow::{bail, Result};
 use std::rc::Rc;
 
-/// Per-module batch cache: the previous step's module outputs Y_{l,t-1}.
-#[derive(Debug, Clone)]
+/// Per-module batch cache: the previous step's module outputs Y_{l,t-1},
+/// held in *dual representation* — the host tensor plus a memoized XLA
+/// literal of it, built lazily and invalidated only when a fresh module
+/// output (or a migrated row) is written. A skipped module therefore
+/// hands `apply` a pre-built literal with zero tensor clones and zero
+/// host→literal conversions in the steady state (docs/PERF.md).
+///
+/// Invariant: `lits[k]`, when present, is byte-identical to a conversion
+/// of `values[k]` — every mutation of slot `k` goes through a method
+/// that either drops or replaces the memo.
 pub struct BatchCaches {
     /// [2L] tensors of [B, N, D]; index 2l+m (m: attn=0, ffn=1).
-    pub values: Vec<Tensor>,
+    values: Vec<Tensor>,
     /// Row validity: values[k].row(i) meaningful iff valid[k][i].
+    /// Flipping a validity bit never touches the tensor, so it does not
+    /// invalidate the literal memo.
     pub valid: Vec<Vec<bool>>,
+    /// Memoized literal per slot (None = stale or never built).
+    lits: Vec<Option<xla::Literal>>,
+    /// Arena the slot tensors were drawn from and return to.
+    pool: Rc<TensorPool>,
+    /// Host→literal conversions performed (the zero-copy test hook:
+    /// flat across steady-state skip steps).
+    conversions: u64,
+    /// Memo hits: literals served without a conversion.
+    lit_hits: u64,
+}
+
+impl std::fmt::Debug for BatchCaches {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BatchCaches")
+            .field("slots", &self.values.len())
+            .field("valid", &self.valid)
+            .field("conversions", &self.conversions)
+            .field("lit_hits", &self.lit_hits)
+            .finish()
+    }
 }
 
 impl BatchCaches {
+    /// A cold cache backed by its own private arena (tests, profiling).
+    /// Serving paths share the runner's arena via [`Self::with_pool`].
     pub fn empty(depth: usize, b: usize, n: usize, d: usize) -> BatchCaches {
+        Self::with_pool(Rc::new(TensorPool::new()), depth, b, n, d)
+    }
+
+    /// A cold cache whose `[B, N, D]` slots are acquired from `pool`
+    /// (and return to it via [`Self::release_into_pool`] / slot swaps).
+    pub fn with_pool(pool: Rc<TensorPool>, depth: usize, b: usize, n: usize,
+                     d: usize) -> BatchCaches {
         BatchCaches {
-            values: (0..2 * depth).map(|_| Tensor::zeros(&[b, n, d])).collect(),
+            values: (0..2 * depth).map(|_| pool.acquire(&[b, n, d])).collect(),
             valid: vec![vec![false; b]; 2 * depth],
+            lits: (0..2 * depth).map(|_| None).collect(),
+            pool,
+            conversions: 0,
+            lit_hits: 0,
+        }
+    }
+
+    /// Number of module slots (2·depth).
+    pub fn slots(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Read access to a slot's host tensor.
+    pub fn value(&self, k: usize) -> &Tensor {
+        &self.values[k]
+    }
+
+    /// Overwrite one row of slot `k` (cache migration on batch-membership
+    /// change). Drops the slot's literal memo — the tensor diverged.
+    pub fn write_row(&mut self, k: usize, row: usize, src: &[f32]) {
+        self.values[k].row_mut(row).copy_from_slice(src);
+        self.lits[k] = None;
+    }
+
+    /// Install a fresh module output for slot `k`: the tensor is *moved*
+    /// in (no clone), the literal the run path already built for `apply`
+    /// becomes the memo, and the displaced tensor's buffer returns to
+    /// the arena.
+    pub fn store_fresh(&mut self, k: usize, f: Tensor, lit: xla::Literal) {
+        let old = std::mem::replace(&mut self.values[k], f);
+        self.pool.release(old);
+        self.lits[k] = Some(lit);
+    }
+
+    /// The slot's literal: served from the memo when the tensor hasn't
+    /// changed since the last call, converted (and memoized) otherwise.
+    pub fn literal(&mut self, k: usize) -> Result<&xla::Literal> {
+        if self.lits[k].is_none() {
+            self.conversions += 1;
+            self.lits[k] = Some(HostValue::f32_literal(&self.values[k])?);
+        } else {
+            self.lit_hits += 1;
+        }
+        Ok(self.lits[k].as_ref().expect("just filled"))
+    }
+
+    /// Migrate rows from another cache set (the engine's bucket-change
+    /// repack): per slot, gather `src`'s rows named by `idx`
+    /// (`usize::MAX` ⇒ zeroed padding) into this cache's tensor via
+    /// [`Tensor::gather_rows_into`] — reusing the destination buffer —
+    /// carry the validity bits along, and drop the literal memos.
+    pub fn gather_from(&mut self, src: &BatchCaches, idx: &[usize]) {
+        for k in 0..self.values.len() {
+            src.values[k].gather_rows_into(idx, &mut self.values[k]);
+            self.lits[k] = None;
+            for (r, &i) in idx.iter().enumerate() {
+                self.valid[k][r] = i != usize::MAX && src.valid[k][i];
+            }
+        }
+    }
+
+    /// Mark every slot's `row` invalid (a request left the batch). The
+    /// tensors are untouched, so literal memos stay valid.
+    pub fn clear_row(&mut self, row: usize) {
+        for v in self.valid.iter_mut() {
+            v[row] = false;
+        }
+    }
+
+    /// Host→literal conversions performed so far (test hook).
+    pub fn conversions(&self) -> u64 {
+        self.conversions
+    }
+
+    /// Literal requests served from the memo (test hook).
+    pub fn literal_hits(&self) -> u64 {
+        self.lit_hits
+    }
+
+    /// Return every slot buffer to the arena (bucket change / drain).
+    pub fn release_into_pool(self) {
+        let BatchCaches { values, pool, .. } = self;
+        for v in values {
+            pool.release(v);
         }
     }
 }
@@ -42,6 +166,11 @@ pub struct StepOutcome {
     pub s_vals: Vec<Vec<f32>>,
     /// Whether each module invocation was skipped: [2L].
     pub skipped: Vec<bool>,
+    /// Per module slot [2L]: the gates *wanted* to skip but a cold
+    /// (cache-invalid) live row forced the whole batch to run — the
+    /// laziness lost to all-or-nothing batch coupling when a fresh
+    /// request joins (observable via `STATS` as `cold_denied`).
+    pub skip_denied_cold: Vec<bool>,
 }
 
 /// Aggregated laziness accounting (the paper's Γ, per scope).
@@ -53,6 +182,12 @@ pub struct StepStats {
     pub attn_skipped: usize,
     pub ffn_total: usize,
     pub ffn_skipped: usize,
+    /// Module invocations whose skip was denied by a cold row only.
+    pub modules_denied_cold: usize,
+    /// Cold-row denials on MHSA slots.
+    pub attn_denied_cold: usize,
+    /// Cold-row denials on FFN slots.
+    pub ffn_denied_cold: usize,
 }
 
 impl StepStats {
@@ -75,6 +210,14 @@ impl StepStats {
                     self.attn_skipped += 1;
                 } else {
                     self.ffn_skipped += 1;
+                }
+            }
+            if outcome.skip_denied_cold.get(k).copied().unwrap_or(false) {
+                self.modules_denied_cold += 1;
+                if is_attn {
+                    self.attn_denied_cold += 1;
+                } else {
+                    self.ffn_denied_cold += 1;
                 }
             }
         }
@@ -120,6 +263,14 @@ fn lits(vals: &[HostValue]) -> Result<Vec<xla::Literal>> {
     vals.iter().map(|v| v.to_literal()).collect()
 }
 
+/// The runner's arena, sized to the acquire-side demand: a batch
+/// rebuild draws the 2L cache slots of one size class (plus a `z` and
+/// a couple of transients in other classes). The hot loop's release
+/// flux is one-way, so anything beyond this would park dead buffers.
+fn arena_for(cfg: &ManifestConfig) -> TensorPool {
+    TensorPool::with_capacity(2 * cfg.model.depth + 2)
+}
+
 impl LitWeights {
     fn build(w: &WeightSet, g: &GateWeights) -> Result<LitWeights> {
         let pair2 = |arr: &[Vec<HostValue>; 2]| -> Result<[Vec<xla::Literal>; 2]> {
@@ -146,7 +297,8 @@ impl LitWeights {
     }
 }
 
-/// The model runner: weights + gate weights + per-bucket executables.
+/// The model runner: weights + gate weights + per-bucket executables +
+/// the buffer arena the step loop recycles transients through.
 pub struct ModelRunner {
     rt: Rc<Runtime>,
     pub cfg: ManifestConfig,
@@ -154,6 +306,11 @@ pub struct ModelRunner {
     pub gates: GateWeights,
     lit: LitWeights,
     buckets: Vec<BucketExes>,
+    /// Per-runner (hence per-replica) buffer arena: the step loop's
+    /// transient `[B, N, D]` tensors and the engine's batch caches all
+    /// draw from and return to it, so the steady state allocates
+    /// nothing (docs/PERF.md).
+    pool: Rc<TensorPool>,
 }
 
 impl ModelRunner {
@@ -162,7 +319,9 @@ impl ModelRunner {
         let weights = WeightSet::from_flat(&cfg, theta)?;
         let gates = GateWeights::from_flat(&cfg, gamma)?;
         let lit = LitWeights::build(&weights, &gates)?;
-        Ok(ModelRunner { rt, cfg, weights, gates, lit, buckets: Vec::new() })
+        let pool = Rc::new(arena_for(&cfg));
+        Ok(ModelRunner { rt, cfg, weights, gates, lit, buckets: Vec::new(),
+                         pool })
     }
 
     /// Same runner with laziness disabled (DDIM baseline path).
@@ -171,7 +330,15 @@ impl ModelRunner {
         let weights = WeightSet::from_flat(&cfg, theta)?;
         let gates = GateWeights::disabled(&cfg);
         let lit = LitWeights::build(&weights, &gates)?;
-        Ok(ModelRunner { rt, cfg, weights, gates, lit, buckets: Vec::new() })
+        let pool = Rc::new(arena_for(&cfg));
+        Ok(ModelRunner { rt, cfg, weights, gates, lit, buckets: Vec::new(),
+                         pool })
+    }
+
+    /// The runner's buffer arena — engines share it with their batch
+    /// caches so cache slots and step transients recycle into each other.
+    pub fn pool(&self) -> &Rc<TensorPool> {
+        &self.pool
     }
 
     /// Replace gate weights (penalty sweeps re-use compiled executables).
@@ -235,13 +402,13 @@ impl ModelRunner {
         debug_assert_eq!(z.shape()[0], b);
         debug_assert_eq!(t.len(), b);
 
-        // dynamic inputs: converted once per step (weights are pre-built
-        // literals — see LitWeights)
+        // dynamic inputs: converted once per step, borrowed in place
+        // (weights are pre-built literals — see LitWeights)
         let t_lit = HostValue::F32(Tensor::from_vec(&[b], t.to_vec())?)
             .to_literal()?;
         let y_lit = HostValue::I32 { shape: vec![b], data: y.to_vec() }
             .to_literal()?;
-        let z_lit = HostValue::F32(z.clone()).to_literal()?;
+        let z_lit = HostValue::f32_literal(z)?;
 
         // ---- embed
         let mut embed_args: Vec<&xla::Literal> = vec![&z_lit, &t_lit, &y_lit];
@@ -249,15 +416,17 @@ impl ModelRunner {
         let mut out = self.buckets[bi].embed.call_lit(&embed_args)?;
         let c = out.pop().unwrap().as_f32()?;
         let mut x = out.pop().unwrap().as_f32()?;
-        let c_lit = HostValue::F32(c).to_literal()?;
+        let c_lit = HostValue::f32_literal(&c)?;
+        self.pool.release(c); // only the literal is needed downstream
 
         let mut s_vals: Vec<Vec<f32>> = Vec::with_capacity(2 * depth);
         let mut skipped: Vec<bool> = Vec::with_capacity(2 * depth);
+        let mut skip_denied_cold: Vec<bool> = Vec::with_capacity(2 * depth);
 
         for l in 0..depth {
             for mi in 0..2usize {
                 let k = 2 * l + mi;
-                let x_lit = HostValue::F32(x.clone()).to_literal()?;
+                let x_lit = HostValue::f32_literal(&x)?;
                 // ---- fused LN + modulate + gate
                 let mut mg_args: Vec<&xla::Literal> = vec![&x_lit, &c_lit];
                 mg_args.extend(self.lit.modulate[l][mi].iter());
@@ -267,9 +436,9 @@ impl ModelRunner {
                 let mut mg_out = self.buckets[bi].modgate.call_lit(&mg_args)?;
                 let s = mg_out.pop().unwrap().as_f32()?;
                 let zmod = mg_out.pop().unwrap().as_f32()?;
-                let s_rows: Vec<f32> = s.data().to_vec();
 
-                // ---- decision
+                // ---- decision (reads the gate tensor in place — no
+                // per-module copy of s just to reduce over it)
                 let in_scope = if mi == 0 {
                     dec.scope.covers_attn()
                 } else {
@@ -280,20 +449,27 @@ impl ModelRunner {
                     .enumerate()
                     .filter(|(_, &lv)| lv)
                     .all(|(i, _)| caches.valid[k][i]);
-                let want_skip = match forced {
-                    Some(mask) => mask[k] && cache_ok,
+                let would_skip = match forced {
+                    Some(mask) => mask[k],
                     None => in_scope
-                        && cache_ok
-                        && decide(dec.policy, dec.threshold, &s_rows, live),
+                        && decide(dec.policy, dec.threshold, s.data(), live),
                 };
+                let blend = dec.policy == SkipPolicy::Blend;
+                let skip_now = would_skip && cache_ok && !blend;
+                skipped.push(skip_now);
+                // laziness lost to all-or-nothing batch coupling: the
+                // gates said skip, a cold live row said run
+                skip_denied_cold.push(would_skip && !cache_ok && !blend);
 
-                let f = if want_skip && dec.policy != SkipPolicy::Blend {
-                    // ---- SKIP: reuse Y_{l,t-1}; the module executable is
-                    // never invoked — this is the latency win.
-                    caches.values[k].clone()
+                if skip_now {
+                    // ---- SKIP: reuse Y_{l,t-1}; the module executable
+                    // is never invoked, and the cache flows to `apply`
+                    // below as its memoized literal — zero clones, zero
+                    // conversions (the latency win, now allocation-free)
+                    self.pool.release(zmod);
                 } else {
                     // ---- RUN the module
-                    let zmod_lit = HostValue::F32(zmod).to_literal()?;
+                    let zmod_lit = HostValue::f32_literal(&zmod)?;
                     let mut m_args: Vec<&xla::Literal> = vec![&zmod_lit];
                     let (exe, warr) = if mi == 0 {
                         (&self.buckets[bi].attn, &self.lit.attn[l])
@@ -303,68 +479,90 @@ impl ModelRunner {
                     m_args.extend(warr.iter());
                     let mut m_out = exe.call_lit(&m_args)?;
                     let mut f = m_out.pop().unwrap().as_f32()?;
-                    if dec.policy == SkipPolicy::Blend && in_scope {
+                    if blend && in_scope {
                         // training-faithful blending with the cache
-                        blend_rows(&mut f, &caches.values[k], &caches.valid[k],
-                                   &s_rows);
+                        blend_rows(&mut f, caches.value(k), &caches.valid[k],
+                                   s.data());
                     }
-                    // update cache with the fresh (possibly blended) output
-                    caches.values[k] = f.clone();
+                    // the run path needs the literal for `apply` anyway;
+                    // move both the tensor and the literal into the
+                    // cache so the next step's skip is free
+                    let f_lit = HostValue::f32_literal(&f)?;
+                    caches.store_fresh(k, f, f_lit);
                     for (i, &lv) in live.iter().enumerate() {
                         if lv {
                             caches.valid[k][i] = true;
                         }
                     }
-                    f
-                };
-                skipped.push(want_skip && dec.policy != SkipPolicy::Blend);
-                s_vals.push(s_rows);
+                    self.pool.release(zmod);
+                }
+                // the gate vector is moved (not copied) into the outcome
+                s_vals.push(s.into_vec());
 
                 // ---- apply: x + alpha(c) ∘ f  (always runs; paper keeps
-                // scale/shift/residual on skip steps)
-                let f_lit = HostValue::F32(f).to_literal()?;
+                // scale/shift/residual on skip steps). `f` arrives as the
+                // cache slot's literal on both paths.
+                let f_lit = caches.literal(k)?;
                 let mut ap_args: Vec<&xla::Literal> = vec![&x_lit, &c_lit];
                 ap_args.extend(self.lit.apply[l][mi].iter());
-                ap_args.push(&f_lit);
+                ap_args.push(f_lit);
                 let mut ap_out = self.buckets[bi].apply.call_lit(&ap_args)?;
-                x = ap_out.pop().unwrap().as_f32()?;
+                let new_x = ap_out.pop().unwrap().as_f32()?;
+                self.pool.release(std::mem::replace(&mut x, new_x));
             }
         }
 
         // ---- final
-        let x_lit = HostValue::F32(x).to_literal()?;
+        let x_lit = HostValue::f32_literal(&x)?;
         let mut fin_args: Vec<&xla::Literal> = vec![&x_lit, &c_lit];
         fin_args.extend(self.lit.final_.iter());
         let mut fin_out = self.buckets[bi].final_.call_lit(&fin_args)?;
         let eps = fin_out.pop().unwrap().as_f32()?;
+        self.pool.release(x);
 
-        Ok(StepOutcome { eps, s_vals, skipped })
+        Ok(StepOutcome { eps, s_vals, skipped, skip_denied_cold })
     }
 }
 
 /// Aggregate per-row gate values into one skip decision (DESIGN.md §7).
+/// Allocation-free: it runs 2L times per step on every replica, so the
+/// reduction streams over the live rows instead of collecting them.
+/// No live rows ⇒ never skip, under every policy.
 pub fn decide(policy: SkipPolicy, threshold: f32, s: &[f32], live: &[bool]) -> bool {
-    let rows: Vec<f32> = s
-        .iter()
-        .zip(live)
-        .filter(|(_, &lv)| lv)
-        .map(|(&v, _)| v)
-        .collect();
-    if rows.is_empty() {
-        return false;
-    }
+    debug_assert_eq!(s.len(), live.len());
+    let live_rows = || s.iter().zip(live).filter(|(_, &lv)| lv).map(|(&v, _)| v);
     match policy {
         SkipPolicy::Never => false,
         SkipPolicy::Blend => false, // handled in runner (always runs)
         SkipPolicy::Mean => {
-            rows.iter().sum::<f32>() / rows.len() as f32 > threshold
+            let (mut sum, mut n) = (0.0f32, 0usize);
+            for v in live_rows() {
+                sum += v;
+                n += 1;
+            }
+            n > 0 && sum / n as f32 > threshold
         }
         SkipPolicy::Majority => {
-            let n = rows.iter().filter(|&&v| v > threshold).count();
-            2 * n > rows.len()
+            let (mut above, mut n) = (0usize, 0usize);
+            for v in live_rows() {
+                if v > threshold {
+                    above += 1;
+                }
+                n += 1;
+            }
+            2 * above > n // n == 0 ⇒ false
         }
-        SkipPolicy::All => rows.iter().all(|&v| v > threshold),
-        SkipPolicy::Any => rows.iter().any(|&v| v > threshold),
+        SkipPolicy::All => {
+            let mut n = 0usize;
+            for v in live_rows() {
+                if v <= threshold {
+                    return false;
+                }
+                n += 1;
+            }
+            n > 0
+        }
+        SkipPolicy::Any => live_rows().any(|v| v > threshold),
     }
 }
 
@@ -427,6 +625,7 @@ mod tests {
             eps: Tensor::zeros(&[1]),
             s_vals: vec![vec![0.9], vec![0.1], vec![0.9], vec![0.2]],
             skipped: vec![true, false, true, false],
+            skip_denied_cold: vec![false, true, false, false],
         };
         let mut st = StepStats::default();
         st.absorb(&outcome);
@@ -434,6 +633,101 @@ mod tests {
         assert_eq!(st.modules_skipped, 2);
         assert_eq!(st.attn_skipped, 2);
         assert_eq!(st.ffn_skipped, 0);
+        assert_eq!(st.modules_denied_cold, 1);
+        assert_eq!(st.attn_denied_cold, 0);
+        assert_eq!(st.ffn_denied_cold, 1);
         assert!((st.lazy_ratio() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn literal_cache_write_then_skip_reuses() {
+        // the tentpole invariant: consecutive literal() calls without a
+        // tensor write perform exactly one conversion (steady-state
+        // skips are conversion-free)
+        let mut c = BatchCaches::empty(1, 2, 2, 2);
+        assert_eq!(c.conversions(), 0);
+        c.literal(0).unwrap();
+        assert_eq!((c.conversions(), c.literal_hits()), (1, 0));
+        c.literal(0).unwrap();
+        c.literal(0).unwrap();
+        assert_eq!((c.conversions(), c.literal_hits()), (1, 2));
+        // other slots have their own memo
+        c.literal(1).unwrap();
+        assert_eq!(c.conversions(), 2);
+    }
+
+    #[test]
+    fn literal_cache_write_invalidates() {
+        let mut c = BatchCaches::empty(1, 2, 1, 2);
+        c.literal(0).unwrap();
+        // a row write (cache migration) drops the memo...
+        c.write_row(0, 1, &[5.0, 6.0]);
+        let lit = c.literal(0).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![0., 0., 5., 6.]);
+        assert_eq!(c.conversions(), 2, "stale memo must not be served");
+        // ...and the rebuilt memo is served from then on
+        c.literal(0).unwrap();
+        assert_eq!(c.conversions(), 2);
+    }
+
+    #[test]
+    fn store_fresh_memoizes_without_converting() {
+        let mut c = BatchCaches::empty(1, 1, 1, 2);
+        let f = Tensor::from_vec(&[1, 1, 2], vec![3.0, 4.0]).unwrap();
+        let lit = crate::runtime::value::HostValue::f32_literal(&f).unwrap();
+        c.store_fresh(0, f, lit);
+        // the run path's literal becomes the memo: the following skip
+        // performs zero conversions
+        let got = c.literal(0).unwrap();
+        assert_eq!(got.to_vec::<f32>().unwrap(), vec![3.0, 4.0]);
+        assert_eq!((c.conversions(), c.literal_hits()), (0, 1));
+        assert_eq!(c.value(0).data(), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_memo_tracks_tensor_exactly() {
+        use crate::util::propcheck::propcheck;
+        // coherence property: after any interleaving of row writes,
+        // fresh stores, and literal reads, literal(k) always equals a
+        // from-scratch conversion of value(k)
+        propcheck(60, |g| {
+            let b = g.usize_in(1, 4);
+            let nd = g.usize_in(1, 6);
+            let mut c = BatchCaches::empty(1, b, 1, nd);
+            for _ in 0..g.usize_in(1, 12) {
+                match g.usize_in(0, 2) {
+                    0 => {
+                        let row = g.usize_in(0, b - 1);
+                        let src = g.vec_f32(nd, -2.0, 2.0);
+                        c.write_row(0, row, &src);
+                    }
+                    1 => {
+                        let data = g.vec_f32(b * nd, -2.0, 2.0);
+                        let f = Tensor::from_vec(&[b, 1, nd], data).unwrap();
+                        let lit =
+                            crate::runtime::value::HostValue::f32_literal(&f)
+                                .unwrap();
+                        c.store_fresh(0, f, lit);
+                    }
+                    _ => {
+                        c.literal(0).unwrap();
+                    }
+                }
+                let expect = c.value(0).data().to_vec();
+                let got = c.literal(0).unwrap().to_vec::<f32>().unwrap();
+                assert_eq!(got, expect, "memo diverged from tensor");
+            }
+        });
+    }
+
+    #[test]
+    fn clear_row_keeps_memo() {
+        let mut c = BatchCaches::empty(2, 2, 1, 2);
+        c.literal(1).unwrap();
+        c.valid[1][0] = true;
+        c.clear_row(0);
+        assert!(!c.valid[1][0]);
+        c.literal(1).unwrap();
+        assert_eq!(c.conversions(), 1, "validity flips are memo-neutral");
     }
 }

@@ -49,6 +49,16 @@ impl HostValue {
         Ok(lit)
     }
 
+    /// Build an f32 literal from a *borrowed* tensor. Equivalent to
+    /// `HostValue::F32(t.clone()).to_literal()` minus the clone — the
+    /// hot-path variant: the step loop converts `x`/`f` once per module
+    /// and must not pay an extra `[B, N, D]` copy just to wrap the
+    /// tensor in an owned enum first.
+    pub fn f32_literal(t: &Tensor) -> Result<Literal> {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        Ok(Literal::vec1(t.data()).reshape(&dims)?)
+    }
+
     /// Convert an XLA literal back to a host value.
     pub fn from_literal(lit: &Literal) -> Result<HostValue> {
         let shape = lit.array_shape()?;

@@ -5,6 +5,8 @@
 
 use anyhow::{bail, Result};
 
+pub mod pool;
+
 /// A contiguous row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
@@ -88,16 +90,37 @@ impl Tensor {
 
     /// Gather rows into a new tensor with leading dim = idx.len(),
     /// padding with zeros for indices == usize::MAX (bucket padding).
+    /// Only padding rows are zero-filled; gathered rows are written
+    /// exactly once (no full-output memset before the copy loop).
     pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
         let r = self.row_len();
-        let mut out = Tensor::zeros(&new_shape0(&self.shape, idx.len()));
-        for (k, &i) in idx.iter().enumerate() {
+        let mut data = Vec::with_capacity(r * idx.len());
+        for &i in idx {
             if i != usize::MAX {
-                out.data[k * r..(k + 1) * r]
-                    .copy_from_slice(&self.data[i * r..(i + 1) * r]);
+                data.extend_from_slice(&self.data[i * r..(i + 1) * r]);
+            } else {
+                data.resize(data.len() + r, 0.0);
             }
         }
-        out
+        Tensor { shape: new_shape0(&self.shape, idx.len()), data }
+    }
+
+    /// [`gather_rows`](Self::gather_rows) into an existing destination,
+    /// reusing its buffer (the batcher's repack path: no allocation, and
+    /// only padding rows pay a memset). `out` must already have leading
+    /// dim `idx.len()` and matching row length.
+    pub fn gather_rows_into(&self, idx: &[usize], out: &mut Tensor) {
+        let r = self.row_len();
+        debug_assert_eq!(out.row_len(), r);
+        debug_assert_eq!(out.dim0(), idx.len());
+        for (k, &i) in idx.iter().enumerate() {
+            let dst = &mut out.data[k * r..(k + 1) * r];
+            if i != usize::MAX {
+                dst.copy_from_slice(&self.data[i * r..(i + 1) * r]);
+            } else {
+                dst.fill(0.0);
+            }
+        }
     }
 
     /// Reshape view (same element count).
@@ -213,6 +236,21 @@ mod tests {
         assert_eq!(g.row(0), &[5., 6.]);
         assert_eq!(g.row(1), &[1., 2.]);
         assert_eq!(g.row(2), &[0., 0.]); // padding
+    }
+
+    #[test]
+    fn gather_rows_into_reuses_destination() {
+        let t = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        // destination pre-filled with garbage: gathered rows overwrite,
+        // padding rows are the only memset
+        let mut out = Tensor::from_vec(&[3, 2], vec![9.0; 6]).unwrap();
+        t.gather_rows_into(&[1, usize::MAX, 0], &mut out);
+        assert_eq!(out.row(0), &[3., 4.]);
+        assert_eq!(out.row(1), &[0., 0.]);
+        assert_eq!(out.row(2), &[1., 2.]);
+        // agrees with the allocating variant on every index pattern
+        let g = t.gather_rows(&[1, usize::MAX, 0]);
+        assert_eq!(g, out);
     }
 
     #[test]

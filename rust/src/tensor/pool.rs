@@ -1,0 +1,222 @@
+//! `TensorPool` — a per-replica buffer arena for the denoise hot path.
+//!
+//! The step loop used to churn one fresh `Vec<f32>` per module per step
+//! (`x.clone()`, `f.clone()`, cache rebuilds): at `[B, N, D]` sizes that
+//! is megabytes of malloc/free traffic per denoise step. The arena
+//! recycles same-sized buffers instead: `acquire` pops a retained buffer
+//! when one of the right element count exists and only heap-allocates
+//! otherwise; `release` returns a tensor's storage for the next
+//! acquirer.
+//!
+//! Ownership: each replica's engine owns exactly one arena (constructed
+//! by its [`crate::model::runner::ModelRunner`], shared via `Rc` with
+//! the engine's persistent batch state). The pool is single-threaded by
+//! construction — replicas never share engines — so interior
+//! mutability is `RefCell`/`Cell`, not locks.
+//!
+//! Accounting: `allocated` / `reused` / `released` counters are the
+//! test hook behind the zero-copy acceptance check — a steady-state
+//! denoise loop must show `allocated` flat while `reused` grows (see
+//! docs/PERF.md).
+
+use crate::tensor::Tensor;
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+
+/// Default per-class retention cap (see [`TensorPool::with_capacity`]).
+/// The steady-state step loop *releases* far more often than it
+/// *acquires* (acquires happen only on batch rebuilds), so an oversized
+/// cap just hoards dead buffers — the cap must track the rebuild
+/// demand, which is 2L cache slots per size class plus a transient or
+/// two. Runners size it from their model depth; this default covers
+/// tests and ad-hoc pools.
+const DEFAULT_RETAINED_PER_CLASS: usize = 8;
+
+/// Point-in-time arena counters (the allocation-counting test hook).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffers created fresh on the heap (pool misses).
+    pub allocated: u64,
+    /// Buffers served from the free list (pool hits).
+    pub reused: u64,
+    /// Buffers returned to the pool.
+    pub released: u64,
+    /// Free buffers currently retained across all size classes.
+    pub retained: usize,
+}
+
+/// A size-classed free list of `f32` buffers. See the module docs.
+#[derive(Debug)]
+pub struct TensorPool {
+    /// Free buffers keyed by element count.
+    free: RefCell<BTreeMap<usize, Vec<Vec<f32>>>>,
+    /// Per-class retention bound: `release` drops beyond it.
+    cap_per_class: usize,
+    allocated: Cell<u64>,
+    reused: Cell<u64>,
+    released: Cell<u64>,
+}
+
+impl Default for TensorPool {
+    fn default() -> TensorPool {
+        TensorPool::with_capacity(DEFAULT_RETAINED_PER_CLASS)
+    }
+}
+
+impl TensorPool {
+    /// An empty arena with the default per-class retention cap.
+    pub fn new() -> TensorPool {
+        TensorPool::default()
+    }
+
+    /// An empty arena retaining at most `cap_per_class` free buffers
+    /// per size class. Size it to the acquire-side demand — an engine's
+    /// batch rebuild draws 2L cache slots of one class plus one `z` —
+    /// because the hot loop's release flux is one-way (a bigger cap
+    /// only parks dead memory, it never increases reuse).
+    pub fn with_capacity(cap_per_class: usize) -> TensorPool {
+        TensorPool {
+            free: RefCell::new(BTreeMap::new()),
+            cap_per_class: cap_per_class.max(1),
+            allocated: Cell::new(0),
+            reused: Cell::new(0),
+            released: Cell::new(0),
+        }
+    }
+
+    /// A zero-filled tensor of `shape`, recycling a retained buffer of
+    /// the same element count when one exists. Reused buffers are
+    /// re-zeroed (memset), so an acquired tensor is indistinguishable
+    /// from `Tensor::zeros` — stale contents can never leak between
+    /// occupants.
+    pub fn acquire(&self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        let buf = self.free.borrow_mut().get_mut(&n).and_then(Vec::pop);
+        match buf {
+            Some(mut data) => {
+                self.reused.set(self.reused.get() + 1);
+                data.fill(0.0);
+                Tensor::from_vec(shape, data).expect("pool size class")
+            }
+            None => {
+                self.allocated.set(self.allocated.get() + 1);
+                Tensor::zeros(shape)
+            }
+        }
+    }
+
+    /// Return a tensor's storage to the arena. Shape is forgotten —
+    /// only the element count keys the free list — so a `[B, N, D]`
+    /// cache slot and a flat scratch buffer of the same size recycle
+    /// into each other.
+    pub fn release(&self, t: Tensor) {
+        let data = t.into_vec();
+        if data.is_empty() {
+            return;
+        }
+        let n = data.len();
+        let mut free = self.free.borrow_mut();
+        let class = free.entry(n).or_default();
+        if class.len() < self.cap_per_class {
+            class.push(data);
+            self.released.set(self.released.get() + 1);
+        }
+    }
+
+    /// Live counters (see [`PoolStats`]).
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            allocated: self.allocated.get(),
+            reused: self.reused.get(),
+            released: self.released.get(),
+            retained: self.free.borrow().values().map(Vec::len).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn acquire_release_cycle_reuses() {
+        let p = TensorPool::new();
+        let a = p.acquire(&[2, 3]);
+        assert_eq!(p.stats().allocated, 1);
+        p.release(a);
+        assert_eq!(p.stats().retained, 1);
+        // same element count, different shape: still a hit
+        let b = p.acquire(&[3, 2]);
+        assert_eq!(b.shape(), &[3, 2]);
+        let st = p.stats();
+        assert_eq!((st.allocated, st.reused, st.retained), (1, 1, 0));
+    }
+
+    #[test]
+    fn reused_buffers_are_rezeroed() {
+        let p = TensorPool::new();
+        let mut a = p.acquire(&[4]);
+        a.data_mut().copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        p.release(a);
+        let b = p.acquire(&[4]);
+        assert_eq!(b.data(), &[0.0; 4], "stale contents must never leak");
+    }
+
+    #[test]
+    fn mismatched_sizes_do_not_cross() {
+        let p = TensorPool::new();
+        p.release(Tensor::zeros(&[4]));
+        let t = p.acquire(&[5]);
+        assert_eq!(t.len(), 5);
+        let st = p.stats();
+        assert_eq!((st.allocated, st.reused), (1, 0));
+        assert_eq!(st.retained, 1, "the [4] buffer is still parked");
+    }
+
+    #[test]
+    fn retention_is_bounded() {
+        let p = TensorPool::new();
+        for _ in 0..2 * DEFAULT_RETAINED_PER_CLASS {
+            p.release(Tensor::zeros(&[8]));
+        }
+        assert_eq!(p.stats().retained, DEFAULT_RETAINED_PER_CLASS);
+        // a sized pool binds to its own cap (and never below 1)
+        let p = TensorPool::with_capacity(2);
+        for _ in 0..5 {
+            p.release(Tensor::zeros(&[4]));
+        }
+        assert_eq!(p.stats().retained, 2);
+        assert_eq!(TensorPool::with_capacity(0).cap_per_class, 1);
+    }
+
+    #[test]
+    fn empty_tensors_are_not_pooled() {
+        let p = TensorPool::new();
+        p.release(Tensor::zeros(&[0]));
+        assert_eq!(p.stats().retained, 0);
+        assert_eq!(p.stats().released, 0);
+    }
+
+    #[test]
+    fn steady_state_allocates_nothing() {
+        // the acceptance property at arena level: after warmup, a loop
+        // of acquire/release pairs serves every request from the free
+        // list — `allocated` stays flat
+        propcheck(50, |g| {
+            let p = TensorPool::new();
+            let d0 = g.usize_in(1, 8);
+            let d1 = g.usize_in(1, 16);
+            let warm = p.acquire(&[d0, d1]);
+            p.release(warm);
+            let after_warmup = p.stats().allocated;
+            for _ in 0..g.usize_in(2, 20) {
+                let t = p.acquire(&[d0, d1]);
+                p.release(t);
+            }
+            assert_eq!(p.stats().allocated, after_warmup,
+                       "steady state must not allocate");
+            assert!(p.stats().reused >= 1);
+        });
+    }
+}

@@ -5,6 +5,7 @@
 # Usage: scripts/tier1.sh
 #   FMT_STRICT=0 scripts/tier1.sh   # demote the fmt check to advisory
 #   DOC_STRICT=0 scripts/tier1.sh   # demote the doc gate to advisory
+#   BENCH_SMOKE=0 scripts/tier1.sh  # skip the bench build + smoke run
 #
 # The fmt check is strict by default (ROADMAP "format the tree" item);
 # set FMT_STRICT=0 to demote it to advisory while iterating locally.
@@ -47,6 +48,24 @@ if rustdoc --version >/dev/null 2>&1; then
     fi
 else
     echo "tier1: rustdoc unavailable, skipping"
+fi
+
+echo "== tier1: bench smoke (strict unless BENCH_SMOKE=0)"
+# Builds every bench target (a compile gate for benches/, which plain
+# `cargo build` skips) and runs the step-latency bench for a tiny
+# iteration count, emitting BENCH_step.json as a perf artifact. The
+# bench itself asserts per-step latency decreases monotonically with Γ.
+# Mirrors FMT_STRICT/DOC_STRICT: skipped cleanly where cargo is absent.
+if command -v cargo >/dev/null 2>&1; then
+    if [ "${BENCH_SMOKE:-1}" = "1" ]; then
+        cargo build --release --benches
+        BENCH_SMOKE=1 cargo bench --bench step_hot_path
+        echo "tier1: bench smoke OK (BENCH_step.json written)"
+    else
+        echo "tier1: bench smoke skipped (BENCH_SMOKE=0)"
+    fi
+else
+    echo "tier1: cargo unavailable, skipping bench smoke"
 fi
 
 echo "== tier1: docs link check (relative links in *.md)"
