@@ -148,6 +148,20 @@ fn skewed_gamma_scenario() -> (f64, f64) {
     assert_eq!(steals, stolen,
                "migration conservation: every steal has one thief and \
                 one victim");
+    // the pool exercises the row-granular gate end to end: every
+    // simulated module invocation is one row, so row-work partitions
+    // the invocation count exactly, and Γ-skewed replicas serving
+    // several concurrent trajectories recover rows a coupled batch
+    // gate would have denied
+    let merged = stealing.report.merged_layer();
+    let serve = stealing.report.merged_serve();
+    assert_eq!(merged.rows_run_total() + merged.rows_skipped_total(),
+               serve.module_invocations,
+               "row-work must partition module invocations exactly");
+    println!("    row-granular gate: {}/{} rows skipped, {} recovered",
+             merged.rows_skipped_total(),
+             merged.rows_run_total() + merged.rows_skipped_total(),
+             merged.rows_recovered_total());
     assert_eq!(
         stealing.report.completed() + base.report.completed(),
         2 * REQUESTS,

@@ -9,6 +9,12 @@
 //! cost nothing, so per-step wall-clock must decrease monotonically
 //! with Γ — asserted, not just reported.
 //!
+//! The cold-churn scenario compares the legacy all-or-nothing batch
+//! gate against row-granular skipping under a periodic cold joiner at
+//! Γ=0.9 and asserts the row-granular gate runs strictly fewer
+//! row-weighted modules (`cold_churn.{coupled,row_granular}` in
+//! `BENCH_step.json`).
+//!
 //!     cargo bench --bench step_hot_path
 //!     BENCH_SMOKE=1 cargo bench --bench step_hot_path   # tiny CI gate
 //!
@@ -32,6 +38,11 @@ struct BenchCfg {
     steps: usize,
     work: u64,
     micro_iters: usize,
+    /// Cold-churn scenario shape (see `run_churn`).
+    churn_residents: usize,
+    churn_steps: usize,
+    churn_period: usize,
+    churn_joiners: usize,
 }
 
 struct GammaSeries {
@@ -73,6 +84,62 @@ fn run_gamma(lazy_pct: u32, cfg: &BenchCfg) -> GammaSeries {
         cold_denied: e.layer_stats.cold_denied_total(),
         modules_run: e.serve_stats.module_invocations
             - e.serve_stats.module_skips,
+    }
+}
+
+/// Row-weighted outcome of one cold-churn run.
+struct ChurnOutcome {
+    rows_run: u64,
+    rows_skipped: u64,
+    rows_recovered: u64,
+    cold_denied: u64,
+}
+
+impl ChurnOutcome {
+    fn rows_total(&self) -> u64 {
+        self.rows_run + self.rows_skipped
+    }
+}
+
+/// The cold-churn scenario: a warm resident cohort at Γ=0.9 with a
+/// periodic cold joiner (one fresh short request every `churn_period`
+/// rounds). Both gate modes see the identical, fully deterministic
+/// arrival schedule, so their row-weighted work is directly comparable:
+/// the coupled (all-or-nothing) gate loses the residents' skips to
+/// every cold joiner, the row-granular gate serves residents from cache
+/// and runs only the joiner — `cold_churn.row_granular <
+/// cold_churn.coupled` is the PR's acceptance inequality.
+fn run_churn(coupled: bool, cfg: &BenchCfg) -> ChurnOutcome {
+    let mut e = SimEngine::new(SimSpec {
+        lazy_pct: 90,
+        work_per_module: 500, // counts, not wall-clock, are asserted
+        coupled,
+        policy: format!("churn-{}",
+                        if coupled { "coupled" } else { "rows" }),
+        ..SimSpec::default()
+    });
+    for i in 0..cfg.churn_residents {
+        e.submit(Request::new(0, i % 10, cfg.churn_steps, 900 + i as u64));
+    }
+    let mut round = 0usize;
+    let mut joiners = 0usize;
+    while e.active_count() > 0 {
+        if round > 0 && round % cfg.churn_period == 0
+            && joiners < cfg.churn_joiners
+        {
+            // the cold joiner: 2 steps, so every join contributes one
+            // cold round and one warm round before retiring
+            joiners += 1;
+            e.submit(Request::new(0, joiners % 10, 2, 7_700 + joiners as u64));
+        }
+        e.step_round().expect("sim step");
+        round += 1;
+    }
+    ChurnOutcome {
+        rows_run: e.layer_stats.rows_run_total(),
+        rows_skipped: e.layer_stats.rows_skipped_total(),
+        rows_recovered: e.layer_stats.rows_recovered_total(),
+        cold_denied: e.layer_stats.cold_denied_total(),
     }
 }
 
@@ -126,9 +193,13 @@ fn arena_micro(iters: usize) -> (f64, f64) {
 fn main() {
     let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
     let cfg = if smoke {
-        BenchCfg { requests: 2, steps: 6, work: 25_000, micro_iters: 50 }
+        BenchCfg { requests: 2, steps: 6, work: 25_000, micro_iters: 50,
+                   churn_residents: 3, churn_steps: 8, churn_period: 2,
+                   churn_joiners: 3 }
     } else {
-        BenchCfg { requests: 4, steps: 40, work: 50_000, micro_iters: 2_000 }
+        BenchCfg { requests: 4, steps: 40, work: 50_000, micro_iters: 2_000,
+                   churn_residents: 4, churn_steps: 32, churn_period: 2,
+                   churn_joiners: 12 }
     };
     println!("step_hot_path: per-step latency vs Γ (SimEngine, \
               {} requests × {} steps, work/module {}{})",
@@ -173,6 +244,27 @@ fn main() {
         }
     }
 
+    // ---- cold-churn: the row-granular acceptance comparison. One cold
+    // joiner every churn_period rounds at Γ=0.9; row-weighted
+    // modules-run must be STRICTLY lower than the all-or-nothing
+    // baseline on the identical schedule (deterministic, so this is a
+    // hard assert even in smoke mode).
+    let coupled = run_churn(true, &cfg);
+    let rowg = run_churn(false, &cfg);
+    println!("  cold churn (Γ=0.9, joiner every {} rounds × {}): \
+              rows run {} (coupled) → {} (row-granular), {} recovered, \
+              cold-denied {} → {}",
+             cfg.churn_period, cfg.churn_joiners, coupled.rows_run,
+             rowg.rows_run, rowg.rows_recovered, coupled.cold_denied,
+             rowg.cold_denied);
+    assert_eq!(coupled.rows_total(), rowg.rows_total(),
+               "identical schedule must offer identical row-work");
+    assert!(rowg.rows_run < coupled.rows_run,
+            "row-granular skipping must run strictly fewer rows under \
+             churn ({} vs {})", rowg.rows_run, coupled.rows_run);
+    assert!(rowg.rows_recovered > 0,
+            "resident skips during cold rounds must count as recovered");
+
     let (lit_before, lit_after) = literal_cache_micro(cfg.micro_iters);
     println!("  literal cache: clone+convert {lit_before:.2}µs → memo \
               {lit_after:.3}µs per skip read  ({:.0}x)",
@@ -201,6 +293,18 @@ fn main() {
                 ("cold_denied", Json::num(s.cold_denied as f64)),
             ])
         }))),
+        // the acceptance pair: row-weighted modules-run under churn,
+        // coupled vs row-granular (strictly lower required)
+        ("cold_churn", Json::obj(vec![
+            ("gamma_target", Json::num(0.9)),
+            ("rows_total", Json::num(rowg.rows_total() as f64)),
+            ("coupled", Json::num(coupled.rows_run as f64)),
+            ("row_granular", Json::num(rowg.rows_run as f64)),
+            ("rows_recovered", Json::num(rowg.rows_recovered as f64)),
+            ("cold_denied_coupled", Json::num(coupled.cold_denied as f64)),
+            ("cold_denied_row_granular",
+             Json::num(rowg.cold_denied as f64)),
+        ])),
         ("literal_cache_us", Json::obj(vec![
             ("clone_convert", Json::num(lit_before)),
             ("memo", Json::num(lit_after)),

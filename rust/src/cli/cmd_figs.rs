@@ -49,8 +49,11 @@ pub fn run_fig4(a: Args) -> Result<()> {
     let _ = generate_batch(&mut engine, &labels, steps, a.get_u64("seed", 0)?,
                            cfg_scale)?;
     println!("{}", engine.layer_stats.render_fig4());
+    // row-weighted, like the per-module components — mixing in the
+    // module-boolean ratio here could print an "overall" below both of
+    // its own parts under partial (row-granular) skips
     println!("overall lazy ratio: {:.1}% (attn {:.1}%, ffn {:.1}%)",
-             100.0 * engine.layer_stats.overall_ratio(),
+             100.0 * engine.layer_stats.row_overall_ratio(),
              100.0 * engine.layer_stats.attn_overall(),
              100.0 * engine.layer_stats.ffn_overall());
     // no-layer-fully-bypassed check (paper's Fig. 4 observation)

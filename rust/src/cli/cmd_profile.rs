@@ -69,7 +69,7 @@ pub fn run(a: Args) -> Result<()> {
     println!("  per image: {per_img:.4}s   per denoise step (CFG incl.): \
               {per_step:.5}s");
     println!("  engine lazy ratio: {:.1}%",
-             100.0 * engine.layer_stats.overall_ratio());
+             100.0 * engine.layer_stats.row_overall_ratio());
 
     // executable-level breakdown via direct runner calls
     let m = &ctx.cfg.model;
@@ -80,25 +80,30 @@ pub fn run(a: Args) -> Result<()> {
     let t = vec![500.0f32; b];
     let y = vec![0i32; b];
     let live = vec![true; b];
+    let pairs = vec![false; b];
     let dec = crate::model::runner::DecisionCfg {
         policy: crate::config::SkipPolicy::Never,
         scope: crate::config::LazyScope::Both,
         threshold: 0.5,
+        row_granular: true,
     };
     let mut caches = crate::model::runner::BatchCaches::empty(
         m.depth, b, m.tokens(), m.dim);
     let r2 = bench("one full denoise step (no skips)", spec, || {
-        runner.step(b, &z, &t, &y, &live, &mut caches, dec).expect("step");
+        runner
+            .step(b, &z, &t, &y, &live, &pairs, &mut caches, dec)
+            .expect("step");
     });
     println!("{}", r2.summary());
     let dec_all_skip = crate::model::runner::DecisionCfg {
         policy: crate::config::SkipPolicy::Any,
         scope: crate::config::LazyScope::Both,
         threshold: -1.0, // s > -1 always true ⇒ skip everything possible
+        row_granular: true,
     };
     let r3 = bench("one full denoise step (all modules skipped)", spec, || {
         runner
-            .step(b, &z, &t, &y, &live, &mut caches, dec_all_skip)
+            .step(b, &z, &t, &y, &live, &pairs, &mut caches, dec_all_skip)
             .expect("step");
     });
     println!("{}", r3.summary());

@@ -44,6 +44,7 @@ pub fn specs() -> Vec<OptSpec> {
         OptSpec { name: "queue-cap", help: "admission bound (pool-wide)", default: Some("256"), is_flag: false },
         OptSpec { name: "cfg-scale", help: "guidance scale", default: Some("1.5"), is_flag: false },
         OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "coupled-gate", help: "legacy all-or-nothing batch skip gate (disables row-granular skipping)", default: None, is_flag: true },
         OptSpec { name: "replicas", help: "replica-pool size", default: Some("1"), is_flag: false },
         OptSpec { name: "replica-spec", help: "SLO-tiered pool, e.g. lat:b1x1,thr:b8x3 (overrides --replicas/--max-batch)", default: None, is_flag: false },
         OptSpec { name: "route", help: "dispatch policy: rr|jsq|lazy", default: Some("rr"), is_flag: false },
@@ -154,6 +155,7 @@ pub fn parse_replica_policies(spec: &str, replicas: usize)
 
 /// Synthetic-engine factories: one per replica, policy label per override.
 fn synthetic_factories(replicas: usize, lazy_pct: usize, work: u64,
+                       coupled: bool,
                        overrides: &BTreeMap<usize, SkipPolicy>)
                        -> Vec<EngineFactory> {
     (0..replicas)
@@ -169,6 +171,9 @@ fn synthetic_factories(replicas: usize, lazy_pct: usize, work: u64,
             SimEngine::factory(SimSpec {
                 lazy_pct: lazy,
                 work_per_module: work,
+                // --coupled-gate models the legacy all-or-nothing
+                // batch gate in the simulator too
+                coupled,
                 policy,
                 ..SimSpec::default()
             })
@@ -268,7 +273,8 @@ pub fn run(a: Args) -> Result<()> {
                   p.name());
         }
         let work = a.get_u64("sim-work", 4000)?;
-        (synthetic_factories(replicas, lazy_pct, work, &overrides),
+        (synthetic_factories(replicas, lazy_pct, work,
+                             a.flag("coupled-gate"), &overrides),
          a.get_usize("queue-cap", 256)?)
     } else {
         let ctx = EvalContext::open(&a, 32)?;

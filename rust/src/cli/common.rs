@@ -148,6 +148,9 @@ pub fn serve_config(a: &Args, name: &str) -> Result<ServeConfig> {
         scope: LazyScope::parse(&a.get_str("scope", "both"))?,
         threads: threads(),
         threshold: a.get_f32("threshold", 0.5)?,
+        // row-granular skipping is the default; --coupled-gate (where a
+        // command exposes it) restores the all-or-nothing batch gate
+        row_granular: !a.flag("coupled-gate"),
         bucket_override: None,
     })
 }

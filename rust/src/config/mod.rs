@@ -284,6 +284,13 @@ pub struct ServeConfig {
     pub threads: usize,
     /// Gate threshold (paper uses 0.5).
     pub threshold: f32,
+    /// Row-granular lazy gating (the default): each live batch row
+    /// decides its own skips and mixed slots run a compacted run-rows
+    /// sub-batch while skip-rows are served from cache. `false`
+    /// restores the legacy all-or-nothing batch-consensus gate
+    /// (`serve --coupled-gate`), kept for A/B against the coupled
+    /// baseline.
+    pub row_granular: bool,
     /// Per-replica bucket-set restriction (SLO-tiered pools): the
     /// engine plans rounds only against compiled buckets that are also
     /// in this set. `None` (the default) uses the full compiled set.
@@ -303,6 +310,7 @@ impl Default for ServeConfig {
             scope: LazyScope::Both,
             threads: 1,
             threshold: 0.5,
+            row_granular: true,
             bucket_override: None,
         }
     }

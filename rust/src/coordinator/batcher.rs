@@ -31,6 +31,27 @@ impl BatchPlan {
         }
         m
     }
+
+    /// `pair_mask()[i]` is true iff rows `i`, `i+1` are the cond/uncond
+    /// lanes of one CFG request. The row-granular gate uses it to keep
+    /// both lanes of a request in the same run/skip partition (they
+    /// share a trajectory — skipping one lane but not the other would
+    /// split a single sample's module accounting).
+    pub fn pair_mask(&self) -> Vec<bool> {
+        let mut m = vec![false; self.bucket];
+        for (i, slot) in self.lanes.iter().enumerate() {
+            if slot.lane == 0
+                && self
+                    .lanes
+                    .get(i + 1)
+                    .map_or(false,
+                            |n| n.req_idx == slot.req_idx && n.lane == 1)
+            {
+                m[i] = true;
+            }
+        }
+        m
+    }
 }
 
 /// The widest plannable bucket under `max_lanes` — the lane cap
@@ -202,6 +223,21 @@ mod tests {
         assert_eq!(p.lanes.len(), 4);
         let reqs: Vec<usize> = p.lanes.iter().map(|l| l.req_idx).collect();
         assert_eq!(reqs, vec![0, 0, 1, 3]);
+    }
+
+    #[test]
+    fn pair_mask_marks_cfg_pairs_only() {
+        // [2, 1, 2] lanes, cap 8: rows 0-1 pair, row 2 single, rows 3-4
+        // pair, rest padding
+        let p = plan_round(&[2, 1, 2], 0, 8, BUCKETS).unwrap();
+        assert_eq!(p.lanes.len(), 5);
+        let m = p.pair_mask();
+        assert_eq!(m.len(), p.bucket);
+        assert_eq!(&m[..5], &[true, false, false, true, false]);
+        assert!(m[5..].iter().all(|&x| !x), "padding rows never pair");
+        // a single-lane-only plan has no pairs anywhere
+        let p = plan_round(&[1, 1, 1], 0, 4, BUCKETS).unwrap();
+        assert!(p.pair_mask().iter().all(|&x| !x));
     }
 
     #[test]

@@ -302,6 +302,12 @@ impl Engine {
                                         cfg.diffusion.beta_end);
         let depth = cfg.model.depth;
         let round_buckets = effective_buckets(&cfg.buckets, &serve);
+        let mut runner = runner;
+        // the partial (run-rows sub-batch) path may only compact to
+        // widths inside this engine's round-bucket set — a tier-
+        // restricted replica must not lazily load executables outside
+        // its provisioned footprint
+        runner.restrict_partial_buckets(&round_buckets);
         let pool = runner.pool().clone();
         Ok(Engine {
             runner,
@@ -321,13 +327,15 @@ impl Engine {
     }
 
     /// Build an engine from in-memory parameters (tests, training loops).
-    pub fn from_parts(runner: ModelRunner, serve: ServeConfig,
+    pub fn from_parts(mut runner: ModelRunner, serve: ServeConfig,
                       options: EngineOptions) -> Engine {
         let schedule = Schedule::linear(runner.cfg.diffusion.timesteps,
                                         runner.cfg.diffusion.beta_start,
                                         runner.cfg.diffusion.beta_end);
         let depth = runner.cfg.model.depth;
         let round_buckets = effective_buckets(&runner.cfg.buckets, &serve);
+        // keep the partial path inside this engine's round-bucket set
+        runner.restrict_partial_buckets(&round_buckets);
         let pool = runner.pool().clone();
         Engine {
             runner,
@@ -485,15 +493,18 @@ impl Engine {
 
         let forced = self.forced_row(plan);
         let live = plan.live_mask();
+        let pairs = plan.pair_mask();
         let dec = DecisionCfg {
             policy: self.serve.policy,
             scope: self.serve.scope,
             threshold: self.serve.threshold,
+            row_granular: self.serve.row_granular,
         };
         let state = self.batch.as_mut().expect("synced");
         self.runner.step_with_forced(plan.bucket, &state.z, &state.t,
-                                     &state.y, &live, &mut state.caches,
-                                     dec, forced.as_deref())
+                                     &state.y, &live, &pairs,
+                                     &mut state.caches, dec,
+                                     forced.as_deref())
     }
 
     /// The Learn2Cache-analog static schedule's [2L] mask row for this
@@ -552,13 +563,15 @@ impl Engine {
 
         let forced = self.forced_row(plan);
         let live = plan.live_mask();
+        let pairs = plan.pair_mask();
         let dec = DecisionCfg {
             policy: self.serve.policy,
             scope: self.serve.scope,
             threshold: self.serve.threshold,
+            row_granular: self.serve.row_granular,
         };
         let outcome = self.runner.step_with_forced(
-            plan.bucket, &z, &t, &y, &live, &mut caches, dec,
+            plan.bucket, &z, &t, &y, &live, &pairs, &mut caches, dec,
             forced.as_deref())?;
 
         // similarity profiling (Learn2Cache-analog offline pass): cosine
@@ -569,8 +582,10 @@ impl Engine {
             for (row, slot) in plan.lanes.iter().enumerate() {
                 let ar = &self.active[slot.req_idx];
                 for k in 0..2 * depth {
+                    // per-row: a partial slot produced fresh output only
+                    // for its run-rows
                     if ar.caches[slot.lane].valid[k] && caches.valid[k][row]
-                        && !outcome.skipped[k]
+                        && !outcome.row_skipped(k, row)
                     {
                         let cos = slice_cosine(&ar.caches[slot.lane].values[k],
                                                caches.value(k).row(row));
@@ -617,10 +632,21 @@ impl Engine {
                 .sum::<f64>()
                 / plan.lanes.len().max(1) as f64;
             self.layer_stats.record(k, outcome.skipped[k], mean_s);
+            // row-weighted work: laziness accounted per row, not per
+            // whole-module boolean — partial slots contribute both run
+            // and skipped rows, and `rows_recovered` is the share only
+            // row granularity could skip
+            self.layer_stats.record_rows(
+                k,
+                outcome.rows_run[k] as u64,
+                outcome.rows_skipped[k] as u64,
+                outcome.rows_recovered[k] as u64,
+            );
             if outcome.skip_denied_cold.get(k).copied().unwrap_or(false) {
-                // the gates wanted this skip; a cold (freshly-joined)
-                // row forced the whole batch to run — observable lost
-                // laziness (STATS `cold_denied`)
+                // the gates wanted a skip; a cold (freshly-joined) row
+                // forced a run — the whole batch under the coupled
+                // gate, just the cold row (and its CFG partner) under
+                // row granularity (STATS `cold_denied`)
                 self.layer_stats.record_cold_denied(k);
             }
             self.serve_stats.module_invocations += 1;
@@ -653,10 +679,12 @@ impl Engine {
             let mut zt = Tensor::from_vec(&[ar.z.len()], ar.z.clone())?;
             self.sampler.step(&mut zt, &eps_req, t_cur, t_next);
             ar.z.copy_from_slice(zt.data());
-            // skip accounting (per request: a module counts once per step)
+            // skip accounting (per request: a module counts once per
+            // step, read from the request's own row — CFG lanes are
+            // pair-coupled, so the first lane's bit speaks for both)
             for k in 0..2 * depth {
                 ar.modules_seen[k] += 1;
-                if outcome.skipped[k] {
+                if outcome.row_skipped(k, row) {
                     ar.skip_counts[k] += 1;
                 }
             }
@@ -823,6 +851,35 @@ mod tests {
         }
     }
 
+    /// Test double for the runner's PARTIAL path: compact the run rows
+    /// (live && !mask) through a real [`RowPartition`], fill the
+    /// sub-batch with the same occupant-derived values `sim_run` uses,
+    /// and scatter it back via `scatter_fresh` — skip rows keep their
+    /// cached bytes, exactly the row-granular cache mutations of
+    /// `step_with_forced`.
+    fn sim_run_partial(caches: &mut BatchCaches, k: usize, bucket: usize,
+                       nd: usize, plan: &BatchPlan,
+                       active: &[ActiveRequest], round: usize,
+                       mask: &[bool]) {
+        use crate::model::runner::RowPartition;
+        let live = plan.live_mask();
+        let mut part = RowPartition::default();
+        part.plan(mask, &live, &[1, 2, 4, 8, 16], bucket);
+        let mut data = vec![-7.0 - round as f32; part.bucket * nd];
+        for (j, &row) in part.run_idx.iter().enumerate() {
+            if row == usize::MAX {
+                continue;
+            }
+            let slot = plan.lanes[row];
+            let id = active[slot.req_idx].req.id;
+            let v = (id * 1000 + slot.lane as u64 * 100 + k as u64) as f32
+                + round as f32 * 0.125;
+            data[j * nd..(j + 1) * nd].fill(v);
+        }
+        let sub = Tensor::from_vec(&[part.bucket, 1, nd], data).unwrap();
+        caches.scatter_fresh(k, &sub, &part.run_idx);
+    }
+
     fn mk_active(nreq: usize, steps: usize, depth: usize, nd: usize)
                  -> Vec<ActiveRequest> {
         (0..nreq)
@@ -893,10 +950,12 @@ mod tests {
     fn resident_repack_matches_scratch_rebuild() {
         // the bit-identity property behind unchanged eps/skipped: under
         // random batch-membership churn (joins, leaves, row shifts,
-        // bucket changes), the pooled resident caches hold exactly what
-        // a from-scratch per-round rebuild (pooling off) would hold —
-        // same validity, same bytes — for every live row, every round;
-        // and the flushed lane stores agree at the end
+        // bucket changes) AND non-uniform row-granular gates (partial
+        // run/skip splits, CFG pairs coupled), the pooled resident
+        // caches hold exactly what a from-scratch per-round rebuild
+        // (pooling off) would hold — same validity, same bytes — for
+        // every live row, every round; and the flushed lane stores
+        // agree at the end
         propcheck(40, |g| {
             let depth = g.usize_in(1, 3);
             let slots = 2 * depth;
@@ -944,19 +1003,53 @@ mod tests {
                     }
                 }
                 let live = plan.live_mask();
+                let pairs = plan.pair_mask();
                 let st = state.as_mut().unwrap();
                 for k in 0..slots {
                     let ok_res = cache_ok(&st.caches.valid[k], &live);
                     let ok_ref = cache_ok(&scratch.valid[k], &live);
                     assert_eq!(ok_res, ok_ref,
                                "cache_ok diverged (round {round} slot {k})");
-                    // skip only when the cache gate allows it, like the
-                    // runner; otherwise run and write fresh output
-                    if !ok_res || g.bool() {
+                    // row-granular gates, like the runner: random
+                    // per-row gate values, CFG pairs coupled, validity
+                    // consulted per row — both paths must plan the
+                    // identical mask and end bit-identical whether the
+                    // slot skips fully, runs fully, or splits
+                    use crate::model::runner::plan_rows;
+                    let s: Vec<f32> = (0..bucket)
+                        .map(|_| if g.bool() { 0.9 } else { 0.1 })
+                        .collect();
+                    let dcfg = DecisionCfg {
+                        policy: crate::config::SkipPolicy::Mean,
+                        scope: crate::config::LazyScope::Both,
+                        threshold: 0.5,
+                        row_granular: true,
+                    };
+                    let mut mask_res = Vec::new();
+                    let mut mask_ref = Vec::new();
+                    let p_res = plan_rows(dcfg, true, None, &s, &live,
+                                          &pairs, &st.caches.valid[k],
+                                          &mut mask_res);
+                    let p_ref = plan_rows(dcfg, true, None, &s, &live,
+                                          &pairs, &scratch.valid[k],
+                                          &mut mask_ref);
+                    assert_eq!(mask_res, mask_ref,
+                               "plans diverged (round {round} slot {k})");
+                    assert_eq!(p_res, p_ref);
+                    if p_res.all_skip {
+                        // cache-served everywhere: no mutation at all
+                    } else if p_res.all_run {
                         sim_run(&mut st.caches, k, bucket, nd, &plan,
                                 &res_active, round);
                         sim_run(&mut scratch, k, bucket, nd, &plan,
                                 &ref_active, round);
+                    } else {
+                        sim_run_partial(&mut st.caches, k, bucket, nd,
+                                        &plan, &res_active, round,
+                                        &mask_res);
+                        sim_run_partial(&mut scratch, k, bucket, nd,
+                                        &plan, &ref_active, round,
+                                        &mask_ref);
                     }
                 }
                 // live rows must be bit-identical between the two paths
@@ -996,6 +1089,34 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn partial_path_on_uniform_mask_matches_full_run() {
+        // execution-level bit identity on uniform masks: driving the
+        // run through the partition machinery (compact → run → scatter)
+        // with an all-run mask leaves every live row byte-identical to
+        // the scalar full-run path (store_fresh), and validity agrees
+        let (depth, nd) = (1usize, 3usize);
+        let active = mk_active(2, 10, depth, nd);
+        let plan = BatchPlan {
+            bucket: 4,
+            lanes: vec![LaneSlot { req_idx: 0, lane: 0 },
+                        LaneSlot { req_idx: 1, lane: 0 }],
+        };
+        let mut full = BatchCaches::empty(depth, 4, 1, nd);
+        let mut part = BatchCaches::empty(depth, 4, 1, nd);
+        sim_run(&mut full, 0, 4, nd, &plan, &active, 3);
+        sim_run_partial(&mut part, 0, 4, nd, &plan, &active, 3,
+                        &[false, false, false, false]);
+        for row in 0..plan.lanes.len() {
+            assert_eq!(full.value(0).row(row), part.value(0).row(row),
+                       "row {row} diverged");
+            assert_eq!(full.valid[0][row], part.valid[0][row]);
+            assert!(part.valid[0][row]);
+        }
+        // live padding rows: the partial path never touches them
+        assert!(!part.valid[0][2] && !part.valid[0][3]);
     }
 
     #[test]

@@ -20,6 +20,11 @@ pub fn merge_layer_stats(a: &mut LayerStats, b: &LayerStats) {
     if b.cold_denied.len() > a.cold_denied.len() {
         a.cold_denied.resize(b.cold_denied.len(), 0);
     }
+    if b.rows_run.len() > a.rows_run.len() {
+        a.rows_run.resize(b.rows_run.len(), 0);
+        a.rows_skipped.resize(b.rows_skipped.len(), 0);
+        a.rows_recovered.resize(b.rows_recovered.len(), 0);
+    }
     for k in 0..b.skips.len() {
         a.skips[k] += b.skips[k];
         a.total[k] += b.total[k];
@@ -27,6 +32,11 @@ pub fn merge_layer_stats(a: &mut LayerStats, b: &LayerStats) {
     }
     for k in 0..b.cold_denied.len() {
         a.cold_denied[k] += b.cold_denied[k];
+    }
+    for k in 0..b.rows_run.len() {
+        a.rows_run[k] += b.rows_run[k];
+        a.rows_skipped[k] += b.rows_skipped[k];
+        a.rows_recovered[k] += b.rows_recovered[k];
     }
 }
 
@@ -75,9 +85,10 @@ impl PoolReport {
         out
     }
 
-    /// Pool-wide lazy ratio Γ.
+    /// Pool-wide lazy ratio Γ: row-weighted when any replica recorded
+    /// row-work, module-weighted otherwise (ratio of sums either way).
     pub fn overall_lazy(&self) -> f64 {
-        self.merged_layer().overall_ratio()
+        self.merged_layer().row_overall_ratio()
     }
 
     /// Total completed requests.
@@ -103,11 +114,33 @@ impl PoolReport {
     }
 
     /// Module invocations pool-wide whose skip was denied by a cold
-    /// (freshly-joined) row — batch-coupling lost laziness.
+    /// (freshly-joined) row — inherent cold work under row-granular
+    /// gating (the coupled gate additionally dragged whole batches).
     pub fn total_cold_denied(&self) -> u64 {
         self.replicas
             .iter()
             .map(|r| r.layer.cold_denied_total())
+            .sum()
+    }
+
+    /// Live rows run pool-wide (row-weighted work).
+    pub fn total_rows_run(&self) -> u64 {
+        self.replicas.iter().map(|r| r.layer.rows_run_total()).sum()
+    }
+
+    /// Live rows served from cache pool-wide.
+    pub fn total_rows_skipped(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.layer.rows_skipped_total())
+            .sum()
+    }
+
+    /// Rows only row-granular gating could skip, pool-wide.
+    pub fn total_rows_recovered(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.layer.rows_recovered_total())
             .sum()
     }
 
@@ -143,7 +176,7 @@ impl PoolReport {
                     r.tier.max_batch,
                     r.policy,
                     r.serve.completed,
-                    100.0 * r.layer.overall_ratio(),
+                    100.0 * r.layer.row_overall_ratio(),
                     r.serve.mean_latency(),
                     r.serve.p99_latency(),
                     r.steals,
@@ -155,7 +188,8 @@ impl PoolReport {
         let serve = self.merged_serve();
         out.push_str(&format!(
             "  pool                   {:>6}   {:>6.1}%   {:>7.3}s  {:>7.3}s   \
-             ({} shed, {} stolen, {} cold-denied)\n",
+             ({} shed, {} stolen, {} cold-denied, rows {}/{} skipped, \
+             {} recovered)\n",
             serve.completed,
             100.0 * self.overall_lazy(),
             serve.mean_latency(),
@@ -163,6 +197,9 @@ impl PoolReport {
             serve.shed,
             self.total_steals(),
             self.total_cold_denied(),
+            self.total_rows_skipped(),
+            self.total_rows_skipped() + self.total_rows_run(),
+            self.total_rows_recovered(),
         ));
         let done = self.completed_by_slo();
         out.push_str("  tiers (completed/shed):");
@@ -271,9 +308,33 @@ mod tests {
         let s = pr.render();
         assert!(s.contains("pool"));
         assert!(s.contains("mean"));
-        assert!(s.contains("(1 shed, 3 stolen, 0 cold-denied)"));
+        assert!(s.contains(
+            "(1 shed, 3 stolen, 0 cold-denied, rows 0/0 skipped, \
+             0 recovered)"
+        ), "{s}");
         assert!(s.contains("stole"), "steal column present: {s}");
         assert_eq!(pr.failed(), 0);
+    }
+
+    #[test]
+    fn row_work_merges_as_sums_and_renders() {
+        let mut a = report(0, 1, 0, 4, 1);
+        a.layer.record_rows(0, 3, 5, 2);
+        let mut b = report(1, 1, 0, 4, 1);
+        b.layer.record_rows(1, 1, 3, 1);
+        let pr = PoolReport { replicas: vec![a, b], shed: 0,
+                              shed_by_slo: [0; Slo::COUNT] };
+        assert_eq!(pr.total_rows_run(), 4);
+        assert_eq!(pr.total_rows_skipped(), 8);
+        assert_eq!(pr.total_rows_recovered(), 3);
+        let merged = pr.merged_layer();
+        assert_eq!(merged.rows_run, vec![3, 1]);
+        assert_eq!(merged.rows_skipped, vec![5, 3]);
+        assert_eq!(merged.rows_recovered, vec![2, 1]);
+        // once rows exist, pool Γ is the row-weighted ratio of sums
+        assert!((pr.overall_lazy() - 8.0 / 12.0).abs() < 1e-12);
+        assert!(pr.render().contains("rows 8/12 skipped, 3 recovered"),
+                "{}", pr.render());
     }
 
     #[test]

@@ -94,7 +94,9 @@ impl ReplicaTier {
 
     /// In-engine admission bound for this replica's worker: the steal
     /// window while stealing is armed (beyond it, jobs stay stealable),
-    /// otherwise `max_batch`.
+    /// otherwise `max_batch`. Stealing workers read the bound through
+    /// [`Rebalancer::effective_window`], which narrows it by one step
+    /// while sibling backlogs are overdispersed.
     pub fn engine_window(&self, stealing: bool) -> usize {
         if stealing {
             self.steal_window.max(1)
@@ -143,9 +145,19 @@ pub struct ReplicaGauges {
     /// Module invocations skipped (engine layer-stats skips).
     pub modules_skipped: AtomicU64,
     /// Module invocations whose skip was denied by a cold (freshly-
-    /// joined, cache-invalid) row — laziness lost to all-or-nothing
-    /// batch coupling, surfaced live through the `STATS` wire verb.
+    /// joined, cache-invalid) row — under row-granular gating only the
+    /// cold row itself runs, so this measures inherent cold work;
+    /// surfaced live through the `STATS` wire verb.
     pub cold_denied: AtomicU64,
+    /// Live rows the engine's executables actually ran (row-weighted
+    /// work — partial invocations count only their run-rows).
+    pub rows_run: AtomicU64,
+    /// Live rows served straight from the cache.
+    pub rows_skipped: AtomicU64,
+    /// Skipped rows the coupled batch gate would not have skipped —
+    /// work only row-granular gating could skip (`STATS`
+    /// `rows_recovered`).
+    pub rows_recovered: AtomicU64,
     /// Jobs this replica pulled from a sibling's queue while idle.
     pub steals: AtomicU64,
     /// Jobs a sibling pulled out of this replica's queue.
@@ -158,7 +170,16 @@ pub struct ReplicaGauges {
 
 impl ReplicaGauges {
     /// Observed lazy ratio Γ (0 until the first round completes).
+    /// Row-weighted — skipped rows over live rows seen — so the
+    /// router's and rebalancer's lazy-discounted backlog accounts
+    /// partial skips honestly; falls back to the module-weighted ratio
+    /// when no row accounting has been published yet.
     pub fn lazy_ratio(&self) -> f64 {
+        let run = self.rows_run.load(Ordering::Relaxed);
+        let skipped_rows = self.rows_skipped.load(Ordering::Relaxed);
+        if run + skipped_rows > 0 {
+            return skipped_rows as f64 / (run + skipped_rows) as f64;
+        }
         let seen = self.modules_seen.load(Ordering::Relaxed);
         if seen == 0 {
             return 0.0;
@@ -510,14 +531,20 @@ fn run_replica(id: usize, factory: EngineFactory,
         responders.insert(rid, job.respond);
     }
     let mut error: Option<String> = None;
-    // cap how many trajectories sit inside the engine: the tier's steal
-    // window while stealing is on (everything beyond it stays in the
-    // queue, where it remains migratable — an engine-admitted trajectory
-    // can never move), the tier's batch width otherwise
-    let window = tier.engine_window(steal.is_some());
     let mut idle_misses = 0u32;
 
     loop {
+        // cap how many trajectories sit inside the engine: the tier's
+        // steal window while stealing is on (everything beyond it stays
+        // in the queue, where it remains migratable — an engine-admitted
+        // trajectory can never move), the tier's batch width otherwise.
+        // Re-read every iteration: the rebalancer narrows the window by
+        // one step while sibling backlogs are overdispersed
+        // (`Rebalancer::effective_window`), restoring it when balanced.
+        let window = match steal {
+            Some(rb) => rb.effective_window(tier),
+            None => tier.engine_window(false),
+        };
         // continuous batching: absorb whatever arrived, up to the window
         while engine.active_count() < window {
             match queue.try_pop() {
@@ -585,6 +612,15 @@ fn run_replica(id: usize, factory: EngineFactory,
                 gauges
                     .cold_denied
                     .store(ls.cold_denied_total(), Ordering::Relaxed);
+                gauges
+                    .rows_run
+                    .store(ls.rows_run_total(), Ordering::Relaxed);
+                gauges
+                    .rows_skipped
+                    .store(ls.rows_skipped_total(), Ordering::Relaxed);
+                gauges
+                    .rows_recovered
+                    .store(ls.rows_recovered_total(), Ordering::Relaxed);
             }
             Err(e) => {
                 error = Some(format!("step_round failed: {e:#}"));

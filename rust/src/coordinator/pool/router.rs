@@ -174,8 +174,40 @@ impl Router {
             .sum()
     }
 
-    /// Live pool-wide lazy ratio Γ from the gauges.
+    /// Live rows run pool-wide (row-weighted work).
+    pub fn total_rows_run(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.rows_run.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Live rows served from cache pool-wide.
+    pub fn total_rows_skipped(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.rows_skipped.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Rows pool-wide that only row-granular gating could skip (their
+    /// module still ran for other rows).
+    pub fn total_rows_recovered(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.rows_recovered.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Live pool-wide lazy ratio Γ from the gauges: row-weighted
+    /// (skipped rows over live rows seen), falling back to the
+    /// module-weighted ratio when no row accounting exists yet.
     pub fn overall_lazy(&self) -> f64 {
+        let (run, skipped_rows) =
+            (self.total_rows_run(), self.total_rows_skipped());
+        if run + skipped_rows > 0 {
+            return skipped_rows as f64 / (run + skipped_rows) as f64;
+        }
         let (mut seen, mut skipped) = (0u64, 0u64);
         for r in &self.replicas {
             seen += r.gauges.modules_seen.load(Ordering::Relaxed);
@@ -306,9 +338,11 @@ impl Router {
 
     /// One-line JSON snapshot of the live pool gauges — the payload of
     /// the `STATS` wire verb (see docs/SERVING.md). Per replica: tier,
-    /// batch width, queued, pending steps, observed Γ, completions
-    /// (total and per SLO class), steal counters, liveness. Pool-wide:
-    /// route, stealing, totals, and sheds per SLO class.
+    /// batch width, queued, pending steps, observed Γ (row-weighted),
+    /// row-work gauges (`rows_run`/`rows_skipped`/`rows_recovered`),
+    /// completions (total and per SLO class), steal counters, liveness.
+    /// Pool-wide: route, stealing, totals, row-work plus the
+    /// recovered-work ratio, and sheds per SLO class.
     pub fn stats_json(&self) -> String {
         let replicas: Vec<Json> = self
             .replicas
@@ -331,6 +365,16 @@ impl Router {
                     ("lazy_ratio", Json::num(s.lazy_ratio)),
                     ("cold_denied",
                      Json::num(r.gauges.cold_denied.load(Ordering::Relaxed)
+                               as f64)),
+                    ("rows_run",
+                     Json::num(r.gauges.rows_run.load(Ordering::Relaxed)
+                               as f64)),
+                    ("rows_skipped",
+                     Json::num(r.gauges.rows_skipped.load(Ordering::Relaxed)
+                               as f64)),
+                    ("rows_recovered",
+                     Json::num(r.gauges.rows_recovered
+                               .load(Ordering::Relaxed)
                                as f64)),
                     ("completed",
                      Json::num(r.gauges.completed.load(Ordering::Relaxed)
@@ -364,6 +408,15 @@ impl Router {
             ("steals", Json::num(self.total_steals() as f64)),
             ("lazy_ratio", Json::num(self.overall_lazy())),
             ("cold_denied", Json::num(self.total_cold_denied() as f64)),
+            ("rows_run", Json::num(self.total_rows_run() as f64)),
+            ("rows_skipped", Json::num(self.total_rows_skipped() as f64)),
+            ("rows_recovered",
+             Json::num(self.total_rows_recovered() as f64)),
+            // share of the pool's skipped rows the coupled gate would
+            // not have skipped (the per-slot counterfactual)
+            ("recovered_ratio",
+             Json::num(self.total_rows_recovered() as f64
+                       / self.total_rows_skipped().max(1) as f64)),
         ])
         .to_string()
     }

@@ -11,7 +11,11 @@
 //! Determinism contract (pinned by `tests/integration_pool.rs`): the
 //! output image is a pure function of `(seed, label, steps)` — identical
 //! bytes regardless of replica count, routing policy, or co-batched
-//! requests. Skip decisions are a pure function of `(step, module slot)`.
+//! requests. Skip decisions are a pure function of `(step, module slot)`
+//! per trajectory (the row-granular default). The opt-in
+//! [`SimSpec::coupled`] mode models the legacy all-or-nothing batch
+//! gate instead — there skip decisions depend on who is co-batched
+//! (that is the waste being measured) while images stay deterministic.
 
 use crate::coordinator::pool::{EngineFactory, PoolEngine};
 use crate::coordinator::request::{Request, RequestResult};
@@ -34,6 +38,13 @@ pub struct SimSpec {
     pub work_per_module: u64,
     /// Policy label reported for pool A/B views.
     pub policy: String,
+    /// Model the legacy all-or-nothing batch gate: a slot skips only
+    /// when *every* active trajectory is warm and wants the skip — one
+    /// cold joiner denies the whole batch. `false` (the default)
+    /// mirrors the real engine's row-granular gate: each trajectory
+    /// skips on its own, and skips taken while the batch was not
+    /// uniformly skippable count as recovered rows.
+    pub coupled: bool,
 }
 
 impl Default for SimSpec {
@@ -44,6 +55,7 @@ impl Default for SimSpec {
             lazy_pct: 50,
             work_per_module: 4_000,
             policy: "sim".to_string(),
+            coupled: false,
         }
     }
 }
@@ -190,27 +202,51 @@ impl PoolEngine for SimEngine {
         let t0 = Instant::now();
         let depth = self.spec.depth;
         let gamma = self.spec.lazy_pct as f64 / 100.0;
-        for ai in 0..self.active.len() {
-            let step = self.active[ai].cursor;
-            for k in 0..2 * depth {
-                let skip = self.wants_skip(step, k);
+        let any_cold = self.active.iter().any(|a| a.cursor == 0);
+        for k in 0..2 * depth {
+            // did every trajectory's gate want this skip? The coupled
+            // gate skips only when that consensus holds AND nobody is
+            // cold; the row-granular gate uses the same pair to count
+            // recovered rows and to attribute coupled denials honestly
+            // (a run caused by a *gate* disagreement is not cold waste)
+            let all_want = !self.active.is_empty()
+                && self.active.iter().all(|a| self.would_skip(a.cursor, k));
+            let batch_skip = all_want && !any_cold;
+            for ai in 0..self.active.len() {
+                let step = self.active[ai].cursor;
+                let want = self.would_skip(step, k);
+                let warm = step > 0;
+                let skip = if self.spec.coupled {
+                    batch_skip
+                } else {
+                    self.wants_skip(step, k) // warm && own gate
+                };
                 self.active[ai].modules_seen[k] += 1;
                 self.layer_stats.record(k, skip, gamma);
                 self.serve_stats.module_invocations += 1;
                 if skip {
                     self.active[ai].skip_counts[k] += 1;
                     self.serve_stats.module_skips += 1;
+                    let recovered = !self.spec.coupled && !batch_skip;
+                    self.layer_stats.record_rows(k, 0, 1, recovered as u64);
                 } else {
-                    if step == 0 && self.would_skip(step, k) {
-                        // the gates wanted to skip; the cold cache said
-                        // run — the same lost laziness the real engine
-                        // reports for freshly-joined rows
+                    self.layer_stats.record_rows(k, 1, 0, 0);
+                    if want
+                        && (!warm
+                            || (self.spec.coupled && all_want && any_cold))
+                    {
+                        // the gates wanted to skip; a cold cache said
+                        // run — this row's own on a fresh join, or (in
+                        // coupled mode) a freshly-joined sibling's that
+                        // dragged a batch whose gates all agreed
                         self.layer_stats.record_cold_denied(k);
                     }
                     spin(self.spec.work_per_module);
                 }
             }
-            self.active[ai].cursor += 1;
+        }
+        for a in &mut self.active {
+            a.cursor += 1;
         }
         // retire finished trajectories
         let img_elems = self.spec.img_elems;
@@ -330,6 +366,51 @@ mod tests {
         never.submit(Request::new(0, 1, 10, 3));
         run_all(&mut never);
         assert_eq!(never.layer_stats.overall_ratio(), 0.0);
+    }
+
+    #[test]
+    fn coupled_gate_denies_what_row_granularity_recovers() {
+        // identical arrival schedule, both gate modes: a warm resident
+        // plus a cold joiner every round. The coupled gate runs the
+        // resident's modules whenever the joiner is cold; the
+        // row-granular gate serves the resident from cache and counts
+        // those skips as recovered.
+        let run = |coupled: bool| {
+            let mut e = SimEngine::new(SimSpec {
+                lazy_pct: 90,
+                work_per_module: 0,
+                coupled,
+                ..SimSpec::default()
+            });
+            e.submit(Request::new(0, 1, 6, 77));
+            for round in 0..4 {
+                e.submit(Request::new(0, 2, 1, 200 + round));
+                e.step_round().unwrap();
+            }
+            while e.active_count() > 0 {
+                e.step_round().unwrap();
+            }
+            e
+        };
+        let coupled = run(true);
+        let rowg = run(false);
+        let total = |e: &SimEngine| {
+            e.layer_stats.rows_run_total() + e.layer_stats.rows_skipped_total()
+        };
+        assert_eq!(total(&coupled), total(&rowg),
+                   "same schedule, same row-weighted work offered");
+        assert!(rowg.layer_stats.rows_run_total()
+                    < coupled.layer_stats.rows_run_total(),
+                "row granularity must run strictly fewer rows ({} vs {})",
+                rowg.layer_stats.rows_run_total(),
+                coupled.layer_stats.rows_run_total());
+        assert!(rowg.layer_stats.rows_recovered_total() > 0,
+                "resident skips during cold rounds count as recovered");
+        assert_eq!(coupled.layer_stats.rows_recovered_total(), 0,
+                   "the coupled gate can never recover rows");
+        // rows partition module invocations exactly (one row per
+        // trajectory per invocation in the simulator)
+        assert_eq!(total(&rowg), rowg.serve_stats.module_invocations);
     }
 
     #[test]

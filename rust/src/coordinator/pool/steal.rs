@@ -23,7 +23,7 @@ use crate::coordinator::pool::replica::{dec, PoolJob, ReplicaGauges,
                                         ReplicaTier};
 use crate::coordinator::pool::router::lazy_cost;
 use crate::util::threadpool::BoundedQueue;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// One replica's stealable surface: its input queue (thieves take from
@@ -52,7 +52,28 @@ pub struct Rebalancer {
     admit_window: usize,
     /// Total successful migrations (monotone; for reporting).
     total_steals: AtomicU64,
+    /// Raised while any tier group's step-backlogs are *overdispersed*
+    /// (variance exceeding twice the mean — load clumping on few
+    /// same-tier siblings): every stealing worker narrows its in-engine
+    /// admission window by one step, keeping one more job in the
+    /// migratable queue tail. Cleared as soon as every group looks
+    /// balanced. Recomputed inside [`Self::steal_for`]'s existing peer
+    /// scan (whenever any worker idles) and, while raised, refreshed
+    /// rate-limited from [`Self::effective_window`] so a fully-busy
+    /// pool cannot freeze it on (the ROADMAP "steal-aware admission
+    /// window" heuristic).
+    window_shrunk: AtomicBool,
+    /// Last time the raised signal was re-validated from the busy path
+    /// (see [`Self::effective_window`]).
+    refreshed_at: Mutex<std::time::Instant>,
 }
+
+/// While the dispersion signal is raised, busy workers re-validate it
+/// from `effective_window` at most this often — cheap enough to sit on
+/// the admission path, frequent enough that a signal raised during a
+/// transient can't outlive the imbalance just because nobody idles.
+const SHRINK_REFRESH: std::time::Duration =
+    std::time::Duration::from_millis(10);
 
 impl Rebalancer {
     /// Construct with the pool-default in-engine admission window
@@ -63,12 +84,94 @@ impl Rebalancer {
             peers: Mutex::new(Vec::new()),
             admit_window: admit_window.max(1),
             total_steals: AtomicU64::new(0),
+            window_shrunk: AtomicBool::new(false),
+            refreshed_at: Mutex::new(std::time::Instant::now()),
         })
     }
 
     /// In-engine admission bound for stealing workers.
     pub fn admit_window(&self) -> usize {
         self.admit_window
+    }
+
+    /// The *adaptive* in-engine admission bound for a stealing worker
+    /// of `tier`: the tier's steal window, narrowed by one step (never
+    /// below 1) while the backlog-dispersion signal is raised, restored
+    /// to the constant as soon as every tier group is balanced.
+    ///
+    /// While the signal is raised it is re-validated here, rate-limited
+    /// (every ~10ms) and contention-free (`try_lock`, skipped on
+    /// conflict): the scan otherwise lives only in the idle steal
+    /// probe, and a saturated pool — where nobody ever idles — must
+    /// not keep running on a frozen stale signal.
+    pub fn effective_window(&self, tier: &ReplicaTier) -> usize {
+        let w = tier.engine_window(true);
+        if !self.window_shrunk.load(Ordering::Relaxed) {
+            return w;
+        }
+        if let Ok(mut last) = self.refreshed_at.try_lock() {
+            if last.elapsed() >= SHRINK_REFRESH {
+                *last = std::time::Instant::now();
+                if let Ok(peers) = self.peers.try_lock() {
+                    self.note_backlogs(&peers);
+                }
+            }
+        }
+        if self.window_shrunk.load(Ordering::Relaxed) {
+            w.saturating_sub(1).max(1)
+        } else {
+            w
+        }
+    }
+
+    /// Is the dispersion signal currently narrowing windows? (tests,
+    /// reporting)
+    pub fn window_shrunk(&self) -> bool {
+        self.window_shrunk.load(Ordering::Relaxed)
+    }
+
+    /// Recompute the dispersion signal: within each *tier group* (same
+    /// SLO class and batch width — only same-tier siblings are
+    /// comparable), raise it when the group's step-backlog population
+    /// variance exceeds twice its mean (index of dispersion ≫ 1 — far
+    /// spikier than a balanced group), clear it when every group is
+    /// balanced, idle, or trivially small. Grouping matters: a B1
+    /// latency replica's inherently tiny backlog next to B8 throughput
+    /// replicas' deep ones is healthy heterogeneity, not clumping, and
+    /// must never narrow anyone's window.
+    fn note_backlogs(&self, peers: &[StealPeer]) {
+        let mut shrunk = false;
+        let mut seen: Vec<(crate::config::Slo, usize)> = Vec::new();
+        for p in peers {
+            let key = (p.tier.slo, p.tier.max_batch);
+            if seen.contains(&key) {
+                continue;
+            }
+            seen.push(key);
+            let group: Vec<f64> = peers
+                .iter()
+                .filter(|q| q.tier.slo == key.0
+                            && q.tier.max_batch == key.1)
+                .map(|q| {
+                    q.gauges.pending_steps.load(Ordering::Relaxed) as f64
+                })
+                .collect();
+            if group.len() < 2 {
+                continue;
+            }
+            let n = group.len() as f64;
+            let mean = group.iter().sum::<f64>() / n;
+            let var = group
+                .iter()
+                .map(|&b| (b - mean) * (b - mean))
+                .sum::<f64>()
+                / n;
+            if mean > 0.0 && var > 2.0 * mean {
+                shrunk = true;
+                break;
+            }
+        }
+        self.window_shrunk.store(shrunk, Ordering::Relaxed);
     }
 
     /// Successful migrations so far, pool-wide.
@@ -93,6 +196,9 @@ impl Rebalancer {
     /// admits the job as if the router had dispatched it here.
     pub fn steal_for(&self, thief: usize) -> Option<PoolJob> {
         let peers = self.peers.lock().unwrap_or_else(|p| p.into_inner());
+        // refresh the adaptive-window signal on the scan we already pay
+        // for: one gauge read per peer, grouped by tier
+        self.note_backlogs(&peers);
         let me = peers.iter().find(|p| p.id == thief)?;
         // rank victims by effective backlog, costliest first; only
         // siblings with jobs physically in their queue are candidates
@@ -343,6 +449,85 @@ mod tests {
             .unwrap();
         drop(peers);
         assert!(rb.steal_for(1).is_some());
+    }
+
+    #[test]
+    fn admission_window_adapts_to_backlog_dispersion() {
+        let rb = Rebalancer::new(4);
+        let tier = ReplicaTier::new(Slo::Besteffort, 4);
+        assert_eq!(rb.effective_window(&tier), 4, "balanced at birth");
+        rb.register(vec![peer(0), peer(1), peer(2)]);
+        // one replica hoards the backlog: mean 20, variance 800 ≫ 2·mean
+        {
+            let peers = rb.peers.lock().unwrap();
+            peers[0].gauges.pending_steps.store(60, Ordering::Relaxed);
+        }
+        assert!(rb.steal_for(1).is_none(), "nothing queued to migrate");
+        assert!(rb.window_shrunk(), "overdispersion must raise the signal");
+        assert_eq!(rb.effective_window(&tier), 3, "window narrows one step");
+        // a B1 tier never narrows below one trajectory
+        assert_eq!(
+            rb.effective_window(&ReplicaTier::new(Slo::Latency, 1)),
+            1
+        );
+        // balance restored ⇒ the constant window comes back — via the
+        // BUSY path: no steal_for (nobody idles), effective_window's
+        // rate-limited refresh must clear the stale signal by itself
+        {
+            let peers = rb.peers.lock().unwrap();
+            for p in peers.iter() {
+                p.gauges.pending_steps.store(20, Ordering::Relaxed);
+            }
+        }
+        std::thread::sleep(SHRINK_REFRESH + SHRINK_REFRESH);
+        assert_eq!(rb.effective_window(&tier), 4,
+                   "a saturated pool must not run on a frozen signal");
+        assert!(!rb.window_shrunk(), "balanced pool clears the signal");
+        // an idle pool (all zero) is balanced too
+        {
+            let peers = rb.peers.lock().unwrap();
+            for p in peers.iter() {
+                p.gauges.pending_steps.store(0, Ordering::Relaxed);
+            }
+        }
+        assert!(rb.steal_for(1).is_none());
+        assert!(!rb.window_shrunk());
+    }
+
+    #[test]
+    fn healthy_heterogeneous_pool_never_shrinks_the_window() {
+        // the documented tiered shape lat:b1x1 + thr:b8x3 under steady
+        // balanced load: the latency replica's backlog is inherently
+        // tiny next to the throughput replicas' deep ones. Dispersion
+        // is judged within tier groups, so this must NOT read as
+        // overdispersion (pool-wide variance would trip it forever)
+        let rb = Rebalancer::new(8);
+        rb.register(vec![
+            peer_tiered(0, ReplicaTier::new(Slo::Latency, 1)),
+            peer_tiered(1, ReplicaTier::new(Slo::Throughput, 8)),
+            peer_tiered(2, ReplicaTier::new(Slo::Throughput, 8)),
+            peer_tiered(3, ReplicaTier::new(Slo::Throughput, 8)),
+        ]);
+        {
+            let peers = rb.peers.lock().unwrap();
+            peers[0].gauges.pending_steps.store(8, Ordering::Relaxed);
+            for p in peers.iter().skip(1) {
+                p.gauges.pending_steps.store(160, Ordering::Relaxed);
+            }
+        }
+        assert!(rb.steal_for(0).is_none(), "nothing queued");
+        assert!(!rb.window_shrunk(),
+                "healthy tier heterogeneity is not clumping");
+        // but clumping WITHIN the throughput group still trips it
+        {
+            let peers = rb.peers.lock().unwrap();
+            peers[1].gauges.pending_steps.store(480, Ordering::Relaxed);
+            peers[2].gauges.pending_steps.store(0, Ordering::Relaxed);
+            peers[3].gauges.pending_steps.store(0, Ordering::Relaxed);
+        }
+        assert!(rb.steal_for(0).is_none());
+        assert!(rb.window_shrunk(),
+                "same-tier imbalance must raise the signal");
     }
 
     #[test]

@@ -242,7 +242,7 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> 
     queue.close();
     drop(acceptor); // detached; process exit reaps it
     log::info!("served {served} requests; lazy ratio {:.3}",
-               engine.layer_stats.overall_ratio());
+               engine.layer_stats.row_overall_ratio());
     Ok(())
 }
 

@@ -12,9 +12,22 @@ pub struct LayerStats {
     pub s_sum: Vec<f64>,
     /// [2L]: invocations whose skip was *denied by a cold row* — the
     /// gates wanted to reuse the cache but a freshly-joined (cache-
-    /// invalid) row forced the whole batch to run. The observable cost
-    /// of all-or-nothing batch skip coupling (surfaced via `STATS`).
+    /// invalid) row forced a run. Under the coupled gate that denial
+    /// dragged the whole batch; under row-granular gating only the cold
+    /// row (and its CFG partner) runs, so the counter now measures
+    /// inherent cold work rather than coupling waste (surfaced via
+    /// `STATS`).
     pub cold_denied: Vec<u64>,
+    /// [2L]: live rows the module executable actually ran — the
+    /// row-weighted work unit behind Γ (a partial invocation counts
+    /// only its run-rows here).
+    pub rows_run: Vec<u64>,
+    /// [2L]: live rows served straight from the cache.
+    pub rows_skipped: Vec<u64>,
+    /// [2L]: rows served from cache that the all-or-nothing gate would
+    /// NOT have skipped on the same inputs — row granularity's
+    /// recovered work (exact counterfactual, per slot).
+    pub rows_recovered: Vec<u64>,
 }
 
 impl LayerStats {
@@ -24,6 +37,9 @@ impl LayerStats {
             total: vec![0; 2 * depth],
             s_sum: vec![0.0; 2 * depth],
             cold_denied: vec![0; 2 * depth],
+            rows_run: vec![0; 2 * depth],
+            rows_skipped: vec![0; 2 * depth],
+            rows_recovered: vec![0; 2 * depth],
         }
     }
 
@@ -44,34 +60,103 @@ impl LayerStats {
         self.cold_denied[slot] += 1;
     }
 
+    /// Row-weighted accounting for one module invocation on `slot`:
+    /// `run` live rows executed, `skipped` rows served from cache, of
+    /// which `recovered` were skippable only thanks to row granularity
+    /// (the coupled batch gate would have run them).
+    pub fn record_rows(&mut self, slot: usize, run: u64, skipped: u64,
+                       recovered: u64) {
+        self.rows_run[slot] += run;
+        self.rows_skipped[slot] += skipped;
+        self.rows_recovered[slot] += recovered;
+    }
+
     /// Total cold-row denials across all slots (the `STATS` gauge).
     pub fn cold_denied_total(&self) -> u64 {
         self.cold_denied.iter().sum()
     }
 
-    /// Lazy ratio of the attn module at layer l.
+    /// Total live rows run across all slots.
+    pub fn rows_run_total(&self) -> u64 {
+        self.rows_run.iter().sum()
+    }
+
+    /// Total live rows served from cache across all slots.
+    pub fn rows_skipped_total(&self) -> u64 {
+        self.rows_skipped.iter().sum()
+    }
+
+    /// Total rows recovered by row-granular gating across all slots.
+    pub fn rows_recovered_total(&self) -> u64 {
+        self.rows_recovered.iter().sum()
+    }
+
+    /// Row-weighted lazy ratio Γ: skipped rows over live rows seen.
+    /// Falls back to the module-weighted ratio when no row accounting
+    /// exists (engines predating row stats, hand-built reports).
+    pub fn row_overall_ratio(&self) -> f64 {
+        let run = self.rows_run_total();
+        let skipped = self.rows_skipped_total();
+        if run + skipped == 0 {
+            return self.overall_ratio();
+        }
+        skipped as f64 / (run + skipped) as f64
+    }
+
+    /// One slot's lazy ratio: row-weighted when row accounting exists
+    /// for the slot (a partially-skipped invocation contributes
+    /// fractionally), module-weighted otherwise. `.get` keeps merged
+    /// stats safe when an older report carried no row vectors.
+    fn slot_ratio(&self, k: usize) -> f64 {
+        let run = self.rows_run.get(k).copied().unwrap_or(0);
+        let skipped = self.rows_skipped.get(k).copied().unwrap_or(0);
+        if run + skipped > 0 {
+            skipped as f64 / (run + skipped) as f64
+        } else {
+            ratio(self.skips[k], self.total[k])
+        }
+    }
+
+    /// Lazy ratio of the attn module at layer l (row-weighted when
+    /// available, module-weighted otherwise).
     pub fn attn_ratio(&self, l: usize) -> f64 {
-        ratio(self.skips[2 * l], self.total[2 * l])
+        self.slot_ratio(2 * l)
     }
 
-    /// Lazy ratio of the ffn module at layer l.
+    /// Lazy ratio of the ffn module at layer l (row-weighted when
+    /// available).
     pub fn ffn_ratio(&self, l: usize) -> f64 {
-        ratio(self.skips[2 * l + 1], self.total[2 * l + 1])
+        self.slot_ratio(2 * l + 1)
     }
 
+    /// Module-weighted overall ratio (whole-invocation booleans); the
+    /// row-weighted Γ is [`Self::row_overall_ratio`].
     pub fn overall_ratio(&self) -> f64 {
         ratio(self.skips.iter().sum(), self.total.iter().sum())
     }
 
     pub fn attn_overall(&self) -> f64 {
-        let s: u64 = (0..self.depth()).map(|l| self.skips[2 * l]).sum();
-        let t: u64 = (0..self.depth()).map(|l| self.total[2 * l]).sum();
-        ratio(s, t)
+        self.module_overall(0)
     }
 
     pub fn ffn_overall(&self) -> f64 {
-        let s: u64 = (0..self.depth()).map(|l| self.skips[2 * l + 1]).sum();
-        let t: u64 = (0..self.depth()).map(|l| self.total[2 * l + 1]).sum();
+        self.module_overall(1)
+    }
+
+    /// Row-preferring overall ratio over one module kind (0 = attn,
+    /// 1 = ffn).
+    fn module_overall(&self, m: usize) -> f64 {
+        let rs: u64 = (0..self.depth())
+            .map(|l| self.rows_skipped.get(2 * l + m).copied().unwrap_or(0))
+            .sum();
+        let rr: u64 = (0..self.depth())
+            .map(|l| self.rows_run.get(2 * l + m).copied().unwrap_or(0))
+            .sum();
+        if rr + rs > 0 {
+            return rs as f64 / (rr + rs) as f64;
+        }
+        let s: u64 = (0..self.depth()).map(|l| self.skips[2 * l + m]).sum();
+        let t: u64 = (0..self.depth()).map(|l| self.total[2 * l + m]).sum();
         ratio(s, t)
     }
 
@@ -180,6 +265,23 @@ mod tests {
         };
         assert!((st.throughput() - 2.0).abs() < 1e-9);
         assert!((st.mean_latency() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_weighted_gamma() {
+        let mut st = LayerStats::new(1);
+        // no rows recorded yet: falls back to module-weighted
+        st.record(0, true, 0.9);
+        st.record(0, false, 0.1);
+        assert!((st.row_overall_ratio() - 0.5).abs() < 1e-12);
+        // a partial invocation: 1 run row, 3 skipped (3 recovered),
+        // then a uniform skip of 4 rows
+        st.record_rows(0, 1, 3, 3);
+        st.record_rows(1, 0, 4, 0);
+        assert_eq!(st.rows_run_total(), 1);
+        assert_eq!(st.rows_skipped_total(), 7);
+        assert_eq!(st.rows_recovered_total(), 3);
+        assert!((st.row_overall_ratio() - 7.0 / 8.0).abs() < 1e-12);
     }
 
     #[test]

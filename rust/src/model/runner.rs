@@ -5,6 +5,19 @@
 //! the module executable is invoked: a skip elides the whole MHSA/FFN
 //! executable call, which is how the paper's laziness becomes wall-clock
 //! time (DESIGN.md §2 "per-module executables").
+//!
+//! The decision is **row-granular** (the paper's gates are per-sample):
+//! every live batch row decides its own skip from its own gate value,
+//! and a slot whose rows disagree splits into a compacted run-rows
+//! sub-batch (executed at the nearest compiled bucket width, scattered
+//! back into the cache slot) while skip-rows are served straight from
+//! their cached bytes. The uniform cases keep the PR 4 fast paths:
+//! all-skip passes the memoized cache literal to `apply` with zero
+//! clones and zero conversions; all-run is the plain full-batch
+//! invocation. CFG lane pairs always land in the same partition
+//! ([`plan_rows`]). The legacy all-or-nothing batch-consensus gate
+//! survives as `DecisionCfg::row_granular = false` (the coupled
+//! baseline the `cold_churn` bench compares against).
 
 use crate::config::{LazyScope, SkipPolicy};
 use crate::model::params::{GateWeights, WeightSet};
@@ -115,6 +128,22 @@ impl BatchCaches {
         Ok(self.lits[k].as_ref().expect("just filled"))
     }
 
+    /// Partial-run install (the row-granular skip path): overwrite the
+    /// rows named by `idx` (sub-batch row `j` → batch row `idx[j]`;
+    /// `usize::MAX` ⇒ sub-batch padding, dropped) with fresh module
+    /// outputs, drop the slot's literal memo (the tensor diverged), and
+    /// raise the overwritten rows' validity. Skip-rows keep their cached
+    /// bytes and validity untouched.
+    pub fn scatter_fresh(&mut self, k: usize, sub: &Tensor, idx: &[usize]) {
+        self.values[k].scatter_rows_from(sub, idx);
+        self.lits[k] = None;
+        for &i in idx {
+            if i != usize::MAX {
+                self.valid[k][i] = true;
+            }
+        }
+    }
+
     /// Migrate rows from another cache set (the engine's bucket-change
     /// repack): per slot, gather `src`'s rows named by `idx`
     /// (`usize::MAX` ⇒ zeroed padding) into this cache's tensor via
@@ -164,13 +193,47 @@ pub struct StepOutcome {
     pub eps: Tensor,
     /// Gate values s per module per row: [2L][B].
     pub s_vals: Vec<Vec<f32>>,
-    /// Whether each module invocation was skipped: [2L].
+    /// Whether the module invocation was elided *entirely* (every live
+    /// row served from cache): [2L]. A partial (mixed) slot still ran
+    /// the executable — on its compacted run-rows sub-batch — so it
+    /// reports `false` here; per-row truth is in [`Self::row_skipped`].
     pub skipped: Vec<bool>,
-    /// Per module slot [2L]: the gates *wanted* to skip but a cold
-    /// (cache-invalid) live row forced the whole batch to run — the
-    /// laziness lost to all-or-nothing batch coupling when a fresh
-    /// request joins (observable via `STATS` as `cold_denied`).
+    /// Per slot [2L]: bitmask of batch rows served from the cache (bit
+    /// `i` = row `i` skipped). Rows ≥ 64 fall back to the coupled gate
+    /// (see [`Self::row_skipped`]).
+    pub row_skips: Vec<u64>,
+    /// Per slot [2L]: live rows the module executable actually ran.
+    pub rows_run: Vec<u32>,
+    /// Per slot [2L]: live rows served straight from the cache.
+    pub rows_skipped: Vec<u32>,
+    /// Per slot [2L]: rows whose wanted skip was denied by a cold cache
+    /// (their own, or their CFG partner's — pairs run together).
+    pub rows_denied_cold: Vec<u32>,
+    /// Per slot [2L]: skip-rows the legacy all-or-nothing gate would
+    /// NOT have skipped on the same inputs (the exact counterfactual —
+    /// see [`RowPlan::rows_recovered`]).
+    pub rows_recovered: Vec<u32>,
+    /// Per module slot [2L]: at least one row's wanted skip was denied
+    /// by a cold (cache-invalid) row. Under the legacy coupled gate
+    /// this is the whole-batch denial PR 4 surfaced as `cold_denied`;
+    /// under row-granular gating only the cold row itself (plus its CFG
+    /// partner) runs, so the count measures inherent cold work, not
+    /// coupling waste.
     pub skip_denied_cold: Vec<bool>,
+}
+
+impl StepOutcome {
+    /// Was batch row `row` served from the cache for slot `k`? Rows
+    /// past the 64-bit mask fall back to the module-level bool — those
+    /// buckets run the coupled gate, whose mask is uniform by
+    /// construction.
+    pub fn row_skipped(&self, k: usize, row: usize) -> bool {
+        if row < 64 {
+            (self.row_skips[k] >> row) & 1 == 1
+        } else {
+            self.skipped[k]
+        }
+    }
 }
 
 /// Aggregated laziness accounting (the paper's Γ, per scope).
@@ -188,11 +251,28 @@ pub struct StepStats {
     pub attn_denied_cold: usize,
     /// Cold-row denials on FFN slots.
     pub ffn_denied_cold: usize,
+    /// Row-weighted work: live rows the executables actually ran.
+    pub rows_run: u64,
+    /// Row-weighted laziness: live rows served straight from the cache.
+    pub rows_skipped: u64,
+    /// Rows skipped while their module still ran for other rows — the
+    /// work recovered by row-granular gating.
+    pub rows_recovered: u64,
 }
 
 impl StepStats {
     pub fn lazy_ratio(&self) -> f64 {
         self.modules_skipped as f64 / self.modules_total.max(1) as f64
+    }
+
+    /// Row-weighted lazy ratio (falls back to the module-weighted ratio
+    /// when no row accounting has been absorbed).
+    pub fn row_lazy_ratio(&self) -> f64 {
+        let total = self.rows_run + self.rows_skipped;
+        if total == 0 {
+            return self.lazy_ratio();
+        }
+        self.rows_skipped as f64 / total as f64
     }
 
     pub fn absorb(&mut self, outcome: &StepOutcome) {
@@ -220,6 +300,12 @@ impl StepStats {
                     self.ffn_denied_cold += 1;
                 }
             }
+            self.rows_run +=
+                outcome.rows_run.get(k).copied().unwrap_or(0) as u64;
+            self.rows_skipped +=
+                outcome.rows_skipped.get(k).copied().unwrap_or(0) as u64;
+            self.rows_recovered +=
+                outcome.rows_recovered.get(k).copied().unwrap_or(0) as u64;
         }
     }
 }
@@ -230,6 +316,232 @@ pub struct DecisionCfg {
     pub policy: SkipPolicy,
     pub scope: LazyScope,
     pub threshold: f32,
+    /// Row-granular gating (the default): every live row decides its
+    /// own skips from its own gate value, the module runs on a
+    /// compacted run-rows sub-batch, and skip-rows are served from the
+    /// cache. `false` restores the legacy all-or-nothing
+    /// batch-consensus gate (the coupled baseline — one cold row forces
+    /// the whole batch to run).
+    pub row_granular: bool,
+}
+
+/// Outcome of the per-row gate for one module slot (see [`plan_rows`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowPlan {
+    /// Every live row is served from the cache — no module invocation
+    /// at all (the uniform-skip fast path: pre-built literal, zero
+    /// clones, zero conversions).
+    pub all_skip: bool,
+    /// No live row skips (the uniform-run fast path).
+    pub all_run: bool,
+    /// Live rows the module must run.
+    pub rows_run: u32,
+    /// Live rows served from the cache.
+    pub rows_skipped: u32,
+    /// Rows that wanted to skip but run because a cache — their own or
+    /// their CFG partner's — is cold.
+    pub rows_denied_cold: u32,
+    /// Skip-rows the coupled batch-consensus gate would NOT have
+    /// skipped on the same inputs — the exact counterfactual, not just
+    /// "skips of a mixed slot": a Mean/Majority/Any consensus can skip
+    /// a batch whose rows disagree, and those skips are not recovery.
+    pub rows_recovered: u32,
+}
+
+impl RowPlan {
+    /// Neither uniform case: the slot splits into run/skip sub-batches.
+    pub fn mixed(&self) -> bool {
+        !self.all_skip && !self.all_run
+    }
+}
+
+/// Per-row gate + cache plan for one module slot: fills `mask[i] = true`
+/// iff batch row `i` is served from the cache this step, and returns the
+/// partition summary.
+///
+/// Row-granular mode (`dec.row_granular`): each live row wants to skip
+/// iff its own gate value exceeds the threshold (the paper's per-sample
+/// gate — `Mean`/`Majority`/`All`/`Any` all reduce to the same
+/// per-row test over a singleton; they keep their distinct batch
+/// semantics only in coupled mode). A row skips iff it wants to AND its
+/// cache row is valid. **CFG-pair invariant:** the cond/uncond lanes of
+/// one request (marked by `pairs[i]` = rows `i`,`i+1` are one pair)
+/// decide jointly — both skip or both run — so per-request accounting
+/// and the batcher's adjacency invariant stay intact.
+///
+/// Coupled mode reproduces the legacy batch-consensus gate bit-exactly:
+/// one decision for the whole batch ([`decide`]), denied outright when
+/// any live row's cache is cold.
+///
+/// A `forced` mask row (the Learn2Cache-analog static schedule)
+/// overrides the *gates* in both modes, but cache validity still
+/// applies per row — a forced-skip slot with one cold row splits in
+/// row-granular mode (only the cold rows run), and is denied outright
+/// in coupled mode. `Blend` never skips (the runner blends on the run
+/// path).
+/// The legacy batch-consensus inputs for one slot: does the consensus
+/// (or the forced bit) want the skip, and is every live row's cache
+/// warm? One implementation shared by the coupled branch and the
+/// row-granular `rows_recovered` counterfactual — the advertised
+/// "exact counterfactual" must never drift from the real coupled gate.
+fn coupled_gate(dec: DecisionCfg, in_scope: bool, forced: Option<bool>,
+                s: &[f32], live: &[bool], valid: &[bool]) -> (bool, bool) {
+    let would = match forced {
+        Some(f) => f,
+        None => in_scope && decide(dec.policy, dec.threshold, s, live),
+    };
+    let cache_ok = live
+        .iter()
+        .enumerate()
+        .filter(|(_, &lv)| lv)
+        .all(|(i, _)| valid[i]);
+    (would, cache_ok)
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn plan_rows(dec: DecisionCfg, in_scope: bool, forced: Option<bool>,
+                 s: &[f32], live: &[bool], pairs: &[bool], valid: &[bool],
+                 mask: &mut Vec<bool>) -> RowPlan {
+    let n = live.len();
+    mask.clear();
+    mask.resize(n, false);
+    let blend = dec.policy == SkipPolicy::Blend;
+
+    if !dec.row_granular {
+        // legacy batch consensus (PR 4 semantics, kept bit-exact)
+        let (would, cache_ok) =
+            coupled_gate(dec, in_scope, forced, s, live, valid);
+        let skip_now = would && cache_ok && !blend;
+        let live_n = live.iter().filter(|&&lv| lv).count() as u32;
+        if skip_now {
+            for (i, &lv) in live.iter().enumerate() {
+                mask[i] = lv;
+            }
+        }
+        return RowPlan {
+            all_skip: skip_now,
+            all_run: !skip_now,
+            rows_run: if skip_now { 0 } else { live_n },
+            rows_skipped: if skip_now { live_n } else { 0 },
+            rows_denied_cold: if would && !cache_ok && !blend {
+                live_n
+            } else {
+                0
+            },
+            rows_recovered: 0, // the coupled gate cannot out-skip itself
+        };
+    }
+
+    let (mut rows_run, mut rows_skipped, mut denied) = (0u32, 0u32, 0u32);
+    let row_wants = |i: usize| -> bool {
+        if blend {
+            return false;
+        }
+        match forced {
+            Some(f) => f,
+            None => {
+                in_scope
+                    && !matches!(dec.policy,
+                                 SkipPolicy::Never | SkipPolicy::Blend)
+                    && s[i] > dec.threshold
+            }
+        }
+    };
+    let mut i = 0usize;
+    while i < n {
+        // CFG lanes are adjacent (batcher invariant); a pair spans two
+        // rows and decides jointly
+        let span = if pairs.get(i).copied().unwrap_or(false) && i + 1 < n {
+            2
+        } else {
+            1
+        };
+        if live[i] {
+            let want = (i..i + span).all(|r| row_wants(r));
+            let ok = (i..i + span).all(|r| valid[r]);
+            let skip = want && ok;
+            for r in i..i + span {
+                mask[r] = skip;
+                if skip {
+                    rows_skipped += 1;
+                } else {
+                    rows_run += 1;
+                    if want {
+                        denied += 1;
+                    }
+                }
+            }
+        }
+        i += span;
+    }
+    // the coupled counterfactual, for recovered-work accounting: would
+    // the legacy batch-consensus gate have skipped this whole slot?
+    // (e.g. a Mean consensus can skip a batch whose rows disagree — the
+    // per-row gate's skips there are fidelity, not recovered work)
+    let coupled_would = {
+        let (would, cache_ok) =
+            coupled_gate(dec, in_scope, forced, s, live, valid);
+        would && cache_ok && !blend
+    };
+    RowPlan {
+        all_skip: rows_run == 0 && rows_skipped > 0,
+        all_run: rows_skipped == 0,
+        rows_run,
+        rows_skipped,
+        rows_denied_cold: denied,
+        rows_recovered: if coupled_would { 0 } else { rows_skipped },
+    }
+}
+
+/// The run/skip split of one partial module invocation: which batch
+/// rows must run — compacted into a padded sub-batch at the nearest
+/// compiled bucket width — and which are served straight from the
+/// cache. One instance lives on the runner and is re-planned in place
+/// every mixed slot (index lists recycled, no allocation in the steady
+/// state); the compacted tensors themselves recycle through the
+/// runner's [`TensorPool`].
+#[derive(Debug, Default, Clone)]
+pub struct RowPartition {
+    /// Compiled bucket width of the run sub-batch (≥ the run-row count,
+    /// never wider than the full batch's bucket).
+    pub bucket: usize,
+    /// Batch row of each sub-batch row, padded with `usize::MAX` to
+    /// `bucket`. Compaction is its own inverse, so this one map drives
+    /// both the gather (batch → sub-batch) and the scatter back
+    /// ([`Tensor::gather_rows_into`] / [`Tensor::scatter_rows_from`]).
+    pub run_idx: Vec<usize>,
+    /// Batch rows served from the cache (diagnostics and tests).
+    pub skip_idx: Vec<usize>,
+}
+
+impl RowPartition {
+    /// Re-plan in place from a skip mask: run-rows are the live rows
+    /// whose mask bit is false; the sub-batch width is the smallest
+    /// compiled bucket that holds them. `cur_bucket` (the full batch's
+    /// width) is itself compiled, so a width always exists.
+    pub fn plan(&mut self, mask: &[bool], live: &[bool], buckets: &[usize],
+                cur_bucket: usize) {
+        self.run_idx.clear();
+        self.skip_idx.clear();
+        for (i, &lv) in live.iter().enumerate() {
+            if !lv {
+                continue;
+            }
+            if mask[i] {
+                self.skip_idx.push(i);
+            } else {
+                self.run_idx.push(i);
+            }
+        }
+        let need = self.run_idx.len();
+        self.bucket = buckets
+            .iter()
+            .copied()
+            .filter(|&w| w >= need && w <= cur_bucket)
+            .min()
+            .unwrap_or(cur_bucket);
+        self.run_idx.resize(self.bucket, usize::MAX);
+    }
 }
 
 /// Compiled executables for one bucket size.
@@ -311,6 +623,18 @@ pub struct ModelRunner {
     /// draw from and return to it, so the steady state allocates
     /// nothing (docs/PERF.md).
     pool: Rc<TensorPool>,
+    /// Reusable per-slot skip mask filled by [`plan_rows`] — grown once,
+    /// then recycled every module slot (allocation-free hot path).
+    gate_mask: Vec<bool>,
+    /// Reusable run/skip partition plan for mixed slots (index lists
+    /// recycled in place; compacted tensors recycle through `pool`).
+    partition: RowPartition,
+    /// Bucket widths the partial path may compact a run sub-batch to.
+    /// Defaults to the full compiled set; SLO-tiered engines restrict
+    /// it to their round-bucket set
+    /// ([`Self::restrict_partial_buckets`]) so a tier's executable
+    /// footprint stays bounded the way PR 3 intended.
+    partial_buckets: Vec<usize>,
 }
 
 impl ModelRunner {
@@ -320,8 +644,11 @@ impl ModelRunner {
         let gates = GateWeights::from_flat(&cfg, gamma)?;
         let lit = LitWeights::build(&weights, &gates)?;
         let pool = Rc::new(arena_for(&cfg));
+        let partial_buckets = cfg.buckets.clone();
         Ok(ModelRunner { rt, cfg, weights, gates, lit, buckets: Vec::new(),
-                         pool })
+                         pool, gate_mask: Vec::new(),
+                         partition: RowPartition::default(),
+                         partial_buckets })
     }
 
     /// Same runner with laziness disabled (DDIM baseline path).
@@ -331,8 +658,29 @@ impl ModelRunner {
         let gates = GateWeights::disabled(&cfg);
         let lit = LitWeights::build(&weights, &gates)?;
         let pool = Rc::new(arena_for(&cfg));
+        let partial_buckets = cfg.buckets.clone();
         Ok(ModelRunner { rt, cfg, weights, gates, lit, buckets: Vec::new(),
-                         pool })
+                         pool, gate_mask: Vec::new(),
+                         partition: RowPartition::default(),
+                         partial_buckets })
+    }
+
+    /// Restrict the widths the partial (run-rows sub-batch) path may
+    /// compile to — an SLO-tiered engine passes its round-bucket set so
+    /// a mixed slot never lazily loads executables outside the tier's
+    /// footprint. Unknown widths are ignored (every partial bucket must
+    /// be compiled); an empty intersection keeps the full compiled set.
+    pub fn restrict_partial_buckets(&mut self, buckets: &[usize]) {
+        let restricted: Vec<usize> = self
+            .cfg
+            .buckets
+            .iter()
+            .copied()
+            .filter(|b| buckets.contains(b))
+            .collect();
+        if !restricted.is_empty() {
+            self.partial_buckets = restricted;
+        }
     }
 
     /// The runner's buffer arena — engines share it with their batch
@@ -380,12 +728,15 @@ impl ModelRunner {
     /// * `z`: [B, C, H, W] latents (B == bucket size, padded rows zeros)
     /// * `t`: [B] float timesteps, `y`: [B] labels (null for uncond rows)
     /// * `live`: [B] — padding rows are false and excluded from decisions
+    /// * `pairs`: [B] — `pairs[i]` marks rows `i`,`i+1` as one request's
+    ///   CFG lane pair (they skip or run together)
     /// * `caches`: previous-step module outputs, updated in place
     #[allow(clippy::too_many_arguments)]
     pub fn step(&mut self, bucket: usize, z: &Tensor, t: &[f32], y: &[i32],
-                live: &[bool], caches: &mut BatchCaches,
+                live: &[bool], pairs: &[bool], caches: &mut BatchCaches,
                 dec: DecisionCfg) -> Result<StepOutcome> {
-        self.step_with_forced(bucket, z, t, y, live, caches, dec, None)
+        self.step_with_forced(bucket, z, t, y, live, pairs, caches, dec,
+                              None)
     }
 
     /// `step` with an optional forced skip mask per module slot [2L] — the
@@ -393,7 +744,7 @@ impl ModelRunner {
     /// is still subject to cache availability.
     #[allow(clippy::too_many_arguments)]
     pub fn step_with_forced(&mut self, bucket: usize, z: &Tensor, t: &[f32],
-                            y: &[i32], live: &[bool],
+                            y: &[i32], live: &[bool], pairs: &[bool],
                             caches: &mut BatchCaches, dec: DecisionCfg,
                             forced: Option<&[bool]>) -> Result<StepOutcome> {
         let bi = self.bucket_exes(bucket)?;
@@ -401,6 +752,12 @@ impl ModelRunner {
         let b = bucket;
         debug_assert_eq!(z.shape()[0], b);
         debug_assert_eq!(t.len(), b);
+        // the per-row mask rides StepOutcome as a 64-bit bitmask; wider
+        // buckets (unrealistically large) fall back to the coupled gate
+        let mut dec = dec;
+        if b > 64 {
+            dec.row_granular = false;
+        }
 
         // dynamic inputs: converted once per step, borrowed in place
         // (weights are pre-built literals — see LitWeights)
@@ -422,6 +779,11 @@ impl ModelRunner {
         let mut s_vals: Vec<Vec<f32>> = Vec::with_capacity(2 * depth);
         let mut skipped: Vec<bool> = Vec::with_capacity(2 * depth);
         let mut skip_denied_cold: Vec<bool> = Vec::with_capacity(2 * depth);
+        let mut row_skips: Vec<u64> = Vec::with_capacity(2 * depth);
+        let mut rows_run: Vec<u32> = Vec::with_capacity(2 * depth);
+        let mut rows_skipped: Vec<u32> = Vec::with_capacity(2 * depth);
+        let mut rows_denied: Vec<u32> = Vec::with_capacity(2 * depth);
+        let mut rows_recovered: Vec<u32> = Vec::with_capacity(2 * depth);
 
         for l in 0..depth {
             for mi in 0..2usize {
@@ -438,37 +800,45 @@ impl ModelRunner {
                 let zmod = mg_out.pop().unwrap().as_f32()?;
 
                 // ---- decision (reads the gate tensor in place — no
-                // per-module copy of s just to reduce over it)
+                // per-module copy of s just to reduce over it): a
+                // per-row skip mask, uniform fast paths kept
                 let in_scope = if mi == 0 {
                     dec.scope.covers_attn()
                 } else {
                     dec.scope.covers_ffn()
                 };
-                let cache_ok = live
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, &lv)| lv)
-                    .all(|(i, _)| caches.valid[k][i]);
-                let would_skip = match forced {
-                    Some(mask) => mask[k],
-                    None => in_scope
-                        && decide(dec.policy, dec.threshold, s.data(), live),
-                };
                 let blend = dec.policy == SkipPolicy::Blend;
-                let skip_now = would_skip && cache_ok && !blend;
-                skipped.push(skip_now);
-                // laziness lost to all-or-nothing batch coupling: the
-                // gates said skip, a cold live row said run
-                skip_denied_cold.push(would_skip && !cache_ok && !blend);
+                let forced_k = forced.map(|mask| mask[k]);
+                let plan = plan_rows(dec, in_scope, forced_k, s.data(),
+                                     live, pairs, &caches.valid[k],
+                                     &mut self.gate_mask);
+                skipped.push(plan.all_skip);
+                // laziness lost to a cold cache: the gates said skip,
+                // a cold row said run (the whole batch under the
+                // coupled gate; just that row and its CFG partner under
+                // row granularity)
+                skip_denied_cold.push(plan.rows_denied_cold > 0);
+                let mut bits = 0u64;
+                for (i, &m) in self.gate_mask.iter().take(64).enumerate() {
+                    if m {
+                        bits |= 1 << i;
+                    }
+                }
+                row_skips.push(bits);
+                rows_run.push(plan.rows_run);
+                rows_skipped.push(plan.rows_skipped);
+                rows_denied.push(plan.rows_denied_cold);
+                rows_recovered.push(plan.rows_recovered);
 
-                if skip_now {
-                    // ---- SKIP: reuse Y_{l,t-1}; the module executable
-                    // is never invoked, and the cache flows to `apply`
-                    // below as its memoized literal — zero clones, zero
-                    // conversions (the latency win, now allocation-free)
+                if plan.all_skip {
+                    // ---- SKIP (uniform): reuse Y_{l,t-1}; the module
+                    // executable is never invoked, and the cache flows
+                    // to `apply` below as its memoized literal — zero
+                    // clones, zero conversions (the latency win)
                     self.pool.release(zmod);
-                } else {
-                    // ---- RUN the module
+                } else if plan.all_run {
+                    // ---- RUN (uniform): the whole batch through the
+                    // module executable
                     let zmod_lit = HostValue::f32_literal(&zmod)?;
                     let mut m_args: Vec<&xla::Literal> = vec![&zmod_lit];
                     let (exe, warr) = if mi == 0 {
@@ -495,6 +865,39 @@ impl ModelRunner {
                         }
                     }
                     self.pool.release(zmod);
+                } else {
+                    // ---- PARTIAL: compact the run-rows into a
+                    // sub-batch at the nearest compiled bucket width,
+                    // invoke the module there, scatter the fresh rows
+                    // back into the cache slot; skip-rows are served
+                    // straight from their cached bytes (the laziness
+                    // the all-or-nothing gate used to deny)
+                    let mut part = std::mem::take(&mut self.partition);
+                    part.plan(&self.gate_mask, live, &self.partial_buckets,
+                              b);
+                    let sbi = self.bucket_exes(part.bucket)?;
+                    let mut zshape = zmod.shape().to_vec();
+                    zshape[0] = part.bucket;
+                    // no-zero acquire: the gather writes every row
+                    // (run-rows copied, padding rows are its memset),
+                    // so zeroing first would touch each byte twice
+                    let mut zsub = self.pool.acquire_for_overwrite(&zshape);
+                    zmod.gather_rows_into(&part.run_idx, &mut zsub);
+                    let zsub_lit = HostValue::f32_literal(&zsub)?;
+                    let mut m_args: Vec<&xla::Literal> = vec![&zsub_lit];
+                    let (exe, warr) = if mi == 0 {
+                        (&self.buckets[sbi].attn, &self.lit.attn[l])
+                    } else {
+                        (&self.buckets[sbi].ffn, &self.lit.ffn[l])
+                    };
+                    m_args.extend(warr.iter());
+                    let mut m_out = exe.call_lit(&m_args)?;
+                    let fsub = m_out.pop().unwrap().as_f32()?;
+                    caches.scatter_fresh(k, &fsub, &part.run_idx);
+                    self.pool.release(fsub);
+                    self.pool.release(zsub);
+                    self.pool.release(zmod);
+                    self.partition = part;
                 }
                 // the gate vector is moved (not copied) into the outcome
                 s_vals.push(s.into_vec());
@@ -520,7 +923,17 @@ impl ModelRunner {
         let eps = fin_out.pop().unwrap().as_f32()?;
         self.pool.release(x);
 
-        Ok(StepOutcome { eps, s_vals, skipped, skip_denied_cold })
+        Ok(StepOutcome {
+            eps,
+            s_vals,
+            skipped,
+            row_skips,
+            rows_run,
+            rows_skipped,
+            rows_denied_cold: rows_denied,
+            rows_recovered,
+            skip_denied_cold,
+        })
     }
 }
 
@@ -625,6 +1038,11 @@ mod tests {
             eps: Tensor::zeros(&[1]),
             s_vals: vec![vec![0.9], vec![0.1], vec![0.9], vec![0.2]],
             skipped: vec![true, false, true, false],
+            row_skips: vec![1, 0, 1, 2],
+            rows_run: vec![0, 1, 0, 1],
+            rows_skipped: vec![1, 0, 1, 1],
+            rows_denied_cold: vec![0, 1, 0, 0],
+            rows_recovered: vec![0, 0, 0, 1],
             skip_denied_cold: vec![false, true, false, false],
         };
         let mut st = StepStats::default();
@@ -637,6 +1055,212 @@ mod tests {
         assert_eq!(st.attn_denied_cold, 0);
         assert_eq!(st.ffn_denied_cold, 1);
         assert!((st.lazy_ratio() - 0.5).abs() < 1e-9);
+        // row-weighted: 3 skipped of 5 rows, one only row granularity
+        // could recover
+        assert_eq!((st.rows_run, st.rows_skipped, st.rows_recovered),
+                   (2, 3, 1));
+        assert!((st.row_lazy_ratio() - 0.6).abs() < 1e-9);
+        // per-row bit reads: slot 3 skipped row 1, ran row 0
+        assert!(!outcome.row_skipped(3, 0));
+        assert!(outcome.row_skipped(3, 1));
+    }
+
+    fn dec(policy: SkipPolicy, row_granular: bool) -> DecisionCfg {
+        DecisionCfg {
+            policy,
+            scope: LazyScope::Both,
+            threshold: 0.5,
+            row_granular,
+        }
+    }
+
+    #[test]
+    fn plan_rows_per_row_threshold() {
+        // rows 0/2 above threshold, row 1 below; all caches warm
+        let live = [true, true, true, false];
+        let pairs = [false; 4];
+        let valid = [true, true, true, false];
+        let s = [0.9, 0.1, 0.8, 0.0];
+        let mut mask = Vec::new();
+        let p = plan_rows(dec(SkipPolicy::Mean, true), true, None, &s, &live,
+                          &pairs, &valid, &mut mask);
+        assert_eq!(mask, vec![true, false, true, false]);
+        assert!(p.mixed());
+        assert_eq!((p.rows_run, p.rows_skipped, p.rows_denied_cold),
+                   (1, 2, 0));
+        // recovered is the exact coupled counterfactual: a Mean
+        // consensus (batch mean 0.6 > 0.5) would have skipped this
+        // whole warm batch, so these 2 skips are fidelity, not recovery…
+        assert_eq!(p.rows_recovered, 0);
+        // …while an All consensus (row 1 at 0.1) would have run it, so
+        // the same per-row mask counts both skips as recovered
+        let p = plan_rows(dec(SkipPolicy::All, true), true, None, &s, &live,
+                          &pairs, &valid, &mut mask);
+        assert_eq!(mask, vec![true, false, true, false]);
+        assert_eq!(p.rows_recovered, 2);
+    }
+
+    #[test]
+    fn plan_rows_cold_row_runs_alone() {
+        // every gate wants to skip, but row 1 is cold: only row 1 runs
+        // (and is counted denied); its neighbors keep their skips — the
+        // laziness the coupled gate loses
+        let live = [true, true, true];
+        let pairs = [false; 3];
+        let valid = [true, false, true];
+        let s = [0.9, 0.9, 0.9];
+        let mut mask = Vec::new();
+        let p = plan_rows(dec(SkipPolicy::Mean, true), true, None, &s, &live,
+                          &pairs, &valid, &mut mask);
+        assert_eq!(mask, vec![true, false, true]);
+        assert_eq!((p.rows_run, p.rows_skipped, p.rows_denied_cold),
+                   (1, 2, 1));
+        assert_eq!(p.rows_recovered, 2,
+                   "the cold row would have denied the coupled gate, so \
+                    both warm skips are recovered work");
+        // the coupled gate denies the whole batch on the same inputs
+        let pc = plan_rows(dec(SkipPolicy::Mean, false), true, None, &s,
+                           &live, &pairs, &valid, &mut mask);
+        assert!(pc.all_run);
+        assert_eq!((pc.rows_run, pc.rows_skipped, pc.rows_denied_cold),
+                   (3, 0, 3));
+    }
+
+    #[test]
+    fn plan_rows_couples_cfg_pairs() {
+        // rows 0-1 are one CFG pair: row 1's low gate (or cold cache)
+        // drags row 0 into the run partition with it
+        let live = [true, true, true];
+        let pairs = [true, false, false];
+        let mut mask = Vec::new();
+        let p = plan_rows(dec(SkipPolicy::Mean, true), true, None,
+                          &[0.9, 0.1, 0.9], &live, &pairs,
+                          &[true, true, true], &mut mask);
+        assert_eq!(mask, vec![false, false, true], "gate disagreement");
+        assert_eq!(p.rows_denied_cold, 0, "gate disagreement is not cold");
+        let p = plan_rows(dec(SkipPolicy::Mean, true), true, None,
+                          &[0.9, 0.9, 0.9], &live, &pairs,
+                          &[true, false, true], &mut mask);
+        assert_eq!(mask, vec![false, false, true], "partner cold");
+        assert_eq!(p.rows_denied_cold, 2,
+                   "both pair rows denied by the one cold cache");
+        // agreeing warm pair skips together
+        let p = plan_rows(dec(SkipPolicy::Mean, true), true, None,
+                          &[0.9, 0.9, 0.1], &live, &pairs,
+                          &[true, true, true], &mut mask);
+        assert_eq!(mask, vec![true, true, false]);
+        assert!(p.mixed());
+    }
+
+    #[test]
+    fn plan_rows_uniform_masks_match_consensus() {
+        use crate::util::propcheck::propcheck;
+        // the bit-identity property: whenever the per-row gate lands on
+        // a uniform mask (all live rows skip, or none do), the coupled
+        // batch-consensus gate must produce the exact same mask and
+        // partition counts — row granularity only ever *adds* behavior
+        // on mixed masks
+        propcheck(300, |g| {
+            let n = g.usize_in(1, 8);
+            let mut live: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+            live[0] = true; // the planner never sees an all-dead batch
+            let valid: Vec<bool> = (0..n).map(|_| g.bool()).collect();
+            let s: Vec<f32> = (0..n)
+                .map(|_| if g.bool() { 0.9 } else { 0.1 })
+                .collect();
+            let pairs = vec![false; n];
+            let policy = match g.usize_in(0, 3) {
+                0 => SkipPolicy::Mean,
+                1 => SkipPolicy::Majority,
+                2 => SkipPolicy::All,
+                _ => SkipPolicy::Any,
+            };
+            let forced = match g.usize_in(0, 2) {
+                0 => None,
+                1 => Some(false),
+                _ => Some(true),
+            };
+            let mut mrow = Vec::new();
+            let mut mcon = Vec::new();
+            let p = plan_rows(dec(policy, true), true, forced, &s, &live,
+                              &pairs, &valid, &mut mrow);
+            if p.mixed() {
+                return; // only uniform masks carry the identity claim
+            }
+            let c = plan_rows(dec(policy, false), true, forced, &s, &live,
+                              &pairs, &valid, &mut mcon);
+            assert_eq!(mrow, mcon, "uniform mask diverged from consensus \
+                                    (policy {policy:?})");
+            assert_eq!((p.rows_run, p.rows_skipped),
+                       (c.rows_run, c.rows_skipped));
+            assert_eq!(p.all_skip, c.all_skip);
+        });
+    }
+
+    #[test]
+    fn plan_rows_never_and_blend_run_everything() {
+        let live = [true, true];
+        let pairs = [false, false];
+        let valid = [true, true];
+        let mut mask = Vec::new();
+        for policy in [SkipPolicy::Never, SkipPolicy::Blend] {
+            for rg in [true, false] {
+                let p = plan_rows(dec(policy, rg), true, None, &[0.9, 0.9],
+                                  &live, &pairs, &valid, &mut mask);
+                assert!(p.all_run, "{policy:?} rg={rg}");
+                assert_eq!(mask, vec![false, false]);
+                assert_eq!(p.rows_denied_cold, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn row_partition_plans_nearest_bucket() {
+        let buckets = [1usize, 2, 4, 8];
+        let mut part = RowPartition::default();
+        // 3 run rows in an 8-wide batch → compacted to bucket 4
+        let mask = [true, false, false, true, false, false, false, false];
+        let live = [true, true, true, true, true, false, false, false];
+        part.plan(&mask, &live, &buckets, 8);
+        assert_eq!(part.bucket, 4);
+        assert_eq!(part.run_idx, vec![1, 2, 4, usize::MAX]);
+        assert_eq!(part.skip_idx, vec![0, 3]);
+        // exact fit keeps the exact width; replanning reuses the lists
+        let mask = [true, true, false, false, true, false, false, false];
+        part.plan(&mask, &live, &buckets, 8);
+        assert_eq!(part.bucket, 2);
+        assert_eq!(part.run_idx, vec![2, 3]);
+        assert_eq!(part.skip_idx, vec![0, 1, 4]);
+        // never wider than the current bucket even if the set has more
+        part.plan(&[false, false], &[true, true], &buckets, 2);
+        assert_eq!(part.bucket, 2);
+        assert_eq!(part.run_idx, vec![0, 1]);
+    }
+
+    #[test]
+    fn scatter_fresh_overwrites_run_rows_only() {
+        let mut c = BatchCaches::empty(1, 4, 1, 2);
+        // warm every row with known bytes, memoize the literal
+        let f = Tensor::from_vec(&[4, 1, 2],
+                                 vec![1., 1., 2., 2., 3., 3., 4., 4.])
+            .unwrap();
+        let lit = HostValue::f32_literal(&f).unwrap();
+        c.store_fresh(0, f, lit);
+        c.valid[0] = vec![true, false, true, false];
+        assert_eq!(c.conversions(), 0);
+        // partial run over rows 1 and 3 (sub-batch padded to width 4)
+        let sub = Tensor::from_vec(&[4, 1, 2],
+                                   vec![9., 9., 8., 8., 0., 0., 0., 0.])
+            .unwrap();
+        c.scatter_fresh(0, &sub, &[1, 3, usize::MAX, usize::MAX]);
+        assert_eq!(c.value(0).data(),
+                   &[1., 1., 9., 9., 3., 3., 8., 8.]);
+        assert_eq!(c.valid[0], vec![true, true, true, true],
+                   "run rows rise to valid, skip rows stay valid");
+        // the memo was dropped (tensor diverged) and rebuilds correctly
+        let got = c.literal(0).unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(got, vec![1., 1., 9., 9., 3., 3., 8., 8.]);
+        assert_eq!(c.conversions(), 1, "scatter must drop the stale memo");
     }
 
     #[test]

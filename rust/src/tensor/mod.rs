@@ -123,6 +123,25 @@ impl Tensor {
         }
     }
 
+    /// Scatter complement of [`gather_rows_into`](Self::gather_rows_into):
+    /// overwrite rows of `self` with rows of `src`, where `idx[j]` names
+    /// the destination row of `src` row `j` (`usize::MAX` ⇒ `src` row `j`
+    /// is sub-batch padding and is dropped). Rows of `self` not named by
+    /// `idx` are left untouched — the partial-run scatter of the
+    /// row-granular skip path writes fresh module outputs over run-rows
+    /// while skip-rows keep their cached bytes.
+    pub fn scatter_rows_from(&mut self, src: &Tensor, idx: &[usize]) {
+        let r = self.row_len();
+        debug_assert_eq!(src.row_len(), r);
+        debug_assert_eq!(src.dim0(), idx.len());
+        for (j, &i) in idx.iter().enumerate() {
+            if i != usize::MAX {
+                self.data[i * r..(i + 1) * r]
+                    .copy_from_slice(&src.data[j * r..(j + 1) * r]);
+            }
+        }
+    }
+
     /// Reshape view (same element count).
     pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
         let n: usize = shape.iter().product();
@@ -251,6 +270,53 @@ mod tests {
         // agrees with the allocating variant on every index pattern
         let g = t.gather_rows(&[1, usize::MAX, 0]);
         assert_eq!(g, out);
+    }
+
+    #[test]
+    fn scatter_rows_from_overwrites_only_named_rows() {
+        let src = Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.])
+            .unwrap();
+        let mut out = Tensor::from_vec(&[4, 2], vec![9.0; 8]).unwrap();
+        // src row 0 → out row 2, src row 1 is padding, src row 2 → out row 0
+        out.scatter_rows_from(&src, &[2, usize::MAX, 0]);
+        assert_eq!(out.row(0), &[5., 6.]);
+        assert_eq!(out.row(1), &[9., 9.], "unnamed row untouched");
+        assert_eq!(out.row(2), &[1., 2.]);
+        assert_eq!(out.row(3), &[9., 9.], "unnamed row untouched");
+    }
+
+    #[test]
+    fn scatter_inverts_gather() {
+        // the partition round-trip: gathering rows into a compacted
+        // sub-batch and scattering them back through the same index map
+        // reconstructs exactly the gathered rows, touching nothing else
+        propcheck(100, |g| {
+            let rows = g.usize_in(1, 8);
+            let r = g.usize_in(1, 6);
+            let data = g.vec_f32(rows * r, -3.0, 3.0);
+            let t = Tensor::from_vec(&[rows, r], data).unwrap();
+            // random selection with padding tail, like RowPartition
+            let picks: Vec<usize> =
+                (0..rows).filter(|_| g.bool()).collect();
+            let width = g.usize_in(picks.len().max(1), picks.len() + 3);
+            let mut idx = picks.clone();
+            idx.resize(width, usize::MAX);
+            let sub = t.gather_rows(&idx);
+            let mut out =
+                Tensor::from_vec(&[rows, r], g.vec_f32(rows * r, -3.0, 3.0))
+                    .unwrap();
+            let before = out.clone();
+            out.scatter_rows_from(&sub, &idx);
+            for row in 0..rows {
+                if picks.contains(&row) {
+                    assert_eq!(out.row(row), t.row(row),
+                               "scattered row must carry the source bytes");
+                } else {
+                    assert_eq!(out.row(row), before.row(row),
+                               "unselected row must be untouched");
+                }
+            }
+        });
     }
 
     #[test]

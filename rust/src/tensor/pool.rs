@@ -105,6 +105,28 @@ impl TensorPool {
         }
     }
 
+    /// Like [`acquire`](Self::acquire) but WITHOUT the re-zeroing
+    /// memset on reuse — for destinations the caller immediately
+    /// overwrites in full (e.g. a gather that writes every row and
+    /// memsets its own padding), where zeroing first would just write
+    /// every byte twice. A pool miss still hands out a zero-filled
+    /// fresh buffer; only the reuse path may carry stale contents, so
+    /// callers MUST write every element before reading any.
+    pub fn acquire_for_overwrite(&self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        let buf = self.free.borrow_mut().get_mut(&n).and_then(Vec::pop);
+        match buf {
+            Some(data) => {
+                self.reused.set(self.reused.get() + 1);
+                Tensor::from_vec(shape, data).expect("pool size class")
+            }
+            None => {
+                self.allocated.set(self.allocated.get() + 1);
+                Tensor::zeros(shape)
+            }
+        }
+    }
+
     /// Return a tensor's storage to the arena. Shape is forgotten —
     /// only the element count keys the free list — so a `[B, N, D]`
     /// cache slot and a flat scratch buffer of the same size recycle
@@ -161,6 +183,24 @@ mod tests {
         p.release(a);
         let b = p.acquire(&[4]);
         assert_eq!(b.data(), &[0.0; 4], "stale contents must never leak");
+    }
+
+    #[test]
+    fn acquire_for_overwrite_skips_the_rezero() {
+        // the contract: reuse may carry stale contents (the caller
+        // overwrites in full), a pool miss is still zero-filled, and
+        // the hit/miss counters account it like any acquire
+        let p = TensorPool::new();
+        let fresh = p.acquire_for_overwrite(&[4]);
+        assert_eq!(fresh.data(), &[0.0; 4], "pool miss is zero-filled");
+        let mut a = p.acquire(&[4]);
+        a.data_mut().copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        p.release(a);
+        let b = p.acquire_for_overwrite(&[4]);
+        assert_eq!(b.data(), &[1.0, 2.0, 3.0, 4.0],
+                   "reuse skips the memset — caller must overwrite");
+        let st = p.stats();
+        assert_eq!((st.allocated, st.reused), (2, 1));
     }
 
     #[test]

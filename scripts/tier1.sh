@@ -60,7 +60,17 @@ if command -v cargo >/dev/null 2>&1; then
     if [ "${BENCH_SMOKE:-1}" = "1" ]; then
         cargo build --release --benches
         BENCH_SMOKE=1 cargo bench --bench step_hot_path
-        echo "tier1: bench smoke OK (BENCH_step.json written)"
+        # the smoke run includes the cold-churn scenario (the bench
+        # itself asserts row_granular < coupled); CI additionally fails
+        # if the artifact is missing the cold_churn keys, so the
+        # uploaded BENCH_step.json always carries the comparison
+        for key in '"cold_churn"' '"row_granular"' '"coupled"'; do
+            if ! grep -q "$key" BENCH_step.json; then
+                echo "tier1: BENCH_step.json missing $key (cold_churn section)"
+                exit 1
+            fi
+        done
+        echo "tier1: bench smoke OK (BENCH_step.json written, cold_churn present)"
     else
         echo "tier1: bench smoke skipped (BENCH_SMOKE=0)"
     fi
