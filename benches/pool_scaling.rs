@@ -18,6 +18,13 @@
 //! numbers include queueing delay honestly (no coordinated omission —
 //! see docs/BENCHMARKS.md).
 //!
+//! Latency quantiles come from the same mergeable log-bucketed
+//! histograms the serving `STATS` verb reports ([`lazydit::obs`], ≤12.5%
+//! relative error), not from sorting sample vectors. A final traced
+//! vs untraced closed-loop pass measures telemetry-ring overhead, and
+//! the per-tier quantiles plus that delta land in `BENCH_serve.json`
+//! (docs/OBSERVABILITY.md).
+//!
 //!     cargo bench --bench pool_scaling
 //! (or `cargo run --release --bench pool_scaling` on toolchains where
 //! bench profiles are unavailable)
@@ -29,8 +36,9 @@ use lazydit::coordinator::pool::steal::Rebalancer;
 use lazydit::coordinator::pool::{PoolReport, Router};
 use lazydit::coordinator::request::Request;
 use lazydit::data::workload::WorkloadSpec;
-use lazydit::metrics::stats::quantile;
-use std::sync::mpsc;
+use lazydit::obs::{LatencyHist, Tracer};
+use lazydit::util::json::Json;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 const REQUESTS: usize = 64;
@@ -40,6 +48,8 @@ const LAZY_PCT: u32 = 50;
 /// In-engine admission bound while stealing (jobs beyond it stay
 /// queued, i.e. migratable).
 const STEAL_WINDOW: usize = 2;
+/// Per-replica trace ring capacity for the traced overhead pass.
+const TRACE_RING: usize = 4096;
 
 fn spec() -> SimSpec {
     SimSpec { lazy_pct: LAZY_PCT, work_per_module: WORK, ..SimSpec::default() }
@@ -66,25 +76,40 @@ struct RunResult {
     wall_s: f64,
     /// Client-observed completion latency (dispatch → response), which
     /// includes queue wait — the quantity stealing actually improves.
-    latencies: Vec<f64>,
+    /// Recorded concurrently by the collector threads into the same
+    /// mergeable log-bucketed histogram structure `STATS` serves.
+    hist: Arc<LatencyHist>,
     checksums: Vec<u64>,
     shed: u64,
     report: PoolReport,
 }
 
-fn run_pool_with(specs: Vec<SimSpec>, route: RoutePolicy,
-                 steal: bool) -> RunResult {
+fn run_pool_with(specs: Vec<SimSpec>, route: RoutePolicy, steal: bool,
+                 traced: bool) -> RunResult {
     let rebalancer = steal.then(|| Rebalancer::new(STEAL_WINDOW));
     let handles: Vec<ReplicaHandle> = specs
         .into_iter()
         .enumerate()
         .map(|(i, s)| {
-            ReplicaHandle::spawn_with(i, 4096, SimEngine::factory(s),
-                                      rebalancer.clone())
+            let tier = match &rebalancer {
+                Some(rb) => ReplicaTier {
+                    steal_window: rb.admit_window(),
+                    ..ReplicaTier::default()
+                },
+                None => ReplicaTier::default(),
+            };
+            let tracer = if traced {
+                Tracer::enabled(i, TRACE_RING)
+            } else {
+                Tracer::disabled()
+            };
+            ReplicaHandle::spawn_traced(i, 4096, SimEngine::factory(s),
+                                        rebalancer.clone(), tier, tracer)
             .unwrap()
         })
         .collect();
     let router = Router::with_rebalancer(handles, route, 4096, rebalancer);
+    let hist = Arc::new(LatencyHist::new());
     let t0 = Instant::now();
     // one collector thread per request so completion timestamps are
     // observed the moment each response lands, not in dispatch order
@@ -92,26 +117,25 @@ fn run_pool_with(specs: Vec<SimSpec>, route: RoutePolicy,
     for req in workload() {
         let (tx, rx) = mpsc::channel();
         assert!(router.dispatch(req, tx), "closed-loop run must not shed");
+        let h = hist.clone();
         joins.push(std::thread::spawn(move || {
             let res = rx.recv().expect("response");
-            (t0.elapsed().as_secs_f64(), fnv64(res.image.data()))
+            h.record_secs(t0.elapsed().as_secs_f64());
+            fnv64(res.image.data())
         }));
     }
-    let mut latencies = Vec::with_capacity(REQUESTS);
     let mut checksums = Vec::with_capacity(REQUESTS);
     for j in joins {
-        let (lat, sum) = j.join().expect("collector");
-        latencies.push(lat);
-        checksums.push(sum);
+        checksums.push(j.join().expect("collector"));
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let report = router.shutdown();
     checksums.sort_unstable();
-    RunResult { wall_s, latencies, checksums, shed: report.shed, report }
+    RunResult { wall_s, hist, checksums, shed: report.shed, report }
 }
 
 fn run_pool(replicas: usize, route: RoutePolicy) -> RunResult {
-    run_pool_with(vec![spec(); replicas], route, false)
+    run_pool_with(vec![spec(); replicas], route, false, false)
 }
 
 fn row(label: &str, r: &RunResult) -> String {
@@ -119,8 +143,8 @@ fn row(label: &str, r: &RunResult) -> String {
         "  {:<16} {:>9.1} req/s   p50 {:>8.2}ms   p95 {:>8.2}ms   ({} shed)",
         label,
         REQUESTS as f64 / r.wall_s,
-        1e3 * quantile(&r.latencies, 0.5),
-        1e3 * quantile(&r.latencies, 0.95),
+        r.hist.quantile_ms(0.5),
+        r.hist.quantile_ms(0.95),
         r.shed,
     )
 }
@@ -134,9 +158,9 @@ fn skewed_gamma_scenario() -> (f64, f64) {
     let specs = || vec![SimSpec::with_lazy(0, WORK),
                         SimSpec::with_lazy(90, WORK)];
     println!("skewed-Γ scenario (2 replicas, Γ = 0% vs 90%, route jsq):");
-    let base = run_pool_with(specs(), RoutePolicy::Jsq, false);
+    let base = run_pool_with(specs(), RoutePolicy::Jsq, false, false);
     println!("{}", row("jsq", &base));
-    let stealing = run_pool_with(specs(), RoutePolicy::Jsq, true);
+    let stealing = run_pool_with(specs(), RoutePolicy::Jsq, true, false);
     println!("{}", row("jsq + steal", &stealing));
     for r in &stealing.report.replicas {
         println!("    replica {} ({:<8}): served {:>3}, stole {:>3}, \
@@ -167,8 +191,8 @@ fn skewed_gamma_scenario() -> (f64, f64) {
         2 * REQUESTS,
         "no job lost or duplicated across either run"
     );
-    let p95_base = quantile(&base.latencies, 0.95);
-    let p95_steal = quantile(&stealing.latencies, 0.95);
+    let p95_base = base.hist.quantile_ms(0.95) / 1e3;
+    let p95_steal = stealing.hist.quantile_ms(0.95) / 1e3;
     (p95_base, p95_steal)
 }
 
@@ -209,7 +233,7 @@ fn build_tiered_router(route: RoutePolicy) -> Router {
 struct TierOutcome {
     offered: usize,
     shed: usize,
-    latencies: Vec<f64>,
+    hist: LatencyHist,
 }
 
 /// Replay one Poisson trace open-loop at `rate` req/s. Arrivals are
@@ -269,10 +293,10 @@ fn run_open_loop(route: RoutePolicy, rate: f64) -> [TierOutcome; 3] {
             shed[ev.slo.index()] += 1;
         }
     }
-    let mut latencies: [Vec<f64>; 3] = Default::default();
+    let hists: [LatencyHist; 3] = Default::default();
     for j in joins {
         let (slo, lat) = j.join().expect("collector");
-        latencies[slo.index()].push(lat);
+        hists[slo.index()].record_secs(lat);
     }
     let report = router.shutdown();
     let total_shed: usize = shed.iter().sum();
@@ -286,7 +310,7 @@ fn run_open_loop(route: RoutePolicy, rate: f64) -> [TierOutcome; 3] {
         out.push(TierOutcome {
             offered: offered[i],
             shed: shed[i],
-            latencies: std::mem::take(&mut latencies[i]),
+            hist: hists[i].clone(),
         });
     }
     out.try_into().map_err(|_| "three tiers").unwrap()
@@ -317,7 +341,10 @@ fn calibrate_capacity() -> f64 {
     open_loop_tiers().len() as f64 / per_req.max(1e-9)
 }
 
-fn open_loop_sweep() {
+/// Run the sweep, print the table, and return one JSON point per
+/// (route × load × tier) cell with histogram-backed p50/p95/p99 — the
+/// `open_loop` array of `BENCH_serve.json`.
+fn open_loop_sweep() -> Json {
     let cap = calibrate_capacity();
     println!(
         "open-loop Poisson sweep (pool lat:b1x1 + thr:b8x3, queue cap \
@@ -328,6 +355,7 @@ fn open_loop_sweep() {
         "  {:<6} {:>9}  {:<11} {:>7} {:>7} {:>10} {:>10}",
         "route", "offered", "tier", "req", "shed%", "p50", "p95"
     );
+    let mut points: Vec<Json> = Vec::new();
     for route in [RoutePolicy::Jsq, RoutePolicy::Lazy] {
         for load in [0.5, 1.0, 2.0] {
             let rate = (cap * load).max(1.0);
@@ -346,9 +374,19 @@ fn open_loop_sweep() {
                     slo.name(),
                     t.offered,
                     shed_pct,
-                    1e3 * quantile(&t.latencies, 0.5),
-                    1e3 * quantile(&t.latencies, 0.95),
+                    t.hist.quantile_ms(0.5),
+                    t.hist.quantile_ms(0.95),
                 );
+                points.push(Json::obj(vec![
+                    ("route", Json::str(route.name())),
+                    ("load_x", Json::num(load)),
+                    ("tier", Json::str(slo.name())),
+                    ("offered", Json::num(t.offered as f64)),
+                    ("shed_pct", Json::num(shed_pct)),
+                    ("p50_ms", Json::num(t.hist.quantile_ms(0.50))),
+                    ("p95_ms", Json::num(t.hist.quantile_ms(0.95))),
+                    ("p99_ms", Json::num(t.hist.quantile_ms(0.99))),
+                ]));
             }
         }
     }
@@ -356,6 +394,7 @@ fn open_loop_sweep() {
         "  (open loop: arrivals are paced by the trace, not completions — \
          p95 includes queue wait; shed% is admission-control drops)"
     );
+    Json::arr(points)
 }
 
 fn main() {
@@ -406,16 +445,36 @@ fn main() {
 
     println!("\nwork stealing at {widest} replica(s) (uniform Γ):");
     for steal in [false, true] {
-        let r = run_pool_with(vec![spec(); widest], RoutePolicy::Jsq, steal);
+        let r = run_pool_with(vec![spec(); widest], RoutePolicy::Jsq, steal,
+                              false);
         println!("{}", row(if steal { "jsq + steal" } else { "jsq" }, &r));
         deterministic &= r.checksums == reference;
     }
+
+    // telemetry-ring overhead: the same closed-loop flood with every
+    // replica recording trace events vs none. Advisory (wall-clock on a
+    // shared machine is noisy) — the delta lands in BENCH_serve.json.
+    println!("\ntrace overhead at {widest} replica(s) (ring {TRACE_RING} \
+              events/replica):");
+    let untraced =
+        run_pool_with(vec![spec(); widest], RoutePolicy::Jsq, false, false);
+    let traced =
+        run_pool_with(vec![spec(); widest], RoutePolicy::Jsq, false, true);
+    println!("{}", row("untraced", &untraced));
+    println!("{}", row("traced", &traced));
+    deterministic &= untraced.checksums == reference;
+    deterministic &= traced.checksums == reference;
+    let rps_untraced = REQUESTS as f64 / untraced.wall_s;
+    let rps_traced = REQUESTS as f64 / traced.wall_s;
+    let trace_overhead_pct =
+        100.0 * (rps_untraced - rps_traced) / rps_untraced.max(1e-9);
+    println!("  tracing cost: {trace_overhead_pct:+.1}% throughput");
 
     println!();
     let (p95_base, p95_steal) = skewed_gamma_scenario();
 
     println!();
-    open_loop_sweep();
+    let open_loop_points = open_loop_sweep();
 
     println!();
     if deterministic {
@@ -440,6 +499,30 @@ fn main() {
             " — WEAK (expected stealing to beat static jsq; loaded machine?)"
         }
     );
+
+    // serving perf trajectory: per-tier histogram quantiles + the
+    // telemetry overhead delta (docs/OBSERVABILITY.md explains the keys)
+    let json = Json::obj(vec![
+        ("bench", Json::str("pool_scaling")),
+        ("requests", Json::num(REQUESTS as f64)),
+        ("steps", Json::num(STEPS as f64)),
+        ("work_per_module", Json::num(WORK as f64)),
+        ("open_loop", open_loop_points),
+        ("trace_overhead", Json::obj(vec![
+            ("replicas", Json::num(widest as f64)),
+            ("ring_events", Json::num(TRACE_RING as f64)),
+            ("untraced_rps", Json::num(rps_untraced)),
+            ("traced_rps", Json::num(rps_traced)),
+            ("overhead_pct", Json::num(trace_overhead_pct)),
+        ])),
+        ("skewed_gamma_p95_ms", Json::obj(vec![
+            ("jsq", Json::num(1e3 * p95_base)),
+            ("jsq_steal", Json::num(1e3 * p95_steal)),
+        ])),
+    ]);
+    std::fs::write("BENCH_serve.json", format!("{json}\n"))
+        .expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
     if !deterministic {
         std::process::exit(1);
     }

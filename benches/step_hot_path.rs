@@ -24,8 +24,9 @@
 use lazydit::coordinator::pool::sim::{SimEngine, SimSpec};
 use lazydit::coordinator::pool::PoolEngine;
 use lazydit::coordinator::request::Request;
-use lazydit::metrics::stats::{mean, quantile};
+use lazydit::metrics::stats::mean;
 use lazydit::model::runner::BatchCaches;
+use lazydit::obs::LatencyHist;
 use lazydit::runtime::value::HostValue;
 use lazydit::tensor::pool::TensorPool;
 use lazydit::tensor::Tensor;
@@ -49,6 +50,9 @@ struct GammaSeries {
     target_pct: u32,
     observed: f64,
     per_step_ms: Vec<f64>,
+    /// Same samples in the serving stack's log-bucketed histogram —
+    /// quantiles below come from here, not from sorting the Vec.
+    hist: LatencyHist,
     cold_denied: u64,
     modules_run: u64,
 }
@@ -67,6 +71,7 @@ fn run_gamma(lazy_pct: u32, cfg: &BenchCfg) -> GammaSeries {
         e.submit(Request::new(0, i % 10, cfg.steps, 42 + i as u64));
     }
     let mut per_step_ms = Vec::with_capacity(cfg.steps);
+    let hist = LatencyHist::new();
     let mut round = 0usize;
     while e.active_count() > 0 {
         let t0 = Instant::now();
@@ -74,6 +79,7 @@ fn run_gamma(lazy_pct: u32, cfg: &BenchCfg) -> GammaSeries {
         let dt_ms = t0.elapsed().as_secs_f64() * 1e3;
         if round > 0 {
             per_step_ms.push(dt_ms);
+            hist.record_ms(dt_ms);
         }
         round += 1;
     }
@@ -81,6 +87,7 @@ fn run_gamma(lazy_pct: u32, cfg: &BenchCfg) -> GammaSeries {
         target_pct: lazy_pct,
         observed: e.layer_stats.overall_ratio(),
         per_step_ms,
+        hist,
         cold_denied: e.layer_stats.cold_denied_total(),
         modules_run: e.serve_stats.module_invocations
             - e.serve_stats.module_skips,
@@ -209,8 +216,7 @@ fn main() {
     let mut series = Vec::new();
     for pct in [0u32, 50, 90] {
         let s = run_gamma(pct, &cfg);
-        let (p50, p95) = (quantile(&s.per_step_ms, 0.5),
-                          quantile(&s.per_step_ms, 0.95));
+        let (p50, p95) = (s.hist.quantile_ms(0.5), s.hist.quantile_ms(0.95));
         println!("  Γ target {:>2}%  observed {:>5.1}%   per-step mean \
                   {:>8.3}ms  p50 {:>8.3}ms  p95 {:>8.3}ms   \
                   ({} modules run, {} cold-denied)",
@@ -285,8 +291,9 @@ fn main() {
                 ("gamma_observed", Json::num(s.observed)),
                 ("per_step_ms", Json::obj(vec![
                     ("mean", Json::num(mean(&s.per_step_ms))),
-                    ("p50", Json::num(quantile(&s.per_step_ms, 0.5))),
-                    ("p95", Json::num(quantile(&s.per_step_ms, 0.95))),
+                    ("p50", Json::num(s.hist.quantile_ms(0.5))),
+                    ("p95", Json::num(s.hist.quantile_ms(0.95))),
+                    ("p99", Json::num(s.hist.quantile_ms(0.99))),
                 ])),
                 ("steps_timed", Json::num(s.per_step_ms.len() as f64)),
                 ("modules_run", Json::num(s.modules_run as f64)),

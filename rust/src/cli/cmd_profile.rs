@@ -1,6 +1,11 @@
 //! `lazydit profile` — engine hot-path micro profile: times each stage of
 //! one denoise step (embed / modgate / module / apply / final / host) to
 //! direct the L3 optimization pass (DESIGN.md §9).
+//!
+//! `--trace out.json` additionally records the end-to-end phase through
+//! the telemetry ring (per-module run/skip spans with gate values) and
+//! writes a Chrome-trace-format file — open it in Perfetto to see where
+//! a denoise step's time actually goes (docs/OBSERVABILITY.md).
 
 use crate::bench::harness::{bench, BenchSpec};
 use crate::cli::common::{merge_specs, serve_config, EvalContext};
@@ -21,6 +26,8 @@ pub fn specs() -> Vec<OptSpec> {
         OptSpec { name: "scope", help: "lazy scope", default: Some("both"), is_flag: false },
         OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
         OptSpec { name: "queue-cap", help: "queue bound", default: Some("256"), is_flag: false },
+        OptSpec { name: "trace", help: "write a Chrome-trace JSON of the e2e phase here", default: None, is_flag: false },
+        OptSpec { name: "trace-ring", help: "trace ring capacity (events)", default: Some("65536"), is_flag: false },
         OptSpec { name: "train-steps", help: "gate train steps if needed", default: Some("200"), is_flag: false },
         OptSpec { name: "train-lr", help: "gate train lr", default: Some("5e-3"), is_flag: false },
         OptSpec { name: "pretrain-steps", help: "base steps if needed", default: Some("1500"), is_flag: false },
@@ -52,6 +59,16 @@ pub fn run(a: Args) -> Result<()> {
                            EngineOptions { disable_gates: true, ..Default::default() },
                            None)?,
     };
+    let trace_out = a.get("trace");
+    let tracer = match &trace_out {
+        Some(_) => crate::obs::Tracer::enabled(
+            0, a.get_usize("trace-ring", 65536)?.max(2)),
+        None => crate::obs::Tracer::disabled(),
+    };
+    if tracer.is_enabled() {
+        crate::coordinator::pool::PoolEngine::install_tracer(
+            &mut engine, tracer.clone());
+    }
     let cfg_scale = engine.serve.cfg_scale;
     let mut seed = 0u64;
     let r = bench(
@@ -70,6 +87,15 @@ pub fn run(a: Args) -> Result<()> {
               {per_step:.5}s");
     println!("  engine lazy ratio: {:.1}%",
              100.0 * engine.layer_stats.row_overall_ratio());
+    if let Some(path) = &trace_out {
+        let groups =
+            crate::obs::chrome::collect_tracers(&[tracer.clone()],
+                                                usize::MAX);
+        let summary = crate::obs::chrome::write_chrome_trace(
+            std::path::Path::new(path), &groups)?;
+        println!("  trace: {} events ({} slices) -> {path}",
+                 summary.events, summary.slices);
+    }
 
     // executable-level breakdown via direct runner calls
     let m = &ctx.cfg.model;

@@ -20,6 +20,16 @@
 //! `--synthetic` serves the deterministic synthetic engine instead of
 //! the real model — no artifacts or XLA runtime needed; useful for
 //! exercising the pool/router layer and for load drills.
+//!
+//! `--trace-out trace.json` arms per-replica telemetry rings
+//! (`--trace-ring` events each) and writes a Chrome-trace-format file
+//! at shutdown — load it in Perfetto / chrome://tracing to see one
+//! track per replica with module run/skip slices (see
+//! docs/OBSERVABILITY.md). The live tail of the same rings is on the
+//! wire as the `TRACE` verb. `--self-drive N` generates N requests
+//! against the server from an internal client — a single-process smoke
+//! path (`serve --synthetic --trace-out t.json --self-drive 24`) that
+//! needs no external load generator.
 
 use crate::cli::common::{merge_specs, serve_config, EvalContext};
 use crate::config::{LazyScope, RoutePolicy, ServeConfig, SkipPolicy, Slo};
@@ -51,6 +61,9 @@ pub fn specs() -> Vec<OptSpec> {
         OptSpec { name: "steal", help: "pool work stealing: on|off", default: Some("off"), is_flag: false },
         OptSpec { name: "replica-policy", help: "per-replica skip-policy overrides, e.g. 0=mean,1=never", default: None, is_flag: false },
         OptSpec { name: "synthetic", help: "serve the synthetic engine (no artifacts needed)", default: None, is_flag: true },
+        OptSpec { name: "trace-out", help: "write a Chrome-trace JSON here at shutdown (arms telemetry)", default: None, is_flag: false },
+        OptSpec { name: "trace-ring", help: "per-replica trace ring capacity (events)", default: Some("4096"), is_flag: false },
+        OptSpec { name: "self-drive", help: "generate N requests from an internal client (smoke runs)", default: Some("0"), is_flag: false },
         OptSpec { name: "sim-work", help: "synthetic spin per executed module", default: Some("4000"), is_flag: false },
         OptSpec { name: "train-steps", help: "gate training steps if needed", default: Some("200"), is_flag: false },
         OptSpec { name: "train-lr", help: "gate training lr", default: Some("5e-3"), is_flag: false },
@@ -119,6 +132,58 @@ pub fn parse_replica_spec(spec: &str) -> Result<Vec<ReplicaTier>> {
         bail!("--replica-spec parsed to zero replicas");
     }
     Ok(out)
+}
+
+/// Internal smoke client (`--self-drive N`): connects to the server it
+/// shares a process with, sends `n` single-lane requests cycling over
+/// the SLO classes, waits for each response, then exercises the `STATS`
+/// and `TRACE` verbs once. Failures only log — the serve loop's own
+/// `max_requests` bound decides when the process exits.
+fn self_drive_client(addr: String, n: usize)
+                     -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        use std::io::{BufRead, BufReader, Write};
+        let mut stream = None;
+        for _ in 0..200 {
+            match std::net::TcpStream::connect(&addr) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(_) => std::thread::sleep(
+                    std::time::Duration::from_millis(50)),
+            }
+        }
+        let Some(mut s) = stream else {
+            log::warn!("self-drive: could not connect to {addr}");
+            return;
+        };
+        let mut reader =
+            BufReader::new(s.try_clone().expect("clone self-drive stream"));
+        let mut line = String::new();
+        for i in 0..n {
+            let slo = ["besteffort", "latency", "throughput"][i % 3];
+            let req = format!(
+                "{{\"label\": {}, \"steps\": 4, \"seed\": {i}, \
+                 \"cfg_scale\": 1.0, \"slo\": \"{slo}\"}}\n",
+                i % 10);
+            if s.write_all(req.as_bytes()).is_err() {
+                return;
+            }
+            line.clear();
+            if reader.read_line(&mut line).is_err() {
+                return;
+            }
+        }
+        for verb in ["STATS\n", "TRACE\n"] {
+            if s.write_all(verb.as_bytes()).is_err() {
+                return;
+            }
+            line.clear();
+            let _ = reader.read_line(&mut line);
+        }
+        log::info!("self-drive: {n} requests served");
+    })
 }
 
 /// Parse the `--steal on|off` switch.
@@ -260,7 +325,16 @@ pub fn run(a: Args) -> Result<()> {
         parse_replica_policies(&a.get_str("replica-policy", ""), replicas)?;
     let lazy_pct = a.get_usize("lazy", 50)?;
     let addr = a.get_str("addr", "127.0.0.1:8471");
-    let max_requests = a.get_usize("max-requests", 0)?;
+    let trace_out = a.get("trace-out");
+    let trace_ring = a.get_usize("trace-ring", 4096)?.max(2);
+    let self_drive = a.get_usize("self-drive", 0)?;
+    // a self-driven run must terminate on its own: the internal client
+    // is the only load source, so its request count bounds the serve
+    // loop unless the user asked for more explicitly
+    let max_requests = match a.get_usize("max-requests", 0)? {
+        0 if self_drive > 0 => self_drive,
+        n => n,
+    };
 
     let (factories, queue_cap) = if a.flag("synthetic") {
         // the simulator only distinguishes skip-vs-never; honoring any
@@ -344,13 +418,24 @@ pub fn run(a: Args) -> Result<()> {
     } else {
         None
     };
+    // telemetry: with --trace-out each replica gets its own ring; the
+    // clones kept here drain them for the Chrome export after shutdown
+    // (the ring is shared through an Arc, so the replica's writes are
+    // visible to this thread's reader)
+    let mut tracers: Vec<crate::obs::Tracer> = Vec::with_capacity(replicas);
     let handles: Vec<ReplicaHandle> = factories
         .into_iter()
         .zip(tiers.iter())
         .enumerate()
         .map(|(i, (f, tier))| {
-            ReplicaHandle::spawn_tiered(i, queue_cap, f, rebalancer.clone(),
-                                        tier.clone())
+            let tracer = if trace_out.is_some() {
+                crate::obs::Tracer::enabled(i, trace_ring)
+            } else {
+                crate::obs::Tracer::disabled()
+            };
+            tracers.push(tracer.clone());
+            ReplicaHandle::spawn_traced(i, queue_cap, f, rebalancer.clone(),
+                                        tier.clone(), tracer)
         })
         .collect::<Result<_>>()?;
     let router =
@@ -367,8 +452,26 @@ pub fn run(a: Args) -> Result<()> {
              tier_summary.join(","),
              route.name(),
              if router.stealing() { "on" } else { "off" });
+    let driver = if self_drive > 0 {
+        Some(self_drive_client(addr.clone(), self_drive))
+    } else {
+        None
+    };
     let report = serve_pool(router, &addr, max_requests)?;
+    if let Some(d) = driver {
+        let _ = d.join();
+    }
     println!("{}", report.render());
+    if let Some(path) = &trace_out {
+        let groups = crate::obs::chrome::collect_tracers(
+            &tracers, trace_ring);
+        let summary = crate::obs::chrome::write_chrome_trace(
+            std::path::Path::new(path), &groups)?;
+        println!("trace: {} events ({} slices, {} instants) on {} \
+                  track(s) -> {path}",
+                 summary.events, summary.slices, summary.instants,
+                 summary.tracks);
+    }
     // a supervisor watching the exit code must not see success when the
     // pool never actually served anything
     if report.failed() == report.replicas.len() {
@@ -454,7 +557,7 @@ mod tests {
     fn synthetic_factories_honor_never_override() {
         let mut ov = BTreeMap::new();
         ov.insert(1usize, SkipPolicy::Never);
-        let f = synthetic_factories(2, 50, 10, &ov);
+        let f = synthetic_factories(2, 50, 10, false, &ov);
         assert_eq!(f.len(), 2);
         // factories are opaque; behavior is pinned by integration_pool
     }

@@ -39,6 +39,7 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
         "fig5" => cmd_figs::run_fig5(parse(rest, &cmd_figs::specs())?),
         "fig6" => cmd_figs::run_fig6(parse(rest, &cmd_figs::specs())?),
         "profile" => cmd_profile::run(parse(rest, &cmd_profile::specs())?),
+        "trace-check" => run_trace_check(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -49,6 +50,24 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
 
 fn parse(rest: &[String], specs: &[crate::util::argparse::OptSpec]) -> Result<Args> {
     Args::parse(rest, specs)
+}
+
+/// `lazydit trace-check <file.json>` — structurally validate a
+/// Chrome-trace file written by `serve --trace-out` / `profile --trace`
+/// (the tier-1 smoke gate's pure-Rust replacement for jq). Exits
+/// non-zero with a diagnostic on malformed traces.
+fn run_trace_check(rest: &[String]) -> Result<()> {
+    let Some(path) = rest.first() else {
+        bail!("usage: lazydit trace-check <trace.json>");
+    };
+    let text = std::fs::read_to_string(path)?;
+    let s = crate::obs::chrome::validate_chrome_trace(&text)?;
+    println!(
+        "trace-check: {path} OK — {} events ({} slices, {} instants) on \
+         {} track(s)",
+        s.events, s.slices, s.instants, s.tracks
+    );
+    Ok(())
 }
 
 fn print_help() {
@@ -71,6 +90,7 @@ fn print_help() {
          \x20 fig5                   penalty/laziness ablations\n\
          \x20 fig6                   skip-one-module-only ablation\n\
          \x20 profile                engine hot-path micro profile\n\
+         \x20 trace-check            validate a --trace-out Chrome trace\n\
          \n\
          run `lazydit <cmd> --help` semantics: all options have defaults;\n\
          common ones: --artifacts <dir> --ckpt <dir> --config <name>."

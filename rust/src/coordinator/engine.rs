@@ -10,6 +10,8 @@ use crate::coordinator::request::{ActiveRequest, LaneCaches, Request,
 use crate::coordinator::stats::{LayerStats, ServeStats};
 use crate::model::checkpoint::Checkpoint;
 use crate::model::runner::{BatchCaches, DecisionCfg, ModelRunner, StepOutcome};
+use crate::obs::ring::pack_pair;
+use crate::obs::{EventKind, TraceEvent, Tracer};
 use crate::runtime::engine_rt::Runtime;
 use crate::runtime::manifest::Manifest;
 use crate::sampler::cfg::combine_pair;
@@ -61,6 +63,11 @@ pub struct Engine {
     /// This engine's buffer arena (shared with the runner's, so batch
     /// caches and step transients recycle into each other).
     pool: Rc<TensorPool>,
+    /// Telemetry sink for batch-level span events (disabled by default;
+    /// a traced pool replica installs one via
+    /// [`crate::coordinator::pool::PoolEngine::install_tracer`], which
+    /// also hands the runner a clone for per-module spans).
+    tracer: Tracer,
 }
 
 /// The engine's persistent batch: padded model inputs plus the
@@ -323,6 +330,7 @@ impl Engine {
             round_buckets,
             batch: None,
             pool,
+            tracer: Tracer::disabled(),
         })
     }
 
@@ -351,6 +359,7 @@ impl Engine {
             round_buckets,
             batch: None,
             pool,
+            tracer: Tracer::disabled(),
         }
     }
 
@@ -466,11 +475,29 @@ impl Engine {
             (m.depth, m.tokens(), m.dim, m.img_elems(),
              m.null_label() as i32, [m.channels, m.img_size, m.img_size])
         };
+        let bb_start = self.tracer.now_us();
         let (retained, migrated) =
             sync_batch(&mut self.batch, plan, &mut self.active, &self.pool,
                        depth, n, d, &ztail, null_y);
         self.serve_stats.rows_retained += retained;
         self.serve_stats.rows_migrated += migrated;
+        if self.tracer.is_enabled() {
+            let now = self.tracer.now_us();
+            self.tracer.record_at(TraceEvent {
+                kind: EventKind::BatchBuild,
+                ts_us: bb_start,
+                dur_us: now.saturating_sub(bb_start),
+                kind_id: plan.bucket as u64,
+                arg: pack_pair(plan.lanes.len() as u32, plan.bucket as u32),
+            });
+            self.tracer.record_at(TraceEvent {
+                kind: EventKind::Scatter,
+                ts_us: now,
+                dur_us: 0,
+                kind_id: plan.bucket as u64,
+                arg: pack_pair(retained as u32, migrated as u32),
+            });
+        }
 
         // refresh the dynamic inputs (DDIM advances z on the host and
         // the cursor advances t every step; caches need no refresh)
@@ -713,7 +740,7 @@ impl Engine {
                     (0..m.depth).map(|l| ar.skip_counts[2 * l + 1]).sum();
                 let latency = ar.started.elapsed();
                 self.serve_stats.completed += 1;
-                self.serve_stats.latencies_s.push(latency.as_secs_f64());
+                self.serve_stats.record_latency(latency.as_secs_f64());
                 out.push(RequestResult {
                     id: ar.req.id,
                     class_label: ar.req.class_label,
@@ -782,6 +809,14 @@ impl crate::coordinator::pool::PoolEngine for Engine {
 
     fn arena_stats(&self) -> Option<crate::tensor::pool::PoolStats> {
         Some(self.pool.stats())
+    }
+
+    fn install_tracer(&mut self, tracer: Tracer) {
+        // the runner gets a clone so per-module run/skip spans carry
+        // real durations; the engine keeps its own for batch-level
+        // events (both share one ring through the Arc)
+        self.runner.install_tracer(tracer.clone());
+        self.tracer = tracer;
     }
 }
 
@@ -924,20 +959,34 @@ mod tests {
         let st = state.as_mut().unwrap();
         assert_eq!(st.caches.conversions(), 0,
                    "run path memoizes, never converts");
-        // steady state: same plan, every module "skips" (reads the memo)
+        // steady state: same plan, every module "skips" (reads the memo).
+        // A disabled tracer rides along exactly as in run_plan — it must
+        // stay free: no clock reads (now_us pins to 0) and no recording.
+        let tracer = crate::obs::Tracer::disabled();
         for round in 1..6 {
             let mut p = plan.clone();
             stabilize_plan(&mut p, &state.as_ref().unwrap().rows,
                            |idx| active[idx].req.id);
+            let bb_start = tracer.now_us();
             let (retained, migrated) =
                 sync_batch(&mut state, &p, &mut active, &pool, depth, 1, nd,
                            &[1, 2, 2], -1);
             assert_eq!((retained, migrated), (2, 0), "round {round}");
+            assert_eq!(bb_start, 0, "disabled tracer must not read clocks");
+            tracer.record_at(crate::obs::TraceEvent {
+                kind: crate::obs::EventKind::Scatter,
+                ts_us: bb_start,
+                dur_us: 0,
+                kind_id: p.bucket as u64,
+                arg: pack_pair(retained as u32, migrated as u32),
+            });
             let st = state.as_mut().unwrap();
             for k in 0..slots {
                 st.caches.literal(k).unwrap(); // the skip path's read
             }
         }
+        assert!(tracer.ring().is_none(),
+                "disabled tracer holds no ring, records nothing");
         let st = state.as_mut().unwrap();
         assert_eq!(st.caches.conversions(), 0,
                    "steady-state skips must perform zero conversions");

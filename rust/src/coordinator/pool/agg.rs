@@ -40,13 +40,15 @@ pub fn merge_layer_stats(a: &mut LayerStats, b: &LayerStats) {
     }
 }
 
-/// Merge `b`'s serving counters into `a`. Latency samples concatenate;
-/// wall time takes the max (replicas run concurrently, so summing walls
-/// would overstate elapsed time).
+/// Merge `b`'s serving counters into `a`. Latency samples concatenate
+/// and the histograms fold bucket-wise (so merged quantiles stay
+/// histogram-backed); wall time takes the max (replicas run
+/// concurrently, so summing walls would overstate elapsed time).
 pub fn merge_serve_stats(a: &mut ServeStats, b: &ServeStats) {
     a.completed += b.completed;
     a.shed += b.shed;
     a.latencies_s.extend_from_slice(&b.latencies_s);
+    a.hist.merge_from(&b.hist);
     a.wall_s = a.wall_s.max(b.wall_s);
     a.module_invocations += b.module_invocations;
     a.module_skips += b.module_skips;
@@ -272,6 +274,31 @@ mod tests {
         assert_eq!(s.shed, 2);
         assert_eq!(s.latencies_s.len(), s.completed);
         assert!((s.wall_s - 2.0).abs() < 1e-12, "wall is max, not sum");
+    }
+
+    #[test]
+    fn merged_histograms_back_the_pool_quantiles() {
+        // two replicas with disjoint latency bands: the merged p99 must
+        // come from the slow replica's band (bucket-wise hist fold), and
+        // the merged count equals the sum
+        let mut fast = report(0, 1, 0, 4, 100);
+        fast.serve.latencies_s.clear();
+        for _ in 0..100 {
+            fast.serve.record_latency(0.010);
+        }
+        let mut slow = report(1, 1, 0, 4, 100);
+        slow.serve.latencies_s.clear();
+        for _ in 0..100 {
+            slow.serve.record_latency(1.0);
+        }
+        let pr = PoolReport { replicas: vec![fast, slow], shed: 0,
+                              shed_by_slo: [0; Slo::COUNT] };
+        let s = pr.merged_serve();
+        assert_eq!(s.hist.count(), 200);
+        let p99 = s.p99_latency();
+        assert!((p99 - 1.0).abs() / 1.0 <= 0.125, "merged p99 {p99}");
+        let p50 = s.quantile_latency(0.5);
+        assert!(p50 < 0.012, "merged p50 sits in the fast band: {p50}");
     }
 
     #[test]

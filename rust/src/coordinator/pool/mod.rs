@@ -92,6 +92,12 @@ pub trait PoolEngine {
     fn arena_stats(&self) -> Option<crate::tensor::pool::PoolStats> {
         None
     }
+
+    /// Hand the engine a telemetry tracer to record per-step span events
+    /// through (see [`crate::obs`]). Default: ignore it — engines that
+    /// predate tracing (and test doubles) stay correct, they just emit
+    /// no engine-side events.
+    fn install_tracer(&mut self, _tracer: crate::obs::Tracer) {}
 }
 
 /// Constructs a replica's engine *on the replica thread*. The factory is

@@ -11,6 +11,8 @@ use crate::coordinator::pool::steal::{Rebalancer, StealPeer};
 use crate::coordinator::pool::{EngineFactory, PoolEngine};
 use crate::coordinator::request::{Request, RequestResult};
 use crate::coordinator::stats::{LayerStats, ServeStats};
+use crate::obs::ring::pack_pair;
+use crate::obs::{EventKind, LatencyHist, TraceEvent, Tracer};
 use crate::util::threadpool::{BoundedQueue, Popped};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
@@ -25,6 +27,11 @@ pub struct PoolJob {
     pub req: Request,
     /// Where the finished [`RequestResult`] goes.
     pub respond: mpsc::Sender<RequestResult>,
+    /// Epoch-µs when the router enqueued the job (0 = untimed). Queue
+    /// wait is measured from here at engine admission; the stamp rides
+    /// along on steal migration, so the wait covers the job's whole
+    /// queued life, not just its final queue.
+    pub enqueued_us: u64,
 }
 
 /// Per-replica provisioning: the SLO class a replica is tuned for and
@@ -162,6 +169,9 @@ pub struct ReplicaGauges {
     pub steals: AtomicU64,
     /// Jobs a sibling pulled out of this replica's queue.
     pub stolen: AtomicU64,
+    /// Per-SLO-class latency histograms (log-bucketed, mergeable),
+    /// fed at retire time — the per-tier p50/p95/p99 behind `STATS`.
+    pub lat_hist_by_slo: [LatencyHist; Slo::COUNT],
     /// Set once the worker thread has exited (report posted). Read by
     /// the router so finished/dead replicas drop out of candidate
     /// generation instead of winning the cost order with snapshot 0.
@@ -210,6 +220,14 @@ impl ReplicaGauges {
             *o = c.load(Ordering::Relaxed);
         }
         out
+    }
+
+    /// Feed one finished request's latency into its SLO class histogram
+    /// (lock-free; the `STATS` reader folds these into per-tier
+    /// quantiles while the pool runs).
+    pub fn record_latency(&self, slo: Slo, latency: Duration) {
+        self.lat_hist_by_slo[slo.index()]
+            .record_us(latency.as_micros() as u64);
     }
 }
 
@@ -295,6 +313,11 @@ pub struct ReplicaHandle {
     pub gauges: Arc<ReplicaGauges>,
     /// The replica's provisioning (SLO class + batcher shape).
     pub tier: ReplicaTier,
+    /// Telemetry tracer the worker (and its engine) record through;
+    /// disabled unless the replica was spawned via
+    /// [`spawn_traced`](Self::spawn_traced). The handle keeps a clone so
+    /// the `TRACE` verb and the Chrome exporter can read the ring.
+    pub tracer: Tracer,
     queue: BoundedQueue<PoolJob>,
     join: Mutex<Option<JoinHandle<()>>>,
     report: Arc<Mutex<Option<ReplicaReport>>>,
@@ -333,12 +356,25 @@ impl ReplicaHandle {
     pub fn spawn_tiered(id: usize, queue_cap: usize, factory: EngineFactory,
                         steal: Option<Arc<Rebalancer>>, tier: ReplicaTier)
                         -> Result<ReplicaHandle> {
+        Self::spawn_traced(id, queue_cap, factory, steal, tier,
+                           Tracer::disabled())
+    }
+
+    /// [`spawn_tiered`](Self::spawn_tiered) plus a telemetry [`Tracer`]:
+    /// the worker records admission/queue-wait/steal/retire events, the
+    /// engine gets the tracer installed for per-step module events, and
+    /// the handle keeps a reader clone for `TRACE`/export. A disabled
+    /// tracer makes this identical to `spawn_tiered`.
+    pub fn spawn_traced(id: usize, queue_cap: usize, factory: EngineFactory,
+                        steal: Option<Arc<Rebalancer>>, tier: ReplicaTier,
+                        tracer: Tracer) -> Result<ReplicaHandle> {
         let queue: BoundedQueue<PoolJob> = BoundedQueue::new(queue_cap.max(1));
         let gauges = Arc::new(ReplicaGauges::default());
         let report: Arc<Mutex<Option<ReplicaReport>>> =
             Arc::new(Mutex::new(None));
         let (q2, g2, r2) = (queue.clone(), gauges.clone(), report.clone());
         let t2 = tier.clone();
+        let tr2 = tracer.clone();
         let join = std::thread::Builder::new()
             .name(format!("lazydit-replica-{id}"))
             .spawn(move || {
@@ -362,7 +398,7 @@ impl ReplicaHandle {
                     std::panic::AssertUnwindSafe(|| {
                         run_replica(id, factory, &q2, &g2, &r2,
                                     &mut responders, steal.as_deref(),
-                                    &engine_pending, &admitting, &t2)
+                                    &engine_pending, &admitting, &t2, &tr2)
                     }));
                 if result.is_err() {
                     log::warn!("replica {id}: worker panicked");
@@ -409,6 +445,7 @@ impl ReplicaHandle {
             id,
             gauges,
             tier,
+            tracer,
             queue,
             join: Mutex::new(Some(join)),
             report,
@@ -486,12 +523,14 @@ const IDLE_BACKOFF_AFTER: u32 = 64;
 /// `engine_pending` (the engine's share of the pending_steps gauge) are
 /// owned by the caller so the panic handler can account for requests
 /// lost in an unwind by exact, known amounts.
+#[allow(clippy::too_many_arguments)]
 fn run_replica(id: usize, factory: EngineFactory,
                queue: &BoundedQueue<PoolJob>, gauges: &ReplicaGauges,
                report: &Mutex<Option<ReplicaReport>>,
                responders: &mut BTreeMap<u64, mpsc::Sender<RequestResult>>,
                steal: Option<&Rebalancer>, engine_pending: &AtomicUsize,
-               admitting: &AtomicUsize, tier: &ReplicaTier) {
+               admitting: &AtomicUsize, tier: &ReplicaTier,
+               tracer: &Tracer) {
     let mut engine: Box<dyn PoolEngine> = match factory() {
         Ok(e) => e,
         Err(e) => {
@@ -504,6 +543,7 @@ fn run_replica(id: usize, factory: EngineFactory,
             return;
         }
     };
+    engine.install_tracer(tracer.clone());
     log::debug!("replica {id} up (policy {})", engine.policy_name());
 
     // The router optimistically added the *wire* step count to the
@@ -514,8 +554,22 @@ fn run_replica(id: usize, factory: EngineFactory,
     fn admit(engine: &mut Box<dyn PoolEngine>,
              responders: &mut BTreeMap<u64, mpsc::Sender<RequestResult>>,
              gauges: &ReplicaGauges, engine_pending: &AtomicUsize,
-             admitting: &AtomicUsize, job: PoolJob) {
+             admitting: &AtomicUsize, tracer: &Tracer, job: PoolJob) {
         let wire_steps = job.req.steps;
+        if tracer.is_enabled() {
+            let now = tracer.now_us();
+            tracer.record_at(TraceEvent {
+                kind: EventKind::Admit, ts_us: now, dur_us: 0,
+                kind_id: job.req.id, arg: wire_steps as u64,
+            });
+            if job.enqueued_us > 0 {
+                tracer.record_at(TraceEvent {
+                    kind: EventKind::QueueWait, ts_us: now,
+                    dur_us: now.saturating_sub(job.enqueued_us),
+                    kind_id: job.req.id, arg: wire_steps as u64,
+                });
+            }
+        }
         // mark the job in-admission (steps + 1 so 0 means "none"): if
         // submit panics, the handler must resolve exactly this job's
         // ledger entry — it left the queue but never reached responders
@@ -551,7 +605,7 @@ fn run_replica(id: usize, factory: EngineFactory,
                 Some(job) => {
                     idle_misses = 0;
                     admit(&mut engine, responders, gauges, engine_pending,
-                          admitting, job);
+                          admitting, tracer, job);
                 }
                 None => break,
             }
@@ -562,8 +616,21 @@ fn run_replica(id: usize, factory: EngineFactory,
             if let Some(rb) = steal {
                 if let Some(job) = rb.steal_for(id) {
                     idle_misses = 0;
+                    if tracer.is_enabled() {
+                        let now = tracer.now_us();
+                        let queued = if job.enqueued_us > 0 {
+                            now.saturating_sub(job.enqueued_us)
+                        } else {
+                            0
+                        };
+                        tracer.record_at(TraceEvent {
+                            kind: EventKind::Steal, ts_us: now,
+                            dur_us: queued, kind_id: job.req.id,
+                            arg: job.req.steps as u64,
+                        });
+                    }
                     admit(&mut engine, responders, gauges, engine_pending,
-                          admitting, job);
+                          admitting, tracer, job);
                     continue;
                 }
             }
@@ -579,7 +646,7 @@ fn run_replica(id: usize, factory: EngineFactory,
                 Popped::Item(job) => {
                     idle_misses = 0;
                     admit(&mut engine, responders, gauges, engine_pending,
-                          admitting, job);
+                          admitting, tracer, job);
                 }
                 Popped::Closed => break,
                 Popped::TimedOut => continue,
@@ -593,6 +660,17 @@ fn run_replica(id: usize, factory: EngineFactory,
                     gauges.completed.fetch_add(1, Ordering::Relaxed);
                     gauges.completed_by_slo[res.slo.index()]
                         .fetch_add(1, Ordering::Relaxed);
+                    gauges.record_latency(res.slo, res.latency);
+                    if tracer.is_enabled() {
+                        tracer.record_at(TraceEvent {
+                            kind: EventKind::Retire,
+                            ts_us: tracer.now_us(),
+                            dur_us: res.latency.as_micros() as u64,
+                            kind_id: res.id,
+                            arg: pack_pair(res.slo.index() as u32,
+                                           res.steps as u32),
+                        });
+                    }
                     dec(&gauges.queued, 1);
                     if let Some(tx) = responders.remove(&res.id) {
                         let _ = tx.send(res);
@@ -685,7 +763,8 @@ mod tests {
     fn job(seed: u64, steps: usize)
            -> (PoolJob, mpsc::Receiver<RequestResult>) {
         let (tx, rx) = mpsc::channel();
-        (PoolJob { req: Request::new(0, 3, steps, seed), respond: tx }, rx)
+        (PoolJob { req: Request::new(0, 3, steps, seed), respond: tx,
+                   enqueued_us: 0 }, rx)
     }
 
     #[test]
@@ -879,7 +958,7 @@ mod tests {
             let req = Request::new(0, 1, 3, i as u64).with_slo(*slo);
             h.gauges.queued.fetch_add(1, Ordering::Relaxed);
             h.gauges.pending_steps.fetch_add(3, Ordering::Relaxed);
-            h.try_send(PoolJob { req, respond: tx })
+            h.try_send(PoolJob { req, respond: tx, enqueued_us: 0 })
                 .map_err(|_| "send")
                 .unwrap();
             rxs.push(rx);

@@ -37,6 +37,7 @@ use crate::coordinator::pool::agg::PoolReport;
 use crate::coordinator::pool::replica::{GaugeSnapshot, PoolJob, ReplicaHandle};
 use crate::coordinator::pool::steal::Rebalancer;
 use crate::coordinator::request::{Request, RequestResult};
+use crate::obs::LatencyHist;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -295,7 +296,12 @@ impl Router {
             return DispatchOutcome::ShedUnservable;
         }
         let steps = req.steps;
-        let mut job = PoolJob { req, respond };
+        // stamp the admission instant once (one clock read, off the
+        // engine hot path) so replicas can report queue-wait spans;
+        // 0 means "untimed" to the consumer, which epoch_us never is
+        // after the first microsecond of process life
+        let mut job = PoolJob { req, respond,
+                                enqueued_us: crate::obs::epoch_us() };
         for idx in order {
             let h = &self.replicas[idx];
             // optimistic accounting: visible to concurrent dispatches
@@ -340,9 +346,12 @@ impl Router {
     /// the `STATS` wire verb (see docs/SERVING.md). Per replica: tier,
     /// batch width, queued, pending steps, observed Γ (row-weighted),
     /// row-work gauges (`rows_run`/`rows_skipped`/`rows_recovered`),
-    /// completions (total and per SLO class), steal counters, liveness.
-    /// Pool-wide: route, stealing, totals, row-work plus the
-    /// recovered-work ratio, and sheds per SLO class.
+    /// completions (total and per SLO class), latency quantiles from
+    /// the replica's merged log-bucketed histogram, steal counters,
+    /// liveness. Pool-wide: route, stealing, totals, row-work plus the
+    /// recovered-work ratio, sheds per SLO class, and a `tiers` object
+    /// with per-SLO-class p50/p95/p99 from histograms merged across
+    /// every replica that served that class.
     pub fn stats_json(&self) -> String {
         let replicas: Vec<Json> = self
             .replicas
@@ -356,9 +365,14 @@ impl Router {
                         .map(|c| (c.name(), Json::num(by[c.index()] as f64)))
                         .collect(),
                 );
+                let mut lh = LatencyHist::new();
+                for h in r.gauges.lat_hist_by_slo.iter() {
+                    lh.merge_from(h);
+                }
                 Json::obj(vec![
                     ("id", Json::num(r.id as f64)),
                     ("tier", Json::str(r.tier.slo.name())),
+                    ("latency_ms", hist_ms_json(&lh)),
                     ("max_batch", Json::num(r.tier.max_batch as f64)),
                     ("queued", Json::num(s.queued as f64)),
                     ("pending_steps", Json::num(s.pending_steps as f64)),
@@ -397,6 +411,18 @@ impl Router {
                 .map(|c| (c.name(), Json::num(sheds[c.index()] as f64)))
                 .collect(),
         );
+        let tiers = Json::obj(
+            Slo::ALL
+                .iter()
+                .map(|c| {
+                    let mut lh = LatencyHist::new();
+                    for r in &self.replicas {
+                        lh.merge_from(&r.gauges.lat_hist_by_slo[c.index()]);
+                    }
+                    (c.name(), hist_ms_json(&lh))
+                })
+                .collect(),
+        );
         Json::obj(vec![
             ("replicas", Json::arr(replicas)),
             ("route", Json::str(self.route.name())),
@@ -417,6 +443,53 @@ impl Router {
             ("recovered_ratio",
              Json::num(self.total_rows_recovered() as f64
                        / self.total_rows_skipped().max(1) as f64)),
+            ("tiers", tiers),
+        ])
+        .to_string()
+    }
+
+    /// One-line JSON payload of the `TRACE` wire verb: the newest ring
+    /// events per replica (up to `max_per_replica` each), decoded to
+    /// named kinds. `recorded` is the replica's all-time event count —
+    /// strictly larger than `events.len()` once the ring has wrapped,
+    /// so a consumer can tell "quiet" from "overwritten". `enabled` is
+    /// false (and every `events` empty) when the server runs without
+    /// `--trace-out`/`--trace`.
+    pub fn trace_json(&self, max_per_replica: usize) -> String {
+        let replicas: Vec<Json> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                let events: Vec<Json> = r
+                    .tracer
+                    .ring()
+                    .map(|ring| ring.snapshot(max_per_replica))
+                    .unwrap_or_default()
+                    .into_iter()
+                    .map(|ev| {
+                        Json::obj(vec![
+                            ("kind", Json::str(ev.kind.name())),
+                            ("ts_us", Json::num(ev.ts_us as f64)),
+                            ("dur_us", Json::num(ev.dur_us as f64)),
+                            ("id", Json::num(ev.kind_id as f64)),
+                            ("arg", Json::num(ev.arg as f64)),
+                        ])
+                    })
+                    .collect();
+                Json::obj(vec![
+                    ("id", Json::num(r.id as f64)),
+                    ("recorded",
+                     Json::num(r.tracer.ring().map_or(0, |g| g.recorded())
+                               as f64)),
+                    ("events", Json::arr(events)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("enabled",
+             Json::Bool(self.replicas.iter()
+                 .any(|r| r.tracer.is_enabled()))),
+            ("replicas", Json::arr(replicas)),
         ])
         .to_string()
     }
@@ -444,6 +517,19 @@ impl Router {
             shed_by_slo: self.shed_by_slo(),
         }
     }
+}
+
+/// Quantile summary of one latency histogram, in milliseconds — the
+/// shape shared by the per-replica `latency_ms` field and the pool
+/// `tiers` breakdown of the `STATS` payload.
+fn hist_ms_json(lh: &LatencyHist) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(lh.count() as f64)),
+        ("mean_ms", Json::num(lh.mean_us() / 1e3)),
+        ("p50", Json::num(lh.quantile_ms(0.50))),
+        ("p95", Json::num(lh.quantile_ms(0.95))),
+        ("p99", Json::num(lh.quantile_ms(0.99))),
+    ])
 }
 
 /// Effective-backlog cost of one replica under the lazy-aware policy.

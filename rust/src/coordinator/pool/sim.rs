@@ -20,6 +20,8 @@
 use crate::coordinator::pool::{EngineFactory, PoolEngine};
 use crate::coordinator::request::{Request, RequestResult};
 use crate::coordinator::stats::{LayerStats, ServeStats};
+use crate::obs::ring::{pack_module_arg, pack_pair};
+use crate::obs::{EventKind, TraceEvent, Tracer};
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
 use anyhow::Result;
@@ -100,6 +102,9 @@ pub struct SimEngine {
     pub serve_stats: ServeStats,
     active: Vec<SimActive>,
     next_id: u64,
+    /// Telemetry sink (disabled by default; a traced replica installs
+    /// its own via [`PoolEngine::install_tracer`]).
+    tracer: Tracer,
 }
 
 impl SimEngine {
@@ -112,6 +117,7 @@ impl SimEngine {
             serve_stats: ServeStats::default(),
             active: Vec::new(),
             next_id: 1,
+            tracer: Tracer::disabled(),
         }
     }
 
@@ -203,7 +209,19 @@ impl PoolEngine for SimEngine {
         let depth = self.spec.depth;
         let gamma = self.spec.lazy_pct as f64 / 100.0;
         let any_cold = self.active.iter().any(|a| a.cursor == 0);
+        let traced = self.tracer.is_enabled() && !self.active.is_empty();
+        if traced {
+            self.tracer.record_at(TraceEvent {
+                kind: EventKind::BatchBuild,
+                ts_us: self.tracer.now_us(),
+                dur_us: 0,
+                kind_id: 0,
+                arg: pack_pair(self.active.len() as u32, 0),
+            });
+        }
         for k in 0..2 * depth {
+            let slot_start = if traced { self.tracer.now_us() } else { 0 };
+            let (mut t_run, mut t_skip) = (0u32, 0u32);
             // did every trajectory's gate want this skip? The coupled
             // gate skips only when that consensus holds AND nobody is
             // cold; the row-granular gate uses the same pair to count
@@ -225,11 +243,13 @@ impl PoolEngine for SimEngine {
                 self.layer_stats.record(k, skip, gamma);
                 self.serve_stats.module_invocations += 1;
                 if skip {
+                    t_skip += 1;
                     self.active[ai].skip_counts[k] += 1;
                     self.serve_stats.module_skips += 1;
                     let recovered = !self.spec.coupled && !batch_skip;
                     self.layer_stats.record_rows(k, 0, 1, recovered as u64);
                 } else {
+                    t_run += 1;
                     self.layer_stats.record_rows(k, 1, 0, 0);
                     if want
                         && (!warm
@@ -243,6 +263,22 @@ impl PoolEngine for SimEngine {
                     }
                     spin(self.spec.work_per_module);
                 }
+            }
+            if traced {
+                // the slot is a run span if any row executed, a skip
+                // span when every row came from cache
+                self.tracer.record_at(TraceEvent {
+                    kind: if t_run > 0 {
+                        EventKind::ModuleRun
+                    } else {
+                        EventKind::ModuleSkip
+                    },
+                    ts_us: slot_start,
+                    dur_us: self.tracer.now_us()
+                        .saturating_sub(slot_start),
+                    kind_id: k as u64,
+                    arg: pack_module_arg(gamma, t_run, t_skip),
+                });
             }
         }
         for a in &mut self.active {
@@ -267,7 +303,7 @@ impl PoolEngine for SimEngine {
                 let ffn_skip: u32 =
                     (0..depth).map(|l| a.skip_counts[2 * l + 1]).sum();
                 self.serve_stats.completed += 1;
-                self.serve_stats.latencies_s.push(latency.as_secs_f64());
+                self.serve_stats.record_latency(latency.as_secs_f64());
                 out.push(RequestResult {
                     id: a.req.id,
                     class_label: a.req.class_label,
@@ -301,6 +337,10 @@ impl PoolEngine for SimEngine {
 
     fn policy_name(&self) -> String {
         self.spec.policy.clone()
+    }
+
+    fn install_tracer(&mut self, tracer: Tracer) {
+        self.tracer = tracer;
     }
 }
 
@@ -422,6 +462,34 @@ mod tests {
             }
             assert!(!e.wants_skip(0, step % 8), "step 0 never skips");
         }
+    }
+
+    #[test]
+    fn traced_sim_records_batch_and_module_spans() {
+        let mut e = SimEngine::new(SimSpec::fast());
+        let tr = Tracer::enabled(0, 256);
+        e.install_tracer(tr.clone());
+        e.submit(Request::new(0, 1, 3, 9));
+        run_all(&mut e);
+        let evs = tr.ring().unwrap().snapshot(256);
+        let count = |k: EventKind| {
+            evs.iter().filter(|v| v.kind == k).count() as u64
+        };
+        // one BatchBuild per round, one module span per slot per round
+        assert_eq!(count(EventKind::BatchBuild), 3);
+        assert_eq!(count(EventKind::ModuleRun)
+                       + count(EventKind::ModuleSkip),
+                   e.serve_stats.module_invocations);
+        // with a single trajectory a slot skip IS a row skip, so the
+        // span kinds must partition exactly like the skip accounting
+        assert_eq!(count(EventKind::ModuleSkip),
+                   e.serve_stats.module_skips);
+        assert!(count(EventKind::ModuleRun) > 0, "step 0 never skips");
+        // an untraced engine is the default and records nothing
+        let mut quiet = SimEngine::new(SimSpec::fast());
+        quiet.submit(Request::new(0, 1, 2, 4));
+        run_all(&mut quiet);
+        assert!(!quiet.tracer.is_enabled());
     }
 
     #[test]

@@ -282,7 +282,7 @@ mod tests {
         p.gauges.queued.fetch_add(1, Ordering::Relaxed);
         p.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
         p.queue
-            .try_push(PoolJob { req, respond: tx })
+            .try_push(PoolJob { req, respond: tx, enqueued_us: 0 })
             .map_err(|_| "push")
             .unwrap();
         rx
@@ -424,7 +424,7 @@ mod tests {
         peers[0].gauges.pending_steps.fetch_add(5, Ordering::Relaxed);
         peers[0]
             .queue
-            .try_push(PoolJob { req, respond: tx })
+            .try_push(PoolJob { req, respond: tx, enqueued_us: 0 })
             .map_err(|_| "push")
             .unwrap();
         drop(peers);
@@ -444,6 +444,7 @@ mod tests {
             .try_push(PoolJob {
                 req: Request::new(0, 1, 5, 78),
                 respond: tx,
+                enqueued_us: 0,
             })
             .map_err(|_| "push")
             .unwrap();

@@ -8,7 +8,11 @@
 //!              "slo": "latency"}
 //!   shed    : {"error": "queue full"}
 //!   stats   : the bare verb line `STATS` returns one JSON object with
-//!             the live pool gauges (replica-pool back-end only)
+//!             the live pool gauges, including per-replica and per-tier
+//!             latency quantiles (replica-pool back-end only)
+//!   trace   : the bare verb line `TRACE` returns one JSON object with
+//!             the newest telemetry ring events per replica (empty when
+//!             the server runs untraced; pool back-end only)
 //!
 //! `steps` must be a positive integer and `seed` a non-negative integer
 //! below 2^53; malformed fields get a structured `{"error": ...}` line.
@@ -128,16 +132,23 @@ pub const UNSERVABLE_MSG: &str =
     "unservable: no live replica matches this request's SLO class and \
      lane count";
 
+/// Most ring events the `TRACE` verb returns per replica in one reply —
+/// bounds the response line (the full ring is still exported to the
+/// Chrome trace file at shutdown).
+pub const TRACE_MAX_EVENTS: usize = 512;
+
 /// Shared per-connection read loop. `submit` hands an admitted request
 /// plus its response channel to a back-end; `Err(msg)` means shed, with
 /// `msg` telling the client why (`queue full` for transient overload,
 /// [`UNSERVABLE_MSG`] for a permanent pool-shape mismatch). `stats`
-/// answers the `STATS` verb — a bare non-JSON line, so it can never
-/// collide with a request object — with one JSON line of live gauges.
-fn serve_lines<F, S>(stream: TcpStream, submit: F, stats: S)
+/// answers the `STATS` verb and `trace` the `TRACE` verb — bare
+/// non-JSON lines, so they can never collide with a request object —
+/// each with one JSON line (live gauges / recent ring events).
+fn serve_lines<F, S, T>(stream: TcpStream, submit: F, stats: S, trace: T)
 where
     F: Fn(Request, mpsc::Sender<RequestResult>) -> Result<(), &'static str>,
     S: Fn() -> String,
+    T: Fn() -> String,
 {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(stream.try_clone().expect("clone stream"));
@@ -150,6 +161,8 @@ where
         }
         let reply = if trimmed == "STATS" {
             stats()
+        } else if trimmed == "TRACE" {
+            trace()
         } else {
             match parse_request_line(trimmed) {
                 Ok(req) => {
@@ -198,11 +211,14 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> 
                                 q3.try_push(Pending { req, respond: tx })
                                     .map_err(|_| "queue full")
                             },
-                            // live gauges need the pool router; this
-                            // legacy single-engine loop (library use —
-                            // the CLI always runs the pool) has none
+                            // live gauges and trace rings need the pool
+                            // router; this legacy single-engine loop
+                            // (library use — the CLI always runs the
+                            // pool) has none
                             || error_line(
                                 "STATS needs the replica-pool back-end"),
+                            || error_line(
+                                "TRACE needs the replica-pool back-end"),
                         )
                     });
                 }
@@ -276,6 +292,7 @@ pub fn serve_pool(router: Router, addr: &str,
                 Ok((stream, _)) => {
                     let r3 = r2.clone();
                     let r4 = r2.clone();
+                    let r5 = r2.clone();
                     std::thread::spawn(move || {
                         serve_lines(
                             stream,
@@ -292,6 +309,7 @@ pub fn serve_pool(router: Router, addr: &str,
                                 }
                             },
                             move || r4.stats_json(),
+                            move || r5.trace_json(TRACE_MAX_EVENTS),
                         )
                     });
                 }

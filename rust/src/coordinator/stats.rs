@@ -199,6 +199,10 @@ pub struct ServeStats {
     pub rows_retained: u64,
     /// Batch rows migrated (evicted/loaded) on membership change.
     pub rows_migrated: u64,
+    /// Log-bucketed latency histogram fed by [`Self::record_latency`] —
+    /// the quantile source (no per-call sort), mergeable across
+    /// replicas.
+    pub hist: crate::obs::LatencyHist,
 }
 
 impl ServeStats {
@@ -206,12 +210,32 @@ impl ServeStats {
         self.completed as f64 / self.wall_s.max(1e-9)
     }
 
+    /// Record one finished-request latency into both the exact sample
+    /// vector (mean stays bit-compatible) and the histogram (quantiles).
+    pub fn record_latency(&mut self, seconds: f64) {
+        self.latencies_s.push(seconds);
+        self.hist.record_secs(seconds);
+    }
+
     pub fn mean_latency(&self) -> f64 {
         crate::metrics::stats::mean(&self.latencies_s)
     }
 
+    /// p99 latency in seconds, from the histogram (O(buckets), no sort).
+    /// Hand-built stats that never went through [`Self::record_latency`]
+    /// fall back to the exact sorted quantile.
     pub fn p99_latency(&self) -> f64 {
-        crate::metrics::stats::quantile(&self.latencies_s, 0.99)
+        self.quantile_latency(0.99)
+    }
+
+    /// Any latency quantile in seconds (histogram-backed, same fallback
+    /// as [`Self::p99_latency`]).
+    pub fn quantile_latency(&self, q: f64) -> f64 {
+        if self.hist.count() > 0 {
+            self.hist.quantile_us(q) as f64 / 1e6
+        } else {
+            crate::metrics::stats::quantile(&self.latencies_s, q)
+        }
     }
 }
 
@@ -265,6 +289,49 @@ mod tests {
         };
         assert!((st.throughput() - 2.0).abs() < 1e-9);
         assert!((st.mean_latency() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_is_bit_compatible_with_presort_era() {
+        // the bit-compat shim: mean still comes off the exact sample
+        // vector, so routing quantiles through the histogram changed
+        // nothing about it — identical input, identical f64 out
+        let mut st = ServeStats::default();
+        for s in [0.0103, 0.0250, 0.0999, 1.5, 0.0042] {
+            st.record_latency(s);
+        }
+        let old_mean =
+            crate::metrics::stats::mean(&[0.0103, 0.0250, 0.0999, 1.5, 0.0042]);
+        assert_eq!(st.mean_latency().to_bits(), old_mean.to_bits());
+    }
+
+    #[test]
+    fn p99_reads_the_histogram_not_a_sort() {
+        let mut st = ServeStats::default();
+        for i in 1..=200u32 {
+            st.record_latency(i as f64 * 1e-3); // 1ms .. 200ms
+        }
+        assert_eq!(st.hist.count(), 200);
+        let p99 = st.p99_latency();
+        // exact p99 is 0.198s; the histogram answers within its 12.5%
+        // bucket error without touching (or sorting) latencies_s
+        assert!((p99 - 0.198).abs() / 0.198 <= 0.125, "p99 {p99}");
+        let p50 = st.quantile_latency(0.5);
+        assert!((p50 - 0.100).abs() / 0.100 <= 0.125, "p50 {p50}");
+    }
+
+    #[test]
+    fn hand_built_stats_fall_back_to_exact_quantile() {
+        // struct-literal stats (merged pool reports from older paths)
+        // never fed the histogram; p99 must still be truthful
+        let st = ServeStats {
+            latencies_s: vec![0.1, 0.2, 0.3, 0.4],
+            ..Default::default()
+        };
+        assert_eq!(st.hist.count(), 0);
+        assert!((st.p99_latency()
+                 - crate::metrics::stats::quantile(&st.latencies_s, 0.99))
+            .abs() < 1e-12);
     }
 
     #[test]

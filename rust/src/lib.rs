@@ -24,6 +24,8 @@
 //! * [`metrics`] — FID/sFID/IS/precision-recall analogs + linalg.
 //! * [`baselines`] — DDIM step-reduction, Learn2Cache-analog, DeepCache-analog.
 //! * [`tmacs`] — analytic compute-cost model (TMACs columns).
+//! * [`obs`] — serving telemetry: shared epoch, log-bucketed latency
+//!   histograms, per-replica trace rings, Chrome-trace export.
 //! * [`io`] — PNG/CSV/markdown writers.
 //! * [`bench`] — benchmark harness (criterion is unavailable offline).
 
@@ -39,6 +41,7 @@ pub mod data;
 pub mod metrics;
 pub mod baselines;
 pub mod tmacs;
+pub mod obs;
 pub mod io;
 pub mod bench;
 pub mod cli;

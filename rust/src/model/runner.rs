@@ -635,6 +635,9 @@ pub struct ModelRunner {
     /// ([`Self::restrict_partial_buckets`]) so a tier's executable
     /// footprint stays bounded the way PR 3 intended.
     partial_buckets: Vec<usize>,
+    /// Telemetry sink for per-module run/skip spans (disabled by
+    /// default: zero clock reads, zero allocations on the step path).
+    tracer: crate::obs::Tracer,
 }
 
 impl ModelRunner {
@@ -648,7 +651,8 @@ impl ModelRunner {
         Ok(ModelRunner { rt, cfg, weights, gates, lit, buckets: Vec::new(),
                          pool, gate_mask: Vec::new(),
                          partition: RowPartition::default(),
-                         partial_buckets })
+                         partial_buckets,
+                         tracer: crate::obs::Tracer::disabled() })
     }
 
     /// Same runner with laziness disabled (DDIM baseline path).
@@ -662,7 +666,16 @@ impl ModelRunner {
         Ok(ModelRunner { rt, cfg, weights, gates, lit, buckets: Vec::new(),
                          pool, gate_mask: Vec::new(),
                          partition: RowPartition::default(),
-                         partial_buckets })
+                         partial_buckets,
+                         tracer: crate::obs::Tracer::disabled() })
+    }
+
+    /// Hand the runner a telemetry tracer: every module slot records a
+    /// run/skip span with its gate value and row split (see
+    /// [`crate::obs`]). Costs two clock reads and one ring write per
+    /// slot when enabled; a single branch when not.
+    pub fn install_tracer(&mut self, tracer: crate::obs::Tracer) {
+        self.tracer = tracer;
     }
 
     /// Restrict the widths the partial (run-rows sub-batch) path may
@@ -788,6 +801,8 @@ impl ModelRunner {
         for l in 0..depth {
             for mi in 0..2usize {
                 let k = 2 * l + mi;
+                // 0 without touching the clock when tracing is off
+                let slot_start = self.tracer.now_us();
                 let x_lit = HostValue::f32_literal(&x)?;
                 // ---- fused LN + modulate + gate
                 let mut mg_args: Vec<&xla::Literal> = vec![&x_lit, &c_lit];
@@ -898,6 +913,31 @@ impl ModelRunner {
                     self.pool.release(zsub);
                     self.pool.release(zmod);
                     self.partition = part;
+                }
+                if self.tracer.is_enabled() {
+                    // live-row mean gate value rides the packed arg;
+                    // this O(B) pass runs only when tracing is on
+                    let (mut sum, mut n) = (0.0f64, 0u32);
+                    for (i, &lv) in live.iter().enumerate() {
+                        if lv {
+                            sum += s.data()[i] as f64;
+                            n += 1;
+                        }
+                    }
+                    let gate = if n > 0 { sum / n as f64 } else { 0.0 };
+                    self.tracer.record_at(crate::obs::TraceEvent {
+                        kind: if plan.all_skip {
+                            crate::obs::EventKind::ModuleSkip
+                        } else {
+                            crate::obs::EventKind::ModuleRun
+                        },
+                        ts_us: slot_start,
+                        dur_us: self.tracer.now_us()
+                            .saturating_sub(slot_start),
+                        kind_id: k as u64,
+                        arg: crate::obs::ring::pack_module_arg(
+                            gate, plan.rows_run, plan.rows_skipped),
+                    });
                 }
                 // the gate vector is moved (not copied) into the outcome
                 s_vals.push(s.into_vec());

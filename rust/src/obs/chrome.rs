@@ -1,0 +1,281 @@
+//! Chrome-trace-format export: turns ring-buffer events into a JSON
+//! file `chrome://tracing` and Perfetto load directly — one track (tid)
+//! per replica, duration slices for engine spans (module run/skip
+//! colored apart), instant markers for admission/steal/retire — plus a
+//! pure-Rust structural validator the CI smoke gate and tests share.
+
+use crate::obs::ring::{unpack_module_arg, unpack_pair, EventKind,
+                       TraceEvent, Tracer};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// What a validated trace contains (enough for tests and the tier-1
+/// smoke gate to assert on without re-parsing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChromeSummary {
+    /// Total entries in `traceEvents` (metadata included).
+    pub events: usize,
+    /// `ph:"X"` duration slices.
+    pub slices: usize,
+    /// `ph:"i"` instant events.
+    pub instants: usize,
+    /// Distinct tids carrying non-metadata events (≈ replicas).
+    pub tracks: usize,
+}
+
+/// Gather `(replica, events)` groups from live tracers (disabled ones
+/// contribute nothing), newest `max_per` events per replica.
+pub fn collect_tracers(tracers: &[Tracer], max_per: usize)
+                       -> Vec<(usize, Vec<TraceEvent>)> {
+    tracers
+        .iter()
+        .filter_map(|t| t.ring().map(|r| (t.replica(), r.snapshot(max_per))))
+        .collect()
+}
+
+fn event_args(ev: &TraceEvent) -> Json {
+    match ev.kind {
+        EventKind::Admit => Json::obj(vec![
+            ("id", Json::num(ev.kind_id as f64)),
+            ("steps", Json::num(ev.arg as f64)),
+        ]),
+        EventKind::QueueWait => Json::obj(vec![
+            ("id", Json::num(ev.kind_id as f64)),
+            ("wait_us", Json::num(ev.dur_us as f64)),
+        ]),
+        EventKind::BatchBuild => {
+            let (lanes, bucket) = unpack_pair(ev.arg);
+            Json::obj(vec![
+                ("lanes", Json::num(lanes as f64)),
+                ("bucket", Json::num(bucket as f64)),
+            ])
+        }
+        EventKind::ModuleRun | EventKind::ModuleSkip => {
+            let (gate, rows_run, rows_skipped) = unpack_module_arg(ev.arg);
+            Json::obj(vec![
+                ("slot", Json::num(ev.kind_id as f64)),
+                ("gate", Json::num(gate)),
+                ("rows_run", Json::num(rows_run as f64)),
+                ("rows_skipped", Json::num(rows_skipped as f64)),
+            ])
+        }
+        EventKind::Scatter => {
+            let (retained, migrated) = unpack_pair(ev.arg);
+            Json::obj(vec![
+                ("rows_retained", Json::num(retained as f64)),
+                ("rows_migrated", Json::num(migrated as f64)),
+            ])
+        }
+        EventKind::Steal => Json::obj(vec![
+            ("id", Json::num(ev.kind_id as f64)),
+            ("steps", Json::num(ev.arg as f64)),
+            ("queued_us", Json::num(ev.dur_us as f64)),
+        ]),
+        EventKind::Retire => {
+            let (slo, steps) = unpack_pair(ev.arg);
+            Json::obj(vec![
+                ("id", Json::num(ev.kind_id as f64)),
+                ("latency_ms", Json::num(ev.dur_us as f64 / 1e3)),
+                ("slo", Json::num(slo as f64)),
+                ("steps", Json::num(steps as f64)),
+            ])
+        }
+    }
+}
+
+fn event_json(replica: usize, ev: &TraceEvent) -> Json {
+    let mut pairs = vec![
+        ("name", Json::str(ev.kind.name())),
+        ("pid", Json::num(0.0)),
+        ("tid", Json::num(replica as f64)),
+        ("ts", Json::num(ev.ts_us as f64)),
+        ("args", event_args(ev)),
+    ];
+    if ev.kind.is_slice() {
+        pairs.push(("ph", Json::str("X")));
+        pairs.push(("dur", Json::num(ev.dur_us as f64)));
+        // color run vs skip apart in the viewer (reserved palette names)
+        match ev.kind {
+            EventKind::ModuleRun => {
+                pairs.push(("cname", Json::str("thread_state_running")));
+            }
+            EventKind::ModuleSkip => pairs.push(("cname", Json::str("good"))),
+            _ => {}
+        }
+    } else {
+        pairs.push(("ph", Json::str("i")));
+        pairs.push(("s", Json::str("t"))); // thread-scoped instant
+    }
+    Json::obj(pairs)
+}
+
+/// Build the full Chrome-trace JSON document for `(replica, events)`
+/// groups: per-replica `thread_name` metadata plus every event.
+pub fn chrome_trace_json(groups: &[(usize, Vec<TraceEvent>)]) -> Json {
+    let mut events: Vec<Json> = vec![Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(0.0)),
+        ("args", Json::obj(vec![("name", Json::str("lazydit pool"))])),
+    ])];
+    for (replica, evs) in groups {
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(*replica as f64)),
+            ("args",
+             Json::obj(vec![("name",
+                             Json::str(&format!("replica {replica}")))])),
+        ]));
+        for ev in evs {
+            events.push(event_json(*replica, ev));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Serialize + validate + write a Chrome trace. The self-validation
+/// means a written file is structurally loadable by construction; the
+/// summary comes back for logging/asserting.
+pub fn write_chrome_trace(path: &Path, groups: &[(usize, Vec<TraceEvent>)])
+                          -> Result<ChromeSummary> {
+    let text = chrome_trace_json(groups).to_string();
+    let summary = validate_chrome_trace(&text)
+        .context("generated trace failed self-validation")?;
+    std::fs::write(path, &text)
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(summary)
+}
+
+/// Structural validator for Chrome-trace JSON (the tier-1 smoke gate's
+/// no-jq check): top-level `traceEvents` array; every entry an object
+/// with a known `ph`, a non-empty `name`, and a numeric `pid`; duration
+/// slices additionally need numeric `ts`/`dur`/`tid`, instants need
+/// `ts`/`tid`.
+pub fn validate_chrome_trace(text: &str) -> Result<ChromeSummary> {
+    let root = Json::parse(text)
+        .map_err(|e| anyhow::anyhow!("not valid JSON: {e}"))?;
+    let Some(events) = root.get("traceEvents").and_then(|v| v.as_arr()) else {
+        bail!("missing top-level traceEvents array");
+    };
+    let mut summary = ChromeSummary { events: events.len(), slices: 0,
+                                      instants: 0, tracks: 0 };
+    let mut tids: Vec<u64> = Vec::new();
+    for (i, ev) in events.iter().enumerate() {
+        let Some(obj) = ev.as_obj() else {
+            bail!("traceEvents[{i}] is not an object");
+        };
+        let ph = obj.get("ph").and_then(|v| v.as_str()).unwrap_or("");
+        let name = obj.get("name").and_then(|v| v.as_str()).unwrap_or("");
+        if name.is_empty() {
+            bail!("traceEvents[{i}] has no name");
+        }
+        if obj.get("pid").and_then(|v| v.as_f64()).is_none() {
+            bail!("traceEvents[{i}] ({name}) has no numeric pid");
+        }
+        match ph {
+            "M" => {}
+            "X" | "i" => {
+                for key in ["ts", "tid"] {
+                    if obj.get(key).and_then(|v| v.as_f64()).is_none() {
+                        bail!("traceEvents[{i}] ({name}) missing numeric \
+                               {key}");
+                    }
+                }
+                if ph == "X" {
+                    if obj.get("dur").and_then(|v| v.as_f64()).is_none() {
+                        bail!("traceEvents[{i}] ({name}) slice missing dur");
+                    }
+                    summary.slices += 1;
+                } else {
+                    summary.instants += 1;
+                }
+                let tid = obj.get("tid").and_then(|v| v.as_u64()).unwrap_or(0);
+                if !tids.contains(&tid) {
+                    tids.push(tid);
+                }
+            }
+            other => bail!("traceEvents[{i}] ({name}) has unknown ph {other:?}"),
+        }
+    }
+    summary.tracks = tids.len();
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ring::{pack_module_arg, pack_pair};
+
+    fn sample_groups() -> Vec<(usize, Vec<TraceEvent>)> {
+        let mk = |kind, ts, dur, id, arg| TraceEvent {
+            kind, ts_us: ts, dur_us: dur, kind_id: id, arg,
+        };
+        vec![
+            (0, vec![
+                mk(EventKind::Admit, 10, 0, 1, 4),
+                mk(EventKind::BatchBuild, 20, 5, 0, pack_pair(2, 4)),
+                mk(EventKind::ModuleRun, 21, 3, 0, pack_module_arg(0.2, 2, 0)),
+                mk(EventKind::ModuleSkip, 24, 1, 1, pack_module_arg(0.9, 0, 2)),
+                mk(EventKind::Retire, 40, 30, 1, pack_pair(1, 4)),
+            ]),
+            (1, vec![
+                mk(EventKind::Steal, 15, 0, 0, 4),
+                mk(EventKind::Scatter, 25, 2, 0, pack_pair(3, 1)),
+                mk(EventKind::QueueWait, 12, 8, 2, 0),
+            ]),
+        ]
+    }
+
+    #[test]
+    fn written_trace_validates_and_summarizes() {
+        let dir = std::env::temp_dir().join("lazydit_obs_chrome_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        let summary = write_chrome_trace(&path, &sample_groups()).unwrap();
+        // 8 events + process_name + 2 thread_name metadata
+        assert_eq!(summary.events, 11);
+        assert_eq!(summary.slices, 4, "batch_build/run/skip/scatter");
+        assert_eq!(summary.instants, 4, "admit/retire/steal/queue_wait");
+        assert_eq!(summary.tracks, 2);
+        // independently re-validate what landed on disk
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_chrome_trace(&text).unwrap(), summary);
+        // run vs skip are visually distinct
+        assert!(text.contains("thread_state_running"));
+        assert!(text.contains("\"good\""));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn validator_rejects_malformed_traces() {
+        for (bad, why) in [
+            ("{}", "no traceEvents"),
+            ("[1,2]", "array root"),
+            ("{\"traceEvents\": [42]}", "non-object event"),
+            ("{\"traceEvents\": [{\"ph\":\"X\",\"pid\":0}]}", "no name"),
+            ("{\"traceEvents\": [{\"name\":\"a\",\"ph\":\"Z\",\"pid\":0}]}",
+             "unknown ph"),
+            ("{\"traceEvents\": [{\"name\":\"a\",\"ph\":\"X\",\"pid\":0,\
+              \"tid\":0,\"ts\":1}]}", "slice without dur"),
+            ("not json at all", "unparsable"),
+        ] {
+            assert!(validate_chrome_trace(bad).is_err(), "accepted: {why}");
+        }
+    }
+
+    #[test]
+    fn collect_skips_disabled_tracers() {
+        let on = Tracer::enabled(2, 8);
+        on.record(EventKind::Admit, 1, 1);
+        let groups = collect_tracers(&[Tracer::disabled(), on], 100);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].0, 2);
+        assert_eq!(groups[0].1.len(), 1);
+    }
+}

@@ -1,0 +1,36 @@
+//! The process-wide telemetry epoch: a single monotonic origin shared by
+//! trace events, histograms, and the stderr logger, so timestamps from
+//! different subsystems land on one comparable axis.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The shared monotonic epoch. The first caller pins it; every later
+/// call returns the same instant, so two timestamps taken anywhere in
+/// the process are directly subtractable.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds elapsed since the shared epoch (the unit every trace
+/// event and Chrome-trace `ts` field uses).
+pub fn epoch_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_is_pinned_and_monotonic() {
+        let a = epoch();
+        let t1 = epoch_us();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let t2 = epoch_us();
+        assert_eq!(a, epoch(), "epoch must not move once pinned");
+        assert!(t2 > t1, "epoch_us must be monotonic ({t1} -> {t2})");
+    }
+}

@@ -1,0 +1,252 @@
+//! Log-bucketed latency histogram (HDR-style): a fixed atomic array of
+//! 496 buckets covering every `u64` microsecond value with ≤ 12.5%
+//! relative error, mergeable across replicas and SLO tiers.
+//!
+//! Layout (log-linear, 8 sub-buckets per octave): values 0–7 get exact
+//! unit buckets; a value `v ≥ 8` with most-significant bit `m` lands in
+//! octave `o = m − 2`, sub-bucket `(v >> (m−3)) − 8`, i.e. index
+//! `o·8 + sub`. Bucket `i ≥ 8` spans `[(8+i%8) << (i/8 − 1), …)` with
+//! width `1 << (i/8 − 1)`, so width/lower-bound ≤ 1/8 everywhere.
+//! Recording is two relaxed `fetch_add`s — no locks, no allocation —
+//! which is what lets the serving hot path keep per-SLO histograms live.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Total bucket count: 8 unit buckets + 61 octaves × 8 sub-buckets.
+pub const BUCKETS: usize = 496;
+
+/// A mergeable log-bucketed latency histogram over microsecond values.
+#[derive(Debug)]
+pub struct LatencyHist {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHist {
+    /// An empty histogram (one ~4 KB allocation; recording never
+    /// allocates again).
+    pub fn new() -> LatencyHist {
+        LatencyHist {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a microsecond value (see module docs).
+    pub fn index(v_us: u64) -> usize {
+        if v_us < 8 {
+            return v_us as usize;
+        }
+        let m = 63 - v_us.leading_zeros() as u64; // msb position, >= 3
+        let octave = m - 2;
+        let sub = (v_us >> (m - 3)) - 8; // 0..8
+        (octave * 8 + sub) as usize
+    }
+
+    /// Inclusive lower bound of bucket `i`.
+    pub fn bucket_low(i: usize) -> u64 {
+        if i < 8 {
+            return i as u64;
+        }
+        let (octave, sub) = (i as u64 / 8, i as u64 % 8);
+        (8 + sub) << (octave - 1)
+    }
+
+    /// Representative (midpoint) value of bucket `i` — what quantiles
+    /// report.
+    pub fn bucket_mid(i: usize) -> u64 {
+        if i < 8 {
+            return i as u64;
+        }
+        let width = 1u64 << (i as u64 / 8 - 1);
+        Self::bucket_low(i) + width / 2
+    }
+
+    /// Record one microsecond sample (lock-free, allocation-free).
+    pub fn record_us(&self, v_us: u64) {
+        self.buckets[Self::index(v_us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(v_us, Ordering::Relaxed);
+    }
+
+    /// Record a sample given in milliseconds.
+    pub fn record_ms(&self, ms: f64) {
+        self.record_us((ms.max(0.0) * 1e3) as u64);
+    }
+
+    /// Record a sample given in seconds.
+    pub fn record_secs(&self, s: f64) {
+        self.record_us((s.max(0.0) * 1e6) as u64);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean in microseconds (0.0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Quantile `q ∈ [0, 1]` in microseconds: the midpoint of the bucket
+    /// holding the ceil(q·count)-th smallest sample (0 when empty).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return Self::bucket_mid(i);
+            }
+        }
+        Self::bucket_mid(BUCKETS - 1)
+    }
+
+    /// Quantile in milliseconds (convenience for wire/report surfaces).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        self.quantile_us(q) as f64 / 1e3
+    }
+
+    /// Fold another histogram into this one (bucket-wise add — the merge
+    /// of two histograms is exactly the histogram of the union).
+    pub fn merge_from(&self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = b.load(Ordering::Relaxed);
+            if v != 0 {
+                a.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count
+            .fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us
+            .fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> LatencyHist {
+        LatencyHist::new()
+    }
+}
+
+impl Clone for LatencyHist {
+    fn clone(&self) -> LatencyHist {
+        let h = LatencyHist::new();
+        h.merge_from(self);
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_bounds_agree() {
+        // every probe value lands in a bucket whose [low, next-low)
+        // range contains it, and bucket lows are strictly increasing
+        for i in 1..BUCKETS {
+            assert!(LatencyHist::bucket_low(i) > LatencyHist::bucket_low(i - 1),
+                    "bucket lows must increase at {i}");
+        }
+        let mut probes: Vec<u64> = (0..64).map(|s| 1u64 << s).collect();
+        probes.extend((0..64).map(|s| (1u64 << s) - 1));
+        probes.extend([0, 3, 7, 8, 9, 100, 999, 12_345, u64::MAX]);
+        for v in probes {
+            let i = LatencyHist::index(v);
+            assert!(i < BUCKETS, "index {i} out of range for {v}");
+            assert!(LatencyHist::bucket_low(i) <= v,
+                    "low({i}) > {v}");
+            if i + 1 < BUCKETS {
+                assert!(v < LatencyHist::bucket_low(i + 1),
+                        "{v} belongs to a later bucket than {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_is_bounded() {
+        // the midpoint never misrepresents a sample by more than 12.5%
+        let mut x = 0x9e3779b97f4a7c15u64;
+        for _ in 0..10_000 {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = x % 100_000_000; // up to 100 s in µs
+            let mid = LatencyHist::bucket_mid(LatencyHist::index(v)) as f64;
+            let err = (mid - v as f64).abs() / (v as f64).max(1.0);
+            assert!(err <= 0.125, "value {v} -> mid {mid} (err {err})");
+        }
+    }
+
+    #[test]
+    fn quantiles_track_sorted_samples() {
+        // deterministic sample set; histogram quantiles must agree with
+        // the exact sorted quantiles within the bucket error bound
+        let h = LatencyHist::new();
+        let mut samples: Vec<u64> = Vec::new();
+        let mut x = 42u64;
+        for _ in 0..5000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = 100 + (x >> 33) % 1_000_000; // 100 µs .. ~1 s
+            samples.push(v);
+            h.record_us(v);
+        }
+        samples.sort_unstable();
+        for q in [0.5, 0.95, 0.99] {
+            let rank = ((q * samples.len() as f64).ceil() as usize)
+                .clamp(1, samples.len());
+            let exact = samples[rank - 1] as f64;
+            let est = h.quantile_us(q) as f64;
+            assert!((est - exact).abs() / exact <= 0.125,
+                    "q{q}: est {est} vs exact {exact}");
+        }
+        assert_eq!(h.count(), 5000);
+        let exact_mean =
+            samples.iter().sum::<u64>() as f64 / samples.len() as f64;
+        assert!((h.mean_us() - exact_mean).abs() < 1e-6,
+                "mean is exact (sum is kept outside the buckets)");
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let a = LatencyHist::new();
+        let b = LatencyHist::new();
+        let u = LatencyHist::new();
+        for v in [10u64, 20, 30, 40_000] {
+            a.record_us(v);
+            u.record_us(v);
+        }
+        for v in [15u64, 1_000_000, 7] {
+            b.record_us(v);
+            u.record_us(v);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), u.count());
+        for q in [0.25, 0.5, 0.9, 1.0] {
+            assert_eq!(a.quantile_us(q), u.quantile_us(q), "q{q}");
+        }
+        let c = a.clone();
+        assert_eq!(c.count(), a.count());
+        assert_eq!(c.quantile_us(0.5), a.quantile_us(0.5));
+    }
+
+    #[test]
+    fn empty_hist_reports_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Serving telemetry substrate: one shared monotonic epoch, log-bucketed
+//! mergeable latency histograms, per-replica lock-free trace ring
+//! buffers, and Chrome-trace export (see `docs/OBSERVABILITY.md`).
+//!
+//! Everything here is allocation-free on the hot path: histograms record
+//! into fixed atomic arrays, rings overwrite fixed slots, and a disabled
+//! [`Tracer`] is a `None` check. Readers (STATS/TRACE/export) pay the
+//! allocations instead.
+
+pub mod chrome;
+pub mod epoch;
+pub mod hist;
+pub mod ring;
+
+pub use epoch::{epoch, epoch_us};
+pub use hist::LatencyHist;
+pub use ring::{EventKind, TraceEvent, TraceRing, Tracer};

@@ -1,0 +1,420 @@
+//! Per-replica trace ring buffer: a fixed-capacity, lock-free record of
+//! typed span events, overwritten oldest-first and readable from any
+//! thread without stopping the writer.
+//!
+//! Concurrency model: each ring has exactly ONE writer (the replica
+//! worker thread that owns the engine) and any number of readers (the
+//! STATS/TRACE connection threads, the post-serve Chrome exporter).
+//! Every slot is a tiny seqlock: the writer stamps `seq = 2·h + 1`
+//! (release) before the payload words and `seq = 2·h + 2` (release)
+//! after, where `h` is the event's all-time sequence number. A reader
+//! accepts a slot only when `seq == 2·h + 2` before AND after copying
+//! the words, so torn or overwritten slots are skipped, never surfaced.
+//! The monotone `head` counter is the all-time total: overwriting drops
+//! old *payloads*, never the count.
+
+use crate::obs::epoch::epoch_us;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Typed trace event kinds (the wire/export taxonomy; see
+/// `docs/OBSERVABILITY.md` for the field meaning per kind).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u64)]
+pub enum EventKind {
+    /// A request entered a replica's queue (`id` = request id,
+    /// `arg` = wire steps).
+    Admit = 1,
+    /// Time between enqueue and engine admission (`dur_us` = the wait).
+    QueueWait = 2,
+    /// One engine scheduling round (`arg` = packed (lanes, bucket)).
+    BatchBuild = 3,
+    /// A module slot executed (`id` = slot index, `arg` = packed gate
+    /// value + rows run/skipped).
+    ModuleRun = 4,
+    /// A module slot was lazily skipped (same packing as ModuleRun).
+    ModuleSkip = 5,
+    /// Batch residency churn this round (`arg` = packed
+    /// (rows retained, rows migrated)).
+    Scatter = 6,
+    /// A queued job migrated to this replica via work stealing
+    /// (`id` = request id, `dur_us` = time the job sat queued before
+    /// the theft, `arg` = wire steps).
+    Steal = 7,
+    /// A request finished (`id` = request id, `dur_us` = latency,
+    /// `arg` = packed (slo index, steps)).
+    Retire = 8,
+}
+
+impl EventKind {
+    /// Decode the on-ring representation (None for a corrupt word —
+    /// readers drop such slots).
+    pub fn from_u64(v: u64) -> Option<EventKind> {
+        Some(match v {
+            1 => EventKind::Admit,
+            2 => EventKind::QueueWait,
+            3 => EventKind::BatchBuild,
+            4 => EventKind::ModuleRun,
+            5 => EventKind::ModuleSkip,
+            6 => EventKind::Scatter,
+            7 => EventKind::Steal,
+            8 => EventKind::Retire,
+            _ => return None,
+        })
+    }
+
+    /// Stable snake_case name used in TRACE JSON and Chrome traces.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Admit => "admit",
+            EventKind::QueueWait => "queue_wait",
+            EventKind::BatchBuild => "batch_build",
+            EventKind::ModuleRun => "module_run",
+            EventKind::ModuleSkip => "module_skip",
+            EventKind::Scatter => "scatter",
+            EventKind::Steal => "steal",
+            EventKind::Retire => "retire",
+        }
+    }
+
+    /// True for kinds exported as duration slices (`ph:"X"`); the rest
+    /// become instant events (`ph:"i"`).
+    pub fn is_slice(self) -> bool {
+        matches!(self,
+                 EventKind::BatchBuild | EventKind::ModuleRun
+                 | EventKind::ModuleSkip | EventKind::Scatter)
+    }
+}
+
+/// One decoded trace event (five u64 words on the ring).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// What happened.
+    pub kind: EventKind,
+    /// Start time, µs since the shared epoch.
+    pub ts_us: u64,
+    /// Span duration in µs (0 for instants).
+    pub dur_us: u64,
+    /// Kind-specific identifier (request id or module slot index).
+    pub kind_id: u64,
+    /// Kind-specific packed payload (see the packing helpers).
+    pub arg: u64,
+}
+
+/// Pack a module event payload: gate value (clamped to [0,1], stored in
+/// millionths) plus rows run/skipped (saturated to 16 bits each).
+pub fn pack_module_arg(gate: f64, rows_run: u32, rows_skipped: u32) -> u64 {
+    let g = (gate.clamp(0.0, 1.0) * 1e6) as u64;
+    g | ((rows_run.min(0xFFFF) as u64) << 32)
+        | ((rows_skipped.min(0xFFFF) as u64) << 48)
+}
+
+/// Decode [`pack_module_arg`].
+pub fn unpack_module_arg(arg: u64) -> (f64, u32, u32) {
+    let gate = (arg & 0xFFFF_FFFF) as f64 / 1e6;
+    let rows_run = ((arg >> 32) & 0xFFFF) as u32;
+    let rows_skipped = ((arg >> 48) & 0xFFFF) as u32;
+    (gate, rows_run, rows_skipped)
+}
+
+/// Pack two 32-bit counters into one payload word.
+pub fn pack_pair(a: u32, b: u32) -> u64 {
+    (a as u64) | ((b as u64) << 32)
+}
+
+/// Decode [`pack_pair`].
+pub fn unpack_pair(arg: u64) -> (u32, u32) {
+    ((arg & 0xFFFF_FFFF) as u32, (arg >> 32) as u32)
+}
+
+const WORDS: usize = 5;
+
+struct Slot {
+    seq: AtomicU64,
+    w: [AtomicU64; WORDS],
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            w: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0),
+                AtomicU64::new(0), AtomicU64::new(0)],
+        }
+    }
+}
+
+/// The fixed-capacity ring itself. Built once per replica; shared via
+/// `Arc` between the writer (inside [`Tracer`]) and readers.
+pub struct TraceRing {
+    slots: Box<[Slot]>,
+    mask: usize,
+    head: AtomicU64,
+}
+
+impl TraceRing {
+    /// A ring with capacity `cap` rounded up to a power of two (min 2).
+    pub fn new(cap: usize) -> TraceRing {
+        let cap = cap.max(2).next_power_of_two();
+        TraceRing {
+            slots: (0..cap).map(|_| Slot::empty()).collect(),
+            mask: cap - 1,
+            head: AtomicU64::new(0),
+        }
+    }
+
+    /// Slot capacity (how many recent events survive).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// All-time recorded count — monotone, never reduced by overwrite.
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Record one event. Single-writer only; allocation-free.
+    pub fn record(&self, ev: TraceEvent) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h as usize) & self.mask];
+        // odd seq marks the payload as in-flight for concurrent readers
+        slot.seq.store(2 * h + 1, Ordering::Release);
+        slot.w[0].store(ev.kind as u64, Ordering::Relaxed);
+        slot.w[1].store(ev.ts_us, Ordering::Relaxed);
+        slot.w[2].store(ev.dur_us, Ordering::Relaxed);
+        slot.w[3].store(ev.kind_id, Ordering::Relaxed);
+        slot.w[4].store(ev.arg, Ordering::Relaxed);
+        slot.seq.store(2 * h + 2, Ordering::Release);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Copy out up to `max` of the most recent events, oldest first.
+    /// Slots the writer is overwriting mid-copy are skipped (the seqlock
+    /// check), so the result is always a set of whole events.
+    pub fn snapshot(&self, max: usize) -> Vec<TraceEvent> {
+        let head = self.recorded();
+        let window = (self.slots.len() as u64).min(max as u64);
+        let lo = head.saturating_sub(window);
+        let mut out = Vec::with_capacity((head - lo) as usize);
+        for i in lo..head {
+            let slot = &self.slots[(i as usize) & self.mask];
+            if slot.seq.load(Ordering::Acquire) != 2 * i + 2 {
+                continue; // being overwritten (or torn): not event i anymore
+            }
+            let w: [u64; WORDS] =
+                std::array::from_fn(|j| slot.w[j].load(Ordering::Acquire));
+            if slot.seq.load(Ordering::Acquire) != 2 * i + 2 {
+                continue; // overwritten while copying
+            }
+            if let Some(kind) = EventKind::from_u64(w[0]) {
+                out.push(TraceEvent {
+                    kind,
+                    ts_us: w[1],
+                    dur_us: w[2],
+                    kind_id: w[3],
+                    arg: w[4],
+                });
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Debug for TraceRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRing")
+            .field("capacity", &self.capacity())
+            .field("recorded", &self.recorded())
+            .finish()
+    }
+}
+
+/// The handle engines and replica workers record through. Cloning is
+/// cheap (an `Arc` bump); the disabled form is a `None` and every record
+/// call degrades to one branch — no clock read, no atomics, no
+/// allocation.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    inner: Option<Arc<TraceRing>>,
+    replica: usize,
+}
+
+impl Tracer {
+    /// The no-op tracer (telemetry off — the default everywhere).
+    pub fn disabled() -> Tracer {
+        Tracer::default()
+    }
+
+    /// A live tracer over a fresh ring of `cap` slots for `replica`.
+    pub fn enabled(replica: usize, cap: usize) -> Tracer {
+        Tracer { inner: Some(Arc::new(TraceRing::new(cap))), replica }
+    }
+
+    /// Whether events are being collected.
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The replica this tracer stamps (Chrome track / TRACE grouping).
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// The underlying ring, for readers (None when disabled).
+    pub fn ring(&self) -> Option<&Arc<TraceRing>> {
+        self.inner.as_ref()
+    }
+
+    /// Epoch-µs now — or 0 without touching the clock when disabled, so
+    /// hot paths can bracket spans with no disabled-mode overhead.
+    pub fn now_us(&self) -> u64 {
+        if self.inner.is_some() { epoch_us() } else { 0 }
+    }
+
+    /// Record an instant event stamped now.
+    pub fn record(&self, kind: EventKind, kind_id: u64, arg: u64) {
+        if let Some(ring) = &self.inner {
+            ring.record(TraceEvent {
+                kind, ts_us: epoch_us(), dur_us: 0, kind_id, arg,
+            });
+        }
+    }
+
+    /// Record a span that started at `start_us` (from [`Tracer::now_us`])
+    /// and ends now.
+    pub fn record_span(&self, kind: EventKind, start_us: u64, kind_id: u64,
+                       arg: u64) {
+        if let Some(ring) = &self.inner {
+            let now = epoch_us();
+            ring.record(TraceEvent {
+                kind,
+                ts_us: start_us,
+                dur_us: now.saturating_sub(start_us),
+                kind_id,
+                arg,
+            });
+        }
+    }
+
+    /// Record a fully-specified event (timestamps already in hand).
+    pub fn record_at(&self, ev: TraceEvent) {
+        if let Some(ring) = &self.inner {
+            ring.record(ev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, ts: u64) -> TraceEvent {
+        TraceEvent { kind, ts_us: ts, dur_us: 1, kind_id: ts, arg: 0 }
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_everything() {
+        // capacity rounds to 8; record 20 → the last 8 survive, but the
+        // all-time counter says 20 (overwrite drops payloads, not counts)
+        let r = TraceRing::new(5);
+        assert_eq!(r.capacity(), 8);
+        for i in 0..20u64 {
+            r.record(ev(EventKind::Admit, i));
+        }
+        assert_eq!(r.recorded(), 20);
+        let snap = r.snapshot(usize::MAX);
+        assert_eq!(snap.len(), 8);
+        let ts: Vec<u64> = snap.iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, (12..20).collect::<Vec<u64>>(),
+                   "oldest dropped, newest kept, order preserved");
+        // a bounded snapshot returns the newest suffix
+        let tail = r.snapshot(3);
+        assert_eq!(tail.iter().map(|e| e.ts_us).collect::<Vec<_>>(),
+                   vec![17, 18, 19]);
+    }
+
+    #[test]
+    fn events_roundtrip_all_fields() {
+        let r = TraceRing::new(4);
+        let e = TraceEvent {
+            kind: EventKind::ModuleSkip,
+            ts_us: 123,
+            dur_us: 45,
+            kind_id: 6,
+            arg: pack_module_arg(0.75, 3, 5),
+        };
+        r.record(e);
+        let snap = r.snapshot(16);
+        assert_eq!(snap, vec![e]);
+        let (gate, run, skip) = unpack_module_arg(snap[0].arg);
+        assert!((gate - 0.75).abs() < 1e-5);
+        assert_eq!((run, skip), (3, 5));
+    }
+
+    #[test]
+    fn pack_helpers_roundtrip() {
+        assert_eq!(unpack_pair(pack_pair(7, 9)), (7, 9));
+        assert_eq!(unpack_pair(pack_pair(u32::MAX, 0)), (u32::MAX, 0));
+        let (g, r, s) = unpack_module_arg(pack_module_arg(1.5, 70_000, 2));
+        assert_eq!(g, 1.0, "gate clamps to [0,1]");
+        assert_eq!((r, s), (0xFFFF, 2), "row counts saturate at 16 bits");
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        assert_eq!(t.now_us(), 0, "no clock read when disabled");
+        t.record(EventKind::Admit, 1, 2);
+        t.record_span(EventKind::BatchBuild, 0, 0, 0);
+        assert!(t.ring().is_none());
+    }
+
+    #[test]
+    fn enabled_tracer_feeds_its_ring() {
+        let t = Tracer::enabled(3, 16);
+        assert_eq!(t.replica(), 3);
+        t.record(EventKind::Admit, 11, 4);
+        let t0 = t.now_us();
+        t.record_span(EventKind::BatchBuild, t0, 0, pack_pair(2, 4));
+        let ring = t.ring().unwrap();
+        assert_eq!(ring.recorded(), 2);
+        let snap = ring.snapshot(16);
+        assert_eq!(snap[0].kind, EventKind::Admit);
+        assert_eq!(snap[1].kind, EventKind::BatchBuild);
+        assert!(snap[1].ts_us >= snap[0].ts_us, "shared epoch orders events");
+    }
+
+    #[test]
+    fn concurrent_reader_sees_only_whole_events() {
+        // hammer the ring from one writer while a reader snapshots: every
+        // surfaced event must be internally consistent (we encode a
+        // checksum relation between the words)
+        let ring = Arc::new(TraceRing::new(64));
+        let w = ring.clone();
+        let writer = std::thread::spawn(move || {
+            for i in 0..50_000u64 {
+                w.record(TraceEvent {
+                    kind: EventKind::Retire,
+                    ts_us: i,
+                    dur_us: i.wrapping_mul(3),
+                    kind_id: i ^ 0xABCD,
+                    arg: i.wrapping_add(7),
+                });
+            }
+        });
+        let mut seen = 0u64;
+        for _ in 0..200 {
+            for e in ring.snapshot(64) {
+                let i = e.ts_us;
+                assert_eq!(e.dur_us, i.wrapping_mul(3), "torn event surfaced");
+                assert_eq!(e.kind_id, i ^ 0xABCD);
+                assert_eq!(e.arg, i.wrapping_add(7));
+                seen += 1;
+            }
+        }
+        writer.join().unwrap();
+        assert_eq!(ring.recorded(), 50_000);
+        assert!(seen > 0, "reader observed events mid-write");
+    }
+}

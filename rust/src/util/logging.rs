@@ -1,11 +1,12 @@
 //! Leveled stderr logger backing the `log` crate facade.
+//!
+//! Timestamps are relative to the shared telemetry epoch
+//! ([`crate::obs::epoch`]), so log lines and trace-ring events
+//! (docs/OBSERVABILITY.md) share one time base and can be correlated.
 
 use log::{Level, LevelFilter, Metadata, Record};
-use std::time::Instant;
 
-struct StderrLogger {
-    start: Instant,
-}
+struct StderrLogger;
 
 impl log::Log for StderrLogger {
     fn enabled(&self, metadata: &Metadata) -> bool {
@@ -16,7 +17,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = self.start.elapsed().as_secs_f64();
+        let t = crate::obs::epoch_us() as f64 / 1e6;
         let lvl = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -30,20 +31,41 @@ impl log::Log for StderrLogger {
     fn flush(&self) {}
 }
 
+/// Parse a `LAZYDIT_LOG` value; `None` means unrecognized.
+fn parse_level(v: &str) -> Option<LevelFilter> {
+    match v {
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
 /// Install the logger once; level from `LAZYDIT_LOG` (error|warn|info|debug|trace).
+///
+/// An unrecognized `LAZYDIT_LOG` value falls back to `info` and warns
+/// once, instead of being silently swallowed.
 pub fn init() {
     static ONCE: std::sync::Once = std::sync::Once::new();
     ONCE.call_once(|| {
-        let level = match std::env::var("LAZYDIT_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
+        let raw = std::env::var("LAZYDIT_LOG").ok();
+        let (level, bad) = match raw.as_deref() {
+            None => (LevelFilter::Info, None),
+            Some(v) => match parse_level(v) {
+                Some(l) => (l, None),
+                None => (LevelFilter::Info, Some(v.to_string())),
+            },
         };
-        let logger = Box::new(StderrLogger { start: Instant::now() });
-        if log::set_boxed_logger(logger).is_ok() {
+        if log::set_boxed_logger(Box::new(StderrLogger)).is_ok() {
             log::set_max_level(level);
+            if let Some(v) = bad {
+                log::warn!(
+                    "unrecognized LAZYDIT_LOG={v:?} (want \
+                     error|warn|info|debug|trace); defaulting to info"
+                );
+            }
         }
     });
 }
@@ -55,5 +77,14 @@ mod tests {
         super::init();
         super::init();
         log::info!("logging smoke");
+    }
+
+    #[test]
+    fn level_parsing() {
+        use log::LevelFilter;
+        assert_eq!(super::parse_level("info"), Some(LevelFilter::Info));
+        assert_eq!(super::parse_level("trace"), Some(LevelFilter::Trace));
+        assert_eq!(super::parse_level("verbose"), None);
+        assert_eq!(super::parse_level(""), None);
     }
 }

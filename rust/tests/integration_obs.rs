@@ -1,0 +1,252 @@
+//! Observability integration: the STATS/TRACE verbs end-to-end over a
+//! traced synthetic pool (per-tier histogram quantiles, ring-event
+//! payloads, overwrite accounting) and the Chrome-trace export path
+//! (docs/OBSERVABILITY.md).
+
+use lazydit::config::RoutePolicy;
+use lazydit::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
+use lazydit::coordinator::pool::sim::{SimEngine, SimSpec};
+use lazydit::coordinator::pool::Router;
+use lazydit::coordinator::request::Request;
+use lazydit::coordinator::server;
+use lazydit::obs::chrome::{collect_tracers, validate_chrome_trace,
+                           write_chrome_trace};
+use lazydit::obs::Tracer;
+use lazydit::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn sim_spec() -> SimSpec {
+    SimSpec { lazy_pct: 50, work_per_module: 500, ..SimSpec::default() }
+}
+
+/// One traced replica per entry in `ring_caps`, default (best-effort)
+/// tier, jsq routing. Returns the pool plus the tracer clones that
+/// `serve --trace-out` would hold for shutdown export.
+fn spawn_traced_pool(ring_caps: &[usize]) -> (Router, Vec<Tracer>) {
+    let mut tracers = Vec::with_capacity(ring_caps.len());
+    let handles: Vec<ReplicaHandle> = ring_caps
+        .iter()
+        .enumerate()
+        .map(|(i, &cap)| {
+            let tracer = Tracer::enabled(i, cap);
+            tracers.push(tracer.clone());
+            ReplicaHandle::spawn_traced(i, 64, SimEngine::factory(sim_spec()),
+                                        None, ReplicaTier::default(), tracer)
+                .unwrap()
+        })
+        .collect();
+    (Router::new(handles, RoutePolicy::Jsq, 64), tracers)
+}
+
+fn connect(addr: &str) -> TcpStream {
+    for _ in 0..900 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            return s;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    panic!("server did not come up on {addr}");
+}
+
+fn quantile_block<'a>(parent: &'a Json, key: &str) -> &'a Json {
+    let block = parent.get(key)
+        .unwrap_or_else(|| panic!("missing {key} block"));
+    for field in ["count", "mean_ms", "p50", "p95", "p99"] {
+        assert!(block.get(field).and_then(|v| v.as_f64()).is_some(),
+                "{key} block missing numeric {field}");
+    }
+    block
+}
+
+#[test]
+fn stats_and_trace_roundtrip_over_traced_pool() {
+    let (router, _tracers) = spawn_traced_pool(&[4096, 4096]);
+    let addr = "127.0.0.1:18494";
+    let total = 6usize;
+    let server_thread = std::thread::spawn(move || {
+        server::serve_pool(router, addr, total).unwrap()
+    });
+
+    let stream = connect(addr);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    let mut send = |line: &str| {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(resp.trim()).expect("response json")
+    };
+
+    // drive all but one request to completion, cycling SLO classes so
+    // more than one tier histogram fills (a best-effort pool serves all
+    // three classes — latency/throughput land as spill)
+    let classes = ["besteffort", "latency", "throughput"];
+    for i in 0..total - 1 {
+        let resp = send(&format!(
+            "{{\"label\": {}, \"steps\": 4, \"seed\": {i}, \
+             \"cfg_scale\": 1.0, \"slo\": \"{}\"}}",
+            i % 10, classes[i % classes.len()]));
+        assert!(resp.get("error").is_none(), "request {i} errored: {resp}");
+        assert!(resp.req("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    // STATS: per-replica latency_ms + pool-wide per-tier quantiles from
+    // the merged histograms. Latency/Retire land in the gauges before
+    // the response is sent, so counters cover every response read above.
+    let stats = send("STATS");
+    let replicas = stats.req("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(replicas.len(), 2);
+    for r in replicas {
+        quantile_block(r, "latency_ms");
+    }
+    let tiers = stats.req("tiers").unwrap();
+    let mut tier_count = 0.0;
+    for class in classes {
+        let block = quantile_block(tiers, class);
+        let count = block.req("count").unwrap().as_f64().unwrap();
+        tier_count += count;
+        if count > 0.0 {
+            assert!(block.req("p99").unwrap().as_f64().unwrap()
+                    >= block.req("p50").unwrap().as_f64().unwrap(),
+                    "{class}: p99 below p50");
+            assert!(block.req("p50").unwrap().as_f64().unwrap() > 0.0,
+                    "{class}: served but zero p50");
+        }
+    }
+    let completed = stats.req("completed").unwrap().as_f64().unwrap();
+    assert_eq!(tier_count, completed,
+               "per-tier histogram counts must partition completions");
+    assert!(completed >= (total - 1) as f64);
+
+    // TRACE: enabled, and every event kind of a request's lifecycle is
+    // present with the typed payload fields (rings are far larger than
+    // the event volume here, so nothing has been overwritten and the
+    // all-time count must equal the surviving events exactly)
+    let trace = send("TRACE");
+    assert_eq!(trace.req("enabled").unwrap(), &Json::Bool(true));
+    let treps = trace.req("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(treps.len(), 2);
+    let mut kinds: Vec<String> = Vec::new();
+    for r in treps {
+        let recorded = r.req("recorded").unwrap().as_u64().unwrap();
+        let events = r.req("events").unwrap().as_arr().unwrap();
+        assert_eq!(recorded, events.len() as u64,
+                   "unwrapped ring must surface its full history");
+        for ev in events {
+            for field in ["ts_us", "dur_us", "id", "arg"] {
+                assert!(ev.req(field).unwrap().as_f64().is_some());
+            }
+            kinds.push(ev.req("kind").unwrap().as_str().unwrap().to_string());
+        }
+    }
+    for expected in ["admit", "batch_build", "retire"] {
+        assert!(kinds.iter().any(|k| k == expected),
+                "no {expected} event in TRACE (got {kinds:?})");
+    }
+    assert!(kinds.iter().any(|k| k == "module_run" || k == "module_skip"),
+            "no per-module events in TRACE");
+
+    // final request releases the server's completion bound
+    let resp = send(
+        "{\"label\": 9, \"steps\": 4, \"seed\": 99, \"cfg_scale\": 1.0, \
+         \"slo\": \"besteffort\"}");
+    assert!(resp.get("error").is_none());
+    let report = server_thread.join().unwrap();
+    assert!(report.completed() >= total);
+}
+
+fn drive(router: &Router, requests: usize) {
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let (tx, rx) = std::sync::mpsc::channel();
+        assert!(router.dispatch(Request::new(i as u64, i % 10, 4,
+                                             1000 + i as u64),
+                                tx));
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        rx.recv().expect("response");
+    }
+}
+
+#[test]
+fn wrapped_ring_keeps_counting_but_bounds_events() {
+    // a request's lifecycle is dozens of events; a tiny ring must wrap
+    let small = 8usize;
+    let (router, _tracers) = spawn_traced_pool(&[small]);
+    drive(&router, 3);
+    let trace = Json::parse(&router.trace_json(512)).unwrap();
+    let rep = &trace.req("replicas").unwrap().as_arr().unwrap()[0];
+    let recorded = rep.req("recorded").unwrap().as_u64().unwrap();
+    let events = rep.req("events").unwrap().as_arr().unwrap();
+    assert!(recorded > small as u64, "workload too small to wrap the ring");
+    assert!(events.len() <= small,
+            "wrapped ring surfaced more events than its capacity");
+    assert!(recorded > events.len() as u64,
+            "overwrite must drop payloads but never the count");
+    // the survivors are the newest window: the final retire is in it
+    let kinds: Vec<&str> = events
+        .iter()
+        .map(|e| e.req("kind").unwrap().as_str().unwrap())
+        .collect();
+    assert_eq!(kinds.last().copied(), Some("retire"));
+    // timestamps stay monotone across the wrap
+    let ts: Vec<f64> = events
+        .iter()
+        .map(|e| e.req("ts_us").unwrap().as_f64().unwrap())
+        .collect();
+    assert!(ts.windows(2).all(|w| w[0] <= w[1]),
+            "snapshot must come back oldest-first");
+    router.shutdown();
+}
+
+#[test]
+fn traced_pool_exports_a_valid_chrome_trace() {
+    // no TCP here: drive the router directly, then export the rings the
+    // way `serve --trace-out` does at shutdown
+    let (router, tracers) = spawn_traced_pool(&[4096, 4096]);
+    drive(&router, 4);
+    router.shutdown();
+
+    let groups = collect_tracers(&tracers, 4096);
+    assert_eq!(groups.len(), 2);
+    let dir = std::env::temp_dir().join("lazydit_obs_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    let summary = write_chrome_trace(&path, &groups).unwrap();
+    assert!(summary.slices > 0, "no duration slices recorded");
+    assert!(summary.instants > 0, "no instant events recorded");
+    assert!(summary.tracks >= 1);
+
+    // what landed on disk re-validates independently and carries the
+    // per-replica track names and the retire instants
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(validate_chrome_trace(&text).unwrap(), summary);
+    assert!(text.contains("\"thread_name\""));
+    assert!(text.contains("\"retire\""));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn untraced_pool_reports_trace_disabled() {
+    let handles: Vec<ReplicaHandle> = (0..2)
+        .map(|i| {
+            ReplicaHandle::spawn_tiered(i, 64, SimEngine::factory(sim_spec()),
+                                        None, ReplicaTier::default())
+                .unwrap()
+        })
+        .collect();
+    let router = Router::new(handles, RoutePolicy::Jsq, 64);
+    let trace = Json::parse(&router.trace_json(64)).unwrap();
+    assert_eq!(trace.req("enabled").unwrap(), &Json::Bool(false));
+    for r in trace.req("replicas").unwrap().as_arr().unwrap() {
+        assert_eq!(r.req("recorded").unwrap().as_u64().unwrap(), 0);
+        assert!(r.req("events").unwrap().as_arr().unwrap().is_empty());
+    }
+    // collecting from disabled tracers yields no Chrome groups either
+    assert!(collect_tracers(&[Tracer::disabled()], 64).is_empty());
+    router.shutdown();
+}

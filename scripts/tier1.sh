@@ -6,6 +6,7 @@
 #   FMT_STRICT=0 scripts/tier1.sh   # demote the fmt check to advisory
 #   DOC_STRICT=0 scripts/tier1.sh   # demote the doc gate to advisory
 #   BENCH_SMOKE=0 scripts/tier1.sh  # skip the bench build + smoke run
+#   SERVE_SMOKE=0 scripts/tier1.sh  # skip the serve telemetry smoke
 #
 # The fmt check is strict by default (ROADMAP "format the tree" item);
 # set FMT_STRICT=0 to demote it to advisory while iterating locally.
@@ -76,6 +77,27 @@ if command -v cargo >/dev/null 2>&1; then
     fi
 else
     echo "tier1: cargo unavailable, skipping bench smoke"
+fi
+
+echo "== tier1: serve telemetry smoke (strict unless SERVE_SMOKE=0)"
+# End-to-end observability gate: a synthetic 2-replica pool self-drives
+# a handful of requests with the trace ring armed, writes a Chrome
+# trace at shutdown, and `lazydit trace-check` re-validates the file
+# structurally (pure Rust — no jq dependency). docs/OBSERVABILITY.md
+# documents the trace format and the STATS/TRACE verbs this exercises.
+if command -v cargo >/dev/null 2>&1; then
+    if [ "${SERVE_SMOKE:-1}" = "1" ]; then
+        rm -f trace_serve.json
+        ./target/release/lazydit serve --synthetic --replicas 2 \
+            --self-drive 6 --addr 127.0.0.1:8491 --sim-work 2000 \
+            --trace-out trace_serve.json
+        ./target/release/lazydit trace-check trace_serve.json
+        echo "tier1: serve telemetry smoke OK (trace_serve.json validated)"
+    else
+        echo "tier1: serve telemetry smoke skipped (SERVE_SMOKE=0)"
+    fi
+else
+    echo "tier1: cargo unavailable, skipping serve telemetry smoke"
 fi
 
 echo "== tier1: docs link check (relative links in *.md)"
