@@ -196,6 +196,111 @@ fn skewed_gamma_scenario() -> (f64, f64) {
     (p95_base, p95_steal)
 }
 
+/// Mid-sweep tier retag: a throughput-only pool is shedding latency
+/// traffic, so one bulk replica is retagged `latency` while its
+/// trajectories are mid-flight. The retag drains those residents to the
+/// remaining throughput siblings as portable snapshots (drain-by-
+/// migration) and the pool starts serving latency — with ZERO stranded
+/// requests: everything admitted before, during, and after the retag
+/// completes exactly once. Returns the `migration` section of
+/// `BENCH_serve.json`.
+fn retag_scenario() -> Json {
+    const BULK: usize = 48;
+    const LAT: usize = 6;
+    println!("mid-sweep retag scenario (thr:b8x3 → retag replica 0 to \
+              latency under load):");
+    let rb = Rebalancer::new(STEAL_WINDOW);
+    let handles: Vec<ReplicaHandle> = (0..3)
+        .map(|i| {
+            ReplicaHandle::spawn_tiered(
+                i, 4096, SimEngine::factory(spec()), Some(rb.clone()),
+                ReplicaTier {
+                    steal_window: rb.admit_window(),
+                    ..ReplicaTier::new(Slo::Throughput, 8)
+                })
+            .unwrap()
+        })
+        .collect();
+    let router =
+        Router::with_rebalancer(handles, RoutePolicy::Jsq, 4096, Some(rb));
+
+    // the latency demand the retag answers: unservable today
+    let (tx, rx) = mpsc::channel();
+    let mut probe = Request::new(0, 1, STEPS, 90_000).with_slo(Slo::Latency);
+    probe.cfg_scale = 1.0;
+    assert!(!router.dispatch(probe, tx),
+            "a throughput-only pool must shed latency traffic");
+    drop(rx);
+    assert_eq!(router.shed_by_slo()[Slo::Latency.index()], 1);
+
+    let mut rxs = Vec::with_capacity(BULK + LAT);
+    for i in 0..BULK {
+        let (tx, rx) = mpsc::channel();
+        let req = Request::new(0, i % 10, STEPS, 91_000 + i as u64)
+            .with_slo(Slo::Throughput);
+        assert!(router.dispatch(req, tx), "bulk dispatch must admit");
+        rxs.push(rx);
+    }
+    // let trajectories get resident, then retag; re-arm until the drain
+    // sweep actually catches one mid-flight (an empty engine migrates
+    // nothing)
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    let mut tries = 0u32;
+    loop {
+        router.retag_replica(0, Slo::Latency);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        tries += 1;
+        if router.total_migrated() > 0 || tries > 500 {
+            break;
+        }
+    }
+    // the pool now serves the class it was shedding
+    for i in 0..LAT {
+        let (tx, rx) = mpsc::channel();
+        let mut req = Request::new(0, i % 10, STEPS, 92_000 + i as u64)
+            .with_slo(Slo::Latency);
+        req.cfg_scale = 1.0;
+        assert!(router.dispatch(req, tx),
+                "post-retag latency dispatch must admit");
+        rxs.push(rx);
+    }
+    let mut stranded = 0usize;
+    for rx in rxs {
+        if rx.recv().is_err() {
+            stranded += 1;
+        }
+    }
+    let report = router.shutdown();
+    assert_eq!(stranded, 0, "a mid-sweep retag must strand zero requests");
+    assert_eq!(report.completed(), BULK + LAT);
+    assert_eq!(router.total_forfeited(), 0);
+    assert!(report.total_migrated_out() >= 1,
+            "the retag drain must relocate at least one resident");
+    assert_eq!(report.total_migrated_out(), report.total_migrated_in(),
+               "every evicted snapshot resumed exactly once");
+    assert!(report.total_resumed() >= 1);
+    assert_eq!(
+        report.replicas[0].completed_by_slo[Slo::Latency.index()],
+        LAT as u64,
+        "all post-retag latency traffic lands on the retagged replica");
+    println!(
+        "  retag drained {} resident(s) ({} steps saved), {} resumed, \
+         0 stranded; replica 0 then served {LAT} latency request(s)",
+        report.total_migrated_out(),
+        report.total_resume_steps_saved(),
+        report.total_resumed());
+    Json::obj(vec![
+        ("retagged_replicas", Json::num(1.0)),
+        ("migrated_out", Json::num(report.total_migrated_out() as f64)),
+        ("migrated_in", Json::num(report.total_migrated_in() as f64)),
+        ("resumed", Json::num(report.total_resumed() as f64)),
+        ("resume_steps_saved",
+         Json::num(report.total_resume_steps_saved() as f64)),
+        ("stranded", Json::num(stranded as f64)),
+        ("latency_served_after_retag", Json::num(LAT as f64)),
+    ])
+}
+
 // ---------------------------------------------------------- open loop
 
 /// Requests per open-loop point (per route × offered-load cell).
@@ -474,6 +579,9 @@ fn main() {
     let (p95_base, p95_steal) = skewed_gamma_scenario();
 
     println!();
+    let migration = retag_scenario();
+
+    println!();
     let open_loop_points = open_loop_sweep();
 
     println!();
@@ -508,6 +616,7 @@ fn main() {
         ("steps", Json::num(STEPS as f64)),
         ("work_per_module", Json::num(WORK as f64)),
         ("open_loop", open_loop_points),
+        ("migration", migration),
         ("trace_overhead", Json::obj(vec![
             ("replicas", Json::num(widest as f64)),
             ("ring_events", Json::num(TRACE_RING as f64)),

@@ -197,6 +197,51 @@ fn arena_micro(iters: usize) -> (f64, f64) {
     (fresh_us, pooled_us)
 }
 
+/// Micro: the portable-snapshot path a migration rides — evict a
+/// mid-flight trajectory to a [`TrajectorySnapshot`], the versioned wire
+/// encode/decode, and the full evict→admit cycle on the engine.
+/// Returns (cycle_us, encode_us, decode_us, snapshot_bytes).
+///
+/// [`TrajectorySnapshot`]: lazydit::coordinator::request::TrajectorySnapshot
+fn snapshot_micro(iters: usize) -> (f64, f64, f64, usize) {
+    use lazydit::coordinator::request::TrajectorySnapshot;
+    let mut e = SimEngine::new(SimSpec {
+        lazy_pct: 50,
+        work_per_module: 50,
+        policy: "snap-micro".into(),
+        ..SimSpec::default()
+    });
+    let mut id = e.submit(Request::new(0, 3, 16, 4242));
+    for _ in 0..4 {
+        e.step_round().expect("sim step");
+    }
+
+    let snap = e.snapshot_request(id).expect("boundary snapshot");
+    let bytes = snap.encode();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        black_box(snap.encode());
+    }
+    let encode_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        black_box(TrajectorySnapshot::decode(&bytes).expect("decode"));
+    }
+    let decode_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+
+    // the engine-side cycle: leave and rejoin the active set at the
+    // same boundary each iteration (residency returns to steady state)
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let s = e.evict_to_snapshot(id).expect("evict");
+        id = e.admit_snapshot(black_box(s));
+    }
+    let cycle_us = t0.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    assert_eq!(e.active_count(), 1, "cycle must preserve residency");
+    (cycle_us, encode_us, decode_us, bytes.len())
+}
+
 fn main() {
     let smoke = std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
     let cfg = if smoke {
@@ -278,6 +323,11 @@ fn main() {
     let (fresh, pooled) = arena_micro(cfg.micro_iters);
     println!("  arena: fresh alloc {fresh:.2}µs → pooled {pooled:.2}µs \
               per [8,16,64] buffer");
+    let (snap_cycle, snap_enc, snap_dec, snap_bytes) =
+        snapshot_micro(cfg.micro_iters);
+    println!("  snapshot: evict→admit {snap_cycle:.2}µs, wire encode \
+              {snap_enc:.2}µs / decode {snap_dec:.2}µs ({snap_bytes} B \
+              mid-flight)");
 
     let json = Json::obj(vec![
         ("bench", Json::str("step_hot_path")),
@@ -319,6 +369,14 @@ fn main() {
         ("arena_us", Json::obj(vec![
             ("fresh_alloc", Json::num(fresh)),
             ("pooled", Json::num(pooled)),
+        ])),
+        // the migration tax: what one evict→admit hop and the wire
+        // codec cost a mid-flight trajectory (docs/SERVING.md)
+        ("snapshot_us", Json::obj(vec![
+            ("evict_admit", Json::num(snap_cycle)),
+            ("encode", Json::num(snap_enc)),
+            ("decode", Json::num(snap_dec)),
+            ("bytes", Json::num(snap_bytes as f64)),
         ])),
     ]);
     std::fs::write("BENCH_step.json", format!("{json}\n"))

@@ -37,7 +37,7 @@ use crate::coordinator::engine::{Engine, EngineOptions};
 use crate::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
 use crate::coordinator::pool::sim::{SimEngine, SimSpec};
 use crate::coordinator::pool::{EngineFactory, PoolEngine, Rebalancer, Router};
-use crate::coordinator::server::serve_pool;
+use crate::coordinator::server::serve_pool_shared;
 use crate::util::argparse::{Args, OptSpec};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -64,6 +64,7 @@ pub fn specs() -> Vec<OptSpec> {
         OptSpec { name: "trace-out", help: "write a Chrome-trace JSON here at shutdown (arms telemetry)", default: None, is_flag: false },
         OptSpec { name: "trace-ring", help: "per-replica trace ring capacity (events)", default: Some("4096"), is_flag: false },
         OptSpec { name: "self-drive", help: "generate N requests from an internal client (smoke runs)", default: Some("0"), is_flag: false },
+        OptSpec { name: "drain-after", help: "after N completions, drain replica 0 by migration until one trajectory moves (0 = never; needs --steal on and >= 2 replicas)", default: Some("0"), is_flag: false },
         OptSpec { name: "sim-work", help: "synthetic spin per executed module", default: Some("4000"), is_flag: false },
         OptSpec { name: "train-steps", help: "gate training steps if needed", default: Some("200"), is_flag: false },
         OptSpec { name: "train-lr", help: "gate training lr", default: Some("5e-3"), is_flag: false },
@@ -412,6 +413,11 @@ pub fn run(a: Args) -> Result<()> {
     // so set it to the widest tier — a future mixed pool errs toward
     // less steal-thrash rather than a silent window of 1.
     let steal = parse_steal(&a.get_str("steal", "off"))?;
+    let drain_after = a.get_usize("drain-after", 0)?;
+    if drain_after > 0 && (!steal || replicas < 2) {
+        bail!("--drain-after needs --steal on and at least 2 replicas \
+               (a drained resident must have a sibling to migrate to)");
+    }
     let rebalancer = if steal && replicas > 1 {
         let widest = tiers.iter().map(|t| t.steal_window).max().unwrap_or(8);
         Some(Rebalancer::new(widest))
@@ -457,11 +463,33 @@ pub fn run(a: Args) -> Result<()> {
     } else {
         None
     };
-    let report = serve_pool(router, &addr, max_requests)?;
+    let router = std::sync::Arc::new(router);
+    let report =
+        serve_pool_shared(router.clone(), &addr, max_requests, drain_after)?;
     if let Some(d) = driver {
         let _ = d.join();
     }
     println!("{}", report.render());
+    // machine-greppable migration + ledger lines for the smoke gates:
+    // every dispatched request must be accounted for — completed, shed
+    // at admission, or forfeited to a panic — even across migrations
+    let (dispatched, completed, shed, forfeited) = (
+        router.total_dispatched(),
+        report.completed() as u64,
+        report.shed,
+        router.total_forfeited(),
+    );
+    let balanced = dispatched == completed + shed + forfeited;
+    println!("migration: out={} in={} resumed={} steps_saved={}",
+             report.total_migrated_out(), report.total_migrated_in(),
+             report.total_resumed(), report.total_resume_steps_saved());
+    println!("conservation: dispatched={dispatched} completed={completed} \
+              shed={shed} forfeited={forfeited} ok={balanced}");
+    if !balanced {
+        bail!("conservation violated: {dispatched} dispatched but \
+               {completed} completed + {shed} shed + {forfeited} \
+               forfeited — a request was stranded");
+    }
     if let Some(path) = &trace_out {
         let groups = crate::obs::chrome::collect_tracers(
             &tracers, trace_ring);

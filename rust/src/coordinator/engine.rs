@@ -6,7 +6,7 @@ use crate::config::ServeConfig;
 use crate::coordinator::batcher::{plan_cap, plan_round, stabilize_plan,
                                   BatchPlan};
 use crate::coordinator::request::{ActiveRequest, LaneCaches, Request,
-                                  RequestResult};
+                                  RequestResult, TrajectorySnapshot};
 use crate::coordinator::stats::{LayerStats, ServeStats};
 use crate::model::checkpoint::Checkpoint;
 use crate::model::runner::{BatchCaches, DecisionCfg, ModelRunner, StepOutcome};
@@ -244,6 +244,32 @@ fn sync_batch(state: &mut Option<BatchState>, plan: &BatchPlan,
     (retained - carried, migrated + carried)
 }
 
+/// Detach one request from the engine at the current step boundary:
+/// flush its batch-resident rows back into its lane stores (the same
+/// scatter semantics as [`flush_batch`]), vacate the rows, and remove
+/// it from the active set. The returned [`ActiveRequest`] is fully
+/// self-contained — packaging it as a [`TrajectorySnapshot`] and
+/// resuming anywhere is bit-identical to never having evicted (see the
+/// `evicted_trajectory_resumes_bit_identically` propcheck). Free
+/// function so tests can drive it against simulated batch states.
+fn detach_request(state: &mut Option<BatchState>,
+                  active: &mut Vec<ActiveRequest>, id: u64,
+                  null_y: i32) -> Option<ActiveRequest> {
+    let idx = active.iter().position(|a| a.req.id == id)?;
+    if let Some(st) = state.as_mut() {
+        for row in 0..st.bucket {
+            if let Some((rid, lane)) = st.rows[row] {
+                if rid == id {
+                    scatter_row(&st.caches, row,
+                                &mut active[idx].caches[lane]);
+                }
+            }
+        }
+        st.clear_request(id, null_y);
+    }
+    Some(active.remove(idx))
+}
+
 /// Scatter every resident row back to its lane store and drop the
 /// persistent batch (profiling rounds diff the lane stores, so they
 /// need them current; also releases the buffers to the arena).
@@ -410,6 +436,66 @@ impl Engine {
 
     pub fn active_count(&self) -> usize {
         self.active.len()
+    }
+
+    /// Ids of every active trajectory, in admission order.
+    pub fn active_ids(&self) -> Vec<u64> {
+        self.active.iter().map(|a| a.req.id).collect()
+    }
+
+    /// Evict an active trajectory at the current step boundary into a
+    /// portable snapshot: batch residency flushes to the lane stores
+    /// first ([`detach_request`]), so the snapshot's caches are current
+    /// and resuming it — here or on a sibling replica — is
+    /// bit-identical to an uninterrupted run. `None` for unknown ids.
+    pub fn evict_to_snapshot(&mut self, id: u64)
+                             -> Option<TrajectorySnapshot> {
+        let null_y = self.runner.cfg.model.null_label() as i32;
+        let ar = detach_request(&mut self.batch, &mut self.active, id,
+                                null_y)?;
+        Some(ar.into_snapshot())
+    }
+
+    /// Admit a previously evicted trajectory, resuming at its cursor.
+    /// Snapshot ids are pool-unique and kept; `next_id` advances past
+    /// them so later fresh submissions cannot collide.
+    pub fn admit_snapshot(&mut self, snap: TrajectorySnapshot) -> u64 {
+        let id = snap.req.id;
+        self.next_id = self.next_id.max(id.saturating_add(1));
+        self.serve_stats.resumed += 1;
+        self.serve_stats.resume_steps_saved += snap.cursor as u64;
+        self.active.push(ActiveRequest::from_snapshot(snap));
+        id
+    }
+
+    /// Copy an active trajectory's state as of the last completed step
+    /// boundary without disturbing residency: resident rows are
+    /// scattered into a *clone* of the lane stores, never the live
+    /// ones. The crash-resume stash the pool worker refreshes between
+    /// rounds.
+    pub fn snapshot_request(&self, id: u64) -> Option<TrajectorySnapshot> {
+        let ar = self.active.iter().find(|a| a.req.id == id)?;
+        let mut caches = ar.caches.clone();
+        if let Some(st) = &self.batch {
+            for row in 0..st.bucket {
+                if let Some((rid, lane)) = st.rows[row] {
+                    if rid == id {
+                        scatter_row(&st.caches, row, &mut caches[lane]);
+                    }
+                }
+            }
+        }
+        Some(TrajectorySnapshot {
+            req: ar.req.clone(),
+            timesteps: ar.timesteps.clone(),
+            cursor: ar.cursor,
+            z: ar.z.clone(),
+            caches,
+            skip_counts: ar.skip_counts.clone(),
+            modules_seen: ar.modules_seen.clone(),
+            admitted_us: ar.admitted_us,
+            steps_done: ar.steps_done,
+        })
     }
 
     /// Remaining denoise steps across the active set — the replica pool's
@@ -738,7 +824,11 @@ impl Engine {
                     (0..m.depth).map(|l| ar.modules_seen[2 * l + 1]).sum();
                 let skip_ffn: u32 =
                     (0..m.depth).map(|l| ar.skip_counts[2 * l + 1]).sum();
-                let latency = ar.started.elapsed();
+                // end-to-end latency from the epoch admission stamp:
+                // survives migration, and the finishing replica
+                // reports the full figure exactly once
+                let latency = std::time::Duration::from_micros(
+                    crate::obs::epoch_us().saturating_sub(ar.admitted_us));
                 self.serve_stats.completed += 1;
                 self.serve_stats.record_latency(latency.as_secs_f64());
                 out.push(RequestResult {
@@ -817,6 +907,22 @@ impl crate::coordinator::pool::PoolEngine for Engine {
         // events (both share one ring through the Arc)
         self.runner.install_tracer(tracer.clone());
         self.tracer = tracer;
+    }
+
+    fn active_ids(&self) -> Vec<u64> {
+        Engine::active_ids(self)
+    }
+
+    fn evict_to_snapshot(&mut self, id: u64) -> Option<TrajectorySnapshot> {
+        Engine::evict_to_snapshot(self, id)
+    }
+
+    fn admit_snapshot(&mut self, snap: TrajectorySnapshot) -> u64 {
+        Engine::admit_snapshot(self, snap)
+    }
+
+    fn snapshot_request(&self, id: u64) -> Option<TrajectorySnapshot> {
+        Engine::snapshot_request(self, id)
     }
 }
 
@@ -1138,6 +1244,179 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn evicted_trajectory_resumes_bit_identically() {
+        // the migration tentpole property: at a random step boundary,
+        // every trajectory is detached (residency flushed), pushed
+        // through the versioned byte encoding, and re-admitted into a
+        // FRESH batch state — exactly what evict_to_snapshot →
+        // encode → wire → decode → admit_snapshot does across two
+        // replicas. Every live batch row and every flushed lane store
+        // must stay bit-identical to the uninterrupted resident run,
+        // CFG pairs included (mk_active alternates cfg 1.0/1.5), and
+        // counters/z survive untouched.
+        propcheck(30, |g| {
+            use crate::model::runner::plan_rows;
+            let depth = g.usize_in(1, 3);
+            let slots = 2 * depth;
+            let nd = g.usize_in(1, 4);
+            let nreq = g.usize_in(2, 4);
+            let rounds = g.usize_in(3, 7);
+            let evict_round = g.usize_in(1, rounds - 1);
+            let mut mig_active = mk_active(nreq, 50, depth, nd);
+            let mut ref_active = mk_active(nreq, 50, depth, nd);
+            let pool = Rc::new(TensorPool::new());
+            let mut mig_state: Option<BatchState> = None;
+            let mut ref_state: Option<BatchState> = None;
+            for round in 0..rounds {
+                if round == evict_round {
+                    // boundary migration of the whole resident set,
+                    // through the portable encoding, into a fresh
+                    // engine-side state (as a sibling replica would)
+                    let ids: Vec<u64> =
+                        mig_active.iter().map(|a| a.req.id).collect();
+                    let mut resumed = Vec::new();
+                    for id in ids {
+                        let ar = detach_request(&mut mig_state,
+                                                &mut mig_active, id, -1)
+                            .expect("active id detaches");
+                        let bytes = ar.into_snapshot().encode();
+                        let snap = TrajectorySnapshot::decode(&bytes)
+                            .expect("own encoding decodes");
+                        resumed.push(ActiveRequest::from_snapshot(snap));
+                    }
+                    assert!(mig_active.is_empty());
+                    if let Some(st) = mig_state.take() {
+                        st.caches.release_into_pool();
+                        pool.release(st.z);
+                    }
+                    mig_active = resumed;
+                }
+                // identical plans on both sides: all requests in order
+                let mut lanes = Vec::new();
+                for (ri, a) in mig_active.iter().enumerate() {
+                    for lane in 0..a.req.lanes() {
+                        lanes.push(LaneSlot { req_idx: ri, lane });
+                    }
+                }
+                let bucket = *[1usize, 2, 4, 8, 16]
+                    .iter()
+                    .find(|&&b| b >= lanes.len())
+                    .unwrap();
+                let plan = BatchPlan { bucket, lanes };
+                sync_batch(&mut mig_state, &plan, &mut mig_active, &pool,
+                           depth, 1, nd, &[1, 2, 2], -1);
+                sync_batch(&mut ref_state, &plan, &mut ref_active, &pool,
+                           depth, 1, nd, &[1, 2, 2], -1);
+                let live = plan.live_mask();
+                let pairs = plan.pair_mask();
+                for k in 0..slots {
+                    // one shared random gate draw per (round, slot) —
+                    // both paths must plan the identical row mask
+                    let s: Vec<f32> = (0..bucket)
+                        .map(|_| if g.bool() { 0.9 } else { 0.1 })
+                        .collect();
+                    let dcfg = DecisionCfg {
+                        policy: crate::config::SkipPolicy::Mean,
+                        scope: crate::config::LazyScope::Both,
+                        threshold: 0.5,
+                        row_granular: true,
+                    };
+                    let mut mask_mig = Vec::new();
+                    let mut mask_ref = Vec::new();
+                    let p_mig = plan_rows(
+                        dcfg, true, None, &s, &live, &pairs,
+                        &mig_state.as_ref().unwrap().caches.valid[k],
+                        &mut mask_mig);
+                    let p_ref = plan_rows(
+                        dcfg, true, None, &s, &live, &pairs,
+                        &ref_state.as_ref().unwrap().caches.valid[k],
+                        &mut mask_ref);
+                    assert_eq!(mask_mig, mask_ref,
+                               "plans diverged (round {round} slot {k})");
+                    assert_eq!(p_mig, p_ref);
+                    for (state, act) in [(&mut mig_state, &mig_active),
+                                         (&mut ref_state, &ref_active)] {
+                        let st = state.as_mut().unwrap();
+                        if p_mig.all_skip {
+                            // cache-served: no mutation
+                        } else if p_mig.all_run {
+                            sim_run(&mut st.caches, k, bucket, nd, &plan,
+                                    act, round);
+                        } else {
+                            sim_run_partial(&mut st.caches, k, bucket, nd,
+                                            &plan, act, round, &mask_mig);
+                        }
+                    }
+                }
+                let mst = mig_state.as_ref().unwrap();
+                let rst = ref_state.as_ref().unwrap();
+                for row in 0..plan.lanes.len() {
+                    for k in 0..slots {
+                        assert_eq!(mst.caches.valid[k][row],
+                                   rst.caches.valid[k][row],
+                                   "validity diverged r{round} k{k} \
+                                    row{row}");
+                        if mst.caches.valid[k][row] {
+                            assert_eq!(mst.caches.value(k).row(row),
+                                       rst.caches.value(k).row(row),
+                                       "bytes diverged r{round} k{k} \
+                                        row{row}");
+                        }
+                    }
+                }
+            }
+            // endgame: flushed lane stores, z, and counters identical
+            flush_batch(&mut mig_state, &mut mig_active, &pool);
+            flush_batch(&mut ref_state, &mut ref_active, &pool);
+            for (a, b) in mig_active.iter().zip(&ref_active) {
+                assert_eq!(a.req.id, b.req.id, "order preserved");
+                assert_eq!(a.cursor, b.cursor);
+                assert_eq!(a.skip_counts, b.skip_counts);
+                assert_eq!(a.modules_seen, b.modules_seen);
+                assert_eq!(a.z, b.z, "latent must travel untouched");
+                for lane in 0..a.caches.len() {
+                    assert_eq!(a.caches[lane], b.caches[lane],
+                               "flushed lane store diverged (req {})",
+                               a.req.id);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn detach_vacates_rows_and_survivors_stay_resident() {
+        let (depth, nd) = (1usize, 2usize);
+        let mut active = mk_active(2, 10, depth, nd);
+        let pool = Rc::new(TensorPool::new());
+        let mut state: Option<BatchState> = None;
+        let plan = BatchPlan {
+            bucket: 2,
+            lanes: vec![LaneSlot { req_idx: 0, lane: 0 },
+                        LaneSlot { req_idx: 1, lane: 0 }],
+        };
+        sync_batch(&mut state, &plan, &mut active, &pool, depth, 1, nd,
+                   &[1, 1, 2], -1);
+        sim_run(&mut state.as_mut().unwrap().caches, 0, 2, nd, &plan,
+                &active, 0);
+        let id0 = active[0].req.id;
+        let id1 = active[1].req.id;
+        let row0: Vec<f32> = state.as_ref().unwrap()
+            .caches.value(0).row(0).to_vec();
+        let ar = detach_request(&mut state, &mut active, id0, -1)
+            .expect("detach");
+        // the evictee's freshly-run row flushed into its lane store
+        assert!(ar.caches[0].valid[0]);
+        assert_eq!(ar.caches[0].values[0], row0);
+        let st = state.as_ref().unwrap();
+        assert_eq!(st.rows[0], None, "evicted row vacated");
+        assert_eq!(st.rows[1], Some((id1, 0)), "survivor untouched");
+        assert!(st.caches.valid[0][1]);
+        // unknown ids are a no-op
+        assert!(detach_request(&mut state, &mut active, 999, -1).is_none());
+        assert_eq!(active.len(), 1);
     }
 
     #[test]

@@ -54,6 +54,8 @@ pub fn merge_serve_stats(a: &mut ServeStats, b: &ServeStats) {
     a.module_skips += b.module_skips;
     a.rows_retained += b.rows_retained;
     a.rows_migrated += b.rows_migrated;
+    a.resumed += b.resumed;
+    a.resume_steps_saved += b.resume_steps_saved;
 }
 
 /// Final pool-wide accounting returned by `Router::shutdown`.
@@ -113,6 +115,34 @@ impl PoolReport {
     /// replica's `stolen`, so the two totals are always equal.
     pub fn total_stolen(&self) -> u64 {
         self.replicas.iter().map(|r| r.stolen).sum()
+    }
+
+    /// Mid-flight trajectories evicted to siblings as snapshots,
+    /// pool-wide (drain, relief, crash resume).
+    pub fn total_migrated_out(&self) -> u64 {
+        self.replicas.iter().map(|r| r.migrated_out).sum()
+    }
+
+    /// Snapshots received from siblings, pool-wide. Equals
+    /// `total_migrated_out` unless a replica died before admitting a
+    /// snapshot already pushed to its queue.
+    pub fn total_migrated_in(&self) -> u64 {
+        self.replicas.iter().map(|r| r.migrated_in).sum()
+    }
+
+    /// Trajectories resumed from a snapshot, pool-wide (includes local
+    /// re-admissions when a drain found no taker).
+    pub fn total_resumed(&self) -> u64 {
+        self.replicas.iter().map(|r| r.serve.resumed).sum()
+    }
+
+    /// Denoise steps resuming saved vs. restarting from step 0,
+    /// pool-wide.
+    pub fn total_resume_steps_saved(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.serve.resume_steps_saved)
+            .sum()
     }
 
     /// Module invocations pool-wide whose skip was denied by a cold
@@ -203,6 +233,13 @@ impl PoolReport {
             self.total_rows_skipped() + self.total_rows_run(),
             self.total_rows_recovered(),
         ));
+        out.push_str(&format!(
+            "  migration: {} out / {} in, {} resumed, {} steps saved\n",
+            self.total_migrated_out(),
+            self.total_migrated_in(),
+            self.total_resumed(),
+            self.total_resume_steps_saved(),
+        ));
         let done = self.completed_by_slo();
         out.push_str("  tiers (completed/shed):");
         for slo in Slo::ALL {
@@ -251,6 +288,8 @@ mod tests {
             completed_by_slo: [0, 0, completed as u64],
             steals: 0,
             stolen: 0,
+            migrated_out: 0,
+            migrated_in: 0,
             arena: None,
             error: None,
         }
@@ -421,5 +460,29 @@ mod tests {
         assert_eq!(pr.total_stolen(), 3);
         assert_eq!(pr.total_steals(), pr.total_stolen(),
                    "every migration has exactly one thief and one victim");
+    }
+
+    #[test]
+    fn migration_totals_are_sums_and_render() {
+        let mut a = report(0, 1, 0, 4, 4);
+        a.migrated_out = 2;
+        a.serve.resumed = 1;
+        a.serve.resume_steps_saved = 3;
+        let mut b = report(1, 1, 0, 4, 4);
+        b.migrated_in = 2;
+        b.serve.resumed = 2;
+        b.serve.resume_steps_saved = 6;
+        let pr = PoolReport { replicas: vec![a, b], shed: 0,
+                              shed_by_slo: [0; Slo::COUNT] };
+        assert_eq!(pr.total_migrated_out(), 2);
+        assert_eq!(pr.total_migrated_in(), 2);
+        assert_eq!(pr.total_resumed(), 3);
+        assert_eq!(pr.total_resume_steps_saved(), 9);
+        let s = pr.merged_serve();
+        assert_eq!(s.resumed, 3);
+        assert_eq!(s.resume_steps_saved, 9);
+        assert!(pr.render().contains(
+            "migration: 2 out / 2 in, 3 resumed, 9 steps saved"),
+            "{}", pr.render());
     }
 }

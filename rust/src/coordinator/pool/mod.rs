@@ -98,6 +98,46 @@ pub trait PoolEngine {
     /// predate tracing (and test doubles) stay correct, they just emit
     /// no engine-side events.
     fn install_tracer(&mut self, _tracer: crate::obs::Tracer) {}
+
+    /// Ids of every trajectory currently active on this engine, in
+    /// admission order. Drives eviction sweeps (drain-by-migration) and
+    /// the crash-resume stash. Default: none — engines without snapshot
+    /// support simply have nothing to migrate.
+    fn active_ids(&self) -> Vec<u64> {
+        Vec::new()
+    }
+
+    /// Evict an active trajectory at the current step boundary and
+    /// return it as a portable snapshot: batch residency is flushed so
+    /// the snapshot's lane caches are current, the request leaves the
+    /// active set, and resuming the snapshot anywhere is bit-identical
+    /// to never having evicted. `None` when the id is unknown or the
+    /// engine does not support snapshots (the default).
+    fn evict_to_snapshot(&mut self, _id: u64)
+                         -> Option<crate::coordinator::request::TrajectorySnapshot> {
+        None
+    }
+
+    /// Admit a previously evicted trajectory, resuming at its cursor;
+    /// returns the id it runs under (snapshot ids are pool-unique, so
+    /// implementations keep them). Engines without snapshot support
+    /// return 0 (and must not be offered snapshots — the pool layer
+    /// gates on eviction having succeeded somewhere first).
+    fn admit_snapshot(&mut self,
+                      _snap: crate::coordinator::request::TrajectorySnapshot)
+                      -> u64 {
+        0
+    }
+
+    /// Copy (without evicting) an active trajectory's state as of the
+    /// last completed step boundary — the crash-resume stash the worker
+    /// refreshes between rounds. Unlike [`Self::evict_to_snapshot`]
+    /// this must not disturb residency; `None` when unsupported (the
+    /// default) or the id is unknown.
+    fn snapshot_request(&self, _id: u64)
+                        -> Option<crate::coordinator::request::TrajectorySnapshot> {
+        None
+    }
 }
 
 /// Constructs a replica's engine *on the replica thread*. The factory is

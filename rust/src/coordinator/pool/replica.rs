@@ -9,7 +9,8 @@
 use crate::config::Slo;
 use crate::coordinator::pool::steal::{Rebalancer, StealPeer};
 use crate::coordinator::pool::{EngineFactory, PoolEngine};
-use crate::coordinator::request::{Request, RequestResult};
+use crate::coordinator::request::{Request, RequestResult,
+                                  TrajectorySnapshot};
 use crate::coordinator::stats::{LayerStats, ServeStats};
 use crate::obs::ring::pack_pair;
 use crate::obs::{EventKind, LatencyHist, TraceEvent, Tracer};
@@ -21,10 +22,21 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-/// A routed request plus its response channel.
+/// What a queued job carries: a fresh request, or a mid-flight
+/// trajectory evicted from another replica that resumes at its cursor.
+pub enum JobPayload {
+    /// A freshly routed request, denoised from step 0.
+    Fresh(Request),
+    /// A portable trajectory snapshot — admitted via
+    /// [`PoolEngine::admit_snapshot`], it resumes at its step cursor
+    /// with its lane caches and latent intact.
+    Resumed(TrajectorySnapshot),
+}
+
+/// A routed unit of work plus its response channel.
 pub struct PoolJob {
-    /// The admitted request (pool-unique id already assigned).
-    pub req: Request,
+    /// What to run (pool-unique id already assigned in either variant).
+    pub payload: JobPayload,
     /// Where the finished [`RequestResult`] goes.
     pub respond: mpsc::Sender<RequestResult>,
     /// Epoch-µs when the router enqueued the job (0 = untimed). Queue
@@ -32,6 +44,57 @@ pub struct PoolJob {
     /// along on steal migration, so the wait covers the job's whole
     /// queued life, not just its final queue.
     pub enqueued_us: u64,
+}
+
+impl PoolJob {
+    /// A job for a freshly routed request.
+    pub fn fresh(req: Request, respond: mpsc::Sender<RequestResult>,
+                 enqueued_us: u64) -> PoolJob {
+        PoolJob { payload: JobPayload::Fresh(req), respond, enqueued_us }
+    }
+
+    /// A job resuming an evicted trajectory.
+    pub fn resumed(snap: TrajectorySnapshot,
+                   respond: mpsc::Sender<RequestResult>,
+                   enqueued_us: u64) -> PoolJob {
+        PoolJob { payload: JobPayload::Resumed(snap), respond, enqueued_us }
+    }
+
+    /// The pool-unique request id.
+    pub fn id(&self) -> u64 {
+        match &self.payload {
+            JobPayload::Fresh(r) => r.id,
+            JobPayload::Resumed(s) => s.req.id,
+        }
+    }
+
+    /// The request's SLO class (steal/placement eligibility).
+    pub fn slo(&self) -> Slo {
+        match &self.payload {
+            JobPayload::Fresh(r) => r.slo,
+            JobPayload::Resumed(s) => s.req.slo,
+        }
+    }
+
+    /// Lanes the request occupies per round (2 under CFG) — the
+    /// physical-fit half of the placement predicate.
+    pub fn lanes(&self) -> usize {
+        match &self.payload {
+            JobPayload::Fresh(r) => r.lanes(),
+            JobPayload::Resumed(s) => s.lanes(),
+        }
+    }
+
+    /// Denoise steps still to run: the full schedule for a fresh
+    /// request, the cursor remainder for a resumed one. This is the
+    /// gauge unit every transfer (dispatch, steal, migration, forfeit)
+    /// moves with the job.
+    pub fn remaining_steps(&self) -> usize {
+        match &self.payload {
+            JobPayload::Fresh(r) => r.steps,
+            JobPayload::Resumed(s) => s.pending_steps(),
+        }
+    }
 }
 
 /// Per-replica provisioning: the SLO class a replica is tuned for and
@@ -169,6 +232,35 @@ pub struct ReplicaGauges {
     pub steals: AtomicU64,
     /// Jobs a sibling pulled out of this replica's queue.
     pub stolen: AtomicU64,
+    /// Mid-flight trajectories this replica evicted and handed to a
+    /// sibling (drain-by-migration, mid-trajectory relief, crash
+    /// recovery). Queued-job steals count under `stolen`, not here.
+    pub migrated_out: AtomicU64,
+    /// Mid-flight trajectories this replica received as snapshots.
+    pub migrated_in: AtomicU64,
+    /// Trajectories this replica resumed from a snapshot (mirrors the
+    /// engine's `ServeStats::resumed`, kept here so `STATS` can report
+    /// it live without touching the `!Send` engine).
+    pub resumed: AtomicU64,
+    /// Denoise steps resuming saved versus re-denoising from step 0
+    /// (Σ cursor over resumed snapshots).
+    pub resume_steps_saved: AtomicU64,
+    /// Raised to ask the worker to evict every resident at its next
+    /// step boundary and hand them to compatible siblings (drain-by-
+    /// migration: retag, pre-shutdown). The worker lowers it once the
+    /// sweep ran; unplaceable residents resume locally — a drain never
+    /// strands work.
+    pub drain: AtomicBool,
+    /// Live SLO re-tag: 0 = provisioned tier class applies, otherwise
+    /// `Slo::index() + 1` of the class this replica now serves (tier
+    /// autoscaling retags an idle throughput replica to latency without
+    /// respawning it). Read through [`Self::live_slo`].
+    pub slo_tag: AtomicUsize,
+    /// Mid-trajectory relief request: 0 = none, otherwise `thief + 1`.
+    /// A thief that found nothing queued but a dwarfing resident
+    /// backlog here asks the victim to evict ONE resident at its next
+    /// boundary and push it to the thief's queue.
+    pub evict_to: AtomicUsize,
     /// Per-SLO-class latency histograms (log-bucketed, mergeable),
     /// fed at retire time — the per-tier p50/p95/p99 behind `STATS`.
     pub lat_hist_by_slo: [LatencyHist; Slo::COUNT],
@@ -197,18 +289,32 @@ impl ReplicaGauges {
         self.modules_skipped.load(Ordering::Relaxed) as f64 / seen as f64
     }
 
+    /// The SLO class this replica serves *right now*: the provisioned
+    /// tier class unless a live retag ([`Self::slo_tag`]) overrode it.
+    /// Everything that gates on compatibility — dispatch candidates,
+    /// steal eligibility, migration placement, `STATS` — reads through
+    /// here, so a retag takes effect atomically at every call site.
+    pub fn live_slo(&self, fallback: Slo) -> Slo {
+        match self.slo_tag.load(Ordering::Relaxed) {
+            0 => fallback,
+            t => Slo::ALL.get(t - 1).copied().unwrap_or(fallback),
+        }
+    }
+
     /// Snapshot used by the router's selection policies. The tier is
     /// static per-replica state the gauges don't own, so the caller
     /// supplies it — there is no "default" tier to fabricate (callers:
     /// [`ReplicaHandle::snapshot`] and the rebalancer's victim ranking,
-    /// both of which hold the real provisioning).
+    /// both of which hold the real provisioning). The snapshot's `slo`
+    /// is the *live* class, so a retag re-routes from the next
+    /// dispatch on.
     pub fn snapshot(&self, tier: &ReplicaTier) -> GaugeSnapshot {
         GaugeSnapshot {
             queued: self.queued.load(Ordering::Relaxed),
             pending_steps: self.pending_steps.load(Ordering::Relaxed),
             lazy_ratio: self.lazy_ratio(),
             finished: self.finished.load(Ordering::Acquire),
-            slo: tier.slo,
+            slo: self.live_slo(tier.slo),
             max_batch: tier.max_batch,
         }
     }
@@ -278,6 +384,10 @@ pub struct ReplicaReport {
     pub steals: u64,
     /// Jobs siblings stole out of this replica's queue.
     pub stolen: u64,
+    /// Mid-flight trajectories this replica evicted to siblings.
+    pub migrated_out: u64,
+    /// Mid-flight trajectories this replica resumed from siblings.
+    pub migrated_in: u64,
     /// Final buffer-arena counters, when the engine owns one (real
     /// engines do; the synthetic engine reports `None`). A healthy
     /// steady state shows `reused` ≫ `allocated` — see docs/PERF.md.
@@ -299,6 +409,8 @@ impl ReplicaReport {
             completed_by_slo: [0; Slo::COUNT],
             steals: 0,
             stolen: 0,
+            migrated_out: 0,
+            migrated_in: 0,
             arena: None,
             error: Some(msg.into()),
         }
@@ -392,25 +504,57 @@ impl ReplicaHandle {
                 // skews jsq/lazy ordering.
                 let mut responders: BTreeMap<u64, mpsc::Sender<RequestResult>> =
                     BTreeMap::new();
+                // boundary snapshots of every resident, refreshed after
+                // each completed round (stealing pools only): the crash-
+                // resume source. Lives outside the unwind so the panic
+                // handler can hand the last consistent state of each
+                // resident to a sibling instead of forfeiting it.
+                let mut stash: BTreeMap<u64, TrajectorySnapshot> =
+                    BTreeMap::new();
                 let engine_pending = AtomicUsize::new(0);
                 let admitting = AtomicUsize::new(0);
                 let result = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| {
                         run_replica(id, factory, &q2, &g2, &r2,
-                                    &mut responders, steal.as_deref(),
+                                    &mut responders, &mut stash,
+                                    steal.as_deref(),
                                     &engine_pending, &admitting, &t2, &tr2)
                     }));
                 if result.is_err() {
                     log::warn!("replica {id}: worker panicked");
                     refuse_remaining(&q2, &g2);
                     // requests admitted into the unwound engine can never
-                    // complete — forfeit exactly those, and roll exactly
-                    // the engine's known step backlog out of the gauge
-                    // (an in-flight dispatch's optimistic increment is
-                    // left for its own rollback, so nothing is
-                    // double-resolved or wiped)
+                    // complete HERE — but their last boundary snapshots
+                    // can resume on a sibling. Recover what places;
+                    // forfeit only the rest, and roll exactly the
+                    // engine's known step backlog out of the gauge (an
+                    // in-flight dispatch's optimistic increment is left
+                    // for its own rollback, so nothing is double-resolved
+                    // or wiped).
                     let lost = responders.len();
-                    g2.forfeited.fetch_add(lost as u64, Ordering::Relaxed);
+                    let mut recovered = 0u64;
+                    if let Some(rb) = steal.as_deref() {
+                        for (_, snap) in std::mem::take(&mut stash) {
+                            let Some(tx) = responders.remove(&snap.req.id)
+                            else { continue };
+                            let rid = snap.req.id;
+                            let saved = snap.cursor;
+                            let job = PoolJob::resumed(
+                                snap, tx, crate::obs::epoch_us());
+                            // thief-side-only accounting: this side's
+                            // ledger resolves wholesale below
+                            if rb.place_from_dead(id, job).is_ok() {
+                                recovered += 1;
+                                log::debug!(
+                                    "replica {id}: resident {rid} \
+                                     recovered to a sibling at step \
+                                     {saved}");
+                            }
+                        }
+                    }
+                    g2.migrated_out.fetch_add(recovered, Ordering::Relaxed);
+                    g2.forfeited.fetch_add(lost as u64 - recovered,
+                                           Ordering::Relaxed);
                     dec(&g2.queued, lost);
                     dec(&g2.pending_steps,
                         engine_pending.load(Ordering::Relaxed));
@@ -432,6 +576,10 @@ impl ReplicaHandle {
                         rep.tier = t2.clone();
                         rep.steals = g2.steals.load(Ordering::Relaxed);
                         rep.stolen = g2.stolen.load(Ordering::Relaxed);
+                        rep.migrated_out =
+                            g2.migrated_out.load(Ordering::Relaxed);
+                        rep.migrated_in =
+                            g2.migrated_in.load(Ordering::Relaxed);
                         rep.completed_by_slo = g2.completed_by_slo();
                         *slot = Some(rep);
                     }
@@ -481,6 +629,36 @@ impl ReplicaHandle {
         self.queue.close();
     }
 
+    /// Ask the worker to evict every resident trajectory at its next
+    /// step boundary and hand them to compatible siblings (drain-by-
+    /// migration). Asynchronous: the flag lowers once the sweep ran;
+    /// residents nobody can take resume locally, so nothing strands.
+    /// A no-op without a pool rebalancer — there is nowhere to migrate.
+    pub fn request_drain(&self) {
+        self.gauges.drain.store(true, Ordering::Release);
+    }
+
+    /// True while a requested drain sweep has not yet run.
+    pub fn draining(&self) -> bool {
+        self.gauges.drain.load(Ordering::Acquire)
+    }
+
+    /// Retag this replica to serve `slo`, draining current residents by
+    /// migration first: requests admitted under the old class move to
+    /// compatible siblings (or finish here if nobody can take them),
+    /// and every dispatch after this call routes by the new class.
+    pub fn retag(&self, slo: Slo) {
+        self.request_drain();
+        self.gauges
+            .slo_tag
+            .store(slo.index() + 1, Ordering::Release);
+    }
+
+    /// The SLO class this replica serves right now (live retag aware).
+    pub fn live_slo(&self) -> Slo {
+        self.gauges.live_slo(self.tier.slo)
+    }
+
     /// True once the worker has exported its final report — normal drain
     /// or failure. Used by the serve loop's liveness check.
     pub fn finished(&self) -> bool {
@@ -528,6 +706,7 @@ fn run_replica(id: usize, factory: EngineFactory,
                queue: &BoundedQueue<PoolJob>, gauges: &ReplicaGauges,
                report: &Mutex<Option<ReplicaReport>>,
                responders: &mut BTreeMap<u64, mpsc::Sender<RequestResult>>,
+               stash: &mut BTreeMap<u64, TrajectorySnapshot>,
                steal: Option<&Rebalancer>, engine_pending: &AtomicUsize,
                admitting: &AtomicUsize, tier: &ReplicaTier,
                tracer: &Tracer) {
@@ -555,18 +734,19 @@ fn run_replica(id: usize, factory: EngineFactory,
              responders: &mut BTreeMap<u64, mpsc::Sender<RequestResult>>,
              gauges: &ReplicaGauges, engine_pending: &AtomicUsize,
              admitting: &AtomicUsize, tracer: &Tracer, job: PoolJob) {
-        let wire_steps = job.req.steps;
+        let wire_steps = job.remaining_steps();
+        let wire_id = job.id();
         if tracer.is_enabled() {
             let now = tracer.now_us();
             tracer.record_at(TraceEvent {
                 kind: EventKind::Admit, ts_us: now, dur_us: 0,
-                kind_id: job.req.id, arg: wire_steps as u64,
+                kind_id: wire_id, arg: wire_steps as u64,
             });
             if job.enqueued_us > 0 {
                 tracer.record_at(TraceEvent {
                     kind: EventKind::QueueWait, ts_us: now,
                     dur_us: now.saturating_sub(job.enqueued_us),
-                    kind_id: job.req.id, arg: wire_steps as u64,
+                    kind_id: wire_id, arg: wire_steps as u64,
                 });
             }
         }
@@ -575,7 +755,27 @@ fn run_replica(id: usize, factory: EngineFactory,
         // ledger entry — it left the queue but never reached responders
         admitting.store(wire_steps + 1, Ordering::Relaxed);
         let before = engine.pending_steps();
-        let rid = engine.submit(job.req);
+        let rid = match job.payload {
+            JobPayload::Fresh(req) => engine.submit(req),
+            JobPayload::Resumed(snap) => {
+                gauges.migrated_in.fetch_add(1, Ordering::Relaxed);
+                gauges.resumed.fetch_add(1, Ordering::Relaxed);
+                gauges
+                    .resume_steps_saved
+                    .fetch_add(snap.cursor as u64, Ordering::Relaxed);
+                if tracer.is_enabled() {
+                    tracer.record_at(TraceEvent {
+                        kind: EventKind::Migrate,
+                        ts_us: tracer.now_us(),
+                        dur_us: 0,
+                        kind_id: wire_id,
+                        arg: pack_pair(snap.cursor as u32,
+                                       snap.pending_steps() as u32),
+                    });
+                }
+                engine.admit_snapshot(snap)
+            }
+        };
         let actual = engine.pending_steps().saturating_sub(before);
         if actual < wire_steps {
             dec(&gauges.pending_steps, wire_steps - actual);
@@ -588,6 +788,31 @@ fn run_replica(id: usize, factory: EngineFactory,
     let mut idle_misses = 0u32;
 
     loop {
+        // drain-by-migration: evict every resident at this step
+        // boundary and hand them to compatible siblings (retag,
+        // pre-shutdown). Unplaceable residents resume locally inside
+        // the sweep, so the drain can never strand a trajectory.
+        if gauges.drain.load(Ordering::Acquire) {
+            if let Some(rb) = steal {
+                migrate_residents(id, &mut engine, gauges, responders,
+                                  rb, tracer, None);
+                engine_pending
+                    .store(engine.pending_steps(), Ordering::Relaxed);
+                stash.clear();
+            }
+            gauges.drain.store(false, Ordering::Release);
+        }
+        // mid-trajectory relief: an idle thief whose backlog we dwarf
+        // asked for ONE resident ([`ReplicaGauges::evict_to`])
+        let relief = gauges.evict_to.swap(0, Ordering::AcqRel);
+        if relief > 0 {
+            if let Some(rb) = steal {
+                migrate_residents(id, &mut engine, gauges, responders,
+                                  rb, tracer, Some(relief - 1));
+                engine_pending
+                    .store(engine.pending_steps(), Ordering::Relaxed);
+            }
+        }
         // cap how many trajectories sit inside the engine: the tier's
         // steal window while stealing is on (everything beyond it stays
         // in the queue, where it remains migratable — an engine-admitted
@@ -625,8 +850,8 @@ fn run_replica(id: usize, factory: EngineFactory,
                         };
                         tracer.record_at(TraceEvent {
                             kind: EventKind::Steal, ts_us: now,
-                            dur_us: queued, kind_id: job.req.id,
-                            arg: job.req.steps as u64,
+                            dur_us: queued, kind_id: job.id(),
+                            arg: job.remaining_steps() as u64,
                         });
                     }
                     admit(&mut engine, responders, gauges, engine_pending,
@@ -699,6 +924,18 @@ fn run_replica(id: usize, factory: EngineFactory,
                 gauges
                     .rows_recovered
                     .store(ls.rows_recovered_total(), Ordering::Relaxed);
+                // refresh the crash-resume stash at this boundary: the
+                // last consistent snapshot of every resident, so a
+                // panic mid-round loses at most one round of work per
+                // trajectory instead of the whole denoise
+                if steal.is_some() {
+                    stash.clear();
+                    for aid in engine.active_ids() {
+                        if let Some(s) = engine.snapshot_request(aid) {
+                            stash.insert(aid, s);
+                        }
+                    }
+                }
             }
             Err(e) => {
                 error = Some(format!("step_round failed: {e:#}"));
@@ -719,15 +956,21 @@ fn run_replica(id: usize, factory: EngineFactory,
         refuse_remaining(queue, gauges);
     }
     engine_pending.store(0, Ordering::Relaxed);
+    // report the tier as *currently served*: a retagged replica's final
+    // accounting belongs to its live class, not its birth provisioning
+    let mut tier_now = tier.clone();
+    tier_now.slo = gauges.live_slo(tier.slo);
     *report.lock().unwrap() = Some(ReplicaReport {
         id,
         policy: engine.policy_name(),
-        tier: tier.clone(),
+        tier: tier_now,
         layer: engine.layer_stats().clone(),
         serve: engine.serve_stats().clone(),
         completed_by_slo: gauges.completed_by_slo(),
         steals: gauges.steals.load(Ordering::Relaxed),
         stolen: gauges.stolen.load(Ordering::Relaxed),
+        migrated_out: gauges.migrated_out.load(Ordering::Relaxed),
+        migrated_in: gauges.migrated_in.load(Ordering::Relaxed),
         arena: engine.arena_stats(),
         error,
     });
@@ -750,8 +993,66 @@ fn refuse_remaining(queue: &BoundedQueue<PoolJob>, gauges: &ReplicaGauges) {
     queue.close();
     while let Some(job) = queue.try_pop() {
         dec(&gauges.queued, 1);
-        dec(&gauges.pending_steps, job.req.steps);
+        dec(&gauges.pending_steps, job.remaining_steps());
         gauges.forfeited.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Evict residents at the current step boundary and hand them to
+/// siblings. `to == None` is the drain sweep: every resident, placed on
+/// the compatible sibling with the lowest effective backlog. `to ==
+/// Some(thief)` is mid-trajectory relief: the newest resident (largest
+/// id — statistically the most remaining work and the coldest caches,
+/// chosen without cloning every resident's caches just to rank them),
+/// pushed to the requesting thief. Either way, a resident nobody can
+/// take is re-admitted locally in the same pass: migration is an
+/// optimization, never a way to lose work.
+fn migrate_residents(id: usize, engine: &mut Box<dyn PoolEngine>,
+                     gauges: &ReplicaGauges,
+                     responders: &mut BTreeMap<u64,
+                                              mpsc::Sender<RequestResult>>,
+                     rb: &Rebalancer, tracer: &Tracer, to: Option<usize>) {
+    let ids: Vec<u64> = if to.is_some() {
+        engine.active_ids().into_iter().max().into_iter().collect()
+    } else {
+        engine.active_ids()
+    };
+    for rid in ids {
+        let Some(tx) = responders.remove(&rid) else { continue };
+        let Some(snap) = engine.evict_to_snapshot(rid) else {
+            responders.insert(rid, tx);
+            continue;
+        };
+        let steps = snap.pending_steps();
+        let cursor = snap.cursor;
+        let job = PoolJob::resumed(snap, tx, crate::obs::epoch_us());
+        let placed = match to {
+            Some(thief) => rb.push_to(id, thief, job),
+            None => rb.place(id, job),
+        };
+        match placed {
+            Ok(dest) => {
+                gauges.migrated_out.fetch_add(1, Ordering::Relaxed);
+                if tracer.is_enabled() {
+                    tracer.record_at(TraceEvent {
+                        kind: EventKind::Migrate,
+                        ts_us: tracer.now_us(),
+                        dur_us: 0,
+                        kind_id: rid,
+                        arg: pack_pair(cursor as u32, steps as u32),
+                    });
+                }
+                log::debug!("replica {id}: resident {rid} migrated to \
+                             replica {dest} at step {cursor}");
+            }
+            Err(job) => {
+                let PoolJob { payload, respond, .. } = job;
+                if let JobPayload::Resumed(snap) = payload {
+                    let back = engine.admit_snapshot(snap);
+                    responders.insert(back, respond);
+                }
+            }
+        }
     }
 }
 
@@ -763,8 +1064,7 @@ mod tests {
     fn job(seed: u64, steps: usize)
            -> (PoolJob, mpsc::Receiver<RequestResult>) {
         let (tx, rx) = mpsc::channel();
-        (PoolJob { req: Request::new(0, 3, steps, seed), respond: tx,
-                   enqueued_us: 0 }, rx)
+        (PoolJob::fresh(Request::new(0, 3, steps, seed), tx, 0), rx)
     }
 
     #[test]
@@ -958,7 +1258,7 @@ mod tests {
             let req = Request::new(0, 1, 3, i as u64).with_slo(*slo);
             h.gauges.queued.fetch_add(1, Ordering::Relaxed);
             h.gauges.pending_steps.fetch_add(3, Ordering::Relaxed);
-            h.try_send(PoolJob { req, respond: tx, enqueued_us: 0 })
+            h.try_send(PoolJob::fresh(req, tx, 0))
                 .map_err(|_| "send")
                 .unwrap();
             rxs.push(rx);

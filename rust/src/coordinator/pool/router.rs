@@ -300,8 +300,7 @@ impl Router {
         // engine hot path) so replicas can report queue-wait spans;
         // 0 means "untimed" to the consumer, which epoch_us never is
         // after the first microsecond of process life
-        let mut job = PoolJob { req, respond,
-                                enqueued_us: crate::obs::epoch_us() };
+        let mut job = PoolJob::fresh(req, respond, crate::obs::epoch_us());
         for idx in order {
             let h = &self.replicas[idx];
             // optimistic accounting: visible to concurrent dispatches
@@ -334,12 +333,92 @@ impl Router {
     /// Is any live replica's tier compatible with `(slo, lanes)`? The
     /// shed-path classifier behind unservable-vs-capacity reporting
     /// (shares [`crate::coordinator::pool::replica::tier_admits`] with
-    /// the candidate filter and steal eligibility).
+    /// the candidate filter and steal eligibility). Judged over each
+    /// replica's LIVE SLO class, so a retag immediately changes what
+    /// the pool reports as servable.
     fn any_compatible(&self, slo: Slo, lanes: usize) -> bool {
         self.replicas.iter().any(|r| {
             !r.gauges.finished.load(Ordering::Acquire)
-                && r.tier.admits(slo, lanes)
+                && crate::coordinator::pool::replica::tier_admits(
+                    r.gauges.live_slo(r.tier.slo), r.tier.max_batch,
+                    slo, lanes)
         })
+    }
+
+    /// Trajectories that crossed a replica boundary as portable
+    /// snapshots (drain, relief, crash resume) — counted on the way out.
+    pub fn total_migrated(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.migrated_out.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Snapshots admitted back into an engine pool-wide.
+    pub fn total_resumed(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.resumed.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Denoise steps resumed trajectories did NOT redo because their
+    /// snapshot carried the cursor (steps saved vs restart-from-zero).
+    pub fn total_resume_steps_saved(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| {
+                r.gauges.resume_steps_saved.load(Ordering::Relaxed)
+            })
+            .sum()
+    }
+
+    /// Retag replica `idx` to serve `slo` from now on: the worker drains
+    /// its current residents to compatible siblings (drain-by-migration)
+    /// at its next step boundary and the live class flips immediately
+    /// for dispatch, stealing, and placement. The provisioned tier is
+    /// untouched — a later `retag` can flip it back. No-op on a bad
+    /// index. Typical use: an idle throughput replica turns into a
+    /// latency server when `shed_by_slo.latency` starts growing.
+    pub fn retag_replica(&self, idx: usize, slo: Slo) {
+        if let Some(r) = self.replicas.get(idx) {
+            r.retag(slo);
+        }
+    }
+
+    /// Ask replica `idx` to evict every resident trajectory to
+    /// compatible siblings at its next step boundary, WITHOUT changing
+    /// its SLO class — a pure drain-by-migration sweep. Residents with
+    /// no live compatible sibling re-admit locally, so nothing strands.
+    /// No-op on a bad index.
+    pub fn drain_replica(&self, idx: usize) {
+        if let Some(r) = self.replicas.get(idx) {
+            r.request_drain();
+        }
+    }
+
+    /// Total requests ever handed to [`dispatch`](Self::dispatch) —
+    /// admitted or shed. The pool-wide conservation law is
+    /// `dispatched == completed + shed + forfeited` once drained.
+    pub fn total_dispatched(&self) -> u64 {
+        self.dispatched.load(Ordering::Relaxed)
+    }
+
+    /// Requests lost to replica panics pool-wide (admitted but neither
+    /// completed nor recoverable from a boundary snapshot).
+    pub fn total_forfeited(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.forfeited.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Each replica's LIVE SLO class (provisioned tier unless retagged).
+    pub fn live_slos(&self) -> Vec<Slo> {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.live_slo(r.tier.slo))
+            .collect()
     }
 
     /// One-line JSON snapshot of the live pool gauges — the payload of
@@ -371,7 +450,10 @@ impl Router {
                 }
                 Json::obj(vec![
                     ("id", Json::num(r.id as f64)),
-                    ("tier", Json::str(r.tier.slo.name())),
+                    // the LIVE class: retags show up here immediately
+                    ("tier", Json::str(
+                        r.gauges.live_slo(r.tier.slo).name())),
+                    ("provisioned", Json::str(r.tier.slo.name())),
                     ("latency_ms", hist_ms_json(&lh)),
                     ("max_batch", Json::num(r.tier.max_batch as f64)),
                     ("queued", Json::num(s.queued as f64)),
@@ -400,6 +482,18 @@ impl Router {
                     ("stolen",
                      Json::num(r.gauges.stolen.load(Ordering::Relaxed)
                                as f64)),
+                    ("migrated_out",
+                     Json::num(r.gauges.migrated_out
+                               .load(Ordering::Relaxed) as f64)),
+                    ("migrated_in",
+                     Json::num(r.gauges.migrated_in
+                               .load(Ordering::Relaxed) as f64)),
+                    ("resumed",
+                     Json::num(r.gauges.resumed.load(Ordering::Relaxed)
+                               as f64)),
+                    ("resume_steps_saved",
+                     Json::num(r.gauges.resume_steps_saved
+                               .load(Ordering::Relaxed) as f64)),
                     ("finished", Json::Bool(s.finished)),
                 ])
             })
@@ -432,6 +526,10 @@ impl Router {
             ("shed", Json::num(self.shed_count() as f64)),
             ("shed_by_slo", shed_by_slo),
             ("steals", Json::num(self.total_steals() as f64)),
+            ("migrated", Json::num(self.total_migrated() as f64)),
+            ("resumed", Json::num(self.total_resumed() as f64)),
+            ("resume_steps_saved",
+             Json::num(self.total_resume_steps_saved() as f64)),
             ("lazy_ratio", Json::num(self.overall_lazy())),
             ("cold_denied", Json::num(self.total_cold_denied() as f64)),
             ("rows_run", Json::num(self.total_rows_run() as f64)),
@@ -496,20 +594,50 @@ impl Router {
 
     /// Drain and stop every replica, returning the aggregated report.
     /// In-flight and queued trajectories finish first (drain semantics).
+    ///
+    /// With stealing armed and ≥2 replicas, shutdown drains *by
+    /// migration*: all but the last replica are asked to evict their
+    /// residents as snapshots (placed on still-open siblings) before
+    /// their queues close, concentrating the tail of the run on fewer
+    /// replicas instead of waiting for the slowest straggler — and
+    /// exercising the same evict/admit path a crash or retag uses. A
+    /// replica whose residents have nowhere to go re-admits them
+    /// locally and finishes them itself; nothing is ever stranded.
     pub fn shutdown(&self) -> PoolReport {
+        if self.rebalancer.is_some() && self.replicas.len() > 1 {
+            let deadline = std::time::Instant::now()
+                + std::time::Duration::from_millis(250);
+            for r in &self.replicas[..self.replicas.len() - 1] {
+                r.request_drain();
+                // bounded wait: the worker clears the flag once the
+                // sweep ran (a dead worker never does — don't hang)
+                while r.draining()
+                    && !r.finished()
+                    && std::time::Instant::now() < deadline
+                {
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(1));
+                }
+                r.close();
+            }
+        }
         for r in &self.replicas {
             r.close();
         }
         let mut reports: Vec<_> =
             self.replicas.iter().map(|r| r.join_report()).collect();
-        // steal counters settle only once EVERY worker thread has exited
-        // (gauge transfers run on thief worker threads, so a victim's own
-        // exit can race the final `stolen` increment). All threads are
-        // joined now — re-read the gauges so the reports can never miss
-        // a migration and the steals==stolen conservation stays exact.
+        // steal/migration counters settle only once EVERY worker thread
+        // has exited (gauge transfers run on thief worker threads, so a
+        // victim's own exit can race the final `stolen` increment). All
+        // threads are joined now — re-read the gauges so the reports can
+        // never miss a migration and conservation stays exact.
         for (rep, h) in reports.iter_mut().zip(&self.replicas) {
             rep.steals = h.gauges.steals.load(Ordering::Relaxed);
             rep.stolen = h.gauges.stolen.load(Ordering::Relaxed);
+            rep.migrated_out =
+                h.gauges.migrated_out.load(Ordering::Relaxed);
+            rep.migrated_in =
+                h.gauges.migrated_in.load(Ordering::Relaxed);
         }
         PoolReport {
             replicas: reports,

@@ -18,7 +18,7 @@
 //! (that is the waste being measured) while images stay deterministic.
 
 use crate::coordinator::pool::{EngineFactory, PoolEngine};
-use crate::coordinator::request::{Request, RequestResult};
+use crate::coordinator::request::{Request, RequestResult, TrajectorySnapshot};
 use crate::coordinator::stats::{LayerStats, ServeStats};
 use crate::obs::ring::{pack_module_arg, pack_pair};
 use crate::obs::{EventKind, TraceEvent, Tracer};
@@ -88,7 +88,10 @@ struct SimActive {
     cursor: usize,
     skip_counts: Vec<u32>,
     modules_seen: Vec<u32>,
-    started: Instant,
+    /// Admission stamp on the shared [`crate::obs::epoch_us`] clock —
+    /// portable across replicas, so a migrated trajectory's end-to-end
+    /// latency is attributed (once, in full) to the finishing replica.
+    admitted_us: u64,
 }
 
 /// The synthetic engine. Single-threaded like the real one; a pool
@@ -153,6 +156,28 @@ pub fn sim_image(req: &Request, img_elems: usize) -> Tensor {
     Tensor::from_vec(&[img_elems], v).expect("sim image shape")
 }
 
+/// A synthetic trajectory as a portable snapshot. The simulator keeps
+/// no latent or lane caches — its skip gate is a pure function of
+/// (step, slot) — so the snapshot carries empty `z`/`caches` payloads
+/// (explicitly tolerated by the codec) and a placeholder timestep
+/// schedule whose *length* preserves `pending_steps()` semantics.
+/// Counters and the admission stamp travel verbatim, which is exactly
+/// what makes a resumed run indistinguishable from an uninterrupted
+/// one: the gate re-derives every decision from the cursor.
+fn sim_snapshot(a: &SimActive) -> TrajectorySnapshot {
+    TrajectorySnapshot {
+        req: a.req.clone(),
+        timesteps: vec![0; a.req.steps],
+        cursor: a.cursor,
+        z: Vec::new(),
+        caches: Vec::new(),
+        skip_counts: a.skip_counts.clone(),
+        modules_seen: a.modules_seen.clone(),
+        admitted_us: a.admitted_us,
+        steps_done: a.cursor,
+    }
+}
+
 /// SplitMix64-style stateless mixer for skip decisions.
 fn mix(a: u64, b: u64) -> u64 {
     let mut z = a
@@ -188,9 +213,49 @@ impl PoolEngine for SimEngine {
             cursor: 0,
             skip_counts: vec![0; slots],
             modules_seen: vec![0; slots],
-            started: Instant::now(),
+            admitted_us: crate::obs::epoch_us(),
         });
         id
+    }
+
+    fn active_ids(&self) -> Vec<u64> {
+        self.active.iter().map(|a| a.req.id).collect()
+    }
+
+    fn evict_to_snapshot(&mut self, id: u64) -> Option<TrajectorySnapshot> {
+        let idx = self.active.iter().position(|a| a.req.id == id)?;
+        let a = self.active.remove(idx);
+        Some(sim_snapshot(&a))
+    }
+
+    fn admit_snapshot(&mut self, snap: TrajectorySnapshot) -> u64 {
+        let id = snap.req.id;
+        self.next_id = self.next_id.max(id.saturating_add(1));
+        let slots = 2 * self.spec.depth;
+        // counters travel with the trajectory; a depth-mismatched pool
+        // (never built in practice) degrades to fresh counters rather
+        // than corrupt indexing
+        let fit = |mut v: Vec<u32>| {
+            if v.len() != slots { v = vec![0; slots]; }
+            v
+        };
+        self.serve_stats.resumed += 1;
+        self.serve_stats.resume_steps_saved += snap.cursor as u64;
+        self.active.push(SimActive {
+            req: snap.req,
+            cursor: snap.cursor,
+            skip_counts: fit(snap.skip_counts),
+            modules_seen: fit(snap.modules_seen),
+            admitted_us: snap.admitted_us,
+        });
+        id
+    }
+
+    fn snapshot_request(&self, id: u64) -> Option<TrajectorySnapshot> {
+        self.active
+            .iter()
+            .find(|a| a.req.id == id)
+            .map(sim_snapshot)
     }
 
     fn active_count(&self) -> usize {
@@ -291,7 +356,8 @@ impl PoolEngine for SimEngine {
         while i < self.active.len() {
             if self.active[i].cursor >= self.active[i].req.steps {
                 let a = self.active.remove(i);
-                let latency = a.started.elapsed();
+                let latency = std::time::Duration::from_micros(
+                    crate::obs::epoch_us().saturating_sub(a.admitted_us));
                 let seen: u32 = a.modules_seen.iter().sum();
                 let skipped: u32 = a.skip_counts.iter().sum();
                 let attn_seen: u32 =
@@ -490,6 +556,72 @@ mod tests {
         quiet.submit(Request::new(0, 1, 2, 4));
         run_all(&mut quiet);
         assert!(!quiet.tracer.is_enabled());
+    }
+
+    #[test]
+    fn resumed_trajectory_matches_uninterrupted_run() {
+        // same request, two lives: one denoised start-to-finish on a
+        // single engine, one evicted at a mid-flight step boundary,
+        // pushed through the wire encoding, and resumed on a DIFFERENT
+        // engine that also carries a cold co-batched joiner (so the
+        // recovered-row gate is exercised on the resumed side too).
+        // Results must be indistinguishable.
+        let spec = || SimSpec { lazy_pct: 60, work_per_module: 0,
+                                ..SimSpec::default() };
+        let req = || Request::new(7, 3, 9, 0xC0FFEE);
+        let mut solo = SimEngine::new(spec());
+        solo.submit(req());
+        let baseline = run_all(&mut solo).pop().unwrap();
+
+        let mut victim = SimEngine::new(spec());
+        victim.submit(req());
+        for _ in 0..4 {
+            victim.step_round().unwrap();
+        }
+        let snap = victim.evict_to_snapshot(7).expect("id 7 active");
+        assert_eq!(victim.active_count(), 0);
+        assert_eq!(snap.pending_steps(), 5);
+        let bytes = snap.encode();
+        let snap = TrajectorySnapshot::decode(&bytes).unwrap();
+
+        let mut thief = SimEngine::new(spec());
+        thief.submit(Request::new(0, 1, 2, 5)); // cold joiner
+        assert_eq!(thief.admit_snapshot(snap), 7);
+        assert_eq!(thief.serve_stats.resumed, 1);
+        assert_eq!(thief.serve_stats.resume_steps_saved, 4);
+        let resumed = run_all(&mut thief)
+            .into_iter()
+            .find(|r| r.id == 7)
+            .unwrap();
+
+        assert_eq!(baseline.image.data(), resumed.image.data(),
+                   "image must be a pure function of the request");
+        assert_eq!(baseline.lazy_ratio, resumed.lazy_ratio,
+                   "skip decisions are (step, slot)-pure, so the \
+                    resumed half must re-derive the identical gates");
+        assert_eq!(baseline.per_module_skip, resumed.per_module_skip);
+        // the resumed trajectory is warm while its co-batch is cold:
+        // its skips count as recovered rows, same as any resident
+        assert!(thief.layer_stats.rows_recovered_total() > 0,
+                "warm resumed rows skipping beside a cold joiner must \
+                 be accounted as recovered");
+        // unknown ids evict nothing; eviction does not disturb others
+        assert!(thief.evict_to_snapshot(999).is_none());
+    }
+
+    #[test]
+    fn snapshot_request_is_non_destructive() {
+        let mut e = SimEngine::new(SimSpec::fast());
+        e.submit(Request::new(11, 2, 5, 42));
+        e.step_round().unwrap();
+        let peek = e.snapshot_request(11).expect("active");
+        assert_eq!(peek.cursor, 1);
+        assert_eq!(e.active_count(), 1, "peeking must not evict");
+        assert_eq!(e.active_ids(), vec![11]);
+        assert!(e.snapshot_request(404).is_none());
+        // the stash snapshot round-trips the codec like any other
+        let back = TrajectorySnapshot::decode(&peek.encode()).unwrap();
+        assert_eq!(back, peek);
     }
 
     #[test]

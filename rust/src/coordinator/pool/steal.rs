@@ -19,8 +19,8 @@
 //! by exact, known amounts — never stored absolutely — so concurrent
 //! dispatch rollbacks and the panic handler compose with migration.
 
-use crate::coordinator::pool::replica::{dec, PoolJob, ReplicaGauges,
-                                        ReplicaTier};
+use crate::coordinator::pool::replica::{dec, tier_admits, PoolJob,
+                                        ReplicaGauges, ReplicaTier};
 use crate::coordinator::pool::router::lazy_cost;
 use crate::util::threadpool::BoundedQueue;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -39,6 +39,16 @@ pub struct StealPeer {
     /// The replica's provisioning: a thief only pulls jobs whose SLO
     /// class its own tier can honor ([`ReplicaTier::can_serve`]).
     pub tier: ReplicaTier,
+}
+
+impl StealPeer {
+    /// The peer's full admission predicate over its LIVE SLO class — a
+    /// retagged replica ([`ReplicaGauges::slo_tag`]) is judged by what
+    /// it serves now, not its birth provisioning.
+    fn admits(&self, slo: crate::config::Slo, lanes: usize) -> bool {
+        tier_admits(self.gauges.live_slo(self.tier.slo),
+                    self.tier.max_batch, slo, lanes)
+    }
 }
 
 /// Pool-level rebalancer shared by every replica worker. Constructed
@@ -219,11 +229,12 @@ impl Rebalancer {
             // (`tier_admits`): the thief's tier must honor the job's
             // SLO class AND physically fit its lane count — a B1
             // replica admitting a 2-lane CFG job could never plan a
-            // round containing it
+            // round containing it. Judged by the thief's LIVE class so
+            // a retag changes what it may pull immediately.
             if let Some(job) = victim.queue.steal_back_matching(|j| {
-                me.tier.admits(j.req.slo, j.req.lanes())
+                me.admits(j.slo(), j.lanes())
             }) {
-                let steps = job.req.steps;
+                let steps = job.remaining_steps();
                 // gauge transfer, thief first: pool totals never
                 // under-count mid-migration, and the victim side uses
                 // saturating known-amount decrements so a racing panic
@@ -240,7 +251,162 @@ impl Rebalancer {
                 return Some(job);
             }
         }
+        // nothing queued anywhere the thief may take. Consider asking a
+        // RUNNING victim for mid-trajectory relief: when a sibling's
+        // lazy-discounted resident backlog dwarfs the (idle) thief's,
+        // ask it to evict one resident at its next step boundary and
+        // push the snapshot here ([`ReplicaGauges::evict_to`]). The
+        // request is asymptotically free for the victim (one relaxed
+        // load per boundary) and raced with compare_exchange so only
+        // one thief at a time asks.
+        let my_cost = lazy_cost(&me.gauges.snapshot(&me.tier));
+        let mut best: Option<(f64, usize)> = None;
+        for (i, p) in peers.iter().enumerate() {
+            if p.id == thief || p.gauges.finished.load(Ordering::Acquire) {
+                continue;
+            }
+            // at least two residents: relieving a lone trajectory just
+            // moves latency around (and could ping-pong it forever)
+            if p.gauges.queued.load(Ordering::Relaxed) < 2 {
+                continue;
+            }
+            let cost = lazy_cost(&p.gauges.snapshot(&p.tier));
+            if cost >= MID_RELIEF_MIN_COST
+                && cost >= MID_RELIEF_FACTOR * my_cost.max(1.0)
+                && best.map_or(true, |(c, _)| cost > c)
+            {
+                best = Some((cost, i));
+            }
+        }
+        if let Some((_, vi)) = best {
+            let _ = peers[vi].gauges.evict_to.compare_exchange(
+                0, thief + 1, Ordering::AcqRel, Ordering::Relaxed);
+        }
         None
+    }
+
+    /// Hand `job` to the compatible, open sibling of `from` with the
+    /// lowest lazy-discounted backlog (drain-by-migration and the
+    /// graceful half of crash recovery). Full gauge transfer moves with
+    /// the job — destination first, then the `from` side — exactly like
+    /// a queued-job steal. Returns the destination replica id, or the
+    /// job back when no sibling can take it (the caller re-admits it
+    /// locally: placement is an optimization, never a place work can
+    /// be lost).
+    pub fn place(&self, from: usize, job: PoolJob)
+                 -> Result<usize, PoolJob> {
+        let peers = self.peers.lock().unwrap_or_else(|p| p.into_inner());
+        let mut order: Vec<(f64, usize)> = peers
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| {
+                p.id != from
+                    && !p.gauges.finished.load(Ordering::Acquire)
+                    && p.admits(job.slo(), job.lanes())
+            })
+            .map(|(i, p)| (lazy_cost(&p.gauges.snapshot(&p.tier)), i))
+            .collect();
+        order.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.1.cmp(&b.1))
+        });
+        let mut job = job;
+        for (_, i) in order {
+            match transfer(&peers, from, i, job, true) {
+                Ok(dest) => return Ok(dest),
+                Err(j) => job = j,
+            }
+        }
+        Err(job)
+    }
+
+    /// Push `job` to the specific replica `to` (mid-trajectory relief:
+    /// the victim answers the thief that asked). Validates the thief's
+    /// live compatibility and queue state; on failure the job comes
+    /// back and the caller re-admits locally.
+    pub fn push_to(&self, from: usize, to: usize, job: PoolJob)
+                   -> Result<usize, PoolJob> {
+        let peers = self.peers.lock().unwrap_or_else(|p| p.into_inner());
+        let Some(idx) = peers.iter().position(|p| p.id == to) else {
+            return Err(job);
+        };
+        let p = &peers[idx];
+        if p.gauges.finished.load(Ordering::Acquire)
+            || !p.admits(job.slo(), job.lanes())
+        {
+            return Err(job);
+        }
+        transfer(&peers, from, idx, job, true)
+    }
+
+    /// [`Self::place`] for a replica whose worker is already dead
+    /// (crash resume): only the destination's gauges are credited — the
+    /// panic handler resolves the dead side's whole ledger wholesale,
+    /// so per-job decrements here would double-count.
+    pub fn place_from_dead(&self, from: usize, job: PoolJob)
+                           -> Result<usize, PoolJob> {
+        let peers = self.peers.lock().unwrap_or_else(|p| p.into_inner());
+        let mut order: Vec<(f64, usize)> = peers
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| {
+                p.id != from
+                    && !p.gauges.finished.load(Ordering::Acquire)
+                    && p.admits(job.slo(), job.lanes())
+            })
+            .map(|(i, p)| (lazy_cost(&p.gauges.snapshot(&p.tier)), i))
+            .collect();
+        order.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.1.cmp(&b.1))
+        });
+        let mut job = job;
+        for (_, i) in order {
+            match transfer(&peers, from, i, job, false) {
+                Ok(dest) => return Ok(dest),
+                Err(j) => job = j,
+            }
+        }
+        Err(job)
+    }
+}
+
+/// Ask for mid-trajectory relief only from victims whose effective
+/// backlog is at least this many full-cost steps…
+const MID_RELIEF_MIN_COST: f64 = 8.0;
+/// …and at least this multiple of the thief's own effective backlog
+/// ("dwarfs", not "exceeds" — eviction costs a flush + re-sync, so the
+/// imbalance must be worth it).
+const MID_RELIEF_FACTOR: f64 = 4.0;
+
+/// Move one job into `peers[to_idx]`'s queue with gauge transfer,
+/// destination first. When `from_side` is set, the `from` replica's
+/// gauges give the accounting up (live migration); when clear, the dead
+/// side is settled elsewhere (crash resume). On a full/closed queue the
+/// destination's optimistic credit unwinds and the job returns.
+fn transfer(peers: &[StealPeer], from: usize, to_idx: usize, job: PoolJob,
+            from_side: bool) -> Result<usize, PoolJob> {
+    let dest = &peers[to_idx];
+    let steps = job.remaining_steps();
+    dest.gauges.queued.fetch_add(1, Ordering::Relaxed);
+    dest.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
+    match dest.queue.try_push(job) {
+        Ok(()) => {
+            if from_side {
+                if let Some(v) = peers.iter().find(|p| p.id == from) {
+                    dec(&v.gauges.queued, 1);
+                    dec(&v.gauges.pending_steps, steps);
+                }
+            }
+            Ok(dest.id)
+        }
+        Err(j) => {
+            dec(&dest.gauges.queued, 1);
+            dec(&dest.gauges.pending_steps, steps);
+            Err(j)
+        }
     }
 }
 
@@ -282,10 +448,19 @@ mod tests {
         p.gauges.queued.fetch_add(1, Ordering::Relaxed);
         p.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
         p.queue
-            .try_push(PoolJob { req, respond: tx, enqueued_us: 0 })
+            .try_push(PoolJob::fresh(req, tx, 0))
             .map_err(|_| "push")
             .unwrap();
         rx
+    }
+
+    fn seed_of(job: &PoolJob) -> u64 {
+        match &job.payload {
+            crate::coordinator::pool::replica::JobPayload::Fresh(r) => r.seed,
+            crate::coordinator::pool::replica::JobPayload::Resumed(s) => {
+                s.req.seed
+            }
+        }
     }
 
     #[test]
@@ -297,7 +472,7 @@ mod tests {
         drop(peers);
 
         let job = rb.steal_for(1).expect("job should migrate");
-        assert_eq!(job.req.steps, 7);
+        assert_eq!(job.remaining_steps(), 7);
         let peers = rb.peers.lock().unwrap();
         // victim fully relieved…
         assert_eq!(peers[0].gauges.queued.load(Ordering::Relaxed), 0);
@@ -330,7 +505,7 @@ mod tests {
         // cost(0) = 100·(1−0.9) = 10, cost(2) = 60·(1−0) = 60 → steal
         // from peer 2 even though peer 0 queues more raw steps
         let job = rb.steal_for(1).expect("steal");
-        assert_eq!(job.req.steps, 60);
+        assert_eq!(job.remaining_steps(), 60);
         let peers = rb.peers.lock().unwrap();
         assert_eq!(peers[2].gauges.stolen.load(Ordering::Relaxed), 1);
         assert_eq!(peers[0].gauges.stolen.load(Ordering::Relaxed), 0);
@@ -399,7 +574,7 @@ mod tests {
         let _rx2 = enqueue_slo(&peers[0], 4, 20, Slo::Throughput);
         drop(peers);
         let job = rb.steal_for(1).expect("best-effort job migrates");
-        assert_eq!(job.req.seed, 10, "the eligible (older) job was taken");
+        assert_eq!(seed_of(&job), 10, "the eligible (older) job was taken");
         let peers = rb.peers.lock().unwrap();
         assert_eq!(peers[0].queue.len(), 1, "throughput job left in place");
         assert_eq!(peers[0].gauges.pending_steps.load(Ordering::Relaxed), 4);
@@ -424,7 +599,7 @@ mod tests {
         peers[0].gauges.pending_steps.fetch_add(5, Ordering::Relaxed);
         peers[0]
             .queue
-            .try_push(PoolJob { req, respond: tx, enqueued_us: 0 })
+            .try_push(PoolJob::fresh(req, tx, 0))
             .map_err(|_| "push")
             .unwrap();
         drop(peers);
@@ -441,11 +616,7 @@ mod tests {
         peers[0].gauges.pending_steps.fetch_add(5, Ordering::Relaxed);
         peers[0]
             .queue
-            .try_push(PoolJob {
-                req: Request::new(0, 1, 5, 78),
-                respond: tx,
-                enqueued_us: 0,
-            })
+            .try_push(PoolJob::fresh(Request::new(0, 1, 5, 78), tx, 0))
             .map_err(|_| "push")
             .unwrap();
         drop(peers);
@@ -542,6 +713,145 @@ mod tests {
         let _rx2 = enqueue(&peers[0], 4, 22);
         drop(peers);
         let job = rb.steal_for(1).expect("steal");
-        assert_eq!(job.req.seed, 22, "back of the queue migrates first");
+        assert_eq!(seed_of(&job), 22, "back of the queue migrates first");
+    }
+
+    fn resumed_job(id: u64, steps: usize, cursor: usize, slo: Slo)
+                   -> (PoolJob, mpsc::Receiver<RequestResult>) {
+        use crate::coordinator::request::TrajectorySnapshot;
+        let (tx, rx) = mpsc::channel();
+        let mut req = Request::new(id, 1, steps, id).with_slo(slo);
+        req.cfg_scale = 1.0;
+        let snap = TrajectorySnapshot {
+            req,
+            timesteps: vec![0; steps],
+            cursor,
+            z: Vec::new(),
+            caches: Vec::new(),
+            skip_counts: Vec::new(),
+            modules_seen: Vec::new(),
+            admitted_us: 1,
+            steps_done: cursor,
+        };
+        (PoolJob::resumed(snap, tx, 0), rx)
+    }
+
+    #[test]
+    fn place_moves_snapshot_and_gauges_to_least_loaded_sibling() {
+        let rb = Rebalancer::new(2);
+        rb.register(vec![peer(0), peer(1), peer(2)]);
+        {
+            let peers = rb.peers.lock().unwrap();
+            // the evicting replica owns the trajectory's ledger entry
+            peers[0].gauges.queued.fetch_add(1, Ordering::Relaxed);
+            peers[0].gauges.pending_steps.fetch_add(6, Ordering::Relaxed);
+            // sibling 1 is busier than sibling 2
+            peers[1].gauges.pending_steps.fetch_add(40, Ordering::Relaxed);
+        }
+        let (job, _rx) = resumed_job(9, 10, 4, Slo::Besteffort);
+        assert_eq!(job.remaining_steps(), 6, "pending = steps − cursor");
+        let dest = rb.place(0, job).map_err(|_| "place").unwrap();
+        assert_eq!(dest, 2, "lowest effective backlog wins");
+        let peers = rb.peers.lock().unwrap();
+        assert_eq!(peers[0].gauges.queued.load(Ordering::Relaxed), 0);
+        assert_eq!(peers[0].gauges.pending_steps.load(Ordering::Relaxed), 0);
+        assert_eq!(peers[2].gauges.queued.load(Ordering::Relaxed), 1);
+        assert_eq!(peers[2].gauges.pending_steps.load(Ordering::Relaxed), 6,
+                   "only the REMAINING steps migrate");
+        assert_eq!(peers[2].queue.len(), 1);
+    }
+
+    #[test]
+    fn place_respects_live_retag_compatibility() {
+        // sibling 1 was provisioned throughput but retagged latency:
+        // a throughput snapshot must NOT land there, and with no other
+        // sibling the job comes back for local resumption
+        let rb = Rebalancer::new(2);
+        rb.register(vec![
+            peer_tiered(0, ReplicaTier::new(Slo::Throughput, 8)),
+            peer_tiered(1, ReplicaTier::new(Slo::Throughput, 8)),
+        ]);
+        {
+            let peers = rb.peers.lock().unwrap();
+            peers[1].gauges.slo_tag.store(
+                Slo::Latency.index() + 1, Ordering::Release);
+        }
+        let (job, _rx) = resumed_job(5, 8, 2, Slo::Throughput);
+        assert!(rb.place(0, job).is_err(),
+                "retagged sibling no longer serves throughput");
+        // the reverse retag opens it up
+        {
+            let peers = rb.peers.lock().unwrap();
+            peers[1].gauges.slo_tag.store(0, Ordering::Release);
+        }
+        let (job, _rx) = resumed_job(6, 8, 2, Slo::Throughput);
+        assert_eq!(rb.place(0, job).map_err(|_| "place").unwrap(), 1);
+    }
+
+    #[test]
+    fn push_to_validates_target_and_returns_job_on_mismatch() {
+        let rb = Rebalancer::new(2);
+        rb.register(vec![
+            peer_tiered(0, ReplicaTier::new(Slo::Besteffort, 8)),
+            peer_tiered(1, ReplicaTier::new(Slo::Latency, 1)),
+        ]);
+        let (job, _rx) = resumed_job(3, 6, 1, Slo::Throughput);
+        let back = rb.push_to(0, 1, job)
+            .err()
+            .expect("latency thief cannot take a throughput snapshot");
+        assert_eq!(back.remaining_steps(), 5, "job intact for local resume");
+        let (job, _rx) = resumed_job(4, 6, 1, Slo::Latency);
+        assert_eq!(rb.push_to(0, 1, job).map_err(|_| "push").unwrap(), 1);
+        let peers = rb.peers.lock().unwrap();
+        assert_eq!(peers[1].gauges.pending_steps.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn place_from_dead_credits_only_the_destination() {
+        let rb = Rebalancer::new(2);
+        rb.register(vec![peer(0), peer(1)]);
+        {
+            // the dead replica's ledger is settled by the panic
+            // handler, not per-job — seed it to prove it is untouched
+            let peers = rb.peers.lock().unwrap();
+            peers[0].gauges.queued.fetch_add(1, Ordering::Relaxed);
+            peers[0].gauges.pending_steps.fetch_add(7, Ordering::Relaxed);
+        }
+        let (job, _rx) = resumed_job(8, 9, 2, Slo::Besteffort);
+        assert_eq!(rb.place_from_dead(0, job).map_err(|_| "p").unwrap(), 1);
+        let peers = rb.peers.lock().unwrap();
+        assert_eq!(peers[0].gauges.queued.load(Ordering::Relaxed), 1,
+                   "dead side untouched (handler settles it wholesale)");
+        assert_eq!(peers[0].gauges.pending_steps.load(Ordering::Relaxed), 7);
+        assert_eq!(peers[1].gauges.queued.load(Ordering::Relaxed), 1);
+        assert_eq!(peers[1].gauges.pending_steps.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn idle_thief_requests_mid_trajectory_relief_from_dwarfing_victim() {
+        let rb = Rebalancer::new(2);
+        rb.register(vec![peer(0), peer(1)]);
+        {
+            // victim 0: two residents, deep engine backlog, empty queue
+            let peers = rb.peers.lock().unwrap();
+            peers[0].gauges.queued.store(2, Ordering::Relaxed);
+            peers[0].gauges.pending_steps.store(50, Ordering::Relaxed);
+        }
+        assert!(rb.steal_for(1).is_none(), "nothing queued to steal");
+        let peers = rb.peers.lock().unwrap();
+        assert_eq!(peers[0].gauges.evict_to.load(Ordering::Relaxed), 2,
+                   "victim asked to evict one resident to thief 1");
+        drop(peers);
+        // a lone-resident victim is never asked, however deep
+        rb.register(vec![peer(0), peer(1)]);
+        {
+            let peers = rb.peers.lock().unwrap();
+            peers[0].gauges.queued.store(1, Ordering::Relaxed);
+            peers[0].gauges.pending_steps.store(500, Ordering::Relaxed);
+        }
+        assert!(rb.steal_for(1).is_none());
+        let peers = rb.peers.lock().unwrap();
+        assert_eq!(peers[0].gauges.evict_to.load(Ordering::Relaxed), 0,
+                   "never ping-pong a lone trajectory");
     }
 }

@@ -1,12 +1,22 @@
 //! Request types and per-request trajectory state.
+//!
+//! A trajectory's denoising state is a first-class portable value:
+//! [`TrajectorySnapshot`] carries everything a request has accumulated
+//! (params, step cursor, latent z, per-lane module caches, skip/seen
+//! counters) in a versioned byte encoding, so a replica can evict a
+//! running request at a step boundary and any compatible sibling can
+//! resume it bit-identically. [`ActiveRequest`] is the engine-resident
+//! form: the same portable state plus nothing else — wall-clock
+//! admission is stamped in shared epoch microseconds (`obs::epoch`),
+//! not an `Instant`, precisely so it survives migration.
 
 use crate::config::Slo;
 use crate::tensor::Tensor;
 use crate::util::prng::Rng;
-use std::time::Instant;
+use anyhow::{bail, Result};
 
 /// A generation request as admitted by the router.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: u64,
     pub class_label: usize,
@@ -49,7 +59,7 @@ impl Request {
 }
 
 /// Per-lane cache store: one [N*D] vector per (layer, module).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LaneCaches {
     pub values: Vec<Vec<f32>>, // [2L][N*D]
     pub valid: Vec<bool>,      // [2L]
@@ -78,7 +88,11 @@ pub struct ActiveRequest {
     /// Per-(layer,module) skip counts for this request.
     pub skip_counts: Vec<u32>,
     pub modules_seen: Vec<u32>,
-    pub started: Instant,
+    /// Admission stamp in shared epoch microseconds (`obs::epoch_us`).
+    /// Epoch-based (not an `Instant`) so the stamp travels with a
+    /// snapshot and the finishing replica reports the full end-to-end
+    /// latency, counted once, however many migrations happened.
+    pub admitted_us: u64,
     pub steps_done: usize,
 }
 
@@ -97,8 +111,44 @@ impl ActiveRequest {
             caches: (0..lanes).map(|_| LaneCaches::empty(depth, nd)).collect(),
             skip_counts: vec![0; 2 * depth],
             modules_seen: vec![0; 2 * depth],
-            started: Instant::now(),
+            admitted_us: crate::obs::epoch_us(),
             steps_done: 0,
+        }
+    }
+
+    /// Package this trajectory as a portable snapshot. The caller (the
+    /// engine's evict path) must have flushed any batch-resident cache
+    /// rows back into `caches` first — the snapshot is only as fresh as
+    /// the lane stores it copies out.
+    pub fn into_snapshot(self) -> TrajectorySnapshot {
+        TrajectorySnapshot {
+            req: self.req,
+            timesteps: self.timesteps,
+            cursor: self.cursor,
+            z: self.z,
+            caches: self.caches,
+            skip_counts: self.skip_counts,
+            modules_seen: self.modules_seen,
+            admitted_us: self.admitted_us,
+            steps_done: self.steps_done,
+        }
+    }
+
+    /// Rebuild engine-resident state from a snapshot. Every field is
+    /// restored verbatim — in particular `z` is **never** re-sampled,
+    /// so a resumed trajectory continues bit-identically from its
+    /// eviction boundary.
+    pub fn from_snapshot(snap: TrajectorySnapshot) -> ActiveRequest {
+        ActiveRequest {
+            req: snap.req,
+            z: snap.z,
+            timesteps: snap.timesteps,
+            cursor: snap.cursor,
+            caches: snap.caches,
+            skip_counts: snap.skip_counts,
+            modules_seen: snap.modules_seen,
+            admitted_us: snap.admitted_us,
+            steps_done: snap.steps_done,
         }
     }
 
@@ -124,6 +174,250 @@ impl ActiveRequest {
         let seen: u32 = self.modules_seen.iter().sum();
         let skipped: u32 = self.skip_counts.iter().sum();
         skipped as f64 / seen.max(1) as f64
+    }
+}
+
+/// Magic prefix of an encoded [`TrajectorySnapshot`].
+const SNAP_MAGIC: [u8; 4] = *b"LZTS";
+/// Current snapshot encoding version. Bump on any layout change; the
+/// decoder rejects every version it does not know.
+const SNAP_VERSION: u8 = 1;
+/// Decode-time ceiling on any single length field (elements). The
+/// largest real field is z at C·H·W or a lane store at 2L·N·D — far
+/// below this; a corrupt length must fail fast instead of attempting a
+/// multi-GB allocation.
+const SNAP_MAX_LEN: usize = 1 << 28;
+
+/// A portable, self-contained image of an in-flight trajectory: the
+/// request params plus everything accumulated since admission (step
+/// cursor, latent z, per-lane module caches, skip/seen counters, the
+/// epoch-µs admission stamp). [`crate::coordinator::pool::PoolEngine`]
+/// implementations produce one at a step boundary (`evict_to_snapshot`)
+/// and consume one (`admit_snapshot`); the pool layer moves them
+/// between replicas for stealing, drain-by-migration, and crash
+/// resume. Resuming from a snapshot is bit-identical to never having
+/// been interrupted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrajectorySnapshot {
+    /// The admitted request (pool-unique id, params, SLO tag).
+    pub req: Request,
+    /// DDIM timestep subset (descending), as planned at admission.
+    pub timesteps: Vec<usize>,
+    /// Steps already denoised; the resume point.
+    pub cursor: usize,
+    /// Latent z_t at the eviction boundary, flat [C*H*W].
+    pub z: Vec<f32>,
+    /// Per-lane module caches ([0]=cond, [1]=uncond when CFG), flushed
+    /// from batch residency at eviction.
+    pub caches: Vec<LaneCaches>,
+    /// Per-(layer,module) skip counts so far, [2L].
+    pub skip_counts: Vec<u32>,
+    /// Per-(layer,module) invocation counts so far, [2L].
+    pub modules_seen: Vec<u32>,
+    /// Admission stamp in shared epoch microseconds.
+    pub admitted_us: u64,
+    /// Denoising steps completed (mirrors `cursor` on the engine path).
+    pub steps_done: usize,
+}
+
+impl TrajectorySnapshot {
+    /// Steps still to denoise — the unit of backlog/gauge accounting.
+    pub fn pending_steps(&self) -> usize {
+        self.timesteps.len().saturating_sub(self.cursor)
+    }
+
+    /// Batch lanes the trajectory occupies (CFG doubles).
+    pub fn lanes(&self) -> usize {
+        self.req.lanes()
+    }
+
+    /// Serialize to the versioned byte encoding: `b"LZTS"` + version
+    /// byte, then little-endian length-prefixed fields in declaration
+    /// order. [`Self::decode`] inverts this exactly.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + 4 * self.z.len());
+        out.extend_from_slice(&SNAP_MAGIC);
+        out.push(SNAP_VERSION);
+        out.extend_from_slice(&self.req.id.to_le_bytes());
+        out.extend_from_slice(&(self.req.class_label as u64).to_le_bytes());
+        out.extend_from_slice(&(self.req.steps as u64).to_le_bytes());
+        out.extend_from_slice(&self.req.seed.to_le_bytes());
+        out.extend_from_slice(&self.req.cfg_scale.to_le_bytes());
+        out.push(self.req.slo.index() as u8);
+        out.extend_from_slice(&self.admitted_us.to_le_bytes());
+        out.extend_from_slice(&(self.cursor as u64).to_le_bytes());
+        out.extend_from_slice(&(self.steps_done as u64).to_le_bytes());
+        put_len(&mut out, self.timesteps.len());
+        for &t in &self.timesteps {
+            out.extend_from_slice(&(t as u32).to_le_bytes());
+        }
+        put_len(&mut out, self.z.len());
+        for &v in &self.z {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        put_len(&mut out, self.caches.len());
+        for lane in &self.caches {
+            put_len(&mut out, lane.values.len());
+            for slot in &lane.values {
+                put_len(&mut out, slot.len());
+                for &v in slot {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            put_len(&mut out, lane.valid.len());
+            for &b in &lane.valid {
+                out.push(b as u8);
+            }
+        }
+        put_len(&mut out, self.skip_counts.len());
+        for &c in &self.skip_counts {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        put_len(&mut out, self.modules_seen.len());
+        for &c in &self.modules_seen {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        out
+    }
+
+    /// Decode an encoded snapshot, rejecting bad magic, unknown
+    /// versions, truncation, trailing garbage, and inconsistent
+    /// structure (per-lane `values`/`valid` length mismatch, cursor
+    /// past the schedule).
+    pub fn decode(bytes: &[u8]) -> Result<TrajectorySnapshot> {
+        let mut r = SnapReader { buf: bytes, pos: 0 };
+        let magic = r.take(4)?;
+        if magic != SNAP_MAGIC {
+            bail!("snapshot: bad magic {magic:?}");
+        }
+        let version = r.u8()?;
+        if version != SNAP_VERSION {
+            bail!("snapshot: unsupported version {version} \
+                   (this build reads v{SNAP_VERSION})");
+        }
+        let id = r.u64()?;
+        let class_label = r.u64()? as usize;
+        let steps = r.u64()? as usize;
+        let seed = r.u64()?;
+        let cfg_scale = r.f32()?;
+        let slo_idx = r.u8()? as usize;
+        let Some(&slo) = Slo::ALL.get(slo_idx) else {
+            bail!("snapshot: bad slo index {slo_idx}");
+        };
+        let admitted_us = r.u64()?;
+        let cursor = r.u64()? as usize;
+        let steps_done = r.u64()? as usize;
+        let nt = r.len()?;
+        let mut timesteps = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            timesteps.push(r.u32()? as usize);
+        }
+        let nz = r.len()?;
+        let mut z = Vec::with_capacity(nz);
+        for _ in 0..nz {
+            z.push(r.f32()?);
+        }
+        let lanes = r.len()?;
+        let mut caches = Vec::with_capacity(lanes);
+        for _ in 0..lanes {
+            let nslots = r.len()?;
+            let mut values = Vec::with_capacity(nslots);
+            for _ in 0..nslots {
+                let nd = r.len()?;
+                let mut slot = Vec::with_capacity(nd);
+                for _ in 0..nd {
+                    slot.push(r.f32()?);
+                }
+                values.push(slot);
+            }
+            let nvalid = r.len()?;
+            if nvalid != nslots {
+                bail!("snapshot: lane valid len {nvalid} != values len \
+                       {nslots}");
+            }
+            let mut valid = Vec::with_capacity(nvalid);
+            for _ in 0..nvalid {
+                valid.push(r.u8()? != 0);
+            }
+            caches.push(LaneCaches { values, valid });
+        }
+        let nsk = r.len()?;
+        let mut skip_counts = Vec::with_capacity(nsk);
+        for _ in 0..nsk {
+            skip_counts.push(r.u32()?);
+        }
+        let nms = r.len()?;
+        let mut modules_seen = Vec::with_capacity(nms);
+        for _ in 0..nms {
+            modules_seen.push(r.u32()?);
+        }
+        if r.pos != bytes.len() {
+            bail!("snapshot: {} trailing bytes", bytes.len() - r.pos);
+        }
+        if cursor > timesteps.len() {
+            bail!("snapshot: cursor {cursor} past schedule of {}",
+                  timesteps.len());
+        }
+        if skip_counts.len() != modules_seen.len() {
+            bail!("snapshot: skip/seen counter shapes differ");
+        }
+        Ok(TrajectorySnapshot {
+            req: Request { id, class_label, steps, seed, cfg_scale, slo },
+            timesteps,
+            cursor,
+            z,
+            caches,
+            skip_counts,
+            modules_seen,
+            admitted_us,
+            steps_done,
+        })
+    }
+}
+
+fn put_len(out: &mut Vec<u8>, n: usize) {
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over an encoded snapshot.
+struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        let Some(end) = end else {
+            bail!("snapshot: truncated at byte {} (want {n} more)", self.pos);
+        };
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn len(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n > SNAP_MAX_LEN {
+            bail!("snapshot: length field {n} over cap {SNAP_MAX_LEN}");
+        }
+        Ok(n)
     }
 }
 
@@ -196,5 +490,104 @@ mod tests {
         ar.cursor = 1;
         assert!(ar.done());
         assert_eq!(ar.current_t(), None);
+    }
+
+    /// A mid-trajectory snapshot with every field populated non-trivially
+    /// (CFG pair → 2 lanes, mixed validity, nonzero counters).
+    fn sample_snapshot() -> TrajectorySnapshot {
+        let mut req = Request::new(41, 7, 4, 0xBEEF).with_slo(Slo::Latency);
+        req.cfg_scale = 2.0;
+        let mut ar = ActiveRequest::new(req, vec![999, 749, 499, 249], 2, 8, 12);
+        ar.cursor = 2;
+        ar.steps_done = 2;
+        ar.skip_counts = vec![1, 0, 3, 2];
+        ar.modules_seen = vec![2, 2, 4, 4];
+        for (lane, lc) in ar.caches.iter_mut().enumerate() {
+            for (k, slot) in lc.values.iter_mut().enumerate() {
+                for (i, v) in slot.iter_mut().enumerate() {
+                    *v = (lane * 100 + k * 10 + i) as f32 + 0.25;
+                }
+                lc.valid[k] = k % 2 == lane % 2;
+            }
+        }
+        ar.into_snapshot()
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_active_request() {
+        let snap = sample_snapshot();
+        let ar = ActiveRequest::from_snapshot(snap.clone());
+        assert_eq!(ar.cursor, 2);
+        assert_eq!(ar.admitted_us, snap.admitted_us);
+        let back = ar.into_snapshot();
+        assert_eq!(back, snap, "resident form must preserve every field");
+    }
+
+    #[test]
+    fn snapshot_encoding_roundtrips_bit_exactly() {
+        let snap = sample_snapshot();
+        let bytes = snap.encode();
+        let back = TrajectorySnapshot::decode(&bytes).expect("decode");
+        assert_eq!(back, snap);
+        // f32 payloads round-trip by bits, not by approximate value
+        assert_eq!(back.z.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                   snap.z.iter().map(|v| v.to_bits()).collect::<Vec<_>>());
+        assert_eq!(back.pending_steps(), 2);
+        assert_eq!(back.lanes(), 2);
+    }
+
+    #[test]
+    fn snapshot_decode_rejects_bad_inputs() {
+        let good = sample_snapshot().encode();
+        // bad magic
+        let mut b = good.clone();
+        b[0] = b'X';
+        assert!(TrajectorySnapshot::decode(&b).is_err(), "bad magic");
+        // unknown version
+        let mut b = good.clone();
+        b[4] = 99;
+        assert!(TrajectorySnapshot::decode(&b).is_err(), "unknown version");
+        // truncation at every prefix length must error, never panic
+        for cut in 0..good.len() {
+            assert!(TrajectorySnapshot::decode(&good[..cut]).is_err(),
+                    "truncated at {cut} must be rejected");
+        }
+        // trailing garbage
+        let mut b = good.clone();
+        b.push(0);
+        assert!(TrajectorySnapshot::decode(&b).is_err(), "trailing bytes");
+        // corrupt slo index
+        let mut b = good.clone();
+        // slo byte sits right after magic+version+id+label+steps+seed+cfg
+        let slo_off = 4 + 1 + 8 + 8 + 8 + 8 + 4;
+        b[slo_off] = 7;
+        assert!(TrajectorySnapshot::decode(&b).is_err(), "bad slo index");
+        // absurd length field fails fast instead of allocating
+        let mut b = good;
+        let ts_len_off = slo_off + 1 + 8 + 8 + 8;
+        b[ts_len_off..ts_len_off + 4]
+            .copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(TrajectorySnapshot::decode(&b).is_err(), "huge length");
+    }
+
+    #[test]
+    fn snapshot_tolerates_empty_payloads() {
+        // simulator snapshots carry no z / caches — the encoding must
+        // round-trip the degenerate shape too
+        let req = Request::new(9, 1, 3, 5);
+        let snap = TrajectorySnapshot {
+            req,
+            timesteps: vec![999, 499, 99],
+            cursor: 1,
+            z: vec![],
+            caches: vec![],
+            skip_counts: vec![],
+            modules_seen: vec![],
+            admitted_us: 12345,
+            steps_done: 1,
+        };
+        let back = TrajectorySnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back, snap);
+        assert_eq!(back.pending_steps(), 2);
     }
 }

@@ -273,7 +273,23 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> 
 /// errors are in the returned report.
 pub fn serve_pool(router: Router, addr: &str,
                   max_requests: usize) -> Result<PoolReport> {
-    let router = Arc::new(router);
+    serve_pool_shared(Arc::new(router), addr, max_requests, 0)
+}
+
+/// [`serve_pool`] over a shared router, with an optional forced
+/// drain-by-migration: once `drain_after > 0` requests have completed,
+/// replica 0 is asked to evict its residents to siblings at its next
+/// step boundary, and the ask is re-armed every poll tick until at
+/// least one trajectory actually migrates (a sweep that catches an
+/// empty engine migrates nothing). Exercises the mid-flight snapshot
+/// path end-to-end under real traffic; requires pool stealing and at
+/// least two replicas, else the trigger is ignored. The caller keeps
+/// its own `Arc` clone, so post-shutdown ledger counters
+/// ([`Router::total_dispatched`] etc.) stay readable after the report
+/// is returned.
+pub fn serve_pool_shared(router: Arc<Router>, addr: &str,
+                         max_requests: usize,
+                         drain_after: usize) -> Result<PoolReport> {
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("binding {addr}"))?;
     listener.set_nonblocking(true)?;
@@ -326,6 +342,9 @@ pub fn serve_pool(router: Router, addr: &str,
             }
         })?;
 
+    let force_drain = drain_after > 0
+        && router.stealing()
+        && router.replica_count() > 1;
     loop {
         if stop.load(Ordering::Relaxed) {
             break; // acceptor hit a fatal error
@@ -338,6 +357,13 @@ pub fn serve_pool(router: Router, addr: &str,
         if router.all_replicas_finished() {
             log::warn!("every replica has exited — stopping pool");
             break;
+        }
+        if force_drain
+            && router.total_completed() >= drain_after as u64
+            && router.total_migrated() == 0
+        {
+            // re-arm until a sweep lands on a resident trajectory
+            router.drain_replica(0);
         }
         std::thread::sleep(std::time::Duration::from_millis(5));
     }

@@ -199,6 +199,15 @@ pub struct ServeStats {
     pub rows_retained: u64,
     /// Batch rows migrated (evicted/loaded) on membership change.
     pub rows_migrated: u64,
+    /// Trajectories resumed from a [`TrajectorySnapshot`] on this
+    /// engine (mid-flight migration, drain hand-off, or crash resume).
+    ///
+    /// [`TrajectorySnapshot`]: crate::coordinator::request::TrajectorySnapshot
+    pub resumed: u64,
+    /// Denoising steps that did **not** have to be re-run because a
+    /// resumed trajectory arrived with its cursor (and caches) intact —
+    /// the work migration saved vs. re-denoising from step 0.
+    pub resume_steps_saved: u64,
     /// Log-bucketed latency histogram fed by [`Self::record_latency`] —
     /// the quantile source (no per-call sort), mergeable across
     /// replicas.

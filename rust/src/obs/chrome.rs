@@ -81,6 +81,14 @@ fn event_args(ev: &TraceEvent) -> Json {
                 ("steps", Json::num(steps as f64)),
             ])
         }
+        EventKind::Migrate => {
+            let (cursor, remaining) = unpack_pair(ev.arg);
+            Json::obj(vec![
+                ("id", Json::num(ev.kind_id as f64)),
+                ("cursor", Json::num(cursor as f64)),
+                ("remaining_steps", Json::num(remaining as f64)),
+            ])
+        }
     }
 }
 

@@ -44,6 +44,10 @@ pub enum EventKind {
     /// A request finished (`id` = request id, `dur_us` = latency,
     /// `arg` = packed (slo index, steps)).
     Retire = 8,
+    /// A trajectory crossed a replica boundary as a portable snapshot:
+    /// evicted out (drain / mid-trajectory relief) or admitted back in
+    /// (`id` = request id, `arg` = packed (cursor, remaining steps)).
+    Migrate = 9,
 }
 
 impl EventKind {
@@ -59,6 +63,7 @@ impl EventKind {
             6 => EventKind::Scatter,
             7 => EventKind::Steal,
             8 => EventKind::Retire,
+            9 => EventKind::Migrate,
             _ => return None,
         })
     }
@@ -74,6 +79,7 @@ impl EventKind {
             EventKind::Scatter => "scatter",
             EventKind::Steal => "steal",
             EventKind::Retire => "retire",
+            EventKind::Migrate => "migrate",
         }
     }
 

@@ -7,7 +7,7 @@ use lazydit::config::{RoutePolicy, Slo};
 use lazydit::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
 use lazydit::coordinator::pool::sim::{sim_image, SimEngine, SimSpec};
 use lazydit::coordinator::pool::steal::Rebalancer;
-use lazydit::coordinator::pool::Router;
+use lazydit::coordinator::pool::{PoolEngine, Router};
 use lazydit::coordinator::request::{Request, RequestResult};
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc};
@@ -618,6 +618,171 @@ fn stats_verb_reports_live_gauges_over_the_wire() {
     assert!(line.contains("\"id\""), "second response: {line}");
     let report = server.join().expect("server thread");
     assert_eq!(report.completed(), 2);
+}
+
+#[test]
+fn drain_by_migration_relocates_residents_bit_identically() {
+    // drain replica 0 while trajectories are mid-flight: every resident
+    // must cross to the sibling as a portable snapshot and finish with
+    // exactly the image an uninterrupted run would have produced
+    let elems = SimSpec::fast().img_elems;
+    let reference: BTreeMap<u64, Vec<f32>> = (0..8u64)
+        .map(|i| {
+            let req = Request::new(0, (i % 10) as usize, 8, 4000 + i);
+            (4000 + i, sim_image(&req, elems).data().to_vec())
+        })
+        .collect();
+    let specs = vec![SimSpec::with_lazy(50, 150_000); 2];
+    let router =
+        build_stealing_router(specs, RoutePolicy::RoundRobin, 1024, 8);
+    let mut rxs = Vec::new();
+    for i in 0..8u64 {
+        let (tx, rx) = mpsc::channel();
+        let req = Request::new(0, (i % 10) as usize, 8, 4000 + i);
+        assert!(router.dispatch(req, tx));
+        rxs.push(rx);
+    }
+    // re-arm the sweep until it lands on a resident (a sweep that finds
+    // an empty engine migrates nothing) — mirrors serve's --drain-after
+    let mut migrated = false;
+    for _ in 0..2000 {
+        router.drain_replica(0);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        if router.total_migrated() > 0 {
+            migrated = true;
+            break;
+        }
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for rx in rxs {
+        let r = rx.recv().expect("no request may strand during a drain");
+        let seed = seed_of(&r, &reference);
+        assert!(seen.insert(seed), "duplicate image for seed {seed}");
+    }
+    assert_eq!(seen.len(), 8, "a migrated trajectory diverged or was lost");
+    let report = router.shutdown();
+    assert_eq!(report.completed(), 8);
+    assert_eq!(report.failed(), 0);
+    assert!(migrated, "drain sweep never caught a resident trajectory");
+    assert!(report.total_resumed() >= 1,
+            "a migrated snapshot must resume somewhere");
+    assert_eq!(report.total_migrated_out(), report.total_migrated_in(),
+               "every snapshot that left a replica arrived at exactly one");
+    assert_eq!(router.total_forfeited(), 0, "a drain must strand nothing");
+    assert!(report.render().contains("migration:"),
+            "migration counters surface in the pool report");
+}
+
+/// A [`SimEngine`] that panics inside `step_round` after a fixed number
+/// of successful rounds — the crash half of crash-resume. Everything
+/// else delegates, *including* the snapshot surface, so the worker's
+/// between-rounds boundary stash stays fresh right up to the crash.
+struct PanickyEngine {
+    inner: SimEngine,
+    rounds_left: usize,
+}
+
+impl lazydit::coordinator::pool::PoolEngine for PanickyEngine {
+    fn submit(&mut self, req: Request) -> u64 {
+        self.inner.submit(req)
+    }
+    fn active_count(&self) -> usize {
+        self.inner.active_count()
+    }
+    fn pending_steps(&self) -> usize {
+        self.inner.pending_steps()
+    }
+    fn step_round(&mut self)
+                  -> anyhow::Result<Vec<RequestResult>> {
+        if self.rounds_left == 0 {
+            panic!("injected mid-trajectory crash");
+        }
+        self.rounds_left -= 1;
+        self.inner.step_round()
+    }
+    fn layer_stats(&self) -> &lazydit::coordinator::stats::LayerStats {
+        self.inner.layer_stats()
+    }
+    fn serve_stats(&self) -> &lazydit::coordinator::stats::ServeStats {
+        self.inner.serve_stats()
+    }
+    fn policy_name(&self) -> String {
+        self.inner.policy_name()
+    }
+    fn active_ids(&self) -> Vec<u64> {
+        self.inner.active_ids()
+    }
+    fn evict_to_snapshot(&mut self, id: u64)
+        -> Option<lazydit::coordinator::request::TrajectorySnapshot> {
+        self.inner.evict_to_snapshot(id)
+    }
+    fn admit_snapshot(
+        &mut self,
+        snap: lazydit::coordinator::request::TrajectorySnapshot) -> u64 {
+        self.inner.admit_snapshot(snap)
+    }
+    fn snapshot_request(&self, id: u64)
+        -> Option<lazydit::coordinator::request::TrajectorySnapshot> {
+        self.inner.snapshot_request(id)
+    }
+}
+
+#[test]
+fn crashed_replica_residents_resume_on_siblings_from_last_boundary() {
+    let elems = SimSpec::fast().img_elems;
+    let reference: BTreeMap<u64, Vec<f32>> = (0..6u64)
+        .map(|i| {
+            let req = Request::new(0, (i % 10) as usize, 10, 6000 + i);
+            (6000 + i, sim_image(&req, elems).data().to_vec())
+        })
+        .collect();
+    // replica 0 dies on its 4th working round; replica 1 is healthy.
+    // Heavy per-module work keeps each round ~milliseconds so all six
+    // dispatches land well before the injected crash.
+    let rb = Rebalancer::new(8);
+    let crashy: lazydit::coordinator::pool::EngineFactory =
+        Box::new(|| {
+            Ok(Box::new(PanickyEngine {
+                inner: SimEngine::new(SimSpec::with_lazy(50, 100_000)),
+                rounds_left: 3,
+            }) as Box<dyn PoolEngine>)
+        });
+    let handles = vec![
+        ReplicaHandle::spawn_with(0, 256, crashy, Some(rb.clone())).unwrap(),
+        ReplicaHandle::spawn_with(
+            1, 256, SimEngine::factory(SimSpec::with_lazy(50, 100_000)),
+            Some(rb.clone())).unwrap(),
+    ];
+    let router =
+        Router::with_rebalancer(handles, RoutePolicy::RoundRobin, 256,
+                                Some(rb));
+    let mut rxs = Vec::new();
+    for i in 0..6u64 {
+        let (tx, rx) = mpsc::channel();
+        let req = Request::new(0, (i % 10) as usize, 10, 6000 + i);
+        assert!(router.dispatch(req, tx));
+        rxs.push(rx);
+    }
+    // every request — including replica 0's residents at crash time —
+    // must complete, and the resumed ones bit-identically to an
+    // uninterrupted run (the partially-crashed round replays from the
+    // last boundary snapshot, never from torn mid-round state)
+    let mut seen = std::collections::BTreeSet::new();
+    for rx in rxs {
+        let r = rx.recv().expect("resident lost to the crash");
+        let seed = seed_of(&r, &reference);
+        assert!(seen.insert(seed), "duplicate image for seed {seed}");
+    }
+    assert_eq!(seen.len(), 6);
+    let report = router.shutdown();
+    assert_eq!(report.completed(), 6);
+    assert_eq!(report.failed(), 1, "the crashed replica reports failure");
+    assert!(report.total_resumed() >= 1,
+            "at least one resident must resume from its boundary snapshot");
+    assert!(report.total_resume_steps_saved() >= 1,
+            "resuming from a boundary snapshot saves the completed steps");
+    assert_eq!(router.total_forfeited(), 0,
+               "with a live sibling, a crash forfeits nothing");
 }
 
 #[test]

@@ -7,6 +7,7 @@
 #   DOC_STRICT=0 scripts/tier1.sh   # demote the doc gate to advisory
 #   BENCH_SMOKE=0 scripts/tier1.sh  # skip the bench build + smoke run
 #   SERVE_SMOKE=0 scripts/tier1.sh  # skip the serve telemetry smoke
+#   MIGRATE_SMOKE=0 scripts/tier1.sh # skip the drain-by-migration smoke
 #
 # The fmt check is strict by default (ROADMAP "format the tree" item);
 # set FMT_STRICT=0 to demote it to advisory while iterating locally.
@@ -98,6 +99,41 @@ if command -v cargo >/dev/null 2>&1; then
     fi
 else
     echo "tier1: cargo unavailable, skipping serve telemetry smoke"
+fi
+
+echo "== tier1: migration smoke (strict unless MIGRATE_SMOKE=0)"
+# Drain-by-migration gate: a stealing 2-replica synthetic pool
+# self-drives requests and --drain-after forces replica 0 to evict its
+# mid-flight trajectories to the sibling as portable snapshots. The
+# serve command itself asserts the conservation law (dispatched ==
+# completed + shed + forfeited, i.e. completed == admitted − shed) and
+# exits nonzero on violation; this gate additionally requires at least
+# one resumed trajectory in the printed migration counters.
+# docs/SERVING.md documents the snapshot/migration lifecycle.
+if command -v cargo >/dev/null 2>&1; then
+    if [ "${MIGRATE_SMOKE:-1}" = "1" ]; then
+        # heavy per-module work keeps each trajectory mid-flight for
+        # many drain-poll ticks, so the re-armed sweep reliably catches
+        # a resident at a step boundary (the client is closed-loop, one
+        # request in flight at a time)
+        out=$(./target/release/lazydit serve --synthetic --replicas 2 \
+                  --steal on --self-drive 16 --addr 127.0.0.1:8492 \
+                  --sim-work 300000 --drain-after 2)
+        echo "$out" | tail -n 4
+        echo "$out" | grep -q 'conservation: .* ok=true' || {
+            echo "tier1: migration smoke FAILED (conservation line missing)"
+            exit 1
+        }
+        echo "$out" | grep -Eq 'migration: out=[0-9]+ in=[0-9]+ resumed=[1-9]' || {
+            echo "tier1: migration smoke FAILED (no trajectory resumed)"
+            exit 1
+        }
+        echo "tier1: migration smoke OK (drain-by-migration resumed >= 1, ledger balanced)"
+    else
+        echo "tier1: migration smoke skipped (MIGRATE_SMOKE=0)"
+    fi
+else
+    echo "tier1: cargo unavailable, skipping migration smoke"
 fi
 
 echo "== tier1: docs link check (relative links in *.md)"
