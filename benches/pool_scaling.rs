@@ -18,6 +18,13 @@
 //! numbers include queueing delay honestly (no coordinated omission —
 //! see docs/BENCHMARKS.md).
 //!
+//! Cache part: a deterministic Zipf-label workload through a
+//! cache-fronted replica — exact-result hits, warm-start donors, the
+//! `dispatched == completed + cache_hits + shed + forfeited` ledger,
+//! and the strict cold-denial reduction are all asserted, and the
+//! numbers land in the `cache` section of `BENCH_serve.json`. With
+//! `BENCH_SMOKE=1` only this part runs (the tier-1 gate).
+//!
 //! Latency quantiles come from the same mergeable log-bucketed
 //! histograms the serving `STATS` verb reports ([`lazydit::obs`], ≤12.5%
 //! relative error), not from sorting sample vectors. A final traced
@@ -33,7 +40,7 @@ use lazydit::config::{RoutePolicy, Slo};
 use lazydit::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
 use lazydit::coordinator::pool::sim::{sim_image, SimEngine, SimSpec};
 use lazydit::coordinator::pool::steal::Rebalancer;
-use lazydit::coordinator::pool::{PoolReport, Router};
+use lazydit::coordinator::pool::{CacheConfig, PoolCache, PoolReport, Router};
 use lazydit::coordinator::request::Request;
 use lazydit::data::workload::WorkloadSpec;
 use lazydit::obs::{LatencyHist, Tracer};
@@ -301,6 +308,149 @@ fn retag_scenario() -> Json {
     ])
 }
 
+// -------------------------------------------------------------- cache
+
+/// Requests in the cache scenario's Zipf workload.
+const CACHE_REQUESTS: usize = 48;
+/// Denoise steps per cache-scenario request (small so donors within the
+/// warm horizon cover a meaningful share of each trajectory).
+const CACHE_STEPS: usize = 8;
+/// Warm-start donor horizon for the warm-on pass.
+const CACHE_HORIZON: usize = 3;
+
+/// Deterministic Zipf-ish label workload over a small seed pool: class
+/// 0 takes half the traffic, tails shrink harmonically, and only 4
+/// distinct seeds circulate per class — so exact (label, seed) repeats
+/// hit the result tier and same-class/new-seed requests warm-start
+/// from donors. Rebuilt per run (not cloned) so every pass replays the
+/// byte-identical sequence.
+fn cache_workload() -> Vec<Request> {
+    (0..CACHE_REQUESTS)
+        .map(|i| {
+            let r = (i * i * 7 + 3) % 12;
+            let label = match r {
+                0..=5 => 0,
+                6..=8 => 1,
+                9 | 10 => 2,
+                _ => 3,
+            };
+            Request::new(0, label, CACHE_STEPS, 55_000 + (i % 4) as u64)
+        })
+        .collect()
+}
+
+/// Outcome of one serial closed-loop pass over [`cache_workload`].
+struct CacheRun {
+    hist: LatencyHist,
+    report: PoolReport,
+    dispatched: u64,
+    forfeited: u64,
+}
+
+/// Serve the Zipf workload through a single cache-fronted replica,
+/// serially (each response received before the next dispatch, so the
+/// cache is populated before its repeats arrive — a deterministic hit
+/// pattern). Every response is checked byte-identical to the pure
+/// reference image: an exact hit or a warm start that changed output
+/// bytes fails here, not in a downstream consumer.
+fn run_cache_pass(cache_capacity: usize, warm_horizon: usize) -> CacheRun {
+    let elems = spec().img_elems;
+    let cache = (cache_capacity > 0).then(|| {
+        Arc::new(PoolCache::new(CacheConfig::new(
+            cache_capacity, warm_horizon, 0xC0FF_EE00)))
+    });
+    let handle = ReplicaHandle::spawn_cached(
+        0, 256, SimEngine::factory(spec()), None, ReplicaTier::default(),
+        Tracer::disabled(), cache.clone())
+        .unwrap();
+    let router = Router::with_cache(vec![handle], RoutePolicy::Jsq, 256,
+                                    None, cache);
+    let hist = LatencyHist::new();
+    for req in cache_workload() {
+        let reference = fnv64(sim_image(&req, elems).data());
+        let (tx, rx) = mpsc::channel();
+        let t0 = Instant::now();
+        assert!(router.dispatch(req, tx), "cache pass must not shed");
+        let res = rx.recv().expect("response");
+        hist.record_secs(t0.elapsed().as_secs_f64());
+        assert_eq!(fnv64(res.image.data()), reference,
+                   "cache/warm-start output must be byte-identical to \
+                    the cold reference (id {})", res.id);
+    }
+    let dispatched = router.total_dispatched();
+    let forfeited = router.total_forfeited();
+    let report = router.shutdown();
+    // the conservation law with its cache term — every dispatch settles
+    // exactly once even when the engine never saw the request
+    assert_eq!(dispatched,
+               report.completed() as u64 + report.cache_hits
+                   + report.shed + forfeited,
+               "conservation: dispatched == completed + cache_hits + \
+                shed + forfeited");
+    CacheRun { hist, report, dispatched, forfeited }
+}
+
+/// The cache scenario: Zipf labels over a small seed pool, three
+/// passes — cache off (latency baseline), exact tier only, exact tier +
+/// warm-start donors. Asserts exact hits actually occur, that the hit
+/// pattern is independent of the warm tier, and that warm starts
+/// strictly reduce cold-row denials under the identical workload.
+/// Returns the `cache` section of `BENCH_serve.json`.
+fn cache_scenario() -> Json {
+    println!("cache scenario ({CACHE_REQUESTS} Zipf requests × \
+              {CACHE_STEPS} steps, 4 seeds/class, horizon \
+              {CACHE_HORIZON}):");
+    let off = run_cache_pass(0, 0);
+    let exact = run_cache_pass(64, 0);
+    let warm = run_cache_pass(64, CACHE_HORIZON);
+
+    assert_eq!(off.report.cache_hits, 0, "no cache, no hits");
+    assert!(exact.report.cache_hits > 0,
+            "the Zipf workload repeats (label, seed) pairs — the exact \
+             tier must hit");
+    assert_eq!(exact.report.cache_hits, warm.report.cache_hits,
+               "exact-hit pattern must not depend on the warm tier");
+    assert_eq!(warm.dispatched, CACHE_REQUESTS as u64);
+    assert_eq!(exact.forfeited + warm.forfeited, 0);
+
+    // horizon 0 admits everything cold; horizon 3 converts step-0
+    // would-skips into skips on warm rows — strictly less cold denial
+    let (cold_off, cold_on) = (exact.report.total_cold_denied(),
+                               warm.report.total_cold_denied());
+    assert_eq!(exact.report.total_rows_warmed(), 0,
+               "horizon 0 must never warm a row");
+    assert!(warm.report.total_warm_hits() > 0,
+            "same-class/new-seed requests must find donors");
+    assert!(warm.report.total_rows_warmed() > 0);
+    assert!(cold_on < cold_off,
+            "warm starts must strictly reduce cold-row denials \
+             ({cold_off} -> {cold_on})");
+
+    let hit_ratio =
+        exact.report.cache_hits as f64 / CACHE_REQUESTS as f64;
+    println!("  exact hits {}/{CACHE_REQUESTS} ({:.0}%), warm starts {} \
+              ({} rows warmed), cold-denied {cold_off} -> {cold_on}",
+             exact.report.cache_hits, 100.0 * hit_ratio,
+             warm.report.total_warm_hits(),
+             warm.report.total_rows_warmed());
+    println!("  p95 {:.2}ms (cache off) -> {:.2}ms (exact + warm)",
+             off.hist.quantile_ms(0.95), warm.hist.quantile_ms(0.95));
+    Json::obj(vec![
+        ("requests", Json::num(CACHE_REQUESTS as f64)),
+        ("hit_ratio", Json::num(hit_ratio)),
+        ("cache_hits", Json::num(exact.report.cache_hits as f64)),
+        ("warm_hits", Json::num(warm.report.total_warm_hits() as f64)),
+        ("rows_warmed",
+         Json::num(warm.report.total_rows_warmed() as f64)),
+        ("cold_denied_warm_off", Json::num(cold_off as f64)),
+        ("cold_denied_warm_on", Json::num(cold_on as f64)),
+        ("cold_rows_recovered",
+         Json::num((cold_off - cold_on) as f64)),
+        ("p95_ms_cache_off", Json::num(off.hist.quantile_ms(0.95))),
+        ("p95_ms_cache_on", Json::num(warm.hist.quantile_ms(0.95))),
+    ])
+}
+
 // ---------------------------------------------------------- open loop
 
 /// Requests per open-loop point (per route × offered-load cell).
@@ -504,6 +654,23 @@ fn open_loop_sweep() -> Json {
 
 fn main() {
     lazydit::util::logging::init();
+    // BENCH_SMOKE=1: the tier-1 gate runs only the (fast, fully
+    // asserted) cache scenario and still writes the `cache` section the
+    // smoke grep checks; the full sweep overwrites the file in CI.
+    let smoke =
+        std::env::var("BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if smoke {
+        let cache = cache_scenario();
+        let json = Json::obj(vec![
+            ("bench", Json::str("pool_scaling")),
+            ("smoke", Json::Bool(true)),
+            ("cache", cache),
+        ]);
+        std::fs::write("BENCH_serve.json", format!("{json}\n"))
+            .expect("write BENCH_serve.json");
+        println!("wrote BENCH_serve.json (smoke: cache scenario only)");
+        return;
+    }
     let cores = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4);
@@ -582,6 +749,9 @@ fn main() {
     let migration = retag_scenario();
 
     println!();
+    let cache = cache_scenario();
+
+    println!();
     let open_loop_points = open_loop_sweep();
 
     println!();
@@ -617,6 +787,7 @@ fn main() {
         ("work_per_module", Json::num(WORK as f64)),
         ("open_loop", open_loop_points),
         ("migration", migration),
+        ("cache", cache),
         ("trace_overhead", Json::obj(vec![
             ("replicas", Json::num(widest as f64)),
             ("ring_events", Json::num(TRACE_RING as f64)),

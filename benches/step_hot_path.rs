@@ -15,6 +15,12 @@
 //! row-weighted modules (`cold_churn.{coupled,row_granular}` in
 //! `BENCH_step.json`).
 //!
+//! The warm-churn scenario replays the same periodic-joiner schedule
+//! with joiners admitted via `submit_warm` from a same-family donor
+//! snapshot: their step-0 cold denials must convert into skips
+//! (`warm_churn.{cold_denied_cold,cold_denied_warm,rows_warmed}`),
+//! the warm-start half of the result-cache PR.
+//!
 //!     cargo bench --bench step_hot_path
 //!     BENCH_SMOKE=1 cargo bench --bench step_hot_path   # tiny CI gate
 //!
@@ -100,6 +106,7 @@ struct ChurnOutcome {
     rows_skipped: u64,
     rows_recovered: u64,
     cold_denied: u64,
+    rows_warmed: u64,
 }
 
 impl ChurnOutcome {
@@ -147,6 +154,70 @@ fn run_churn(coupled: bool, cfg: &BenchCfg) -> ChurnOutcome {
         rows_skipped: e.layer_stats.rows_skipped_total(),
         rows_recovered: e.layer_stats.rows_recovered_total(),
         cold_denied: e.layer_stats.cold_denied_total(),
+        rows_warmed: e.layer_stats.rows_warmed_total(),
+    }
+}
+
+/// The warm-churn scenario: the identical periodic-joiner schedule as
+/// [`run_churn`] (row-granular gate, Γ=0.9), except every joiner is the
+/// donor's family-mate — same label, steps, cfg, lanes — and, when
+/// `warm` is set, is admitted via `submit_warm` from a boundary
+/// snapshot harvested off the first resident. A warm joiner's step-0
+/// want-skips become real skips (counted as `rows_warmed`) instead of
+/// cold denials, so on this deterministic schedule the warm pass must
+/// show strictly fewer cold denials AND strictly fewer rows run than
+/// the cold pass — the bench-level restatement of the warm-start
+/// fidelity propcheck's accounting model.
+fn run_warm_churn(warm: bool, cfg: &BenchCfg) -> ChurnOutcome {
+    use lazydit::coordinator::request::TrajectorySnapshot;
+    let mut e = SimEngine::new(SimSpec {
+        lazy_pct: 90,
+        work_per_module: 500, // counts, not wall-clock, are asserted
+        policy: format!("warm-churn-{}", if warm { "on" } else { "off" }),
+        ..SimSpec::default()
+    });
+    // one family: every resident (and every joiner) shares the donor's
+    // (label, steps, cfg, lanes) key, so the donor is valid for all
+    for i in 0..cfg.churn_residents {
+        e.submit(Request::new(0, 3, cfg.churn_steps, 900 + i as u64));
+    }
+    let mut donor: Option<TrajectorySnapshot> = None;
+    let mut round = 0usize;
+    let mut joiners = 0usize;
+    while e.active_count() > 0 {
+        if donor.is_none() {
+            // harvest the donor the moment a resident crosses its first
+            // step boundary (cursor > 0 ⇒ usable warm horizon)
+            donor = e
+                .active_ids()
+                .first()
+                .and_then(|&id| e.snapshot_request(id))
+                .filter(|s| s.cursor > 0);
+        }
+        if round > 0 && round % cfg.churn_period == 0
+            && joiners < cfg.churn_joiners
+        {
+            joiners += 1;
+            let req =
+                Request::new(0, 3, cfg.churn_steps, 7_700 + joiners as u64);
+            match donor.as_ref() {
+                Some(d) if warm => {
+                    e.submit_warm(req, d);
+                }
+                _ => {
+                    e.submit(req);
+                }
+            }
+        }
+        e.step_round().expect("sim step");
+        round += 1;
+    }
+    ChurnOutcome {
+        rows_run: e.layer_stats.rows_run_total(),
+        rows_skipped: e.layer_stats.rows_skipped_total(),
+        rows_recovered: e.layer_stats.rows_recovered_total(),
+        cold_denied: e.layer_stats.cold_denied_total(),
+        rows_warmed: e.layer_stats.rows_warmed_total(),
     }
 }
 
@@ -316,6 +387,29 @@ fn main() {
     assert!(rowg.rows_recovered > 0,
             "resident skips during cold rounds must count as recovered");
 
+    // ---- warm churn: same schedule, joiners warm-started from a donor
+    // snapshot. Deterministic, so hard asserts even in smoke mode.
+    let wcold = run_warm_churn(false, &cfg);
+    let wwarm = run_warm_churn(true, &cfg);
+    println!("  warm churn (Γ=0.9, joiner every {} rounds × {}): \
+              cold-denied {} (cold joins) → {} (warm joins), \
+              {} rows warmed, rows run {} → {}",
+             cfg.churn_period, cfg.churn_joiners, wcold.cold_denied,
+             wwarm.cold_denied, wwarm.rows_warmed, wcold.rows_run,
+             wwarm.rows_run);
+    assert_eq!(wcold.rows_total(), wwarm.rows_total(),
+               "identical schedule must offer identical row-work");
+    assert_eq!(wcold.rows_warmed, 0,
+               "cold joins must not report warmed rows");
+    assert!(wwarm.rows_warmed > 0,
+            "warm joins must seed rows at admission");
+    assert!(wwarm.cold_denied < wcold.cold_denied,
+            "warm starts must convert cold denials into skips ({} vs {})",
+            wwarm.cold_denied, wcold.cold_denied);
+    assert!(wwarm.rows_run < wcold.rows_run,
+            "warm starts must run strictly fewer rows ({} vs {})",
+            wwarm.rows_run, wcold.rows_run);
+
     let (lit_before, lit_after) = literal_cache_micro(cfg.micro_iters);
     println!("  literal cache: clone+convert {lit_before:.2}µs → memo \
               {lit_after:.3}µs per skip read  ({:.0}x)",
@@ -361,6 +455,18 @@ fn main() {
             ("cold_denied_coupled", Json::num(coupled.cold_denied as f64)),
             ("cold_denied_row_granular",
              Json::num(rowg.cold_denied as f64)),
+        ])),
+        // the warm-start pair: step-0 cold denials with cold vs
+        // warm-started joiners on the identical schedule (strictly
+        // lower, plus rows_warmed > 0, required)
+        ("warm_churn", Json::obj(vec![
+            ("gamma_target", Json::num(0.9)),
+            ("rows_total", Json::num(wwarm.rows_total() as f64)),
+            ("cold_denied_cold", Json::num(wcold.cold_denied as f64)),
+            ("cold_denied_warm", Json::num(wwarm.cold_denied as f64)),
+            ("rows_warmed", Json::num(wwarm.rows_warmed as f64)),
+            ("rows_run_cold", Json::num(wcold.rows_run as f64)),
+            ("rows_run_warm", Json::num(wwarm.rows_run as f64)),
         ])),
         ("literal_cache_us", Json::obj(vec![
             ("clone_convert", Json::num(lit_before)),

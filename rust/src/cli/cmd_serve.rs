@@ -21,6 +21,15 @@
 //! the real model — no artifacts or XLA runtime needed; useful for
 //! exercising the pool/router layer and for load drills.
 //!
+//! `--result-cache N` fronts the router with the content-addressable
+//! cache (N-entry exact-result tier keyed on the canonical
+//! `RequestKey`): a repeated request is answered with zero engine work
+//! and settles the `cache_hits` ledger term. `--warm-horizon H`
+//! additionally arms the warm-start donor tier — a near hit (same
+//! label/cfg/steps, different seed) seeds the joiner's lane caches from
+//! a donor boundary snapshot taken within the first H steps, turning
+//! cold-row denials into skips. See docs/SERVING.md.
+//!
 //! `--trace-out trace.json` arms per-replica telemetry rings
 //! (`--trace-ring` events each) and writes a Chrome-trace-format file
 //! at shutdown — load it in Perfetto / chrome://tracing to see one
@@ -36,7 +45,8 @@ use crate::config::{LazyScope, RoutePolicy, ServeConfig, SkipPolicy, Slo};
 use crate::coordinator::engine::{Engine, EngineOptions};
 use crate::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
 use crate::coordinator::pool::sim::{SimEngine, SimSpec};
-use crate::coordinator::pool::{EngineFactory, PoolEngine, Rebalancer, Router};
+use crate::coordinator::pool::{CacheConfig, EngineFactory, PoolCache,
+                               PoolEngine, Rebalancer, Router};
 use crate::coordinator::server::serve_pool_shared;
 use crate::util::argparse::{Args, OptSpec};
 use anyhow::{bail, Context, Result};
@@ -52,6 +62,8 @@ pub fn specs() -> Vec<OptSpec> {
         OptSpec { name: "scope", help: "both|attn|ffn|none", default: Some("both"), is_flag: false },
         OptSpec { name: "max-batch", help: "max lanes per round", default: Some("8"), is_flag: false },
         OptSpec { name: "queue-cap", help: "admission bound (pool-wide)", default: Some("256"), is_flag: false },
+        OptSpec { name: "result-cache", help: "exact-result cache capacity (0 = off)", default: Some("0"), is_flag: false },
+        OptSpec { name: "warm-horizon", help: "warm-start donor step horizon (0 = off; needs --result-cache)", default: Some("0"), is_flag: false },
         OptSpec { name: "cfg-scale", help: "guidance scale", default: Some("1.5"), is_flag: false },
         OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
         OptSpec { name: "coupled-gate", help: "legacy all-or-nothing batch skip gate (disables row-granular skipping)", default: None, is_flag: true },
@@ -185,6 +197,17 @@ fn self_drive_client(addr: String, n: usize)
         }
         log::info!("self-drive: {n} requests served");
     })
+}
+
+/// FNV-1a over the model-identity descriptor — the `model_params`
+/// fingerprint folded into every [`crate::coordinator::request::RequestKey`].
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
 }
 
 /// Parse the `--steal on|off` switch.
@@ -337,7 +360,10 @@ pub fn run(a: Args) -> Result<()> {
         n => n,
     };
 
-    let (factories, queue_cap) = if a.flag("synthetic") {
+    // model_desc: everything that determines output identity for this
+    // process, folded into every RequestKey — results cached under one
+    // engine configuration can never alias another's
+    let (factories, queue_cap, model_desc) = if a.flag("synthetic") {
         // the simulator only distinguishes skip-vs-never; honoring any
         // other override in name only would mislabel the A/B report
         if let Some((i, p)) =
@@ -348,9 +374,11 @@ pub fn run(a: Args) -> Result<()> {
                   p.name());
         }
         let work = a.get_u64("sim-work", 4000)?;
+        let desc = format!("sim:lazy={lazy_pct}:work={work}:coupled={}",
+                           a.flag("coupled-gate"));
         (synthetic_factories(replicas, lazy_pct, work,
                              a.flag("coupled-gate"), &overrides),
-         a.get_usize("queue-cap", 256)?)
+         a.get_usize("queue-cap", 256)?, desc)
     } else {
         let ctx = EvalContext::open(&a, 32)?;
         if tiered {
@@ -400,8 +428,23 @@ pub fn run(a: Args) -> Result<()> {
             serve_cfg.policy = SkipPolicy::Never;
         }
         let qc = serve_cfg.queue_cap;
+        let desc = format!("{}:policy={}:lazy={lazy_pct}:steps={steps}",
+                           ctx.cfg.model.name, serve_cfg.policy.name());
         (engine_factories(&ctx, &serve_cfg, gamma, &tiers, tiered,
-                          &overrides), qc)
+                          &overrides), qc, desc)
+    };
+
+    let result_cache = a.get_usize("result-cache", 0)?;
+    let warm_horizon = a.get_usize("warm-horizon", 0)?;
+    if warm_horizon > 0 && result_cache == 0 {
+        bail!("--warm-horizon needs --result-cache > 0 (the donor store \
+               shares the cache's capacity and key derivation)");
+    }
+    let cache = if result_cache > 0 {
+        Some(std::sync::Arc::new(PoolCache::new(CacheConfig::new(
+            result_cache, warm_horizon, fnv64(model_desc.as_bytes())))))
+    } else {
+        None
     };
 
     // work stealing: idle replicas pull queued jobs from the sibling
@@ -440,12 +483,12 @@ pub fn run(a: Args) -> Result<()> {
                 crate::obs::Tracer::disabled()
             };
             tracers.push(tracer.clone());
-            ReplicaHandle::spawn_traced(i, queue_cap, f, rebalancer.clone(),
-                                        tier.clone(), tracer)
+            ReplicaHandle::spawn_cached(i, queue_cap, f, rebalancer.clone(),
+                                        tier.clone(), tracer, cache.clone())
         })
         .collect::<Result<_>>()?;
-    let router =
-        Router::with_rebalancer(handles, route, queue_cap, rebalancer);
+    let router = Router::with_cache(handles, route, queue_cap, rebalancer,
+                                    cache.clone());
 
     let tier_summary: Vec<String> = tiers
         .iter()
@@ -473,22 +516,28 @@ pub fn run(a: Args) -> Result<()> {
     // machine-greppable migration + ledger lines for the smoke gates:
     // every dispatched request must be accounted for — completed, shed
     // at admission, or forfeited to a panic — even across migrations
-    let (dispatched, completed, shed, forfeited) = (
+    let (dispatched, completed, shed, forfeited, cache_hits) = (
         router.total_dispatched(),
         report.completed() as u64,
         report.shed,
         router.total_forfeited(),
+        report.cache_hits,
     );
-    let balanced = dispatched == completed + shed + forfeited;
+    let balanced = dispatched == completed + cache_hits + shed + forfeited;
     println!("migration: out={} in={} resumed={} steps_saved={}",
              report.total_migrated_out(), report.total_migrated_in(),
              report.total_resumed(), report.total_resume_steps_saved());
+    if result_cache > 0 {
+        println!("cache: hits={cache_hits} warm_hits={} rows_warmed={}",
+                 report.total_warm_hits(), report.total_rows_warmed());
+    }
     println!("conservation: dispatched={dispatched} completed={completed} \
-              shed={shed} forfeited={forfeited} ok={balanced}");
+              cache_hits={cache_hits} shed={shed} forfeited={forfeited} \
+              ok={balanced}");
     if !balanced {
         bail!("conservation violated: {dispatched} dispatched but \
-               {completed} completed + {shed} shed + {forfeited} \
-               forfeited — a request was stranded");
+               {completed} completed + {cache_hits} cache hits + {shed} \
+               shed + {forfeited} forfeited — a request was stranded");
     }
     if let Some(path) = &trace_out {
         let groups = crate::obs::chrome::collect_tracers(

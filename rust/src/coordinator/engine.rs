@@ -468,6 +468,62 @@ impl Engine {
         id
     }
 
+    /// Admit a request warm-started from a same-family donor's lane
+    /// caches (pool result-cache near hit). The donor is validated
+    /// against the request *as admitted* (after the step/lane clamps):
+    /// family fields must match and every donor lane must have this
+    /// model's exact `[2L][N*D]` shape — any mismatch admits the
+    /// request cold and returns 0 seeded rows, which is always safe.
+    /// On success the donor's valid rows are copied into the joiner's
+    /// lane stores and marked valid, so the cache gate sees warm rows
+    /// at step 0 instead of denying its would-skips cold. Seeded rows
+    /// are counted as `rows_warmed` in `LayerStats`.
+    pub fn submit_warm(&mut self, req: Request, donor: &TrajectorySnapshot)
+                       -> (u64, u64) {
+        let id = self.submit(req);
+        let Some(ar) = self.active.iter_mut().find(|a| a.req.id == id)
+        else {
+            return (id, 0);
+        };
+        let family_ok = donor.req.class_label == ar.req.class_label
+            && donor.req.steps == ar.req.steps
+            && donor.req.cfg_scale.to_bits() == ar.req.cfg_scale.to_bits();
+        if !family_ok || donor.cursor == 0
+            || donor.caches.len() != ar.caches.len()
+        {
+            return (id, 0);
+        }
+        let shape_ok = donor.caches.iter().zip(&ar.caches).all(|(d, own)| {
+            d.values.len() == own.values.len()
+                && d.valid.len() == own.valid.len()
+                && d.values
+                    .iter()
+                    .zip(&own.values)
+                    .all(|(dv, ov)| dv.len() == ov.len())
+        });
+        if !shape_ok {
+            return (id, 0);
+        }
+        let mut rows = 0u64;
+        let mut seeded_slots: Vec<u64> = vec![0; donor.caches[0].valid.len()];
+        for (dl, ol) in donor.caches.iter().zip(ar.caches.iter_mut()) {
+            for k in 0..dl.valid.len() {
+                if dl.valid[k] {
+                    ol.values[k].copy_from_slice(&dl.values[k]);
+                    ol.valid[k] = true;
+                    rows += 1;
+                    seeded_slots[k] += 1;
+                }
+            }
+        }
+        for (k, &n) in seeded_slots.iter().enumerate() {
+            if n > 0 {
+                self.layer_stats.record_rows_warmed(k, n);
+            }
+        }
+        (id, rows)
+    }
+
     /// Copy an active trajectory's state as of the last completed step
     /// boundary without disturbing residency: resident rows are
     /// scattered into a *clone* of the lane stores, never the live
@@ -923,6 +979,11 @@ impl crate::coordinator::pool::PoolEngine for Engine {
 
     fn snapshot_request(&self, id: u64) -> Option<TrajectorySnapshot> {
         Engine::snapshot_request(self, id)
+    }
+
+    fn submit_warm(&mut self, req: Request, donor: &TrajectorySnapshot)
+                   -> (u64, u64) {
+        Engine::submit_warm(self, req, donor)
     }
 }
 

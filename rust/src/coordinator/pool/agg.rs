@@ -25,6 +25,9 @@ pub fn merge_layer_stats(a: &mut LayerStats, b: &LayerStats) {
         a.rows_skipped.resize(b.rows_skipped.len(), 0);
         a.rows_recovered.resize(b.rows_recovered.len(), 0);
     }
+    if b.rows_warmed.len() > a.rows_warmed.len() {
+        a.rows_warmed.resize(b.rows_warmed.len(), 0);
+    }
     for k in 0..b.skips.len() {
         a.skips[k] += b.skips[k];
         a.total[k] += b.total[k];
@@ -37,6 +40,9 @@ pub fn merge_layer_stats(a: &mut LayerStats, b: &LayerStats) {
         a.rows_run[k] += b.rows_run[k];
         a.rows_skipped[k] += b.rows_skipped[k];
         a.rows_recovered[k] += b.rows_recovered[k];
+    }
+    for k in 0..b.rows_warmed.len() {
+        a.rows_warmed[k] += b.rows_warmed[k];
     }
 }
 
@@ -67,6 +73,11 @@ pub struct PoolReport {
     pub shed: u64,
     /// Sheds per SLO class (`Slo::index()` order; sums to `shed`).
     pub shed_by_slo: [u64; Slo::COUNT],
+    /// Requests the router answered straight from the exact-result
+    /// cache (zero engine work — counted apart from `completed`, and
+    /// a ledger term of the conservation law:
+    /// `dispatched == completed + cache_hits + shed + forfeited`).
+    pub cache_hits: u64,
 }
 
 impl PoolReport {
@@ -176,6 +187,21 @@ impl PoolReport {
             .sum()
     }
 
+    /// Requests admitted warm-started pool-wide (a donor trajectory
+    /// actually seeded lane-cache rows at admission).
+    pub fn total_warm_hits(&self) -> u64 {
+        self.replicas.iter().map(|r| r.warm_hits).sum()
+    }
+
+    /// Lane-cache rows seeded from warm-start donors pool-wide — each
+    /// one a cold denial the joiner did not pay.
+    pub fn total_rows_warmed(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.layer.rows_warmed_total())
+            .sum()
+    }
+
     /// Completions per SLO class (`Slo::index()` order): the sum of the
     /// per-replica counters, like every other pool-wide figure.
     pub fn completed_by_slo(&self) -> [u64; Slo::COUNT] {
@@ -240,6 +266,16 @@ impl PoolReport {
             self.total_resumed(),
             self.total_resume_steps_saved(),
         ));
+        // only when the cache did something: cache-less runs keep the
+        // exact report shape older tooling parses
+        if self.cache_hits > 0 || self.total_warm_hits() > 0 {
+            out.push_str(&format!(
+                "  cache: {} exact hits, {} warm starts, {} rows warmed\n",
+                self.cache_hits,
+                self.total_warm_hits(),
+                self.total_rows_warmed(),
+            ));
+        }
         let done = self.completed_by_slo();
         out.push_str("  tiers (completed/shed):");
         for slo in Slo::ALL {
@@ -290,6 +326,7 @@ mod tests {
             stolen: 0,
             migrated_out: 0,
             migrated_in: 0,
+            warm_hits: 0,
             arena: None,
             error: None,
         }
@@ -301,6 +338,7 @@ mod tests {
             replicas: vec![report(0, 3, 10, 40, 4), report(1, 3, 30, 40, 6)],
             shed: 2,
             shed_by_slo: [0, 0, 2],
+            cache_hits: 0,
         };
         let l = pr.merged_layer();
         assert_eq!(l.skips[0], 40);
@@ -331,7 +369,8 @@ mod tests {
             slow.serve.record_latency(1.0);
         }
         let pr = PoolReport { replicas: vec![fast, slow], shed: 0,
-                              shed_by_slo: [0; Slo::COUNT] };
+                              shed_by_slo: [0; Slo::COUNT],
+                              cache_hits: 0 };
         let s = pr.merged_serve();
         assert_eq!(s.hist.count(), 200);
         let p99 = s.p99_latency();
@@ -347,6 +386,7 @@ mod tests {
             replicas: vec![report(0, 1, 9, 10, 1), report(1, 1, 0, 90, 9)],
             shed: 0,
             shed_by_slo: [0; Slo::COUNT],
+            cache_hits: 0,
         };
         // ratio of sums: 18/200 per-pool = 0.09; average of averages 0.45
         assert!((pr.overall_lazy() - 0.09).abs() < 1e-12);
@@ -370,7 +410,7 @@ mod tests {
         let mut b = report(1, 2, 3, 4, 5);
         b.stolen = 3;
         let pr = PoolReport { replicas: vec![a, b], shed: 1,
-                              shed_by_slo: [0, 0, 1] };
+                              shed_by_slo: [0, 0, 1], cache_hits: 0 };
         let s = pr.render();
         assert!(s.contains("pool"));
         assert!(s.contains("mean"));
@@ -389,7 +429,8 @@ mod tests {
         let mut b = report(1, 1, 0, 4, 1);
         b.layer.record_rows(1, 1, 3, 1);
         let pr = PoolReport { replicas: vec![a, b], shed: 0,
-                              shed_by_slo: [0; Slo::COUNT] };
+                              shed_by_slo: [0; Slo::COUNT],
+                              cache_hits: 0 };
         assert_eq!(pr.total_rows_run(), 4);
         assert_eq!(pr.total_rows_skipped(), 8);
         assert_eq!(pr.total_rows_recovered(), 3);
@@ -411,7 +452,8 @@ mod tests {
         let mut b = report(1, 1, 0, 4, 1);
         b.layer.record_cold_denied(1);
         let pr = PoolReport { replicas: vec![a, b], shed: 0,
-                              shed_by_slo: [0; Slo::COUNT] };
+                              shed_by_slo: [0; Slo::COUNT],
+                              cache_hits: 0 };
         assert_eq!(pr.total_cold_denied(), 3);
         let merged = pr.merged_layer();
         assert_eq!(merged.cold_denied, vec![1, 2]);
@@ -431,6 +473,7 @@ mod tests {
             replicas: vec![a, b],
             shed: 3,
             shed_by_slo: [1, 2, 0],
+            cache_hits: 0,
         };
         assert_eq!(pr.completed_by_slo(), [4, 6, 2]);
         assert_eq!(pr.shed_by_slo.iter().sum::<u64>(), pr.shed);
@@ -455,7 +498,8 @@ mod tests {
         b.steals = 1;
         b.stolen = 2;
         let pr = PoolReport { replicas: vec![a, b], shed: 0,
-                              shed_by_slo: [0; Slo::COUNT] };
+                              shed_by_slo: [0; Slo::COUNT],
+                              cache_hits: 0 };
         assert_eq!(pr.total_steals(), 3);
         assert_eq!(pr.total_stolen(), 3);
         assert_eq!(pr.total_steals(), pr.total_stolen(),
@@ -473,7 +517,8 @@ mod tests {
         b.serve.resumed = 2;
         b.serve.resume_steps_saved = 6;
         let pr = PoolReport { replicas: vec![a, b], shed: 0,
-                              shed_by_slo: [0; Slo::COUNT] };
+                              shed_by_slo: [0; Slo::COUNT],
+                              cache_hits: 0 };
         assert_eq!(pr.total_migrated_out(), 2);
         assert_eq!(pr.total_migrated_in(), 2);
         assert_eq!(pr.total_resumed(), 3);
@@ -484,5 +529,28 @@ mod tests {
         assert!(pr.render().contains(
             "migration: 2 out / 2 in, 3 resumed, 9 steps saved"),
             "{}", pr.render());
+    }
+
+    #[test]
+    fn cache_line_renders_only_when_the_cache_did_something() {
+        let mut a = report(0, 1, 0, 4, 4);
+        a.warm_hits = 2;
+        a.layer.record_rows_warmed(0, 3);
+        let b = report(1, 1, 0, 4, 4);
+        let pr = PoolReport { replicas: vec![a, b], shed: 0,
+                              shed_by_slo: [0; Slo::COUNT],
+                              cache_hits: 5 };
+        assert_eq!(pr.total_warm_hits(), 2);
+        assert_eq!(pr.total_rows_warmed(), 3);
+        assert!(pr.render().contains(
+            "cache: 5 exact hits, 2 warm starts, 3 rows warmed"),
+            "{}", pr.render());
+        // rows_warmed merges slot-wise like every other layer counter
+        assert_eq!(pr.merged_layer().rows_warmed_total(), 3);
+        // a cache-less run keeps the exact legacy report shape
+        let quiet = PoolReport { replicas: vec![report(0, 1, 0, 4, 4)],
+                                 shed: 0, shed_by_slo: [0; Slo::COUNT],
+                                 cache_hits: 0 };
+        assert!(!quiet.render().contains("cache:"), "{}", quiet.render());
     }
 }

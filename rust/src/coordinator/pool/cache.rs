@@ -1,0 +1,550 @@
+//! Content-addressable result + warm-start cache fronting the router.
+//!
+//! Two tiers, both keyed off the canonical
+//! [`RequestKey`](crate::coordinator::request::RequestKey):
+//!
+//! * **exact-result cache** — `(label, cfg, steps, seed, model)` →
+//!   finished [`RequestResult`], bounded LRU. A hit returns the stored
+//!   output with zero engine work; the router still settles the
+//!   admission ledger (the conservation law grows a `cache_hits` term).
+//! * **warm-start donor store** — per
+//!   [`FamilyKey`](crate::coordinator::request::FamilyKey) (the exact
+//!   key minus the seed), an early-step boundary
+//!   [`TrajectorySnapshot`] trimmed to its lane caches. On a near hit
+//!   (same family, different seed) the joiner's `LaneCaches` are seeded
+//!   from the donor so it enters the batch with valid rows instead of
+//!   cold ones — converting `rows_denied_cold` into skips.
+//!
+//! Safety model: the exact tier is sound because equal keys imply
+//! bit-identical outputs (the key covers every output-affecting request
+//! field — propcheck-asserted below against the SimEngine). The warm
+//! tier is an approximation bounded by `warm_horizon`: only donors
+//! captured at a step boundary **within** the horizon are admitted
+//! (Δ-DiT: trajectory deviations concentrate in late steps, so
+//! early-step caches are safe to share), and a donor whose lane shapes
+//! do not match the joiner is rejected at admission — the joiner then
+//! runs cold, which is always correct.
+//!
+//! Concurrency: both tiers sit behind plain mutexes — the cache is
+//! touched once per dispatch/completion, never inside the per-step hot
+//! path — while the observability counters are relaxed atomics readable
+//! without the locks.
+
+use crate::coordinator::request::{FamilyKey, Request, RequestKey,
+                                  RequestResult, TrajectorySnapshot};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Pool-cache provisioning: capacities, the warm-start horizon, and the
+/// model identity baked into every key.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Exact-result LRU bound (entries). 0 disables the exact tier.
+    pub result_capacity: usize,
+    /// Donor-store bound (families). 0 disables the warm tier together
+    /// with `warm_horizon`.
+    pub donor_capacity: usize,
+    /// Step horizon for warm starts: only donors whose boundary cursor
+    /// is in `1..=warm_horizon` may seed a joiner. 0 disables
+    /// warm-starting entirely (nothing is ever transferred — a
+    /// horizon-0 admission is bit-identical to a cold run).
+    pub warm_horizon: usize,
+    /// Serving model / resolution discriminator mixed into every key
+    /// (see [`RequestKey::model_params`]).
+    pub model_params: u64,
+}
+
+impl CacheConfig {
+    /// A config with both tiers sized `capacity` and the given horizon.
+    pub fn new(capacity: usize, warm_horizon: usize,
+               model_params: u64) -> CacheConfig {
+        CacheConfig {
+            result_capacity: capacity,
+            donor_capacity: capacity,
+            warm_horizon,
+            model_params,
+        }
+    }
+}
+
+/// Point-in-time cache counters (`STATS`, pool report, benches).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Exact-tier lookups that returned a finished result.
+    pub hits: u64,
+    /// Exact-tier lookups that found nothing (engine work follows).
+    pub misses: u64,
+    /// Results inserted into the exact tier.
+    pub inserted: u64,
+    /// Results evicted by the LRU bound.
+    pub evicted: u64,
+    /// Live exact-tier entries.
+    pub entries: u64,
+    /// Donors handed out to warm-start a joiner.
+    pub donated: u64,
+    /// Donor offers rejected (past the horizon, no boundary yet, or
+    /// inconsistent lane shapes).
+    pub donor_rejected: u64,
+    /// Live donor families.
+    pub donors: u64,
+}
+
+struct ResultEntry {
+    last_used: u64,
+    res: RequestResult,
+}
+
+#[derive(Default)]
+struct ResultLru {
+    map: BTreeMap<RequestKey, ResultEntry>,
+    tick: u64,
+}
+
+struct DonorEntry {
+    inserted: u64,
+    snap: TrajectorySnapshot,
+}
+
+#[derive(Default)]
+struct DonorStore {
+    map: BTreeMap<FamilyKey, DonorEntry>,
+    tick: u64,
+}
+
+/// The two-tier content-addressable cache. One instance is shared
+/// (`Arc`) between the router (exact-hit check at dispatch) and every
+/// replica worker (result insertion + donor offers at step boundaries,
+/// donor lookup at admission).
+pub struct PoolCache {
+    cfg: CacheConfig,
+    results: Mutex<ResultLru>,
+    donors: Mutex<DonorStore>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserted: AtomicU64,
+    evicted: AtomicU64,
+    donated: AtomicU64,
+    donor_rejected: AtomicU64,
+}
+
+impl PoolCache {
+    /// An empty cache with the given provisioning.
+    pub fn new(cfg: CacheConfig) -> PoolCache {
+        PoolCache {
+            cfg,
+            results: Mutex::new(ResultLru::default()),
+            donors: Mutex::new(DonorStore::default()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserted: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            donated: AtomicU64::new(0),
+            donor_rejected: AtomicU64::new(0),
+        }
+    }
+
+    /// The provisioning this cache runs under.
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// True when the exact-result tier is live.
+    pub fn exact_enabled(&self) -> bool {
+        self.cfg.result_capacity > 0
+    }
+
+    /// True when the warm-start tier is live.
+    pub fn warm_enabled(&self) -> bool {
+        self.cfg.warm_horizon > 0 && self.cfg.donor_capacity > 0
+    }
+
+    /// The canonical key of `req` under this cache's model identity.
+    pub fn key_of(&self, req: &Request) -> RequestKey {
+        req.key(self.cfg.model_params)
+    }
+
+    /// Exact-tier lookup: a completed result for `req`'s key, or `None`
+    /// (counted as a miss) when engine work is needed. The returned
+    /// result still carries the *original* run's accounting; the caller
+    /// re-stamps wire identity (`id`, `slo`, latency) for this request.
+    pub fn lookup(&self, req: &Request) -> Option<RequestResult> {
+        if !self.exact_enabled() {
+            return None;
+        }
+        let key = self.key_of(req);
+        let mut lru = self.results.lock().unwrap_or_else(|p| p.into_inner());
+        lru.tick += 1;
+        let tick = lru.tick;
+        match lru.map.get_mut(&key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.res.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a finished result under `key`, evicting the
+    /// least-recently-used entry past the bound. Called by the replica
+    /// worker at completion, *before* the response is sent, so a client
+    /// that immediately repeats the request observes the hit.
+    pub fn insert(&self, key: RequestKey, res: &RequestResult) {
+        if !self.exact_enabled() {
+            return;
+        }
+        let mut lru = self.results.lock().unwrap_or_else(|p| p.into_inner());
+        lru.tick += 1;
+        let tick = lru.tick;
+        let fresh = lru
+            .map
+            .insert(key, ResultEntry { last_used: tick, res: res.clone() })
+            .is_none();
+        if fresh {
+            self.inserted.fetch_add(1, Ordering::Relaxed);
+        }
+        while lru.map.len() > self.cfg.result_capacity {
+            let Some(oldest) = lru
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            else {
+                break;
+            };
+            lru.map.remove(&oldest);
+            self.evicted.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Offer a boundary snapshot as a warm-start donor for its family.
+    /// Rejected (returns `false`, counted) when warm-starting is off,
+    /// the snapshot has no completed boundary (`cursor == 0`), its
+    /// cursor is **past the step horizon** (stale — late-step caches
+    /// are not safe to share), or its lane-cache shapes are internally
+    /// inconsistent. Accepted donors are stored trimmed
+    /// ([`TrajectorySnapshot::donor_trim`]); an existing family donor
+    /// is replaced only by one with a deeper (still in-horizon) cursor.
+    pub fn offer_donor(&self, snap: &TrajectorySnapshot) -> bool {
+        if !self.warm_enabled()
+            || snap.cursor == 0
+            || snap.cursor > self.cfg.warm_horizon
+            || !lane_shapes_consistent(snap)
+        {
+            self.donor_rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let family = snap.req.key(self.cfg.model_params).family();
+        let mut store = self.donors.lock().unwrap_or_else(|p| p.into_inner());
+        store.tick += 1;
+        let tick = store.tick;
+        if let Some(existing) = store.map.get(&family) {
+            if existing.snap.cursor >= snap.cursor {
+                return true; // the deeper donor already on file wins
+            }
+        }
+        store.map.insert(family, DonorEntry {
+            inserted: tick,
+            snap: snap.donor_trim(),
+        });
+        while store.map.len() > self.cfg.donor_capacity {
+            let Some(oldest) = store
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.inserted)
+                .map(|(k, _)| *k)
+            else {
+                break;
+            };
+            store.map.remove(&oldest);
+        }
+        true
+    }
+
+    /// Near-hit lookup: a donor for `req`'s family, validated against
+    /// the joiner — the donor's lane count must match `req.lanes()` and
+    /// its cache shapes must be consistent, otherwise the donor is
+    /// refused (counted) and the joiner runs cold. An exact-seed match
+    /// is also refused: warm-starting a request from *its own* family
+    /// donor with the same seed would be pointless (the exact tier owns
+    /// that case).
+    pub fn donate(&self, req: &Request) -> Option<TrajectorySnapshot> {
+        if !self.warm_enabled() {
+            return None;
+        }
+        let family = self.key_of(req).family();
+        let store = self.donors.lock().unwrap_or_else(|p| p.into_inner());
+        let entry = store.map.get(&family)?;
+        let snap = &entry.snap;
+        if snap.lanes() != req.lanes()
+            || !lane_shapes_consistent(snap)
+            || snap.cursor == 0
+            || snap.cursor > self.cfg.warm_horizon
+        {
+            self.donor_rejected.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        self.donated.fetch_add(1, Ordering::Relaxed);
+        Some(snap.clone())
+    }
+
+    /// Point-in-time counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        let entries = self
+            .results
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .map
+            .len() as u64;
+        let donors = self
+            .donors
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .map
+            .len() as u64;
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserted: self.inserted.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            entries,
+            donated: self.donated.load(Ordering::Relaxed),
+            donor_rejected: self.donor_rejected.load(Ordering::Relaxed),
+            donors,
+        }
+    }
+}
+
+/// A donor's lane caches are usable only when non-degenerate and
+/// internally consistent: lane count matches the request's CFG shape
+/// (when caches are materialized at all — the synthetic engine's
+/// snapshots carry none and model warmth analytically), and every lane
+/// has matching `values`/`valid` lengths with uniform row widths.
+fn lane_shapes_consistent(snap: &TrajectorySnapshot) -> bool {
+    if snap.caches.is_empty() {
+        return true; // synthetic-engine donors: warmth is modeled
+    }
+    if snap.caches.len() != snap.lanes() {
+        return false;
+    }
+    let nslots = snap.caches[0].values.len();
+    let nd = snap.caches[0].values.first().map(Vec::len).unwrap_or(0);
+    snap.caches.iter().all(|lane| {
+        lane.values.len() == nslots
+            && lane.valid.len() == nslots
+            && lane.values.iter().all(|row| row.len() == nd)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Slo;
+    use crate::coordinator::pool::sim::{SimEngine, SimSpec};
+    use crate::coordinator::pool::PoolEngine;
+    use crate::coordinator::request::{ActiveRequest, LaneCaches};
+    use crate::prop_assert;
+    use crate::util::propcheck::propcheck;
+
+    fn result_for(req: &Request) -> RequestResult {
+        RequestResult {
+            id: req.id,
+            class_label: req.class_label,
+            steps: req.steps,
+            slo: req.slo,
+            image: crate::coordinator::pool::sim::sim_image(req, 16),
+            lazy_ratio: 0.5,
+            attn_lazy_ratio: 0.5,
+            ffn_lazy_ratio: 0.5,
+            latency: std::time::Duration::from_millis(3),
+            per_module_skip: vec![0.5; 4],
+        }
+    }
+
+    fn boundary_snapshot(req: Request, cursor: usize, depth: usize,
+                         nd: usize) -> TrajectorySnapshot {
+        let ts: Vec<usize> = (0..req.steps).rev().map(|i| i * 100 + 1)
+            .collect();
+        let mut ar = ActiveRequest::new(req, ts, depth, nd, 8);
+        ar.cursor = cursor;
+        ar.steps_done = cursor;
+        for lc in ar.caches.iter_mut() {
+            for k in 0..lc.valid.len() {
+                lc.valid[k] = true;
+            }
+        }
+        ar.into_snapshot()
+    }
+
+    #[test]
+    fn exact_tier_is_a_bounded_lru() {
+        let cache = PoolCache::new(CacheConfig::new(2, 0, 48));
+        let reqs: Vec<Request> =
+            (0..3).map(|i| Request::new(0, i, 4, 100 + i as u64)).collect();
+        for r in &reqs {
+            assert!(cache.lookup(r).is_none(), "cold cache");
+            cache.insert(cache.key_of(r), &result_for(r));
+        }
+        // capacity 2: inserting the 3rd evicted the least recently used
+        // (req 0 — req 1 and 2 were touched later)
+        let st = cache.stats();
+        assert_eq!(st.entries, 2);
+        assert_eq!(st.inserted, 3);
+        assert_eq!(st.evicted, 1);
+        assert!(cache.lookup(&reqs[0]).is_none(), "LRU victim gone");
+        let hit = cache.lookup(&reqs[2]).expect("resident entry");
+        assert_eq!(hit.image.data(),
+                   result_for(&reqs[2]).image.data(),
+                   "the hit returns the stored image bit-exactly");
+        // touch req 1 so req 2 becomes the LRU victim of the next insert
+        assert!(cache.lookup(&reqs[1]).is_some());
+        cache.insert(cache.key_of(&reqs[0]), &result_for(&reqs[0]));
+        assert!(cache.lookup(&reqs[2]).is_none(), "recency order enforced");
+        assert!(cache.lookup(&reqs[1]).is_some());
+        // id / slo never partition the cache
+        let mut alias = reqs[1].clone();
+        alias.id = 999;
+        alias.slo = Slo::Latency;
+        assert!(cache.lookup(&alias).is_some(), "id/slo are not key fields");
+    }
+
+    #[test]
+    fn zero_capacity_disables_the_exact_tier() {
+        let cache = PoolCache::new(CacheConfig::new(0, 0, 48));
+        let req = Request::new(0, 1, 4, 7);
+        cache.insert(cache.key_of(&req), &result_for(&req));
+        assert!(cache.lookup(&req).is_none());
+        assert_eq!(cache.stats(), CacheStats::default(),
+                   "a disabled tier counts nothing");
+    }
+
+    #[test]
+    fn donor_store_rejects_stale_and_boundary_free_offers() {
+        let cache = PoolCache::new(CacheConfig::new(4, 2, 8));
+        let req = Request::new(0, 3, 6, 42);
+        // no completed boundary yet: nothing valid to share
+        assert!(!cache.offer_donor(
+            &boundary_snapshot(req.clone(), 0, 2, 4)));
+        // past the horizon (cursor 3 > horizon 2): stale, rejected
+        assert!(!cache.offer_donor(
+            &boundary_snapshot(req.clone(), 3, 2, 4)));
+        assert_eq!(cache.stats().donor_rejected, 2);
+        assert_eq!(cache.stats().donors, 0);
+        // within the horizon: accepted
+        assert!(cache.offer_donor(&boundary_snapshot(req.clone(), 1, 2, 4)));
+        assert_eq!(cache.stats().donors, 1);
+        // a deeper in-horizon donor replaces it; a shallower one doesn't
+        assert!(cache.offer_donor(&boundary_snapshot(req.clone(), 2, 2, 4)));
+        let mut probe = req.clone();
+        probe.seed = 43; // near hit: same family, different seed
+        assert_eq!(cache.donate(&probe).unwrap().cursor, 2);
+        assert!(cache.offer_donor(&boundary_snapshot(req, 1, 2, 4)));
+        assert_eq!(cache.donate(&probe).unwrap().cursor, 2,
+                   "deeper donor retained");
+    }
+
+    #[test]
+    fn donor_store_rejects_mismatched_lane_shapes_at_admission() {
+        let cache = PoolCache::new(CacheConfig::new(4, 3, 8));
+        let req = Request::new(0, 5, 6, 77); // cfg 1.5 → 2 lanes
+        // a donor whose lane count contradicts its own CFG shape
+        let mut bad = boundary_snapshot(req.clone(), 2, 2, 4);
+        bad.caches.pop(); // 1 lane of caches on a 2-lane request
+        assert!(!cache.offer_donor(&bad), "lane-count mismatch rejected");
+        // a donor with ragged per-lane shapes
+        let mut ragged = boundary_snapshot(req.clone(), 2, 2, 4);
+        ragged.caches[1].valid.pop();
+        assert!(!cache.offer_donor(&ragged), "ragged valid len rejected");
+        let mut ragged = boundary_snapshot(req.clone(), 2, 2, 4);
+        ragged.caches[0].values[1] = vec![0.0; 99];
+        assert!(!cache.offer_donor(&ragged), "ragged row width rejected");
+        assert_eq!(cache.stats().donors, 0);
+        // a well-formed donor whose stored shape no longer matches the
+        // joiner's lane count is refused at donate time too
+        assert!(cache.offer_donor(&boundary_snapshot(req.clone(), 2, 2, 4)));
+        let mut store = cache.donors.lock().unwrap();
+        for e in store.map.values_mut() {
+            e.snap.caches = vec![LaneCaches::empty(2, 4); 1];
+        }
+        drop(store);
+        let mut probe = req;
+        probe.seed = 78;
+        assert!(cache.donate(&probe).is_none(),
+                "doctored donor refused at admission");
+        assert!(cache.stats().donor_rejected >= 4);
+    }
+
+    #[test]
+    fn donor_families_are_bounded() {
+        let mut cfg = CacheConfig::new(8, 2, 8);
+        cfg.donor_capacity = 2;
+        let cache = PoolCache::new(cfg);
+        for label in 0..3 {
+            let req = Request::new(0, label, 6, label as u64);
+            assert!(cache.offer_donor(&boundary_snapshot(req, 1, 2, 4)));
+        }
+        assert_eq!(cache.stats().donors, 2, "oldest family evicted");
+    }
+
+    /// Key soundness, the property the exact tier's correctness rests
+    /// on: two requests with equal `RequestKey`s produce bit-identical
+    /// SimEngine outputs (so a cached result can never be wrong for the
+    /// request it hits), and any single output-affecting field
+    /// perturbation changes the key (so a different computation can
+    /// never hit the entry).
+    #[test]
+    fn propcheck_equal_keys_imply_bit_identical_engine_outputs() {
+        propcheck(40, |g| {
+            let steps = g.usize_in(1, 5);
+            let mut a = Request::new(0, g.usize_in(0, 9), steps, g.u64());
+            a.cfg_scale = *g.choose(&[1.0f32, 1.5, 2.0]);
+            // same key fields, different wire identity + SLO class
+            let mut b = a.clone();
+            b.id = 0;
+            b.slo = *g.choose(&[Slo::Latency, Slo::Throughput,
+                                Slo::Besteffort]);
+            let spec = SimSpec {
+                lazy_pct: g.usize_in(0, 90) as u32,
+                ..SimSpec::fast()
+            };
+            prop_assert!(a.key(spec.img_elems as u64)
+                         == b.key(spec.img_elems as u64),
+                         "identity fields leaked into the key");
+            let run = |req: Request, spec: &SimSpec| {
+                let mut e = SimEngine::new(spec.clone());
+                e.submit(req);
+                let mut out = Vec::new();
+                while e.active_count() > 0 {
+                    out.extend(e.step_round().expect("sim step"));
+                }
+                out.remove(0).image.data().to_vec()
+            };
+            let img_a = run(a.clone(), &spec);
+            let img_b = run(b, &spec);
+            prop_assert!(
+                img_a.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                    == img_b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "equal keys must mean bit-identical outputs");
+            // every output-affecting perturbation must change the key
+            let k = a.key(spec.img_elems as u64);
+            let mut p = a.clone();
+            p.class_label += 1;
+            prop_assert!(p.key(spec.img_elems as u64) != k, "label");
+            let mut p = a.clone();
+            p.steps += 1;
+            prop_assert!(p.key(spec.img_elems as u64) != k, "steps");
+            let mut p = a.clone();
+            p.seed = p.seed.wrapping_add(1);
+            prop_assert!(p.key(spec.img_elems as u64) != k, "seed");
+            let mut p = a.clone();
+            p.cfg_scale += 0.25;
+            prop_assert!(p.key(spec.img_elems as u64) != k, "cfg");
+            prop_assert!(a.key(spec.img_elems as u64 + 1) != k,
+                         "resolution/model params");
+        });
+    }
+}

@@ -16,6 +16,11 @@
 //!   with the job so routing stays truthful;
 //! * [`agg`] — pool-wide aggregation of per-replica `LayerStats` /
 //!   `ServeStats` into one report;
+//! * [`cache`] — the content-addressable result + warm-start cache the
+//!   router fronts dispatch with: exact [`crate::coordinator::request::RequestKey`]
+//!   hits return a finished output with zero engine work, near hits
+//!   (same family, different seed) seed a joiner's lane caches from a
+//!   donor trajectory;
 //! * [`sim`] — a deterministic synthetic engine: exercises the whole pool
 //!   (and the scaling bench) without artifacts or the XLA runtime.
 //!
@@ -41,12 +46,14 @@
 #![deny(missing_docs)]
 
 pub mod agg;
+pub mod cache;
 pub mod replica;
 pub mod router;
 pub mod sim;
 pub mod steal;
 
 pub use agg::PoolReport;
+pub use cache::{CacheConfig, CacheStats, PoolCache};
 pub use replica::{PoolJob, ReplicaGauges, ReplicaHandle, ReplicaReport,
                   ReplicaTier};
 pub use router::{DispatchOutcome, Router};
@@ -137,6 +144,19 @@ pub trait PoolEngine {
     fn snapshot_request(&self, _id: u64)
                         -> Option<crate::coordinator::request::TrajectorySnapshot> {
         None
+    }
+
+    /// Admit `req` warm-started from a same-family donor trajectory:
+    /// seed the joiner's lane caches from the donor's so its early
+    /// would-skip steps skip instead of being cold-denied. Returns the
+    /// assigned id plus the number of lane-cache rows actually seeded —
+    /// 0 means the donor was rejected (shape mismatch, empty) and the
+    /// request was admitted cold, which is always a safe fallback and
+    /// the default for engines without warm-start support.
+    fn submit_warm(&mut self, req: Request,
+                   _donor: &crate::coordinator::request::TrajectorySnapshot)
+                   -> (u64, u64) {
+        (self.submit(req), 0)
     }
 }
 

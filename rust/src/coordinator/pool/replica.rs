@@ -7,16 +7,17 @@
 //! thread because PJRT types are `!Send`/`!Sync`.
 
 use crate::config::Slo;
+use crate::coordinator::pool::cache::PoolCache;
 use crate::coordinator::pool::steal::{Rebalancer, StealPeer};
 use crate::coordinator::pool::{EngineFactory, PoolEngine};
-use crate::coordinator::request::{Request, RequestResult,
+use crate::coordinator::request::{Request, RequestKey, RequestResult,
                                   TrajectorySnapshot};
 use crate::coordinator::stats::{LayerStats, ServeStats};
 use crate::obs::ring::pack_pair;
 use crate::obs::{EventKind, LatencyHist, TraceEvent, Tracer};
 use crate::util::threadpool::{BoundedQueue, Popped};
 use anyhow::{Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
@@ -228,6 +229,14 @@ pub struct ReplicaGauges {
     /// work only row-granular gating could skip (`STATS`
     /// `rows_recovered`).
     pub rows_recovered: AtomicU64,
+    /// Requests this replica admitted warm-started from a donor
+    /// trajectory's lane caches (pool cache near hit — the engine
+    /// actually seeded rows, not just a donor lookup).
+    pub warm_hits: AtomicU64,
+    /// Rows whose skip was possible only because the request was
+    /// warm-started — cold denials the cache converted (`STATS`
+    /// `rows_warmed`, mirrors the engine's layer-stats total).
+    pub rows_warmed: AtomicU64,
     /// Jobs this replica pulled from a sibling's queue while idle.
     pub steals: AtomicU64,
     /// Jobs a sibling pulled out of this replica's queue.
@@ -388,6 +397,8 @@ pub struct ReplicaReport {
     pub migrated_out: u64,
     /// Mid-flight trajectories this replica resumed from siblings.
     pub migrated_in: u64,
+    /// Requests admitted warm-started from a pool-cache donor.
+    pub warm_hits: u64,
     /// Final buffer-arena counters, when the engine owns one (real
     /// engines do; the synthetic engine reports `None`). A healthy
     /// steady state shows `reused` ≫ `allocated` — see docs/PERF.md.
@@ -411,6 +422,7 @@ impl ReplicaReport {
             stolen: 0,
             migrated_out: 0,
             migrated_in: 0,
+            warm_hits: 0,
             arena: None,
             error: Some(msg.into()),
         }
@@ -480,6 +492,21 @@ impl ReplicaHandle {
     pub fn spawn_traced(id: usize, queue_cap: usize, factory: EngineFactory,
                         steal: Option<Arc<Rebalancer>>, tier: ReplicaTier,
                         tracer: Tracer) -> Result<ReplicaHandle> {
+        Self::spawn_cached(id, queue_cap, factory, steal, tier, tracer, None)
+    }
+
+    /// The fully-provisioned spawn: everything `spawn_traced` does plus
+    /// an optional shared [`PoolCache`]. A cached worker (1) consults
+    /// the warm-start donor store at admission and seeds the joiner's
+    /// lane caches via [`PoolEngine::submit_warm`] on a near hit,
+    /// (2) inserts every finished result into the exact-result tier
+    /// *before* responding, and (3) offers boundary snapshots of its
+    /// residents as donors while they are inside the warm horizon (and
+    /// on eviction). `None` makes this identical to `spawn_traced`.
+    pub fn spawn_cached(id: usize, queue_cap: usize, factory: EngineFactory,
+                        steal: Option<Arc<Rebalancer>>, tier: ReplicaTier,
+                        tracer: Tracer, cache: Option<Arc<PoolCache>>)
+                        -> Result<ReplicaHandle> {
         let queue: BoundedQueue<PoolJob> = BoundedQueue::new(queue_cap.max(1));
         let gauges = Arc::new(ReplicaGauges::default());
         let report: Arc<Mutex<Option<ReplicaReport>>> =
@@ -518,7 +545,8 @@ impl ReplicaHandle {
                         run_replica(id, factory, &q2, &g2, &r2,
                                     &mut responders, &mut stash,
                                     steal.as_deref(),
-                                    &engine_pending, &admitting, &t2, &tr2)
+                                    &engine_pending, &admitting, &t2, &tr2,
+                                    cache.as_deref())
                     }));
                 if result.is_err() {
                     log::warn!("replica {id}: worker panicked");
@@ -709,7 +737,7 @@ fn run_replica(id: usize, factory: EngineFactory,
                stash: &mut BTreeMap<u64, TrajectorySnapshot>,
                steal: Option<&Rebalancer>, engine_pending: &AtomicUsize,
                admitting: &AtomicUsize, tier: &ReplicaTier,
-               tracer: &Tracer) {
+               tracer: &Tracer, cache: Option<&PoolCache>) {
     let mut engine: Box<dyn PoolEngine> = match factory() {
         Ok(e) => e,
         Err(e) => {
@@ -730,10 +758,13 @@ fn run_replica(id: usize, factory: EngineFactory,
     // to the schedule). Reconcile at admission so the gauge tracks what
     // will actually be consumed — otherwise the residue accumulates and
     // biases jsq/lazy routing against this replica forever.
+    #[allow(clippy::too_many_arguments)]
     fn admit(engine: &mut Box<dyn PoolEngine>,
              responders: &mut BTreeMap<u64, mpsc::Sender<RequestResult>>,
              gauges: &ReplicaGauges, engine_pending: &AtomicUsize,
-             admitting: &AtomicUsize, tracer: &Tracer, job: PoolJob) {
+             admitting: &AtomicUsize, tracer: &Tracer,
+             cache: Option<&PoolCache>,
+             result_keys: &mut BTreeMap<u64, RequestKey>, job: PoolJob) {
         let wire_steps = job.remaining_steps();
         let wire_id = job.id();
         if tracer.is_enabled() {
@@ -756,7 +787,25 @@ fn run_replica(id: usize, factory: EngineFactory,
         admitting.store(wire_steps + 1, Ordering::Relaxed);
         let before = engine.pending_steps();
         let rid = match job.payload {
-            JobPayload::Fresh(req) => engine.submit(req),
+            JobPayload::Fresh(req) => match cache {
+                Some(c) => {
+                    // near-hit check: a same-family donor seeds the
+                    // joiner's lane caches so its early would-skips
+                    // skip instead of being cold-denied. submit_warm
+                    // falls back to a cold admission on any mismatch.
+                    let key = c.key_of(&req);
+                    let (rid, rows) = match c.donate(&req) {
+                        Some(donor) => engine.submit_warm(req, &donor),
+                        None => (engine.submit(req), 0),
+                    };
+                    if rows > 0 {
+                        gauges.warm_hits.fetch_add(1, Ordering::Relaxed);
+                    }
+                    result_keys.insert(rid, key);
+                    rid
+                }
+                None => engine.submit(req),
+            },
             JobPayload::Resumed(snap) => {
                 gauges.migrated_in.fetch_add(1, Ordering::Relaxed);
                 gauges.resumed.fetch_add(1, Ordering::Relaxed);
@@ -773,6 +822,11 @@ fn run_replica(id: usize, factory: EngineFactory,
                                        snap.pending_steps() as u32),
                     });
                 }
+                if let Some(c) = cache {
+                    // a migrated trajectory's finished result is just
+                    // as cacheable as a locally-admitted one
+                    result_keys.insert(snap.req.id, c.key_of(&snap.req));
+                }
                 engine.admit_snapshot(snap)
             }
         };
@@ -786,6 +840,12 @@ fn run_replica(id: usize, factory: EngineFactory,
     }
     let mut error: Option<String> = None;
     let mut idle_misses = 0u32;
+    // cache bookkeeping: the canonical key of every admitted request
+    // (derived at admission, consumed when its result is inserted into
+    // the exact tier) and the residents whose donor window has closed
+    // (cursor past the warm horizon — stop snapshotting them).
+    let mut result_keys: BTreeMap<u64, RequestKey> = BTreeMap::new();
+    let mut donor_done: BTreeSet<u64> = BTreeSet::new();
 
     loop {
         // drain-by-migration: evict every resident at this step
@@ -795,7 +855,7 @@ fn run_replica(id: usize, factory: EngineFactory,
         if gauges.drain.load(Ordering::Acquire) {
             if let Some(rb) = steal {
                 migrate_residents(id, &mut engine, gauges, responders,
-                                  rb, tracer, None);
+                                  rb, tracer, cache, None);
                 engine_pending
                     .store(engine.pending_steps(), Ordering::Relaxed);
                 stash.clear();
@@ -808,7 +868,7 @@ fn run_replica(id: usize, factory: EngineFactory,
         if relief > 0 {
             if let Some(rb) = steal {
                 migrate_residents(id, &mut engine, gauges, responders,
-                                  rb, tracer, Some(relief - 1));
+                                  rb, tracer, cache, Some(relief - 1));
                 engine_pending
                     .store(engine.pending_steps(), Ordering::Relaxed);
             }
@@ -830,7 +890,7 @@ fn run_replica(id: usize, factory: EngineFactory,
                 Some(job) => {
                     idle_misses = 0;
                     admit(&mut engine, responders, gauges, engine_pending,
-                          admitting, tracer, job);
+                          admitting, tracer, cache, &mut result_keys, job);
                 }
                 None => break,
             }
@@ -855,7 +915,7 @@ fn run_replica(id: usize, factory: EngineFactory,
                         });
                     }
                     admit(&mut engine, responders, gauges, engine_pending,
-                          admitting, tracer, job);
+                          admitting, tracer, cache, &mut result_keys, job);
                     continue;
                 }
             }
@@ -871,7 +931,7 @@ fn run_replica(id: usize, factory: EngineFactory,
                 Popped::Item(job) => {
                     idle_misses = 0;
                     admit(&mut engine, responders, gauges, engine_pending,
-                          admitting, tracer, job);
+                          admitting, tracer, cache, &mut result_keys, job);
                 }
                 Popped::Closed => break,
                 Popped::TimedOut => continue,
@@ -897,6 +957,15 @@ fn run_replica(id: usize, factory: EngineFactory,
                         });
                     }
                     dec(&gauges.queued, 1);
+                    donor_done.remove(&res.id);
+                    // cache the finished result BEFORE responding, so a
+                    // client that immediately repeats the request is
+                    // guaranteed to observe the hit
+                    if let (Some(c), Some(key)) =
+                        (cache, result_keys.remove(&res.id))
+                    {
+                        c.insert(key, &res);
+                    }
                     if let Some(tx) = responders.remove(&res.id) {
                         let _ = tx.send(res);
                     }
@@ -924,6 +993,34 @@ fn run_replica(id: usize, factory: EngineFactory,
                 gauges
                     .rows_recovered
                     .store(ls.rows_recovered_total(), Ordering::Relaxed);
+                gauges
+                    .rows_warmed
+                    .store(ls.rows_warmed_total(), Ordering::Relaxed);
+                // donor harvesting: while a resident's cursor is inside
+                // the warm horizon, offer its boundary snapshot to the
+                // donor store (deeper boundaries replace shallower
+                // ones). Once it crosses the horizon its donor window
+                // is closed for good — stop snapshotting it.
+                if let Some(c) = cache {
+                    if c.warm_enabled() {
+                        let horizon = c.config().warm_horizon;
+                        for aid in engine.active_ids() {
+                            if donor_done.contains(&aid) {
+                                continue;
+                            }
+                            let Some(s) = engine.snapshot_request(aid)
+                            else { continue };
+                            if s.cursor > horizon {
+                                donor_done.insert(aid);
+                            } else if s.cursor > 0 {
+                                c.offer_donor(&s);
+                                if s.cursor == horizon {
+                                    donor_done.insert(aid);
+                                }
+                            }
+                        }
+                    }
+                }
                 // refresh the crash-resume stash at this boundary: the
                 // last consistent snapshot of every resident, so a
                 // panic mid-round loses at most one round of work per
@@ -971,6 +1068,7 @@ fn run_replica(id: usize, factory: EngineFactory,
         stolen: gauges.stolen.load(Ordering::Relaxed),
         migrated_out: gauges.migrated_out.load(Ordering::Relaxed),
         migrated_in: gauges.migrated_in.load(Ordering::Relaxed),
+        warm_hits: gauges.warm_hits.load(Ordering::Relaxed),
         arena: engine.arena_stats(),
         error,
     });
@@ -1007,11 +1105,13 @@ fn refuse_remaining(queue: &BoundedQueue<PoolJob>, gauges: &ReplicaGauges) {
 /// pushed to the requesting thief. Either way, a resident nobody can
 /// take is re-admitted locally in the same pass: migration is an
 /// optimization, never a way to lose work.
+#[allow(clippy::too_many_arguments)]
 fn migrate_residents(id: usize, engine: &mut Box<dyn PoolEngine>,
                      gauges: &ReplicaGauges,
                      responders: &mut BTreeMap<u64,
                                               mpsc::Sender<RequestResult>>,
-                     rb: &Rebalancer, tracer: &Tracer, to: Option<usize>) {
+                     rb: &Rebalancer, tracer: &Tracer,
+                     cache: Option<&PoolCache>, to: Option<usize>) {
     let ids: Vec<u64> = if to.is_some() {
         engine.active_ids().into_iter().max().into_iter().collect()
     } else {
@@ -1023,6 +1123,11 @@ fn migrate_residents(id: usize, engine: &mut Box<dyn PoolEngine>,
             responders.insert(rid, tx);
             continue;
         };
+        // an evicted boundary inside the warm horizon is donor-grade
+        // state; retain it before the snapshot leaves this replica
+        if let Some(c) = cache {
+            c.offer_donor(&snap);
+        }
         let steps = snap.pending_steps();
         let cursor = snap.cursor;
         let job = PoolJob::resumed(snap, tx, crate::obs::epoch_us());
@@ -1279,6 +1384,56 @@ mod tests {
         assert_eq!(rep.completed_by_slo.iter().sum::<u64>(),
                    rep.serve.completed as u64,
                    "per-SLO counters partition the total");
+    }
+
+    #[test]
+    fn cached_replica_warm_starts_and_populates_exact_tier() {
+        use crate::coordinator::pool::cache::{CacheConfig, PoolCache};
+        let spec = SimSpec { lazy_pct: 90, work_per_module: 0,
+                             ..SimSpec::default() };
+        let cache = Arc::new(PoolCache::new(
+            CacheConfig::new(8, 2, spec.img_elems as u64)));
+        let h = ReplicaHandle::spawn_cached(
+            0, 16, SimEngine::factory(spec), None,
+            ReplicaTier::default(), Tracer::disabled(),
+            Some(cache.clone()))
+            .unwrap();
+        let send = |seed: u64| {
+            let (tx, rx) = mpsc::channel();
+            let req = Request::new(0, 3, 6, seed);
+            h.gauges.queued.fetch_add(1, Ordering::Relaxed);
+            h.gauges.pending_steps.fetch_add(6, Ordering::Relaxed);
+            h.try_send(PoolJob::fresh(req, tx, 0))
+                .map_err(|_| "send")
+                .unwrap();
+            rx
+        };
+        // first of the family runs cold and becomes a donor while its
+        // cursor is inside the warm horizon (2)
+        let first = send(500).recv().unwrap();
+        // same family, different seed: warm-started from that donor
+        let second = send(501).recv().unwrap();
+        assert_ne!(first.image.data(), second.image.data(),
+                   "different seeds must keep different images");
+        assert_eq!(h.gauges.warm_hits.load(Ordering::Relaxed), 1,
+                   "the near hit seeds the joiner");
+        assert!(h.gauges.rows_warmed.load(Ordering::Relaxed) > 0,
+                "step-0 would-skips convert under the seeded cache");
+        let st = cache.stats();
+        assert_eq!(st.inserted, 2, "both results cached before respond");
+        assert!(st.donated >= 1, "the donor store served the near hit");
+        // the exact tier now serves a repeat with zero engine work
+        let hit = cache
+            .lookup(&Request::new(0, 3, 6, 500))
+            .expect("exact repeat must hit");
+        assert_eq!(hit.image.data(), first.image.data(),
+                   "the cached image is the engine's, bit-exact");
+        let rep = h.join_report();
+        assert!(rep.error.is_none(), "{:?}", rep.error);
+        assert_eq!(rep.warm_hits, 1);
+        assert_eq!(rep.layer.rows_warmed_total(),
+                   h.gauges.rows_warmed.load(Ordering::Relaxed),
+                   "gauge mirrors the engine's layer-stats total");
     }
 
     #[test]

@@ -22,11 +22,21 @@
 //! gets a structured `queue full` line, never silence). Sheds are also
 //! counted per SLO class for the `STATS` wire verb and the final report.
 //!
+//! When constructed [`with_cache`](Router::with_cache), the router
+//! fronts the dispatch path with the content-addressable
+//! [`PoolCache`]: an exact [`crate::coordinator::request::RequestKey`]
+//! hit answers on the response channel immediately — zero engine work,
+//! no queue capacity consumed — and settles its own ledger term
+//! (`cache_hits`), so the conservation law becomes
+//! `dispatched == completed + cache_hits + shed + forfeited`. Cache
+//! hits never touch the latency histograms: quantiles keep describing
+//! engine-served requests only.
+//!
 //! Invariants (pinned by unit + integration tests):
 //! * **Gauge conservation** — pool-wide `queued`/`pending_steps` totals
 //!   are preserved by dispatch rollback, steal migration, and dead-
-//!   replica cleanup; completed + forfeited + shed resolves every
-//!   admission ticket exactly once.
+//!   replica cleanup; completed + cache_hits + forfeited + shed
+//!   resolves every admission ticket exactly once.
 //! * **Admission-ledger bound** — tickets are taken *before* the bound
 //!   check, so concurrent dispatches can never overrun `queue_cap`.
 //! * **Candidate soundness** — finished replicas and SLO-incompatible
@@ -34,10 +44,11 @@
 
 use crate::config::{RoutePolicy, Slo};
 use crate::coordinator::pool::agg::PoolReport;
+use crate::coordinator::pool::cache::PoolCache;
 use crate::coordinator::pool::replica::{GaugeSnapshot, PoolJob, ReplicaHandle};
 use crate::coordinator::pool::steal::Rebalancer;
 use crate::coordinator::request::{Request, RequestResult};
-use crate::obs::LatencyHist;
+use crate::obs::{EventKind, LatencyHist};
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -56,6 +67,12 @@ pub enum DispatchOutcome {
     /// with the request's SLO class and lane count. Retrying the same
     /// request is futile until the pool is re-provisioned.
     ShedUnservable,
+    /// Served straight from the exact-result cache: the finished
+    /// response was already delivered on the caller's channel with zero
+    /// engine work and zero queue capacity consumed. Settled by the
+    /// ledger's `cache_hits` term, and deliberately absent from the
+    /// latency histograms (a 0-step hit must not deflate p50).
+    CacheHit,
 }
 
 /// The pool front-door. All methods take `&self`; the router is shared
@@ -81,6 +98,14 @@ pub struct Router {
     /// Present when pool work stealing is on; the router registers the
     /// replicas' stealable surfaces with it at construction.
     rebalancer: Option<Arc<Rebalancer>>,
+    /// Present when the router fronts dispatch with the
+    /// content-addressable cache ([`with_cache`](Self::with_cache)).
+    /// Exact hits answer here; the same `Arc` lives in the replicas so
+    /// completions populate the exact tier and admissions warm-start.
+    cache: Option<Arc<PoolCache>>,
+    /// Requests resolved by the exact-result cache — its own ledger
+    /// term: `dispatched == completed + cache_hits + shed + forfeited`.
+    cache_hits: AtomicU64,
 }
 
 impl Router {
@@ -98,6 +123,20 @@ impl Router {
     pub fn with_rebalancer(replicas: Vec<ReplicaHandle>, route: RoutePolicy,
                            queue_cap: usize,
                            rebalancer: Option<Arc<Rebalancer>>) -> Router {
+        Self::with_cache(replicas, route, queue_cap, rebalancer, None)
+    }
+
+    /// Construct with an optional content-addressable cache fronting
+    /// the dispatch path (decorator: cache-check before delegating to
+    /// the routed dispatch). Pass the SAME `Arc` the replicas were
+    /// spawned with ([`ReplicaHandle::spawn_cached`]) — the replicas
+    /// write completions into the exact tier and harvest warm-start
+    /// donors; the router reads exact hits here. `None` behaves exactly
+    /// like [`with_rebalancer`](Self::with_rebalancer).
+    pub fn with_cache(replicas: Vec<ReplicaHandle>, route: RoutePolicy,
+                      queue_cap: usize,
+                      rebalancer: Option<Arc<Rebalancer>>,
+                      cache: Option<Arc<PoolCache>>) -> Router {
         assert!(!replicas.is_empty(), "router needs at least one replica");
         if let Some(rb) = &rebalancer {
             rb.register(replicas.iter().map(|r| r.steal_peer()).collect());
@@ -112,6 +151,8 @@ impl Router {
             dispatched: AtomicU64::new(0),
             next_id: AtomicU64::new(1),
             rebalancer,
+            cache,
+            cache_hits: AtomicU64::new(0),
         }
     }
 
@@ -227,10 +268,10 @@ impl Router {
         self.replicas.iter().all(|r| r.finished())
     }
 
-    /// Resolved (no longer outstanding) ledger entries: sheds plus every
-    /// request a replica completed or forfeited. Monotone, so a stale
-    /// read can only over-estimate outstanding work — which sheds
-    /// conservatively, never overruns the cap.
+    /// Resolved (no longer outstanding) ledger entries: sheds, cache
+    /// hits, and every request a replica completed or forfeited.
+    /// Monotone, so a stale read can only over-estimate outstanding
+    /// work — which sheds conservatively, never overruns the cap.
     fn resolved(&self) -> u64 {
         let done: u64 = self
             .replicas
@@ -241,14 +282,17 @@ impl Router {
             })
             .sum();
         done + self.shed.load(Ordering::Relaxed)
+            + self.cache_hits.load(Ordering::Relaxed)
     }
 
     /// Route one request. Returns `false` if it was shed — see
     /// [`dispatch_outcome`](Self::dispatch_outcome) for the
-    /// reason-bearing variant the wire front-end uses.
+    /// reason-bearing variant the wire front-end uses. A cache hit
+    /// counts as success: the response channel has already delivered.
     pub fn dispatch(&self, req: Request,
                     respond: mpsc::Sender<RequestResult>) -> bool {
-        self.dispatch_outcome(req, respond) == DispatchOutcome::Admitted
+        matches!(self.dispatch_outcome(req, respond),
+                 DispatchOutcome::Admitted | DispatchOutcome::CacheHit)
     }
 
     /// Route one request, reporting *why* when it sheds: a capacity shed
@@ -264,6 +308,40 @@ impl Router {
                             -> DispatchOutcome {
         let slo = req.slo;
         let lanes = req.lanes().max(1);
+        // cache-check before delegating to the routed path: an exact
+        // hit answers immediately and never consumes queue capacity.
+        // The hit is counted BEFORE its dispatch ticket, so a
+        // concurrent resolved() read can never observe the ticket
+        // without its resolution — outstanding work is never
+        // over-estimated by a hit in flight, and the bound check stays
+        // exact for real dispatches racing it.
+        if let Some(c) = &self.cache {
+            if let Some(mut res) = c.lookup(&req) {
+                self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                self.dispatched.fetch_add(1, Ordering::Relaxed);
+                let id = if req.id == 0 {
+                    self.next_id.fetch_add(1, Ordering::Relaxed)
+                } else {
+                    req.id
+                };
+                // re-stamp the wire identity: the cached payload came
+                // from a different request (same key, other id/SLO tag)
+                // and a hit costs no engine time
+                res.id = id;
+                res.slo = slo;
+                res.latency = std::time::Duration::ZERO;
+                // the router owns no trace ring; hits land on replica
+                // 0's so TRACE consumers see them (arg = steps saved)
+                if let Some(r) = self.replicas.first() {
+                    r.tracer.record(EventKind::CacheHit, id,
+                                    res.steps as u64);
+                }
+                // a dropped receiver just discards the hit — same as a
+                // completion racing a disconnected client
+                let _ = respond.send(res);
+                return DispatchOutcome::CacheHit;
+            }
+        }
         // take a ticket first, then check the bound: the sheds below
         // return the ticket via the shed counter inside resolved()
         let resolved = self.resolved();
@@ -398,10 +476,42 @@ impl Router {
     }
 
     /// Total requests ever handed to [`dispatch`](Self::dispatch) —
-    /// admitted or shed. The pool-wide conservation law is
-    /// `dispatched == completed + shed + forfeited` once drained.
+    /// admitted, cache-served, or shed. The pool-wide conservation law
+    /// is `dispatched == completed + cache_hits + shed + forfeited`
+    /// once drained (`cache_hits` is 0 without a cache).
     pub fn total_dispatched(&self) -> u64 {
         self.dispatched.load(Ordering::Relaxed)
+    }
+
+    /// Requests served straight from the exact-result cache — counted
+    /// separately from `completed` (hits do zero engine work and are
+    /// deliberately absent from the latency histograms).
+    pub fn total_cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Requests admitted warm-started pool-wide: a same-family donor
+    /// trajectory actually seeded lane-cache rows at admission.
+    pub fn total_warm_hits(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.warm_hits.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Lane-cache rows seeded from warm-start donors pool-wide — each
+    /// one a `rows_denied_cold` the joiner will not pay.
+    pub fn total_rows_warmed(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.rows_warmed.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Live counter snapshot of the fronting cache, when one is armed.
+    pub fn cache_stats(&self)
+                       -> Option<crate::coordinator::pool::cache::CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
     }
 
     /// Requests lost to replica panics pool-wide (admitted but neither
@@ -472,6 +582,12 @@ impl Router {
                      Json::num(r.gauges.rows_recovered
                                .load(Ordering::Relaxed)
                                as f64)),
+                    ("warm_hits",
+                     Json::num(r.gauges.warm_hits.load(Ordering::Relaxed)
+                               as f64)),
+                    ("rows_warmed",
+                     Json::num(r.gauges.rows_warmed.load(Ordering::Relaxed)
+                               as f64)),
                     ("completed",
                      Json::num(r.gauges.completed.load(Ordering::Relaxed)
                                as f64)),
@@ -517,7 +633,7 @@ impl Router {
                 })
                 .collect(),
         );
-        Json::obj(vec![
+        let mut pool = vec![
             ("replicas", Json::arr(replicas)),
             ("route", Json::str(self.route.name())),
             ("stealing", Json::Bool(self.stealing())),
@@ -541,9 +657,26 @@ impl Router {
             ("recovered_ratio",
              Json::num(self.total_rows_recovered() as f64
                        / self.total_rows_skipped().max(1) as f64)),
+            // cache-served completions, counted apart from `completed`
+            // so latency quantiles keep describing engine work only
+            ("cache_hits", Json::num(self.total_cache_hits() as f64)),
+            ("warm_hits", Json::num(self.total_warm_hits() as f64)),
+            ("rows_warmed", Json::num(self.total_rows_warmed() as f64)),
             ("tiers", tiers),
-        ])
-        .to_string()
+        ];
+        if let Some(cs) = self.cache_stats() {
+            pool.push(("cache", Json::obj(vec![
+                ("hits", Json::num(cs.hits as f64)),
+                ("misses", Json::num(cs.misses as f64)),
+                ("entries", Json::num(cs.entries as f64)),
+                ("inserted", Json::num(cs.inserted as f64)),
+                ("evicted", Json::num(cs.evicted as f64)),
+                ("donors", Json::num(cs.donors as f64)),
+                ("donated", Json::num(cs.donated as f64)),
+                ("donor_rejected", Json::num(cs.donor_rejected as f64)),
+            ])));
+        }
+        Json::obj(pool).to_string()
     }
 
     /// One-line JSON payload of the `TRACE` wire verb: the newest ring
@@ -643,6 +776,7 @@ impl Router {
             replicas: reports,
             shed: self.shed_count(),
             shed_by_slo: self.shed_by_slo(),
+            cache_hits: self.total_cache_hits(),
         }
     }
 }

@@ -92,6 +92,10 @@ struct SimActive {
     /// portable across replicas, so a migrated trajectory's end-to-end
     /// latency is attributed (once, in full) to the finishing replica.
     admitted_us: u64,
+    /// Warm-start horizon: steps `< warm_until` are treated as warm
+    /// even at cursor 0, modeling lane caches seeded from a donor
+    /// trajectory (`submit_warm`). 0 = admitted cold, the default.
+    warm_until: usize,
 }
 
 /// The synthetic engine. Single-threaded like the real one; a pool
@@ -214,8 +218,32 @@ impl PoolEngine for SimEngine {
             skip_counts: vec![0; slots],
             modules_seen: vec![0; slots],
             admitted_us: crate::obs::epoch_us(),
+            warm_until: 0,
         });
         id
+    }
+
+    fn submit_warm(&mut self, req: Request, donor: &TrajectorySnapshot)
+                   -> (u64, u64) {
+        // family + boundary validation mirrors the real engine: a donor
+        // that does not match the joiner admits it cold (always safe)
+        let family_ok = donor.req.class_label == req.class_label
+            && donor.req.steps == req.steps
+            && donor.req.cfg_scale.to_bits() == req.cfg_scale.to_bits()
+            && donor.lanes() == req.lanes();
+        if !family_ok || donor.cursor == 0 {
+            return (self.submit(req), 0);
+        }
+        let warm_until = donor.cursor.min(req.steps);
+        let lanes = req.lanes() as u64;
+        let id = self.submit(req);
+        if let Some(a) = self.active.last_mut() {
+            a.warm_until = warm_until;
+        }
+        // the simulator keeps no materialized caches — its gate is
+        // (step, slot)-pure — so the seeded surface is modeled as one
+        // row per (module slot, lane), same shape the real engine copies
+        (id, (2 * self.spec.depth) as u64 * lanes)
     }
 
     fn active_ids(&self) -> Vec<u64> {
@@ -247,6 +275,7 @@ impl PoolEngine for SimEngine {
             skip_counts: fit(snap.skip_counts),
             modules_seen: fit(snap.modules_seen),
             admitted_us: snap.admitted_us,
+            warm_until: 0,
         });
         id
     }
@@ -273,7 +302,12 @@ impl PoolEngine for SimEngine {
         let t0 = Instant::now();
         let depth = self.spec.depth;
         let gamma = self.spec.lazy_pct as f64 / 100.0;
-        let any_cold = self.active.iter().any(|a| a.cursor == 0);
+        // a warm-started joiner (warm_until > 0) is not cold at step 0:
+        // its lane caches were seeded at admission
+        let any_cold = self
+            .active
+            .iter()
+            .any(|a| a.cursor == 0 && a.warm_until == 0);
         let traced = self.tracer.is_enabled() && !self.active.is_empty();
         if traced {
             self.tracer.record_at(TraceEvent {
@@ -298,11 +332,11 @@ impl PoolEngine for SimEngine {
             for ai in 0..self.active.len() {
                 let step = self.active[ai].cursor;
                 let want = self.would_skip(step, k);
-                let warm = step > 0;
+                let warm = step > 0 || step < self.active[ai].warm_until;
                 let skip = if self.spec.coupled {
                     batch_skip
                 } else {
-                    self.wants_skip(step, k) // warm && own gate
+                    warm && want // own gate, behind the cache gate
                 };
                 self.active[ai].modules_seen[k] += 1;
                 self.layer_stats.record(k, skip, gamma);
@@ -313,6 +347,11 @@ impl PoolEngine for SimEngine {
                     self.serve_stats.module_skips += 1;
                     let recovered = !self.spec.coupled && !batch_skip;
                     self.layer_stats.record_rows(k, 0, 1, recovered as u64);
+                    if step == 0 {
+                        // this skip exists only because the trajectory
+                        // was warm-started: a cold denial converted
+                        self.layer_stats.record_rows_warmed(k, 1);
+                    }
                 } else {
                     t_run += 1;
                     self.layer_stats.record_rows(k, 1, 0, 0);
@@ -607,6 +646,128 @@ mod tests {
                  be accounted as recovered");
         // unknown ids evict nothing; eviction does not disturb others
         assert!(thief.evict_to_snapshot(999).is_none());
+    }
+
+    #[test]
+    fn warm_start_converts_cold_denials_into_skips() {
+        let spec = || SimSpec { lazy_pct: 80, work_per_module: 0,
+                                ..SimSpec::default() };
+        // donor: same family (label, steps, cfg), different seed,
+        // evicted at step boundary 3
+        let mut d = SimEngine::new(spec());
+        let donor_id = d.submit(Request::new(0, 5, 8, 111));
+        for _ in 0..3 {
+            d.step_round().unwrap();
+        }
+        let donor = d.evict_to_snapshot(donor_id).unwrap();
+
+        let run = |warm: Option<&TrajectorySnapshot>| {
+            let mut e = SimEngine::new(spec());
+            let req = Request::new(0, 5, 8, 222);
+            match warm {
+                Some(dn) => {
+                    let (_, rows) = e.submit_warm(req, dn);
+                    assert!(rows > 0, "valid donor must seed rows");
+                }
+                None => {
+                    e.submit(req);
+                }
+            }
+            let img = run_all(&mut e).pop().unwrap().image;
+            (e, img)
+        };
+        let (cold, cold_img) = run(None);
+        let (warm, warm_img) = run(Some(&donor));
+        assert_eq!(cold_img.data(), warm_img.data(),
+                   "warm start must never change the output");
+        assert!(warm.layer_stats.rows_warmed_total() > 0,
+                "step-0 would-skips convert under a seeded cache");
+        assert!(warm.layer_stats.cold_denied_total()
+                    < cold.layer_stats.cold_denied_total());
+        assert_eq!(warm.layer_stats.cold_denied_total()
+                       + warm.layer_stats.rows_warmed_total(),
+                   cold.layer_stats.cold_denied_total(),
+                   "every warmed row is exactly one converted denial");
+
+        // rejected donors admit cold: family mismatch and no boundary
+        let mut e = SimEngine::new(spec());
+        let mut wrong = donor.clone();
+        wrong.req.steps = 9;
+        let (_, rows) = e.submit_warm(Request::new(0, 5, 8, 333), &wrong);
+        assert_eq!(rows, 0, "family mismatch admits cold");
+        let mut fresh = donor.clone();
+        fresh.cursor = 0;
+        let (_, rows) = e.submit_warm(Request::new(0, 5, 8, 334), &fresh);
+        assert_eq!(rows, 0, "boundary-free donor admits cold");
+        run_all(&mut e);
+        assert_eq!(e.layer_stats.rows_warmed_total(), 0);
+    }
+
+    /// Warm-start fidelity: for any family, horizon, and lazy target,
+    /// a warm-started run produces bit-identical output to the cold
+    /// run; at horizon 0 the *entire* run (skip accounting included) is
+    /// identical; and warmed rows exactly partition the cold run's
+    /// denials.
+    #[test]
+    fn propcheck_warm_start_is_output_invariant_across_horizons() {
+        use crate::util::propcheck::propcheck;
+        propcheck(40, |g| {
+            let steps = g.usize_in(1, 6);
+            let spec = SimSpec {
+                lazy_pct: g.usize_in(0, 95) as u32,
+                work_per_module: 0,
+                ..SimSpec::default()
+            };
+            let label = g.usize_in(0, 4);
+            let donor_seed = g.u64();
+            let joiner_seed = donor_seed.wrapping_add(1);
+            let horizon = g.usize_in(0, steps);
+            // the donor trajectory, evicted at the horizon boundary
+            let mut d = SimEngine::new(spec.clone());
+            let donor_id = d.submit(Request::new(0, label, steps,
+                                                 donor_seed));
+            for _ in 0..horizon {
+                d.step_round().expect("donor step");
+            }
+            let donor = d.evict_to_snapshot(donor_id).unwrap();
+            let drain = |e: &mut SimEngine| {
+                let mut out = Vec::new();
+                while e.active_count() > 0 {
+                    out.extend(e.step_round().expect("sim step"));
+                }
+                out.pop().unwrap()
+            };
+            // cold reference vs warm-started joiner, same request
+            let mut cold = SimEngine::new(spec.clone());
+            cold.submit(Request::new(0, label, steps, joiner_seed));
+            let cold_res = drain(&mut cold);
+            let mut warm = SimEngine::new(spec.clone());
+            let (_, rows) = warm.submit_warm(
+                Request::new(0, label, steps, joiner_seed), &donor);
+            let warm_res = drain(&mut warm);
+            let bits = |t: &crate::tensor::Tensor| {
+                t.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            };
+            crate::prop_assert!(
+                bits(&cold_res.image) == bits(&warm_res.image),
+                "warm start changed the output (horizon {horizon})");
+            if horizon == 0 {
+                crate::prop_assert!(rows == 0,
+                    "a boundary-free donor must be refused");
+                crate::prop_assert!(
+                    cold_res.per_module_skip == warm_res.per_module_skip,
+                    "horizon 0 must be bit-identical to cold, \
+                     skip accounting included");
+                crate::prop_assert!(
+                    warm.layer_stats.rows_warmed_total() == 0,
+                    "horizon 0 warms nothing");
+            }
+            crate::prop_assert!(
+                warm.layer_stats.cold_denied_total()
+                    + warm.layer_stats.rows_warmed_total()
+                    == cold.layer_stats.cold_denied_total(),
+                "warmed rows must exactly partition the cold denials");
+        });
     }
 
     #[test]

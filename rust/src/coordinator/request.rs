@@ -56,6 +56,79 @@ impl Request {
             1
         }
     }
+
+    /// This request's canonical content key (see [`RequestKey::of`]).
+    /// `model_params` identifies the serving model/resolution the pool
+    /// runs — two pools with different models must never share entries.
+    pub fn key(&self, model_params: u64) -> RequestKey {
+        RequestKey::of(self, model_params)
+    }
+}
+
+/// Canonical content-addressable identity of a request: exactly the
+/// fields that determine the finished output — class label, CFG scale
+/// (by f32 *bits*, so 1.5 and 1.5000001 are distinct keys), step count,
+/// seed, and the serving model/resolution (`model_params`). Wire
+/// identity (`id`) and scheduling class (`slo`) are deliberately
+/// excluded: they never change the image. Equal keys ⇒ bit-identical
+/// outputs (propcheck-asserted against the SimEngine in
+/// `pool/cache.rs`), which is what lets the exact-result cache return a
+/// stored image with zero engine work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestKey {
+    /// Class label conditioning the sample.
+    pub class_label: u64,
+    /// `cfg_scale.to_bits()` — bit-exact, no float comparison hazards.
+    pub cfg_bits: u32,
+    /// Denoise step count.
+    pub steps: u64,
+    /// Init-noise seed.
+    pub seed: u64,
+    /// Serving model / resolution discriminator (e.g. the image element
+    /// count): keys from different model configurations never collide.
+    pub model_params: u64,
+}
+
+impl RequestKey {
+    /// Derive the canonical key for `req` under a given model identity.
+    pub fn of(req: &Request, model_params: u64) -> RequestKey {
+        RequestKey {
+            class_label: req.class_label as u64,
+            cfg_bits: req.cfg_scale.to_bits(),
+            steps: req.steps as u64,
+            seed: req.seed,
+            model_params,
+        }
+    }
+
+    /// The near-hit family this key belongs to: everything but the
+    /// seed. Two requests in the same family share a trajectory shape
+    /// (label, CFG, schedule, model) and differ only in init noise —
+    /// the warm-start donor store is keyed on this.
+    pub fn family(&self) -> FamilyKey {
+        FamilyKey {
+            class_label: self.class_label,
+            cfg_bits: self.cfg_bits,
+            steps: self.steps,
+            model_params: self.model_params,
+        }
+    }
+}
+
+/// Warm-start (near-hit) key: [`RequestKey`] minus the seed. Requests
+/// in the same family may borrow a donor trajectory's early-step lane
+/// caches even though their latents differ (Δ-DiT: trajectory
+/// deviations concentrate in late steps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FamilyKey {
+    /// Class label conditioning the sample.
+    pub class_label: u64,
+    /// `cfg_scale.to_bits()` of every member request.
+    pub cfg_bits: u32,
+    /// Denoise step count of every member request.
+    pub steps: u64,
+    /// Serving model / resolution discriminator.
+    pub model_params: u64,
 }
 
 /// Per-lane cache store: one [N*D] vector per (layer, module).
@@ -229,6 +302,28 @@ impl TrajectorySnapshot {
     /// Batch lanes the trajectory occupies (CFG doubles).
     pub fn lanes(&self) -> usize {
         self.req.lanes()
+    }
+
+    /// Trim this snapshot to its warm-start donor form: the lane caches
+    /// (the only state a joiner ever borrows) plus the request params,
+    /// schedule, and cursor that identify and bound them. The latent is
+    /// dropped and the counters/stamps zeroed — a donor is read for its
+    /// early-step cache rows, never resumed as a trajectory, so keeping
+    /// `z` would only bloat the donor store.
+    pub fn donor_trim(&self) -> TrajectorySnapshot {
+        let mut req = self.req.clone();
+        req.id = 0;
+        TrajectorySnapshot {
+            req,
+            timesteps: self.timesteps.clone(),
+            cursor: self.cursor,
+            z: Vec::new(),
+            caches: self.caches.clone(),
+            skip_counts: vec![0; self.skip_counts.len()],
+            modules_seen: vec![0; self.modules_seen.len()],
+            admitted_us: 0,
+            steps_done: self.cursor,
+        }
     }
 
     /// Serialize to the versioned byte encoding: `b"LZTS"` + version
@@ -568,6 +663,140 @@ mod tests {
         b[ts_len_off..ts_len_off + 4]
             .copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(TrajectorySnapshot::decode(&b).is_err(), "huge length");
+    }
+
+    #[test]
+    fn request_key_covers_every_output_field_and_nothing_else() {
+        let mut r = Request::new(7, 3, 12, 99);
+        r.cfg_scale = 1.5;
+        let k = r.key(48);
+        // non-output fields must NOT perturb the key: a cached result
+        // is valid for any wire id / SLO class
+        let mut r2 = r.clone();
+        r2.id = 1234;
+        r2.slo = Slo::Latency;
+        assert_eq!(r2.key(48), k);
+        // every output-affecting field must perturb it
+        let mut p = r.clone();
+        p.class_label = 4;
+        assert_ne!(p.key(48), k, "label");
+        let mut p = r.clone();
+        p.cfg_scale = 2.0;
+        assert_ne!(p.key(48), k, "cfg");
+        let mut p = r.clone();
+        p.steps = 13;
+        assert_ne!(p.key(48), k, "steps");
+        let mut p = r.clone();
+        p.seed = 100;
+        assert_ne!(p.key(48), k, "seed");
+        assert_ne!(r.key(64), k, "resolution/model params");
+        // the family key forgets exactly the seed
+        let mut p = r.clone();
+        p.seed = 100;
+        assert_eq!(p.key(48).family(), k.family());
+        let mut p = r.clone();
+        p.class_label = 4;
+        assert_ne!(p.key(48).family(), k.family());
+    }
+
+    #[test]
+    fn donor_trim_keeps_caches_drops_latent() {
+        let snap = sample_snapshot();
+        let donor = snap.donor_trim();
+        assert_eq!(donor.caches, snap.caches, "lane caches survive");
+        assert_eq!(donor.cursor, snap.cursor);
+        assert_eq!(donor.timesteps, snap.timesteps);
+        assert!(donor.z.is_empty(), "latent dropped");
+        assert_eq!(donor.req.id, 0, "wire identity dropped");
+        assert_eq!(donor.req.seed, snap.req.seed, "donor seed retained \
+                    (a near hit must differ in seed to warm-start)");
+        assert!(donor.skip_counts.iter().all(|&c| c == 0));
+        assert_eq!(donor.admitted_us, 0);
+        // the trimmed form stays codec-portable
+        let back = TrajectorySnapshot::decode(&donor.encode()).unwrap();
+        assert_eq!(back, donor);
+    }
+
+    /// A randomly-shaped, fully-populated valid snapshot (generalizes
+    /// `sample_snapshot` for the codec fuzz property).
+    fn gen_snapshot(g: &mut crate::util::propcheck::Gen) -> TrajectorySnapshot {
+        let steps = g.usize_in(1, 5);
+        let mut req = Request::new(g.u64() % 1000, g.usize_in(0, 9), steps,
+                                   g.u64());
+        req.cfg_scale = if g.bool() { 2.0 } else { 1.0 };
+        let depth = g.usize_in(1, 3);
+        let nd = g.usize_in(1, 6);
+        let img = g.usize_in(0, 10);
+        let timesteps: Vec<usize> =
+            (0..steps).rev().map(|i| i * 250 + 1).collect();
+        let mut ar = ActiveRequest::new(req, timesteps, depth, nd, img);
+        ar.cursor = g.usize_in(0, steps);
+        ar.steps_done = ar.cursor;
+        for k in 0..2 * depth {
+            ar.skip_counts[k] = g.usize_in(0, 9) as u32;
+            ar.modules_seen[k] = ar.skip_counts[k] + g.usize_in(0, 9) as u32;
+        }
+        for lc in ar.caches.iter_mut() {
+            for (k, slot) in lc.values.iter_mut().enumerate() {
+                let vals = g.vec_f32(slot.len(), -4.0, 4.0);
+                slot.copy_from_slice(&vals);
+                lc.valid[k] = g.bool();
+            }
+        }
+        ar.into_snapshot()
+    }
+
+    /// The fuzz invariant for one mutated byte string: decode must not
+    /// panic (a panic fails the test), and any *accepted* mutation must
+    /// decode to a snapshot whose own encode/decode cycle is stable —
+    /// no silent drift to a third snapshot. A mutation that left the
+    /// bytes untouched must decode to exactly the original.
+    fn check_mutation(mutated: &[u8], good: &[u8],
+                      original: &TrajectorySnapshot) {
+        let Ok(decoded) = TrajectorySnapshot::decode(mutated) else {
+            return; // rejected: exactly what corruption should get
+        };
+        let re = decoded.encode();
+        let again = TrajectorySnapshot::decode(&re)
+            .expect("re-encoding an accepted snapshot must decode");
+        crate::prop_assert!(again.encode() == re,
+                            "accepted mutation round-trips unstably");
+        if mutated == good {
+            crate::prop_assert!(decoded == *original,
+                                "identity mutation changed the snapshot");
+        }
+    }
+
+    #[test]
+    fn codec_survives_generated_mutations() {
+        use crate::util::propcheck::propcheck;
+        propcheck(150, |g| {
+            let snap = gen_snapshot(g);
+            let good = snap.encode();
+            // truncation at a random cut is always rejected
+            let cut = g.usize_in(0, good.len() - 1);
+            crate::prop_assert!(
+                TrajectorySnapshot::decode(&good[..cut]).is_err(),
+                "truncation at {cut}/{} accepted", good.len());
+            // a single random bit flip
+            let mut m = good.clone();
+            let byte = g.usize_in(0, m.len() - 1);
+            m[byte] ^= 1 << g.usize_in(0, 7);
+            check_mutation(&m, &good, &snap);
+            // a length-prefix lie: stomp 4 random-aligned bytes with a
+            // random word (covers absurd lengths and internal
+            // inconsistencies)
+            let mut m = good.clone();
+            let off = g.usize_in(0, m.len().saturating_sub(4));
+            let lie = (g.u64() as u32).to_le_bytes();
+            m[off..off + 4].copy_from_slice(&lie);
+            check_mutation(&m, &good, &snap);
+            // appending garbage is always rejected (no trailing bytes)
+            let mut m = good.clone();
+            m.push(g.u64() as u8);
+            crate::prop_assert!(TrajectorySnapshot::decode(&m).is_err(),
+                                "trailing byte accepted");
+        });
     }
 
     #[test]

@@ -316,6 +316,10 @@ pub fn serve_pool_shared(router: Arc<Router>, addr: &str,
                                 use crate::coordinator::pool::DispatchOutcome;
                                 match r3.dispatch_outcome(req, tx) {
                                     DispatchOutcome::Admitted => Ok(()),
+                                    // the cached response is already in
+                                    // the channel; recv() below returns
+                                    // it without blocking
+                                    DispatchOutcome::CacheHit => Ok(()),
                                     DispatchOutcome::ShedCapacity => {
                                         Err("queue full")
                                     }
@@ -349,8 +353,11 @@ pub fn serve_pool_shared(router: Arc<Router>, addr: &str,
         if stop.load(Ordering::Relaxed) {
             break; // acceptor hit a fatal error
         }
+        // cache hits count toward the stop bound: each one answered a
+        // client even though no replica completed anything for it
         if max_requests > 0
-            && router.total_completed() >= max_requests as u64
+            && router.total_completed() + router.total_cache_hits()
+                >= max_requests as u64
         {
             break;
         }

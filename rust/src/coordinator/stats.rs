@@ -28,6 +28,11 @@ pub struct LayerStats {
     /// NOT have skipped on the same inputs — row granularity's
     /// recovered work (exact counterfactual, per slot).
     pub rows_recovered: Vec<u64>,
+    /// [2L]: rows whose skip was possible only because the request was
+    /// warm-started from a donor trajectory's lane caches — cold-row
+    /// denials the pool result cache converted into skips (surfaced via
+    /// `STATS` as `rows_warmed`).
+    pub rows_warmed: Vec<u64>,
 }
 
 impl LayerStats {
@@ -40,6 +45,7 @@ impl LayerStats {
             rows_run: vec![0; 2 * depth],
             rows_skipped: vec![0; 2 * depth],
             rows_recovered: vec![0; 2 * depth],
+            rows_warmed: vec![0; 2 * depth],
         }
     }
 
@@ -71,9 +77,20 @@ impl LayerStats {
         self.rows_recovered[slot] += recovered;
     }
 
+    /// Count `n` warm-start skips on `slot`: rows that would have been
+    /// cold-denied but carried donor-seeded caches (see `rows_warmed`).
+    pub fn record_rows_warmed(&mut self, slot: usize, n: u64) {
+        self.rows_warmed[slot] += n;
+    }
+
     /// Total cold-row denials across all slots (the `STATS` gauge).
     pub fn cold_denied_total(&self) -> u64 {
         self.cold_denied.iter().sum()
+    }
+
+    /// Total warm-start skips across all slots (the `STATS` gauge).
+    pub fn rows_warmed_total(&self) -> u64 {
+        self.rows_warmed.iter().sum()
     }
 
     /// Total live rows run across all slots.

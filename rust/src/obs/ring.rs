@@ -48,6 +48,11 @@ pub enum EventKind {
     /// evicted out (drain / mid-trajectory relief) or admitted back in
     /// (`id` = request id, `arg` = packed (cursor, remaining steps)).
     Migrate = 9,
+    /// A request was served straight from the pool result cache — zero
+    /// engine work (`id` = request id, `arg` = wire steps the cache
+    /// saved). Recorded on replica 0's ring: the router, which fronts
+    /// the cache, owns no ring of its own.
+    CacheHit = 10,
 }
 
 impl EventKind {
@@ -64,6 +69,7 @@ impl EventKind {
             7 => EventKind::Steal,
             8 => EventKind::Retire,
             9 => EventKind::Migrate,
+            10 => EventKind::CacheHit,
             _ => return None,
         })
     }
@@ -80,6 +86,7 @@ impl EventKind {
             EventKind::Steal => "steal",
             EventKind::Retire => "retire",
             EventKind::Migrate => "migrate",
+            EventKind::CacheHit => "cache_hit",
         }
     }
 

@@ -802,6 +802,65 @@ fn jsq_balances_across_replicas() {
 }
 
 #[test]
+fn result_cache_hits_and_warm_starts_end_to_end() {
+    use lazydit::coordinator::pool::{CacheConfig, PoolCache};
+    use lazydit::obs::Tracer;
+
+    let spec = SimSpec::fast();
+    let elems = spec.img_elems;
+    // capacity 32, warm horizon 2, model fingerprint 7 (arbitrary but
+    // shared by the router-side key and the replica-side insert key)
+    let cache = Arc::new(PoolCache::new(CacheConfig::new(32, 2, 7)));
+    let handles = vec![ReplicaHandle::spawn_cached(
+        0, 64, SimEngine::factory(spec), None, ReplicaTier::default(),
+        Tracer::disabled(), Some(cache.clone()))
+        .unwrap()];
+    let router = Router::with_cache(handles, RoutePolicy::RoundRobin, 64,
+                                    None, Some(cache.clone()));
+    let send = |label: usize, steps: usize, seed: u64| {
+        let (tx, rx) = mpsc::channel();
+        assert!(router.dispatch(Request::new(0, label, steps, seed), tx));
+        rx.recv().expect("response")
+    };
+
+    // engine-served miss, then a byte-identical zero-latency exact hit
+    let a = send(3, 6, 42);
+    assert_eq!(a.image.data(),
+               sim_image(&Request::new(0, 3, 6, 42), elems).data());
+    let b = send(3, 6, 42);
+    assert_eq!(router.total_cache_hits(), 1, "exact repeat must hit");
+    assert_eq!(b.image.data(), a.image.data(),
+               "a cache hit serves the engine's bytes");
+    assert_eq!(b.latency, std::time::Duration::ZERO,
+               "hits never enter the latency accounting");
+    assert_ne!(b.id, a.id, "a hit still gets its own wire id");
+
+    // same family, different seed: a warm start, not a hit — and the
+    // output is still this request's own (seed-correct) image
+    let c = send(3, 6, 43);
+    assert_eq!(router.total_cache_hits(), 1, "near hit is not an exact hit");
+    assert_eq!(router.total_warm_hits(), 1, "near hit warm-starts");
+    assert!(router.total_rows_warmed() > 0,
+            "the donor must actually seed rows");
+    assert_eq!(c.image.data(),
+               sim_image(&Request::new(0, 3, 6, 43), elems).data(),
+               "warm start must not change the output");
+
+    // the conservation law with the cache term:
+    // dispatched == completed + cache_hits + shed + forfeited
+    let dispatched = router.total_dispatched();
+    let hits = router.total_cache_hits();
+    let forfeited = router.total_forfeited();
+    let report = router.shutdown();
+    assert_eq!(report.cache_hits, hits);
+    assert_eq!(dispatched,
+               report.completed() as u64 + hits + report.shed + forfeited);
+    assert_eq!(report.completed(), 2, "only the misses reached the engine");
+    assert!(report.render().contains("cache: 1 exact hits"),
+            "the report surfaces cache work:\n{}", report.render());
+}
+
+#[test]
 fn per_replica_policy_labels_surface_in_report() {
     let specs = vec![
         SimSpec { policy: "mean".into(), lazy_pct: 90, ..SimSpec::fast() },

@@ -54,9 +54,12 @@ fi
 
 echo "== tier1: bench smoke (strict unless BENCH_SMOKE=0)"
 # Builds every bench target (a compile gate for benches/, which plain
-# `cargo build` skips) and runs the step-latency bench for a tiny
-# iteration count, emitting BENCH_step.json as a perf artifact. The
-# bench itself asserts per-step latency decreases monotonically with Γ.
+# `cargo build` skips), runs the step-latency bench for a tiny
+# iteration count (emitting BENCH_step.json as a perf artifact), then
+# the pool bench's cache-only smoke path (emitting BENCH_serve.json).
+# The benches themselves assert per-step latency decreases
+# monotonically with Γ, the churn inequalities, and the result-cache
+# hit/warm-start/conservation properties.
 # Mirrors FMT_STRICT/DOC_STRICT: skipped cleanly where cargo is absent.
 if command -v cargo >/dev/null 2>&1; then
     if [ "${BENCH_SMOKE:-1}" = "1" ]; then
@@ -66,13 +69,24 @@ if command -v cargo >/dev/null 2>&1; then
         # itself asserts row_granular < coupled); CI additionally fails
         # if the artifact is missing the cold_churn keys, so the
         # uploaded BENCH_step.json always carries the comparison
-        for key in '"cold_churn"' '"row_granular"' '"coupled"'; do
+        for key in '"cold_churn"' '"row_granular"' '"coupled"' '"warm_churn"'; do
             if ! grep -q "$key" BENCH_step.json; then
-                echo "tier1: BENCH_step.json missing $key (cold_churn section)"
+                echo "tier1: BENCH_step.json missing $key (churn sections)"
                 exit 1
             fi
         done
-        echo "tier1: bench smoke OK (BENCH_step.json written, cold_churn present)"
+        # the result-cache gate: the pool bench's smoke path runs only
+        # the Zipf-label cache scenario (exact hits, warm starts, the
+        # cache_hits conservation term — all asserted inside the bench)
+        # and the artifact must carry the cache section
+        BENCH_SMOKE=1 cargo bench --bench pool_scaling
+        for key in '"cache"' '"hit_ratio"' '"rows_warmed"'; do
+            if ! grep -q "$key" BENCH_serve.json; then
+                echo "tier1: BENCH_serve.json missing $key (cache section)"
+                exit 1
+            fi
+        done
+        echo "tier1: bench smoke OK (churn + cache sections present)"
     else
         echo "tier1: bench smoke skipped (BENCH_SMOKE=0)"
     fi
@@ -106,7 +120,7 @@ echo "== tier1: migration smoke (strict unless MIGRATE_SMOKE=0)"
 # self-drives requests and --drain-after forces replica 0 to evict its
 # mid-flight trajectories to the sibling as portable snapshots. The
 # serve command itself asserts the conservation law (dispatched ==
-# completed + shed + forfeited, i.e. completed == admitted − shed) and
+# completed + cache_hits + shed + forfeited) and
 # exits nonzero on violation; this gate additionally requires at least
 # one resumed trajectory in the printed migration counters.
 # docs/SERVING.md documents the snapshot/migration lifecycle.
