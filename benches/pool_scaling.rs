@@ -25,6 +25,16 @@
 //! numbers land in the `cache` section of `BENCH_serve.json`. With
 //! `BENCH_SMOKE=1` only this part runs (the tier-1 gate).
 //!
+//! Chaos part: deterministic fault schedules (panic, panic-rate sweep,
+//! stall, queue-full burst, snapshot corruption) through a supervised
+//! stealing pool. Under EVERY schedule the admission ledger
+//! `dispatched == completed + cache_hits + shed + forfeited` must
+//! balance exactly and no request may strand; a supervised pool must
+//! strictly out-complete an unsupervised one under the identical panic
+//! schedule, and the brownout degradation ladder must shed strictly
+//! less at every stage under identical overload. The numbers land in
+//! the `chaos` section of `BENCH_serve.json` (docs/SERVING.md).
+//!
 //! Latency quantiles come from the same mergeable log-bucketed
 //! histograms the serving `STATS` verb reports ([`lazydit::obs`], ≤12.5%
 //! relative error), not from sorting sample vectors. A final traced
@@ -40,13 +50,17 @@ use lazydit::config::{RoutePolicy, Slo};
 use lazydit::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
 use lazydit::coordinator::pool::sim::{sim_image, SimEngine, SimSpec};
 use lazydit::coordinator::pool::steal::Rebalancer;
-use lazydit::coordinator::pool::{CacheConfig, PoolCache, PoolReport, Router};
+use lazydit::coordinator::pool::{
+    Brownout, BrownoutConfig, CacheConfig, FaultPlan, PoolCache, PoolEngine,
+    PoolReport, RespawnFactory, Router, Supervisor, SupervisorConfig,
+};
 use lazydit::coordinator::request::Request;
 use lazydit::data::workload::WorkloadSpec;
-use lazydit::obs::{LatencyHist, Tracer};
+use lazydit::obs::{epoch_us, LatencyHist, Tracer};
 use lazydit::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 const REQUESTS: usize = 64;
 const STEPS: usize = 10;
@@ -451,6 +465,437 @@ fn cache_scenario() -> Json {
     ])
 }
 
+// -------------------------------------------------------------- chaos
+
+/// Requests per chaos schedule run.
+const CHAOS_REQUESTS: usize = 32;
+/// Denoise steps per chaos-sweep request.
+const CHAOS_STEPS: usize = 6;
+/// Chaos dispatch window: a wave of this many requests is dispatched,
+/// then every responder resolved, before the next wave goes out — so
+/// the driver observes progress (or its absence) while replicas flap.
+const CHAOS_WINDOW: usize = 8;
+/// Per-responder deadline before a request counts as stranded. Far
+/// beyond any healthy completion; only a genuine hang trips it.
+const CHAOS_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Gauge-sourced outcome of one chaos run. Everything comes from the
+/// router's monotone gauges, never per-incarnation reports: a panicked
+/// incarnation's `ServeStats` die with its thread, the gauges survive
+/// every respawn.
+struct ChaosOutcome {
+    dispatched: u64,
+    completed: u64,
+    cache_hits: u64,
+    shed: u64,
+    forfeited: u64,
+    restarts: u64,
+    breaker_trips: u64,
+    dead: u64,
+    stranded: usize,
+}
+
+impl ChaosOutcome {
+    /// The admission conservation law with its cache term.
+    fn conserved(&self) -> bool {
+        self.dispatched
+            == self.completed + self.cache_hits + self.shed + self.forfeited
+    }
+}
+
+/// Drive `requests` through a pool whose replicas relive `plan_spec`,
+/// in waves of [`CHAOS_WINDOW`]. With `supervised`, a background
+/// thread ticks a [`Supervisor`] until the run drains (stopped before
+/// shutdown so no respawn races the teardown); without it, a panic is
+/// terminal exactly as in an unsupervised production pool. Each
+/// respawned engine compiles its schedule fresh from the plan, so a
+/// flapping replica relives the same deterministic timeline.
+fn run_chaos_pool(plan_spec: &str, supervised: bool, replicas: usize,
+                  requests: usize, steps: usize, sup_cfg: SupervisorConfig)
+                  -> ChaosOutcome {
+    let plan = FaultPlan::parse(plan_spec).expect("fault plan");
+    let rebalancer = (replicas > 1).then(|| Rebalancer::new(STEAL_WINDOW));
+    let factories: Vec<RespawnFactory> = (0..replicas)
+        .map(|i| {
+            let plan = plan.clone();
+            let f: RespawnFactory = Arc::new(move || {
+                let mut s = spec();
+                s.faults = plan.for_replica(i);
+                Ok(Box::new(SimEngine::new(s)) as Box<dyn PoolEngine>)
+            });
+            f
+        })
+        .collect();
+    let handles: Vec<ReplicaHandle> = factories
+        .iter()
+        .enumerate()
+        .map(|(i, f)| {
+            let tier = match &rebalancer {
+                Some(rb) => ReplicaTier {
+                    steal_window: rb.admit_window(),
+                    ..ReplicaTier::default()
+                },
+                None => ReplicaTier::default(),
+            };
+            if supervised {
+                ReplicaHandle::spawn_supervised(i, 64, f, rebalancer.clone(),
+                                                tier, Tracer::disabled(),
+                                                None)
+                    .unwrap()
+            } else {
+                let f = f.clone();
+                ReplicaHandle::spawn_cached(i, 64, Box::new(move || f()),
+                                            rebalancer.clone(), tier,
+                                            Tracer::disabled(), None)
+                    .unwrap()
+            }
+        })
+        .collect();
+    let router = Arc::new(Router::with_rebalancer(
+        handles, RoutePolicy::Jsq, 64, rebalancer.clone()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let ticker = supervised.then(|| {
+        let mut sup = Supervisor::new(router.clone(), factories.clone(),
+                                      rebalancer, None, sup_cfg);
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                sup.tick(epoch_us());
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        })
+    });
+    let mut stranded = 0usize;
+    let mut sent = 0usize;
+    while sent < requests {
+        let wave = CHAOS_WINDOW.min(requests - sent);
+        let mut rxs = Vec::with_capacity(wave);
+        for _ in 0..wave {
+            let (tx, rx) = mpsc::channel();
+            let req =
+                Request::new(0, sent % 10, steps, 61_000 + sent as u64);
+            if router.dispatch(req, tx) {
+                rxs.push(rx);
+            }
+            sent += 1;
+        }
+        for rx in rxs {
+            match rx.recv_timeout(CHAOS_DEADLINE) {
+                // a response (even a failed one) or a dropped responder
+                // (forfeit) both settle the request; only silence
+                // strands
+                Ok(_) | Err(mpsc::RecvTimeoutError::Disconnected) => {}
+                Err(mpsc::RecvTimeoutError::Timeout) => stranded += 1,
+            }
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    if let Some(t) = ticker {
+        t.join().expect("supervisor ticker");
+    }
+    router.shutdown();
+    ChaosOutcome {
+        dispatched: router.total_dispatched(),
+        completed: router.total_completed(),
+        cache_hits: router.total_cache_hits(),
+        shed: router.shed_count(),
+        forfeited: router.total_forfeited(),
+        restarts: router.total_restarts(),
+        breaker_trips: router.total_breaker_trips(),
+        dead: router.dead_replicas() as u64,
+        stranded,
+    }
+}
+
+/// The chaos schedule sweep: every fault family — deterministic panic,
+/// probabilistic panics at increasing rates, stall, queue-full burst,
+/// snapshot corruption — through a supervised 2-replica stealing pool.
+/// Under EVERY schedule the admission ledger balances exactly and no
+/// request strands; deterministic panic schedules must also show
+/// actual respawns. Returns the JSON rows plus total restarts and
+/// breaker trips across the sweep.
+fn chaos_schedule_sweep() -> (Json, u64, u64) {
+    println!("chaos schedule sweep (supervised 2-replica steal pool, \
+              {CHAOS_REQUESTS} req × {CHAOS_STEPS} steps, window \
+              {CHAOS_WINDOW}):");
+    let cfg = || SupervisorConfig {
+        backoff_base_ms: 5,
+        breaker_probe_ms: 20,
+        breaker_close_after_ms: 40,
+        ..SupervisorConfig::default()
+    };
+    // one schedule per fault family plus a fault-rate sweep: with both
+    // replicas flapping at 30%/round the pool may burn its restart
+    // budgets and die — the ledger must balance even then
+    let schedules: &[(&str, &str, bool)] = &[
+        ("panic", "panic@5,seed=3", true),
+        ("panic-rate-5", "panic~5,r1:panic~5,seed=9", false),
+        ("panic-rate-15", "panic~15,r1:panic~15,seed=11", false),
+        ("panic-rate-30", "panic~30,r1:panic~30,seed=13", false),
+        ("stall", "stall@3=150,r1:stall@5=100", false),
+        ("burst", "burst@4=3,seed=5", false),
+        ("corrupt", "corrupt@2,panic@7,seed=7", true),
+    ];
+    let mut rows = Vec::new();
+    let (mut restarts, mut trips) = (0u64, 0u64);
+    for (name, plan, deterministic_panic) in schedules {
+        let o = run_chaos_pool(plan, true, 2, CHAOS_REQUESTS, CHAOS_STEPS,
+                               cfg());
+        assert!(o.conserved(),
+                "chaos '{name}': dispatched {} != completed {} + hits {} \
+                 + shed {} + forfeited {}",
+                o.dispatched, o.completed, o.cache_hits, o.shed,
+                o.forfeited);
+        assert_eq!(o.stranded, 0,
+                   "chaos '{name}': no responder may hang");
+        assert_eq!(o.dispatched, CHAOS_REQUESTS as u64);
+        if *deterministic_panic {
+            assert!(o.restarts >= 1,
+                    "chaos '{name}': a deterministic panic schedule must \
+                     respawn at least once");
+        }
+        restarts += o.restarts;
+        trips += o.breaker_trips;
+        println!("  {:<14} completed {:>2}  shed {:>2}  forfeited {:>2}  \
+                  restarts {}  trips {}  dead {}  ledger ok",
+                 name, o.completed, o.shed, o.forfeited, o.restarts,
+                 o.breaker_trips, o.dead);
+        rows.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("plan", Json::str(plan)),
+            ("dispatched", Json::num(o.dispatched as f64)),
+            ("completed", Json::num(o.completed as f64)),
+            ("shed", Json::num(o.shed as f64)),
+            ("forfeited", Json::num(o.forfeited as f64)),
+            ("restarts", Json::num(o.restarts as f64)),
+            ("breaker_trips", Json::num(o.breaker_trips as f64)),
+            ("dead", Json::num(o.dead as f64)),
+            ("stranded", Json::num(o.stranded as f64)),
+        ]));
+    }
+    (Json::arr(rows), restarts, trips)
+}
+
+/// Supervision A/B: the same deterministic panic schedule against the
+/// same single-replica pool, with and without a supervisor. The
+/// unsupervised pool dies at the panic — queued work forfeits, later
+/// waves shed — while the supervised pool respawns into the same slot
+/// (same queue identity, residents resumed from snapshots) and
+/// finishes the whole workload. Strictly more completions is the
+/// entire point of carrying a supervisor.
+fn supervision_ab() -> Json {
+    const AB_REQUESTS: usize = 24;
+    const AB_STEPS: usize = 4;
+    const AB_PLAN: &str = "panic@6,seed=1";
+    println!("supervision A/B (1 replica, {AB_PLAN}, {AB_REQUESTS} req × \
+              {AB_STEPS} steps):");
+    // deep restart budget and breaker effectively disabled: with ONE
+    // replica any open breaker or retired slot converts completions
+    // into sheds, and this scenario isolates respawn — the sweep above
+    // exercises the breaker with a sibling to absorb traffic
+    let cfg = SupervisorConfig {
+        restart_budget: 16,
+        backoff_base_ms: 5,
+        breaker_open_after: 1_000,
+        ..SupervisorConfig::default()
+    };
+    let unsup = run_chaos_pool(AB_PLAN, false, 1, AB_REQUESTS, AB_STEPS,
+                               SupervisorConfig::default());
+    let sup = run_chaos_pool(AB_PLAN, true, 1, AB_REQUESTS, AB_STEPS, cfg);
+    for (name, o) in [("unsupervised", &unsup), ("supervised", &sup)] {
+        assert!(o.conserved(), "A/B {name}: ledger must balance");
+        assert_eq!(o.stranded, 0, "A/B {name}: no responder may hang");
+        println!("  {:<13} completed {:>2}/{AB_REQUESTS}  shed {:>2}  \
+                  forfeited {:>2}  restarts {}",
+                 name, o.completed, o.shed, o.forfeited, o.restarts);
+    }
+    assert!(sup.restarts >= 1, "the panic schedule must actually respawn");
+    assert_eq!(sup.completed, AB_REQUESTS as u64,
+               "a supervised pool must finish the whole workload through \
+                repeated panics");
+    assert!(sup.completed > unsup.completed,
+            "supervision must strictly out-complete an unsupervised pool \
+             under the identical panic schedule ({} vs {})",
+            sup.completed, unsup.completed);
+    Json::obj(vec![
+        ("plan", Json::str(AB_PLAN)),
+        ("requests", Json::num(AB_REQUESTS as f64)),
+        ("supervised_completed", Json::num(sup.completed as f64)),
+        ("unsupervised_completed", Json::num(unsup.completed as f64)),
+        ("supervised_restarts", Json::num(sup.restarts as f64)),
+    ])
+}
+
+// ----------------------------------------------------------- brownout
+
+/// Requests per brownout stage point.
+const BROWNOUT_REQUESTS: usize = 96;
+/// Steps per brownout request: small, so the step-0 cold work that
+/// stage 1's warm starts reclaim is a meaningful share of the total.
+const BROWNOUT_STEPS: usize = 3;
+/// Stage-3 best-effort step cap (must stay ≥ 2: a 1-step trajectory
+/// retires at its first boundary and can never donate, which would
+/// leave the capped family permanently cold).
+const BROWNOUT_STEP_CAP: usize = 2;
+/// Stage-2 Γ boost in percentage points.
+const BROWNOUT_GAMMA_BOOST: u32 = 15;
+/// Admission bound for the sweep: small enough that overload sheds
+/// instead of queueing unboundedly.
+const BROWNOUT_QUEUE_CAP: usize = 6;
+/// Work per executed module — heavier than the chaos runs so the
+/// arrival pacer's sleep/spin granularity sits well under the service
+/// time.
+const BROWNOUT_WORK: u64 = 200_000;
+/// Offered load as a multiple of the measured stage-0 service rate.
+/// The skip gate is a pure (step, slot) hash, so per-request executed
+/// modules are exact constants per stage — 18, 12, 6, 5 at Γ=50% +15
+/// boost — and 4.5× keeps every stage's shed count strictly interior
+/// (neither saturated at the queue bound nor clipped at zero).
+const BROWNOUT_OVERLOAD: f64 = 4.5;
+
+fn brownout_spec() -> SimSpec {
+    SimSpec { lazy_pct: LAZY_PCT, work_per_module: BROWNOUT_WORK,
+              ..SimSpec::default() }
+}
+
+fn brownout_cfg() -> BrownoutConfig {
+    BrownoutConfig {
+        horizon_widen: 7,
+        gamma_boost: BROWNOUT_GAMMA_BOOST,
+        besteffort_step_cap: BROWNOUT_STEP_CAP,
+        ..BrownoutConfig::default()
+    }
+}
+
+/// Stage-0 service time per request: a small closed-loop probe on the
+/// sweep's exact replica shape, the base the overload factor divides.
+fn calibrate_brownout_pace() -> Duration {
+    let probe = 8usize;
+    let h = ReplicaHandle::spawn_cached(
+        0, probe, SimEngine::factory(brownout_spec()), None,
+        ReplicaTier::new(Slo::Besteffort, 4), Tracer::disabled(), None)
+        .unwrap();
+    let router = Router::new(vec![h], RoutePolicy::Jsq, probe);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..probe {
+        let (tx, rx) = mpsc::channel();
+        assert!(router.dispatch(
+            Request::new(0, i % 2, BROWNOUT_STEPS, 30_000 + i as u64), tx));
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        rx.recv().expect("probe response");
+    }
+    let per_req = t0.elapsed() / probe as u32;
+    router.shutdown();
+    per_req
+}
+
+/// One open-loop pass at a forced brownout stage. Seeds are unique so
+/// the exact tier can never hit — everything below stage 1 is honest
+/// compute — and arrivals are paced by the wall clock (the same
+/// sleep/spin idiom as [`run_open_loop`]), never by completions.
+/// Returns (shed, completed).
+fn run_brownout_stage(stage: usize, pace: Duration) -> (u64, u64) {
+    let cache = Arc::new(PoolCache::new(CacheConfig::new(
+        256, 0, 0xB10C + stage as u64)));
+    let h = ReplicaHandle::spawn_cached(
+        0, BROWNOUT_QUEUE_CAP, SimEngine::factory(brownout_spec()), None,
+        ReplicaTier::new(Slo::Besteffort, 4), Tracer::disabled(),
+        Some(cache.clone()))
+        .unwrap();
+    let b = Arc::new(Brownout::new(brownout_cfg(), Some(cache.clone())));
+    let router = Router::with_cache(vec![h], RoutePolicy::Jsq,
+                                    BROWNOUT_QUEUE_CAP, None, Some(cache))
+        .with_brownout_controller(b.clone());
+    b.force_stage(stage, &router);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..BROWNOUT_REQUESTS {
+        let target = pace.as_secs_f64() * i as f64;
+        loop {
+            let remain = target - t0.elapsed().as_secs_f64();
+            if remain <= 0.0 {
+                break;
+            }
+            if remain > 1e-3 {
+                std::thread::sleep(Duration::from_secs_f64(remain - 5e-4));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let req =
+            Request::new(0, i % 2, BROWNOUT_STEPS, 100_000 + i as u64);
+        if router.dispatch(req, tx) {
+            rxs.push(rx);
+        }
+    }
+    let mut stranded = 0usize;
+    for rx in rxs {
+        if rx.recv_timeout(CHAOS_DEADLINE).is_err() {
+            stranded += 1;
+        }
+    }
+    assert_eq!(stranded, 0,
+               "brownout stage {stage}: every admitted request resolves");
+    let (dispatched, completed, hits, shed, forfeited) = (
+        router.total_dispatched(), router.total_completed(),
+        router.total_cache_hits(), router.shed_count(),
+        router.total_forfeited());
+    assert_eq!(dispatched, completed + hits + shed + forfeited,
+               "brownout stage {stage}: ledger must balance");
+    assert_eq!(dispatched, BROWNOUT_REQUESTS as u64);
+    assert_eq!(forfeited, 0, "no faults here — nothing may forfeit");
+    router.shutdown();
+    (shed, completed)
+}
+
+/// The brownout ladder under sustained overload: force each stage and
+/// measure the shed rate at identical offered load. Every dial buys
+/// real capacity — warm starts reclaim step-0 cold work, the Γ boost
+/// skips more rows, the step cap shortens best-effort schedules — so
+/// the shed rate must fall STRICTLY at every stage. Returns the
+/// `brownout` rows of the chaos section.
+fn brownout_shed_sweep() -> Json {
+    let per_req = calibrate_brownout_pace();
+    let pace = per_req.div_f64(BROWNOUT_OVERLOAD);
+    println!("brownout shed sweep ({BROWNOUT_REQUESTS} req × \
+              {BROWNOUT_STEPS} steps, queue cap {BROWNOUT_QUEUE_CAP}, \
+              offered {BROWNOUT_OVERLOAD:.1}× stage-0 capacity, service \
+              ≈ {:.2}ms/req):",
+             1e3 * per_req.as_secs_f64());
+    let mut rows = Vec::new();
+    let mut last_shed = 0u64;
+    for stage in 0..=3usize {
+        let (shed, completed) = run_brownout_stage(stage, pace);
+        let rate = shed as f64 / BROWNOUT_REQUESTS as f64;
+        println!("  stage {stage}: shed {:>2}/{BROWNOUT_REQUESTS} \
+                  ({:>4.1}%)  completed {:>2}",
+                 shed, 100.0 * rate, completed);
+        if stage == 0 {
+            assert!(shed > 0,
+                    "the sweep must actually overload the undegraded \
+                     pool, or the ladder has nothing to relieve");
+        } else {
+            assert!(shed < last_shed,
+                    "brownout stage {stage} must shed strictly less than \
+                     stage {} ({shed} vs {last_shed}) — every degradation \
+                     dial must buy real capacity",
+                    stage - 1);
+        }
+        last_shed = shed;
+        rows.push(Json::obj(vec![
+            ("stage", Json::num(stage as f64)),
+            ("shed", Json::num(shed as f64)),
+            ("shed_rate", Json::num(rate)),
+            ("completed", Json::num(completed as f64)),
+        ]));
+    }
+    Json::arr(rows)
+}
+
 // ---------------------------------------------------------- open loop
 
 /// Requests per open-loop point (per route × offered-load cell).
@@ -752,6 +1197,22 @@ fn main() {
     let cache = cache_scenario();
 
     println!();
+    let (chaos_rows, chaos_restarts, chaos_trips) = chaos_schedule_sweep();
+
+    println!();
+    let supervision = supervision_ab();
+
+    println!();
+    let brownout = brownout_shed_sweep();
+    let chaos = Json::obj(vec![
+        ("schedules", chaos_rows),
+        ("restarts", Json::num(chaos_restarts as f64)),
+        ("breaker_trips", Json::num(chaos_trips as f64)),
+        ("supervision", supervision),
+        ("brownout", brownout),
+    ]);
+
+    println!();
     let open_loop_points = open_loop_sweep();
 
     println!();
@@ -788,6 +1249,7 @@ fn main() {
         ("open_loop", open_loop_points),
         ("migration", migration),
         ("cache", cache),
+        ("chaos", chaos),
         ("trace_overhead", Json::obj(vec![
             ("replicas", Json::num(widest as f64)),
             ("ring_events", Json::num(TRACE_RING as f64)),

@@ -45,8 +45,10 @@ use crate::config::{LazyScope, RoutePolicy, ServeConfig, SkipPolicy, Slo};
 use crate::coordinator::engine::{Engine, EngineOptions};
 use crate::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
 use crate::coordinator::pool::sim::{SimEngine, SimSpec};
-use crate::coordinator::pool::{CacheConfig, EngineFactory, PoolCache,
-                               PoolEngine, Rebalancer, Router};
+use crate::coordinator::pool::{Brownout, BrownoutConfig, CacheConfig,
+                               FaultEngine, FaultPlan, PoolCache,
+                               PoolEngine, Rebalancer, RespawnFactory,
+                               Router, Supervisor, SupervisorConfig};
 use crate::coordinator::server::serve_pool_shared;
 use crate::util::argparse::{Args, OptSpec};
 use anyhow::{bail, Context, Result};
@@ -77,6 +79,9 @@ pub fn specs() -> Vec<OptSpec> {
         OptSpec { name: "trace-ring", help: "per-replica trace ring capacity (events)", default: Some("4096"), is_flag: false },
         OptSpec { name: "self-drive", help: "generate N requests from an internal client (smoke runs)", default: Some("0"), is_flag: false },
         OptSpec { name: "drain-after", help: "after N completions, drain replica 0 by migration until one trajectory moves (0 = never; needs --steal on and >= 2 replicas)", default: Some("0"), is_flag: false },
+        OptSpec { name: "fault-plan", help: "deterministic fault schedule, e.g. panic@8,r1:stall@4=200,seed=7 (see docs/SERVING.md)", default: None, is_flag: false },
+        OptSpec { name: "supervise", help: "replica supervision (respawn + breaker): on|off", default: Some("off"), is_flag: false },
+        OptSpec { name: "brownout", help: "pool-wide overload degradation ladder: on|off", default: Some("off"), is_flag: false },
         OptSpec { name: "sim-work", help: "synthetic spin per executed module", default: Some("4000"), is_flag: false },
         OptSpec { name: "train-steps", help: "gate training steps if needed", default: Some("200"), is_flag: false },
         OptSpec { name: "train-lr", help: "gate training lr", default: Some("5e-3"), is_flag: false },
@@ -151,8 +156,11 @@ pub fn parse_replica_spec(spec: &str) -> Result<Vec<ReplicaTier>> {
 /// shares a process with, sends `n` single-lane requests cycling over
 /// the SLO classes, waits for each response, then exercises the `STATS`
 /// and `TRACE` verbs once. Failures only log — the serve loop's own
-/// `max_requests` bound decides when the process exits.
-fn self_drive_client(addr: String, n: usize)
+/// `max_requests` bound decides when the process exits. `sock_stalls`
+/// carries a fault plan's client-side `sock@I=MS` items: the client
+/// sleeps MS ms before reading response I (a deterministic slow
+/// reader, exercising the server's bounded response write).
+fn self_drive_client(addr: String, n: usize, sock_stalls: Vec<(u64, u64)>)
                      -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         use std::io::{BufRead, BufReader, Write};
@@ -183,6 +191,14 @@ fn self_drive_client(addr: String, n: usize)
             if s.write_all(req.as_bytes()).is_err() {
                 return;
             }
+            if let Some((_, ms)) = sock_stalls
+                .iter()
+                .find(|(idx, _)| *idx == i as u64)
+            {
+                log::info!("self-drive: stalling {ms}ms before reading \
+                            response {i}");
+                std::thread::sleep(std::time::Duration::from_millis(*ms));
+            }
             line.clear();
             if reader.read_line(&mut line).is_err() {
                 return;
@@ -210,13 +226,18 @@ fn fnv64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Parse the `--steal on|off` switch.
-pub fn parse_steal(v: &str) -> Result<bool> {
+/// Parse an `on|off` switch value for flag `--{name}`.
+pub fn parse_switch(name: &str, v: &str) -> Result<bool> {
     match v.trim() {
         "on" => Ok(true),
         "off" => Ok(false),
-        other => bail!("--steal must be 'on' or 'off', got '{other}'"),
+        other => bail!("--{name} must be 'on' or 'off', got '{other}'"),
     }
+}
+
+/// Parse the `--steal on|off` switch.
+pub fn parse_steal(v: &str) -> Result<bool> {
+    parse_switch("steal", v)
 }
 
 /// Parse `--replica-policy 0=mean,2=never` into an index → policy map.
@@ -242,11 +263,15 @@ pub fn parse_replica_policies(spec: &str, replicas: usize)
     Ok(out)
 }
 
-/// Synthetic-engine factories: one per replica, policy label per override.
+/// Synthetic-engine factories: one per replica, policy label per
+/// override. Reusable ([`RespawnFactory`]) so a supervisor can rebuild
+/// a crashed replica's engine in place; a fault plan compiles into each
+/// replica's [`SimSpec`] natively (zero overhead when absent).
 fn synthetic_factories(replicas: usize, lazy_pct: usize, work: u64,
                        coupled: bool,
-                       overrides: &BTreeMap<usize, SkipPolicy>)
-                       -> Vec<EngineFactory> {
+                       overrides: &BTreeMap<usize, SkipPolicy>,
+                       plan: Option<&FaultPlan>)
+                       -> Vec<RespawnFactory> {
     (0..replicas)
         .map(|i| {
             // run() rejects every override except "never" under
@@ -257,7 +282,7 @@ fn synthetic_factories(replicas: usize, lazy_pct: usize, work: u64,
             } else {
                 (lazy_pct as u32, "sim".to_string())
             };
-            SimEngine::factory(SimSpec {
+            let spec = SimSpec {
                 lazy_pct: lazy,
                 work_per_module: work,
                 // --coupled-gate models the legacy all-or-nothing
@@ -265,7 +290,20 @@ fn synthetic_factories(replicas: usize, lazy_pct: usize, work: u64,
                 coupled,
                 policy,
                 ..SimSpec::default()
-            })
+            };
+            let plan = plan.cloned();
+            let f: RespawnFactory = std::sync::Arc::new(move || {
+                let mut spec = spec.clone();
+                if let Some(p) = &plan {
+                    // compiled fresh per incarnation: a respawned
+                    // replica re-arms its round-indexed schedule, so
+                    // `panic@k` under supervision produces
+                    // reproducible flapping, not a one-shot crash
+                    spec.faults = p.for_replica(i);
+                }
+                Ok(Box::new(SimEngine::new(spec)) as Box<dyn PoolEngine>)
+            });
+            f
         })
         .collect()
 }
@@ -281,8 +319,9 @@ fn synthetic_factories(replicas: usize, lazy_pct: usize, work: u64,
 fn engine_factories(ctx: &EvalContext, serve_cfg: &ServeConfig,
                     gamma: Option<Vec<f32>>, tiers: &[ReplicaTier],
                     tiered: bool,
-                    overrides: &BTreeMap<usize, SkipPolicy>)
-                    -> Vec<EngineFactory> {
+                    overrides: &BTreeMap<usize, SkipPolicy>,
+                    plan: Option<&FaultPlan>)
+                    -> Vec<RespawnFactory> {
     // share one copy of the flat weights across all factories — N
     // replicas must not mean N+1 resident copies of θ
     let theta = std::sync::Arc::new(ctx.theta.clone());
@@ -300,20 +339,30 @@ fn engine_factories(ctx: &EvalContext, serve_cfg: &ServeConfig,
             if let Some(p) = overrides.get(&i) {
                 serve.policy = *p;
             }
-            let factory: EngineFactory = Box::new(move || {
+            let plan = plan.cloned();
+            // reusable (Fn, not FnOnce): a supervised respawn rebuilds
+            // Runtime + ModelRunner + Engine from the same captures
+            let factory: RespawnFactory = std::sync::Arc::new(move || {
                 let rt = std::rc::Rc::new(
                     crate::runtime::engine_rt::Runtime::cpu()?);
                 let runner = match (&gamma, serve.policy) {
                     (Some(g), p) if p != SkipPolicy::Never => {
                         crate::model::runner::ModelRunner::new(
-                            rt, cfg, &theta, g)?
+                            rt, cfg.clone(), &theta, g)?
                     }
                     _ => crate::model::runner::ModelRunner::with_disabled_gates(
-                        rt, cfg, &theta)?,
+                        rt, cfg.clone(), &theta)?,
                 };
                 let engine = Engine::from_parts(
-                    runner, serve, EngineOptions::default());
-                Ok(Box::new(engine) as Box<dyn PoolEngine>)
+                    runner, serve.clone(), EngineOptions::default());
+                // the real engine has no native schedule hooks — wrap
+                // it (fresh schedule per incarnation, like the sim)
+                match &plan {
+                    Some(p) => Ok(Box::new(FaultEngine::new(
+                        Box::new(engine), p.for_replica(i)))
+                        as Box<dyn PoolEngine>),
+                    None => Ok(Box::new(engine) as Box<dyn PoolEngine>),
+                }
             });
             factory
         })
@@ -359,6 +408,21 @@ pub fn run(a: Args) -> Result<()> {
         0 if self_drive > 0 => self_drive,
         n => n,
     };
+    let supervise = parse_switch("supervise", &a.get_str("supervise", "off"))?;
+    let brownout_on = parse_switch("brownout", &a.get_str("brownout", "off"))?;
+    let fault_plan = match a.get("fault-plan") {
+        Some(spec) => {
+            let p = FaultPlan::parse(&spec)?;
+            if p.is_empty() { None } else { Some(p) }
+        }
+        None => None,
+    };
+    if let Some(p) = &fault_plan {
+        if !p.sock_stalls().is_empty() && self_drive == 0 {
+            bail!("--fault-plan sock@ items are client-side — they need \
+                   --self-drive N to have a client to stall");
+        }
+    }
 
     // model_desc: everything that determines output identity for this
     // process, folded into every RequestKey — results cached under one
@@ -377,7 +441,8 @@ pub fn run(a: Args) -> Result<()> {
         let desc = format!("sim:lazy={lazy_pct}:work={work}:coupled={}",
                            a.flag("coupled-gate"));
         (synthetic_factories(replicas, lazy_pct, work,
-                             a.flag("coupled-gate"), &overrides),
+                             a.flag("coupled-gate"), &overrides,
+                             fault_plan.as_ref()),
          a.get_usize("queue-cap", 256)?, desc)
     } else {
         let ctx = EvalContext::open(&a, 32)?;
@@ -431,7 +496,7 @@ pub fn run(a: Args) -> Result<()> {
         let desc = format!("{}:policy={}:lazy={lazy_pct}:steps={steps}",
                            ctx.cfg.model.name, serve_cfg.policy.name());
         (engine_factories(&ctx, &serve_cfg, gamma, &tiers, tiered,
-                          &overrides), qc, desc)
+                          &overrides, fault_plan.as_ref()), qc, desc)
     };
 
     let result_cache = a.get_usize("result-cache", 0)?;
@@ -473,7 +538,7 @@ pub fn run(a: Args) -> Result<()> {
     // visible to this thread's reader)
     let mut tracers: Vec<crate::obs::Tracer> = Vec::with_capacity(replicas);
     let handles: Vec<ReplicaHandle> = factories
-        .into_iter()
+        .iter()
         .zip(tiers.iter())
         .enumerate()
         .map(|(i, (f, tier))| {
@@ -483,12 +548,30 @@ pub fn run(a: Args) -> Result<()> {
                 crate::obs::Tracer::disabled()
             };
             tracers.push(tracer.clone());
-            ReplicaHandle::spawn_cached(i, queue_cap, f, rebalancer.clone(),
-                                        tier.clone(), tracer, cache.clone())
+            if supervise {
+                ReplicaHandle::spawn_supervised(
+                    i, queue_cap, f, rebalancer.clone(), tier.clone(),
+                    tracer, cache.clone())
+            } else {
+                let f = f.clone();
+                ReplicaHandle::spawn_cached(
+                    i, queue_cap, Box::new(move || f()), rebalancer.clone(),
+                    tier.clone(), tracer, cache.clone())
+            }
         })
         .collect::<Result<_>>()?;
-    let router = Router::with_cache(handles, route, queue_cap, rebalancer,
-                                    cache.clone());
+    let router = Router::with_cache(handles, route, queue_cap,
+                                    rebalancer.clone(), cache.clone());
+    let brownout_ctl = if brownout_on {
+        Some(std::sync::Arc::new(Brownout::new(BrownoutConfig::default(),
+                                               cache.clone())))
+    } else {
+        None
+    };
+    let router = match &brownout_ctl {
+        Some(b) => router.with_brownout_controller(b.clone()),
+        None => router,
+    };
 
     let tier_summary: Vec<String> = tiers
         .iter()
@@ -502,26 +585,41 @@ pub fn run(a: Args) -> Result<()> {
              route.name(),
              if router.stealing() { "on" } else { "off" });
     let driver = if self_drive > 0 {
-        Some(self_drive_client(addr.clone(), self_drive))
+        let stalls = fault_plan
+            .as_ref()
+            .map(|p| p.sock_stalls().to_vec())
+            .unwrap_or_default();
+        Some(self_drive_client(addr.clone(), self_drive, stalls))
     } else {
         None
     };
     let router = std::sync::Arc::new(router);
-    let report =
-        serve_pool_shared(router.clone(), &addr, max_requests, drain_after)?;
+    let supervisor = if supervise {
+        Some(Supervisor::new(router.clone(), factories, rebalancer,
+                             cache.clone(), SupervisorConfig::default()))
+    } else {
+        None
+    };
+    let report = serve_pool_shared(router.clone(), &addr, max_requests,
+                                   drain_after, supervisor,
+                                   brownout_ctl.clone())?;
     if let Some(d) = driver {
         let _ = d.join();
     }
     println!("{}", report.render());
     // machine-greppable migration + ledger lines for the smoke gates:
     // every dispatched request must be accounted for — completed, shed
-    // at admission, or forfeited to a panic — even across migrations
+    // at admission, or forfeited to a panic — even across migrations.
+    // All five terms come from the router's monotone gauges, NOT the
+    // report: a panicked incarnation's ServeStats die with its thread,
+    // so under chaos the report undercounts while the gauges (bumped
+    // at completion time, before any later crash) stay exact.
     let (dispatched, completed, shed, forfeited, cache_hits) = (
         router.total_dispatched(),
-        report.completed() as u64,
-        report.shed,
+        router.total_completed(),
+        router.shed_count(),
         router.total_forfeited(),
-        report.cache_hits,
+        router.total_cache_hits(),
     );
     let balanced = dispatched == completed + cache_hits + shed + forfeited;
     println!("migration: out={} in={} resumed={} steps_saved={}",
@@ -534,6 +632,16 @@ pub fn run(a: Args) -> Result<()> {
     println!("conservation: dispatched={dispatched} completed={completed} \
               cache_hits={cache_hits} shed={shed} forfeited={forfeited} \
               ok={balanced}");
+    if supervise {
+        println!("supervisor: restarts={} breaker_trips={} dead={} \
+                  write_timeouts={}",
+                 router.total_restarts(), router.total_breaker_trips(),
+                 router.dead_replicas(), router.total_write_timeouts());
+    }
+    if let Some(b) = &brownout_ctl {
+        println!("brownout: stage={} peak={} transitions={}",
+                 b.stage(), b.peak_stage(), b.transitions());
+    }
     if !balanced {
         bail!("conservation violated: {dispatched} dispatched but \
                {completed} completed + {cache_hits} cache hits + {shed} \
@@ -555,7 +663,10 @@ pub fn run(a: Args) -> Result<()> {
         bail!("all {} replica(s) failed — see report above",
               report.replicas.len());
     }
-    if report.failed() > 0 && report.completed() == 0 {
+    // gauge-based, not report-based: under supervised chaos a crashed
+    // incarnation's completions survive in the gauges even though its
+    // report died with it — the pool did serve, so don't fail the run
+    if report.failed() > 0 && completed == 0 {
         bail!("{} replica(s) failed and no requests were served",
               report.failed());
     }

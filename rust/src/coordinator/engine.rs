@@ -68,6 +68,11 @@ pub struct Engine {
     /// [`crate::coordinator::pool::PoolEngine::install_tracer`], which
     /// also hands the runner a clone for per-module spans).
     tracer: Tracer,
+    /// The configured gate threshold, kept so brownout gamma boosts are
+    /// reversible: modules skip when their gate value *exceeds*
+    /// `serve.threshold`, so a boost lowers the effective threshold and
+    /// boost 0 must restore this exact value.
+    base_threshold: f32,
 }
 
 /// The engine's persistent batch: padded model inputs plus the
@@ -342,6 +347,7 @@ impl Engine {
         // its provisioned footprint
         runner.restrict_partial_buckets(&round_buckets);
         let pool = runner.pool().clone();
+        let base_threshold = serve.threshold;
         Ok(Engine {
             runner,
             sampler: DdimSampler::new(schedule),
@@ -357,6 +363,7 @@ impl Engine {
             batch: None,
             pool,
             tracer: Tracer::disabled(),
+            base_threshold,
         })
     }
 
@@ -371,6 +378,7 @@ impl Engine {
         // keep the partial path inside this engine's round-bucket set
         runner.restrict_partial_buckets(&round_buckets);
         let pool = runner.pool().clone();
+        let base_threshold = serve.threshold;
         Engine {
             runner,
             sampler: DdimSampler::new(schedule),
@@ -386,6 +394,7 @@ impl Engine {
             batch: None,
             pool,
             tracer: Tracer::disabled(),
+            base_threshold,
         }
     }
 
@@ -984,6 +993,16 @@ impl crate::coordinator::pool::PoolEngine for Engine {
     fn submit_warm(&mut self, req: Request, donor: &TrajectorySnapshot)
                    -> (u64, u64) {
         Engine::submit_warm(self, req, donor)
+    }
+
+    fn set_gamma_boost(&mut self, boost: u32) {
+        // Modules skip when their gate value exceeds `serve.threshold`
+        // (see `model::runner::decide`), so raising target laziness
+        // means lowering the bar. Scale from the configured base — not
+        // the current value — so repeated boosts don't compound and
+        // boost 0 restores the tier's configured gate exactly.
+        let scale = 1.0 - (boost.min(95) as f32) / 100.0;
+        self.serve.threshold = self.base_threshold * scale;
     }
 }
 

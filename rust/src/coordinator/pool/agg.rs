@@ -202,6 +202,16 @@ impl PoolReport {
             .sum()
     }
 
+    /// Worker respawns pool-wide (supervised slots only).
+    pub fn total_restarts(&self) -> u64 {
+        self.replicas.iter().map(|r| r.restarts).sum()
+    }
+
+    /// Circuit-breaker trips pool-wide.
+    pub fn total_breaker_trips(&self) -> u64 {
+        self.replicas.iter().map(|r| r.breaker_trips).sum()
+    }
+
     /// Completions per SLO class (`Slo::index()` order): the sum of the
     /// per-replica counters, like every other pool-wide figure.
     pub fn completed_by_slo(&self) -> [u64; Slo::COUNT] {
@@ -276,6 +286,16 @@ impl PoolReport {
                 self.total_rows_warmed(),
             ));
         }
+        // only when the supervisor actually intervened: clean runs keep
+        // the exact report shape older tooling parses
+        if self.total_restarts() > 0 || self.total_breaker_trips() > 0 {
+            out.push_str(&format!(
+                "  supervisor: {} restarts, {} breaker trips, {} dead\n",
+                self.total_restarts(),
+                self.total_breaker_trips(),
+                self.failed(),
+            ));
+        }
         let done = self.completed_by_slo();
         out.push_str("  tiers (completed/shed):");
         for slo in Slo::ALL {
@@ -327,6 +347,8 @@ mod tests {
             migrated_out: 0,
             migrated_in: 0,
             warm_hits: 0,
+            restarts: 0,
+            breaker_trips: 0,
             arena: None,
             error: None,
         }
@@ -529,6 +551,30 @@ mod tests {
         assert!(pr.render().contains(
             "migration: 2 out / 2 in, 3 resumed, 9 steps saved"),
             "{}", pr.render());
+    }
+
+    #[test]
+    fn supervisor_line_renders_only_after_interventions() {
+        let mut a = report(0, 1, 0, 4, 4);
+        a.restarts = 2;
+        a.breaker_trips = 1;
+        let mut b = report(1, 1, 0, 4, 0);
+        b.error = Some("restart budget exhausted".to_string());
+        b.restarts = 3;
+        let pr = PoolReport { replicas: vec![a, b], shed: 0,
+                              shed_by_slo: [0; Slo::COUNT],
+                              cache_hits: 0 };
+        assert_eq!(pr.total_restarts(), 5);
+        assert_eq!(pr.total_breaker_trips(), 1);
+        assert!(pr.render().contains(
+            "supervisor: 5 restarts, 1 breaker trips, 1 dead"),
+            "{}", pr.render());
+        // an intervention-free run keeps the exact legacy report shape
+        let quiet = PoolReport { replicas: vec![report(0, 1, 0, 4, 4)],
+                                 shed: 0, shed_by_slo: [0; Slo::COUNT],
+                                 cache_hits: 0 };
+        assert!(!quiet.render().contains("supervisor:"),
+                "{}", quiet.render());
     }
 
     #[test]

@@ -1,0 +1,377 @@
+//! Laziness-brownout: the pool-wide overload controller.
+//!
+//! Under sustained backlog or shed pressure the pool does not have to
+//! choose between "full fidelity" and "drop the request" — LazyDiT's
+//! own fidelity/compute dial gives it a middle path. The [`Brownout`]
+//! controller walks a ladder of *declared* degradation stages, each
+//! trading a little output quality for a lot of admission capacity:
+//!
+//! | stage | dial                                   | effect |
+//! |-------|----------------------------------------|--------|
+//! | 0     | none                                   | configured behavior |
+//! | 1     | widen the warm-start horizon           | deeper donors admitted → more early steps skipped |
+//! | 2     | raise target Γ (`set_gamma_boost`)     | engines skip more aggressively |
+//! | 3     | cap best-effort request steps          | best-effort work shrinks at admission |
+//!
+//! Stages are cumulative (stage 3 keeps the stage-1/2 dials engaged)
+//! and reversible: the controller steps **up one stage at a time**
+//! after `engage_ticks` consecutive pressured ticks, and back **down
+//! one stage** after `recover_ticks` consecutive calm ticks, with a
+//! hold band between the two watermarks so it never flaps at the
+//! boundary. Pressure is measured each tick as pool backlog relative
+//! to capacity (`total_queued / (queue_cap × live replicas)` against
+//! `hi_pct`/`lo_pct`) OR any shed since the previous tick — a pool
+//! that is actively turning clients away is pressured regardless of
+//! how its queue happens to look at sampling time.
+//!
+//! Degradation is *honest*: every transition records an
+//! [`EventKind::Brownout`] trace event (arg = packed `(from, to)`),
+//! the current stage is surfaced in `STATS` and echoed on every wire
+//! response while non-zero, and the stage-3 step cap is applied at
+//! dispatch **before** the result-cache lookup, so a degraded request
+//! is keyed — and cached — as the degraded computation it actually
+//! ran. Nothing silently pretends full fidelity.
+//!
+//! The controller is interior-atomic and shared (`Arc`): the serve
+//! loop ticks it, the router consults [`Brownout::cap_steps`] inline
+//! at dispatch, and `STATS` reads the gauges — no locks anywhere.
+
+use crate::config::Slo;
+use crate::coordinator::pool::cache::PoolCache;
+use crate::coordinator::pool::router::Router;
+use crate::obs::ring::pack_pair;
+use crate::obs::EventKind;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// The stage at which the warm-start horizon widens.
+pub const STAGE_HORIZON: usize = 1;
+/// The stage at which the Γ boost engages.
+pub const STAGE_GAMMA: usize = 2;
+/// The stage at which best-effort steps are capped at admission.
+pub const STAGE_STEP_CAP: usize = 3;
+
+/// Brownout knobs (`lazydit serve --brownout on` uses the defaults;
+/// docs/SERVING.md walks the ladder).
+#[derive(Debug, Clone)]
+pub struct BrownoutConfig {
+    /// Engage watermark: a tick is *pressured* when pool backlog is at
+    /// least this percent of total queue capacity (or anything shed
+    /// since the last tick).
+    pub hi_pct: usize,
+    /// Recover watermark: a tick is *calm* when backlog is at most
+    /// this percent and nothing shed. Between the watermarks the
+    /// controller holds its stage.
+    pub lo_pct: usize,
+    /// Consecutive pressured ticks before stepping up one stage.
+    pub engage_ticks: u32,
+    /// Consecutive calm ticks before stepping down one stage.
+    pub recover_ticks: u32,
+    /// Stage-1 warm-horizon override (engaged when it exceeds the
+    /// configured horizon; restored on recovery).
+    pub horizon_widen: usize,
+    /// Stage-2 Γ boost, in laziness percentage points.
+    pub gamma_boost: u32,
+    /// Stage-3 cap on best-effort request steps (≥ 1).
+    pub besteffort_step_cap: usize,
+    /// Highest stage the controller may reach (≤ 3).
+    pub max_stage: usize,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> Self {
+        BrownoutConfig {
+            hi_pct: 80,
+            lo_pct: 30,
+            engage_ticks: 3,
+            recover_ticks: 10,
+            horizon_widen: 4,
+            gamma_boost: 5,
+            besteffort_step_cap: 8,
+            max_stage: STAGE_STEP_CAP,
+        }
+    }
+}
+
+/// The overload controller. Construct once, share via `Arc`, register
+/// on the router with
+/// [`Router::with_brownout_controller`], and tick from the serve loop.
+pub struct Brownout {
+    cfg: BrownoutConfig,
+    cache: Option<Arc<PoolCache>>,
+    /// The configured horizon stage 0 restores (captured at build so
+    /// recovery never depends on reading back an overridden value).
+    base_horizon: usize,
+    stage: AtomicUsize,
+    pressured_ticks: AtomicUsize,
+    calm_ticks: AtomicUsize,
+    transitions: AtomicU64,
+    peak_stage: AtomicUsize,
+    last_shed: AtomicU64,
+}
+
+impl Brownout {
+    /// A controller at stage 0. Pass the pool's cache when one exists
+    /// so stage 1 can widen its warm horizon; `None` leaves stage 1 a
+    /// declared-but-inert step on the ladder.
+    pub fn new(cfg: BrownoutConfig, cache: Option<Arc<PoolCache>>)
+               -> Brownout {
+        let base_horizon = cache
+            .as_ref()
+            .map_or(0, |c| c.config().warm_horizon);
+        Brownout {
+            cfg,
+            cache,
+            base_horizon,
+            stage: AtomicUsize::new(0),
+            pressured_ticks: AtomicUsize::new(0),
+            calm_ticks: AtomicUsize::new(0),
+            transitions: AtomicU64::new(0),
+            peak_stage: AtomicUsize::new(0),
+            last_shed: AtomicU64::new(0),
+        }
+    }
+
+    /// The degradation stage currently in force (0 = none).
+    pub fn stage(&self) -> usize {
+        self.stage.load(Ordering::Relaxed)
+    }
+
+    /// Stage transitions taken so far (up and down).
+    pub fn transitions(&self) -> u64 {
+        self.transitions.load(Ordering::Relaxed)
+    }
+
+    /// Deepest stage reached over the controller's lifetime.
+    pub fn peak_stage(&self) -> usize {
+        self.peak_stage.load(Ordering::Relaxed)
+    }
+
+    /// The admission-time step budget for a request of class `slo`:
+    /// unchanged below [`STAGE_STEP_CAP`] and for guaranteed classes,
+    /// capped at `besteffort_step_cap` for best-effort work while the
+    /// pool is at stage 3. The router applies this *before* the cache
+    /// lookup so degraded requests are cached under degraded keys.
+    pub fn cap_steps(&self, slo: Slo, steps: usize) -> usize {
+        if slo == Slo::Besteffort && self.stage() >= STAGE_STEP_CAP {
+            steps.min(self.cfg.besteffort_step_cap.max(1))
+        } else {
+            steps
+        }
+    }
+
+    /// One controller pass: classify the tick (pressured / calm /
+    /// hold), advance the hysteresis counters, and step the stage when
+    /// a streak completes. Call on the serve-loop cadence.
+    pub fn tick(&self, router: &Router) {
+        let live = router
+            .replica_count()
+            .saturating_sub(router.dead_replicas());
+        let capacity = router.queue_cap() * live;
+        let queued = router.total_queued();
+        let shed = router.shed_count();
+        let shed_delta =
+            shed.saturating_sub(self.last_shed.swap(shed, Ordering::Relaxed));
+        let pressured = capacity == 0
+            || shed_delta > 0
+            || queued * 100 >= self.cfg.hi_pct * capacity;
+        let calm = !pressured
+            && queued * 100 <= self.cfg.lo_pct * capacity;
+        let stage = self.stage();
+        if pressured {
+            self.calm_ticks.store(0, Ordering::Relaxed);
+            let streak =
+                self.pressured_ticks.fetch_add(1, Ordering::Relaxed) + 1;
+            if streak >= self.cfg.engage_ticks as usize
+                && stage < self.cfg.max_stage.min(STAGE_STEP_CAP)
+            {
+                self.pressured_ticks.store(0, Ordering::Relaxed);
+                self.transition(stage + 1, router);
+            }
+        } else if calm {
+            self.pressured_ticks.store(0, Ordering::Relaxed);
+            let streak =
+                self.calm_ticks.fetch_add(1, Ordering::Relaxed) + 1;
+            if streak >= self.cfg.recover_ticks as usize && stage > 0 {
+                self.calm_ticks.store(0, Ordering::Relaxed);
+                self.transition(stage - 1, router);
+            }
+        } else {
+            // the hold band: neither streak may carry across it
+            self.pressured_ticks.store(0, Ordering::Relaxed);
+            self.calm_ticks.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Jump straight to `stage` (clamped to the configured maximum),
+    /// applying every dial and recording the transition — the bench's
+    /// per-stage sweep and operator overrides use this; production
+    /// traffic goes through [`tick`](Self::tick).
+    pub fn force_stage(&self, stage: usize, router: &Router) {
+        self.transition(stage.min(self.cfg.max_stage.min(STAGE_STEP_CAP)),
+                        router);
+    }
+
+    /// Move to `to`, re-apply every stage dial, and record the
+    /// transition (trace event + counters). Idempotent on `to == from`.
+    fn transition(&self, to: usize, router: &Router) {
+        let from = self.stage.swap(to, Ordering::Relaxed);
+        if from == to {
+            return;
+        }
+        if let Some(c) = &self.cache {
+            c.set_warm_horizon(if to >= STAGE_HORIZON {
+                self.base_horizon.max(self.cfg.horizon_widen)
+            } else {
+                self.base_horizon
+            });
+        }
+        router.set_gamma_boost(if to >= STAGE_GAMMA {
+            self.cfg.gamma_boost
+        } else {
+            0
+        });
+        self.transitions.fetch_add(1, Ordering::Relaxed);
+        self.peak_stage.fetch_max(to, Ordering::Relaxed);
+        router.record_pool_event(EventKind::Brownout, to as u64,
+                                 pack_pair(from as u32, to as u32));
+        log::warn!("brownout: stage {from} -> {to}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RoutePolicy;
+    use crate::coordinator::pool::cache::CacheConfig;
+    use crate::coordinator::pool::replica::ReplicaHandle;
+    use crate::coordinator::pool::sim::{SimEngine, SimSpec};
+
+    /// An idle 1-replica pool with queue_cap 10 whose pressure we dial
+    /// by hand through the queued gauge — the controller only ever
+    /// reads gauges, so this exercises the real decision path.
+    fn idle_pool() -> Arc<Router> {
+        let h = ReplicaHandle::spawn(0, 16,
+                                     SimEngine::factory(SimSpec::fast()))
+            .unwrap();
+        Arc::new(Router::new(vec![h], RoutePolicy::Jsq, 10))
+    }
+
+    fn set_backlog(router: &Router, queued: usize) {
+        let g = &router.replica(0).unwrap().gauges;
+        let cur = g.queued.load(Ordering::Relaxed);
+        if queued > cur {
+            g.queued.fetch_add(queued - cur, Ordering::Relaxed);
+        } else {
+            g.queued.fetch_sub(cur - queued, Ordering::Relaxed);
+        }
+    }
+
+    #[test]
+    fn ladder_engages_and_recovers_with_hysteresis() {
+        let router = idle_pool();
+        let cache = Arc::new(PoolCache::new(CacheConfig::new(8, 2, 48)));
+        let cfg = BrownoutConfig {
+            engage_ticks: 3,
+            recover_ticks: 4,
+            horizon_widen: 6,
+            gamma_boost: 5,
+            besteffort_step_cap: 2,
+            ..BrownoutConfig::default()
+        };
+        let b = Brownout::new(cfg, Some(cache.clone()));
+        // sustained pressure: 9/10 queued ≥ 80% watermark
+        set_backlog(&router, 9);
+        b.tick(&router);
+        b.tick(&router);
+        assert_eq!(b.stage(), 0, "one tick short of the engage streak");
+        b.tick(&router);
+        assert_eq!(b.stage(), 1);
+        assert_eq!(cache.warm_horizon(), 6, "stage 1 widened the horizon");
+        for _ in 0..3 {
+            b.tick(&router);
+        }
+        assert_eq!(b.stage(), 2);
+        let g = &router.replica(0).unwrap().gauges;
+        assert_eq!(g.gamma_boost.load(Ordering::Relaxed), 5,
+                   "stage 2 raised target gamma on every replica");
+        for _ in 0..3 {
+            b.tick(&router);
+        }
+        assert_eq!(b.stage(), 3, "ladder tops out at the step-cap stage");
+        for _ in 0..20 {
+            b.tick(&router);
+        }
+        assert_eq!(b.stage(), 3, "max_stage is a ceiling");
+        assert_eq!(b.cap_steps(Slo::Besteffort, 50), 2);
+        assert_eq!(b.cap_steps(Slo::Latency, 50), 50,
+                   "guaranteed classes are never degraded");
+        // the hold band (between lo 30% and hi 80%) freezes the stage
+        // and resets both streaks
+        set_backlog(&router, 5);
+        for _ in 0..50 {
+            b.tick(&router);
+        }
+        assert_eq!(b.stage(), 3, "hold band never recovers");
+        // calm: 0/10 backlog, no sheds → step DOWN one stage per streak
+        set_backlog(&router, 0);
+        for _ in 0..4 {
+            b.tick(&router);
+        }
+        assert_eq!(b.stage(), 2);
+        assert_eq!(b.cap_steps(Slo::Besteffort, 50), 50,
+                   "the step cap lifts below stage 3");
+        for _ in 0..8 {
+            b.tick(&router);
+        }
+        assert_eq!(b.stage(), 0, "full recovery, one stage at a time");
+        assert_eq!(g.gamma_boost.load(Ordering::Relaxed), 0,
+                   "recovery restores the configured gamma");
+        assert_eq!(cache.warm_horizon(), 2,
+                   "recovery restores the configured horizon");
+        assert_eq!(b.peak_stage(), 3);
+        assert_eq!(b.transitions(), 6, "3 up + 3 down");
+        router.shutdown();
+    }
+
+    #[test]
+    fn shed_pressure_engages_even_with_an_empty_queue() {
+        let router = idle_pool();
+        let b = Brownout::new(BrownoutConfig {
+            engage_ticks: 1,
+            ..BrownoutConfig::default()
+        }, None);
+        // a shed burst between ticks is pressure regardless of backlog
+        b.tick(&router); // baseline: records last_shed = 0
+        assert_eq!(b.stage(), 0, "calm pool stays at stage 0");
+        for _ in 0..3 {
+            router.record_shed_for_test();
+            b.tick(&router);
+        }
+        assert_eq!(b.stage(), 3, "every shedding tick escalated");
+        router.shutdown();
+    }
+
+    #[test]
+    fn force_stage_applies_dials_and_clamps() {
+        let router = idle_pool();
+        let cache = Arc::new(PoolCache::new(CacheConfig::new(8, 0, 48)));
+        let b = Brownout::new(BrownoutConfig {
+            max_stage: 2,
+            horizon_widen: 3,
+            ..BrownoutConfig::default()
+        }, Some(cache.clone()));
+        assert!(!cache.warm_enabled(), "horizon 0: warm tier off");
+        b.force_stage(3, &router);
+        assert_eq!(b.stage(), 2, "clamped to max_stage");
+        assert_eq!(cache.warm_horizon(), 3,
+                   "widening from 0 turns the warm tier on");
+        assert!(cache.warm_enabled());
+        assert_eq!(b.cap_steps(Slo::Besteffort, 50), 50,
+                   "a pool capped at stage 2 never clips steps");
+        b.force_stage(0, &router);
+        assert_eq!(cache.warm_horizon(), 0, "configured horizon restored");
+        assert_eq!(b.transitions(), 2);
+        router.shutdown();
+    }
+}

@@ -33,7 +33,7 @@
 use crate::coordinator::request::{FamilyKey, Request, RequestKey,
                                   RequestResult, TrajectorySnapshot};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Pool-cache provisioning: capacities, the warm-start horizon, and the
@@ -118,6 +118,11 @@ struct DonorStore {
 /// donor lookup at admission).
 pub struct PoolCache {
     cfg: CacheConfig,
+    /// The warm-start horizon currently in force. Seeded from
+    /// [`CacheConfig::warm_horizon`]; the brownout controller widens it
+    /// under overload (stage 1) and restores it on recovery, so it is
+    /// an atomic rather than plain config.
+    effective_horizon: AtomicUsize,
     results: Mutex<ResultLru>,
     donors: Mutex<DonorStore>,
     hits: AtomicU64,
@@ -132,6 +137,7 @@ impl PoolCache {
     /// An empty cache with the given provisioning.
     pub fn new(cfg: CacheConfig) -> PoolCache {
         PoolCache {
+            effective_horizon: AtomicUsize::new(cfg.warm_horizon),
             cfg,
             results: Mutex::new(ResultLru::default()),
             donors: Mutex::new(DonorStore::default()),
@@ -154,9 +160,23 @@ impl PoolCache {
         self.cfg.result_capacity > 0
     }
 
-    /// True when the warm-start tier is live.
+    /// True when the warm-start tier is live (under the *effective*
+    /// horizon, so a brownout widening from 0 turns the tier on).
     pub fn warm_enabled(&self) -> bool {
-        self.cfg.warm_horizon > 0 && self.cfg.donor_capacity > 0
+        self.warm_horizon() > 0 && self.cfg.donor_capacity > 0
+    }
+
+    /// The warm-start horizon currently in force (the configured value
+    /// unless the brownout controller has overridden it).
+    pub fn warm_horizon(&self) -> usize {
+        self.effective_horizon.load(Ordering::Relaxed)
+    }
+
+    /// Override the effective warm-start horizon. Widening trades
+    /// fidelity for availability (deeper donors admitted); callers
+    /// restore the configured value on recovery.
+    pub fn set_warm_horizon(&self, horizon: usize) {
+        self.effective_horizon.store(horizon, Ordering::Relaxed);
     }
 
     /// The canonical key of `req` under this cache's model identity.
@@ -232,7 +252,7 @@ impl PoolCache {
     pub fn offer_donor(&self, snap: &TrajectorySnapshot) -> bool {
         if !self.warm_enabled()
             || snap.cursor == 0
-            || snap.cursor > self.cfg.warm_horizon
+            || snap.cursor > self.warm_horizon()
             || !lane_shapes_consistent(snap)
         {
             self.donor_rejected.fetch_add(1, Ordering::Relaxed);
@@ -283,7 +303,7 @@ impl PoolCache {
         if snap.lanes() != req.lanes()
             || !lane_shapes_consistent(snap)
             || snap.cursor == 0
-            || snap.cursor > self.cfg.warm_horizon
+            || snap.cursor > self.warm_horizon()
         {
             self.donor_rejected.fetch_add(1, Ordering::Relaxed);
             return None;

@@ -1,0 +1,554 @@
+//! Deterministic fault injection: the chaos substrate every
+//! self-healing path is tested against.
+//!
+//! A [`FaultPlan`] is a seeded, human-writable schedule of faults to
+//! inject into a serving run (`lazydit serve --fault-plan SPEC`, or
+//! directly in benches/tests). The plan compiles to one
+//! [`FaultSchedule`] per replica; the schedule is consulted at engine
+//! round boundaries, so every fault fires at a *deterministic* point in
+//! the replica's own timeline — rerunning the same plan against the
+//! same workload reproduces the same crash, stall, or corruption.
+//!
+//! Spec grammar (comma-separated items, whitespace ignored):
+//!
+//! ```text
+//! plan   := item ("," item)*
+//! item   := ["r" REPLICA ":"] fault | "seed=" N
+//! fault  := "panic@" ROUND            worker panics entering ROUND
+//!         | "panic~" PCT              seeded PCT% panic chance per round
+//!         | "stall@" ROUND "=" MS     worker sleeps MS ms at ROUND
+//!         | "burst@" ROUND "=" K      K rounds of zero progress (queue
+//!                                     backpressure builds)
+//!         | "corrupt@" ROUND          from ROUND on, every snapshot is
+//!                                     pushed through the wire codec
+//!                                     with a flipped byte (strict
+//!                                     decode rejects it), so the
+//!                                     crash-resume stash goes stale
+//!         | "sock@" I "=" MS          self-drive client stalls MS ms
+//!                                     before reading response I (slow
+//!                                     reader; exercises the bounded
+//!                                     response write)
+//! ```
+//!
+//! Without an `rK:` prefix a fault targets replica 0. `sock@` faults
+//! are client-side and ignore the replica prefix. Rounds are 1-based:
+//! `panic@1` fires on the engine's first `step_round`.
+//!
+//! Injection has two equivalent homes: [`crate::coordinator::pool::sim::SimEngine`]
+//! consults its schedule natively (so synthetic chaos costs nothing
+//! when the schedule is empty), and [`FaultEngine`] wraps any other
+//! [`PoolEngine`] (the real engine) with the same semantics.
+
+use crate::coordinator::pool::{EngineFactory, PoolEngine};
+use crate::coordinator::request::{Request, RequestResult, TrajectorySnapshot};
+use crate::coordinator::stats::{LayerStats, ServeStats};
+use anyhow::{bail, Context, Result};
+
+/// One parsed fault item (replica-scoped; see module docs for grammar).
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum FaultKind {
+    /// Panic entering round `.0`.
+    PanicAt(u64),
+    /// Seeded per-round panic probability in percent.
+    PanicRate(u32),
+    /// Sleep `.1` ms entering round `.0`.
+    StallAt(u64, u64),
+    /// `.1` rounds of zero progress starting at round `.0`.
+    BurstAt(u64, u64),
+    /// From round `.0` on, snapshots decode-corrupt.
+    CorruptFrom(u64),
+}
+
+/// A seeded, replica-addressed schedule of injectable faults.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    items: Vec<(usize, FaultKind)>,
+    socks: Vec<(u64, u64)>,
+}
+
+impl FaultPlan {
+    /// Parse a plan from the spec grammar (see module docs). Empty
+    /// specs parse to an empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for raw in spec.split(',') {
+            let item = raw.trim();
+            if item.is_empty() {
+                continue;
+            }
+            if let Some(n) = item.strip_prefix("seed=") {
+                plan.seed = n
+                    .parse()
+                    .with_context(|| format!("bad fault seed {n:?}"))?;
+                continue;
+            }
+            let (replica, body) = match item.strip_prefix('r') {
+                Some(rest) if rest.contains(':') => {
+                    let (r, body) = rest.split_once(':').unwrap();
+                    let r: usize = r.parse().with_context(|| {
+                        format!("bad replica prefix in {item:?}")
+                    })?;
+                    (r, body)
+                }
+                _ => (0, item),
+            };
+            let kind = parse_fault(body)
+                .with_context(|| format!("bad fault item {item:?}"))?;
+            if let Parsed::Sock(i, ms) = kind {
+                plan.socks.push((i, ms));
+            } else if let Parsed::Fault(k) = kind {
+                plan.items.push((replica, k));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan injects nothing anywhere.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty() && self.socks.is_empty()
+    }
+
+    /// Compile the engine-side schedule for one replica. Replicas the
+    /// plan never names get an empty (free) schedule.
+    pub fn for_replica(&self, replica: usize) -> FaultSchedule {
+        let mut s = FaultSchedule {
+            seed: self.seed,
+            replica: replica as u64,
+            ..FaultSchedule::default()
+        };
+        for (r, kind) in &self.items {
+            if *r != replica {
+                continue;
+            }
+            match kind {
+                FaultKind::PanicAt(round) => s.panic_rounds.push(*round),
+                FaultKind::PanicRate(pct) => {
+                    s.panic_rate_pct = s.panic_rate_pct.max(*pct);
+                }
+                FaultKind::StallAt(round, ms) => s.stalls.push((*round, *ms)),
+                FaultKind::BurstAt(round, k) => s.bursts.push((*round, *k)),
+                FaultKind::CorruptFrom(round) => {
+                    s.corrupt_from = Some(
+                        s.corrupt_from.map_or(*round, |c| c.min(*round)),
+                    );
+                }
+            }
+        }
+        s
+    }
+
+    /// Client-side slow-reader stalls: `(response index, ms)` pairs,
+    /// 0-based over the self-drive client's request sequence.
+    pub fn sock_stalls(&self) -> &[(u64, u64)] {
+        &self.socks
+    }
+}
+
+/// Intermediate parse result: engine faults vs client-side sock items.
+enum Parsed {
+    Fault(FaultKind),
+    Sock(u64, u64),
+}
+
+fn parse_fault(body: &str) -> Result<Parsed> {
+    let num = |s: &str| -> Result<u64> {
+        s.parse::<u64>()
+            .with_context(|| format!("expected a number, got {s:?}"))
+    };
+    let pair = |s: &str, what: &str| -> Result<(u64, u64)> {
+        let Some((a, b)) = s.split_once('=') else {
+            bail!("{what} needs ROUND=VALUE, got {s:?}");
+        };
+        Ok((num(a)?, num(b)?))
+    };
+    if let Some(rest) = body.strip_prefix("panic@") {
+        let round = num(rest)?;
+        if round == 0 {
+            bail!("rounds are 1-based; panic@0 never fires");
+        }
+        return Ok(Parsed::Fault(FaultKind::PanicAt(round)));
+    }
+    if let Some(rest) = body.strip_prefix("panic~") {
+        let pct = num(rest)?;
+        if pct > 100 {
+            bail!("panic rate must be 0..=100, got {pct}");
+        }
+        return Ok(Parsed::Fault(FaultKind::PanicRate(pct as u32)));
+    }
+    if let Some(rest) = body.strip_prefix("stall@") {
+        let (round, ms) = pair(rest, "stall")?;
+        return Ok(Parsed::Fault(FaultKind::StallAt(round, ms)));
+    }
+    if let Some(rest) = body.strip_prefix("burst@") {
+        let (round, k) = pair(rest, "burst")?;
+        return Ok(Parsed::Fault(FaultKind::BurstAt(round, k.max(1))));
+    }
+    if let Some(rest) = body.strip_prefix("corrupt@") {
+        return Ok(Parsed::Fault(FaultKind::CorruptFrom(num(rest)?)));
+    }
+    if let Some(rest) = body.strip_prefix("sock@") {
+        let (i, ms) = pair(rest, "sock")?;
+        return Ok(Parsed::Sock(i, ms));
+    }
+    bail!(
+        "unknown fault (expected panic@R, panic~PCT, stall@R=MS, \
+         burst@R=K, corrupt@R, sock@I=MS, or seed=N)"
+    );
+}
+
+/// What one engine round should suffer. Applied in order: stall
+/// (sleep), then panic, then burst (return without progress).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RoundFaults {
+    /// Sleep this long before doing anything else.
+    pub stall_ms: u64,
+    /// Panic (the worker's `catch_unwind` + supervisor take over).
+    pub panic: bool,
+    /// Make zero progress this round (backpressure builds upstream).
+    pub burst: bool,
+}
+
+/// One replica's compiled fault timeline. The engine (or its
+/// [`FaultEngine`] wrapper) calls [`FaultSchedule::begin_round`] once
+/// per `step_round`; the schedule advances its own 1-based round
+/// counter, so a respawned engine built from the same plan relives the
+/// same timeline — exactly what makes flapping reproducible.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    seed: u64,
+    replica: u64,
+    panic_rounds: Vec<u64>,
+    panic_rate_pct: u32,
+    stalls: Vec<(u64, u64)>,
+    bursts: Vec<(u64, u64)>,
+    corrupt_from: Option<u64>,
+    round: u64,
+}
+
+impl FaultSchedule {
+    /// True when nothing is ever injected (the common fast path: one
+    /// branch per round, no allocation).
+    pub fn is_empty(&self) -> bool {
+        self.panic_rounds.is_empty()
+            && self.panic_rate_pct == 0
+            && self.stalls.is_empty()
+            && self.bursts.is_empty()
+            && self.corrupt_from.is_none()
+    }
+
+    /// Advance to the next round and report what it should suffer.
+    pub fn begin_round(&mut self) -> RoundFaults {
+        self.round += 1;
+        if self.is_empty() {
+            return RoundFaults::default();
+        }
+        let r = self.round;
+        let mut out = RoundFaults::default();
+        for (round, ms) in &self.stalls {
+            if *round == r {
+                out.stall_ms = out.stall_ms.max(*ms);
+            }
+        }
+        out.panic = self.panic_rounds.contains(&r)
+            || (self.panic_rate_pct > 0
+                && fault_mix(self.seed ^ self.replica.rotate_left(17), r)
+                    % 100
+                    < self.panic_rate_pct as u64);
+        out.burst = self
+            .bursts
+            .iter()
+            .any(|(start, k)| r >= *start && r < start + k);
+        out
+    }
+
+    /// Is the snapshot path corrupting as of the current round?
+    pub fn corrupting(&self) -> bool {
+        matches!(self.corrupt_from, Some(c) if self.round >= c)
+    }
+
+    /// Rounds this schedule has begun (1-based; 0 before the first).
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+}
+
+/// SplitMix64-style stateless mixer for the seeded panic-rate draw.
+fn fault_mix(a: u64, b: u64) -> u64 {
+    let mut z = a
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(b.rotate_left(31))
+        .wrapping_add(0xC2B2_AE3D);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Model snapshot-decode corruption honestly: round-trip the snapshot
+/// through the real wire codec with one flipped header byte. The
+/// strict decoder rejects it, so the caller sees `None` — the same
+/// observable as a torn write on a real transport — and the rejection
+/// path itself gets exercised on every corrupt round.
+pub fn corrupt_snapshot(snap: &TrajectorySnapshot)
+                        -> Option<TrajectorySnapshot> {
+    let mut bytes = snap.encode();
+    if let Some(b0) = bytes.first_mut() {
+        *b0 ^= 0x40; // break the magic: decode must reject
+    }
+    TrajectorySnapshot::decode(&bytes).ok()
+}
+
+/// A [`PoolEngine`] decorator injecting a [`FaultSchedule`] into any
+/// inner engine — how the real [`crate::coordinator::engine::Engine`]
+/// gets chaos without knowing about it. The synthetic engine consults
+/// its schedule natively instead (zero wrapper cost on the bench's
+/// clean runs), with identical semantics.
+pub struct FaultEngine {
+    inner: Box<dyn PoolEngine>,
+    faults: FaultSchedule,
+}
+
+impl FaultEngine {
+    /// Wrap `inner` with the given schedule.
+    pub fn new(inner: Box<dyn PoolEngine>, faults: FaultSchedule)
+               -> FaultEngine {
+        FaultEngine { inner, faults }
+    }
+
+    /// Decorate an engine factory so every engine it builds (including
+    /// supervisor respawns) starts the schedule from round 0.
+    pub fn wrap_factory(factory: EngineFactory, faults: FaultSchedule)
+                        -> EngineFactory {
+        Box::new(move || {
+            Ok(Box::new(FaultEngine::new(factory()?, faults))
+               as Box<dyn PoolEngine>)
+        })
+    }
+}
+
+impl PoolEngine for FaultEngine {
+    fn submit(&mut self, req: Request) -> u64 {
+        self.inner.submit(req)
+    }
+
+    fn active_count(&self) -> usize {
+        self.inner.active_count()
+    }
+
+    fn pending_steps(&self) -> usize {
+        self.inner.pending_steps()
+    }
+
+    fn step_round(&mut self) -> Result<Vec<RequestResult>> {
+        let rf = self.faults.begin_round();
+        if rf.stall_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(rf.stall_ms));
+        }
+        if rf.panic {
+            panic!("injected fault: panic at round {}", self.faults.round());
+        }
+        if rf.burst {
+            return Ok(Vec::new());
+        }
+        self.inner.step_round()
+    }
+
+    fn layer_stats(&self) -> &LayerStats {
+        self.inner.layer_stats()
+    }
+
+    fn serve_stats(&self) -> &ServeStats {
+        self.inner.serve_stats()
+    }
+
+    fn policy_name(&self) -> String {
+        self.inner.policy_name()
+    }
+
+    fn arena_stats(&self) -> Option<crate::tensor::pool::PoolStats> {
+        self.inner.arena_stats()
+    }
+
+    fn install_tracer(&mut self, tracer: crate::obs::Tracer) {
+        self.inner.install_tracer(tracer);
+    }
+
+    fn active_ids(&self) -> Vec<u64> {
+        self.inner.active_ids()
+    }
+
+    fn evict_to_snapshot(&mut self, id: u64) -> Option<TrajectorySnapshot> {
+        if self.faults.corrupting() {
+            // refuse *before* evicting: a corrupting transport must not
+            // silently drop a live trajectory out of the engine
+            return None;
+        }
+        self.inner.evict_to_snapshot(id)
+    }
+
+    fn admit_snapshot(&mut self, snap: TrajectorySnapshot) -> u64 {
+        self.inner.admit_snapshot(snap)
+    }
+
+    fn snapshot_request(&self, id: u64) -> Option<TrajectorySnapshot> {
+        let snap = self.inner.snapshot_request(id)?;
+        if self.faults.corrupting() {
+            return corrupt_snapshot(&snap);
+        }
+        Some(snap)
+    }
+
+    fn submit_warm(&mut self, req: Request, donor: &TrajectorySnapshot)
+                   -> (u64, u64) {
+        self.inner.submit_warm(req, donor)
+    }
+
+    fn set_gamma_boost(&mut self, boost: u32) {
+        self.inner.set_gamma_boost(boost);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pool::sim::{SimEngine, SimSpec};
+
+    #[test]
+    fn plan_grammar_round_trips_every_item() {
+        let plan = FaultPlan::parse(
+            "panic@3, r1:stall@2=40, r2:burst@5=3, corrupt@4, \
+             sock@1=25, seed=99, panic~10",
+        )
+        .unwrap();
+        assert!(!plan.is_empty());
+        assert_eq!(plan.sock_stalls(), &[(1, 25)]);
+
+        let mut r0 = plan.for_replica(0);
+        assert!(!r0.is_empty());
+        assert!(r0.corrupt_from.is_some());
+        assert_eq!(r0.panic_rounds, vec![3]);
+        assert_eq!(r0.panic_rate_pct, 10);
+        // rounds 1..2 are clean-ish, round 3 panics (rate seeded off)
+        let mut clean = FaultPlan::parse("panic@3").unwrap().for_replica(0);
+        assert!(!clean.begin_round().panic);
+        assert!(!clean.begin_round().panic);
+        assert!(clean.begin_round().panic);
+
+        let mut r1 = plan.for_replica(1);
+        assert_eq!(r1.begin_round().stall_ms, 0);
+        assert_eq!(r1.begin_round().stall_ms, 40);
+
+        let mut r2 = plan.for_replica(2);
+        for _ in 0..4 {
+            assert!(!r2.begin_round().burst);
+        }
+        for _ in 0..3 {
+            assert!(r2.begin_round().burst, "burst spans rounds 5..8");
+        }
+        assert!(!r2.begin_round().burst);
+
+        // corruption engages at its round and stays engaged
+        for round in 1..=6 {
+            assert_eq!(r0.corrupting(), round > 3, "round {round}");
+            r0.begin_round();
+        }
+
+        // unnamed replicas get a free schedule
+        assert!(plan.for_replica(7).is_empty());
+    }
+
+    #[test]
+    fn plan_rejects_malformed_specs() {
+        for bad in [
+            "explode@3", "panic@", "panic@0", "panic~101", "stall@5",
+            "burst@2=x", "rX:panic@1", "seed=zzz", "sock@3",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        // empty and whitespace specs are the no-op plan
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" , ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn panic_rate_is_seeded_and_deterministic() {
+        let draw = |seed: u64| {
+            let plan =
+                FaultPlan::parse(&format!("panic~30,seed={seed}")).unwrap();
+            let mut s = plan.for_replica(0);
+            (0..64).map(|_| s.begin_round().panic).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(7), draw(7), "same seed, same timeline");
+        assert_ne!(draw(7), draw(8), "different seed, different timeline");
+        let hits = draw(7).iter().filter(|p| **p).count();
+        assert!(hits > 5 && hits < 40, "~30% of 64 rounds, got {hits}");
+        // distinct replicas fault at distinct rounds under one seed
+        let plan = FaultPlan::parse("r0:panic~30,r1:panic~30").unwrap();
+        let per = |r: usize| {
+            let mut s = plan.for_replica(r);
+            (0..64).map(|_| s.begin_round().panic).collect::<Vec<_>>()
+        };
+        assert_ne!(per(0), per(1));
+    }
+
+    #[test]
+    fn corrupt_snapshot_always_fails_strict_decode() {
+        let mut e = SimEngine::new(SimSpec::fast());
+        e.submit(Request::new(5, 1, 4, 9));
+        e.step_round().unwrap();
+        let snap = e.snapshot_request(5).unwrap();
+        assert!(corrupt_snapshot(&snap).is_none(),
+                "flipped magic must be rejected by the codec");
+    }
+
+    #[test]
+    fn fault_engine_injects_panic_stall_and_burst() {
+        let wrap = |spec: &str| {
+            let faults = FaultPlan::parse(spec).unwrap().for_replica(0);
+            let mut e = FaultEngine::new(
+                Box::new(SimEngine::new(SimSpec::fast())), faults);
+            e.submit(Request::new(0, 1, 3, 4));
+            e
+        };
+        // burst: no progress, no retire, request stays active
+        let mut burst = wrap("burst@1=2");
+        assert!(burst.step_round().unwrap().is_empty());
+        assert_eq!(burst.pending_steps(), 3, "burst makes zero progress");
+        assert!(burst.step_round().unwrap().is_empty());
+        assert_eq!(burst.pending_steps(), 3);
+        for _ in 0..3 {
+            burst.step_round().unwrap();
+        }
+        assert_eq!(burst.active_count(), 0, "drains once the burst ends");
+
+        // panic: unwinds out of step_round at its round
+        let mut boom = wrap("panic@2");
+        boom.step_round().unwrap();
+        let caught = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| boom.step_round()));
+        assert!(caught.is_err(), "round 2 must panic");
+
+        // stall: wall time visibly longer on the stalled round
+        let mut slow = wrap("stall@1=30");
+        let t0 = std::time::Instant::now();
+        slow.step_round().unwrap();
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(25));
+    }
+
+    #[test]
+    fn corrupting_fault_engine_stales_the_stash_and_refuses_evict() {
+        let faults = FaultPlan::parse("corrupt@2").unwrap().for_replica(0);
+        let mut e = FaultEngine::new(
+            Box::new(SimEngine::new(SimSpec::fast())), faults);
+        e.submit(Request::new(9, 1, 5, 2));
+        e.step_round().unwrap();
+        // round 1: still clean
+        assert!(e.snapshot_request(9).is_some());
+        e.step_round().unwrap();
+        // round 2+: stash refresh sees decode failures, evict refuses
+        assert!(e.snapshot_request(9).is_none());
+        assert!(e.evict_to_snapshot(9).is_none());
+        assert_eq!(e.active_count(), 1,
+                   "a refused evict must not lose the trajectory");
+    }
+}

@@ -22,7 +22,19 @@
 //!   (same family, different seed) seed a joiner's lane caches from a
 //!   donor trajectory;
 //! * [`sim`] — a deterministic synthetic engine: exercises the whole pool
-//!   (and the scaling bench) without artifacts or the XLA runtime.
+//!   (and the scaling bench) without artifacts or the XLA runtime;
+//! * [`fault`] — deterministic fault injection: a seeded [`fault::FaultPlan`]
+//!   compiles to per-replica schedules (panic/stall/burst/corrupt) the
+//!   synthetic engine honors natively and [`fault::FaultEngine`] wraps
+//!   around the real one;
+//! * [`supervisor`] — watches per-replica heartbeats, respawns dead
+//!   workers into the same tier slot (restart budget + exponential
+//!   backoff) and trips a per-replica circuit breaker so routing stops
+//!   feeding a flapping replica;
+//! * [`brownout`] — the pool-wide overload controller: under sustained
+//!   backlog/shed pressure it trades fidelity for availability through
+//!   declared degradation stages (wider warm horizon → higher target Γ
+//!   → capped best-effort steps) and steps back down on recovery.
 //!
 //! Replicas may run different skip policies side-by-side (per-replica
 //! override in `lazydit serve --replica-policy`), turning the server into
@@ -46,19 +58,25 @@
 #![deny(missing_docs)]
 
 pub mod agg;
+pub mod brownout;
 pub mod cache;
+pub mod fault;
 pub mod replica;
 pub mod router;
 pub mod sim;
 pub mod steal;
+pub mod supervisor;
 
 pub use agg::PoolReport;
+pub use brownout::{Brownout, BrownoutConfig};
 pub use cache::{CacheConfig, CacheStats, PoolCache};
+pub use fault::{FaultEngine, FaultPlan, FaultSchedule};
 pub use replica::{PoolJob, ReplicaGauges, ReplicaHandle, ReplicaReport,
                   ReplicaTier};
 pub use router::{DispatchOutcome, Router};
 pub use sim::{SimEngine, SimSpec};
 pub use steal::{Rebalancer, StealPeer};
+pub use supervisor::{Supervisor, SupervisorConfig};
 
 use crate::coordinator::request::{Request, RequestResult};
 use crate::coordinator::stats::{LayerStats, ServeStats};
@@ -158,9 +176,25 @@ pub trait PoolEngine {
                    -> (u64, u64) {
         (self.submit(req), 0)
     }
+
+    /// Raise the engine's target laziness by `boost` percentage points
+    /// — the brownout controller's stage-2 dial (LazyDiT's fidelity/
+    /// compute trade turned into an overload valve). 0 restores the
+    /// configured target. Engines without a tunable gate ignore it
+    /// (the default): degradation is best-effort by design.
+    fn set_gamma_boost(&mut self, _boost: u32) {}
 }
 
 /// Constructs a replica's engine *on the replica thread*. The factory is
 /// `Send`; the engine it builds does not have to be.
 pub type EngineFactory =
     Box<dyn FnOnce() -> Result<Box<dyn PoolEngine>> + Send + 'static>;
+
+/// A *reusable* engine factory for supervised slots: unlike
+/// [`EngineFactory`] it can be invoked again after a crash, so the
+/// [`supervisor::Supervisor`] can respawn a replacement worker into the
+/// same tier slot. Shared (`Arc`) because the supervisor keeps one per
+/// slot for the whole pool lifetime.
+pub type RespawnFactory =
+    std::sync::Arc<dyn Fn() -> Result<Box<dyn PoolEngine>> + Send + Sync
+                   + 'static>;

@@ -9,7 +9,7 @@
 use crate::config::Slo;
 use crate::coordinator::pool::cache::PoolCache;
 use crate::coordinator::pool::steal::{Rebalancer, StealPeer};
-use crate::coordinator::pool::{EngineFactory, PoolEngine};
+use crate::coordinator::pool::{EngineFactory, PoolEngine, RespawnFactory};
 use crate::coordinator::request::{Request, RequestKey, RequestResult,
                                   TrajectorySnapshot};
 use crate::coordinator::stats::{LayerStats, ServeStats};
@@ -189,6 +189,23 @@ pub fn tier_admits(tier_slo: Slo, max_batch: usize, slo: Slo,
     tier_slo.serves(slo) && max_batch >= lanes.max(1)
 }
 
+/// [`ReplicaGauges::breaker`] state: healthy, full dispatch.
+pub const BREAKER_CLOSED: usize = 0;
+/// [`ReplicaGauges::breaker`] state: out of the candidate rotation.
+pub const BREAKER_OPEN: usize = 1;
+/// [`ReplicaGauges::breaker`] state: back in rotation as a probe; the
+/// supervisor closes it after a healthy interval, reopens it on fault.
+pub const BREAKER_HALF_OPEN: usize = 2;
+
+/// Human-readable breaker-state label for `STATS`/reports.
+pub fn breaker_name(state: usize) -> &'static str {
+    match state {
+        BREAKER_OPEN => "open",
+        BREAKER_HALF_OPEN => "half_open",
+        _ => "closed",
+    }
+}
+
 /// Live per-replica load/laziness gauges. The router reads these on every
 /// dispatch; the worker updates them as rounds complete. All counters are
 /// relaxed atomics — approximate-but-cheap is exactly what routing needs.
@@ -277,6 +294,39 @@ pub struct ReplicaGauges {
     /// the router so finished/dead replicas drop out of candidate
     /// generation instead of winning the cost order with snapshot 0.
     pub finished: AtomicBool,
+    /// Worker-loop heartbeat: bumped at the top of every loop iteration.
+    /// The supervisor's stall detector watches this counter — a busy
+    /// replica whose heartbeat stops advancing is wedged, not slow.
+    pub heartbeat: AtomicU64,
+    /// Epoch-µs stamp of the last heartbeat (`STATS` liveness row).
+    pub heartbeat_us: AtomicU64,
+    /// Times the supervisor respawned this slot's worker. The gauges
+    /// `Arc` survives incarnations, so the count accumulates across
+    /// respawns and flows `STATS` → pool report → BENCH_serve.json.
+    pub restarts: AtomicU64,
+    /// Per-replica circuit breaker state: 0 closed (healthy), 1 open
+    /// (the router stops dispatching here), 2 half-open (one probe
+    /// stream allowed). Driven by the supervisor's state machine; read
+    /// through [`GaugeSnapshot`] so candidate ordering stays pure.
+    pub breaker: AtomicUsize,
+    /// Times the breaker tripped open (flap accounting).
+    pub breaker_trips: AtomicU64,
+    /// A supervised worker died (panic, wedged engine, step error) and
+    /// left its queue OPEN awaiting a respawned incarnation. Mutually
+    /// exclusive with `finished`: a needs-respawn slot is down but not
+    /// dead — the supervisor either revives it or, once the restart
+    /// budget is spent, finishes it for good via
+    /// [`ReplicaHandle::give_up`].
+    pub needs_respawn: AtomicBool,
+    /// Supervisor poison request: a supervised worker that sees this at
+    /// a loop boundary parks its residents back into its own queue and
+    /// exits for respawn — the cooperative escape hatch for a stall
+    /// that eventually returns from `step_round`.
+    pub poisoned: AtomicBool,
+    /// Brownout stage-2 dial: percentage points of extra target
+    /// laziness the worker applies to its engine
+    /// ([`PoolEngine::set_gamma_boost`]) at the next loop boundary.
+    pub gamma_boost: AtomicUsize,
 }
 
 impl ReplicaGauges {
@@ -323,6 +373,9 @@ impl ReplicaGauges {
             pending_steps: self.pending_steps.load(Ordering::Relaxed),
             lazy_ratio: self.lazy_ratio(),
             finished: self.finished.load(Ordering::Acquire),
+            breaker_open: self.breaker.load(Ordering::Relaxed)
+                == BREAKER_OPEN
+                || self.needs_respawn.load(Ordering::Acquire),
             slo: self.live_slo(tier.slo),
             max_batch: tier.max_batch,
         }
@@ -359,6 +412,11 @@ pub struct GaugeSnapshot {
     pub lazy_ratio: f64,
     /// The worker has exited — the replica can never serve again.
     pub finished: bool,
+    /// The replica is temporarily out of rotation: its circuit breaker
+    /// is open, or its worker is down awaiting a supervisor respawn.
+    /// Unlike `finished` this is recoverable — candidates exclude it,
+    /// servability classification does not.
+    pub breaker_open: bool,
     /// The replica's provisioned SLO class ([`ReplicaTier::slo`]).
     pub slo: Slo,
     /// The replica's batch width ([`ReplicaTier::max_batch`]) —
@@ -399,6 +457,11 @@ pub struct ReplicaReport {
     pub migrated_in: u64,
     /// Requests admitted warm-started from a pool-cache donor.
     pub warm_hits: u64,
+    /// Times the supervisor respawned this slot's worker (accumulated
+    /// across incarnations — the gauges survive the crash).
+    pub restarts: u64,
+    /// Times this replica's circuit breaker tripped open.
+    pub breaker_trips: u64,
     /// Final buffer-arena counters, when the engine owns one (real
     /// engines do; the synthetic engine reports `None`). A healthy
     /// steady state shows `reused` ≫ `allocated` — see docs/PERF.md.
@@ -423,6 +486,8 @@ impl ReplicaReport {
             migrated_out: 0,
             migrated_in: 0,
             warm_hits: 0,
+            restarts: 0,
+            breaker_trips: 0,
             arena: None,
             error: Some(msg.into()),
         }
@@ -511,12 +576,143 @@ impl ReplicaHandle {
         let gauges = Arc::new(ReplicaGauges::default());
         let report: Arc<Mutex<Option<ReplicaReport>>> =
             Arc::new(Mutex::new(None));
-        let (q2, g2, r2) = (queue.clone(), gauges.clone(), report.clone());
-        let t2 = tier.clone();
-        let tr2 = tracer.clone();
-        let join = std::thread::Builder::new()
-            .name(format!("lazydit-replica-{id}"))
-            .spawn(move || {
+        let join = spawn_worker(id, factory, &queue, &gauges, &report,
+                                steal, &tier, &tracer, cache, false)?;
+        Ok(ReplicaHandle {
+            id,
+            gauges,
+            tier,
+            tracer,
+            queue,
+            join: Mutex::new(Some(join)),
+            report,
+        })
+    }
+
+    /// [`spawn_cached`](Self::spawn_cached) under supervision: the
+    /// factory is *reusable*, so when this worker dies the
+    /// [`crate::coordinator::pool::supervisor::Supervisor`] can respawn
+    /// a fresh incarnation into the same slot — same queue, same
+    /// gauges, same tier, same tracer ring. A supervised worker that
+    /// panics leaves its queue OPEN, re-queues its residents' last
+    /// boundary snapshots into its *own* queue (siblings are only the
+    /// fallback), and raises [`ReplicaGauges::needs_respawn`] instead
+    /// of finishing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_supervised(id: usize, queue_cap: usize,
+                            factory: &RespawnFactory,
+                            steal: Option<Arc<Rebalancer>>,
+                            tier: ReplicaTier, tracer: Tracer,
+                            cache: Option<Arc<PoolCache>>)
+                            -> Result<ReplicaHandle> {
+        let queue: BoundedQueue<PoolJob> = BoundedQueue::new(queue_cap.max(1));
+        let gauges = Arc::new(ReplicaGauges::default());
+        let report: Arc<Mutex<Option<ReplicaReport>>> =
+            Arc::new(Mutex::new(None));
+        let f = factory.clone();
+        let once: EngineFactory = Box::new(move || f());
+        let join = spawn_worker(id, once, &queue, &gauges, &report,
+                                steal, &tier, &tracer, cache, true)?;
+        Ok(ReplicaHandle {
+            id,
+            gauges,
+            tier,
+            tracer,
+            queue,
+            join: Mutex::new(Some(join)),
+            report,
+        })
+    }
+
+    /// Spawn a fresh worker incarnation into this slot (supervisor
+    /// respawn): reaps the dead thread, clears the respawn/poison
+    /// flags, bumps the restart counter, and starts a new supervised
+    /// worker over the SAME queue/gauges/tier/tracer — queued jobs and
+    /// re-queued residents are served by the new incarnation, and every
+    /// [`StealPeer`] registration stays valid because the queue
+    /// identity never changes.
+    pub fn respawn(&self, factory: &RespawnFactory,
+                   steal: Option<Arc<Rebalancer>>,
+                   cache: Option<Arc<PoolCache>>) -> Result<()> {
+        if let Some(h) = self.join.lock().unwrap().take() {
+            let _ = h.join(); // the old incarnation is dead by contract
+        }
+        self.gauges.poisoned.store(false, Ordering::Release);
+        self.gauges.needs_respawn.store(false, Ordering::Release);
+        self.gauges.restarts.fetch_add(1, Ordering::Relaxed);
+        let f = factory.clone();
+        let once: EngineFactory = Box::new(move || f());
+        let join = spawn_worker(self.id, once, &self.queue, &self.gauges,
+                                &self.report, steal, &self.tier,
+                                &self.tracer, cache, true)?;
+        *self.join.lock().unwrap() = Some(join);
+        if self.tracer.is_enabled() {
+            self.tracer.record(
+                EventKind::Respawn, self.id as u64,
+                self.gauges.restarts.load(Ordering::Relaxed));
+        }
+        Ok(())
+    }
+
+    /// Permanently retire a supervised slot whose restart budget is
+    /// spent: close the queue, refuse whatever is still queued (forfeit
+    /// accounting keeps the admission ledger balanced), post a failure
+    /// report carrying the gauges' accumulated counters, and mark the
+    /// replica finished so routing and the serve loop see a dead —
+    /// not merely down — replica.
+    pub fn give_up(&self, msg: impl Into<String>) {
+        refuse_remaining(&self.queue, &self.gauges);
+        if let Some(h) = self.join.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let mut slot = self.report.lock().unwrap_or_else(|p| p.into_inner());
+        if slot.is_none() {
+            let mut rep = ReplicaReport::failed(self.id, msg);
+            rep.tier = self.tier.clone();
+            rep.steals = self.gauges.steals.load(Ordering::Relaxed);
+            rep.stolen = self.gauges.stolen.load(Ordering::Relaxed);
+            rep.migrated_out =
+                self.gauges.migrated_out.load(Ordering::Relaxed);
+            rep.migrated_in = self.gauges.migrated_in.load(Ordering::Relaxed);
+            rep.restarts = self.gauges.restarts.load(Ordering::Relaxed);
+            rep.breaker_trips =
+                self.gauges.breaker_trips.load(Ordering::Relaxed);
+            rep.completed_by_slo = self.gauges.completed_by_slo();
+            *slot = Some(rep);
+        }
+        drop(slot);
+        self.gauges.needs_respawn.store(false, Ordering::Release);
+        self.gauges.finished.store(true, Ordering::Release);
+    }
+
+    /// True while this supervised slot's worker is down awaiting a
+    /// respawn (the supervisor's poll signal).
+    pub fn needs_respawn(&self) -> bool {
+        self.gauges.needs_respawn.load(Ordering::Acquire)
+    }
+}
+
+/// The worker-thread spawn shared by every `spawn_*` flavor and by
+/// supervisor [`ReplicaHandle::respawn`]: construct the engine on the
+/// new thread, run the replica loop, settle the admission ledger if it
+/// unwinds. `supervised` selects the crash policy: an unsupervised
+/// panic refuses the queue and finishes the replica for good; a
+/// supervised one re-queues its residents into its own (still open)
+/// queue and raises `needs_respawn` for the supervisor instead.
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker(id: usize, factory: EngineFactory,
+                queue: &BoundedQueue<PoolJob>,
+                gauges: &Arc<ReplicaGauges>,
+                report: &Arc<Mutex<Option<ReplicaReport>>>,
+                steal: Option<Arc<Rebalancer>>, tier: &ReplicaTier,
+                tracer: &Tracer, cache: Option<Arc<PoolCache>>,
+                supervised: bool) -> Result<JoinHandle<()>> {
+    let (q2, g2, r2) = (queue.clone(), gauges.clone(), report.clone());
+    let t2 = tier.clone();
+    let tr2 = tracer.clone();
+    std::thread::Builder::new()
+        .name(format!("lazydit-replica-{id}"))
+        .spawn(move || {
                 // a panicking engine (e.g. an assert deep in the sampler)
                 // must not wedge the pool: post a failure report and close
                 // the queue so waiting clients error out instead of
@@ -546,22 +742,58 @@ impl ReplicaHandle {
                                     &mut responders, &mut stash,
                                     steal.as_deref(),
                                     &engine_pending, &admitting, &t2, &tr2,
-                                    cache.as_deref())
+                                    cache.as_deref(), supervised)
                     }));
                 if result.is_err() {
                     log::warn!("replica {id}: worker panicked");
-                    refuse_remaining(&q2, &g2);
+                    if !supervised {
+                        refuse_remaining(&q2, &g2);
+                    }
                     // requests admitted into the unwound engine can never
                     // complete HERE — but their last boundary snapshots
-                    // can resume on a sibling. Recover what places;
-                    // forfeit only the rest, and roll exactly the
-                    // engine's known step backlog out of the gauge (an
-                    // in-flight dispatch's optimistic increment is left
-                    // for its own rollback, so nothing is double-resolved
-                    // or wiped).
+                    // can resume. Recover what places; forfeit only the
+                    // rest, and roll exactly the engine's known step
+                    // backlog out of the gauge (an in-flight dispatch's
+                    // optimistic increment is left for its own rollback,
+                    // so nothing is double-resolved or wiped).
                     let lost = responders.len();
                     let mut recovered = 0u64;
-                    if let Some(rb) = steal.as_deref() {
+                    let mut requeued = 0usize;
+                    let mut requeued_steps = 0usize;
+                    if supervised {
+                        // the queue stays OPEN: the respawned incarnation
+                        // inherits it. Residents resume in this same tier
+                        // slot — own queue first (self-healing works even
+                        // in a one-replica pool), siblings as fallback.
+                        for (_, snap) in std::mem::take(&mut stash) {
+                            let Some(tx) = responders.remove(&snap.req.id)
+                            else { continue };
+                            let steps = snap.pending_steps();
+                            let job = PoolJob::resumed(
+                                snap, tx, crate::obs::epoch_us());
+                            match q2.try_push(job) {
+                                Ok(()) => {
+                                    recovered += 1;
+                                    requeued += 1;
+                                    requeued_steps += steps;
+                                }
+                                Err(job) => {
+                                    let placed = steal
+                                        .as_deref()
+                                        .map(|rb| {
+                                            rb.place_from_dead(id, job)
+                                              .is_ok()
+                                        })
+                                        .unwrap_or(false);
+                                    if placed {
+                                        recovered += 1;
+                                        g2.migrated_out.fetch_add(
+                                            1, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                        }
+                    } else if let Some(rb) = steal.as_deref() {
                         for (_, snap) in std::mem::take(&mut stash) {
                             let Some(tx) = responders.remove(&snap.req.id)
                             else { continue };
@@ -573,6 +805,8 @@ impl ReplicaHandle {
                             // ledger resolves wholesale below
                             if rb.place_from_dead(id, job).is_ok() {
                                 recovered += 1;
+                                g2.migrated_out.fetch_add(
+                                    1, Ordering::Relaxed);
                                 log::debug!(
                                     "replica {id}: resident {rid} \
                                      recovered to a sibling at step \
@@ -580,12 +814,18 @@ impl ReplicaHandle {
                             }
                         }
                     }
-                    g2.migrated_out.fetch_add(recovered, Ordering::Relaxed);
                     g2.forfeited.fetch_add(lost as u64 - recovered,
                                            Ordering::Relaxed);
                     dec(&g2.queued, lost);
                     dec(&g2.pending_steps,
                         engine_pending.load(Ordering::Relaxed));
+                    // self-requeued residents are queued again awaiting
+                    // the next incarnation — re-credit exactly them
+                    if requeued > 0 {
+                        g2.queued.fetch_add(requeued, Ordering::Relaxed);
+                        g2.pending_steps
+                            .fetch_add(requeued_steps, Ordering::Relaxed);
+                    }
                     // a job that died inside engine.submit left the queue
                     // but never reached `responders` — without this, each
                     // such panic would leak one admission-ledger slot
@@ -596,38 +836,44 @@ impl ReplicaHandle {
                         dec(&g2.queued, 1);
                         dec(&g2.pending_steps, adm - 1);
                     }
-                    let mut slot =
-                        r2.lock().unwrap_or_else(|p| p.into_inner());
-                    if slot.is_none() {
-                        let mut rep =
-                            ReplicaReport::failed(id, "worker panicked");
-                        rep.tier = t2.clone();
-                        rep.steals = g2.steals.load(Ordering::Relaxed);
-                        rep.stolen = g2.stolen.load(Ordering::Relaxed);
-                        rep.migrated_out =
-                            g2.migrated_out.load(Ordering::Relaxed);
-                        rep.migrated_in =
-                            g2.migrated_in.load(Ordering::Relaxed);
-                        rep.completed_by_slo = g2.completed_by_slo();
-                        *slot = Some(rep);
+                    if supervised {
+                        g2.needs_respawn.store(true, Ordering::Release);
+                    } else {
+                        let mut slot =
+                            r2.lock().unwrap_or_else(|p| p.into_inner());
+                        if slot.is_none() {
+                            let mut rep =
+                                ReplicaReport::failed(id, "worker panicked");
+                            rep.tier = t2.clone();
+                            rep.steals = g2.steals.load(Ordering::Relaxed);
+                            rep.stolen = g2.stolen.load(Ordering::Relaxed);
+                            rep.migrated_out =
+                                g2.migrated_out.load(Ordering::Relaxed);
+                            rep.migrated_in =
+                                g2.migrated_in.load(Ordering::Relaxed);
+                            rep.restarts =
+                                g2.restarts.load(Ordering::Relaxed);
+                            rep.breaker_trips =
+                                g2.breaker_trips.load(Ordering::Relaxed);
+                            rep.completed_by_slo = g2.completed_by_slo();
+                            *slot = Some(rep);
+                        }
                     }
+                }
+                if g2.needs_respawn.load(Ordering::Acquire) {
+                    // supervised: down, not dead — the slot awaits its
+                    // next incarnation. `finished` stays false so the
+                    // queue remains in the pool's servable ledger.
+                    return;
                 }
                 // single exit point: the report (normal, error, or panic)
                 // is posted by now, so the replica is observably finished
                 g2.finished.store(true, Ordering::Release);
             })
-            .with_context(|| format!("spawning replica {id}"))?;
-        Ok(ReplicaHandle {
-            id,
-            gauges,
-            tier,
-            tracer,
-            queue,
-            join: Mutex::new(Some(join)),
-            report,
-        })
-    }
+            .with_context(|| format!("spawning replica {id}"))
+}
 
+impl ReplicaHandle {
     /// Snapshot for the router's selection policies, carrying this
     /// handle's tier provisioning (SLO class, batch width).
     pub fn snapshot(&self) -> GaugeSnapshot {
@@ -702,6 +948,10 @@ impl ReplicaHandle {
         if let Some(h) = self.join.lock().unwrap().take() {
             let _ = h.join();
         }
+        // a down-awaiting-respawn slot that never got its respawn still
+        // holds parked jobs: refuse them now so the admission ledger
+        // settles at shutdown (a no-op after a normal drain)
+        refuse_remaining(&self.queue, &self.gauges);
         self.report
             .lock()
             .unwrap_or_else(|p| p.into_inner())
@@ -737,12 +987,21 @@ fn run_replica(id: usize, factory: EngineFactory,
                stash: &mut BTreeMap<u64, TrajectorySnapshot>,
                steal: Option<&Rebalancer>, engine_pending: &AtomicUsize,
                admitting: &AtomicUsize, tier: &ReplicaTier,
-               tracer: &Tracer, cache: Option<&PoolCache>) {
+               tracer: &Tracer, cache: Option<&PoolCache>,
+               supervised: bool) {
     let mut engine: Box<dyn PoolEngine> = match factory() {
         Ok(e) => e,
         Err(e) => {
             let msg = format!("engine construction failed: {e:#}");
             log::warn!("replica {id}: {msg}");
+            if supervised {
+                // construction failures count against the restart
+                // budget too: leave the queue open and let the
+                // supervisor retry (or give up) — a transient artifact
+                // hiccup should not permanently kill the slot
+                gauges.needs_respawn.store(true, Ordering::Release);
+                return;
+            }
             refuse_remaining(queue, gauges);
             let mut rep = ReplicaReport::failed(id, msg);
             rep.tier = tier.clone();
@@ -846,8 +1105,31 @@ fn run_replica(id: usize, factory: EngineFactory,
     // (cursor past the warm horizon — stop snapshotting them).
     let mut result_keys: BTreeMap<u64, RequestKey> = BTreeMap::new();
     let mut donor_done: BTreeSet<u64> = BTreeSet::new();
+    // brownout stage-2 dial, applied only on change (the engine call may
+    // recompute thresholds); 0 restores the configured target
+    let mut boost_applied = 0usize;
 
     loop {
+        // liveness heartbeat: the supervisor's stall detector watches
+        // this counter — a wedged engine stops bumping it, a merely
+        // slow one keeps a (long) cadence
+        gauges.heartbeat.fetch_add(1, Ordering::Relaxed);
+        gauges
+            .heartbeat_us
+            .store(crate::obs::epoch_us(), Ordering::Relaxed);
+        let boost = gauges.gamma_boost.load(Ordering::Relaxed);
+        if boost != boost_applied {
+            engine.set_gamma_boost(boost as u32);
+            boost_applied = boost;
+        }
+        // supervisor poison: a stalled-but-returning worker parks its
+        // residents into its own (still open) queue and exits so a
+        // fresh incarnation can take over
+        if supervised && gauges.poisoned.swap(false, Ordering::AcqRel) {
+            park_for_respawn(id, &mut engine, queue, gauges, responders,
+                             engine_pending, cache);
+            return;
+        }
         // drain-by-migration: evict every resident at this step
         // boundary and hand them to compatible siblings (retag,
         // pre-shutdown). Unplaceable residents resume locally inside
@@ -1003,7 +1285,7 @@ fn run_replica(id: usize, factory: EngineFactory,
                 // is closed for good — stop snapshotting it.
                 if let Some(c) = cache {
                     if c.warm_enabled() {
-                        let horizon = c.config().warm_horizon;
+                        let horizon = c.warm_horizon();
                         for aid in engine.active_ids() {
                             if donor_done.contains(&aid) {
                                 continue;
@@ -1024,8 +1306,10 @@ fn run_replica(id: usize, factory: EngineFactory,
                 // refresh the crash-resume stash at this boundary: the
                 // last consistent snapshot of every resident, so a
                 // panic mid-round loses at most one round of work per
-                // trajectory instead of the whole denoise
-                if steal.is_some() {
+                // trajectory instead of the whole denoise. Supervised
+                // workers stash even alone — their own next incarnation
+                // is the resume target.
+                if steal.is_some() || supervised {
                     stash.clear();
                     for aid in engine.active_ids() {
                         if let Some(s) = engine.snapshot_request(aid) {
@@ -1037,6 +1321,14 @@ fn run_replica(id: usize, factory: EngineFactory,
             Err(e) => {
                 error = Some(format!("step_round failed: {e:#}"));
                 log::warn!("replica {id}: {}", error.as_deref().unwrap());
+                if supervised {
+                    // a step error counts against the restart budget
+                    // like a panic: park what can resume, hand the slot
+                    // to the supervisor, post no report
+                    park_for_respawn(id, &mut engine, queue, gauges,
+                                     responders, engine_pending, cache);
+                    return;
+                }
                 break;
             }
         }
@@ -1069,6 +1361,8 @@ fn run_replica(id: usize, factory: EngineFactory,
         migrated_out: gauges.migrated_out.load(Ordering::Relaxed),
         migrated_in: gauges.migrated_in.load(Ordering::Relaxed),
         warm_hits: gauges.warm_hits.load(Ordering::Relaxed),
+        restarts: gauges.restarts.load(Ordering::Relaxed),
+        breaker_trips: gauges.breaker_trips.load(Ordering::Relaxed),
         arena: engine.arena_stats(),
         error,
     });
@@ -1094,6 +1388,56 @@ fn refuse_remaining(queue: &BoundedQueue<PoolJob>, gauges: &ReplicaGauges) {
         dec(&gauges.pending_steps, job.remaining_steps());
         gauges.forfeited.fetch_add(1, Ordering::Relaxed);
     }
+}
+
+/// A supervised worker's cooperative exit (poison, step error): evict
+/// every resident at this boundary and push it — as a resumable
+/// snapshot — into the replica's OWN still-open queue, where the next
+/// incarnation picks it up. A successfully parked resident keeps its
+/// admission-ledger entries (it is queued again, just as before);
+/// residents that will not evict or will not fit forfeit with exact
+/// decrements. Ends by raising `needs_respawn` for the supervisor.
+fn park_for_respawn(id: usize, engine: &mut Box<dyn PoolEngine>,
+                    queue: &BoundedQueue<PoolJob>, gauges: &ReplicaGauges,
+                    responders: &mut BTreeMap<u64,
+                                             mpsc::Sender<RequestResult>>,
+                    engine_pending: &AtomicUsize,
+                    cache: Option<&PoolCache>) {
+    for rid in engine.active_ids() {
+        let Some(tx) = responders.remove(&rid) else { continue };
+        let Some(snap) = engine.evict_to_snapshot(rid) else {
+            // un-evictable (e.g. a corrupting codec fault): it dies
+            // with this incarnation, settled in the leftover pass below
+            responders.insert(rid, tx);
+            continue;
+        };
+        if let Some(c) = cache {
+            c.offer_donor(&snap);
+        }
+        let steps = snap.pending_steps();
+        let job = PoolJob::resumed(snap, tx, crate::obs::epoch_us());
+        if queue.try_push(job).is_err() {
+            // full or closed: the dropped responder surfaces a
+            // structured error on the client; the ledger resolves here
+            gauges.forfeited.fetch_add(1, Ordering::Relaxed);
+            dec(&gauges.queued, 1);
+            dec(&gauges.pending_steps, steps);
+        }
+    }
+    // whatever still sits inside the engine dies with this incarnation
+    let left = engine.active_count();
+    if left > 0 {
+        gauges.forfeited.fetch_add(left as u64, Ordering::Relaxed);
+        dec(&gauges.queued, left);
+        dec(&gauges.pending_steps, engine.pending_steps());
+        for rid in engine.active_ids() {
+            responders.remove(&rid);
+        }
+    }
+    engine_pending.store(0, Ordering::Relaxed);
+    gauges.needs_respawn.store(true, Ordering::Release);
+    log::warn!("replica {id}: parked {} resident(s) for respawn",
+               gauges.queued.load(Ordering::Relaxed));
 }
 
 /// Evict residents at the current step boundary and hand them to
@@ -1434,6 +1778,115 @@ mod tests {
         assert_eq!(rep.layer.rows_warmed_total(),
                    h.gauges.rows_warmed.load(Ordering::Relaxed),
                    "gauge mirrors the engine's layer-stats total");
+    }
+
+    /// Poll until a supervised slot signals it needs a respawn (the
+    /// worker dies asynchronously; tests must not race it).
+    fn wait_needs_respawn(h: &ReplicaHandle) {
+        for _ in 0..1000 {
+            if h.needs_respawn() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        panic!("slot never raised needs_respawn");
+    }
+
+    #[test]
+    fn supervised_construction_failure_respawns_and_serves() {
+        // first incarnation fails to build (transient artifact hiccup);
+        // the queued job survives in the still-open queue and the
+        // respawned incarnation serves it
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let a2 = attempts.clone();
+        let factory: RespawnFactory = Arc::new(move || {
+            if a2.fetch_add(1, Ordering::SeqCst) == 0 {
+                anyhow::bail!("flaky artifacts");
+            }
+            (SimEngine::factory(SimSpec::fast()))()
+        });
+        let h = ReplicaHandle::spawn_supervised(
+            0, 16, &factory, None, ReplicaTier::default(),
+            Tracer::disabled(), None)
+            .unwrap();
+        let (j, rx) = job(7, 4);
+        h.gauges.queued.fetch_add(1, Ordering::Relaxed);
+        h.gauges.pending_steps.fetch_add(4, Ordering::Relaxed);
+        h.try_send(j).map_err(|_| "send").unwrap();
+        wait_needs_respawn(&h);
+        assert!(!h.finished(), "down is not dead: no report posted");
+        assert!(!h.gauges.finished.load(Ordering::Acquire));
+        h.respawn(&factory, None, None).unwrap();
+        let res = rx.recv().expect("respawned incarnation serves the job");
+        assert_eq!(res.steps, 4);
+        let rep = h.join_report();
+        assert!(rep.error.is_none(), "{:?}", rep.error);
+        assert_eq!(rep.restarts, 1, "the respawn is accounted");
+        assert_eq!(h.gauges.queued.load(Ordering::Relaxed), 0);
+        assert_eq!(h.gauges.pending_steps.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn supervised_panic_parks_slot_and_give_up_finishes_it() {
+        struct AlwaysPanic {
+            layer: LayerStats,
+            serve: ServeStats,
+            active: usize,
+        }
+        impl PoolEngine for AlwaysPanic {
+            fn submit(&mut self, req: Request) -> u64 {
+                self.active += 1;
+                req.id.max(1)
+            }
+            fn active_count(&self) -> usize {
+                self.active
+            }
+            fn pending_steps(&self) -> usize {
+                self.active
+            }
+            fn step_round(&mut self) -> Result<Vec<RequestResult>> {
+                panic!("injected panic")
+            }
+            fn layer_stats(&self) -> &LayerStats {
+                &self.layer
+            }
+            fn serve_stats(&self) -> &ServeStats {
+                &self.serve
+            }
+            fn policy_name(&self) -> String {
+                "always-panic".into()
+            }
+        }
+        let factory: RespawnFactory = Arc::new(|| {
+            Ok(Box::new(AlwaysPanic {
+                layer: LayerStats::new(1),
+                serve: ServeStats::default(),
+                active: 0,
+            }) as Box<dyn PoolEngine>)
+        });
+        let h = ReplicaHandle::spawn_supervised(
+            3, 8, &factory, None, ReplicaTier::default(),
+            Tracer::disabled(), None)
+            .unwrap();
+        let (j, rx) = job(1, 4);
+        h.gauges.queued.fetch_add(1, Ordering::Relaxed);
+        h.gauges.pending_steps.fetch_add(4, Ordering::Relaxed);
+        h.try_send(j).map_err(|_| "send").unwrap();
+        wait_needs_respawn(&h);
+        assert!(!h.finished(), "a supervised panic posts no report");
+        // a down slot drops out of candidate rotation via breaker_open
+        assert!(h.snapshot().breaker_open);
+        assert!(!h.snapshot().finished);
+        // restart budget exhausted: the supervisor retires the slot
+        h.give_up("restart budget exhausted");
+        assert!(h.finished());
+        assert!(rx.recv().is_err(), "client released, not stranded");
+        assert_eq!(h.gauges.queued.load(Ordering::Relaxed), 0);
+        assert_eq!(h.gauges.pending_steps.load(Ordering::Relaxed), 0);
+        assert!(h.gauges.forfeited.load(Ordering::Relaxed) >= 1,
+                "the admission ledger resolves the dead job");
+        let rep = h.join_report();
+        assert_eq!(rep.error.as_deref(), Some("restart budget exhausted"));
     }
 
     #[test]

@@ -44,8 +44,10 @@
 
 use crate::config::{RoutePolicy, Slo};
 use crate::coordinator::pool::agg::PoolReport;
+use crate::coordinator::pool::brownout::Brownout;
 use crate::coordinator::pool::cache::PoolCache;
-use crate::coordinator::pool::replica::{GaugeSnapshot, PoolJob, ReplicaHandle};
+use crate::coordinator::pool::replica::{breaker_name, GaugeSnapshot,
+                                        PoolJob, ReplicaHandle};
 use crate::coordinator::pool::steal::Rebalancer;
 use crate::coordinator::request::{Request, RequestResult};
 use crate::obs::{EventKind, LatencyHist};
@@ -106,6 +108,15 @@ pub struct Router {
     /// Requests resolved by the exact-result cache — its own ledger
     /// term: `dispatched == completed + cache_hits + shed + forfeited`.
     cache_hits: AtomicU64,
+    /// Response writes the wire front-end abandoned because the client
+    /// stopped reading (slow-client guard; see `serve_lines`). Counted
+    /// here so the pool report and `STATS` can surface them.
+    write_timeouts: AtomicU64,
+    /// The pool-wide overload controller, when armed
+    /// ([`with_brownout_controller`](Self::with_brownout_controller)):
+    /// dispatch caps best-effort steps by its stage, `STATS` and
+    /// responses echo the stage.
+    brownout: Option<Arc<Brownout>>,
 }
 
 impl Router {
@@ -153,6 +164,93 @@ impl Router {
             rebalancer,
             cache,
             cache_hits: AtomicU64::new(0),
+            write_timeouts: AtomicU64::new(0),
+            brownout: None,
+        }
+    }
+
+    /// Arm the pool-wide brownout controller (builder, called before
+    /// the router is shared). The serve loop ticks the controller; the
+    /// router consults it at dispatch (best-effort step cap) and echoes
+    /// its stage through `STATS` and the response formatter.
+    pub fn with_brownout_controller(mut self, b: Arc<Brownout>) -> Router {
+        self.brownout = Some(b);
+        self
+    }
+
+    /// The brownout controller's current degradation stage (0 = full
+    /// fidelity; 0 when no controller is armed).
+    pub fn brownout_stage(&self) -> usize {
+        self.brownout.as_ref().map_or(0, |b| b.stage())
+    }
+
+    /// The armed brownout controller, if any (the serve loop's tick
+    /// target).
+    pub fn brownout(&self) -> Option<&Arc<Brownout>> {
+        self.brownout.as_ref()
+    }
+
+    /// Borrow replica `idx`'s handle (supervisor access: respawn,
+    /// give-up, breaker state live on the handle/gauges).
+    pub fn replica(&self, idx: usize) -> Option<&ReplicaHandle> {
+        self.replicas.get(idx)
+    }
+
+    /// Ask every replica worker to raise its engine's target laziness
+    /// by `boost` percentage points at its next loop boundary (brownout
+    /// stage 2; 0 restores the configured target).
+    pub fn set_gamma_boost(&self, boost: u32) {
+        for r in &self.replicas {
+            r.gauges
+                .gamma_boost
+                .store(boost as usize, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one abandoned response write (slow-client guard).
+    pub fn note_write_timeout(&self) {
+        self.write_timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Response writes abandoned on stalled clients pool-wide.
+    pub fn total_write_timeouts(&self) -> u64 {
+        self.write_timeouts.load(Ordering::Relaxed)
+    }
+
+    /// Supervisor respawns pool-wide (gauges survive incarnations).
+    pub fn total_restarts(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.restarts.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Circuit-breaker trips pool-wide.
+    pub fn total_breaker_trips(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.breaker_trips.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Replicas whose worker has exited for good (drained or dead).
+    /// `provisioned − dead` is the pool's live capacity — without a
+    /// supervisor a panicked replica lands here permanently, and
+    /// `STATS` reports the shrinkage instead of hiding it.
+    pub fn dead_replicas(&self) -> usize {
+        self.replicas
+            .iter()
+            .filter(|r| r.gauges.finished.load(Ordering::Acquire))
+            .count()
+    }
+
+    /// Record a pool-level trace event (brownout transitions, breaker
+    /// trips). The router owns no ring; pool events land on replica 0's
+    /// tracer, like cache hits.
+    pub fn record_pool_event(&self, kind: EventKind, kind_id: u64,
+                             arg: u64) {
+        if let Some(r) = self.replicas.first() {
+            r.tracer.record(kind, kind_id, arg);
         }
     }
 
@@ -164,6 +262,12 @@ impl Router {
     /// The configured dispatch policy for best-effort traffic.
     pub fn route(&self) -> RoutePolicy {
         self.route
+    }
+
+    /// Per-replica admission bound (the brownout controller's pressure
+    /// denominator is `queue_cap × replica_count`).
+    pub fn queue_cap(&self) -> usize {
+        self.queue_cap
     }
 
     /// Admitted-but-unfinished requests across the pool.
@@ -180,6 +284,13 @@ impl Router {
             .iter()
             .map(|r| r.gauges.completed.load(Ordering::Relaxed))
             .sum()
+    }
+
+    /// Test hook: register one shed without a wire request (brownout
+    /// pressure-path tests).
+    #[cfg(test)]
+    pub(crate) fn record_shed_for_test(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Requests shed by admission control.
@@ -308,6 +419,13 @@ impl Router {
                             -> DispatchOutcome {
         let slo = req.slo;
         let lanes = req.lanes().max(1);
+        // brownout stage 3: cap best-effort step schedules BEFORE the
+        // cache lookup, so a degraded request's key matches other
+        // degraded requests (and a full-fidelity cached result never
+        // masquerades as the degraded one, or vice versa)
+        if let Some(b) = &self.brownout {
+            req.steps = b.cap_steps(slo, req.steps);
+        }
         // cache-check before delegating to the routed path: an exact
         // hit answers immediately and never consumes queue capacity.
         // The hit is counted BEFORE its dispatch ticket, so a
@@ -368,10 +486,15 @@ impl Router {
         let rr = self.rr.fetch_add(1, Ordering::Relaxed);
         let order = candidate_order(self.route, slo, lanes, &snaps, rr);
         if order.is_empty() {
-            // nothing live is compatible — permanent for this pool
-            // shape, never "queue full"
             self.count_shed(slo);
-            return DispatchOutcome::ShedUnservable;
+            // distinguish "no compatible tier exists" (permanent) from
+            // "every compatible replica is breaker-open / awaiting
+            // respawn" (transient — the supervisor may revive them)
+            return if self.any_compatible(slo, lanes) {
+                DispatchOutcome::ShedCapacity
+            } else {
+                DispatchOutcome::ShedUnservable
+            };
         }
         let steps = req.steps;
         // stamp the admission instant once (one clock read, off the
@@ -610,6 +733,14 @@ impl Router {
                     ("resume_steps_saved",
                      Json::num(r.gauges.resume_steps_saved
                                .load(Ordering::Relaxed) as f64)),
+                    ("restarts",
+                     Json::num(r.gauges.restarts.load(Ordering::Relaxed)
+                               as f64)),
+                    ("breaker", Json::str(breaker_name(
+                        r.gauges.breaker.load(Ordering::Relaxed)))),
+                    ("heartbeat_us",
+                     Json::num(r.gauges.heartbeat_us
+                               .load(Ordering::Relaxed) as f64)),
                     ("finished", Json::Bool(s.finished)),
                 ])
             })
@@ -662,6 +793,20 @@ impl Router {
             ("cache_hits", Json::num(self.total_cache_hits() as f64)),
             ("warm_hits", Json::num(self.total_warm_hits() as f64)),
             ("rows_warmed", Json::num(self.total_rows_warmed() as f64)),
+            // capacity truthfulness: a panicked replica without a
+            // supervisor shrinks the pool — report it, don't hide it
+            ("provisioned", Json::num(self.replicas.len() as f64)),
+            ("live_replicas",
+             Json::num((self.replicas.len() - self.dead_replicas())
+                       as f64)),
+            ("dead_replicas", Json::num(self.dead_replicas() as f64)),
+            ("restarts", Json::num(self.total_restarts() as f64)),
+            ("breaker_trips",
+             Json::num(self.total_breaker_trips() as f64)),
+            ("write_timeouts",
+             Json::num(self.total_write_timeouts() as f64)),
+            ("brownout_stage",
+             Json::num(self.brownout_stage() as f64)),
             ("tiers", tiers),
         ];
         if let Some(cs) = self.cache_stats() {
@@ -771,6 +916,9 @@ impl Router {
                 h.gauges.migrated_out.load(Ordering::Relaxed);
             rep.migrated_in =
                 h.gauges.migrated_in.load(Ordering::Relaxed);
+            rep.restarts = h.gauges.restarts.load(Ordering::Relaxed);
+            rep.breaker_trips =
+                h.gauges.breaker_trips.load(Ordering::Relaxed);
         }
         PoolReport {
             replicas: reports,
@@ -825,8 +973,16 @@ pub fn lazy_cost(snap: &GaugeSnapshot) -> f64 {
 pub fn candidate_order(route: RoutePolicy, slo: Slo, lanes: usize,
                        snaps: &[GaugeSnapshot], rr: usize) -> Vec<usize> {
     let n = snaps.len();
+    // breaker-open (or down-awaiting-respawn) replicas are excluded
+    // like finished ones, but only here: the servability classifier
+    // still counts them, so their sheds report as transient capacity
+    // pressure rather than a permanent pool-shape mismatch
     let live: Vec<usize> = (0..n)
-        .filter(|&i| !snaps[i].finished && snaps[i].admits(slo, lanes))
+        .filter(|&i| {
+            !snaps[i].finished
+                && !snaps[i].breaker_open
+                && snaps[i].admits(slo, lanes)
+        })
         .collect();
     if slo == Slo::Besteffort {
         let mut idx = live;
@@ -912,6 +1068,7 @@ mod tests {
             pending_steps: steps,
             lazy_ratio: lazy,
             finished: false,
+            breaker_open: false,
             slo: Slo::Besteffort,
             max_batch: 8,
         }
@@ -1088,6 +1245,34 @@ mod tests {
         s[0].finished = true;
         assert!(candidate_order(RoutePolicy::Jsq, Slo::Latency, 1, &s, 0)
             .is_empty());
+    }
+
+    #[test]
+    fn breaker_open_replicas_leave_the_rotation_but_stay_servable() {
+        // an open breaker (or a down-awaiting-respawn slot) is excluded
+        // from candidates exactly like `finished` — its snapshot cost of
+        // 0 must not win jsq/lazy — but unlike `finished` the condition
+        // is transient, so the filter is a separate flag
+        let mut s =
+            vec![snap(0, 0, 0.0), snap(3, 60, 0.0), snap(1, 20, 0.0)];
+        s[0].breaker_open = true;
+        assert_eq!(order_be(RoutePolicy::Jsq, &s, 0), vec![2, 1]);
+        assert_eq!(order_be(RoutePolicy::RoundRobin, &s, 0), vec![1, 2]);
+        // every compatible replica tripped → no candidates at all (the
+        // dispatcher then sheds as CAPACITY, not unservable)
+        s[1].breaker_open = true;
+        s[2].breaker_open = true;
+        assert!(order_be(RoutePolicy::Lazy, &s, 0).is_empty());
+        // half-open probes are NOT excluded: the snapshot only raises
+        // the flag for the fully-open state
+        let g = super::super::replica::ReplicaGauges::default();
+        g.breaker.store(super::super::replica::BREAKER_HALF_OPEN,
+                        Ordering::Relaxed);
+        let tier = crate::coordinator::pool::replica::ReplicaTier::default();
+        assert!(!g.snapshot(&tier).breaker_open);
+        g.breaker.store(super::super::replica::BREAKER_OPEN,
+                        Ordering::Relaxed);
+        assert!(g.snapshot(&tier).breaker_open);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! gate instead — there skip decisions depend on who is co-batched
 //! (that is the waste being measured) while images stay deterministic.
 
+use crate::coordinator::pool::fault::{corrupt_snapshot, FaultSchedule};
 use crate::coordinator::pool::{EngineFactory, PoolEngine};
 use crate::coordinator::request::{Request, RequestResult, TrajectorySnapshot};
 use crate::coordinator::stats::{LayerStats, ServeStats};
@@ -47,6 +48,11 @@ pub struct SimSpec {
     /// skips on its own, and skips taken while the batch was not
     /// uniformly skippable count as recovered rows.
     pub coupled: bool,
+    /// Fault schedule this engine consults natively at every round
+    /// boundary (empty = the default no-op fast path). Compiled from a
+    /// [`crate::coordinator::pool::fault::FaultPlan`]; a respawned
+    /// engine built from the same spec relives the same timeline.
+    pub faults: FaultSchedule,
 }
 
 impl Default for SimSpec {
@@ -58,6 +64,7 @@ impl Default for SimSpec {
             work_per_module: 4_000,
             policy: "sim".to_string(),
             coupled: false,
+            faults: FaultSchedule::default(),
         }
     }
 }
@@ -112,6 +119,10 @@ pub struct SimEngine {
     /// Telemetry sink (disabled by default; a traced replica installs
     /// its own via [`PoolEngine::install_tracer`]).
     tracer: Tracer,
+    /// Brownout Γ boost in percentage points (stacked on
+    /// `spec.lazy_pct`, saturated at 95 so step 0's cold gate and a
+    /// sliver of executed rows always remain).
+    gamma_boost: u32,
 }
 
 impl SimEngine {
@@ -125,6 +136,7 @@ impl SimEngine {
             active: Vec::new(),
             next_id: 1,
             tracer: Tracer::disabled(),
+            gamma_boost: 0,
         }
     }
 
@@ -133,10 +145,16 @@ impl SimEngine {
         Box::new(move || Ok(Box::new(SimEngine::new(spec)) as Box<dyn PoolEngine>))
     }
 
+    /// The lazy target currently in force: the configured percentage
+    /// plus any brownout boost, saturated at 95.
+    fn effective_lazy_pct(&self) -> u32 {
+        (self.spec.lazy_pct + self.gamma_boost).min(95)
+    }
+
     /// Would the gates skip (step, module slot)? Pure lazy-target draw,
     /// before the cache gate.
     fn would_skip(&self, step: usize, k: usize) -> bool {
-        mix(step as u64, k as u64) % 100 < self.spec.lazy_pct as u64
+        mix(step as u64, k as u64) % 100 < self.effective_lazy_pct() as u64
     }
 
     /// Deterministic skip decision for (step, module slot). Step 0 never
@@ -251,6 +269,11 @@ impl PoolEngine for SimEngine {
     }
 
     fn evict_to_snapshot(&mut self, id: u64) -> Option<TrajectorySnapshot> {
+        if self.spec.faults.corrupting() {
+            // refuse *before* evicting: a corrupting transport must not
+            // silently drop a live trajectory out of the engine
+            return None;
+        }
         let idx = self.active.iter().position(|a| a.req.id == id)?;
         let a = self.active.remove(idx);
         Some(sim_snapshot(&a))
@@ -281,10 +304,15 @@ impl PoolEngine for SimEngine {
     }
 
     fn snapshot_request(&self, id: u64) -> Option<TrajectorySnapshot> {
-        self.active
+        let snap = self.active
             .iter()
             .find(|a| a.req.id == id)
-            .map(sim_snapshot)
+            .map(sim_snapshot)?;
+        if self.spec.faults.corrupting() {
+            // the stash refresh sees honest decode failures from here on
+            return corrupt_snapshot(&snap);
+        }
+        Some(snap)
     }
 
     fn active_count(&self) -> usize {
@@ -299,9 +327,24 @@ impl PoolEngine for SimEngine {
     }
 
     fn step_round(&mut self) -> Result<Vec<RequestResult>> {
+        // native fault injection, same semantics (and ordering: stall,
+        // panic, burst) as the FaultEngine wrapper — one branch per
+        // round when the schedule is empty
+        let rf = self.spec.faults.begin_round();
+        if rf.stall_ms > 0 {
+            std::thread::sleep(
+                std::time::Duration::from_millis(rf.stall_ms));
+        }
+        if rf.panic {
+            panic!("injected fault: panic at round {}",
+                   self.spec.faults.round());
+        }
+        if rf.burst {
+            return Ok(Vec::new());
+        }
         let t0 = Instant::now();
         let depth = self.spec.depth;
-        let gamma = self.spec.lazy_pct as f64 / 100.0;
+        let gamma = self.effective_lazy_pct() as f64 / 100.0;
         // a warm-started joiner (warm_until > 0) is not cold at step 0:
         // its lane caches were seeded at admission
         let any_cold = self
@@ -446,6 +489,10 @@ impl PoolEngine for SimEngine {
 
     fn install_tracer(&mut self, tracer: Tracer) {
         self.tracer = tracer;
+    }
+
+    fn set_gamma_boost(&mut self, boost: u32) {
+        self.gamma_boost = boost;
     }
 }
 
@@ -768,6 +815,78 @@ mod tests {
                     == cold.layer_stats.cold_denied_total(),
                 "warmed rows must exactly partition the cold denials");
         });
+    }
+
+    #[test]
+    fn native_faults_match_wrapper_semantics() {
+        use crate::coordinator::pool::FaultPlan;
+        let with_faults = |spec: &str| {
+            let mut e = SimEngine::new(SimSpec {
+                faults: FaultPlan::parse(spec).unwrap().for_replica(0),
+                ..SimSpec::fast()
+            });
+            e.submit(Request::new(6, 1, 3, 4));
+            e
+        };
+        // burst: zero progress, trajectory intact
+        let mut burst = with_faults("burst@1=2");
+        assert!(burst.step_round().unwrap().is_empty());
+        assert!(burst.step_round().unwrap().is_empty());
+        assert_eq!(burst.pending_steps(), 3, "burst makes zero progress");
+        for _ in 0..3 {
+            burst.step_round().unwrap();
+        }
+        assert_eq!(burst.active_count(), 0, "drains once the burst ends");
+        // panic: unwinds out of step_round at its round
+        let mut boom = with_faults("panic@2");
+        boom.step_round().unwrap();
+        assert!(std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| boom.step_round())).is_err());
+        // corruption: stash goes stale, evict refuses without loss
+        let mut rot = with_faults("corrupt@2");
+        rot.step_round().unwrap();
+        assert!(rot.snapshot_request(6).is_some(), "round 1 still clean");
+        rot.step_round().unwrap();
+        assert!(rot.snapshot_request(6).is_none());
+        assert!(rot.evict_to_snapshot(6).is_none());
+        assert_eq!(rot.active_count(), 1,
+                   "a refused evict must not lose the trajectory");
+    }
+
+    #[test]
+    fn gamma_boost_raises_observed_laziness_and_saturates() {
+        let run_with_boost = |boost: u32| {
+            let mut e = SimEngine::new(SimSpec {
+                lazy_pct: 40,
+                work_per_module: 0,
+                ..SimSpec::default()
+            });
+            e.set_gamma_boost(boost);
+            for s in 0..4 {
+                e.submit(Request::new(0, s, 30, s as u64));
+            }
+            run_all(&mut e);
+            e.layer_stats.overall_ratio()
+        };
+        let base = run_with_boost(0);
+        let boosted = run_with_boost(30);
+        assert!(boosted > base + 0.15,
+                "a 30-point boost must visibly raise Γ ({base} → {boosted})");
+        // the boost saturates: 90 + 50 caps at 95, never 100
+        let e = {
+            let mut e = SimEngine::new(SimSpec {
+                lazy_pct: 90,
+                ..SimSpec::fast()
+            });
+            e.set_gamma_boost(50);
+            e
+        };
+        assert_eq!(e.effective_lazy_pct(), 95);
+        // boost 0 restores the configured target exactly
+        let mut back = SimEngine::new(SimSpec::fast());
+        back.set_gamma_boost(20);
+        back.set_gamma_boost(0);
+        assert_eq!(back.effective_lazy_pct(), back.spec.lazy_pct);
     }
 
     #[test]

@@ -1,0 +1,538 @@
+//! Pool supervision: heartbeat-watched replica respawn with a restart
+//! budget, plus the per-replica circuit breaker.
+//!
+//! The serve loop ticks a [`Supervisor`] every few milliseconds. Each
+//! tick it walks the slots and drives two state machines off the live
+//! gauges:
+//!
+//! * **Respawn** — a supervised worker that dies (panic, step error,
+//!   engine-construction failure, poisoned stall) raises
+//!   `needs_respawn` and leaves its queue OPEN. The supervisor waits
+//!   out an exponential backoff (`backoff_base_ms · 2^restarts`), then
+//!   calls [`ReplicaHandle::respawn`] — same queue, same gauges, same
+//!   tier slot, so [`crate::coordinator::pool::steal::StealPeer`]
+//!   registrations and router candidate order stay valid without any
+//!   re-registration. Once `restart_budget` respawns are spent, the
+//!   next fault retires the slot for good
+//!   ([`ReplicaHandle::give_up`]), and the pool reports dead capacity
+//!   instead of flapping forever.
+//!
+//! * **Breaker** — `breaker_open_after` consecutive faults trip the
+//!   slot's breaker open (closed→open), removing it from the router's
+//!   candidate rotation while servability classification still counts
+//!   it (sheds report as transient capacity, not pool-shape mismatch).
+//!   After `breaker_probe_ms` the breaker half-opens (probe traffic
+//!   allowed); a fault while probing re-opens it, a healthy
+//!   `breaker_close_after_ms` closes it and clears the fault streak.
+//!   Every trip records a [`EventKind::BreakerTrip`] trace event and
+//!   bumps the `breaker_trips` gauge.
+//!
+//! Stalls are detected by the [`StallDetector`]: the worker bumps a
+//! heartbeat at every loop boundary, so a *busy* replica whose
+//! heartbeat stops advancing is wedged — but a legitimately long batch
+//! also goes quiet, so the threshold adapts to the largest
+//! inter-heartbeat gap observed while healthy (3× that gap, floored at
+//! `stall_after_ms`). A detected stall trips the breaker and poisons
+//! the worker ([`crate::coordinator::pool::ReplicaGauges::poisoned`]):
+//! threads cannot be killed, so the worker parks its residents into
+//! its own queue and exits for respawn at its next loop boundary.
+//!
+//! Everything here takes `&ReplicaHandle` through the router — the
+//! supervisor owns no replica state beyond its per-slot counters, so
+//! it composes with stealing, tiering, caching, and tracing untouched.
+
+use crate::coordinator::pool::cache::PoolCache;
+use crate::coordinator::pool::replica::{ReplicaHandle, BREAKER_CLOSED,
+                                        BREAKER_HALF_OPEN, BREAKER_OPEN};
+use crate::coordinator::pool::router::Router;
+use crate::coordinator::pool::steal::Rebalancer;
+use crate::coordinator::pool::RespawnFactory;
+use crate::obs::EventKind;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Supervision knobs (`lazydit serve --supervise on` uses the
+/// defaults; see docs/SERVING.md for the failure-modes cookbook).
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// Respawns allowed per slot before the supervisor gives up and
+    /// retires it (dead capacity, reported — not hidden).
+    pub restart_budget: u32,
+    /// Backoff before the first respawn, in ms; doubles per respawn
+    /// already spent on the slot.
+    pub backoff_base_ms: u64,
+    /// Heartbeat-silence floor (ms) before a busy replica counts as
+    /// stalled. The effective threshold is `max(stall_after_ms, 3 ×
+    /// largest healthy inter-heartbeat gap)` so long batches don't
+    /// false-positive.
+    pub stall_after_ms: u64,
+    /// Consecutive faults that trip the circuit breaker open.
+    pub breaker_open_after: u32,
+    /// Open → half-open cooldown (ms): how long a tripped slot sits
+    /// fully out of rotation before probe traffic is allowed.
+    pub breaker_probe_ms: u64,
+    /// Healthy half-open interval (ms) that closes the breaker and
+    /// clears the consecutive-fault streak.
+    pub breaker_close_after_ms: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            restart_budget: 3,
+            backoff_base_ms: 50,
+            stall_after_ms: 500,
+            breaker_open_after: 2,
+            breaker_probe_ms: 250,
+            breaker_close_after_ms: 500,
+        }
+    }
+}
+
+/// Heartbeat-stall detection for one replica, separable from the
+/// supervisor so the stall-vs-long-batch distinction is unit testable
+/// with manual clock ticks. Feed it `(heartbeat, busy, now_us)` every
+/// supervisor tick; it answers "is this replica wedged?".
+#[derive(Debug, Clone)]
+pub struct StallDetector {
+    stall_after_us: u64,
+    last_hb: u64,
+    last_advance_us: u64,
+    max_gap_us: u64,
+    primed: bool,
+}
+
+impl StallDetector {
+    /// A detector with the given silence floor (ms).
+    pub fn new(stall_after_ms: u64) -> StallDetector {
+        StallDetector {
+            stall_after_us: stall_after_ms.max(1) * 1000,
+            last_hb: 0,
+            last_advance_us: 0,
+            max_gap_us: 0,
+            primed: false,
+        }
+    }
+
+    /// Observe one sample. Returns `true` when the replica is busy but
+    /// its heartbeat has been silent for longer than the adaptive
+    /// threshold — `max(stall_after, 3 × largest healthy gap)` — so a
+    /// replica whose batches legitimately take 200 ms is not declared
+    /// dead after 500 ms of one more long batch.
+    pub fn observe(&mut self, hb: u64, busy: bool, now_us: u64) -> bool {
+        if !self.primed {
+            self.primed = true;
+            self.last_hb = hb;
+            self.last_advance_us = now_us;
+            return false;
+        }
+        if hb != self.last_hb {
+            let gap = now_us.saturating_sub(self.last_advance_us);
+            if gap > self.max_gap_us {
+                self.max_gap_us = gap;
+            }
+            self.last_hb = hb;
+            self.last_advance_us = now_us;
+            return false;
+        }
+        if !busy {
+            // an idle worker still heartbeats every poll; a quiet one
+            // with nothing admitted has nothing to be wedged ON
+            return false;
+        }
+        let threshold = self.stall_after_us.max(3 * self.max_gap_us);
+        now_us.saturating_sub(self.last_advance_us) > threshold
+    }
+
+    /// Re-arm after a respawn or a detected stall: the silence clock
+    /// restarts now, the learned gap history is kept.
+    pub fn reset(&mut self, now_us: u64) {
+        self.last_advance_us = now_us;
+        self.primed = true;
+    }
+
+    /// The adaptive stall threshold currently in effect (µs).
+    pub fn threshold_us(&self) -> u64 {
+        self.stall_after_us.max(3 * self.max_gap_us)
+    }
+}
+
+/// Per-slot supervision state (counters the gauges don't own).
+#[derive(Debug)]
+struct Slot {
+    restarts_used: u32,
+    consec_faults: u32,
+    /// Epoch-µs of the pending respawn; 0 = none scheduled.
+    retry_at_us: u64,
+    stall: StallDetector,
+    breaker_since_us: u64,
+    half_open_since_us: u64,
+    gave_up: bool,
+}
+
+/// The pool supervisor. Owns one [`RespawnFactory`] and one [`Slot`]
+/// per replica; the serve loop calls [`tick`](Self::tick) on a short
+/// cadence with the current epoch-µs clock.
+pub struct Supervisor {
+    router: Arc<Router>,
+    factories: Vec<RespawnFactory>,
+    steal: Option<Arc<Rebalancer>>,
+    cache: Option<Arc<PoolCache>>,
+    cfg: SupervisorConfig,
+    slots: Vec<Slot>,
+}
+
+impl Supervisor {
+    /// Supervise `router`'s pool. `factories[i]` rebuilds replica `i`'s
+    /// engine on respawn — pass the SAME rebalancer/cache the replicas
+    /// were spawned with, so a respawned incarnation steals and caches
+    /// exactly like its predecessor.
+    pub fn new(router: Arc<Router>, factories: Vec<RespawnFactory>,
+               steal: Option<Arc<Rebalancer>>,
+               cache: Option<Arc<PoolCache>>,
+               cfg: SupervisorConfig) -> Supervisor {
+        assert_eq!(factories.len(), router.replica_count(),
+                   "one respawn factory per replica");
+        let slots = (0..factories.len())
+            .map(|_| Slot {
+                restarts_used: 0,
+                consec_faults: 0,
+                retry_at_us: 0,
+                stall: StallDetector::new(cfg.stall_after_ms),
+                breaker_since_us: 0,
+                half_open_since_us: 0,
+                gave_up: false,
+            })
+            .collect();
+        Supervisor { router, factories, steal, cache, cfg, slots }
+    }
+
+    /// The supervised router (serve-loop convenience).
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    /// Slots permanently retired (budget exhausted or respawn failed).
+    pub fn given_up(&self) -> usize {
+        self.slots.iter().filter(|s| s.gave_up).count()
+    }
+
+    /// One supervision pass at `now_us` (epoch µs). Walks every slot:
+    /// schedules/executes respawns with exponential backoff, retires
+    /// budget-exhausted slots, detects stalls, and drives the breaker
+    /// open → half-open → closed recovery.
+    pub fn tick(&mut self, now_us: u64) {
+        for i in 0..self.slots.len() {
+            let Some(h) = self.router.replica(i) else { continue };
+            let slot = &mut self.slots[i];
+            if slot.gave_up || h.gauges.finished.load(Ordering::Acquire) {
+                continue;
+            }
+            if h.needs_respawn() {
+                if slot.retry_at_us == 0 {
+                    // a fresh fault: count it, maybe trip the breaker,
+                    // and either schedule the backed-off respawn or
+                    // retire the slot if the budget is spent
+                    slot.consec_faults += 1;
+                    if slot.consec_faults >= self.cfg.breaker_open_after {
+                        trip_open(&self.router, h, slot, now_us);
+                    }
+                    if slot.restarts_used >= self.cfg.restart_budget {
+                        log::warn!("replica {i}: restart budget \
+                                    exhausted, retiring the slot");
+                        h.give_up("restart budget exhausted");
+                        slot.gave_up = true;
+                        continue;
+                    }
+                    let backoff_ms = self.cfg.backoff_base_ms
+                        << slot.restarts_used.min(10);
+                    slot.retry_at_us = now_us + backoff_ms * 1000;
+                } else if now_us >= slot.retry_at_us {
+                    slot.retry_at_us = 0;
+                    slot.restarts_used += 1;
+                    if h.respawn(&self.factories[i], self.steal.clone(),
+                                 self.cache.clone())
+                        .is_err()
+                    {
+                        h.give_up("respawn failed");
+                        slot.gave_up = true;
+                        continue;
+                    }
+                    // a respawned flapper rejoins as a half-open probe,
+                    // not at full dispatch weight
+                    if h.gauges.breaker.load(Ordering::Relaxed)
+                        == BREAKER_OPEN
+                    {
+                        h.gauges
+                            .breaker
+                            .store(BREAKER_HALF_OPEN, Ordering::Relaxed);
+                        slot.half_open_since_us = now_us;
+                    }
+                    slot.stall.reset(now_us);
+                }
+                continue;
+            }
+            // alive: watch the heartbeat
+            let busy = h.gauges.queued.load(Ordering::Relaxed) > 0;
+            let hb = h.gauges.heartbeat.load(Ordering::Relaxed);
+            if slot.stall.observe(hb, busy, now_us) {
+                log::warn!("replica {i}: heartbeat stalled \
+                            (threshold {} ms), poisoning",
+                           slot.stall.threshold_us() / 1000);
+                slot.consec_faults += 1;
+                trip_open(&self.router, h, slot, now_us);
+                // cooperative escape hatch: the worker parks its
+                // residents and exits for respawn when (if) its engine
+                // returns from the wedged round
+                h.gauges.poisoned.store(true, Ordering::Release);
+                slot.stall.reset(now_us);
+                continue;
+            }
+            // breaker recovery: open → half-open probe → closed
+            match h.gauges.breaker.load(Ordering::Relaxed) {
+                s if s == BREAKER_OPEN => {
+                    if now_us.saturating_sub(slot.breaker_since_us)
+                        >= self.cfg.breaker_probe_ms * 1000
+                    {
+                        h.gauges
+                            .breaker
+                            .store(BREAKER_HALF_OPEN, Ordering::Relaxed);
+                        slot.half_open_since_us = now_us;
+                    }
+                }
+                s if s == BREAKER_HALF_OPEN => {
+                    if now_us.saturating_sub(slot.half_open_since_us)
+                        >= self.cfg.breaker_close_after_ms * 1000
+                    {
+                        h.gauges
+                            .breaker
+                            .store(BREAKER_CLOSED, Ordering::Relaxed);
+                        slot.consec_faults = 0;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Trip `h`'s breaker open (idempotent): gauge state, trip counter,
+/// trace event, transition stamp.
+fn trip_open(router: &Router, h: &ReplicaHandle, slot: &mut Slot,
+             now_us: u64) {
+    if h.gauges.breaker.load(Ordering::Relaxed) == BREAKER_OPEN {
+        return;
+    }
+    h.gauges.breaker.store(BREAKER_OPEN, Ordering::Relaxed);
+    let trips = h.gauges.breaker_trips.fetch_add(1, Ordering::Relaxed) + 1;
+    slot.breaker_since_us = now_us;
+    router.record_pool_event(EventKind::BreakerTrip, h.id as u64, trips);
+    log::warn!("replica {}: circuit breaker OPEN (trip {trips})", h.id);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RoutePolicy;
+    use crate::coordinator::pool::replica::ReplicaTier;
+    use crate::coordinator::pool::sim::{SimEngine, SimSpec};
+    use crate::coordinator::pool::{PoolEngine, PoolJob};
+    use crate::coordinator::request::{Request, RequestResult};
+    use crate::obs::{epoch_us, Tracer};
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::mpsc;
+
+    #[test]
+    fn stall_detector_distinguishes_wedge_from_long_batch() {
+        let mut d = StallDetector::new(500);
+        let ms = |m: u64| m * 1000;
+        // healthy history: heartbeats 200 ms apart while busy — the
+        // detector learns this replica legitimately runs long batches
+        let mut now = ms(1000);
+        for hb in 1..=5u64 {
+            assert!(!d.observe(hb, true, now));
+            now += ms(200);
+        }
+        assert_eq!(d.threshold_us(), ms(600), "3 × observed 200 ms gap");
+        // one more long batch: 550 ms of silence is within 3× history —
+        // a fixed 500 ms cutoff would have false-positived here
+        assert!(!d.observe(5, true, now + ms(550) - ms(200)));
+        // genuine wedge: silence past the adaptive threshold
+        assert!(d.observe(5, true, now + ms(700) - ms(200)));
+        // idle silence is never a stall, no matter how long
+        let mut quiet = StallDetector::new(500);
+        quiet.observe(1, false, ms(0));
+        assert!(!quiet.observe(1, false, ms(60_000)));
+        // with no long-batch history the floor applies
+        let mut fresh = StallDetector::new(500);
+        fresh.observe(1, true, ms(0));
+        assert!(!fresh.observe(1, true, ms(400)));
+        assert!(fresh.observe(1, true, ms(600)));
+    }
+
+    /// One-replica supervised pool whose factory is scripted: the first
+    /// `fail_first` constructions fail, the rest are healthy SimEngines.
+    fn flaky_pool(fail_first: usize, cfg: SupervisorConfig)
+                  -> (Arc<Router>, Supervisor) {
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let factory: RespawnFactory = Arc::new(move || {
+            if attempts.fetch_add(1, Ordering::SeqCst) < fail_first {
+                anyhow::bail!("flaky artifacts");
+            }
+            (SimEngine::factory(SimSpec::fast()))()
+        });
+        let h = crate::coordinator::pool::ReplicaHandle::spawn_supervised(
+            0, 16, &factory, None, ReplicaTier::default(),
+            Tracer::disabled(), None)
+            .unwrap();
+        let router = Arc::new(Router::new(vec![h], RoutePolicy::Jsq, 64));
+        let sup = Supervisor::new(router.clone(), vec![factory], None,
+                                  None, cfg);
+        (router, sup)
+    }
+
+    /// Tick the supervisor on the real clock until `done` or timeout.
+    fn tick_until(sup: &mut Supervisor,
+                  mut done: impl FnMut(&Router) -> bool) {
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(10);
+        while !done(sup.router()) {
+            assert!(std::time::Instant::now() < deadline,
+                    "supervisor never converged");
+            sup.tick(epoch_us());
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn restart_budget_exhaustion_retires_the_slot() {
+        let cfg = SupervisorConfig {
+            restart_budget: 2,
+            backoff_base_ms: 1,
+            breaker_open_after: 2,
+            ..SupervisorConfig::default()
+        };
+        // the factory NEVER recovers: every incarnation dies at build
+        let (router, mut sup) = flaky_pool(usize::MAX, cfg);
+        tick_until(&mut sup, |r| r.dead_replicas() == 1);
+        assert_eq!(sup.given_up(), 1);
+        let h = router.replica(0).unwrap();
+        assert_eq!(h.gauges.restarts.load(Ordering::Relaxed), 2,
+                   "exactly the budget was spent");
+        assert!(h.gauges.breaker_trips.load(Ordering::Relaxed) >= 1,
+                "two consecutive faults tripped the breaker");
+        let rep = h.join_report();
+        assert_eq!(rep.error.as_deref(), Some("restart budget exhausted"));
+        assert_eq!(rep.restarts, 2);
+    }
+
+    #[test]
+    fn breaker_round_trips_closed_open_half_open_closed() {
+        let cfg = SupervisorConfig {
+            restart_budget: 5,
+            backoff_base_ms: 1,
+            breaker_open_after: 2,
+            breaker_probe_ms: 5,
+            breaker_close_after_ms: 5,
+            ..SupervisorConfig::default()
+        };
+        // two construction failures, then healthy forever
+        let (router, mut sup) = flaky_pool(2, cfg);
+        let g = &router.replica(0).unwrap().gauges;
+        assert_eq!(g.breaker.load(Ordering::Relaxed), BREAKER_CLOSED);
+        // converge: the breaker must trip open on the second fault...
+        tick_until(&mut sup, |r| {
+            r.replica(0).unwrap()
+                .gauges.breaker_trips.load(Ordering::Relaxed) >= 1
+        });
+        // ...and eventually close again once the slot turns healthy
+        tick_until(&mut sup, |r| {
+            let g = &r.replica(0).unwrap().gauges;
+            !r.replica(0).unwrap().needs_respawn()
+                && g.breaker.load(Ordering::Relaxed) == BREAKER_CLOSED
+                && g.restarts.load(Ordering::Relaxed) == 2
+        });
+        // the recovered slot actually serves
+        let h = router.replica(0).unwrap();
+        let (tx, rx) = mpsc::channel();
+        h.gauges.queued.fetch_add(1, Ordering::Relaxed);
+        h.gauges.pending_steps.fetch_add(4, Ordering::Relaxed);
+        h.try_send(PoolJob::fresh(Request::new(0, 3, 4, 9), tx, 0))
+            .map_err(|_| "send")
+            .unwrap();
+        let res: RequestResult = rx.recv().unwrap();
+        assert_eq!(res.steps, 4);
+        assert_eq!(sup.given_up(), 0);
+    }
+
+    #[test]
+    fn respawned_replica_resumes_bit_identically() {
+        // the PR 7 crash-resume propcheck, extended across respawns: a
+        // supervised 1-replica pool whose engine panics every 3rd round
+        // finishes the trajectory over several incarnations (own-queue
+        // re-queue → respawn → resume at cursor), and the image must be
+        // bit-identical to an uninterrupted run — laziness decisions,
+        // latent, lane caches all carried by the snapshots
+        let spec = SimSpec::fast();
+        let reference = {
+            let mut e = SimEngine::new(spec.clone());
+            let (tx, rx) = mpsc::channel();
+            e.submit(Request::new(1, 3, 6, 42));
+            loop {
+                let done = e.step_round().unwrap();
+                if let Some(r) = done.into_iter().next() {
+                    tx.send(r).unwrap();
+                    break;
+                }
+            }
+            rx.recv().unwrap()
+        };
+        let panicky = SimSpec {
+            faults: crate::coordinator::pool::FaultPlan::parse("panic@3")
+                .unwrap()
+                .for_replica(0),
+            ..spec
+        };
+        let factory: RespawnFactory = Arc::new(move || {
+            // every incarnation gets a FRESH schedule: it panics at its
+            // own 3rd round, so the trajectory advances 2 steps per life
+            Ok(Box::new(SimEngine::new(panicky.clone()))
+               as Box<dyn PoolEngine>)
+        });
+        let h = crate::coordinator::pool::ReplicaHandle::spawn_supervised(
+            0, 16, &factory, None, ReplicaTier::default(),
+            Tracer::disabled(), None)
+            .unwrap();
+        let router = Arc::new(Router::new(vec![h], RoutePolicy::Jsq, 64));
+        let cfg = SupervisorConfig {
+            restart_budget: 10,
+            backoff_base_ms: 1,
+            ..SupervisorConfig::default()
+        };
+        let mut sup = Supervisor::new(router.clone(), vec![factory],
+                                      None, None, cfg);
+        let (tx, rx) = mpsc::channel();
+        assert!(router.dispatch(Request::new(0, 3, 6, 42), tx));
+        let res = loop {
+            match rx.try_recv() {
+                Ok(r) => break r,
+                Err(mpsc::TryRecvError::Empty) => {
+                    sup.tick(epoch_us());
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(2));
+                }
+                Err(e) => panic!("trajectory lost across respawns: {e}"),
+            }
+        };
+        let g = &router.replica(0).unwrap().gauges;
+        assert!(g.restarts.load(Ordering::Relaxed) >= 1,
+                "the engine must actually have died at least once");
+        assert_eq!(res.steps, 6);
+        assert_eq!(res.image.data(), reference.image.data(),
+                   "resume across respawns must be bit-identical");
+        assert_eq!(res.per_module_skip, reference.per_module_skip,
+                   "per-boundary skip decisions must survive respawns");
+        assert_eq!(res.lazy_ratio, reference.lazy_ratio);
+        assert_eq!(router.total_forfeited(), 0, "nothing forfeited");
+    }
+}

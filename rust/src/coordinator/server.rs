@@ -30,8 +30,9 @@
 
 use crate::config::Slo;
 use crate::coordinator::engine::Engine;
-use crate::coordinator::pool::{PoolReport, Router};
+use crate::coordinator::pool::{Brownout, PoolReport, Router, Supervisor};
 use crate::coordinator::request::{Request, RequestResult};
+use crate::obs::epoch_us;
 use crate::util::json::Json;
 use crate::util::threadpool::BoundedQueue;
 use anyhow::{bail, Context, Result};
@@ -39,6 +40,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 /// A queued request with its response channel.
 pub struct Pending {
@@ -106,7 +108,17 @@ pub fn parse_request_line(line: &str) -> Result<Request> {
 
 /// Format a response line.
 pub fn format_response(res: &RequestResult) -> String {
-    Json::obj(vec![
+    format_response_staged(res, 0)
+}
+
+/// [`format_response`] with the pool's brownout stage echoed. Stage 0
+/// (normal operation) emits no extra field, so healthy-pool responses
+/// are byte-identical to the pre-brownout wire format and legacy
+/// clients never see the key; degraded responses carry
+/// `"brownout_stage"` so clients know their result may have been
+/// produced under widened warm-horizon / boosted-laziness dials.
+pub fn format_response_staged(res: &RequestResult, stage: usize) -> String {
+    let mut fields = vec![
         ("id", Json::num(res.id as f64)),
         ("steps", Json::num(res.steps as f64)),
         ("label", Json::num(res.class_label as f64)),
@@ -115,8 +127,11 @@ pub fn format_response(res: &RequestResult) -> String {
         ("attn_lazy", Json::num(res.attn_lazy_ratio)),
         ("ffn_lazy", Json::num(res.ffn_lazy_ratio)),
         ("slo", Json::str(res.slo.name())),
-    ])
-    .to_string()
+    ];
+    if stage > 0 {
+        fields.push(("brownout_stage", Json::num(stage as f64)));
+    }
+    Json::obj(fields).to_string()
 }
 
 /// Structured error line (escaping-safe: built through the serializer,
@@ -137,50 +152,110 @@ pub const UNSERVABLE_MSG: &str =
 /// Chrome trace file at shutdown).
 pub const TRACE_MAX_EVENTS: usize = 512;
 
+/// Slow-client guard: the most time one response write may block the
+/// connection thread. A client that opens a connection, submits a
+/// request, and then never drains its socket would otherwise pin the
+/// thread in `write_all` forever once the kernel send buffer fills —
+/// with the completed result already consumed from the channel, that
+/// stalls nothing pool-side, but it leaks a thread per such client.
+/// Timed-out writes drop the connection and bump
+/// [`Router::total_write_timeouts`].
+pub const RESPONSE_WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// How one non-empty inbound line is interpreted, resolved before any
+/// back-end work. Bare verbs are exact matches (post-trim), so they
+/// can never collide with a JSON request object.
+#[derive(Debug, PartialEq, Eq)]
+enum LineVerb<'a> {
+    /// `STATS` — reply with the live pool gauges.
+    Stats,
+    /// `TRACE` — reply with recent telemetry ring events.
+    Trace,
+    /// Anything else: a candidate request object for
+    /// [`parse_request_line`].
+    Request(&'a str),
+}
+
+/// Resolve a trimmed, non-empty line to its verb. Total over arbitrary
+/// input — fuzzed below along with [`parse_request_line`], because a
+/// panic here would take a connection thread down with a client-chosen
+/// payload.
+fn classify_line(trimmed: &str) -> LineVerb<'_> {
+    match trimmed {
+        "STATS" => LineVerb::Stats,
+        "TRACE" => LineVerb::Trace,
+        other => LineVerb::Request(other),
+    }
+}
+
 /// Shared per-connection read loop. `submit` hands an admitted request
 /// plus its response channel to a back-end; `Err(msg)` means shed, with
 /// `msg` telling the client why (`queue full` for transient overload,
-/// [`UNSERVABLE_MSG`] for a permanent pool-shape mismatch). `stats`
-/// answers the `STATS` verb and `trace` the `TRACE` verb — bare
-/// non-JSON lines, so they can never collide with a request object —
-/// each with one JSON line (live gauges / recent ring events).
-fn serve_lines<F, S, T>(stream: TcpStream, submit: F, stats: S, trace: T)
+/// [`UNSERVABLE_MSG`] for a permanent pool-shape mismatch). `respond`
+/// formats a completed result (the pool back-end stamps the live
+/// brownout stage here). `stats` answers the `STATS` verb and `trace`
+/// the `TRACE` verb — bare non-JSON lines, so they can never collide
+/// with a request object — each with one JSON line (live gauges /
+/// recent ring events). `write_timeout` bounds each response write
+/// (slow-client guard); a timed-out write calls `on_write_timeout` and
+/// drops the connection.
+fn serve_lines<F, R, S, T, W>(stream: TcpStream,
+                              write_timeout: Option<Duration>, submit: F,
+                              respond: R, stats: S, trace: T,
+                              on_write_timeout: W)
 where
     F: Fn(Request, mpsc::Sender<RequestResult>) -> Result<(), &'static str>,
+    R: Fn(&RequestResult) -> String,
     S: Fn() -> String,
     T: Fn() -> String,
+    W: Fn(),
 {
     let peer = stream.peer_addr().ok();
     let reader = BufReader::new(stream.try_clone().expect("clone stream"));
     let mut writer = stream;
+    if write_timeout.is_some() {
+        // a failed setsockopt leaves the write unbounded — log loudly
+        // rather than pretending the guard is armed
+        if let Err(e) = writer.set_write_timeout(write_timeout) {
+            log::warn!("slow-client guard disarmed for {peer:?}: {e}");
+        }
+    }
     for line in reader.lines() {
         let Ok(line) = line else { break };
         let trimmed = line.trim();
         if trimmed.is_empty() {
             continue;
         }
-        let reply = if trimmed == "STATS" {
-            stats()
-        } else if trimmed == "TRACE" {
-            trace()
-        } else {
-            match parse_request_line(trimmed) {
+        let reply = match classify_line(trimmed) {
+            LineVerb::Stats => stats(),
+            LineVerb::Trace => trace(),
+            LineVerb::Request(raw) => match parse_request_line(raw) {
                 Ok(req) => {
                     let (tx, rx) = mpsc::channel();
                     match submit(req, tx) {
                         Ok(()) => match rx.recv() {
-                            Ok(res) => format_response(&res),
+                            Ok(res) => respond(&res),
                             Err(_) => error_line("engine stopped"),
                         },
                         Err(msg) => error_line(msg),
                     }
                 }
                 Err(e) => error_line(&format!("{e:#}")),
-            }
+            },
         };
-        if writer.write_all(reply.as_bytes()).is_err()
-            || writer.write_all(b"\n").is_err()
-        {
+        let wrote = writer
+            .write_all(reply.as_bytes())
+            .and_then(|()| writer.write_all(b"\n"));
+        if let Err(e) = wrote {
+            // SO_SNDTIMEO surfaces as TimedOut or WouldBlock depending
+            // on platform; both mean the client stopped draining
+            if matches!(e.kind(), std::io::ErrorKind::TimedOut
+                                  | std::io::ErrorKind::WouldBlock)
+            {
+                log::warn!("response write to {peer:?} timed out — \
+                            dropping slow client");
+                on_write_timeout();
+            }
             break;
         }
         let _ = writer.flush();
@@ -207,10 +282,12 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> 
                     std::thread::spawn(move || {
                         serve_lines(
                             stream,
+                            Some(RESPONSE_WRITE_TIMEOUT),
                             move |req, tx| {
                                 q3.try_push(Pending { req, respond: tx })
                                     .map_err(|_| "queue full")
                             },
+                            format_response,
                             // live gauges and trace rings need the pool
                             // router; this legacy single-engine loop
                             // (library use — the CLI always runs the
@@ -219,6 +296,8 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> 
                                 "STATS needs the replica-pool back-end"),
                             || error_line(
                                 "TRACE needs the replica-pool back-end"),
+                            // no router, so timeouts are log-only here
+                            || {},
                         )
                     });
                 }
@@ -273,7 +352,7 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> 
 /// errors are in the returned report.
 pub fn serve_pool(router: Router, addr: &str,
                   max_requests: usize) -> Result<PoolReport> {
-    serve_pool_shared(Arc::new(router), addr, max_requests, 0)
+    serve_pool_shared(Arc::new(router), addr, max_requests, 0, None, None)
 }
 
 /// [`serve_pool`] over a shared router, with an optional forced
@@ -287,9 +366,20 @@ pub fn serve_pool(router: Router, addr: &str,
 /// its own `Arc` clone, so post-shutdown ledger counters
 /// ([`Router::total_dispatched`] etc.) stay readable after the report
 /// is returned.
+///
+/// When a [`Supervisor`] is passed it is ticked every poll interval:
+/// panicked or wedged replicas are respawned into their slots (same
+/// queue identity, so steal registrations stay valid) under an
+/// exponential-backoff restart budget. When a [`Brownout`] controller
+/// is passed it is ticked on the same cadence, stepping the pool
+/// through degradation stages under sustained backlog or shed
+/// pressure; the live stage is stamped on every response line
+/// (`"brownout_stage"`, stage > 0 only).
 pub fn serve_pool_shared(router: Arc<Router>, addr: &str,
-                         max_requests: usize,
-                         drain_after: usize) -> Result<PoolReport> {
+                         max_requests: usize, drain_after: usize,
+                         mut supervisor: Option<Supervisor>,
+                         brownout: Option<Arc<Brownout>>)
+                         -> Result<PoolReport> {
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("binding {addr}"))?;
     listener.set_nonblocking(true)?;
@@ -309,9 +399,12 @@ pub fn serve_pool_shared(router: Arc<Router>, addr: &str,
                     let r3 = r2.clone();
                     let r4 = r2.clone();
                     let r5 = r2.clone();
+                    let r6 = r2.clone();
+                    let r7 = r2.clone();
                     std::thread::spawn(move || {
                         serve_lines(
                             stream,
+                            Some(RESPONSE_WRITE_TIMEOUT),
                             move |req, tx| {
                                 use crate::coordinator::pool::DispatchOutcome;
                                 match r3.dispatch_outcome(req, tx) {
@@ -328,8 +421,14 @@ pub fn serve_pool_shared(router: Arc<Router>, addr: &str,
                                     }
                                 }
                             },
+                            // stamp the stage at response time, not
+                            // admission time: the client learns the
+                            // conditions its result was produced under
+                            move |res| format_response_staged(
+                                res, r6.brownout_stage()),
                             move || r4.stats_json(),
                             move || r5.trace_json(TRACE_MAX_EVENTS),
+                            move || r7.note_write_timeout(),
                         )
                     });
                 }
@@ -353,10 +452,22 @@ pub fn serve_pool_shared(router: Arc<Router>, addr: &str,
         if stop.load(Ordering::Relaxed) {
             break; // acceptor hit a fatal error
         }
+        if let Some(sup) = supervisor.as_mut() {
+            sup.tick(epoch_us());
+        }
+        if let Some(b) = &brownout {
+            b.tick(&router);
+        }
         // cache hits count toward the stop bound: each one answered a
-        // client even though no replica completed anything for it
+        // client even though no replica completed anything for it.
+        // Forfeits count too — a forfeited request's client got an
+        // "engine stopped" error, so that ledger entry is resolved and
+        // will never become a completion; without this term a panic
+        // that forfeits in-flight work leaves the bound unreachable
+        // and the loop hangs forever
         if max_requests > 0
             && router.total_completed() + router.total_cache_hits()
+                + router.total_forfeited()
                 >= max_requests as u64
         {
             break;
@@ -498,6 +609,99 @@ mod tests {
         assert!((j.req("lazy_ratio").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-9);
         // the SLO class is echoed so clients can verify tier handling
         assert_eq!(j.req("slo").unwrap().as_str().unwrap(), "latency");
+    }
+
+    #[test]
+    fn brownout_stage_is_stamped_only_when_degraded() {
+        let res = RequestResult {
+            id: 9,
+            class_label: 1,
+            steps: 8,
+            slo: Slo::Besteffort,
+            image: Tensor::zeros(&[1]),
+            lazy_ratio: 0.2,
+            attn_lazy_ratio: 0.2,
+            ffn_lazy_ratio: 0.2,
+            latency: Duration::from_millis(5),
+            per_module_skip: vec![],
+        };
+        // stage 0 is byte-identical to the legacy wire format
+        assert_eq!(format_response_staged(&res, 0), format_response(&res));
+        assert!(!format_response(&res).contains("brownout_stage"));
+        let degraded = format_response_staged(&res, 2);
+        let j = Json::parse(&degraded).unwrap();
+        assert_eq!(j.req("brownout_stage").unwrap().as_usize().unwrap(), 2);
+        // the rest of the payload is unchanged by the stamp
+        assert_eq!(j.req("id").unwrap().as_usize().unwrap(), 9);
+    }
+
+    #[test]
+    fn verbs_resolve_exactly_and_only_exactly() {
+        assert_eq!(classify_line("STATS"), LineVerb::Stats);
+        assert_eq!(classify_line("TRACE"), LineVerb::Trace);
+        // near-misses are requests (and then structured parse errors),
+        // never silently treated as verbs
+        for miss in ["stats", "STATSS", "STATS X", "TRACE{", "TRACERT",
+                     "", "S", "статистика"] {
+            assert!(matches!(classify_line(miss), LineVerb::Request(_)),
+                    "{miss:?}");
+        }
+    }
+
+    #[test]
+    fn wire_front_end_never_panics_on_arbitrary_bytes() {
+        use crate::util::propcheck::propcheck;
+        // drive the exact per-line path a connection thread runs (verb
+        // resolution, then request parse) over adversarial input; the
+        // property is totality — a panic here would let a client kill
+        // connection threads with a chosen payload
+        let drive = |line: &str| {
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                return;
+            }
+            match classify_line(trimmed) {
+                LineVerb::Stats | LineVerb::Trace => {}
+                LineVerb::Request(raw) => {
+                    if let Err(e) = parse_request_line(raw) {
+                        // the error must also format into a valid
+                        // structured line (it goes on the wire)
+                        let s = error_line(&format!("{e:#}"));
+                        assert!(Json::parse(&s).is_ok(), "{s}");
+                    }
+                }
+            }
+        };
+        const VALID: &str = r#"{"label": 3, "steps": 12, "seed": 9, "cfg_scale": 1.5, "slo": "latency"}"#;
+        propcheck(150, |g| {
+            // raw garbage: random bytes, decoded the way a reader
+            // would have to before reaching the parser
+            let n = g.usize_in(0, 80);
+            let bytes: Vec<u8> = (0..n).map(|_| g.u64() as u8).collect();
+            drive(&String::from_utf8_lossy(&bytes));
+            // mutations of a well-formed request line: single byte
+            // stomp, truncation at a random cut, and a spliced
+            // duplicate region — shapes that stay "almost JSON"
+            let good = VALID.as_bytes();
+            let mut m = good.to_vec();
+            let i = g.usize_in(0, m.len() - 1);
+            m[i] = g.u64() as u8;
+            drive(&String::from_utf8_lossy(&m));
+            drive(&String::from_utf8_lossy(
+                &good[..g.usize_in(0, good.len())]));
+            let (a, b) = (g.usize_in(0, good.len() - 1),
+                          g.usize_in(0, good.len() - 1));
+            let (lo, hi) = (a.min(b), a.max(b));
+            let mut m = good.to_vec();
+            m.extend_from_slice(&good[lo..hi]);
+            drive(&String::from_utf8_lossy(&m));
+            // verb-adjacent lines: prefixes/suffixes of the bare verbs
+            let verb = *g.choose(&["STATS", "TRACE"]);
+            let cut = g.usize_in(0, verb.len());
+            drive(&verb[..cut]);
+            drive(&format!("{verb}{}", g.u64()));
+            drive(&format!("  {verb}\t"));
+        });
     }
 
     #[test]

@@ -89,6 +89,25 @@ fn event_args(ev: &TraceEvent) -> Json {
                 ("remaining_steps", Json::num(remaining as f64)),
             ])
         }
+        EventKind::CacheHit => Json::obj(vec![
+            ("id", Json::num(ev.kind_id as f64)),
+            ("steps_saved", Json::num(ev.arg as f64)),
+        ]),
+        EventKind::Brownout => {
+            let (from, to) = unpack_pair(ev.arg);
+            Json::obj(vec![
+                ("from_stage", Json::num(from as f64)),
+                ("to_stage", Json::num(to as f64)),
+            ])
+        }
+        EventKind::Respawn => Json::obj(vec![
+            ("replica", Json::num(ev.kind_id as f64)),
+            ("restarts", Json::num(ev.arg as f64)),
+        ]),
+        EventKind::BreakerTrip => Json::obj(vec![
+            ("replica", Json::num(ev.kind_id as f64)),
+            ("trips", Json::num(ev.arg as f64)),
+        ]),
     }
 }
 

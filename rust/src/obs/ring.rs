@@ -53,6 +53,16 @@ pub enum EventKind {
     /// saved). Recorded on replica 0's ring: the router, which fronts
     /// the cache, owns no ring of its own.
     CacheHit = 10,
+    /// The brownout controller changed degradation stage (`id` = the
+    /// new stage, `arg` = packed (from, to)). Recorded on replica 0's
+    /// ring — the controller, like the cache, is pool-wide.
+    Brownout = 11,
+    /// The supervisor respawned a dead worker into this slot (`id` =
+    /// replica id, `arg` = restarts so far including this one).
+    Respawn = 12,
+    /// A replica's circuit breaker tripped open (`id` = replica id,
+    /// `arg` = trips so far including this one).
+    BreakerTrip = 13,
 }
 
 impl EventKind {
@@ -70,6 +80,9 @@ impl EventKind {
             8 => EventKind::Retire,
             9 => EventKind::Migrate,
             10 => EventKind::CacheHit,
+            11 => EventKind::Brownout,
+            12 => EventKind::Respawn,
+            13 => EventKind::BreakerTrip,
             _ => return None,
         })
     }
@@ -87,6 +100,9 @@ impl EventKind {
             EventKind::Retire => "retire",
             EventKind::Migrate => "migrate",
             EventKind::CacheHit => "cache_hit",
+            EventKind::Brownout => "brownout",
+            EventKind::Respawn => "respawn",
+            EventKind::BreakerTrip => "breaker_trip",
         }
     }
 

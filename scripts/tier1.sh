@@ -8,6 +8,7 @@
 #   BENCH_SMOKE=0 scripts/tier1.sh  # skip the bench build + smoke run
 #   SERVE_SMOKE=0 scripts/tier1.sh  # skip the serve telemetry smoke
 #   MIGRATE_SMOKE=0 scripts/tier1.sh # skip the drain-by-migration smoke
+#   CHAOS_SMOKE=0 scripts/tier1.sh  # skip the fault-injection smoke
 #
 # The fmt check is strict by default (ROADMAP "format the tree" item);
 # set FMT_STRICT=0 to demote it to advisory while iterating locally.
@@ -148,6 +149,37 @@ if command -v cargo >/dev/null 2>&1; then
     fi
 else
     echo "tier1: cargo unavailable, skipping migration smoke"
+fi
+
+echo "== tier1: chaos smoke (strict unless CHAOS_SMOKE=0)"
+# Self-healing gate: a supervised 2-replica synthetic pool self-drives
+# requests while replica 0 relives a deterministic panic schedule
+# (panic at round 8 of every incarnation). The supervisor must respawn
+# the slot into the same queue identity at least once, and the serve
+# command's own conservation check (dispatched == completed +
+# cache_hits + shed + forfeited, sourced from panic-proof gauges) must
+# balance — it exits nonzero on violation. docs/SERVING.md documents
+# the fault-plan grammar and the supervision/brownout knobs.
+if command -v cargo >/dev/null 2>&1; then
+    if [ "${CHAOS_SMOKE:-1}" = "1" ]; then
+        out=$(./target/release/lazydit serve --synthetic --replicas 2 \
+                  --steal on --supervise on --fault-plan panic@8 \
+                  --self-drive 24 --addr 127.0.0.1:8493 --sim-work 20000)
+        echo "$out" | tail -n 4
+        echo "$out" | grep -q 'conservation: .* ok=true' || {
+            echo "tier1: chaos smoke FAILED (conservation line missing)"
+            exit 1
+        }
+        echo "$out" | grep -Eq 'supervisor: restarts=[1-9]' || {
+            echo "tier1: chaos smoke FAILED (no supervised respawn)"
+            exit 1
+        }
+        echo "tier1: chaos smoke OK (respawn >= 1, ledger balanced under panics)"
+    else
+        echo "tier1: chaos smoke skipped (CHAOS_SMOKE=0)"
+    fi
+else
+    echo "tier1: cargo unavailable, skipping chaos smoke"
 fi
 
 echo "== tier1: docs link check (relative links in *.md)"
