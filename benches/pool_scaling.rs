@@ -51,8 +51,9 @@ use lazydit::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
 use lazydit::coordinator::pool::sim::{sim_image, SimEngine, SimSpec};
 use lazydit::coordinator::pool::steal::Rebalancer;
 use lazydit::coordinator::pool::{
-    Brownout, BrownoutConfig, CacheConfig, FaultPlan, PoolCache, PoolEngine,
-    PoolReport, RespawnFactory, Router, Supervisor, SupervisorConfig,
+    Brownout, BrownoutConfig, CacheConfig, FaultPlan, PoolCache,
+    PoolCalendar, PoolEngine, PoolReport, RespawnFactory, Router,
+    SkipCalendar, Supervisor, SupervisorConfig,
 };
 use lazydit::coordinator::request::Request;
 use lazydit::data::workload::WorkloadSpec;
@@ -896,6 +897,245 @@ fn brownout_shed_sweep() -> Json {
     Json::arr(rows)
 }
 
+// ----------------------------------------------------------- deadline
+
+/// Requests per deadline A/B cell (one arm at one offered load).
+const DEADLINE_REQUESTS: usize = 48;
+/// Steps per deadline request.
+const DEADLINE_STEPS: usize = 4;
+/// Work per executed module — heavy like the brownout sweep, so the
+/// per-request service time dominates the arrival pacer's sleep/spin
+/// granularity and a CI scheduling hiccup stays well inside the
+/// tight-class slack.
+const DEADLINE_WORK: u64 = 200_000;
+/// Queue bound: deep enough that nothing sheds for capacity — every
+/// shed in the EDF arm is a priced no-slack shed, and the FIFO arm
+/// must never shed at all.
+const DEADLINE_QUEUE_CAP: usize = 64;
+/// Tight-class relative deadline, in calibrated service times.
+const DEADLINE_TIGHT_X: f64 = 8.0;
+/// Loose-class relative deadline, in calibrated service times. Chosen
+/// so that at 2× offered load FIFO's linearly growing queue wait
+/// overruns it for the back half of the trace — capacity FIFO then
+/// wastes finishing already-doomed work, which is exactly what the
+/// no-slack shed reclaims.
+const DEADLINE_LOOSE_X: f64 = 16.0;
+
+fn deadline_spec() -> SimSpec {
+    SimSpec { lazy_pct: LAZY_PCT, work_per_module: DEADLINE_WORK,
+              ..SimSpec::default() }
+}
+
+/// Profile a skip calendar for the deadline pool the same way `lazydit
+/// calibrate --synthetic` does: drain a seeded trace through a fresh
+/// simulator and fold its per-step run/seen counters into one entry.
+fn deadline_calendar() -> SkipCalendar {
+    let mut engine = SimEngine::new(deadline_spec());
+    let requests = 8u64;
+    for i in 0..requests {
+        let mut req =
+            Request::new(0, (i % 10) as usize, DEADLINE_STEPS, 70_000 + i);
+        req.cfg_scale = 1.0;
+        engine.submit(req);
+    }
+    while engine.active_count() > 0 {
+        engine.step_round().expect("calibration round");
+    }
+    let mut cal = SkipCalendar::new(0xD11E, "sim");
+    cal.insert_profile(DEADLINE_STEPS,
+                       engine.step_profile()
+                           .expect("the simulator profiles steps"),
+                       requests);
+    cal
+}
+
+/// Per-request service time on the deadline pool's exact B1 replica
+/// shape — the unit the offered loads and relative deadlines scale.
+fn calibrate_deadline_pace() -> Duration {
+    let probe = 8usize;
+    let h = ReplicaHandle::spawn_cached(
+        0, DEADLINE_QUEUE_CAP, SimEngine::factory(deadline_spec()), None,
+        ReplicaTier::new(Slo::Besteffort, 1), Tracer::disabled(), None)
+        .unwrap();
+    let router = Router::new(vec![h], RoutePolicy::Jsq, DEADLINE_QUEUE_CAP);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..probe {
+        let (tx, rx) = mpsc::channel();
+        let mut req =
+            Request::new(0, i % 10, DEADLINE_STEPS, 71_000 + i as u64);
+        req.cfg_scale = 1.0;
+        assert!(router.dispatch(req, tx), "pace probe must admit");
+        rxs.push(rx);
+    }
+    for rx in rxs {
+        rx.recv().expect("probe response");
+    }
+    let per_req = t0.elapsed() / probe as u32;
+    router.shutdown();
+    per_req
+}
+
+/// Client-observed outcome of one deadline arm: index 0 is the tight
+/// class, index 1 the loose class. A hit is a response that arrived on
+/// the client thread before the request's absolute deadline; sheds and
+/// late completions are both misses — nothing is scored server-side.
+struct DeadlineArm {
+    offered: [usize; 2],
+    hits: [usize; 2],
+    slack_sheds: u64,
+}
+
+impl DeadlineArm {
+    fn total_hits(&self) -> usize {
+        self.hits[0] + self.hits[1]
+    }
+}
+
+/// One open-loop pass at `load`× the calibrated capacity, alternating
+/// tight/loose deadlines. `oracle` arms the EDF + calendar-pricing
+/// stack (the FIFO baseline passes `None` and runs the legacy path:
+/// arrival order, no pricing, no shed).
+fn run_deadline_arm(edf: bool, oracle: Option<&Arc<PoolCalendar>>,
+                    svc: Duration, load: f64) -> DeadlineArm {
+    let tier = ReplicaTier { edf, ..ReplicaTier::new(Slo::Besteffort, 1) };
+    let h = ReplicaHandle::spawn_cached(
+        0, DEADLINE_QUEUE_CAP, SimEngine::factory(deadline_spec()), None,
+        tier, Tracer::disabled(), None)
+        .unwrap();
+    let mut router =
+        Router::new(vec![h], RoutePolicy::Jsq, DEADLINE_QUEUE_CAP);
+    if let Some(c) = oracle {
+        router = router.with_calendar(c.clone());
+    }
+    let svc_us = svc.as_secs_f64() * 1e6;
+    let rels = [(svc_us * DEADLINE_TIGHT_X) as u64,
+                (svc_us * DEADLINE_LOOSE_X) as u64];
+    let pace = svc.div_f64(load);
+    let t0 = Instant::now();
+    let mut offered = [0usize; 2];
+    let mut joins = Vec::with_capacity(DEADLINE_REQUESTS);
+    for i in 0..DEADLINE_REQUESTS {
+        // wall-clock pacing, never completion-paced (the same
+        // anti-coordinated-omission idiom as run_open_loop)
+        let target = pace.as_secs_f64() * i as f64;
+        loop {
+            let remain = target - t0.elapsed().as_secs_f64();
+            if remain <= 0.0 {
+                break;
+            }
+            if remain > 1e-3 {
+                std::thread::sleep(Duration::from_secs_f64(remain - 5e-4));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        let class = i % 2; // 0 = tight, 1 = loose
+        let mut req =
+            Request::new(0, i % 10, DEADLINE_STEPS, 72_000 + i as u64);
+        req.cfg_scale = 1.0;
+        req.deadline_us = epoch_us() + rels[class];
+        let deadline = req.deadline_us;
+        offered[class] += 1;
+        let (tx, rx) = mpsc::channel();
+        if router.dispatch(req, tx) {
+            joins.push(std::thread::spawn(move || {
+                let ok = rx.recv().is_ok() && epoch_us() <= deadline;
+                (class, ok)
+            }));
+        }
+        // a shed request simply never hits — a client-side miss
+    }
+    let mut hits = [0usize; 2];
+    for j in joins {
+        let (class, ok) = j.join().expect("collector");
+        if ok {
+            hits[class] += 1;
+        }
+    }
+    let (dispatched, completed, cache_hits, shed, forfeited, slack) = (
+        router.total_dispatched(), router.total_completed(),
+        router.total_cache_hits(), router.shed_count(),
+        router.total_forfeited(), router.slack_shed_count());
+    assert_eq!(dispatched, completed + cache_hits + shed + forfeited,
+               "deadline arm: ledger must balance");
+    assert!(slack <= shed,
+            "slack sheds attribute a reason inside the shed term, never \
+             beside it");
+    if oracle.is_none() {
+        assert_eq!(shed, 0,
+                   "the FIFO arm has no pricing and a deep queue — \
+                    nothing may shed");
+    }
+    router.shutdown();
+    DeadlineArm { offered, hits, slack_sheds: slack }
+}
+
+/// The deadline A/B: EDF + calendar pricing against FIFO + no pricing
+/// at 0.5×/1×/2× offered load. EDF must never lose, and at 2× it must
+/// win strictly: FIFO burns saturated-server capacity completing
+/// requests that already missed, while the priced no-slack shed turns
+/// that work into on-time completions. Returns the `deadline` section
+/// of `BENCH_serve.json`.
+fn deadline_sweep() -> Json {
+    let cal = deadline_calendar();
+    let cost = cal.cost_from(DEADLINE_STEPS, 0).expect("profiled entry");
+    let svc = calibrate_deadline_pace();
+    let oracle = Arc::new(PoolCalendar::new(Some(cal)));
+    // μs per module invocation from the probe: the calendar then prices
+    // one request at exactly the measured per-request service time
+    oracle.set_us_per_inv(svc.as_secs_f64() * 1e6 / cost.max(1e-9));
+    println!("deadline A/B (EDF + calendar pricing vs FIFO, B1 replica, \
+              {DEADLINE_REQUESTS} req × {DEADLINE_STEPS} steps, tight \
+              {DEADLINE_TIGHT_X:.0}×svc / loose {DEADLINE_LOOSE_X:.0}×svc, \
+              svc ≈ {:.2}ms, {cost:.1} rows/req):",
+             1e3 * svc.as_secs_f64());
+    let mut points = Vec::new();
+    for load in [0.5, 1.0, 2.0] {
+        let fifo = run_deadline_arm(false, None, svc, load);
+        let edf = run_deadline_arm(true, Some(&oracle), svc, load);
+        for (name, arm) in [("fifo", &fifo), ("edf", &edf)] {
+            println!("  {:>4.1}×c {:<5} hit {:>2}/{} (tight {:>2}/{}, \
+                      loose {:>2}/{})  slack-shed {:>2}",
+                     load, name, arm.total_hits(), DEADLINE_REQUESTS,
+                     arm.hits[0], arm.offered[0], arm.hits[1],
+                     arm.offered[1], arm.slack_sheds);
+            let rate = |h: usize, n: usize| h as f64 / n.max(1) as f64;
+            points.push(Json::obj(vec![
+                ("arm", Json::str(name)),
+                ("load_x", Json::num(load)),
+                ("offered", Json::num(DEADLINE_REQUESTS as f64)),
+                ("hit_rate",
+                 Json::num(rate(arm.total_hits(), DEADLINE_REQUESTS))),
+                ("tight_hit_rate",
+                 Json::num(rate(arm.hits[0], arm.offered[0]))),
+                ("loose_hit_rate",
+                 Json::num(rate(arm.hits[1], arm.offered[1]))),
+                ("slack_sheds", Json::num(arm.slack_sheds as f64)),
+            ]));
+        }
+        assert!(edf.total_hits() >= fifo.total_hits(),
+                "EDF + pricing must never lose to FIFO ({} vs {} hits \
+                 at {load}× load)",
+                edf.total_hits(), fifo.total_hits());
+        if load >= 2.0 {
+            assert!(edf.total_hits() > fifo.total_hits(),
+                    "at 2× offered load EDF + pricing must beat FIFO \
+                     strictly ({} vs {} hits)",
+                    edf.total_hits(), fifo.total_hits());
+            assert!(edf.slack_sheds > 0,
+                    "sustained overload must actually engage the \
+                     no-slack shed");
+        }
+    }
+    Json::obj(vec![
+        ("tight_x", Json::num(DEADLINE_TIGHT_X)),
+        ("loose_x", Json::num(DEADLINE_LOOSE_X)),
+        ("service_ms", Json::num(1e3 * svc.as_secs_f64())),
+        ("points", Json::arr(points)),
+    ])
+}
+
 // ---------------------------------------------------------- open loop
 
 /// Requests per open-loop point (per route × offered-load cell).
@@ -1216,6 +1456,9 @@ fn main() {
     let open_loop_points = open_loop_sweep();
 
     println!();
+    let deadline = deadline_sweep();
+
+    println!();
     if deterministic {
         println!("determinism: OK — image bytes identical across every pool \
                   shape, routing policy, and steal mode");
@@ -1247,6 +1490,7 @@ fn main() {
         ("steps", Json::num(STEPS as f64)),
         ("work_per_module", Json::num(WORK as f64)),
         ("open_loop", open_loop_points),
+        ("deadline", deadline),
         ("migration", migration),
         ("cache", cache),
         ("chaos", chaos),

@@ -30,6 +30,16 @@
 //! a donor boundary snapshot taken within the first H steps, turning
 //! cold-row denials into skips. See docs/SERVING.md.
 //!
+//! `--calendar cal.json` loads a skip calendar profiled by `lazydit
+//! calibrate`: the router prices every request in predicted module
+//! invocations at admission, latency-tier requests without an explicit
+//! wire deadline get one derived from predicted service time, and a
+//! request that cannot meet its deadline on any replica is shed with
+//! `"shed": "no_slack"`. Without the flag an online EWMA fallback
+//! self-calibrates the same pricing from live traffic. `--deadline-ms`
+//! makes the `--self-drive` client stamp every request with a relative
+//! deadline. See docs/SERVING.md, "Deadlines & skip calendars".
+//!
 //! `--trace-out trace.json` arms per-replica telemetry rings
 //! (`--trace-ring` events each) and writes a Chrome-trace-format file
 //! at shutdown — load it in Perfetto / chrome://tracing to see one
@@ -47,8 +57,9 @@ use crate::coordinator::pool::replica::{ReplicaHandle, ReplicaTier};
 use crate::coordinator::pool::sim::{SimEngine, SimSpec};
 use crate::coordinator::pool::{Brownout, BrownoutConfig, CacheConfig,
                                FaultEngine, FaultPlan, PoolCache,
-                               PoolEngine, Rebalancer, RespawnFactory,
-                               Router, Supervisor, SupervisorConfig};
+                               PoolCalendar, PoolEngine, Rebalancer,
+                               RespawnFactory, Router, SkipCalendar,
+                               Supervisor, SupervisorConfig};
 use crate::coordinator::server::serve_pool_shared;
 use crate::util::argparse::{Args, OptSpec};
 use anyhow::{bail, Context, Result};
@@ -66,6 +77,8 @@ pub fn specs() -> Vec<OptSpec> {
         OptSpec { name: "queue-cap", help: "admission bound (pool-wide)", default: Some("256"), is_flag: false },
         OptSpec { name: "result-cache", help: "exact-result cache capacity (0 = off)", default: Some("0"), is_flag: false },
         OptSpec { name: "warm-horizon", help: "warm-start donor step horizon (0 = off; needs --result-cache)", default: Some("0"), is_flag: false },
+        OptSpec { name: "calendar", help: "calibrated skip-calendar artifact (from lazydit calibrate)", default: None, is_flag: false },
+        OptSpec { name: "deadline-ms", help: "self-drive client: per-request deadline in ms (0 = none)", default: Some("0"), is_flag: false },
         OptSpec { name: "cfg-scale", help: "guidance scale", default: Some("1.5"), is_flag: false },
         OptSpec { name: "threshold", help: "gate threshold", default: Some("0.5"), is_flag: false },
         OptSpec { name: "coupled-gate", help: "legacy all-or-nothing batch skip gate (disables row-granular skipping)", default: None, is_flag: true },
@@ -160,7 +173,10 @@ pub fn parse_replica_spec(spec: &str) -> Result<Vec<ReplicaTier>> {
 /// carries a fault plan's client-side `sock@I=MS` items: the client
 /// sleeps MS ms before reading response I (a deterministic slow
 /// reader, exercising the server's bounded response write).
-fn self_drive_client(addr: String, n: usize, sock_stalls: Vec<(u64, u64)>)
+/// `deadline_ms > 0` stamps every request with that relative deadline,
+/// exercising the EDF admission path end to end.
+fn self_drive_client(addr: String, n: usize, deadline_ms: u64,
+                     sock_stalls: Vec<(u64, u64)>)
                      -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         use std::io::{BufRead, BufReader, Write};
@@ -182,11 +198,16 @@ fn self_drive_client(addr: String, n: usize, sock_stalls: Vec<(u64, u64)>)
         let mut reader =
             BufReader::new(s.try_clone().expect("clone self-drive stream"));
         let mut line = String::new();
+        let deadline = if deadline_ms > 0 {
+            format!(", \"deadline_ms\": {deadline_ms}")
+        } else {
+            String::new()
+        };
         for i in 0..n {
             let slo = ["besteffort", "latency", "throughput"][i % 3];
             let req = format!(
                 "{{\"label\": {}, \"steps\": 4, \"seed\": {i}, \
-                 \"cfg_scale\": 1.0, \"slo\": \"{slo}\"}}\n",
+                 \"cfg_scale\": 1.0, \"slo\": \"{slo}\"{deadline}}}\n",
                 i % 10);
             if s.write_all(req.as_bytes()).is_err() {
                 return;
@@ -216,14 +237,30 @@ fn self_drive_client(addr: String, n: usize, sock_stalls: Vec<(u64, u64)>)
 }
 
 /// FNV-1a over the model-identity descriptor — the `model_params`
-/// fingerprint folded into every [`crate::coordinator::request::RequestKey`].
-fn fnv64(bytes: &[u8]) -> u64 {
+/// fingerprint folded into every [`crate::coordinator::request::RequestKey`]
+/// and stamped into calibrated skip calendars.
+pub fn fnv64(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x100_0000_01b3);
     }
     h
+}
+
+/// Model-identity descriptor for a `--synthetic` run. Shared with
+/// `lazydit calibrate` so a calendar profiled under the same knobs
+/// fingerprints identically and `serve --calendar` accepts it.
+pub fn synthetic_desc(lazy_pct: usize, work: u64, coupled: bool) -> String {
+    format!("sim:lazy={lazy_pct}:work={work}:coupled={coupled}")
+}
+
+/// Model-identity descriptor for a real-engine run (same contract as
+/// [`synthetic_desc`]: serve and calibrate must derive the fingerprint
+/// from one string).
+pub fn engine_desc(model: &str, policy: &str, lazy_pct: usize,
+                   steps: usize) -> String {
+    format!("{model}:policy={policy}:lazy={lazy_pct}:steps={steps}")
 }
 
 /// Parse an `on|off` switch value for flag `--{name}`.
@@ -438,8 +475,7 @@ pub fn run(a: Args) -> Result<()> {
                   p.name());
         }
         let work = a.get_u64("sim-work", 4000)?;
-        let desc = format!("sim:lazy={lazy_pct}:work={work}:coupled={}",
-                           a.flag("coupled-gate"));
+        let desc = synthetic_desc(lazy_pct, work, a.flag("coupled-gate"));
         (synthetic_factories(replicas, lazy_pct, work,
                              a.flag("coupled-gate"), &overrides,
                              fault_plan.as_ref()),
@@ -493,8 +529,8 @@ pub fn run(a: Args) -> Result<()> {
             serve_cfg.policy = SkipPolicy::Never;
         }
         let qc = serve_cfg.queue_cap;
-        let desc = format!("{}:policy={}:lazy={lazy_pct}:steps={steps}",
-                           ctx.cfg.model.name, serve_cfg.policy.name());
+        let desc = engine_desc(&ctx.cfg.model.name, serve_cfg.policy.name(),
+                               lazy_pct, steps);
         (engine_factories(&ctx, &serve_cfg, gamma, &tiers, tiered,
                           &overrides, fault_plan.as_ref()), qc, desc)
     };
@@ -510,6 +546,31 @@ pub fn run(a: Args) -> Result<()> {
             result_cache, warm_horizon, fnv64(model_desc.as_bytes())))))
     } else {
         None
+    };
+
+    // admission pricing: an explicit --calendar artifact arms calibrated
+    // per-step costs; without one the online EWMA fallback
+    // self-calibrates from live traffic. A loaded artifact must
+    // fingerprint-match this process's model-identity descriptor —
+    // pricing with another configuration's profile would be silently
+    // wrong, so refuse it up front.
+    let calendar = match a.get("calendar") {
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading calendar {path}"))?;
+            let cal = SkipCalendar::decode(&text).map_err(|e| {
+                anyhow::anyhow!("calendar {path}: {e}")
+            })?;
+            let fp = fnv64(model_desc.as_bytes());
+            if cal.model_params != fp {
+                bail!("calendar {path} was profiled on model \
+                       {:#018x}, this server is {fp:#018x} \
+                       ({model_desc}) — re-run lazydit calibrate with \
+                       matching engine flags", cal.model_params);
+            }
+            std::sync::Arc::new(PoolCalendar::new(Some(cal)))
+        }
+        None => std::sync::Arc::new(PoolCalendar::online()),
     };
 
     // work stealing: idle replicas pull queued jobs from the sibling
@@ -561,7 +622,8 @@ pub fn run(a: Args) -> Result<()> {
         })
         .collect::<Result<_>>()?;
     let router = Router::with_cache(handles, route, queue_cap,
-                                    rebalancer.clone(), cache.clone());
+                                    rebalancer.clone(), cache.clone())
+        .with_calendar(calendar.clone());
     let brownout_ctl = if brownout_on {
         Some(std::sync::Arc::new(Brownout::new(BrownoutConfig::default(),
                                                cache.clone())))
@@ -584,12 +646,17 @@ pub fn run(a: Args) -> Result<()> {
              tier_summary.join(","),
              route.name(),
              if router.stealing() { "on" } else { "off" });
+    if calendar.armed() {
+        println!("calendar: armed — calibrated admission pricing + \
+                  latency-tier deadline defaults active");
+    }
     let driver = if self_drive > 0 {
         let stalls = fault_plan
             .as_ref()
             .map(|p| p.sock_stalls().to_vec())
             .unwrap_or_default();
-        Some(self_drive_client(addr.clone(), self_drive, stalls))
+        Some(self_drive_client(addr.clone(), self_drive,
+                               a.get_u64("deadline-ms", 0)?, stalls))
     } else {
         None
     };
@@ -629,6 +696,11 @@ pub fn run(a: Args) -> Result<()> {
         println!("cache: hits={cache_hits} warm_hits={} rows_warmed={}",
                  report.total_warm_hits(), report.total_rows_warmed());
     }
+    // always printed: the deadline gauges run whether or not a calendar
+    // is armed, and the smoke gates grep this line
+    println!("deadline: hits={} misses={} slack_sheds={}",
+             router.total_deadline_hits(), router.total_deadline_misses(),
+             router.slack_shed_count());
     println!("conservation: dispatched={dispatched} completed={completed} \
               cache_hits={cache_hits} shed={shed} forfeited={forfeited} \
               ok={balanced}");
@@ -745,7 +817,7 @@ mod tests {
     fn synthetic_factories_honor_never_override() {
         let mut ov = BTreeMap::new();
         ov.insert(1usize, SkipPolicy::Never);
-        let f = synthetic_factories(2, 50, 10, false, &ov);
+        let f = synthetic_factories(2, 50, 10, false, &ov, None);
         assert_eq!(f.len(), 2);
         // factories are opaque; behavior is pinned by integration_pool
     }

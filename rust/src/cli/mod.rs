@@ -6,6 +6,7 @@ pub mod cmd_info;
 pub mod cmd_train;
 pub mod cmd_generate;
 pub mod cmd_serve;
+pub mod cmd_calibrate;
 pub mod cmd_eval;
 pub mod cmd_tables;
 pub mod cmd_figs;
@@ -28,6 +29,7 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
         "lazy-train" => cmd_train::run_lazy(parse(rest, &cmd_train::lazy_specs())?),
         "generate" => cmd_generate::run(parse(rest, &cmd_generate::specs())?),
         "serve" => cmd_serve::run(parse(rest, &cmd_serve::specs())?),
+        "calibrate" => cmd_calibrate::run(parse(rest, &cmd_calibrate::specs())?),
         "eval" => cmd_eval::run(parse(rest, &cmd_eval::specs())?),
         "table1" => cmd_tables::run_table1(parse(rest, &cmd_tables::specs())?),
         "table2" => cmd_tables::run_table2(parse(rest, &cmd_tables::specs())?),
@@ -80,6 +82,7 @@ fn print_help() {
          \x20 lazy-train    train the lazy gates (paper Sec. 3.3)\n\
          \x20 generate      sample images; optional PNG grid output\n\
          \x20 serve         TCP JSON-lines serving with continuous batching\n\
+         \x20 calibrate     profile a skip calendar for serve --calendar\n\
          \x20 eval          quality metrics for one sampling configuration\n\
          \n\
          paper experiment regenerators:\n\

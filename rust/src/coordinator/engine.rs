@@ -73,6 +73,10 @@ pub struct Engine {
     /// `serve.threshold`, so a boost lowers the effective threshold and
     /// boost 0 must restore this exact value.
     base_threshold: f32,
+    /// Per-step-index run/seen row counters — the calibration feed for
+    /// `lazydit calibrate` and the pool's skip calendars
+    /// ([`crate::coordinator::pool::PoolEngine::step_profile`]).
+    step_profile: crate::coordinator::pool::calendar::StepProfile,
 }
 
 /// The engine's persistent batch: padded model inputs plus the
@@ -364,6 +368,7 @@ impl Engine {
             pool,
             tracer: Tracer::disabled(),
             base_threshold,
+            step_profile: crate::coordinator::pool::calendar::StepProfile::new(),
         })
     }
 
@@ -395,6 +400,7 @@ impl Engine {
             pool,
             tracer: Tracer::disabled(),
             base_threshold,
+            step_profile: crate::coordinator::pool::calendar::StepProfile::new(),
         }
     }
 
@@ -860,12 +866,17 @@ impl Engine {
             // skip accounting (per request: a module counts once per
             // step, read from the request's own row — CFG lanes are
             // pair-coupled, so the first lane's bit speaks for both)
+            let step = ar.cursor;
+            let mut run_rows = 0u64;
             for k in 0..2 * depth {
                 ar.modules_seen[k] += 1;
                 if outcome.row_skipped(k, row) {
                     ar.skip_counts[k] += 1;
+                } else {
+                    run_rows += 1;
                 }
             }
+            self.step_profile.record(step, run_rows, 2 * depth as u64);
             ar.cursor += 1;
             ar.steps_done += 1;
             row += lanes;
@@ -960,6 +971,11 @@ impl crate::coordinator::pool::PoolEngine for Engine {
 
     fn policy_name(&self) -> String {
         self.serve.policy.name().to_string()
+    }
+
+    fn step_profile(&self)
+                    -> Option<&crate::coordinator::pool::calendar::StepProfile> {
+        Some(&self.step_profile)
     }
 
     fn arena_stats(&self) -> Option<crate::tensor::pool::PoolStats> {

@@ -78,6 +78,11 @@ pub struct PoolReport {
     /// a ledger term of the conservation law:
     /// `dispatched == completed + cache_hits + shed + forfeited`).
     pub cache_hits: u64,
+    /// Requests shed at admission because no candidate replica could
+    /// meet their deadline. A strict subset of `shed` — the
+    /// conservation ledger already counts these there; this figure
+    /// only attributes the reason.
+    pub slack_sheds: u64,
 }
 
 impl PoolReport {
@@ -212,6 +217,17 @@ impl PoolReport {
         self.replicas.iter().map(|r| r.breaker_trips).sum()
     }
 
+    /// Requests retired on or before their deadline, pool-wide.
+    /// Requests without a deadline count in neither bucket.
+    pub fn total_deadline_hits(&self) -> u64 {
+        self.replicas.iter().map(|r| r.deadline_hits).sum()
+    }
+
+    /// Requests retired after their deadline, pool-wide.
+    pub fn total_deadline_misses(&self) -> u64 {
+        self.replicas.iter().map(|r| r.deadline_misses).sum()
+    }
+
     /// Completions per SLO class (`Slo::index()` order): the sum of the
     /// per-replica counters, like every other pool-wide figure.
     pub fn completed_by_slo(&self) -> [u64; Slo::COUNT] {
@@ -286,6 +302,16 @@ impl PoolReport {
                 self.total_rows_warmed(),
             ));
         }
+        // only when deadlines were actually in play: deadline-free runs
+        // keep the exact report shape older tooling parses
+        let (dl_hits, dl_misses) =
+            (self.total_deadline_hits(), self.total_deadline_misses());
+        if dl_hits > 0 || dl_misses > 0 || self.slack_sheds > 0 {
+            out.push_str(&format!(
+                "  deadlines: {} hit, {} missed, {} slack-shed\n",
+                dl_hits, dl_misses, self.slack_sheds,
+            ));
+        }
         // only when the supervisor actually intervened: clean runs keep
         // the exact report shape older tooling parses
         if self.total_restarts() > 0 || self.total_breaker_trips() > 0 {
@@ -349,6 +375,8 @@ mod tests {
             warm_hits: 0,
             restarts: 0,
             breaker_trips: 0,
+            deadline_hits: 0,
+            deadline_misses: 0,
             arena: None,
             error: None,
         }
@@ -361,6 +389,7 @@ mod tests {
             shed: 2,
             shed_by_slo: [0, 0, 2],
             cache_hits: 0,
+            slack_sheds: 0,
         };
         let l = pr.merged_layer();
         assert_eq!(l.skips[0], 40);
@@ -392,7 +421,7 @@ mod tests {
         }
         let pr = PoolReport { replicas: vec![fast, slow], shed: 0,
                               shed_by_slo: [0; Slo::COUNT],
-                              cache_hits: 0 };
+                              cache_hits: 0, slack_sheds: 0 };
         let s = pr.merged_serve();
         assert_eq!(s.hist.count(), 200);
         let p99 = s.p99_latency();
@@ -409,6 +438,7 @@ mod tests {
             shed: 0,
             shed_by_slo: [0; Slo::COUNT],
             cache_hits: 0,
+            slack_sheds: 0,
         };
         // ratio of sums: 18/200 per-pool = 0.09; average of averages 0.45
         assert!((pr.overall_lazy() - 0.09).abs() < 1e-12);
@@ -432,7 +462,7 @@ mod tests {
         let mut b = report(1, 2, 3, 4, 5);
         b.stolen = 3;
         let pr = PoolReport { replicas: vec![a, b], shed: 1,
-                              shed_by_slo: [0, 0, 1], cache_hits: 0 };
+                              shed_by_slo: [0, 0, 1], cache_hits: 0, slack_sheds: 0 };
         let s = pr.render();
         assert!(s.contains("pool"));
         assert!(s.contains("mean"));
@@ -452,7 +482,7 @@ mod tests {
         b.layer.record_rows(1, 1, 3, 1);
         let pr = PoolReport { replicas: vec![a, b], shed: 0,
                               shed_by_slo: [0; Slo::COUNT],
-                              cache_hits: 0 };
+                              cache_hits: 0, slack_sheds: 0 };
         assert_eq!(pr.total_rows_run(), 4);
         assert_eq!(pr.total_rows_skipped(), 8);
         assert_eq!(pr.total_rows_recovered(), 3);
@@ -475,7 +505,7 @@ mod tests {
         b.layer.record_cold_denied(1);
         let pr = PoolReport { replicas: vec![a, b], shed: 0,
                               shed_by_slo: [0; Slo::COUNT],
-                              cache_hits: 0 };
+                              cache_hits: 0, slack_sheds: 0 };
         assert_eq!(pr.total_cold_denied(), 3);
         let merged = pr.merged_layer();
         assert_eq!(merged.cold_denied, vec![1, 2]);
@@ -496,6 +526,7 @@ mod tests {
             shed: 3,
             shed_by_slo: [1, 2, 0],
             cache_hits: 0,
+            slack_sheds: 0,
         };
         assert_eq!(pr.completed_by_slo(), [4, 6, 2]);
         assert_eq!(pr.shed_by_slo.iter().sum::<u64>(), pr.shed);
@@ -521,7 +552,7 @@ mod tests {
         b.stolen = 2;
         let pr = PoolReport { replicas: vec![a, b], shed: 0,
                               shed_by_slo: [0; Slo::COUNT],
-                              cache_hits: 0 };
+                              cache_hits: 0, slack_sheds: 0 };
         assert_eq!(pr.total_steals(), 3);
         assert_eq!(pr.total_stolen(), 3);
         assert_eq!(pr.total_steals(), pr.total_stolen(),
@@ -540,7 +571,7 @@ mod tests {
         b.serve.resume_steps_saved = 6;
         let pr = PoolReport { replicas: vec![a, b], shed: 0,
                               shed_by_slo: [0; Slo::COUNT],
-                              cache_hits: 0 };
+                              cache_hits: 0, slack_sheds: 0 };
         assert_eq!(pr.total_migrated_out(), 2);
         assert_eq!(pr.total_migrated_in(), 2);
         assert_eq!(pr.total_resumed(), 3);
@@ -563,7 +594,7 @@ mod tests {
         b.restarts = 3;
         let pr = PoolReport { replicas: vec![a, b], shed: 0,
                               shed_by_slo: [0; Slo::COUNT],
-                              cache_hits: 0 };
+                              cache_hits: 0, slack_sheds: 0 };
         assert_eq!(pr.total_restarts(), 5);
         assert_eq!(pr.total_breaker_trips(), 1);
         assert!(pr.render().contains(
@@ -572,8 +603,34 @@ mod tests {
         // an intervention-free run keeps the exact legacy report shape
         let quiet = PoolReport { replicas: vec![report(0, 1, 0, 4, 4)],
                                  shed: 0, shed_by_slo: [0; Slo::COUNT],
-                                 cache_hits: 0 };
+                                 cache_hits: 0, slack_sheds: 0 };
         assert!(!quiet.render().contains("supervisor:"),
+                "{}", quiet.render());
+    }
+
+    #[test]
+    fn deadline_line_renders_only_with_deadline_activity() {
+        let mut a = report(0, 1, 0, 4, 4);
+        a.deadline_hits = 3;
+        a.deadline_misses = 1;
+        let mut b = report(1, 1, 0, 4, 4);
+        b.deadline_hits = 2;
+        let pr = PoolReport { replicas: vec![a, b], shed: 2,
+                              shed_by_slo: [0, 0, 2],
+                              cache_hits: 0, slack_sheds: 1 };
+        assert_eq!(pr.total_deadline_hits(), 5);
+        assert_eq!(pr.total_deadline_misses(), 1);
+        assert!(pr.render().contains(
+            "deadlines: 5 hit, 1 missed, 1 slack-shed"),
+            "{}", pr.render());
+        // slack sheds stay inside the shed ledger term: the render
+        // attributes, it never adds a new conservation bucket
+        assert!(pr.slack_sheds <= pr.shed);
+        // a deadline-free run keeps the exact legacy report shape
+        let quiet = PoolReport { replicas: vec![report(0, 1, 0, 4, 4)],
+                                 shed: 0, shed_by_slo: [0; Slo::COUNT],
+                                 cache_hits: 0, slack_sheds: 0 };
+        assert!(!quiet.render().contains("deadlines:"),
                 "{}", quiet.render());
     }
 
@@ -585,7 +642,7 @@ mod tests {
         let b = report(1, 1, 0, 4, 4);
         let pr = PoolReport { replicas: vec![a, b], shed: 0,
                               shed_by_slo: [0; Slo::COUNT],
-                              cache_hits: 5 };
+                              cache_hits: 5, slack_sheds: 0 };
         assert_eq!(pr.total_warm_hits(), 2);
         assert_eq!(pr.total_rows_warmed(), 3);
         assert!(pr.render().contains(
@@ -596,7 +653,7 @@ mod tests {
         // a cache-less run keeps the exact legacy report shape
         let quiet = PoolReport { replicas: vec![report(0, 1, 0, 4, 4)],
                                  shed: 0, shed_by_slo: [0; Slo::COUNT],
-                                 cache_hits: 0 };
+                                 cache_hits: 0, slack_sheds: 0 };
         assert!(!quiet.render().contains("cache:"), "{}", quiet.render());
     }
 }

@@ -168,7 +168,12 @@ impl Brownout {
             .replica_count()
             .saturating_sub(router.dead_replicas());
         let capacity = router.queue_cap() * live;
-        let queued = router.total_queued();
+        // calendar-aware pressure: raw queue length, raised (never
+        // lowered) to the priced backlog in request-equivalents — a
+        // queue of few-but-enormous requests registers the load its
+        // item count hides. Identical to `total_queued()` when no
+        // calendar is armed, so uncalendared pools are unaffected.
+        let queued = router.backlog_pressure();
         let shed = router.shed_count();
         let shed_delta =
             shed.saturating_sub(self.last_shed.swap(shed, Ordering::Relaxed));

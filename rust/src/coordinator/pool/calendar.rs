@@ -1,0 +1,745 @@
+//! Skip calendars: calibrated per-(model, steps, policy) predictions of
+//! how many module-row invocations a request will actually execute.
+//!
+//! LazyDiT's laziness is *predictable*: the per-step skip pattern is a
+//! near-deterministic function of the model, the step schedule, and the
+//! decision policy, not of the individual request (SmoothCache makes
+//! the same observation and precomputes its schedules offline). This
+//! module turns that predictability into an admission-time price.
+//!
+//! Three layers:
+//!
+//! - [`StepProfile`] — raw per-step-index run/seen row counters,
+//!   recorded by an engine while it serves (both [`SimEngine`] and the
+//!   real engine implement [`PoolEngine::step_profile`]). `lazydit
+//!   calibrate` aggregates one over a trace.
+//! - [`SkipCalendar`] — the versioned, strictly-decoded JSON artifact:
+//!   a map from step count to the *expected executed module-row
+//!   invocations per step* for one request (the per-step vector already
+//!   folds the skip ratio in). [`SkipCalendar::cost_from`] sums the
+//!   tail from a step cursor — the predicted remaining work, monotone
+//!   non-increasing as the cursor advances. Serialization goes through
+//!   [`crate::util::json::Json`] with `BTreeMap`-sorted keys, so the
+//!   same trace always produces a byte-identical artifact.
+//! - [`PoolCalendar`] — the router-held pricing oracle: the optional
+//!   loaded artifact plus online EWMA fallbacks (observed Γ, rows per
+//!   step, wall-µs per executed row) that self-calibrate from the pool
+//!   gauges when no artifact is given. Everything downstream — EDF
+//!   deadlines, shed-by-slack, steal victim ranking, brownout pressure
+//!   — reads one number from here.
+//!
+//! The artifact deliberately carries **no wall-clock data**: service
+//! time depends on the machine, so `us_per_inv` is always an online
+//! estimate, while the invocation counts are a property of the model ×
+//! policy and are portable between hosts.
+//!
+//! [`SimEngine`]: crate::coordinator::pool::sim::SimEngine
+//! [`PoolEngine::step_profile`]: crate::coordinator::pool::PoolEngine::step_profile
+
+use crate::util::json::{Json, JsonError};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Calendar artifact schema version ([`SkipCalendar::decode`] rejects
+/// any other value — the codec never guesses at unknown layouts).
+pub const CALENDAR_VERSION: u64 = 1;
+
+/// Magic tag in the artifact's `"calendar"` field, so a stray JSON file
+/// can never be mistaken for a calendar.
+pub const CALENDAR_MAGIC: &str = "lazydit/skip-calendar";
+
+/// Default headroom multiplier when deriving a latency-tier deadline
+/// from the calendar's predicted service time: `deadline = now +
+/// headroom × predicted_service`. Generous, because the prediction is
+/// service time only — queueing delay is what the slack check charges
+/// separately.
+pub const DEADLINE_HEADROOM: f64 = 8.0;
+
+/// Floor on a calendar-derived default deadline, so a near-zero service
+/// prediction (tiny synthetic requests) never produces an unmeetable
+/// sub-millisecond deadline.
+pub const DEADLINE_FLOOR_US: u64 = 25_000;
+
+// ------------------------------------------------------------ profile
+
+/// Per-step-index run/seen module-row counters, recorded by an engine
+/// while it serves. Step index is the request's own cursor (0-based),
+/// so requests with different step counts can share a profile — the
+/// calibrator is expected to feed it a single-step-count trace when it
+/// wants an exact calendar entry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepProfile {
+    /// Executed module rows at each step index.
+    rows_run: Vec<u64>,
+    /// Module rows decided (run + skipped) at each step index.
+    rows_seen: Vec<u64>,
+}
+
+impl StepProfile {
+    /// An empty profile.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one module-row decision batch at `step`: `run` rows
+    /// executed out of `seen` decided. Grows the vectors on demand.
+    pub fn record(&mut self, step: usize, run: u64, seen: u64) {
+        if self.rows_run.len() <= step {
+            self.rows_run.resize(step + 1, 0);
+            self.rows_seen.resize(step + 1, 0);
+        }
+        self.rows_run[step] += run;
+        self.rows_seen[step] += seen;
+    }
+
+    /// Number of step indices with any observation.
+    pub fn len(&self) -> usize {
+        self.rows_seen.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.rows_seen.is_empty()
+    }
+
+    /// Executed rows recorded at `step` (0 beyond the observed range).
+    pub fn run_rows(&self, step: usize) -> u64 {
+        self.rows_run.get(step).copied().unwrap_or(0)
+    }
+
+    /// Decided rows recorded at `step` (0 beyond the observed range).
+    pub fn seen_rows(&self, step: usize) -> u64 {
+        self.rows_seen.get(step).copied().unwrap_or(0)
+    }
+
+    /// Fraction of decided rows that executed at `step`; `None` when
+    /// the step was never observed.
+    pub fn run_ratio(&self, step: usize) -> Option<f64> {
+        let seen = self.seen_rows(step);
+        (seen > 0).then(|| self.run_rows(step) as f64 / seen as f64)
+    }
+
+    /// Total executed rows across all steps.
+    pub fn total_run(&self) -> u64 {
+        self.rows_run.iter().sum()
+    }
+
+    /// Total decided rows across all steps.
+    pub fn total_seen(&self) -> u64 {
+        self.rows_seen.iter().sum()
+    }
+
+    /// Fold another profile in (index-wise sums) — how the calibrator
+    /// merges per-replica profiles into one trace-wide aggregate.
+    pub fn merge(&mut self, other: &StepProfile) {
+        for s in 0..other.len() {
+            self.record(s, other.run_rows(s), other.seen_rows(s));
+        }
+    }
+}
+
+// ----------------------------------------------------------- calendar
+
+/// The calibrated artifact: expected executed module-row invocations
+/// per step, per step count, for one (model params, policy) pair.
+///
+/// JSON schema (all five top-level keys required, nothing else
+/// accepted):
+///
+/// ```json
+/// {
+///   "calendar": "lazydit/skip-calendar",
+///   "entries": {"10": [16.0, 8.25, 8.25, ...]},
+///   "model_params": "00a1b2c3d4e5f607",
+///   "policy": "sim:lazy=50:work=4000:coupled=false",
+///   "version": 1
+/// }
+/// ```
+///
+/// `model_params` is the engine's parameter fingerprint (the same value
+/// [`crate::coordinator::request::Request::key`] folds into a
+/// `RequestKey`), hex-encoded because JSON numbers cannot carry a full
+/// u64 exactly. Each `entries` value has exactly `steps` elements, all
+/// finite and non-negative — the expected executed rows for a single
+/// request at that step index (skip ratio already folded in).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkipCalendar {
+    /// Model-parameter fingerprint this calendar was profiled on.
+    pub model_params: u64,
+    /// Decision policy / engine descriptor the profile ran under.
+    pub policy: String,
+    /// step count → expected executed rows per step (len == steps).
+    pub entries: BTreeMap<u64, Vec<f64>>,
+}
+
+impl SkipCalendar {
+    /// An empty calendar for `(model_params, policy)`.
+    pub fn new(model_params: u64, policy: &str) -> Self {
+        SkipCalendar {
+            model_params,
+            policy: policy.to_string(),
+            entries: BTreeMap::new(),
+        }
+    }
+
+    /// Insert the entry for `steps` from a trace-wide [`StepProfile`]
+    /// over `requests` same-step-count requests: expected executed rows
+    /// at step `s` = profiled executed rows at `s` / requests.
+    pub fn insert_profile(&mut self, steps: usize, profile: &StepProfile,
+                          requests: u64) {
+        let n = requests.max(1) as f64;
+        let entry: Vec<f64> =
+            (0..steps).map(|s| profile.run_rows(s) as f64 / n).collect();
+        self.entries.insert(steps as u64, entry);
+    }
+
+    /// Predicted remaining executed rows for a `steps`-step request at
+    /// step `cursor`: the sum of the entry's tail. `None` when no entry
+    /// covers this step count. Monotone non-increasing in `cursor`
+    /// (entries are non-negative), which is what makes it a sound
+    /// admission price: work only ever burns down.
+    pub fn cost_from(&self, steps: usize, cursor: usize) -> Option<f64> {
+        let entry = self.entries.get(&(steps as u64))?;
+        let from = cursor.min(entry.len());
+        Some(entry[from..].iter().sum())
+    }
+
+    /// Implied skip ratio Γ for `steps`-step requests: 1 − executed /
+    /// decided, where decided is taken as the max per-step expectation
+    /// times the step count (a lower bound on Γ; exact when the row
+    /// count per step is constant, as in the synthetic engine).
+    pub fn implied_gamma(&self, steps: usize) -> Option<f64> {
+        let entry = self.entries.get(&(steps as u64))?;
+        let peak = entry.iter().cloned().fold(0.0f64, f64::max);
+        if peak <= 0.0 {
+            return None;
+        }
+        let total: f64 = entry.iter().sum();
+        Some(1.0 - total / (peak * entry.len() as f64))
+    }
+
+    /// Serialize to the canonical artifact text (sorted keys via
+    /// `BTreeMap`, trailing newline): the same calendar value always
+    /// produces byte-identical output.
+    pub fn encode(&self) -> String {
+        let entries = Json::Obj(
+            self.entries
+                .iter()
+                .map(|(steps, v)| {
+                    (steps.to_string(),
+                     Json::arr(v.iter().map(|x| Json::num(*x))))
+                })
+                .collect(),
+        );
+        let doc = Json::obj(vec![
+            ("calendar", Json::str(CALENDAR_MAGIC)),
+            ("entries", entries),
+            ("model_params",
+             Json::str(&format!("{:016x}", self.model_params))),
+            ("policy", Json::str(&self.policy)),
+            ("version", Json::num(CALENDAR_VERSION as f64)),
+        ]);
+        format!("{doc}\n")
+    }
+
+    /// Strict decode: rejects non-objects, unknown or missing top-level
+    /// keys, a wrong magic or version, a malformed fingerprint, entry
+    /// keys that aren't positive integers, entry vectors whose length
+    /// disagrees with their step count, and any negative or non-finite
+    /// element. Mirrors the `LZTS` snapshot codec's posture: never
+    /// guess at a layout you don't recognize.
+    pub fn decode(text: &str) -> Result<SkipCalendar, JsonError> {
+        let doc = Json::parse(text)?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| JsonError("calendar: not an object".into()))?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(),
+                         "calendar" | "entries" | "model_params"
+                         | "policy" | "version") {
+                return Err(JsonError(format!(
+                    "calendar: unknown key '{key}'")));
+            }
+        }
+        let magic = doc.req("calendar")?.as_str().ok_or_else(|| {
+            JsonError("calendar: magic must be a string".into())
+        })?;
+        if magic != CALENDAR_MAGIC {
+            return Err(JsonError(format!(
+                "calendar: bad magic '{magic}'")));
+        }
+        let version = doc.req("version")?.as_u64().ok_or_else(|| {
+            JsonError("calendar: version must be an integer".into())
+        })?;
+        if version != CALENDAR_VERSION {
+            return Err(JsonError(format!(
+                "calendar: unsupported version {version} (expected \
+                 {CALENDAR_VERSION})")));
+        }
+        let fp = doc.req("model_params")?.as_str().ok_or_else(|| {
+            JsonError("calendar: model_params must be a hex string".into())
+        })?;
+        if fp.is_empty() || fp.len() > 16 {
+            return Err(JsonError(
+                "calendar: model_params must be 1..=16 hex digits".into()));
+        }
+        let model_params = u64::from_str_radix(fp, 16).map_err(|_| {
+            JsonError(format!("calendar: bad model_params '{fp}'"))
+        })?;
+        let policy = doc.req("policy")?.as_str().ok_or_else(|| {
+            JsonError("calendar: policy must be a string".into())
+        })?;
+        let raw = doc.req("entries")?.as_obj().ok_or_else(|| {
+            JsonError("calendar: entries must be an object".into())
+        })?;
+        let mut entries = BTreeMap::new();
+        for (k, v) in raw {
+            let steps: u64 = k.parse().map_err(|_| {
+                JsonError(format!("calendar: bad step count key '{k}'"))
+            })?;
+            if steps == 0 {
+                return Err(JsonError(
+                    "calendar: step count 0 is not a schedule".into()));
+            }
+            let arr = v.as_arr().ok_or_else(|| {
+                JsonError(format!("calendar: entry {steps} must be an \
+                                   array"))
+            })?;
+            if arr.len() as u64 != steps {
+                return Err(JsonError(format!(
+                    "calendar: entry {steps} has {} elements (expected \
+                     {steps})",
+                    arr.len())));
+            }
+            let mut entry = Vec::with_capacity(arr.len());
+            for x in arr {
+                let n = x.as_f64().ok_or_else(|| {
+                    JsonError(format!(
+                        "calendar: entry {steps} has a non-number"))
+                })?;
+                if !n.is_finite() || n < 0.0 {
+                    return Err(JsonError(format!(
+                        "calendar: entry {steps} has a negative or \
+                         non-finite element")));
+                }
+                entry.push(n);
+            }
+            entries.insert(steps, entry);
+        }
+        Ok(SkipCalendar { model_params, policy: policy.to_string(), entries })
+    }
+}
+
+// ------------------------------------------------------------- oracle
+
+/// EWMA smoothing factor for the online fallbacks: slow enough to ride
+/// out per-tick noise, fast enough to track a Γ drift within a few
+/// hundred ticks.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Γ clamp when pricing with the fallback, mirroring
+/// [`crate::coordinator::pool::router::lazy_cost`]: even a saturated
+/// observed Γ must never price work at zero.
+const GAMMA_CLAMP: f64 = 0.95;
+
+/// The router-held pricing oracle: an optional calibrated
+/// [`SkipCalendar`] plus online EWMA estimates that self-calibrate from
+/// the pool gauges when no artifact (or no matching entry) is
+/// available. All state is atomic — priced reads happen on the
+/// dispatch path, ticks happen on the serve loop.
+#[derive(Debug)]
+pub struct PoolCalendar {
+    calendar: Option<SkipCalendar>,
+    /// EWMA of pool-wide observed skip ratio Γ (f64 bits).
+    gamma_bits: AtomicU64,
+    /// EWMA of decided module rows per step per request (f64 bits).
+    inv_per_step_bits: AtomicU64,
+    /// EWMA of wall microseconds per *executed* row (f64 bits); 0 means
+    /// "unknown" — slack checks and deadline defaulting stay off.
+    us_per_inv_bits: AtomicU64,
+    /// EWMA of wire step count per dispatched request (f64 bits).
+    steps_per_req_bits: AtomicU64,
+    // cumulative counters at the previous tick
+    last_rows_run: AtomicU64,
+    last_rows_seen: AtomicU64,
+    last_completed: AtomicU64,
+    last_us: AtomicU64,
+}
+
+fn load_f64(a: &AtomicU64) -> f64 {
+    f64::from_bits(a.load(Ordering::Relaxed))
+}
+
+fn store_f64(a: &AtomicU64, v: f64) {
+    a.store(v.to_bits(), Ordering::Relaxed);
+}
+
+/// One EWMA step: first sample seeds the estimate, later samples blend
+/// at [`EWMA_ALPHA`]. Non-finite samples are dropped.
+fn ewma(a: &AtomicU64, sample: f64) {
+    if !sample.is_finite() {
+        return;
+    }
+    let cur = load_f64(a);
+    let next = if cur == 0.0 {
+        sample
+    } else {
+        cur + EWMA_ALPHA * (sample - cur)
+    };
+    store_f64(a, next);
+}
+
+impl PoolCalendar {
+    /// An oracle around an optional loaded artifact.
+    pub fn new(calendar: Option<SkipCalendar>) -> Self {
+        PoolCalendar {
+            calendar,
+            gamma_bits: AtomicU64::new(0),
+            inv_per_step_bits: AtomicU64::new(0),
+            us_per_inv_bits: AtomicU64::new(0),
+            steps_per_req_bits: AtomicU64::new(0),
+            last_rows_run: AtomicU64::new(0),
+            last_rows_seen: AtomicU64::new(0),
+            last_completed: AtomicU64::new(0),
+            last_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Oracle with no artifact: pure EWMA self-calibration.
+    pub fn online() -> Self {
+        Self::new(None)
+    }
+
+    /// True when a calibrated artifact is loaded.
+    pub fn armed(&self) -> bool {
+        self.calendar.is_some()
+    }
+
+    /// The loaded artifact, if any.
+    pub fn calendar(&self) -> Option<&SkipCalendar> {
+        self.calendar.as_ref()
+    }
+
+    /// Record a dispatched request's wire step count (EWMA input for
+    /// the fallback's rows-per-step estimate).
+    pub fn observe_dispatch(&self, steps: usize) {
+        ewma(&self.steps_per_req_bits, steps as f64);
+    }
+
+    /// Periodic self-calibration from cumulative pool counters
+    /// (`rows_run` / `rows_seen` executed/decided row totals,
+    /// `completed` request total, `live` live replicas, `now_us` shared
+    /// epoch). Deltas since the previous tick feed the Γ, rows-per-step
+    /// and µs-per-row EWMAs; ticks with no progress are no-ops.
+    pub fn tick(&self, rows_run: u64, rows_seen: u64, completed: u64,
+                live: usize, now_us: u64) {
+        let d_run =
+            rows_run.saturating_sub(self.last_rows_run.swap(rows_run,
+                                                            Ordering::Relaxed));
+        let d_seen =
+            rows_seen.saturating_sub(self.last_rows_seen
+                                         .swap(rows_seen, Ordering::Relaxed));
+        let d_done =
+            completed.saturating_sub(self.last_completed
+                                         .swap(completed, Ordering::Relaxed));
+        let prev_us = self.last_us.swap(now_us, Ordering::Relaxed);
+        let d_us = now_us.saturating_sub(prev_us);
+        if d_seen > 0 {
+            ewma(&self.gamma_bits, 1.0 - d_run as f64 / d_seen as f64);
+        }
+        if d_done > 0 {
+            let steps = load_f64(&self.steps_per_req_bits);
+            if steps > 0.0 {
+                // decided rows per completed request, spread over its
+                // steps — the shape factor the fallback price needs
+                ewma(&self.inv_per_step_bits,
+                     d_seen as f64 / d_done as f64 / steps);
+            }
+        }
+        if d_run > 0 && d_us > 0 && prev_us > 0 {
+            // wall time × live replicas approximates busy compute time
+            // under load; idle ticks contribute no executed rows and
+            // are skipped by the d_run guard, and the first tick (whose
+            // window stretches back to the epoch) by the prev_us guard
+            ewma(&self.us_per_inv_bits,
+                 d_us as f64 * live.max(1) as f64 / d_run as f64);
+        }
+    }
+
+    /// Observed-Γ EWMA (0 until the first tick with row progress).
+    pub fn gamma(&self) -> f64 {
+        load_f64(&self.gamma_bits)
+    }
+
+    /// Wall-µs-per-executed-row estimate; `None` until calibrated.
+    pub fn us_per_inv(&self) -> Option<f64> {
+        let v = load_f64(&self.us_per_inv_bits);
+        (v > 0.0).then_some(v)
+    }
+
+    /// Force the µs-per-row estimate (tests and the calibrate verb's
+    /// serve-side seeding).
+    pub fn set_us_per_inv(&self, v: f64) {
+        store_f64(&self.us_per_inv_bits, v.max(0.0));
+    }
+
+    /// Price a request: predicted remaining executed module rows for a
+    /// `steps`-step request at `cursor`, in milli-rows. Calendar entry
+    /// when one covers the step count, EWMA fallback `remaining ×
+    /// rows_per_step × (1 − Γ)` otherwise; 0 ("unpriced") when neither
+    /// knows anything yet.
+    pub fn price_milli(&self, steps: usize, cursor: usize) -> u64 {
+        if let Some(cost) =
+            self.calendar.as_ref().and_then(|c| c.cost_from(steps, cursor))
+        {
+            return (cost * 1e3).round() as u64;
+        }
+        let per_step = load_f64(&self.inv_per_step_bits);
+        if per_step <= 0.0 {
+            return 0;
+        }
+        let gamma = self.gamma().clamp(0.0, GAMMA_CLAMP);
+        let remaining = steps.saturating_sub(cursor) as f64;
+        (remaining * per_step * (1.0 - gamma) * 1e3).round() as u64
+    }
+
+    /// Predicted service time for `cost_milli` milli-rows of work;
+    /// `None` until the µs-per-row EWMA has calibrated.
+    pub fn service_us(&self, cost_milli: u64) -> Option<u64> {
+        let per = self.us_per_inv()?;
+        Some((cost_milli as f64 / 1e3 * per).round() as u64)
+    }
+
+    /// Calendar-derived default deadline for a latency-tier request
+    /// admitted at `now_us`: predicted service × [`DEADLINE_HEADROOM`],
+    /// floored at [`DEADLINE_FLOOR_US`]. `None` while the request can't
+    /// be priced in time units yet.
+    pub fn default_deadline_us(&self, now_us: u64, steps: usize)
+                               -> Option<u64> {
+        let cost = self.price_milli(steps, 0);
+        if cost == 0 {
+            return None;
+        }
+        let svc = self.service_us(cost)?;
+        let lead = ((svc as f64 * DEADLINE_HEADROOM) as u64)
+            .max(DEADLINE_FLOOR_US);
+        Some(now_us + lead)
+    }
+
+    /// Convert a predicted-cost backlog (milli-rows) into
+    /// request-equivalents — the unit brownout thresholds are tuned in.
+    /// `None` until the fallback shape estimates exist.
+    pub fn queue_equivalent(&self, backlog_milli: u64) -> Option<f64> {
+        let per_step = load_f64(&self.inv_per_step_bits);
+        let steps = load_f64(&self.steps_per_req_bits);
+        if per_step <= 0.0 || steps <= 0.0 {
+            return None;
+        }
+        let gamma = self.gamma().clamp(0.0, GAMMA_CLAMP);
+        let per_req = per_step * steps * (1.0 - gamma);
+        (per_req > 0.0)
+            .then(|| backlog_milli as f64 / 1e3 / per_req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    fn sample() -> SkipCalendar {
+        let mut c = SkipCalendar::new(0xDEAD_BEEF_F00D_CAFE, "sim:lazy=50");
+        c.entries.insert(4, vec![16.0, 8.0, 8.25, 7.75]);
+        c.entries.insert(10, (0..10).map(|s| 16.0 / (1 + s) as f64)
+                                    .collect());
+        c
+    }
+
+    #[test]
+    fn codec_round_trips() {
+        let c = sample();
+        let text = c.encode();
+        let back = SkipCalendar::decode(&text).expect("decode");
+        assert_eq!(back, c);
+        // and the canonical form is a fixed point: byte-identical
+        assert_eq!(back.encode(), text);
+    }
+
+    #[test]
+    fn encode_is_deterministic() {
+        // insertion order must not leak into the artifact bytes
+        let a = sample();
+        let mut b = SkipCalendar::new(0xDEAD_BEEF_F00D_CAFE, "sim:lazy=50");
+        let mut entries: Vec<_> = a.entries.clone().into_iter().collect();
+        entries.reverse();
+        for (k, v) in entries {
+            b.entries.insert(k, v);
+        }
+        assert_eq!(a.encode(), b.encode());
+    }
+
+    #[test]
+    fn strict_decode_rejects() {
+        let good = sample().encode();
+        assert!(SkipCalendar::decode(&good).is_ok());
+        let cases: &[(&str, &str)] = &[
+            ("not json", "calendar"),
+            ("[1,2]", "not an object"),
+            // missing each required key
+            (r#"{"entries":{},"model_params":"ab","policy":"p","version":1}"#,
+             "missing magic"),
+            (r#"{"calendar":"lazydit/skip-calendar","model_params":"ab","policy":"p","version":1}"#,
+             "missing entries"),
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{},"policy":"p","version":1}"#,
+             "missing model_params"),
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{},"model_params":"ab","version":1}"#,
+             "missing policy"),
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{},"model_params":"ab","policy":"p"}"#,
+             "missing version"),
+            // wrong magic / version
+            (r#"{"calendar":"other","entries":{},"model_params":"ab","policy":"p","version":1}"#,
+             "bad magic"),
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{},"model_params":"ab","policy":"p","version":2}"#,
+             "future version"),
+            // unknown key
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{},"model_params":"ab","policy":"p","version":1,"extra":0}"#,
+             "unknown key"),
+            // fingerprint malformed
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{},"model_params":"xyz","policy":"p","version":1}"#,
+             "non-hex fingerprint"),
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{},"model_params":"00112233445566778899","policy":"p","version":1}"#,
+             "overlong fingerprint"),
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{},"model_params":7,"policy":"p","version":1}"#,
+             "numeric fingerprint"),
+            // entry shape violations
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{"x":[1]},"model_params":"ab","policy":"p","version":1}"#,
+             "non-numeric step key"),
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{"0":[]},"model_params":"ab","policy":"p","version":1}"#,
+             "zero steps"),
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{"3":[1,2]},"model_params":"ab","policy":"p","version":1}"#,
+             "length mismatch"),
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{"2":[1,-0.5]},"model_params":"ab","policy":"p","version":1}"#,
+             "negative element"),
+            (r#"{"calendar":"lazydit/skip-calendar","entries":{"2":[1,"x"]},"model_params":"ab","policy":"p","version":1}"#,
+             "non-number element"),
+            (r#"{"calendar":"lazydit/skip-calendar","entries":[1],"model_params":"ab","policy":"p","version":1}"#,
+             "entries not an object"),
+        ];
+        for (text, why) in cases {
+            assert!(SkipCalendar::decode(text).is_err(),
+                    "decode must reject: {why}");
+        }
+    }
+
+    #[test]
+    fn cost_from_is_monotone_non_increasing() {
+        propcheck(200, |g| {
+            let steps = g.usize_in(1, 64);
+            let mut c = SkipCalendar::new(g.u64(), "prop");
+            let entry: Vec<f64> = (0..steps)
+                .map(|_| g.f32_in(0.0, 32.0) as f64)
+                .collect();
+            c.entries.insert(steps as u64, entry);
+            let mut prev = f64::INFINITY;
+            for cursor in 0..=steps + 2 {
+                let cost = c.cost_from(steps, cursor).expect("entry");
+                assert!(cost <= prev + 1e-9,
+                        "cost rose as the cursor advanced: {cost} > {prev} \
+                         at cursor {cursor}");
+                assert!(cost >= -0.0, "cost must be non-negative");
+                prev = cost;
+            }
+            assert_eq!(c.cost_from(steps, steps).unwrap(), 0.0,
+                       "a finished request costs nothing");
+            assert!(c.cost_from(steps + 1, 0).is_none(),
+                    "unknown step counts have no calendar price");
+        });
+    }
+
+    #[test]
+    fn profile_records_and_merges() {
+        let mut a = StepProfile::new();
+        a.record(0, 10, 16);
+        a.record(2, 4, 16);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.seen_rows(1), 0);
+        assert_eq!(a.run_ratio(1), None);
+        assert_eq!(a.run_ratio(0), Some(10.0 / 16.0));
+        let mut b = StepProfile::new();
+        b.record(0, 6, 16);
+        b.merge(&a);
+        assert_eq!(b.run_rows(0), 16);
+        assert_eq!(b.seen_rows(0), 32);
+        assert_eq!(b.run_rows(2), 4);
+        assert_eq!(b.total_run(), 20);
+        assert_eq!(b.total_seen(), 48);
+    }
+
+    #[test]
+    fn insert_profile_normalizes_per_request() {
+        let mut p = StepProfile::new();
+        // 4 requests × 2 steps, 8 slots each: all run at step 0, half
+        // skipped at step 1
+        p.record(0, 32, 32);
+        p.record(1, 16, 32);
+        let mut c = SkipCalendar::new(1, "t");
+        c.insert_profile(2, &p, 4);
+        assert_eq!(c.entries[&2], vec![8.0, 4.0]);
+        assert_eq!(c.cost_from(2, 0), Some(12.0));
+        assert_eq!(c.cost_from(2, 1), Some(4.0));
+    }
+
+    #[test]
+    fn oracle_prefers_calendar_and_falls_back() {
+        let mut cal = SkipCalendar::new(1, "t");
+        cal.entries.insert(4, vec![8.0, 4.0, 2.0, 1.0]);
+        let oracle = PoolCalendar::new(Some(cal));
+        assert_eq!(oracle.price_milli(4, 0), 15_000);
+        assert_eq!(oracle.price_milli(4, 2), 3_000);
+        // no entry for 7 steps and no EWMA yet → unpriced
+        assert_eq!(oracle.price_milli(7, 0), 0);
+        // calibrate the fallback: 2 requests completed, 7 steps each,
+        // 8 rows/step decided, half skipped
+        oracle.observe_dispatch(7);
+        oracle.observe_dispatch(7);
+        oracle.tick(0, 0, 0, 1, 1_000);
+        oracle.tick(56, 112, 2, 1, 2_000);
+        let priced = oracle.price_milli(7, 0);
+        assert!(priced > 0, "fallback must price once calibrated");
+        // remaining 7 × 8 rows/step × (1 − 0.5) = 28 rows
+        assert!((priced as i64 - 28_000).abs() < 2_000,
+                "fallback price off: {priced}");
+        assert!(oracle.price_milli(7, 6) < priced,
+                "fallback price must shrink with the cursor");
+    }
+
+    #[test]
+    fn oracle_service_time_gates_on_calibration() {
+        let oracle = PoolCalendar::online();
+        assert_eq!(oracle.service_us(10_000), None);
+        assert_eq!(oracle.default_deadline_us(0, 4), None);
+        oracle.set_us_per_inv(100.0);
+        assert_eq!(oracle.service_us(10_000), Some(1_000));
+        // still no price → still no default deadline
+        assert_eq!(oracle.default_deadline_us(0, 4), None);
+        let mut cal = SkipCalendar::new(1, "t");
+        cal.entries.insert(4, vec![8.0, 4.0, 2.0, 1.0]);
+        let oracle = PoolCalendar::new(Some(cal));
+        oracle.set_us_per_inv(100.0);
+        // 15 rows × 100 µs = 1.5 ms service; headroom-floored deadline
+        let dl = oracle.default_deadline_us(5_000, 4).expect("deadline");
+        assert!(dl >= 5_000 + DEADLINE_FLOOR_US);
+    }
+
+    #[test]
+    fn queue_equivalent_inverts_per_request_cost() {
+        let oracle = PoolCalendar::online();
+        assert_eq!(oracle.queue_equivalent(1_000), None);
+        oracle.observe_dispatch(10);
+        oracle.tick(0, 0, 0, 1, 0);
+        oracle.tick(40, 80, 1, 1, 1_000); // 80 rows seen, Γ=0.5, 10 steps
+        // per request ≈ 8 rows/step × 10 steps × 0.5 = 40 rows
+        let q = oracle.queue_equivalent(80_000).expect("calibrated");
+        assert!((q - 2.0).abs() < 0.25, "queue equivalent off: {q}");
+    }
+}

@@ -21,6 +21,11 @@
 //!   hits return a finished output with zero engine work, near hits
 //!   (same family, different seed) seed a joiner's lane caches from a
 //!   donor trajectory;
+//! * [`calendar`] — calibrated skip calendars: per-(model, steps,
+//!   policy) predictions of executed module rows per remaining step,
+//!   profiled by `lazydit calibrate` (with an online EWMA fallback),
+//!   that price every request at admission and anchor the latency
+//!   tier's deadlines;
 //! * [`sim`] — a deterministic synthetic engine: exercises the whole pool
 //!   (and the scaling bench) without artifacts or the XLA runtime;
 //! * [`fault`] — deterministic fault injection: a seeded [`fault::FaultPlan`]
@@ -60,6 +65,7 @@
 pub mod agg;
 pub mod brownout;
 pub mod cache;
+pub mod calendar;
 pub mod fault;
 pub mod replica;
 pub mod router;
@@ -70,6 +76,7 @@ pub mod supervisor;
 pub use agg::PoolReport;
 pub use brownout::{Brownout, BrownoutConfig};
 pub use cache::{CacheConfig, CacheStats, PoolCache};
+pub use calendar::{PoolCalendar, SkipCalendar, StepProfile};
 pub use fault::{FaultEngine, FaultPlan, FaultSchedule};
 pub use replica::{PoolJob, ReplicaGauges, ReplicaHandle, ReplicaReport,
                   ReplicaTier};
@@ -175,6 +182,14 @@ pub trait PoolEngine {
                    _donor: &crate::coordinator::request::TrajectorySnapshot)
                    -> (u64, u64) {
         (self.submit(req), 0)
+    }
+
+    /// Per-step-index run/seen row counters recorded while serving —
+    /// the raw material `lazydit calibrate` aggregates into a
+    /// [`calendar::SkipCalendar`]. `None` (the default) for engines
+    /// that don't profile per step.
+    fn step_profile(&self) -> Option<&calendar::StepProfile> {
+        None
     }
 
     /// Raise the engine's target laziness by `boost` percentage points

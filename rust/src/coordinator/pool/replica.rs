@@ -45,20 +45,50 @@ pub struct PoolJob {
     /// along on steal migration, so the wait covers the job's whole
     /// queued life, not just its final queue.
     pub enqueued_us: u64,
+    /// Predicted cost of the job's remaining work in milli-module-
+    /// invocations, priced by the router's [`super::PoolCalendar`] at
+    /// admission (0 = unpriced). Rides along on steal/migration so the
+    /// per-replica `predicted_cost_milli` gauge transfers with the job.
+    pub cost_milli: u64,
 }
+
+/// Effective deadline assigned to jobs whose request carries none:
+/// their enqueue instant plus this slack. Far enough out that any real
+/// deadline sorts ahead of every legacy job, while legacy jobs keep
+/// their exact relative FIFO order among themselves (same offset ⇒
+/// enqueue-order keys) — so a deadline-free workload under EDF is
+/// byte-for-byte the old FIFO schedule, and a legacy job can never be
+/// starved indefinitely by a stream of far-future deadlines.
+pub const LEGACY_DEADLINE_US: u64 = 60_000_000;
 
 impl PoolJob {
     /// A job for a freshly routed request.
     pub fn fresh(req: Request, respond: mpsc::Sender<RequestResult>,
                  enqueued_us: u64) -> PoolJob {
-        PoolJob { payload: JobPayload::Fresh(req), respond, enqueued_us }
+        PoolJob { payload: JobPayload::Fresh(req), respond, enqueued_us,
+                  cost_milli: 0 }
     }
 
     /// A job resuming an evicted trajectory.
     pub fn resumed(snap: TrajectorySnapshot,
                    respond: mpsc::Sender<RequestResult>,
                    enqueued_us: u64) -> PoolJob {
-        PoolJob { payload: JobPayload::Resumed(snap), respond, enqueued_us }
+        PoolJob { payload: JobPayload::Resumed(snap), respond, enqueued_us,
+                  cost_milli: 0 }
+    }
+
+    /// A job resuming an evicted trajectory, queue-stamped at the
+    /// trajectory's ORIGINAL admission instant — not "now". Every
+    /// re-queue path (panic recovery, park-for-respawn, drain-by-
+    /// migration, mid-trajectory relief) builds its job through here so
+    /// the queue-wait span measured at the next engine admission covers
+    /// the request's whole queued life since the router first admitted
+    /// it, instead of restarting at each re-queue.
+    pub fn resumed_restamped(snap: TrajectorySnapshot,
+                             respond: mpsc::Sender<RequestResult>)
+                             -> PoolJob {
+        let enqueued_us = snap.admitted_us;
+        PoolJob::resumed(snap, respond, enqueued_us)
     }
 
     /// The pool-unique request id.
@@ -96,6 +126,26 @@ impl PoolJob {
             JobPayload::Resumed(s) => s.pending_steps(),
         }
     }
+
+    /// The request's absolute deadline (epoch-µs; 0 = none declared).
+    pub fn deadline_us(&self) -> u64 {
+        match &self.payload {
+            JobPayload::Fresh(r) => r.deadline_us,
+            JobPayload::Resumed(s) => s.req.deadline_us,
+        }
+    }
+
+    /// The EDF sort key: the declared deadline, or — for deadline-free
+    /// jobs — the enqueue stamp pushed out by [`LEGACY_DEADLINE_US`].
+    /// Total over every job, so a mixed queue orders deterministically:
+    /// real deadlines first (earliest wins), then legacy jobs in their
+    /// original FIFO order.
+    pub fn effective_deadline(&self) -> u64 {
+        match self.deadline_us() {
+            0 => self.enqueued_us.saturating_add(LEGACY_DEADLINE_US),
+            d => d,
+        }
+    }
 }
 
 /// Per-replica provisioning: the SLO class a replica is tuned for and
@@ -120,6 +170,12 @@ pub struct ReplicaTier {
     /// In-engine admission bound while stealing is armed: everything
     /// beyond it stays in the queue, where it remains migratable.
     pub steal_window: usize,
+    /// Order this replica's queue earliest-deadline-first instead of
+    /// FIFO (default on). Deadline-free workloads are unaffected either
+    /// way — [`PoolJob::effective_deadline`] keys legacy jobs by their
+    /// enqueue order — so the flag exists for A/B measurement
+    /// (the scaling bench's EDF-vs-FIFO arm), not as a safety valve.
+    pub edf: bool,
 }
 
 impl Default for ReplicaTier {
@@ -145,7 +201,8 @@ impl ReplicaTier {
             b *= 2;
         }
         buckets.push(max_batch);
-        ReplicaTier { slo, max_batch, buckets, steal_window: max_batch }
+        ReplicaTier { slo, max_batch, buckets, steal_window: max_batch,
+                      edf: true }
     }
 
     /// Can this replica honor a request of class `slo`? Enforced at
@@ -327,6 +384,19 @@ pub struct ReplicaGauges {
     /// laziness the worker applies to its engine
     /// ([`PoolEngine::set_gamma_boost`]) at the next loop boundary.
     pub gamma_boost: AtomicUsize,
+    /// Predicted module invocations (milli-units) across this replica's
+    /// *queued* jobs, priced by the router's calendar at dispatch.
+    /// Incremented optimistically at dispatch, decremented at engine
+    /// admission / forfeit, transferred with steals — the cost-weighted
+    /// sibling of `queued`. Advisory: resumed/migrated jobs re-enter at
+    /// cost 0, so the gauge may undercount but never leaks.
+    pub predicted_cost_milli: AtomicU64,
+    /// Requests that retired at or before their declared deadline.
+    /// Deadline-free requests count in neither bucket.
+    pub deadline_hits: AtomicU64,
+    /// Requests that retired after their declared deadline (completed
+    /// late — sheds never reach a worker and are not counted here).
+    pub deadline_misses: AtomicU64,
 }
 
 impl ReplicaGauges {
@@ -378,6 +448,9 @@ impl ReplicaGauges {
                 || self.needs_respawn.load(Ordering::Acquire),
             slo: self.live_slo(tier.slo),
             max_batch: tier.max_batch,
+            predicted_cost_milli: self
+                .predicted_cost_milli
+                .load(Ordering::Relaxed),
         }
     }
 
@@ -422,6 +495,11 @@ pub struct GaugeSnapshot {
     /// The replica's batch width ([`ReplicaTier::max_batch`]) —
     /// throughput requests prefer wider replicas.
     pub max_batch: usize,
+    /// Predicted milli-module-invocations across the replica's queued
+    /// jobs ([`ReplicaGauges::predicted_cost_milli`]) — the calendar-
+    /// priced backlog the router's cost ordering and the brownout
+    /// pressure signal read.
+    pub predicted_cost_milli: u64,
 }
 
 impl GaugeSnapshot {
@@ -462,6 +540,10 @@ pub struct ReplicaReport {
     pub restarts: u64,
     /// Times this replica's circuit breaker tripped open.
     pub breaker_trips: u64,
+    /// Requests retired at or before their declared deadline.
+    pub deadline_hits: u64,
+    /// Requests retired after their declared deadline.
+    pub deadline_misses: u64,
     /// Final buffer-arena counters, when the engine owns one (real
     /// engines do; the synthetic engine reports `None`). A healthy
     /// steady state shows `reused` ≫ `allocated` — see docs/PERF.md.
@@ -488,6 +570,8 @@ impl ReplicaReport {
             warm_hits: 0,
             restarts: 0,
             breaker_trips: 0,
+            deadline_hits: 0,
+            deadline_misses: 0,
             arena: None,
             error: Some(msg.into()),
         }
@@ -677,6 +761,10 @@ impl ReplicaHandle {
             rep.restarts = self.gauges.restarts.load(Ordering::Relaxed);
             rep.breaker_trips =
                 self.gauges.breaker_trips.load(Ordering::Relaxed);
+            rep.deadline_hits =
+                self.gauges.deadline_hits.load(Ordering::Relaxed);
+            rep.deadline_misses =
+                self.gauges.deadline_misses.load(Ordering::Relaxed);
             rep.completed_by_slo = self.gauges.completed_by_slo();
             *slot = Some(rep);
         }
@@ -769,8 +857,7 @@ fn spawn_worker(id: usize, factory: EngineFactory,
                             let Some(tx) = responders.remove(&snap.req.id)
                             else { continue };
                             let steps = snap.pending_steps();
-                            let job = PoolJob::resumed(
-                                snap, tx, crate::obs::epoch_us());
+                            let job = PoolJob::resumed_restamped(snap, tx);
                             match q2.try_push(job) {
                                 Ok(()) => {
                                     recovered += 1;
@@ -799,8 +886,7 @@ fn spawn_worker(id: usize, factory: EngineFactory,
                             else { continue };
                             let rid = snap.req.id;
                             let saved = snap.cursor;
-                            let job = PoolJob::resumed(
-                                snap, tx, crate::obs::epoch_us());
+                            let job = PoolJob::resumed_restamped(snap, tx);
                             // thief-side-only accounting: this side's
                             // ledger resolves wholesale below
                             if rb.place_from_dead(id, job).is_ok() {
@@ -855,6 +941,10 @@ fn spawn_worker(id: usize, factory: EngineFactory,
                                 g2.restarts.load(Ordering::Relaxed);
                             rep.breaker_trips =
                                 g2.breaker_trips.load(Ordering::Relaxed);
+                            rep.deadline_hits =
+                                g2.deadline_hits.load(Ordering::Relaxed);
+                            rep.deadline_misses =
+                                g2.deadline_misses.load(Ordering::Relaxed);
                             rep.completed_by_slo = g2.completed_by_slo();
                             *slot = Some(rep);
                         }
@@ -1023,9 +1113,16 @@ fn run_replica(id: usize, factory: EngineFactory,
              gauges: &ReplicaGauges, engine_pending: &AtomicUsize,
              admitting: &AtomicUsize, tracer: &Tracer,
              cache: Option<&PoolCache>,
-             result_keys: &mut BTreeMap<u64, RequestKey>, job: PoolJob) {
+             result_keys: &mut BTreeMap<u64, RequestKey>,
+             deadlines: &mut BTreeMap<u64, u64>, job: PoolJob) {
         let wire_steps = job.remaining_steps();
         let wire_id = job.id();
+        // the job leaves the queued-work pool here: its priced backlog
+        // contribution comes off the gauge whether or not submit
+        // succeeds (a submit panic settles the rest of the ledger, and
+        // re-queued residents re-enter at cost 0)
+        dec_u64(&gauges.predicted_cost_milli, job.cost_milli);
+        let deadline_us = job.deadline_us();
         if tracer.is_enabled() {
             let now = tracer.now_us();
             tracer.record_at(TraceEvent {
@@ -1095,6 +1192,9 @@ fn run_replica(id: usize, factory: EngineFactory,
         }
         engine_pending.store(engine.pending_steps(), Ordering::Relaxed);
         admitting.store(0, Ordering::Relaxed);
+        if deadline_us > 0 {
+            deadlines.insert(rid, deadline_us);
+        }
         responders.insert(rid, job.respond);
     }
     let mut error: Option<String> = None;
@@ -1105,6 +1205,12 @@ fn run_replica(id: usize, factory: EngineFactory,
     // (cursor past the warm horizon — stop snapshotting them).
     let mut result_keys: BTreeMap<u64, RequestKey> = BTreeMap::new();
     let mut donor_done: BTreeSet<u64> = BTreeSet::new();
+    // declared deadline of every admitted-but-unfinished request,
+    // captured at admission (the payload is consumed there) and settled
+    // into the hit/miss gauges at retire. Residents that migrate away
+    // retire elsewhere; their stale entries are dropped on removal
+    // misses and die with the map — advisory accounting, never a leak.
+    let mut deadlines: BTreeMap<u64, u64> = BTreeMap::new();
     // brownout stage-2 dial, applied only on change (the engine call may
     // recompute thresholds); 0 restores the configured target
     let mut boost_applied = 0usize;
@@ -1166,13 +1272,22 @@ fn run_replica(id: usize, factory: EngineFactory,
             Some(rb) => rb.effective_window(tier),
             None => tier.engine_window(false),
         };
-        // continuous batching: absorb whatever arrived, up to the window
+        // continuous batching: absorb whatever arrived, up to the
+        // window. EDF tiers take the earliest effective deadline first
+        // (exact FIFO when nothing declares one); the FIFO arm exists
+        // for A/B measurement.
         while engine.active_count() < window {
-            match queue.try_pop() {
+            let popped = if tier.edf {
+                queue.try_pop_min_by_key(|j| j.effective_deadline())
+            } else {
+                queue.try_pop()
+            };
+            match popped {
                 Some(job) => {
                     idle_misses = 0;
                     admit(&mut engine, responders, gauges, engine_pending,
-                          admitting, tracer, cache, &mut result_keys, job);
+                          admitting, tracer, cache, &mut result_keys,
+                          &mut deadlines, job);
                 }
                 None => break,
             }
@@ -1197,7 +1312,8 @@ fn run_replica(id: usize, factory: EngineFactory,
                         });
                     }
                     admit(&mut engine, responders, gauges, engine_pending,
-                          admitting, tracer, cache, &mut result_keys, job);
+                          admitting, tracer, cache, &mut result_keys,
+                          &mut deadlines, job);
                     continue;
                 }
             }
@@ -1209,11 +1325,18 @@ fn run_replica(id: usize, factory: EngineFactory,
             } else {
                 IDLE_WAIT_PLAIN
             };
-            match queue.pop_timeout(wait) {
+            let popped = if tier.edf {
+                queue.pop_timeout_min_by_key(wait,
+                                             |j| j.effective_deadline())
+            } else {
+                queue.pop_timeout(wait)
+            };
+            match popped {
                 Popped::Item(job) => {
                     idle_misses = 0;
                     admit(&mut engine, responders, gauges, engine_pending,
-                          admitting, tracer, cache, &mut result_keys, job);
+                          admitting, tracer, cache, &mut result_keys,
+                          &mut deadlines, job);
                 }
                 Popped::Closed => break,
                 Popped::TimedOut => continue,
@@ -1228,6 +1351,21 @@ fn run_replica(id: usize, factory: EngineFactory,
                     gauges.completed_by_slo[res.slo.index()]
                         .fetch_add(1, Ordering::Relaxed);
                     gauges.record_latency(res.slo, res.latency);
+                    // deadline settlement: compare the retire instant
+                    // against the declared deadline captured at
+                    // admission (deadline-free requests skip both
+                    // buckets, so hit-rate is over declared SLOs only)
+                    if let Some(dl) = deadlines.remove(&res.id) {
+                        if crate::obs::epoch_us() <= dl {
+                            gauges
+                                .deadline_hits
+                                .fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            gauges
+                                .deadline_misses
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
                     if tracer.is_enabled() {
                         tracer.record_at(TraceEvent {
                             kind: EventKind::Retire,
@@ -1363,6 +1501,8 @@ fn run_replica(id: usize, factory: EngineFactory,
         warm_hits: gauges.warm_hits.load(Ordering::Relaxed),
         restarts: gauges.restarts.load(Ordering::Relaxed),
         breaker_trips: gauges.breaker_trips.load(Ordering::Relaxed),
+        deadline_hits: gauges.deadline_hits.load(Ordering::Relaxed),
+        deadline_misses: gauges.deadline_misses.load(Ordering::Relaxed),
         arena: engine.arena_stats(),
         error,
     });
@@ -1378,6 +1518,15 @@ pub(crate) fn dec(a: &AtomicUsize, n: usize) {
     });
 }
 
+/// [`dec`] for the u64 gauges (predicted cost) — saturating for the
+/// same reason: a missed increment (resumed job, test harness) must
+/// never wrap the gauge into a pool-sized phantom backlog.
+pub(crate) fn dec_u64(a: &AtomicU64, n: u64) {
+    let _ = a.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+        Some(v.saturating_sub(n))
+    });
+}
+
 /// Drop queued jobs (their responders close → clients see a structured
 /// "engine stopped") and roll their load out of the gauges, marking each
 /// as forfeited for the router's admission ledger.
@@ -1386,6 +1535,7 @@ fn refuse_remaining(queue: &BoundedQueue<PoolJob>, gauges: &ReplicaGauges) {
     while let Some(job) = queue.try_pop() {
         dec(&gauges.queued, 1);
         dec(&gauges.pending_steps, job.remaining_steps());
+        dec_u64(&gauges.predicted_cost_milli, job.cost_milli);
         gauges.forfeited.fetch_add(1, Ordering::Relaxed);
     }
 }
@@ -1415,7 +1565,7 @@ fn park_for_respawn(id: usize, engine: &mut Box<dyn PoolEngine>,
             c.offer_donor(&snap);
         }
         let steps = snap.pending_steps();
-        let job = PoolJob::resumed(snap, tx, crate::obs::epoch_us());
+        let job = PoolJob::resumed_restamped(snap, tx);
         if queue.try_push(job).is_err() {
             // full or closed: the dropped responder surfaces a
             // structured error on the client; the ledger resolves here
@@ -1474,7 +1624,7 @@ fn migrate_residents(id: usize, engine: &mut Box<dyn PoolEngine>,
         }
         let steps = snap.pending_steps();
         let cursor = snap.cursor;
-        let job = PoolJob::resumed(snap, tx, crate::obs::epoch_us());
+        let job = PoolJob::resumed_restamped(snap, tx);
         let placed = match to {
             Some(thief) => rb.push_to(id, thief, job),
             None => rb.place(id, job),
@@ -1902,5 +2052,132 @@ mod tests {
         assert!((s.lazy_ratio - 0.25).abs() < 1e-12);
         assert_eq!(s.slo, Slo::Latency);
         assert_eq!(s.max_batch, 2);
+    }
+
+    fn deadline_job(id: u64, enqueued_us: u64, deadline_us: u64)
+                    -> PoolJob {
+        let (tx, _rx) = mpsc::channel();
+        let mut req = Request::new(id, 1, 4, id);
+        req.deadline_us = deadline_us;
+        // _rx dropped: these jobs only exercise queue ordering
+        PoolJob::fresh(req, tx, enqueued_us)
+    }
+
+    #[test]
+    fn effective_deadline_orders_declared_before_legacy() {
+        // declared deadlines pass through verbatim
+        assert_eq!(deadline_job(1, 500, 9_000).effective_deadline(), 9_000);
+        // legacy (no deadline): enqueue stamp pushed out by the fixed
+        // offset, so relative FIFO order among legacy jobs is preserved
+        assert_eq!(deadline_job(2, 500, 0).effective_deadline(),
+                   500 + LEGACY_DEADLINE_US);
+        assert_eq!(deadline_job(3, 900, 0).effective_deadline(),
+                   900 + LEGACY_DEADLINE_US);
+        // an untimed job (enqueued_us 0, test harnesses) still totals
+        assert_eq!(deadline_job(4, 0, 0).effective_deadline(),
+                   LEGACY_DEADLINE_US);
+    }
+
+    #[test]
+    fn edf_queue_orders_deadlines_and_never_starves_legacy() {
+        let q: BoundedQueue<PoolJob> = BoundedQueue::new(8);
+        // arrival order: legacy, late deadline, early deadline, legacy
+        q.try_push(deadline_job(0, 100, 0)).map_err(|_| "q").unwrap();
+        q.try_push(deadline_job(1, 200, 50_000)).map_err(|_| "q").unwrap();
+        q.try_push(deadline_job(2, 300, 10_000)).map_err(|_| "q").unwrap();
+        q.try_push(deadline_job(3, 400, 0)).map_err(|_| "q").unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| {
+            q.try_pop_min_by_key(|j| j.effective_deadline())
+        })
+        .map(|j| j.id())
+        .collect();
+        // declared deadlines first (earliest wins), then the legacy
+        // jobs in their original FIFO order — never dropped
+        assert_eq!(order, vec![2, 1, 0, 3]);
+    }
+
+    #[test]
+    fn restamped_resume_keeps_original_admission_instant() {
+        // the queue-wait regression: a re-queued resident's job must be
+        // stamped at the trajectory's ORIGINAL admission, so the wait
+        // span measured at its next admission covers its whole queued
+        // life — not just the slice since the re-queue
+        let mut eng = SimEngine::new(SimSpec::fast());
+        let mut req = Request::new(0, 1, 6, 42);
+        req.deadline_us = 777_000;
+        let rid = eng.submit(req);
+        let _ = eng.step_round().unwrap();
+        let snap = eng.evict_to_snapshot(rid).unwrap();
+        let admitted = snap.admitted_us;
+        assert!(admitted > 0, "sim stamps admission");
+        let (tx, _rx) = mpsc::channel();
+        let job = PoolJob::resumed_restamped(snap, tx);
+        assert_eq!(job.enqueued_us, admitted);
+        assert!(job.enqueued_us < crate::obs::epoch_us()
+                || job.enqueued_us == admitted);
+        // the declared deadline rides along too
+        assert_eq!(job.deadline_us(), 777_000);
+        assert_eq!(job.effective_deadline(), 777_000);
+        // resumed jobs re-enter unpriced by design
+        assert_eq!(job.cost_milli, 0);
+    }
+
+    #[test]
+    fn deadline_hits_and_misses_settle_at_retire() {
+        let h = ReplicaHandle::spawn(12, 16,
+                                     SimEngine::factory(SimSpec::fast()))
+            .unwrap();
+        let mk = |deadline_us: u64| {
+            let (tx, rx) = mpsc::channel();
+            let mut req = Request::new(0, 1, 3, 7);
+            req.deadline_us = deadline_us;
+            h.gauges.queued.fetch_add(1, Ordering::Relaxed);
+            h.gauges.pending_steps.fetch_add(3, Ordering::Relaxed);
+            h.try_send(PoolJob::fresh(req, tx, crate::obs::epoch_us()))
+                .map_err(|_| "send")
+                .unwrap();
+            rx
+        };
+        // generous deadline → hit; 1µs-past deadline → miss; none →
+        // neither bucket
+        let rx_hit = mk(crate::obs::epoch_us() + 60_000_000);
+        let rx_miss = mk(1);
+        let rx_none = mk(0);
+        rx_hit.recv().unwrap();
+        rx_miss.recv().unwrap();
+        rx_none.recv().unwrap();
+        let rep = h.join_report();
+        assert_eq!(rep.deadline_hits, 1, "{rep:?}");
+        assert_eq!(rep.deadline_misses, 1, "{rep:?}");
+        assert_eq!(h.gauges.deadline_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(h.gauges.deadline_misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn predicted_cost_gauge_settles_at_admission_and_refusal() {
+        let g = ReplicaGauges::default();
+        // saturating: a decrement without a matching increment (resumed
+        // job priced elsewhere) clamps at zero instead of wrapping
+        dec_u64(&g.predicted_cost_milli, 5_000);
+        assert_eq!(g.predicted_cost_milli.load(Ordering::Relaxed), 0);
+        g.predicted_cost_milli.fetch_add(12_000, Ordering::Relaxed);
+        dec_u64(&g.predicted_cost_milli, 4_000);
+        assert_eq!(g.predicted_cost_milli.load(Ordering::Relaxed), 8_000);
+        // the snapshot surfaces the live value for candidate ordering
+        let s = g.snapshot(&ReplicaTier::default());
+        assert_eq!(s.predicted_cost_milli, 8_000);
+        // refusal drains a priced job's contribution with its slot
+        let q: BoundedQueue<PoolJob> = BoundedQueue::new(4);
+        let (tx, _rx) = mpsc::channel();
+        let mut job = PoolJob::fresh(Request::new(0, 1, 4, 1), tx, 0);
+        job.cost_milli = 3_000;
+        g.queued.fetch_add(1, Ordering::Relaxed);
+        g.pending_steps.fetch_add(4, Ordering::Relaxed);
+        g.predicted_cost_milli.fetch_add(3_000, Ordering::Relaxed);
+        q.try_push(job).map_err(|_| "q").unwrap();
+        refuse_remaining(&q, &g);
+        assert_eq!(g.predicted_cost_milli.load(Ordering::Relaxed), 8_000);
+        assert_eq!(g.queued.load(Ordering::Relaxed), 0);
+        assert_eq!(g.forfeited.load(Ordering::Relaxed), 1);
     }
 }

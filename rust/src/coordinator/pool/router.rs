@@ -46,6 +46,7 @@ use crate::config::{RoutePolicy, Slo};
 use crate::coordinator::pool::agg::PoolReport;
 use crate::coordinator::pool::brownout::Brownout;
 use crate::coordinator::pool::cache::PoolCache;
+use crate::coordinator::pool::calendar::PoolCalendar;
 use crate::coordinator::pool::replica::{breaker_name, GaugeSnapshot,
                                         PoolJob, ReplicaHandle};
 use crate::coordinator::pool::steal::Rebalancer;
@@ -75,6 +76,15 @@ pub enum DispatchOutcome {
     /// ledger's `cache_hits` term, and deliberately absent from the
     /// latency histograms (a 0-step hit must not deflate p50).
     CacheHit,
+    /// Shed at admission because the request's deadline cannot be met:
+    /// on every candidate replica, predicted queue delay (calendar-
+    /// priced backlog × µs-per-row) plus the request's own predicted
+    /// service time already overruns the deadline. Admitting it would
+    /// burn engine time on a result the client has declared worthless —
+    /// shedding now frees that capacity for requests that can still
+    /// hit. Counted inside `shed` (the conservation ledger is
+    /// unchanged) and additionally under `slack_sheds`.
+    ShedNoSlack,
 }
 
 /// The pool front-door. All methods take `&self`; the router is shared
@@ -117,6 +127,17 @@ pub struct Router {
     /// dispatch caps best-effort steps by its stage, `STATS` and
     /// responses echo the stage.
     brownout: Option<Arc<Brownout>>,
+    /// The skip-calendar pricing oracle, when armed
+    /// ([`with_calendar`](Self::with_calendar)): every dispatch is
+    /// priced in predicted module rows, latency-tier requests without a
+    /// deadline get one defaulted from predicted service time, and
+    /// requests whose deadline no candidate can meet shed by negative
+    /// slack. The serve loop ticks its EWMA fallback.
+    calendar: Option<Arc<PoolCalendar>>,
+    /// Requests shed by the negative-slack check — a subset of `shed`
+    /// (the ledger counts them there; this counter only attributes the
+    /// reason).
+    slack_sheds: AtomicU64,
 }
 
 impl Router {
@@ -166,7 +187,40 @@ impl Router {
             cache_hits: AtomicU64::new(0),
             write_timeouts: AtomicU64::new(0),
             brownout: None,
+            calendar: None,
+            slack_sheds: AtomicU64::new(0),
         }
+    }
+
+    /// Arm the skip-calendar pricing oracle (builder, called before the
+    /// router is shared). Dispatch prices every request through it,
+    /// latency-tier requests get calendar-defaulted deadlines, the
+    /// negative-slack shed check activates once the oracle can price in
+    /// time units, and the brownout pressure signal reads the priced
+    /// backlog. The serve loop is expected to call
+    /// [`tick_calendar`](Self::tick_calendar) periodically so the EWMA
+    /// fallback self-calibrates.
+    pub fn with_calendar(mut self, cal: Arc<PoolCalendar>) -> Router {
+        self.calendar = Some(cal);
+        self
+    }
+
+    /// The armed calendar oracle, if any.
+    pub fn calendar(&self) -> Option<&Arc<PoolCalendar>> {
+        self.calendar.as_ref()
+    }
+
+    /// Feed the calendar oracle's EWMA fallback from the live pool
+    /// gauges (cheap: a handful of relaxed loads; the serve loop calls
+    /// this on its housekeeping cadence). No-op when no calendar is
+    /// armed.
+    pub fn tick_calendar(&self) {
+        let Some(cal) = &self.calendar else { return };
+        let rows_run = self.total_rows_run();
+        let rows_seen = rows_run + self.total_rows_skipped();
+        let live = self.replicas.len() - self.dead_replicas();
+        cal.tick(rows_run, rows_seen, self.total_completed(), live,
+                 crate::obs::epoch_us());
     }
 
     /// Arm the pool-wide brownout controller (builder, called before
@@ -284,6 +338,56 @@ impl Router {
             .iter()
             .map(|r| r.gauges.completed.load(Ordering::Relaxed))
             .sum()
+    }
+
+    /// Requests retired on or before their declared/defaulted deadline,
+    /// pool-wide. Requests without a deadline count in neither bucket.
+    pub fn total_deadline_hits(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.deadline_hits.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Requests retired after their deadline, pool-wide.
+    pub fn total_deadline_misses(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| r.gauges.deadline_misses.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Requests shed at admission because no candidate replica could
+    /// meet their deadline (a strict subset of `shed_count`).
+    pub fn slack_shed_count(&self) -> u64 {
+        self.slack_sheds.load(Ordering::Relaxed)
+    }
+
+    /// Calendar-priced queued backlog pool-wide, in milli-rows of
+    /// predicted executed module invocations. Zero until a calendar is
+    /// armed and dispatches have been priced.
+    pub fn total_predicted_cost_milli(&self) -> u64 {
+        self.replicas
+            .iter()
+            .map(|r| {
+                r.gauges.predicted_cost_milli.load(Ordering::Relaxed)
+            })
+            .sum()
+    }
+
+    /// Backlog pressure for brownout control: the raw queued-request
+    /// count, raised (never lowered) by the calendar-priced backlog
+    /// expressed in request-equivalents. With no calendar — or before
+    /// it can estimate request shape — this is exactly the legacy
+    /// queue-length signal; once pricing is live, a queue of few-but-
+    /// enormous requests registers the pressure its row count hides.
+    pub fn backlog_pressure(&self) -> usize {
+        let queued = self.total_queued();
+        let Some(cal) = &self.calendar else { return queued };
+        match cal.queue_equivalent(self.total_predicted_cost_milli()) {
+            Some(eq) => queued.max(eq.ceil() as usize),
+            None => queued,
+        }
     }
 
     /// Test hook: register one shed without a wire request (brownout
@@ -481,6 +585,25 @@ impl Router {
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         }
+        // calendar pricing: predicted executed module rows for this
+        // request's whole schedule (milli-units; 0 = oracle not yet
+        // calibrated and no artifact entry covers this step count)
+        let mut cost_milli = 0u64;
+        if let Some(cal) = &self.calendar {
+            cal.observe_dispatch(req.steps);
+            cost_milli = cal.price_milli(req.steps, 0);
+            // latency-tier requests that declared no deadline get one
+            // defaulted from predicted service time — the tier's SLO
+            // becomes an explicit, enforceable instant instead of an
+            // implicit "soon"
+            if req.deadline_us == 0 && slo == Slo::Latency {
+                if let Some(d) = cal
+                    .default_deadline_us(crate::obs::epoch_us(), req.steps)
+                {
+                    req.deadline_us = d;
+                }
+            }
+        }
         let snaps: Vec<GaugeSnapshot> =
             self.replicas.iter().map(|r| r.snapshot()).collect();
         let rr = self.rr.fetch_add(1, Ordering::Relaxed);
@@ -496,18 +619,49 @@ impl Router {
                 DispatchOutcome::ShedUnservable
             };
         }
+        // negative-slack shed: if on EVERY candidate the predicted
+        // queue delay (priced queued backlog × µs-per-row) plus this
+        // request's own predicted service time already overruns its
+        // deadline, admitting it would spend engine time on a result
+        // the client has declared worthless. Admission-time only —
+        // jobs already queued are never evicted by this check — and
+        // inactive until the oracle can price in time units, so an
+        // uncalibrated pool never sheds work it might have served.
+        if req.deadline_us > 0 && cost_milli > 0 {
+            if let Some(cal) = &self.calendar {
+                if let Some(svc) = cal.service_us(cost_milli) {
+                    let now = crate::obs::epoch_us();
+                    let feasible = order.iter().any(|&i| {
+                        let delay = cal
+                            .service_us(snaps[i].predicted_cost_milli)
+                            .unwrap_or(0);
+                        now.saturating_add(delay).saturating_add(svc)
+                            <= req.deadline_us
+                    });
+                    if !feasible {
+                        self.count_shed(slo);
+                        self.slack_sheds.fetch_add(1, Ordering::Relaxed);
+                        return DispatchOutcome::ShedNoSlack;
+                    }
+                }
+            }
+        }
         let steps = req.steps;
         // stamp the admission instant once (one clock read, off the
         // engine hot path) so replicas can report queue-wait spans;
         // 0 means "untimed" to the consumer, which epoch_us never is
         // after the first microsecond of process life
         let mut job = PoolJob::fresh(req, respond, crate::obs::epoch_us());
+        job.cost_milli = cost_milli;
         for idx in order {
             let h = &self.replicas[idx];
             // optimistic accounting: visible to concurrent dispatches
             // before the worker even sees the job
             h.gauges.queued.fetch_add(1, Ordering::Relaxed);
             h.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
+            h.gauges
+                .predicted_cost_milli
+                .fetch_add(cost_milli, Ordering::Relaxed);
             match h.try_send(job) {
                 Ok(()) => return DispatchOutcome::Admitted,
                 Err(j) => {
@@ -517,6 +671,8 @@ impl Router {
                     crate::coordinator::pool::replica::dec(&h.gauges.queued, 1);
                     crate::coordinator::pool::replica::dec(
                         &h.gauges.pending_steps, steps);
+                    crate::coordinator::pool::replica::dec_u64(
+                        &h.gauges.predicted_cost_milli, cost_milli);
                     job = j;
                 }
             }
@@ -741,6 +897,14 @@ impl Router {
                     ("heartbeat_us",
                      Json::num(r.gauges.heartbeat_us
                                .load(Ordering::Relaxed) as f64)),
+                    ("predicted_cost_milli",
+                     Json::num(s.predicted_cost_milli as f64)),
+                    ("deadline_hits",
+                     Json::num(r.gauges.deadline_hits
+                               .load(Ordering::Relaxed) as f64)),
+                    ("deadline_misses",
+                     Json::num(r.gauges.deadline_misses
+                               .load(Ordering::Relaxed) as f64)),
                     ("finished", Json::Bool(s.finished)),
                 ])
             })
@@ -807,6 +971,15 @@ impl Router {
              Json::num(self.total_write_timeouts() as f64)),
             ("brownout_stage",
              Json::num(self.brownout_stage() as f64)),
+            ("deadline_hits",
+             Json::num(self.total_deadline_hits() as f64)),
+            ("deadline_misses",
+             Json::num(self.total_deadline_misses() as f64)),
+            ("slack_sheds", Json::num(self.slack_shed_count() as f64)),
+            // priced queued backlog (milli-rows); the brownout signal
+            // is max(total_queued, queue_equivalent(this))
+            ("predicted_backlog",
+             Json::num(self.total_predicted_cost_milli() as f64)),
             ("tiers", tiers),
         ];
         if let Some(cs) = self.cache_stats() {
@@ -919,12 +1092,17 @@ impl Router {
             rep.restarts = h.gauges.restarts.load(Ordering::Relaxed);
             rep.breaker_trips =
                 h.gauges.breaker_trips.load(Ordering::Relaxed);
+            rep.deadline_hits =
+                h.gauges.deadline_hits.load(Ordering::Relaxed);
+            rep.deadline_misses =
+                h.gauges.deadline_misses.load(Ordering::Relaxed);
         }
         PoolReport {
             replicas: reports,
             shed: self.shed_count(),
             shed_by_slo: self.shed_by_slo(),
             cache_hits: self.total_cache_hits(),
+            slack_sheds: self.slack_shed_count(),
         }
     }
 }
@@ -1018,6 +1196,15 @@ fn order_group_by_route(route: RoutePolicy, snaps: &[GaugeSnapshot],
                 lazy_cost(&snaps[a])
                     .partial_cmp(&lazy_cost(&snaps[b]))
                     .unwrap_or(std::cmp::Ordering::Equal)
+                    // priced tie-break: when the step-count heuristic
+                    // can't separate two replicas, the calendar-priced
+                    // backlog (predicted rows actually to be executed,
+                    // skip-adjusted per schedule position) can
+                    .then_with(|| {
+                        snaps[a]
+                            .predicted_cost_milli
+                            .cmp(&snaps[b].predicted_cost_milli)
+                    })
                     .then_with(|| snaps[a].queued.cmp(&snaps[b].queued))
                     .then_with(|| a.cmp(&b))
             });
@@ -1040,6 +1227,13 @@ fn order_group_by_slo(slo: Slo, snaps: &[GaugeSnapshot],
                 .partial_cmp(&lazy_cost(&snaps[b]))
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then_with(|| snaps[a].max_batch.cmp(&snaps[b].max_batch))
+                // calendar-priced backlog separates replicas the step
+                // heuristic and batch width both tie on
+                .then_with(|| {
+                    snaps[a]
+                        .predicted_cost_milli
+                        .cmp(&snaps[b].predicted_cost_milli)
+                })
                 .then_with(|| snaps[a].queued.cmp(&snaps[b].queued))
                 .then_with(|| a.cmp(&b))
         }),
@@ -1071,6 +1265,7 @@ mod tests {
             breaker_open: false,
             slo: Slo::Besteffort,
             max_batch: 8,
+            predicted_cost_milli: 0,
         }
     }
 
@@ -1279,5 +1474,134 @@ mod tests {
     fn lazy_cost_clamps_gamma() {
         let c = lazy_cost(&snap(1, 100, 1.0));
         assert!((c - 5.0).abs() < 1e-9, "Γ clamped to 0.95 → cost 5, got {c}");
+    }
+
+    #[test]
+    fn priced_backlog_breaks_lazy_and_latency_ties() {
+        // identical step-count heuristics: the calendar-priced backlog
+        // decides, lower predicted cost first
+        let mut s = vec![snap(2, 40, 0.5), snap(2, 40, 0.5)];
+        s[0].predicted_cost_milli = 9_000;
+        s[1].predicted_cost_milli = 4_000;
+        assert_eq!(order_be(RoutePolicy::Lazy, &s, 0), vec![1, 0]);
+        // ...but a genuine lazy_cost difference still dominates any
+        // price gap: the refinement is strictly a tie-break
+        s[1].pending_steps = 400;
+        assert_eq!(order_be(RoutePolicy::Lazy, &s, 0), vec![0, 1]);
+        // the latency SLO cost model refines the same way
+        let mut t = vec![
+            tiered(snap(1, 10, 0.0), Slo::Latency, 1),
+            tiered(snap(1, 10, 0.0), Slo::Latency, 1),
+        ];
+        t[0].predicted_cost_milli = 5_000;
+        assert_eq!(
+            candidate_order(RoutePolicy::Jsq, Slo::Latency, 1, &t, 0),
+            vec![1, 0]
+        );
+    }
+
+    /// A PoolCalendar whose artifact prices a `steps`-step request at
+    /// exactly `steps` rows (one row per step, nothing skipped).
+    fn priced_calendar(steps: usize) -> super::super::PoolCalendar {
+        use crate::coordinator::pool::calendar::{SkipCalendar, StepProfile};
+        let mut prof = StepProfile::new();
+        for s in 0..steps {
+            prof.record(s, 1, 1);
+        }
+        let mut cal = SkipCalendar::new(0xfeed, "test");
+        cal.insert_profile(steps, &prof, 1);
+        super::super::PoolCalendar::new(Some(cal))
+    }
+
+    fn one_replica_router(cal: Arc<super::super::PoolCalendar>) -> Router {
+        use crate::coordinator::pool::sim::{SimEngine, SimSpec};
+        let h = crate::coordinator::pool::ReplicaHandle::spawn(
+            0, 16, SimEngine::factory(SimSpec::fast()))
+            .unwrap();
+        Router::new(vec![h], RoutePolicy::Jsq, 16).with_calendar(cal)
+    }
+
+    #[test]
+    fn no_slack_shed_attributes_reason_and_stays_inside_the_ledger() {
+        use crate::coordinator::request::Request;
+        let cal = Arc::new(priced_calendar(4));
+        cal.set_us_per_inv(1_000.0); // 1ms per row → 4ms predicted
+        let router = one_replica_router(cal);
+        let (tx, rx) = mpsc::channel();
+        let mut r = Request::new(0, 0, 4, 1);
+        r.cfg_scale = 1.0;
+        r.deadline_us = 1; // unmeetable: already in the past
+        assert!(matches!(router.dispatch_outcome(r, tx),
+                         DispatchOutcome::ShedNoSlack));
+        assert_eq!(router.slack_shed_count(), 1);
+        assert_eq!(router.shed_count(), 1, "slack sheds live inside shed");
+        assert!(rx.recv().is_err(), "shed request must get no result");
+        // uncalibrated time units disarm the check: the same hopeless
+        // request is admitted rather than guessed at
+        router.calendar().unwrap().set_us_per_inv(0.0);
+        let (tx, rx) = mpsc::channel();
+        let mut r = Request::new(0, 0, 4, 2);
+        r.cfg_scale = 1.0;
+        r.deadline_us = 1;
+        assert!(matches!(router.dispatch_outcome(r, tx),
+                         DispatchOutcome::Admitted));
+        assert!(rx.recv().is_ok());
+        assert_eq!(router.slack_shed_count(), 1);
+        let rep = router.shutdown();
+        // conservation: dispatched == completed + cache_hits + shed
+        assert_eq!(router.total_dispatched(), 2);
+        assert_eq!(rep.slack_sheds, 1);
+        assert_eq!(
+            router.total_dispatched(),
+            router.total_completed() + router.total_cache_hits()
+                + rep.shed + router.total_forfeited()
+        );
+    }
+
+    #[test]
+    fn latency_deadlines_default_from_the_calendar_and_settle() {
+        use crate::coordinator::request::Request;
+        let cal = Arc::new(priced_calendar(4));
+        // 40ms predicted service → 320ms defaulted deadline: roomy
+        // enough that a SimSpec::fast() request always hits it
+        cal.set_us_per_inv(10_000.0);
+        let router = one_replica_router(cal);
+        let (tx, rx) = mpsc::channel();
+        let mut r = Request::new(0, 0, 4, 3);
+        r.cfg_scale = 1.0;
+        r.slo = Slo::Latency; // best-effort replica admits as spill
+        assert_eq!(r.deadline_us, 0, "wire default: no declared deadline");
+        assert!(matches!(router.dispatch_outcome(r, tx),
+                         DispatchOutcome::Admitted));
+        assert!(rx.recv().is_ok());
+        router.shutdown();
+        // the defaulted deadline comfortably covers a SimSpec::fast()
+        // request → settles as a hit, not "no deadline"
+        assert_eq!(router.total_deadline_hits(), 1);
+        assert_eq!(router.total_deadline_misses(), 0);
+    }
+
+    #[test]
+    fn backlog_pressure_never_drops_below_queue_length() {
+        let cal = Arc::new(super::super::PoolCalendar::online());
+        let router = one_replica_router(cal.clone());
+        // uncalibrated: exactly the legacy queue-length signal
+        let g = &router.replica(0).unwrap().gauges;
+        g.queued.fetch_add(7, Ordering::Relaxed);
+        assert_eq!(router.backlog_pressure(), 7);
+        // calibrate the shape EWMAs (4-step requests, 1 row/step, Γ=0),
+        // then inflate the priced gauge: 80 predicted rows ÷ 4 rows per
+        // request = 20 request-equivalents > 7 queued
+        cal.observe_dispatch(4);
+        cal.tick(0, 0, 0, 1, 1_000);
+        cal.tick(400, 400, 100, 1, 2_000);
+        g.predicted_cost_milli.fetch_add(80_000, Ordering::Relaxed);
+        assert!(router.backlog_pressure() >= 20,
+                "priced backlog must raise pressure, got {}",
+                router.backlog_pressure());
+        g.queued.fetch_add(93, Ordering::Relaxed); // 100 queued now
+        assert_eq!(router.backlog_pressure(), 100,
+                   "pressure is max(queued, priced), never less");
+        router.shutdown();
     }
 }

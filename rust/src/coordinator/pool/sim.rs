@@ -17,6 +17,7 @@
 //! gate instead — there skip decisions depend on who is co-batched
 //! (that is the waste being measured) while images stay deterministic.
 
+use crate::coordinator::pool::calendar::StepProfile;
 use crate::coordinator::pool::fault::{corrupt_snapshot, FaultSchedule};
 use crate::coordinator::pool::{EngineFactory, PoolEngine};
 use crate::coordinator::request::{Request, RequestResult, TrajectorySnapshot};
@@ -123,6 +124,9 @@ pub struct SimEngine {
     /// `spec.lazy_pct`, saturated at 95 so step 0's cold gate and a
     /// sliver of executed rows always remain).
     gamma_boost: u32,
+    /// Per-step-index run/seen row counters — the calibration feed for
+    /// `lazydit calibrate` ([`PoolEngine::step_profile`]).
+    step_profile: StepProfile,
 }
 
 impl SimEngine {
@@ -137,6 +141,7 @@ impl SimEngine {
             next_id: 1,
             tracer: Tracer::disabled(),
             gamma_boost: 0,
+            step_profile: StepProfile::new(),
         }
     }
 
@@ -384,6 +389,7 @@ impl PoolEngine for SimEngine {
                 self.active[ai].modules_seen[k] += 1;
                 self.layer_stats.record(k, skip, gamma);
                 self.serve_stats.module_invocations += 1;
+                self.step_profile.record(step, (!skip) as u64, 1);
                 if skip {
                     t_skip += 1;
                     self.active[ai].skip_counts[k] += 1;
@@ -473,6 +479,10 @@ impl PoolEngine for SimEngine {
         }
         self.serve_stats.wall_s += t0.elapsed().as_secs_f64();
         Ok(out)
+    }
+
+    fn step_profile(&self) -> Option<&StepProfile> {
+        Some(&self.step_profile)
     }
 
     fn layer_stats(&self) -> &LayerStats {

@@ -12,14 +12,15 @@
 //! clear its queue, not merely the one with the most items.
 //!
 //! Gauge-transfer invariant: a stolen job's accounting (`queued` 1,
-//! `pending_steps` wire steps) moves with the job, thief first, then
-//! victim, inside the rebalancer's peer lock. Pool-wide sums (the
+//! `pending_steps` wire steps, `predicted_cost_milli` its calendar
+//! price) moves with the job, thief first, then victim, inside the
+//! rebalancer's peer lock. Pool-wide sums (the
 //! router's jsq/lazy inputs and the admission ledger) therefore never
 //! under-count during a migration, and each side's counters are adjusted
 //! by exact, known amounts — never stored absolutely — so concurrent
 //! dispatch rollbacks and the panic handler compose with migration.
 
-use crate::coordinator::pool::replica::{dec, tier_admits, PoolJob,
+use crate::coordinator::pool::replica::{dec, dec_u64, tier_admits, PoolJob,
                                         ReplicaGauges, ReplicaTier};
 use crate::coordinator::pool::router::lazy_cost;
 use crate::util::threadpool::BoundedQueue;
@@ -210,20 +211,28 @@ impl Rebalancer {
         // for: one gauge read per peer, grouped by tier
         self.note_backlogs(&peers);
         let me = peers.iter().find(|p| p.id == thief)?;
-        // rank victims by effective backlog, costliest first; only
-        // siblings with jobs physically in their queue are candidates
-        let mut victims: Vec<(f64, usize)> = peers
+        // rank victims by effective backlog, costliest first — ties
+        // broken by the calendar-priced backlog (predicted rows the
+        // victim actually has left to execute), so of two siblings the
+        // step heuristic can't separate, the thief relieves the one
+        // whose queue really holds more work; only siblings with jobs
+        // physically in their queue are candidates
+        let mut victims: Vec<(f64, u64, usize)> = peers
             .iter()
             .enumerate()
             .filter(|(_, p)| p.id != thief && !p.queue.is_empty())
-            .map(|(i, p)| (lazy_cost(&p.gauges.snapshot(&p.tier)), i))
+            .map(|(i, p)| {
+                let s = p.gauges.snapshot(&p.tier);
+                (lazy_cost(&s), s.predicted_cost_milli, i)
+            })
             .collect();
         victims.sort_by(|a, b| {
             b.0.partial_cmp(&a.0)
                 .unwrap_or(std::cmp::Ordering::Equal)
-                .then_with(|| a.1.cmp(&b.1))
+                .then_with(|| b.1.cmp(&a.1))
+                .then_with(|| a.2.cmp(&b.2))
         });
-        for (_, vi) in victims {
+        for (_, _, vi) in victims {
             let victim = &peers[vi];
             // eligibility is the router's candidate predicate
             // (`tier_admits`): the thief's tier must honor the job's
@@ -241,9 +250,13 @@ impl Rebalancer {
                 // handler or dispatch rollback cannot wrap the gauge
                 me.gauges.queued.fetch_add(1, Ordering::Relaxed);
                 me.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
+                me.gauges
+                    .predicted_cost_milli
+                    .fetch_add(job.cost_milli, Ordering::Relaxed);
                 me.gauges.steals.fetch_add(1, Ordering::Relaxed);
                 dec(&victim.gauges.queued, 1);
                 dec(&victim.gauges.pending_steps, steps);
+                dec_u64(&victim.gauges.predicted_cost_milli, job.cost_milli);
                 victim.gauges.stolen.fetch_add(1, Ordering::Relaxed);
                 self.total_steals.fetch_add(1, Ordering::Relaxed);
                 log::debug!("replica {thief} stole a {steps}-step job \
@@ -296,7 +309,7 @@ impl Rebalancer {
     pub fn place(&self, from: usize, job: PoolJob)
                  -> Result<usize, PoolJob> {
         let peers = self.peers.lock().unwrap_or_else(|p| p.into_inner());
-        let mut order: Vec<(f64, usize)> = peers
+        let mut order: Vec<(f64, u64, usize)> = peers
             .iter()
             .enumerate()
             .filter(|(_, p)| {
@@ -304,15 +317,20 @@ impl Rebalancer {
                     && !p.gauges.finished.load(Ordering::Acquire)
                     && p.admits(job.slo(), job.lanes())
             })
-            .map(|(i, p)| (lazy_cost(&p.gauges.snapshot(&p.tier)), i))
+            .map(|(i, p)| {
+                let s = p.gauges.snapshot(&p.tier);
+                (lazy_cost(&s), s.predicted_cost_milli, i)
+            })
             .collect();
+        // least-loaded first; priced backlog breaks step-heuristic ties
         order.sort_by(|a, b| {
             a.0.partial_cmp(&b.0)
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then_with(|| a.1.cmp(&b.1))
+                .then_with(|| a.2.cmp(&b.2))
         });
         let mut job = job;
-        for (_, i) in order {
+        for (_, _, i) in order {
             match transfer(&peers, from, i, job, true) {
                 Ok(dest) => return Ok(dest),
                 Err(j) => job = j,
@@ -347,7 +365,7 @@ impl Rebalancer {
     pub fn place_from_dead(&self, from: usize, job: PoolJob)
                            -> Result<usize, PoolJob> {
         let peers = self.peers.lock().unwrap_or_else(|p| p.into_inner());
-        let mut order: Vec<(f64, usize)> = peers
+        let mut order: Vec<(f64, u64, usize)> = peers
             .iter()
             .enumerate()
             .filter(|(_, p)| {
@@ -355,15 +373,19 @@ impl Rebalancer {
                     && !p.gauges.finished.load(Ordering::Acquire)
                     && p.admits(job.slo(), job.lanes())
             })
-            .map(|(i, p)| (lazy_cost(&p.gauges.snapshot(&p.tier)), i))
+            .map(|(i, p)| {
+                let s = p.gauges.snapshot(&p.tier);
+                (lazy_cost(&s), s.predicted_cost_milli, i)
+            })
             .collect();
         order.sort_by(|a, b| {
             a.0.partial_cmp(&b.0)
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then_with(|| a.1.cmp(&b.1))
+                .then_with(|| a.2.cmp(&b.2))
         });
         let mut job = job;
-        for (_, i) in order {
+        for (_, _, i) in order {
             match transfer(&peers, from, i, job, false) {
                 Ok(dest) => return Ok(dest),
                 Err(j) => job = j,
@@ -390,14 +412,19 @@ fn transfer(peers: &[StealPeer], from: usize, to_idx: usize, job: PoolJob,
             from_side: bool) -> Result<usize, PoolJob> {
     let dest = &peers[to_idx];
     let steps = job.remaining_steps();
+    let cost = job.cost_milli;
     dest.gauges.queued.fetch_add(1, Ordering::Relaxed);
     dest.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
+    dest.gauges
+        .predicted_cost_milli
+        .fetch_add(cost, Ordering::Relaxed);
     match dest.queue.try_push(job) {
         Ok(()) => {
             if from_side {
                 if let Some(v) = peers.iter().find(|p| p.id == from) {
                     dec(&v.gauges.queued, 1);
                     dec(&v.gauges.pending_steps, steps);
+                    dec_u64(&v.gauges.predicted_cost_milli, cost);
                 }
             }
             Ok(dest.id)
@@ -405,6 +432,7 @@ fn transfer(peers: &[StealPeer], from: usize, to_idx: usize, job: PoolJob,
         Err(j) => {
             dec(&dest.gauges.queued, 1);
             dec(&dest.gauges.pending_steps, steps);
+            dec_u64(&dest.gauges.predicted_cost_milli, cost);
             Err(j)
         }
     }
@@ -825,6 +853,51 @@ mod tests {
         assert_eq!(peers[0].gauges.pending_steps.load(Ordering::Relaxed), 7);
         assert_eq!(peers[1].gauges.queued.load(Ordering::Relaxed), 1);
         assert_eq!(peers[1].gauges.pending_steps.load(Ordering::Relaxed), 7);
+    }
+
+    /// Enqueue a calendar-priced single-lane job, mirroring the
+    /// router's optimistic accounting including the priced gauge.
+    fn enqueue_priced(p: &StealPeer, steps: usize, seed: u64, cost: u64)
+                      -> mpsc::Receiver<RequestResult> {
+        let (tx, rx) = mpsc::channel();
+        let mut req = Request::new(0, 1, steps, seed);
+        req.cfg_scale = 1.0;
+        let mut job = PoolJob::fresh(req, tx, 0);
+        job.cost_milli = cost;
+        p.gauges.queued.fetch_add(1, Ordering::Relaxed);
+        p.gauges.pending_steps.fetch_add(steps, Ordering::Relaxed);
+        p.gauges.predicted_cost_milli.fetch_add(cost, Ordering::Relaxed);
+        p.queue.try_push(job).map_err(|_| "push").unwrap();
+        rx
+    }
+
+    #[test]
+    fn priced_backlog_breaks_victim_ties_and_rides_with_the_steal() {
+        // victims 0 and 2 tie exactly on the step heuristic (same
+        // backlog, Γ=0); the calendar-priced gauge must decide, and the
+        // price must migrate with the job like the other gauges
+        let rb = Rebalancer::new(2);
+        rb.register(vec![peer(0), peer(1), peer(2)]);
+        let peers = rb.peers.lock().unwrap();
+        let _rx0 = enqueue_priced(&peers[0], 10, 40, 2_000);
+        let _rx2 = enqueue_priced(&peers[2], 10, 41, 9_000);
+        drop(peers);
+        let job = rb.steal_for(1).expect("steal");
+        assert_eq!(seed_of(&job), 41, "pricier victim is relieved first");
+        assert_eq!(job.cost_milli, 9_000, "price rides with the job");
+        let peers = rb.peers.lock().unwrap();
+        assert_eq!(
+            peers[2].gauges.predicted_cost_milli.load(Ordering::Relaxed),
+            0, "victim gives the priced accounting up"
+        );
+        assert_eq!(
+            peers[1].gauges.predicted_cost_milli.load(Ordering::Relaxed),
+            9_000, "thief owns exactly the migrated price"
+        );
+        assert_eq!(
+            peers[0].gauges.predicted_cost_milli.load(Ordering::Relaxed),
+            2_000, "bystander untouched"
+        );
     }
 
     #[test]

@@ -28,6 +28,14 @@ pub struct Request {
     /// best-effort for legacy request lines). The pool router uses it
     /// for tier-aware placement.
     pub slo: Slo,
+    /// Absolute completion deadline in shared-epoch microseconds
+    /// (`obs::epoch`); 0 means "no deadline". Set from the wire
+    /// `"deadline_ms"` field (relative, converted at parse time) or
+    /// defaulted by the router from the skip calendar's predicted
+    /// service time for latency-tier requests. Drives EDF queue
+    /// ordering and shed-by-slack; like `id`/`slo` it never affects the
+    /// output image and is excluded from [`RequestKey`].
+    pub deadline_us: u64,
 }
 
 impl Request {
@@ -39,12 +47,19 @@ impl Request {
             seed,
             cfg_scale: 1.5,
             slo: Slo::Besteffort,
+            deadline_us: 0,
         }
     }
 
     /// Builder-style SLO tag (tests/benches).
     pub fn with_slo(mut self, slo: Slo) -> Request {
         self.slo = slo;
+        self
+    }
+
+    /// Builder-style absolute deadline (tests/benches).
+    pub fn with_deadline_us(mut self, deadline_us: u64) -> Request {
+        self.deadline_us = deadline_us;
         self
     }
 
@@ -253,8 +268,9 @@ impl ActiveRequest {
 /// Magic prefix of an encoded [`TrajectorySnapshot`].
 const SNAP_MAGIC: [u8; 4] = *b"LZTS";
 /// Current snapshot encoding version. Bump on any layout change; the
-/// decoder rejects every version it does not know.
-const SNAP_VERSION: u8 = 1;
+/// decoder rejects every version it does not know. v2 added the
+/// request's `deadline_us` (8 bytes immediately after the slo byte).
+const SNAP_VERSION: u8 = 2;
 /// Decode-time ceiling on any single length field (elements). The
 /// largest real field is z at C·H·W or a lane store at 2L·N·D — far
 /// below this; a corrupt length must fail fast instead of attempting a
@@ -339,6 +355,7 @@ impl TrajectorySnapshot {
         out.extend_from_slice(&self.req.seed.to_le_bytes());
         out.extend_from_slice(&self.req.cfg_scale.to_le_bytes());
         out.push(self.req.slo.index() as u8);
+        out.extend_from_slice(&self.req.deadline_us.to_le_bytes());
         out.extend_from_slice(&self.admitted_us.to_le_bytes());
         out.extend_from_slice(&(self.cursor as u64).to_le_bytes());
         out.extend_from_slice(&(self.steps_done as u64).to_le_bytes());
@@ -399,6 +416,7 @@ impl TrajectorySnapshot {
         let Some(&slo) = Slo::ALL.get(slo_idx) else {
             bail!("snapshot: bad slo index {slo_idx}");
         };
+        let deadline_us = r.u64()?;
         let admitted_us = r.u64()?;
         let cursor = r.u64()? as usize;
         let steps_done = r.u64()? as usize;
@@ -457,7 +475,15 @@ impl TrajectorySnapshot {
             bail!("snapshot: skip/seen counter shapes differ");
         }
         Ok(TrajectorySnapshot {
-            req: Request { id, class_label, steps, seed, cfg_scale, slo },
+            req: Request {
+                id,
+                class_label,
+                steps,
+                seed,
+                cfg_scale,
+                slo,
+                deadline_us,
+            },
             timesteps,
             cursor,
             z,
@@ -659,7 +685,8 @@ mod tests {
         assert!(TrajectorySnapshot::decode(&b).is_err(), "bad slo index");
         // absurd length field fails fast instead of allocating
         let mut b = good;
-        let ts_len_off = slo_off + 1 + 8 + 8 + 8;
+        // slo byte, then deadline_us + admitted_us + cursor + steps_done
+        let ts_len_off = slo_off + 1 + 8 + 8 + 8 + 8;
         b[ts_len_off..ts_len_off + 4]
             .copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(TrajectorySnapshot::decode(&b).is_err(), "huge length");

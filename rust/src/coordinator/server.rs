@@ -2,11 +2,14 @@
 //!
 //! Protocol (one JSON object per line; see docs/SERVING.md):
 //!   request : {"label": 3, "steps": 20, "seed": 1, "cfg_scale": 1.5,
-//!              "slo": "latency"}
+//!              "slo": "latency", "deadline_ms": 250}
 //!   response: {"id": 7, "latency_ms": 123.4, "lazy_ratio": 0.31,
 //!              "attn_lazy": 0.35, "ffn_lazy": 0.27, "steps": 20,
 //!              "slo": "latency"}
-//!   shed    : {"error": "queue full"}
+//!   shed    : {"error": "queue full", "shed": "queue_full"} — the
+//!             "shed" tag is machine-readable: "no_slack" (deadline
+//!             unmeetable at admission), "queue_full" (transient
+//!             overload), or "unservable" (permanent shape mismatch)
 //!   stats   : the bare verb line `STATS` returns one JSON object with
 //!             the live pool gauges, including per-replica and per-tier
 //!             latency quantiles (replica-pool back-end only)
@@ -100,9 +103,28 @@ pub fn parse_request_line(line: &str) -> Result<Request> {
         Some(v) => Slo::parse(v.as_str().context(
             "slo must be a string: latency|throughput|besteffort")?)?,
     };
+    // optional, backward-compatible: a relative deadline in
+    // milliseconds, stamped to an absolute shared-epoch instant at parse
+    // time so every later comparison (EDF ordering, slack checks, hit/
+    // miss accounting) is a plain integer compare. Absent or 0 means "no
+    // deadline" — the router may still default one for the latency tier.
+    let deadline_us = match j.get("deadline_ms") {
+        None => 0,
+        Some(v) => {
+            let ms = v
+                .as_u64()
+                .context("deadline_ms must be a non-negative integer")?;
+            if ms == 0 {
+                0
+            } else {
+                crate::obs::epoch_us().saturating_add(ms.saturating_mul(1000))
+            }
+        }
+    };
     let mut r = Request::new(0, label, steps, seed);
     r.cfg_scale = cfg_scale;
     r.slo = slo;
+    r.deadline_us = deadline_us;
     Ok(r)
 }
 
@@ -139,6 +161,26 @@ pub fn format_response_staged(res: &RequestResult, stage: usize) -> String {
 pub fn error_line(msg: &str) -> String {
     Json::obj(vec![("error", Json::str(msg))]).to_string()
 }
+
+/// Structured shed line: the human-readable `"error"` message plus a
+/// machine-readable `"shed"` reason (`"no_slack"` / `"queue_full"` /
+/// `"unservable"`), so load generators and admission clients can branch
+/// on the reason without parsing prose. Additive: every field of the
+/// plain error line is still present.
+pub fn shed_line(msg: &str, reason: &str) -> String {
+    Json::obj(vec![
+        ("error", Json::str(msg)),
+        ("shed", Json::str(reason)),
+    ])
+    .to_string()
+}
+
+/// Shed reason for a request whose deadline no candidate replica can
+/// meet even before it queues — retrying with the same deadline under
+/// the same load is futile; retrying with a looser one may succeed.
+pub const NO_SLACK_MSG: &str =
+    "no slack: predicted queue delay plus service time overruns this \
+     request's deadline on every candidate replica";
 
 /// Shed reason for a request no replica in the pool can ever serve
 /// (SLO class / lane-count mismatch) — distinct from `queue full` so
@@ -189,9 +231,11 @@ fn classify_line(trimmed: &str) -> LineVerb<'_> {
 }
 
 /// Shared per-connection read loop. `submit` hands an admitted request
-/// plus its response channel to a back-end; `Err(msg)` means shed, with
-/// `msg` telling the client why (`queue full` for transient overload,
-/// [`UNSERVABLE_MSG`] for a permanent pool-shape mismatch). `respond`
+/// plus its response channel to a back-end; `Err((msg, reason))` means
+/// shed, with `msg` telling the client why in prose (`queue full` for
+/// transient overload, [`UNSERVABLE_MSG`] for a permanent pool-shape
+/// mismatch) and `reason` the machine-readable `"shed"` tag
+/// ([`shed_line`]). `respond`
 /// formats a completed result (the pool back-end stamps the live
 /// brownout stage here). `stats` answers the `STATS` verb and `trace`
 /// the `TRACE` verb — bare non-JSON lines, so they can never collide
@@ -204,7 +248,8 @@ fn serve_lines<F, R, S, T, W>(stream: TcpStream,
                               respond: R, stats: S, trace: T,
                               on_write_timeout: W)
 where
-    F: Fn(Request, mpsc::Sender<RequestResult>) -> Result<(), &'static str>,
+    F: Fn(Request, mpsc::Sender<RequestResult>)
+        -> Result<(), (&'static str, &'static str)>,
     R: Fn(&RequestResult) -> String,
     S: Fn() -> String,
     T: Fn() -> String,
@@ -237,7 +282,7 @@ where
                             Ok(res) => respond(&res),
                             Err(_) => error_line("engine stopped"),
                         },
-                        Err(msg) => error_line(msg),
+                        Err((msg, reason)) => shed_line(msg, reason),
                     }
                 }
                 Err(e) => error_line(&format!("{e:#}")),
@@ -285,7 +330,8 @@ pub fn serve(mut engine: Engine, addr: &str, max_requests: usize) -> Result<()> 
                             Some(RESPONSE_WRITE_TIMEOUT),
                             move |req, tx| {
                                 q3.try_push(Pending { req, respond: tx })
-                                    .map_err(|_| "queue full")
+                                    .map_err(|_| ("queue full",
+                                                  "queue_full"))
                             },
                             format_response,
                             // live gauges and trace rings need the pool
@@ -414,10 +460,13 @@ pub fn serve_pool_shared(router: Arc<Router>, addr: &str,
                                     // it without blocking
                                     DispatchOutcome::CacheHit => Ok(()),
                                     DispatchOutcome::ShedCapacity => {
-                                        Err("queue full")
+                                        Err(("queue full", "queue_full"))
                                     }
                                     DispatchOutcome::ShedUnservable => {
-                                        Err(UNSERVABLE_MSG)
+                                        Err((UNSERVABLE_MSG, "unservable"))
+                                    }
+                                    DispatchOutcome::ShedNoSlack => {
+                                        Err((NO_SLACK_MSG, "no_slack"))
                                     }
                                 }
                             },
@@ -458,6 +507,9 @@ pub fn serve_pool_shared(router: Arc<Router>, addr: &str,
         if let Some(b) = &brownout {
             b.tick(&router);
         }
+        // feed the calendar oracle's EWMA fallback from the cumulative
+        // pool counters (no-op when no calendar is armed)
+        router.tick_calendar();
         // cache hits count toward the stop bound: each one answered a
         // client even though no replica completed anything for it.
         // Forfeits count too — a forfeited request's client got an
@@ -587,6 +639,22 @@ mod tests {
             j.req("error").unwrap().as_str().unwrap(),
             "bad \"quoted\" thing\nwith newline"
         );
+    }
+
+    #[test]
+    fn shed_lines_carry_a_machine_readable_reason() {
+        for (msg, reason) in [
+            ("queue full", "queue_full"),
+            (UNSERVABLE_MSG, "unservable"),
+            (NO_SLACK_MSG, "no_slack"),
+        ] {
+            let s = shed_line(msg, reason);
+            let j = Json::parse(&s).unwrap();
+            // additive: the legacy "error" field is still present, so
+            // pre-existing clients that only look there keep working
+            assert_eq!(j.req("error").unwrap().as_str().unwrap(), msg);
+            assert_eq!(j.req("shed").unwrap().as_str().unwrap(), reason);
+        }
     }
 
     #[test]
@@ -729,5 +797,36 @@ mod tests {
         let e =
             parse_request_line(r#"{"label": 1, "slo": "gold"}"#).unwrap_err();
         assert!(format!("{e:#}").contains("unknown SLO"), "{e:#}");
+    }
+
+    #[test]
+    fn deadline_ms_parses_strictly_and_stamps_absolute() {
+        // legacy lines (no field) and an explicit 0 both mean "no
+        // deadline" — the sentinel the rest of the pool keys off
+        let r = parse_request_line(r#"{"label": 1}"#).unwrap();
+        assert_eq!(r.deadline_us, 0);
+        let r =
+            parse_request_line(r#"{"label": 1, "deadline_ms": 0}"#).unwrap();
+        assert_eq!(r.deadline_us, 0);
+        // a relative deadline becomes an absolute shared-epoch instant
+        // ~ms*1000 past "now"
+        let before = crate::obs::epoch_us();
+        let r = parse_request_line(r#"{"label": 1, "deadline_ms": 250}"#)
+            .unwrap();
+        let after = crate::obs::epoch_us();
+        assert!(r.deadline_us >= before + 250_000, "{}", r.deadline_us);
+        assert!(r.deadline_us <= after + 250_000, "{}", r.deadline_us);
+        // strict integer: negative, fractional, and oversized values are
+        // rejected, never silently truncated into a bogus deadline
+        for bad in [
+            r#"{"label": 1, "deadline_ms": -5}"#,
+            r#"{"label": 1, "deadline_ms": 1.5}"#,
+            r#"{"label": 1, "deadline_ms": "soon"}"#,
+            r#"{"label": 1, "deadline_ms": 9007199254740992}"#,
+        ] {
+            let e = parse_request_line(bad).unwrap_err();
+            assert!(format!("{e:#}").contains("deadline_ms"),
+                    "{bad}: {e:#}");
+        }
     }
 }

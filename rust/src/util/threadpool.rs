@@ -112,6 +112,33 @@ impl<T> BoundedQueue<T> {
         item
     }
 
+    /// Non-blocking pop of the item that minimizes `key` — the EDF
+    /// (earliest-deadline-first) sibling of [`try_pop`](Self::try_pop).
+    /// Ties resolve to the *oldest* queued item (`min_by_key` keeps the
+    /// first minimum it sees, and the scan runs front-to-back), so a
+    /// queue of equal keys degrades to exact FIFO and same-deadline
+    /// jobs can never starve each other. O(n) in queue length, which is
+    /// bounded by the queue cap — the consumer holds the lock either
+    /// way.
+    pub fn try_pop_min_by_key<K, F>(&self, mut key: F) -> Option<T>
+    where
+        K: Ord,
+        F: FnMut(&T) -> K,
+    {
+        let mut st = self.inner.q.lock().unwrap();
+        let idx = st
+            .items
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, it)| key(it))
+            .map(|(i, _)| i)?;
+        let item = st.items.remove(idx);
+        if item.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
     /// Blocking pop with a deadline. Unlike [`pop`](Self::pop), an empty
     /// open queue eventually returns [`Popped::TimedOut`] so the caller
     /// can interleave other work sources (the replica worker's steal
@@ -123,6 +150,53 @@ impl<T> BoundedQueue<T> {
             if let Some(item) = st.items.pop_front() {
                 self.inner.not_full.notify_one();
                 return Popped::Item(item);
+            }
+            if st.closed {
+                return Popped::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Popped::TimedOut;
+            }
+            let (guard, _) = self
+                .inner
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// [`pop_timeout`](Self::pop_timeout) with
+    /// [`try_pop_min_by_key`](Self::try_pop_min_by_key)'s selection
+    /// rule: waits like `pop_timeout`, but whenever items are present it
+    /// takes the minimum-`key` one (first minimum wins, so equal keys
+    /// are FIFO). The replica worker's idle wait uses this so a job
+    /// with an earlier deadline that was queued *behind* a later one is
+    /// still dispatched first.
+    pub fn pop_timeout_min_by_key<K, F>(&self, timeout: Duration,
+                                        mut key: F) -> Popped<T>
+    where
+        K: Ord,
+        F: FnMut(&T) -> K,
+    {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.q.lock().unwrap();
+        loop {
+            let idx = st
+                .items
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, it)| key(it))
+                .map(|(i, _)| i);
+            if let Some(i) = idx {
+                let item = st.items.remove(i);
+                if item.is_some() {
+                    self.inner.not_full.notify_one();
+                }
+                if let Some(item) = item {
+                    return Popped::Item(item);
+                }
             }
             if st.closed {
                 return Popped::Closed;
@@ -349,6 +423,79 @@ mod tests {
         assert_eq!(q.pop(), Some(0));
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn try_pop_min_by_key_picks_earliest_and_ties_fifo() {
+        let q = BoundedQueue::new(8);
+        // (deadline, id): earliest deadline wins regardless of arrival
+        for it in [(30u64, 0u32), (10, 1), (20, 2), (10, 3)] {
+            q.push(it).unwrap();
+        }
+        // two items share deadline 10; the older one (id 1) must win —
+        // first-minimum tie-break is what keeps equal keys exact FIFO
+        assert_eq!(q.try_pop_min_by_key(|it| it.0), Some((10, 1)));
+        assert_eq!(q.try_pop_min_by_key(|it| it.0), Some((10, 3)));
+        assert_eq!(q.try_pop_min_by_key(|it| it.0), Some((20, 2)));
+        assert_eq!(q.try_pop_min_by_key(|it| it.0), Some((30, 0)));
+        assert_eq!(q.try_pop_min_by_key(|it| it.0), None);
+    }
+
+    #[test]
+    fn min_by_key_with_equal_keys_is_exactly_fifo() {
+        // EDF over a deadline-free workload must be indistinguishable
+        // from the legacy FIFO pop — this is the no-regression guarantee
+        // for clients that never send deadlines
+        let q = BoundedQueue::new(8);
+        for i in 0..6 {
+            q.push(i).unwrap();
+        }
+        for want in 0..6 {
+            assert_eq!(q.try_pop_min_by_key(|_| 0u64), Some(want));
+        }
+    }
+
+    #[test]
+    fn pop_timeout_min_by_key_selects_waits_and_closes() {
+        let q = BoundedQueue::new(8);
+        q.push((50u64, 'a')).unwrap();
+        q.push((5, 'b')).unwrap();
+        match q.pop_timeout_min_by_key(Duration::from_millis(50), |it| it.0) {
+            Popped::Item(it) => assert_eq!(it, (5, 'b')),
+            other => panic!("{other:?}"),
+        }
+        // empty + open → TimedOut (the worker's steal-probe interleave)
+        match q.pop_timeout_min_by_key(Duration::from_millis(5), |it| it.0) {
+            Popped::TimedOut => {}
+            Popped::Item((_, c)) => panic!("unexpected item {c}"),
+            Popped::Closed => panic!("not closed yet"),
+        }
+        // drains remaining items after close, then reports Closed
+        q.close();
+        match q.pop_timeout_min_by_key(Duration::from_millis(5), |it| it.0) {
+            Popped::Item(it) => assert_eq!(it, (50, 'a')),
+            other => panic!("{other:?}"),
+        }
+        match q.pop_timeout_min_by_key(Duration::from_millis(5), |it| it.0) {
+            Popped::Closed => {}
+            Popped::Item((_, c)) => panic!("unexpected item {c}"),
+            Popped::TimedOut => panic!("closed, must not time out"),
+        }
+    }
+
+    #[test]
+    fn min_pop_and_steal_back_interoperate() {
+        // a thief taking from the back and an EDF owner taking the
+        // earliest deadline never hand out the same job twice
+        let q = BoundedQueue::new(8);
+        for it in [(40u64, 0u32), (10, 1), (30, 2), (20, 3)] {
+            q.push(it).unwrap();
+        }
+        assert_eq!(q.steal_back(), Some((20, 3)), "thief takes newest");
+        assert_eq!(q.try_pop_min_by_key(|it| it.0), Some((10, 1)));
+        assert_eq!(q.steal_back(), Some((30, 2)));
+        assert_eq!(q.try_pop_min_by_key(|it| it.0), Some((40, 0)));
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -1,0 +1,113 @@
+#!/usr/bin/env bash
+# Compare two BENCH_serve.json artifacts (baseline vs candidate) and
+# fail on regression in the shared latency/SLO keys:
+#
+#   usage: scripts/bench_diff.sh BASELINE.json CANDIDATE.json [tol_pct]
+#
+# Keys whose flattened path contains "p95" are lower-is-better; keys
+# containing "hit_rate" or "hit_ratio" are higher-is-better. A key is
+# compared only when it exists in BOTH artifacts (array entries are
+# matched by position — the bench emits them in deterministic order),
+# so artifacts from different bench versions degrade to comparing the
+# intersection instead of erroring. The default tolerance is 10%.
+#
+# Pure bash + awk — no jq, no python, matching the tier-1 toolchain
+# assumptions (see `lazydit trace-check` for the same ethos).
+
+set -euo pipefail
+
+if [ $# -lt 2 ]; then
+    echo "usage: $0 BASELINE.json CANDIDATE.json [tol_pct]" >&2
+    exit 2
+fi
+base_file=$1
+cand_file=$2
+tol=${3:-10}
+for f in "$base_file" "$cand_file"; do
+    [ -f "$f" ] || { echo "bench_diff: no such file: $f" >&2; exit 2; }
+done
+
+# Flatten a JSON file to "dotted.path value" lines, numbers only. A
+# character scanner, not a grammar: good enough for the single-line
+# machine-written artifacts the bench emits (keys are always quoted,
+# strings never contain unescaped braces).
+flatten() {
+    awk '
+    {
+        len = length($0); i = 1
+        while (i <= len) {
+            c = substr($0, i, 1)
+            if (c == "\"") {
+                s = ""; i++
+                while (i <= len) {
+                    c = substr($0, i, 1)
+                    if (c == "\\") { s = s substr($0, i, 2); i += 2; continue }
+                    if (c == "\"") break
+                    s = s c; i++
+                }
+                i++
+                if (sp > 0 && type[sp] == "o" && expect_key[sp]) {
+                    key[sp] = s; expect_key[sp] = 0
+                }
+                continue
+            }
+            if (c == "{") { sp++; type[sp] = "o"; expect_key[sp] = 1; key[sp] = ""; i++; continue }
+            if (c == "[") { sp++; type[sp] = "a"; idx[sp] = 0; i++; continue }
+            if (c == "}" || c == "]") { sp--; i++; continue }
+            if (c == ",") {
+                if (type[sp] == "o") expect_key[sp] = 1; else idx[sp]++
+                i++; continue
+            }
+            if (c == ":" || c == " " || c == "\t") { i++; continue }
+            t = ""
+            while (i <= len) {
+                c = substr($0, i, 1)
+                if (c !~ /[-+0-9.eEa-z]/) break
+                t = t c; i++
+            }
+            if (t ~ /^[-+.0-9]/) {
+                p = ""
+                for (j = 1; j <= sp; j++) {
+                    if (type[j] == "o") p = p "." key[j]
+                    else p = p "[" idx[j] "]"
+                }
+                print substr(p, 2), t
+            }
+        }
+    }' "$1"
+}
+
+base_flat=$(mktemp)
+cand_flat=$(mktemp)
+trap 'rm -f "$base_flat" "$cand_flat"' EXIT
+flatten "$base_file" > "$base_flat"
+flatten "$cand_file" > "$cand_flat"
+
+awk -v tol="$tol" -v bf="$base_file" -v cf="$cand_file" '
+    NR == FNR { base[$1] = $2; next }
+    ($1 in base) {
+        path = $1; b = base[path] + 0; c = $2 + 0
+        dir = ""
+        if (path ~ /p95/) dir = "low"
+        else if (path ~ /hit_rate|hit_ratio/) dir = "high"
+        if (dir == "") next
+        compared++
+        delta = (b > 0) ? 100.0 * (c - b) / b : 0
+        bad = 0
+        if (dir == "low" && b > 0 && c > b * (1 + tol / 100.0)) bad = 1
+        if (dir == "high" && c < b * (1 - tol / 100.0)) bad = 1
+        mark = bad ? "REGRESSED" : "ok"
+        printf "  %-9s %-52s %10.4f -> %10.4f (%+.1f%%)\n", \
+               mark, path, b, c, delta
+        fails += bad
+    }
+    END {
+        if (compared == 0) {
+            printf "bench_diff: no shared p95/hit-rate keys between %s and %s\n", bf, cf
+            exit 2
+        }
+        printf "bench_diff: %d shared keys, tolerance %s%%, %d regression(s)\n", \
+               compared, tol, fails + 0
+        exit fails > 0 ? 1 : 0
+    }
+' "$base_flat" "$cand_flat"

@@ -9,6 +9,7 @@
 #   SERVE_SMOKE=0 scripts/tier1.sh  # skip the serve telemetry smoke
 #   MIGRATE_SMOKE=0 scripts/tier1.sh # skip the drain-by-migration smoke
 #   CHAOS_SMOKE=0 scripts/tier1.sh  # skip the fault-injection smoke
+#   DEADLINE_SMOKE=0 scripts/tier1.sh # skip the calibrate/deadline smoke
 #
 # The fmt check is strict by default (ROADMAP "format the tree" item);
 # set FMT_STRICT=0 to demote it to advisory while iterating locally.
@@ -180,6 +181,50 @@ if command -v cargo >/dev/null 2>&1; then
     fi
 else
     echo "tier1: cargo unavailable, skipping chaos smoke"
+fi
+
+echo "== tier1: deadline smoke (strict unless DEADLINE_SMOKE=0)"
+# Calibrate-then-serve gate: `lazydit calibrate --synthetic` profiles a
+# skip calendar twice (the artifact must be byte-identical — the
+# determinism contract in cmd_calibrate's module doc), then a synthetic
+# server loads it with --calendar, self-drives deadline-stamped
+# requests, and must report deadline hits alongside a balanced ledger.
+# docs/SERVING.md ("Deadlines & skip calendars") documents the flow.
+if command -v cargo >/dev/null 2>&1; then
+    if [ "${DEADLINE_SMOKE:-1}" = "1" ]; then
+        rm -f calendar_smoke.json calendar_smoke2.json
+        ./target/release/lazydit calibrate --synthetic \
+            --request-steps 4 --requests 8 --sim-work 2000 \
+            --out calendar_smoke.json
+        ./target/release/lazydit calibrate --synthetic \
+            --request-steps 4 --requests 8 --sim-work 2000 \
+            --out calendar_smoke2.json
+        cmp calendar_smoke.json calendar_smoke2.json || {
+            echo "tier1: deadline smoke FAILED (calibrate is not deterministic)"
+            exit 1
+        }
+        out=$(./target/release/lazydit serve --synthetic \
+                  --calendar calendar_smoke.json --self-drive 6 \
+                  --deadline-ms 5000 --addr 127.0.0.1:8494 --sim-work 2000)
+        echo "$out" | tail -n 5
+        echo "$out" | grep -q 'calendar: armed' || {
+            echo "tier1: deadline smoke FAILED (calendar did not arm)"
+            exit 1
+        }
+        echo "$out" | grep -Eq 'deadline: hits=[1-9]' || {
+            echo "tier1: deadline smoke FAILED (no deadline hits)"
+            exit 1
+        }
+        echo "$out" | grep -q 'conservation: .* ok=true' || {
+            echo "tier1: deadline smoke FAILED (conservation line missing)"
+            exit 1
+        }
+        echo "tier1: deadline smoke OK (deterministic calendar, hits >= 1, ledger balanced)"
+    else
+        echo "tier1: deadline smoke skipped (DEADLINE_SMOKE=0)"
+    fi
+else
+    echo "tier1: cargo unavailable, skipping deadline smoke"
 fi
 
 echo "== tier1: docs link check (relative links in *.md)"
